@@ -1,0 +1,65 @@
+//! Cache-capacity sensitivity (paper §6.5.2, Fig. 10): per-epoch
+//! modeled speedup of COMM-RAND configurations as the simulated L2
+//! shrinks from 40MB to 10MB.
+//!
+//!     cargo run --release --example cache_sensitivity [preset]
+
+use comm_rand::config::{preset, BatchPolicy, TrainConfig};
+use comm_rand::sampler::RootPolicy;
+use comm_rand::train::{self, Method, RunOptions, Session};
+
+fn main() -> anyhow::Result<()> {
+    let name = std::env::args()
+        .nth(1)
+        .unwrap_or_else(|| "tiny".into());
+    let p = preset(&name).expect("unknown preset");
+    let ds = train::dataset::load_or_build(&p, true)?;
+    let mut session = Session::new()?;
+    // epoch-time measurement only: few epochs, no early stop pressure
+    let cfg = TrainConfig { max_epochs: 3, ..Default::default() };
+
+    let policies = [
+        ("baseline", BatchPolicy::baseline()),
+        (
+            "MIX-50%+p1.0",
+            BatchPolicy { roots: RootPolicy::CommRandMix { pct: 0.5 }, p_intra: 1.0 },
+        ),
+        (
+            "MIX-12.5%+p1.0",
+            BatchPolicy { roots: RootPolicy::CommRandMix { pct: 0.125 }, p_intra: 1.0 },
+        ),
+        (
+            "MIX-0%+p1.0",
+            BatchPolicy { roots: RootPolicy::CommRandMix { pct: 0.0 }, p_intra: 1.0 },
+        ),
+    ];
+
+    println!("{:<16} {:>10} {:>10} {:>10}", "policy", "40MB", "20MB", "10MB");
+    let mut base: Vec<f64> = Vec::new();
+    for (label, pol) in &policies {
+        let mut row = Vec::new();
+        for (i, scale) in [1.0, 0.5, 0.25].into_iter().enumerate() {
+            let opts = RunOptions { l2_scale: scale, ..Default::default() };
+            let r = train::train(
+                &mut session,
+                &ds,
+                p.artifact,
+                &Method::CommRand(pol.clone()),
+                &cfg,
+                &opts,
+            )?;
+            let t = r.mean_epoch_modeled_s();
+            if *label == "baseline" {
+                base.push(t);
+                row.push(1.0);
+            } else {
+                row.push(base[i] / t);
+            }
+        }
+        println!(
+            "{:<16} {:>9.2}x {:>9.2}x {:>9.2}x",
+            label, row[0], row[1], row[2]
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,70 @@
+//! COMM-RAND knob exploration on one dataset: sweeps the root
+//! partitioning policies (Table 1) against intra-community sampling
+//! probabilities p ∈ {0.5, 0.9, 1.0} and prints the Figure-5-style
+//! metric grid (a fast, single-seed version of `comm-rand exp fig5`).
+//!
+//!     cargo run --release --example knob_sweep [preset] [epochs=N]
+
+use comm_rand::config::{preset, BatchPolicy, TrainConfig};
+use comm_rand::sampler::RootPolicy;
+use comm_rand::train::{self, Method, RunOptions, Session};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let name = args
+        .iter()
+        .find(|a| !a.contains('='))
+        .cloned()
+        .unwrap_or_else(|| "tiny".into());
+    let epochs: usize = args
+        .iter()
+        .find_map(|a| a.strip_prefix("epochs=").map(|v| v.parse().unwrap()))
+        .unwrap_or(12);
+
+    let p = preset(&name).expect("unknown preset");
+    let ds = train::dataset::load_or_build(&p, true)?;
+    let mut session = Session::new()?;
+    let cfg = TrainConfig { max_epochs: epochs, ..Default::default() };
+    let opts = RunOptions::default();
+
+    let baseline = train::train(
+        &mut session,
+        &ds,
+        p.artifact,
+        &Method::CommRand(BatchPolicy::baseline()),
+        &cfg,
+        &opts,
+    )?;
+    let base_epoch = baseline.mean_epoch_modeled_s();
+
+    println!(
+        "{:<22} {:>6} {:>10} {:>10} {:>8} {:>8}",
+        "roots", "p", "epoch-spd", "conv-ep", "val-acc", "net-spd"
+    );
+    for roots in RootPolicy::figure5_set() {
+        for p_intra in [0.5, 0.9, 1.0] {
+            let r = if roots == RootPolicy::Rand && p_intra == 0.5 {
+                baseline.clone()
+            } else {
+                train::train(
+                    &mut session,
+                    &ds,
+                    p.artifact,
+                    &Method::CommRand(BatchPolicy { roots, p_intra }),
+                    &cfg,
+                    &opts,
+                )?
+            };
+            println!(
+                "{:<22} {:>6.2} {:>9.2}x {:>10} {:>8.4} {:>7.2}x",
+                roots.label(),
+                p_intra,
+                base_epoch / r.mean_epoch_modeled_s(),
+                r.converged_epoch,
+                r.best_val_acc,
+                baseline.modeled_to_convergence() / r.modeled_to_convergence(),
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,201 @@
+"""AOT lowering: JAX entry points -> HLO text + manifest.json.
+
+Interchange format is HLO **text**, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids that the runtime's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the HLO text
+parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Python runs exactly once, at build time (`make artifacts`); the rust
+coordinator loads the emitted text through PJRT and never imports
+python on the training path.
+
+Usage::
+
+    cd python && python -m compile.aot --out ../artifacts [--only tiny]
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .specs import FULLBATCH_SPECS, MINI_SPECS, FullBatchSpec, ModelSpec
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _abstract(shape, dtype):
+    jdt = {"f32": jnp.float32, "i32": jnp.int32}[dtype]
+    return jax.ShapeDtypeStruct(shape, jdt)
+
+
+def _io_entry(name, shape, dtype):
+    return {"name": name, "shape": list(shape), "dtype": dtype}
+
+
+def _mini_signature(spec: ModelSpec, kind: str):
+    """Flattened (inputs, outputs) manifest entries for a mini-batch
+    artifact. ``kind`` is "train" or "infer"."""
+    pshapes = M.param_shapes(spec)
+    ins, outs = [], []
+    for n, s in pshapes:
+        ins.append(_io_entry(f"p.{n}", s, "f32"))
+    if kind == "train":
+        for n, s in pshapes:
+            ins.append(_io_entry(f"m.{n}", s, "f32"))
+        for n, s in pshapes:
+            ins.append(_io_entry(f"v.{n}", s, "f32"))
+        ins.append(_io_entry("t", (), "f32"))
+        ins.append(_io_entry("lr", (), "f32"))
+    for n, s, d in M.batch_inputs(spec, with_labels=(kind == "train")):
+        ins.append(_io_entry(n, s, d))
+    if kind == "train":
+        for n, s in pshapes:
+            outs.append(_io_entry(f"p.{n}", s, "f32"))
+        for n, s in pshapes:
+            outs.append(_io_entry(f"m.{n}", s, "f32"))
+        for n, s in pshapes:
+            outs.append(_io_entry(f"v.{n}", s, "f32"))
+        outs.append(_io_entry("loss", (), "f32"))
+        outs.append(_io_entry("correct", (), "f32"))
+    else:
+        outs.append(_io_entry(
+            "logits", (spec.node_caps[spec.layers], spec.num_classes), "f32"))
+    return ins, outs
+
+
+def _fullbatch_signature(spec: FullBatchSpec, kind: str):
+    pshapes = M.fullbatch_param_shapes(spec)
+    n, e = spec.num_nodes, spec.padded_edges
+    ins, outs = [], []
+    for nm, s in pshapes:
+        ins.append(_io_entry(f"p.{nm}", s, "f32"))
+    if kind == "train":
+        for nm, s in pshapes:
+            ins.append(_io_entry(f"m.{nm}", s, "f32"))
+        for nm, s in pshapes:
+            ins.append(_io_entry(f"v.{nm}", s, "f32"))
+        ins.append(_io_entry("t", (), "f32"))
+        ins.append(_io_entry("lr", (), "f32"))
+    ins.append(_io_entry("x", (n, spec.feat_dim), "f32"))
+    ins.append(_io_entry("e_src", (e,), "i32"))
+    ins.append(_io_entry("e_dst", (e,), "i32"))
+    ins.append(_io_entry("e_w", (e,), "f32"))
+    if kind == "train":
+        ins.append(_io_entry("labels", (n,), "i32"))
+        ins.append(_io_entry("train_mask", (n,), "f32"))
+        ins.append(_io_entry("val_mask", (n,), "f32"))
+        for nm, s in pshapes:
+            outs.append(_io_entry(f"p.{nm}", s, "f32"))
+        for nm, s in pshapes:
+            outs.append(_io_entry(f"m.{nm}", s, "f32"))
+        for nm, s in pshapes:
+            outs.append(_io_entry(f"v.{nm}", s, "f32"))
+        outs.append(_io_entry("loss", (), "f32"))
+        outs.append(_io_entry("correct_train", (), "f32"))
+        outs.append(_io_entry("correct_val", (), "f32"))
+    else:
+        outs.append(_io_entry("logits", (n, spec.num_classes), "f32"))
+    return ins, outs
+
+
+def lower_artifact(fn, inputs) -> str:
+    """jit + lower a python step function against abstract inputs."""
+    abstracts = [_abstract(tuple(i["shape"]), i["dtype"]) for i in inputs]
+    lowered = jax.jit(fn).lower(*abstracts)
+    return to_hlo_text(lowered)
+
+
+def build_all(out_dir: str, only: str | None = None, verbose: bool = True):
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"format": 1, "artifacts": {}}
+
+    jobs = []
+    for spec in MINI_SPECS:
+        if only and spec.name != only:
+            continue
+        jobs.append(("train", spec))
+        jobs.append(("infer", spec))
+    for spec in FULLBATCH_SPECS:
+        if only and spec.name != only:
+            continue
+        jobs.append(("fb_train", spec))
+        jobs.append(("fb_infer", spec))
+
+    for kind, spec in jobs:
+        if kind == "train":
+            fn = M.make_train_step(spec)
+            ins, outs = _mini_signature(spec, "train")
+            name = f"{spec.name}.train"
+        elif kind == "infer":
+            fn = M.make_infer_step(spec)
+            ins, outs = _mini_signature(spec, "infer")
+            name = f"{spec.name}.infer"
+        elif kind == "fb_train":
+            fn = M.make_fullbatch_train_step(spec)
+            ins, outs = _fullbatch_signature(spec, "train")
+            name = f"{spec.name}.train"
+        else:
+            fn = M.make_fullbatch_infer_step(spec)
+            ins, outs = _fullbatch_signature(spec, "infer")
+            name = f"{spec.name}.infer"
+
+        if verbose:
+            print(f"[aot] lowering {name} ({len(ins)} inputs)...",
+                  flush=True)
+        hlo = lower_artifact(fn, ins)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(hlo)
+        entry = {
+            "file": fname,
+            "kind": kind,
+            "spec": spec.to_json(),
+            "inputs": ins,
+            "outputs": outs,
+            "sha256": hashlib.sha256(hlo.encode()).hexdigest(),
+        }
+        manifest["artifacts"][name] = entry
+        if verbose:
+            print(f"[aot]   -> {fname}: {len(hlo)} chars", flush=True)
+
+    # Merge with an existing manifest when building a subset.
+    mpath = os.path.join(out_dir, "manifest.json")
+    if only and os.path.exists(mpath):
+        with open(mpath) as f:
+            old = json.load(f)
+        old["artifacts"].update(manifest["artifacts"])
+        manifest = old
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    if verbose:
+        print(f"[aot] manifest: {mpath} "
+              f"({len(manifest['artifacts'])} artifacts)")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", default=None,
+                    help="build a single spec by name")
+    args = ap.parse_args()
+    build_all(args.out, args.only)
+
+
+if __name__ == "__main__":
+    main()

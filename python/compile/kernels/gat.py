@@ -1,0 +1,123 @@
+"""Layer-1 Pallas kernel: fused GAT edge-attention aggregation.
+
+For each destination row ``i`` with candidate neighbors ``idx[i, :K]``
+(mask ``m``), multi-head attention over the sampled neighborhood::
+
+    e[i, k, h]   = LeakyReLU(s_dst[i, h] + s_src[idx[i, k], h])
+    alpha[i,:,h] = softmax_k(e[i, :, h])   (masked)
+    out[i, h, :] = sum_k alpha[i, k, h] * wh[idx[i, k], h, :]
+
+``wh`` is the already-projected feature table ``W x`` with heads folded
+into the trailing dim (``[n_in, heads*dh]``); ``s_src``/``s_dst`` are the
+per-node attention logits ``(W x) . a_src`` / ``(W x) . a_dst`` computed
+by dense matmuls in Layer 2 (MXU-friendly), so the kernel only does the
+irregular part: gather, masked softmax, weighted sum.  This mirrors how
+the paper's GPU story maps to TPU: the regular dense work targets the
+MXU, the neighbor-dependent work is blocked through VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref as _ref
+
+_NEG_BIG = -1e9
+
+
+def _gat_kernel(wh_ref, ssrc_ref, sdst_ref, idx_ref, mask_ref, out_ref, *,
+                fanout: int, heads: int, dh: int, slope: float):
+    bn = out_ref.shape[0]
+    sdst = sdst_ref[...]  # [bn, H]
+    # Gather neighbor logits and projected features.
+    e = jnp.zeros((bn, fanout, heads), jnp.float32)
+    g = jnp.zeros((bn, fanout, heads * dh), jnp.float32)
+    for k in range(fanout):
+        rows = idx_ref[:, k]
+        e = e.at[:, k, :].set(ssrc_ref[rows, :])
+        g = g.at[:, k, :].set(wh_ref[rows, :])
+    e = e + sdst[:, None, :]
+    e = jnp.where(e > 0, e, slope * e)  # LeakyReLU
+    mask = mask_ref[...]  # [bn, K]
+    e = jnp.where(mask[:, :, None] > 0, e, _NEG_BIG)
+    e = e - jnp.max(e, axis=1, keepdims=True)
+    ex = jnp.exp(e) * mask[:, :, None]
+    denom = jnp.maximum(jnp.sum(ex, axis=1, keepdims=True), 1e-9)
+    alpha = ex / denom  # [bn, K, H]
+    gh = g.reshape(bn, fanout, heads, dh)
+    out = jnp.einsum("bkh,bkhd->bhd", alpha, gh)
+    out_ref[...] = out.reshape(bn, heads * dh)
+
+
+def _gat_aggregate_pallas(wh, s_src, s_dst, idx, mask, *, heads: int,
+                          block_rows: int = 128, slope: float = 0.2):
+    """Fused masked-softmax attention aggregation.
+
+    Args:
+      wh:    ``[n_in, heads*dh]`` projected features.
+      s_src: ``[n_in, heads]`` source attention logits.
+      s_dst: ``[n_out, heads]`` destination attention logits.
+      idx:   ``[n_out, fanout]`` int32 neighbor indices into ``wh``.
+      mask:  ``[n_out, fanout]`` float32 validity mask (1 = real edge).
+      heads: number of attention heads.
+
+    Returns:
+      ``[n_out, heads*dh]`` aggregated features.
+    """
+    n_in, hd = wh.shape
+    n_out, fanout = idx.shape
+    assert hd % heads == 0
+    dh = hd // heads
+    assert n_out % block_rows == 0, (n_out, block_rows)
+    grid = (n_out // block_rows,)
+    kernel = functools.partial(
+        _gat_kernel, fanout=fanout, heads=heads, dh=dh, slope=slope)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n_in, hd), lambda i: (0, 0)),
+            pl.BlockSpec((n_in, heads), lambda i: (0, 0)),
+            pl.BlockSpec((block_rows, heads), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, fanout), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, fanout), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, hd), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_out, hd), jnp.float32),
+        interpret=True,
+    )(wh, s_src, s_dst, idx, mask)
+
+
+# Backward = VJP of the pure-jnp oracle (pallas_call has no autodiff
+# rule); see kernels/gather.py for the rationale.
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7))
+def _gat_cv(wh, s_src, s_dst, idx, mask, heads, block_rows, slope):
+    return _gat_aggregate_pallas(wh, s_src, s_dst, idx, mask, heads=heads,
+                                 block_rows=block_rows, slope=slope)
+
+
+def _gat_fwd(wh, s_src, s_dst, idx, mask, heads, block_rows, slope):
+    out = _gat_aggregate_pallas(wh, s_src, s_dst, idx, mask, heads=heads,
+                                block_rows=block_rows, slope=slope)
+    return out, (wh, s_src, s_dst, idx, mask)
+
+
+def _gat_bwd(heads, block_rows, slope, res, g):
+    wh, s_src, s_dst, idx, mask = res
+    fn = functools.partial(_ref.gat_aggregate_ref, heads=heads, slope=slope)
+    _, vjp = jax.vjp(lambda a, b, c: fn(a, b, c, idx, mask), wh, s_src, s_dst)
+    d_wh, d_ssrc, d_sdst = vjp(g)
+    return d_wh, d_ssrc, d_sdst, None, None
+
+
+_gat_cv.defvjp(_gat_fwd, _gat_bwd)
+
+
+def gat_aggregate(wh, s_src, s_dst, idx, mask, *, heads: int,
+                  block_rows: int = 128, slope: float = 0.2):
+    """Differentiable fused GAT aggregation: see ``_gat_aggregate_pallas``."""
+    return _gat_cv(wh, s_src, s_dst, idx, mask, heads, block_rows, slope)

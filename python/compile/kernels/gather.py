@@ -1,0 +1,119 @@
+"""Layer-1 Pallas kernel: weighted gather-aggregate (the GNN hot-spot).
+
+``gather_wsum(src, idx, w) -> out`` computes, for every output row ``i``::
+
+    out[i, :] = sum_k  w[i, k] * src[idx[i, k], :]
+
+This one primitive implements every neighborhood aggregation the models
+need:
+
+* **GraphSAGE mean aggregation** — ``w[i, k] = mask[i, k] / deg(i)``
+* **GCN symmetric-normalized sum** — ``w[i, k] = mask / sqrt(deg_i deg_k)``
+* **masked self-gather** — ``K = 1``, ``w = 1``
+
+Hardware adaptation (see DESIGN.md §Hardware-Adaptation): the paper's
+GPU framing is "random neighbor gathers thrash the L2"; on TPU the same
+insight becomes a VMEM blocking question.  The kernel keeps the full
+``src`` feature table in HBM-resident memory, streams output-row blocks
+(``block_rows`` at a time) through VMEM, and performs the K-way gather +
+multiply-accumulate per block, so the VMEM working set is
+``block_rows * (K + F + K*F)`` words regardless of graph size.  Pallas is
+run with ``interpret=True`` (the CPU PJRT plugin cannot execute Mosaic
+custom-calls), which lowers the same schedule to plain HLO.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref as _ref
+
+
+def _gather_wsum_kernel(src_ref, idx_ref, w_ref, out_ref, *, fanout: int):
+    """One output-row block: out = sum_k w[:, k] * src[idx[:, k], :]."""
+    acc = jnp.zeros(out_ref.shape, jnp.float32)
+    # K is small and static (the sampler fanout); unrolling keeps each
+    # step a row-gather + FMA, which the interpreter lowers to
+    # dynamic-gather + multiply-add HLO.
+    for k in range(fanout):
+        rows = idx_ref[:, k]
+        g = src_ref[rows, :]
+        acc = acc + w_ref[:, k][:, None] * g
+    out_ref[...] = acc
+
+
+def _gather_wsum_pallas(src, idx, w, *, block_rows: int = 128):
+    """Weighted gather-sum aggregation (pallas forward).
+
+    Args:
+      src: ``[n_in, feat]`` float32 feature table.
+      idx: ``[n_out, fanout]`` int32 row indices into ``src``. Padded
+        entries must point at a valid row (canonically 0) and carry
+        ``w == 0``.
+      w:   ``[n_out, fanout]`` float32 per-edge weights (mask folded in).
+      block_rows: rows of the output computed per grid step. ``n_out``
+        must be a multiple of ``block_rows``.
+
+    Returns:
+      ``[n_out, feat]`` float32 aggregated features.
+    """
+    n_in, feat = src.shape
+    n_out, fanout = idx.shape
+    assert w.shape == (n_out, fanout), (w.shape, idx.shape)
+    assert n_out % block_rows == 0, (n_out, block_rows)
+    grid = (n_out // block_rows,)
+    kernel = functools.partial(_gather_wsum_kernel, fanout=fanout)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            # Whole feature table visible to every block (HBM-resident on
+            # real hardware; the gather pulls only the referenced rows).
+            pl.BlockSpec((n_in, feat), lambda i: (0, 0)),
+            pl.BlockSpec((block_rows, fanout), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, fanout), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, feat), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_out, feat), jnp.float32),
+        interpret=True,
+    )(src, idx, w)
+
+
+# ``pallas_call`` defines no autodiff rule, so the backward pass is the
+# VJP of the mathematically-identical pure-jnp oracle (kernels/ref.py).
+# d_src is an XLA scatter-add, d_w a gather-dot; the cotangent of a
+# non-differentiated src (e.g. the resident feature table at layer 1) is
+# dead code and pruned by XLA.
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _gather_wsum_cv(src, idx, w, block_rows):
+    return _gather_wsum_pallas(src, idx, w, block_rows=block_rows)
+
+
+def _gather_wsum_fwd(src, idx, w, block_rows):
+    return _gather_wsum_pallas(src, idx, w, block_rows=block_rows), (src, idx, w)
+
+
+def _gather_wsum_bwd(block_rows, res, g):
+    src, idx, w = res
+    _, vjp = jax.vjp(_ref.gather_wsum_ref, src, idx, w)
+    d_src, _, d_w = vjp(g)
+    return d_src, None, d_w
+
+
+_gather_wsum_cv.defvjp(_gather_wsum_fwd, _gather_wsum_bwd)
+
+
+def gather_wsum(src, idx, w, *, block_rows: int = 128):
+    """Differentiable weighted gather-sum: see ``_gather_wsum_pallas``."""
+    return _gather_wsum_cv(src, idx, w, block_rows)
+
+
+def gather_rows(src, idx, *, block_rows: int = 128):
+    """Plain row gather ``out[i] = src[idx[i]]`` as a K=1 gather_wsum."""
+    n_out = idx.shape[0]
+    ones = jnp.ones((n_out, 1), jnp.float32)
+    return gather_wsum(src, idx[:, None], ones, block_rows=block_rows)

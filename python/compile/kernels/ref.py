@@ -1,0 +1,35 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness contract).
+
+Every kernel in this package must match its oracle to float32 tolerance
+across the shape/dtype sweep in ``python/tests/test_kernels.py``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gather_wsum_ref(src, idx, w):
+    """out[i] = sum_k w[i, k] * src[idx[i, k]]."""
+    g = src[idx]  # [n_out, K, F]
+    return jnp.einsum("ok,okf->of", w, g)
+
+
+def gather_rows_ref(src, idx):
+    return src[idx]
+
+
+def gat_aggregate_ref(wh, s_src, s_dst, idx, mask, *, heads, slope=0.2):
+    n_out, fanout = idx.shape
+    hd = wh.shape[1]
+    dh = hd // heads
+    e = s_dst[:, None, :] + s_src[idx]  # [n_out, K, H]
+    e = jnp.where(e > 0, e, slope * e)
+    e = jnp.where(mask[:, :, None] > 0, e, -1e9)
+    e = e - jnp.max(e, axis=1, keepdims=True)
+    ex = jnp.exp(e) * mask[:, :, None]
+    denom = jnp.maximum(jnp.sum(ex, axis=1, keepdims=True), 1e-9)
+    alpha = ex / denom
+    gh = wh[idx].reshape(n_out, fanout, heads, dh)
+    out = jnp.einsum("bkh,bkhd->bhd", alpha, gh)
+    return out.reshape(n_out, hd)

@@ -1,0 +1,310 @@
+"""Layer-2: GNN forward/backward/Adam as pure JAX functions.
+
+Each model (GraphSAGE / GCN / GAT) is expressed over the *padded
+message-flow-graph* (MFG) batch layout the rust sampler produces:
+
+* resident mode — the full feature table ``x_full [|V|, F]`` is a
+  device-resident input (uploaded once by rust); layer-1 neighbor/self
+  indices are **global node ids**.
+* staged mode — rust gathers the batch's unique input frontier into
+  ``x0 [cap0, F]`` per batch (the UVA-style path used for the
+  papers100M stand-in); layer-1 indices are local rows of ``x0``.
+
+For every layer ``l`` (1-based, ``caps[l]`` padded dst rows):
+
+* ``idx_l  [caps[l], W] i32`` — neighbor slots into the previous layer's
+  node array (W = fanout, +1 for GCN/GAT where slot 0 is the self loop).
+* ``w_l    [caps[l], W] f32`` — aggregation weights with the validity
+  mask folded in (SAGE: mask/deg; GCN: symmetric norm; GAT: 0/1 mask).
+* ``self_l [caps[l]]    i32`` — self row (SAGE concat / GAT dst logits).
+
+Padded rows point at row 0 with zero weight and are sliced away only at
+the loss, where ``lmask`` zeroes padded roots.
+
+The irregular aggregation is the Layer-1 Pallas kernel
+(:mod:`compile.kernels.gather` / :mod:`compile.kernels.gat`); everything
+dense (projections, loss, Adam) is plain jnp so XLA can fuse it.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.gather import gather_rows, gather_wsum
+from .kernels.gat import gat_aggregate
+from .specs import FullBatchSpec, ModelSpec
+
+ADAM_B1, ADAM_B2, ADAM_EPS = 0.9, 0.999, 1e-8
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+def param_shapes(spec: ModelSpec) -> list[tuple[str, tuple[int, ...]]]:
+    """Flattened (name, shape) list; this order IS the artifact ABI."""
+    out: list[tuple[str, tuple[int, ...]]] = []
+    dims = spec.dims
+    for l in range(spec.layers):
+        din, dout = dims[l], dims[l + 1]
+        if spec.model == "sage":
+            out += [(f"w_self_{l}", (din, dout)),
+                    (f"w_nbr_{l}", (din, dout)),
+                    (f"b_{l}", (dout,))]
+        elif spec.model == "gcn":
+            out += [(f"w_{l}", (din, dout)), (f"b_{l}", (dout,))]
+        elif spec.model == "gat":
+            h = spec.heads
+            # hidden layers concatenate heads, so layer l>0 consumes
+            # heads * dims[l] features
+            if l > 0:
+                din = h * din
+            out += [(f"w_{l}", (din, h * dout)),
+                    (f"a_src_{l}", (h, dout)),
+                    (f"a_dst_{l}", (h, dout)),
+                    (f"b_{l}", (h * dout,))]
+        else:
+            raise ValueError(spec.model)
+    return out
+
+
+def fullbatch_param_shapes(spec: FullBatchSpec) -> list[tuple[str, tuple[int, ...]]]:
+    out = []
+    dims = spec.dims
+    for l in range(spec.layers):
+        out += [(f"w_{l}", (dims[l], dims[l + 1])), (f"b_{l}", (dims[l + 1],))]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Batch input signature
+# ---------------------------------------------------------------------------
+
+def batch_inputs(spec: ModelSpec, with_labels: bool) -> list[tuple[str, tuple[int, ...], str]]:
+    """(name, shape, dtype) of the per-batch data inputs, in ABI order."""
+    caps = spec.node_caps
+    ins: list[tuple[str, tuple[int, ...], str]] = []
+    if spec.feat_mode == "resident":
+        ins.append(("x_full", (spec.num_nodes, spec.feat_dim), "f32"))
+    else:
+        ins.append(("x0", (caps[0], spec.feat_dim), "f32"))
+    for l in range(1, spec.layers + 1):
+        n = caps[l]
+        w = spec.idx_width(l)
+        ins.append((f"idx_{l}", (n, w), "i32"))
+        ins.append((f"w_{l}", (n, w), "f32"))
+        if spec.model in ("sage", "gat"):
+            ins.append((f"self_{l}", (n,), "i32"))
+    if with_labels:
+        b = caps[spec.layers]
+        ins.append(("labels", (b,), "i32"))
+        ins.append(("lmask", (b,), "f32"))
+    return ins
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+def _unpack_blocks(spec: ModelSpec, batch: list):
+    """Split the flat batch-input list back into (x, blocks, rest)."""
+    x = batch[0]
+    blocks = []
+    i = 1
+    for _ in range(spec.layers):
+        if spec.model in ("sage", "gat"):
+            blocks.append((batch[i], batch[i + 1], batch[i + 2]))
+            i += 3
+        else:
+            blocks.append((batch[i], batch[i + 1], None))
+            i += 2
+    return x, blocks, batch[i:]
+
+
+def forward(spec: ModelSpec, params: list, batch: list):
+    """Logits at the (padded) root nodes: ``[batch_cap, C]``."""
+    x, blocks, _ = _unpack_blocks(spec, batch)
+    h = x
+    p = 0
+    for l in range(spec.layers):
+        idx, w, self_idx = blocks[l]
+        last = l == spec.layers - 1
+        if spec.model == "sage":
+            w_self, w_nbr, b = params[p], params[p + 1], params[p + 2]
+            p += 3
+            h_nbr = gather_wsum(h, idx, w)
+            h_self = gather_rows(h, self_idx)
+            h = h_self @ w_self + h_nbr @ w_nbr + b
+            if not last:
+                h = jax.nn.relu(h)
+        elif spec.model == "gcn":
+            wmat, b = params[p], params[p + 1]
+            p += 2
+            h = gather_wsum(h, idx, w) @ wmat + b
+            if not last:
+                h = jax.nn.relu(h)
+        else:  # gat
+            wmat, a_src, a_dst, b = (params[p], params[p + 1],
+                                     params[p + 2], params[p + 3])
+            p += 4
+            heads = spec.heads
+            dout = a_src.shape[1]
+            wh = h @ wmat  # [n_prev, H*dout] — dense, MXU-friendly
+            whh = wh.reshape(-1, heads, dout)
+            s_src = jnp.einsum("nhd,hd->nh", whh, a_src)
+            s_dst_tab = jnp.einsum("nhd,hd->nh", whh, a_dst)
+            s_dst = gather_rows(s_dst_tab, self_idx)
+            h = gat_aggregate(wh, s_src, s_dst, idx, w, heads=heads) + b
+            if last:
+                # mean over heads -> class logits
+                h = h.reshape(-1, heads, dout).mean(axis=1)
+            else:
+                h = jax.nn.elu(h)
+    return h
+
+
+def masked_loss(logits, labels, lmask):
+    """Masked mean cross-entropy + masked correct count."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=1)[:, 0]
+    denom = jnp.maximum(lmask.sum(), 1.0)
+    loss = (nll * lmask).sum() / denom
+    pred = jnp.argmax(logits, axis=-1)
+    correct = ((pred == labels).astype(jnp.float32) * lmask).sum()
+    return loss, correct
+
+
+def adam_update(params, grads, m, v, t, lr, weight_decay):
+    """torch-style Adam (weight decay folded into the gradient)."""
+    new_p, new_m, new_v = [], [], []
+    bc1 = 1.0 - ADAM_B1 ** t
+    bc2 = 1.0 - ADAM_B2 ** t
+    for p, g, mi, vi in zip(params, grads, m, v):
+        g = g + weight_decay * p
+        mi = ADAM_B1 * mi + (1.0 - ADAM_B1) * g
+        vi = ADAM_B2 * vi + (1.0 - ADAM_B2) * g * g
+        mhat = mi / bc1
+        vhat = vi / bc2
+        new_p.append(p - lr * mhat / (jnp.sqrt(vhat) + ADAM_EPS))
+        new_m.append(mi)
+        new_v.append(vi)
+    return new_p, new_m, new_v
+
+
+# ---------------------------------------------------------------------------
+# Exported entry points (AOT-lowered by aot.py)
+# ---------------------------------------------------------------------------
+
+def make_train_step(spec: ModelSpec):
+    """(params, m, v, t, lr, *batch, labels, lmask) -> (params', m', v',
+    loss, correct)."""
+    n_params = len(param_shapes(spec))
+
+    def step(*args):
+        params = list(args[:n_params])
+        m = list(args[n_params:2 * n_params])
+        v = list(args[2 * n_params:3 * n_params])
+        t, lr = args[3 * n_params], args[3 * n_params + 1]
+        batch = list(args[3 * n_params + 2:])
+        labels, lmask = batch[-2], batch[-1]
+
+        def loss_fn(ps):
+            logits = forward(spec, ps, batch)
+            loss, correct = masked_loss(logits, labels, lmask)
+            return loss, correct
+
+        (loss, correct), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        new_p, new_m, new_v = adam_update(
+            params, grads, m, v, t, lr, spec.weight_decay)
+        return tuple(new_p) + tuple(new_m) + tuple(new_v) + (loss, correct)
+
+    return step
+
+
+def make_infer_step(spec: ModelSpec):
+    """(params, *batch) -> logits [batch_cap, C]."""
+    n_params = len(param_shapes(spec))
+
+    def step(*args):
+        params = list(args[:n_params])
+        batch = list(args[n_params:])
+        return (forward(spec, params, batch),)
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# Full-batch GCN (comparison baseline, §2 / §3)
+# ---------------------------------------------------------------------------
+
+def _fullbatch_propagate(spec: FullBatchSpec, h, e_src, e_dst, e_w):
+    """Chunked segment-sum A'h: scan over edge chunks to bound the
+    materialized [chunk, H] gather."""
+    n = spec.num_nodes
+    chunks = spec.padded_edges // spec.edge_chunk
+    src = e_src.reshape(chunks, spec.edge_chunk)
+    dst = e_dst.reshape(chunks, spec.edge_chunk)
+    ew = e_w.reshape(chunks, spec.edge_chunk)
+
+    def body(acc, ch):
+        s, d, w = ch
+        msg = h[s] * w[:, None]
+        acc = acc + jax.ops.segment_sum(msg, d, num_segments=n)
+        return acc, None
+
+    acc0 = jnp.zeros((n, h.shape[1]), jnp.float32)
+    acc, _ = jax.lax.scan(body, acc0, (src, dst, ew))
+    return acc
+
+
+def fullbatch_forward(spec: FullBatchSpec, params, x, e_src, e_dst, e_w):
+    h = x
+    p = 0
+    for l in range(spec.layers):
+        w, b = params[p], params[p + 1]
+        p += 2
+        h = _fullbatch_propagate(spec, h, e_src, e_dst, e_w) @ w + b
+        if l != spec.layers - 1:
+            h = jax.nn.relu(h)
+    return h
+
+
+def make_fullbatch_train_step(spec: FullBatchSpec):
+    """(params, m, v, t, lr, x, e_src, e_dst, e_w, labels, train_mask,
+    val_mask) -> (params', m', v', loss, correct_train, correct_val)."""
+    n_params = len(fullbatch_param_shapes(spec))
+
+    def step(*args):
+        params = list(args[:n_params])
+        m = list(args[n_params:2 * n_params])
+        v = list(args[2 * n_params:3 * n_params])
+        t, lr = args[3 * n_params], args[3 * n_params + 1]
+        x, e_src, e_dst, e_w, labels, tmask, vmask = args[3 * n_params + 2:]
+
+        def loss_fn(ps):
+            logits = fullbatch_forward(spec, ps, x, e_src, e_dst, e_w)
+            loss, correct = masked_loss(logits, labels, tmask)
+            _, correct_val = masked_loss(logits, labels, vmask)
+            return loss, (correct, correct_val)
+
+        (loss, (ct, cv)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        new_p, new_m, new_v = adam_update(
+            params, grads, m, v, t, lr, spec.weight_decay)
+        return tuple(new_p) + tuple(new_m) + tuple(new_v) + (loss, ct, cv)
+
+    return step
+
+
+def make_fullbatch_infer_step(spec: FullBatchSpec):
+    """(params, x, e_src, e_dst, e_w) -> logits [N, C] (whole graph)."""
+    n_params = len(fullbatch_param_shapes(spec))
+
+    def step(*args):
+        params = list(args[:n_params])
+        x, e_src, e_dst, e_w = args[n_params:]
+        return (fullbatch_forward(spec, params, x, e_src, e_dst, e_w),)
+
+    return step

@@ -1,0 +1,172 @@
+"""Artifact specifications — the single source of truth for model shapes.
+
+Every AOT artifact (train step / infer step / full-batch step) is
+described by a spec here.  ``aot.py`` lowers each spec to HLO text and
+records the exact flattened input/output signature in
+``artifacts/manifest.json``; the rust runtime wires buffers by that
+manifest and never guesses shapes.
+
+The dataset dimensions mirror the *simulated* stand-ins for the paper's
+four benchmarks (see DESIGN.md §Datasets): the real reddit /
+ogbn-products / igb-small / ogbn-papers100M graphs do not fit a CPU-only
+testbed, so we generate SBM-style community graphs with matched label
+counts, feature dims, and train splits at reduced node scale.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+BLOCK_ROWS = 128  # pallas output-row block; all caps are multiples of this
+
+
+def _round_up(x: int, m: int = BLOCK_ROWS) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@dataclass(frozen=True)
+class ModelSpec:
+    """One mini-batch GNN training/inference artifact."""
+
+    name: str                 # artifact base name
+    model: str                # "sage" | "gcn" | "gat"
+    num_nodes: int            # |V| of the target graph (for resident X)
+    feat_dim: int
+    hidden_dim: int
+    num_classes: int
+    # Per-layer fanouts, INPUT-most first (DGL convention reversed:
+    # fanouts[0] expands the largest frontier, so it is the cheapest).
+    fanouts: tuple = (5, 10, 10)
+    batch_size: int = 256
+    heads: int = 1            # GAT only
+    feat_mode: str = "resident"  # "resident" | "staged"
+    weight_decay: float = 5e-4
+
+    @property
+    def layers(self) -> int:
+        return len(self.fanouts)
+
+    def idx_width(self, layer: int) -> int:
+        """Neighbor slots per dst row of 1-based `layer`. GCN/GAT carry
+        the self-loop in slot 0; SAGE keeps a separate self gather."""
+        return self.fanouts[layer - 1] + (
+            1 if self.model in ("gcn", "gat") else 0)
+
+    @property
+    def node_caps(self) -> list[int]:
+        """Padded unique-node capacity per level, input-most first.
+
+        ``caps[l]`` bounds the dst rows of layer ``l`` (1-based); index 0
+        is the input frontier capacity (only materialized in staged
+        mode).  Worst case without dedup is the running product of
+        ``fanout_l + 1``, clamped to |V|.
+        """
+        caps = [self.batch_size]
+        for f in reversed(self.fanouts):
+            caps.append(min(caps[-1] * (f + 1), self.num_nodes))
+        caps = [_round_up(c) for c in reversed(caps)]  # input-most first
+        return caps
+
+    @property
+    def dims(self) -> list[int]:
+        """Per-layer io dims: [feat, hidden, ..., classes]."""
+        d = [self.feat_dim]
+        for _ in range(self.layers - 1):
+            d.append(self.hidden_dim)
+        d.append(self.num_classes)
+        return d
+
+    def to_json(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["fanouts"] = list(self.fanouts)
+        d["layers"] = self.layers
+        d["node_caps"] = self.node_caps
+        d["idx_widths"] = [self.idx_width(l) for l in range(1, self.layers + 1)]
+        d["block_rows"] = BLOCK_ROWS
+        return d
+
+
+@dataclass(frozen=True)
+class FullBatchSpec:
+    """Full-graph GCN training artifact (baseline for §2's mini-batch
+    vs full-batch comparison and the §3 inference-reordering study)."""
+
+    name: str
+    num_nodes: int            # padded |V|
+    num_edges: int            # padded directed edge slots (incl. self loops)
+    feat_dim: int
+    hidden_dim: int
+    num_classes: int
+    layers: int = 3
+    edge_chunk: int = 65536   # lax.scan chunk for segment-sum propagation
+    weight_decay: float = 5e-4
+
+    @property
+    def padded_edges(self) -> int:
+        return _round_up(self.num_edges, self.edge_chunk)
+
+    @property
+    def dims(self) -> list[int]:
+        d = [self.feat_dim]
+        for _ in range(self.layers - 1):
+            d.append(self.hidden_dim)
+        d.append(self.num_classes)
+        return d
+
+    def to_json(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["padded_edges"] = self.padded_edges
+        return d
+
+
+# ---------------------------------------------------------------------------
+# Default artifact set.  Dataset stand-ins (DESIGN.md §Datasets):
+#   reddit_sim    : 16384 nodes, deg~40, 41 classes, F=128, 66% train
+#   igb_sim       : 32768 nodes, deg~13, 19 classes, F=128, 60% train
+#   products_sim  : 32768 nodes, deg~32, 47 classes, F=100,  8% train
+#   papers_sim    : 65536 nodes, deg~15, 64 classes, F=128, 1.1% train
+#                   (staged features: host-resident, UVA-style transfers)
+# Fanouts are the DGL-style schedule [5, 10, 10] (input-most hop
+# cheapest), 3 layers as in the paper.
+# ---------------------------------------------------------------------------
+
+MINI_SPECS: list[ModelSpec] = [
+    ModelSpec("reddit_sim", "sage", num_nodes=16384, feat_dim=128,
+              hidden_dim=64, num_classes=41),
+    ModelSpec("igb_sim", "sage", num_nodes=32768, feat_dim=128,
+              hidden_dim=64, num_classes=19),
+    ModelSpec("products_sim", "sage", num_nodes=32768, feat_dim=100,
+              hidden_dim=64, num_classes=47),
+    ModelSpec("papers_sim", "sage", num_nodes=65536, feat_dim=128,
+              hidden_dim=64, num_classes=64, feat_mode="staged"),
+    # §6.4 other-model sweep (reddit stand-in)
+    ModelSpec("reddit_sim_gcn", "gcn", num_nodes=16384, feat_dim=128,
+              hidden_dim=64, num_classes=41),
+    ModelSpec("reddit_sim_gat", "gat", num_nodes=16384, feat_dim=128,
+              hidden_dim=64, num_classes=41, heads=2),
+    # tiny artifact for rust integration tests / quickstart
+    ModelSpec("tiny", "sage", num_nodes=2048, feat_dim=32, hidden_dim=32,
+              num_classes=7, fanouts=(5, 5), batch_size=128),
+    ModelSpec("tiny_gcn", "gcn", num_nodes=2048, feat_dim=32, hidden_dim=32,
+              num_classes=7, fanouts=(5, 5), batch_size=128),
+    ModelSpec("tiny_gat", "gat", num_nodes=2048, feat_dim=32, hidden_dim=32,
+              num_classes=7, fanouts=(5, 5), batch_size=128, heads=2),
+]
+
+FULLBATCH_SPECS: list[FullBatchSpec] = [
+    FullBatchSpec("reddit_sim_fb", num_nodes=16384, num_edges=720896,
+                  feat_dim=128, hidden_dim=64, num_classes=41),
+    FullBatchSpec("tiny_fb", num_nodes=2048, num_edges=32768, feat_dim=32,
+                  hidden_dim=32, num_classes=7, layers=2, edge_chunk=8192),
+]
+
+
+def spec_by_name(name: str):
+    for s in MINI_SPECS:
+        if s.name == name:
+            return s
+    for s in FULLBATCH_SPECS:
+        if s.name == name:
+            return s
+    raise KeyError(name)

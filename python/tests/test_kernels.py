@@ -1,0 +1,223 @@
+"""Layer-1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes/seeds; the kernels must match `ref.py` to
+float32 tolerance, including gradients (custom_vjp path).
+"""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import gather, gat, ref
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def _rand(rng, *shape):
+    return rng.standard_normal(shape).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# gather_wsum
+# ---------------------------------------------------------------------------
+
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n_in=st.integers(1, 300),
+    blocks=st.integers(1, 4),
+    fanout=st.integers(1, 12),
+    feat=st.integers(1, 96),
+)
+def test_gather_wsum_matches_ref(seed, n_in, blocks, fanout, feat):
+    block_rows = 32
+    n_out = blocks * block_rows
+    rng = np.random.default_rng(seed)
+    src = _rand(rng, n_in, feat)
+    idx = rng.integers(0, n_in, (n_out, fanout)).astype(np.int32)
+    w = _rand(rng, n_out, fanout)
+    out = gather.gather_wsum(src, idx, w, block_rows=block_rows)
+    expect = ref.gather_wsum_ref(src, idx, w)
+    np.testing.assert_allclose(out, expect, rtol=1e-5, atol=1e-5)
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+def test_gather_wsum_zero_weights_give_zero(seed):
+    rng = np.random.default_rng(seed)
+    src = _rand(rng, 64, 16)
+    idx = rng.integers(0, 64, (128, 5)).astype(np.int32)
+    w = np.zeros((128, 5), np.float32)
+    out = gather.gather_wsum(src, idx, w)
+    assert np.all(np.asarray(out) == 0.0)
+
+
+def test_gather_wsum_grads_match_ref():
+    rng = np.random.default_rng(0)
+    src = _rand(rng, 50, 24)
+    idx = rng.integers(0, 50, (128, 7)).astype(np.int32)
+    w = _rand(rng, 128, 7)
+
+    def f_kernel(src, w):
+        return jnp.sum(gather.gather_wsum(src, idx, w) ** 2)
+
+    def f_ref(src, w):
+        return jnp.sum(ref.gather_wsum_ref(src, idx, w) ** 2)
+
+    g1 = jax.grad(f_kernel, argnums=(0, 1))(src, w)
+    g2 = jax.grad(f_ref, argnums=(0, 1))(src, w)
+    np.testing.assert_allclose(g1[0], g2[0], rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(g1[1], g2[1], rtol=1e-4, atol=1e-4)
+
+
+def test_gather_rows():
+    rng = np.random.default_rng(1)
+    src = _rand(rng, 40, 8)
+    idx = rng.integers(0, 40, (128,)).astype(np.int32)
+    out = gather.gather_rows(src, idx)
+    np.testing.assert_allclose(out, src[idx], rtol=1e-6)
+
+
+def test_gather_wsum_rejects_misaligned_rows():
+    rng = np.random.default_rng(2)
+    src = _rand(rng, 16, 4)
+    idx = rng.integers(0, 16, (100, 3)).astype(np.int32)  # not /128
+    w = _rand(rng, 100, 3)
+    with pytest.raises(AssertionError):
+        gather._gather_wsum_pallas(src, idx, w)
+
+
+# ---------------------------------------------------------------------------
+# gat_aggregate
+# ---------------------------------------------------------------------------
+
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n_in=st.integers(2, 200),
+    fanout=st.integers(1, 8),
+    heads=st.sampled_from([1, 2, 4]),
+    dh=st.integers(1, 16),
+)
+def test_gat_matches_ref(seed, n_in, fanout, heads, dh):
+    n_out = 128
+    rng = np.random.default_rng(seed)
+    wh = _rand(rng, n_in, heads * dh)
+    s_src = _rand(rng, n_in, heads)
+    s_dst = _rand(rng, n_out, heads)
+    idx = rng.integers(0, n_in, (n_out, fanout)).astype(np.int32)
+    mask = (rng.random((n_out, fanout)) < 0.8).astype(np.float32)
+    out = gat.gat_aggregate(wh, s_src, s_dst, idx, mask, heads=heads)
+    expect = ref.gat_aggregate_ref(wh, s_src, s_dst, idx, mask, heads=heads)
+    np.testing.assert_allclose(out, expect, rtol=2e-4, atol=2e-4)
+
+
+def test_gat_fully_masked_rows_are_zero():
+    rng = np.random.default_rng(3)
+    wh = _rand(rng, 32, 8)
+    s_src = _rand(rng, 32, 2)
+    s_dst = _rand(rng, 128, 2)
+    idx = rng.integers(0, 32, (128, 4)).astype(np.int32)
+    mask = np.zeros((128, 4), np.float32)
+    out = np.asarray(gat.gat_aggregate(wh, s_src, s_dst, idx, mask, heads=2))
+    np.testing.assert_allclose(out, 0.0, atol=1e-6)
+
+
+def test_gat_attention_is_convex_combination():
+    # with all-ones mask the output lies in the convex hull of the
+    # gathered rows (per head), so it is bounded by their min/max
+    rng = np.random.default_rng(4)
+    wh = _rand(rng, 64, 4)  # heads=1, dh=4
+    s_src = _rand(rng, 64, 1)
+    s_dst = _rand(rng, 128, 1)
+    idx = rng.integers(0, 64, (128, 6)).astype(np.int32)
+    mask = np.ones((128, 6), np.float32)
+    out = np.asarray(gat.gat_aggregate(wh, s_src, s_dst, idx, mask, heads=1))
+    g = wh[idx]  # [128, 6, 4]
+    assert np.all(out <= g.max(axis=1) + 1e-4)
+    assert np.all(out >= g.min(axis=1) - 1e-4)
+
+
+def test_gat_grads_flow():
+    rng = np.random.default_rng(5)
+    wh = _rand(rng, 48, 6)
+    s_src = _rand(rng, 48, 2)
+    s_dst = _rand(rng, 128, 2)
+    idx = rng.integers(0, 48, (128, 5)).astype(np.int32)
+    mask = np.ones((128, 5), np.float32)
+
+    def f(wh, s_src, s_dst):
+        return jnp.sum(
+            gat.gat_aggregate(wh, s_src, s_dst, idx, mask, heads=2) ** 2)
+
+    def f_ref(wh, s_src, s_dst):
+        return jnp.sum(
+            ref.gat_aggregate_ref(wh, s_src, s_dst, idx, mask, heads=2) ** 2)
+
+    g1 = jax.grad(f, argnums=(0, 1, 2))(wh, s_src, s_dst)
+    g2 = jax.grad(f_ref, argnums=(0, 1, 2))(wh, s_src, s_dst)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# additional structural properties
+# ---------------------------------------------------------------------------
+
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    block_rows=st.sampled_from([16, 32, 64, 128]),
+)
+def test_gather_wsum_block_rows_invariance(seed, block_rows):
+    """The output must not depend on the VMEM blocking choice."""
+    rng = np.random.default_rng(seed)
+    n_out = 256
+    src = _rand(rng, 40, 12)
+    idx = rng.integers(0, 40, (n_out, 4)).astype(np.int32)
+    w = _rand(rng, n_out, 4)
+    a = gather.gather_wsum(src, idx, w, block_rows=block_rows)
+    b = ref.gather_wsum_ref(src, idx, w)
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+
+def test_gather_wsum_linearity():
+    """gather_wsum is linear in w: f(a*w1 + b*w2) = a*f(w1) + b*f(w2)."""
+    rng = np.random.default_rng(6)
+    src = _rand(rng, 30, 10)
+    idx = rng.integers(0, 30, (128, 5)).astype(np.int32)
+    w1 = _rand(rng, 128, 5)
+    w2 = _rand(rng, 128, 5)
+    lhs = gather.gather_wsum(src, idx, 2.0 * w1 + 3.0 * w2)
+    rhs = 2.0 * gather.gather_wsum(src, idx, w1) + \
+        3.0 * gather.gather_wsum(src, idx, w2)
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-4, atol=1e-4)
+
+
+def test_gather_wsum_mean_of_identical_rows_is_row():
+    """Mean-aggregating K copies of one row returns that row exactly."""
+    rng = np.random.default_rng(7)
+    src = _rand(rng, 20, 8)
+    idx = np.full((128, 5), 7, np.int32)
+    w = np.full((128, 5), 0.2, np.float32)
+    out = np.asarray(gather.gather_wsum(src, idx, w))
+    np.testing.assert_allclose(out, np.tile(src[7], (128, 1)), rtol=1e-5)
+
+
+def test_gat_softmax_shift_invariance():
+    """Adding a constant to all attention logits must not change the
+    output (softmax shift invariance through the kernel)."""
+    rng = np.random.default_rng(8)
+    wh = _rand(rng, 32, 6)
+    s_src = _rand(rng, 32, 2)
+    s_dst = _rand(rng, 128, 2)
+    idx = rng.integers(0, 32, (128, 4)).astype(np.int32)
+    mask = np.ones((128, 4), np.float32)
+    # shifting s_dst shifts every e[i,k,h] for row i equally, but only
+    # when all logits stay on the same side of the LeakyReLU kink; use
+    # large positive logits so the activation is linear
+    s_src = np.abs(s_src) + 5.0
+    s_dst = np.abs(s_dst) + 5.0
+    a = np.asarray(gat.gat_aggregate(wh, s_src, s_dst, idx, mask, heads=2))
+    b = np.asarray(gat.gat_aggregate(wh, s_src, s_dst + 3.0, idx, mask,
+                                     heads=2))
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,148 @@
+"""Layer-2 model tests: shapes, masking semantics, Adam dynamics, and
+the train step's loss-decrease sanity check for all three models."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from compile import model as M
+from compile.specs import FullBatchSpec, ModelSpec
+
+
+def small_spec(model="sage", heads=1):
+    return ModelSpec(
+        name="unit", model=model, num_nodes=256, feat_dim=16, hidden_dim=8,
+        num_classes=5, fanouts=(3, 3), batch_size=128, heads=heads)
+
+
+def make_batch(spec, rng, labels=True):
+    caps = spec.node_caps
+    args = []
+    args.append(jnp.array(rng.standard_normal(
+        (spec.num_nodes, spec.feat_dim)), jnp.float32))
+    for l in range(1, spec.layers + 1):
+        n = caps[l]
+        w = spec.idx_width(l)
+        hi = spec.num_nodes if l == 1 else caps[l - 1]
+        args.append(jnp.array(rng.integers(0, hi, (n, w)), jnp.int32))
+        wm = (rng.random((n, w)) < 0.8).astype(np.float32)
+        if spec.model == "sage":  # normalize like the rust builder
+            s = wm.sum(1, keepdims=True)
+            wm = np.where(s > 0, wm / np.maximum(s, 1), 0.0).astype(np.float32)
+        args.append(jnp.array(wm))
+        if spec.model in ("sage", "gat"):
+            args.append(jnp.array(rng.integers(0, hi, (n,)), jnp.int32))
+    if labels:
+        b = caps[spec.layers]
+        args.append(jnp.array(rng.integers(0, spec.num_classes, (b,)), jnp.int32))
+        lmask = np.zeros(b, np.float32)
+        lmask[: b // 2] = 1.0
+        args.append(jnp.array(lmask))
+    return args
+
+
+def init_params(spec, rng):
+    return [jnp.array(0.1 * rng.standard_normal(s), jnp.float32)
+            for _, s in M.param_shapes(spec)]
+
+
+@pytest.mark.parametrize("model,heads", [("sage", 1), ("gcn", 1), ("gat", 2)])
+def test_forward_shapes(model, heads):
+    spec = small_spec(model, heads)
+    rng = np.random.default_rng(0)
+    params = init_params(spec, rng)
+    batch = make_batch(spec, rng, labels=False)
+    logits = M.forward(spec, params, batch)
+    assert logits.shape == (spec.node_caps[spec.layers], spec.num_classes)
+    assert np.all(np.isfinite(np.asarray(logits)))
+
+
+def test_masked_loss_ignores_padded_roots():
+    logits = jnp.array(np.random.default_rng(1).standard_normal((8, 4)),
+                       jnp.float32)
+    labels = jnp.zeros(8, jnp.int32)
+    m1 = jnp.array([1, 1, 1, 1, 0, 0, 0, 0], jnp.float32)
+    loss1, _ = M.masked_loss(logits, labels, m1)
+    # changing logits under the mask must not change the loss
+    logits2 = logits.at[5].set(100.0)
+    loss2, _ = M.masked_loss(logits2, labels, m1)
+    assert np.allclose(loss1, loss2)
+
+
+def test_masked_loss_correct_count():
+    logits = jnp.array([[10.0, 0.0], [0.0, 10.0], [10.0, 0.0]], jnp.float32)
+    labels = jnp.array([0, 1, 1], jnp.int32)
+    lmask = jnp.array([1.0, 1.0, 1.0], jnp.float32)
+    _, correct = M.masked_loss(logits, labels, lmask)
+    assert int(correct) == 2
+
+
+def test_adam_matches_torch_semantics():
+    # single scalar parameter, known trajectory
+    p = [jnp.array([1.0], jnp.float32)]
+    g = [jnp.array([0.5], jnp.float32)]
+    m = [jnp.zeros(1, jnp.float32)]
+    v = [jnp.zeros(1, jnp.float32)]
+    new_p, new_m, new_v = M.adam_update(p, g, m, v, t=1.0, lr=0.1,
+                                        weight_decay=0.0)
+    # t=1: mhat = g, vhat = g^2 -> step = lr * g/(|g|+eps) = lr
+    assert np.allclose(np.asarray(new_p[0]), 1.0 - 0.1, atol=1e-5)
+    assert np.allclose(np.asarray(new_m[0]), 0.05, atol=1e-7)
+    assert np.allclose(np.asarray(new_v[0]), 0.00025, atol=1e-9)
+
+
+def test_weight_decay_shrinks_params():
+    p = [jnp.array([1.0], jnp.float32)]
+    g = [jnp.array([0.0], jnp.float32)]
+    m = [jnp.zeros(1, jnp.float32)]
+    v = [jnp.zeros(1, jnp.float32)]
+    new_p, _, _ = M.adam_update(p, g, m, v, t=1.0, lr=0.1, weight_decay=0.1)
+    assert float(new_p[0][0]) < 1.0
+
+
+@pytest.mark.parametrize("model,heads", [("sage", 1), ("gcn", 1), ("gat", 2)])
+def test_train_step_decreases_loss(model, heads):
+    spec = small_spec(model, heads)
+    rng = np.random.default_rng(2)
+    step = jax.jit(M.make_train_step(spec))
+    params = init_params(spec, rng)
+    n = len(params)
+    m = [jnp.zeros_like(x) for x in params]
+    v = [jnp.zeros_like(x) for x in params]
+    batch = make_batch(spec, rng, labels=True)
+    losses = []
+    t = 0
+    for _ in range(8):
+        t += 1
+        out = step(*params, *m, *v, jnp.float32(t), jnp.float32(1e-2), *batch)
+        params = list(out[:n])
+        m = list(out[n:2 * n])
+        v = list(out[2 * n:3 * n])
+        losses.append(float(out[3 * n]))
+    assert losses[-1] < losses[0], losses
+
+
+def test_fullbatch_forward_matches_dense_reference():
+    spec = FullBatchSpec("fbunit", num_nodes=32, num_edges=128, feat_dim=8,
+                         hidden_dim=4, num_classes=3, layers=2, edge_chunk=64)
+    rng = np.random.default_rng(3)
+    params = [jnp.array(0.1 * rng.standard_normal(s), jnp.float32)
+              for _, s in M.fullbatch_param_shapes(spec)]
+    x = jnp.array(rng.standard_normal((32, 8)), jnp.float32)
+    e = spec.padded_edges
+    src = rng.integers(0, 32, e).astype(np.int32)
+    dst = rng.integers(0, 32, e).astype(np.int32)
+    w = rng.random(e).astype(np.float32)
+    w[64:] = 0.0  # padding
+    out = M.fullbatch_forward(spec, params, x, jnp.array(src),
+                              jnp.array(dst), jnp.array(w))
+    # dense reference: A[dst, src] += w
+    A = np.zeros((32, 32), np.float32)
+    for s_, d_, w_ in zip(src[:64], dst[:64], w[:64]):
+        A[d_, s_] += w_
+    h = np.asarray(x)
+    ps = [np.asarray(p) for p in params]
+    h = np.maximum(A @ h @ ps[0] + ps[1], 0)
+    h = A @ h @ ps[2] + ps[3]
+    np.testing.assert_allclose(np.asarray(out), h, rtol=1e-3, atol=1e-3)

@@ -1,0 +1,59 @@
+//! End-to-end per-epoch benchmark: full trainer epochs under the
+//! baseline and the paper's best COMM-RAND knobs (the quantity behind
+//! every per-epoch speedup row in the paper). Wall-clock and the
+//! modelled device time are both reported.
+
+use comm_rand::config::{preset, BatchPolicy, TrainConfig};
+use comm_rand::sampler::RootPolicy;
+use comm_rand::train::{self, Method, RunOptions, Session};
+
+fn main() -> anyhow::Result<()> {
+    let name = std::env::args()
+        .skip(1)
+        .find(|a| !a.starts_with("--"))
+        .unwrap_or_else(|| "reddit_sim".into());
+    let p = preset(&name).expect("unknown preset");
+    let ds = train::dataset::load_or_build(&p, true)?;
+    let mut session = Session::new()?;
+    let cfg = TrainConfig { max_epochs: 3, ..Default::default() };
+    let opts = RunOptions::default();
+
+    println!("== per-epoch benchmark ({name}) ==");
+    let mut base_wall = 0.0;
+    let mut base_model = 0.0;
+    for (label, pol) in [
+        ("RAND-ROOTS+p0.5 (baseline)", BatchPolicy::baseline()),
+        (
+            "NORAND-ROOTS+p1.0",
+            BatchPolicy { roots: RootPolicy::NoRand, p_intra: 1.0 },
+        ),
+        (
+            "COMM-RAND-MIX-12.5%+p1.0",
+            BatchPolicy {
+                roots: RootPolicy::CommRandMix { pct: 0.125 },
+                p_intra: 1.0,
+            },
+        ),
+    ] {
+        let r = train::train(
+            &mut session,
+            &ds,
+            p.artifact,
+            &Method::CommRand(pol),
+            &cfg,
+            &opts,
+        )?;
+        let wall = r.mean_epoch_wall_s();
+        let model = r.mean_epoch_modeled_s();
+        if base_wall == 0.0 {
+            base_wall = wall;
+            base_model = model;
+        }
+        println!(
+            "{label:<28} wall {wall:.3}s ({:.2}x)   modeled {model:.4}s ({:.2}x)",
+            base_wall / wall,
+            base_model / model
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,20 @@
+//! `cargo bench figures` — quick-mode regeneration of every paper
+//! table/figure (full-budget versions run via `comm-rand exp <id>`).
+//! Each experiment writes its artifact into `results/` and prints the
+//! headline rows.
+
+fn main() -> anyhow::Result<()> {
+    std::env::set_var("COMM_RAND_FAST", "1");
+    let ids = [
+        "fig2", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10",
+        "tab4", "tab5", "fullbatch", "inference", "preproc",
+    ];
+    for id in ids {
+        println!("\n================ exp {id} (quick) ================");
+        let args = comm_rand::cli_args(vec!["exp".into(), id.into()]);
+        if let Err(e) = comm_rand::exp::run(&args) {
+            println!("exp {id} failed: {e:#}");
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,83 @@
+//! Sampling-path micro benchmarks: root partitioning policies, biased
+//! neighbor sampling, MFG construction and batch assembly throughput
+//! (no external criterion offline — util::bench is the harness).
+
+use comm_rand::batch::assemble;
+use comm_rand::config::preset;
+use comm_rand::runtime::artifact::{default_dir, Manifest};
+use comm_rand::sampler::roots::order_roots;
+use comm_rand::sampler::{build_mfg, NeighborPolicy, RootPolicy};
+use comm_rand::train::dataset::load_or_build;
+use comm_rand::util::bench::bench;
+use comm_rand::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let p = preset("reddit_sim").unwrap();
+    let ds = load_or_build(&p, true)?;
+    let train = ds.train_nodes();
+    println!("== sampling micro-benchmarks (reddit_sim) ==");
+
+    let mut rng = Rng::new(1);
+    for policy in [
+        RootPolicy::Rand,
+        RootPolicy::NoRand,
+        RootPolicy::CommRandMix { pct: 0.125 },
+    ] {
+        bench(&format!("order_roots/{}", policy.label()), 0.4, || {
+            order_roots(policy, &train, &ds.community, &mut rng)
+        });
+    }
+
+    let roots: Vec<u32> = train[..256].to_vec();
+    for (label, pol) in [
+        ("uniform", NeighborPolicy::Uniform),
+        ("biased_p0.9", NeighborPolicy::Biased { p: 0.9 }),
+        ("biased_p1.0", NeighborPolicy::Biased { p: 1.0 }),
+    ] {
+        bench(&format!("build_mfg/5-10-10/{label}"), 0.6, || {
+            build_mfg(&ds.csr, &ds.community, &roots, &[5, 10, 10], pol, &mut rng)
+        });
+    }
+
+    if let Ok(manifest) = Manifest::load(&default_dir()) {
+        let meta = manifest.get("reddit_sim.train")?;
+        let mfg = build_mfg(
+            &ds.csr, &ds.community, &roots, &[5, 10, 10],
+            NeighborPolicy::Uniform, &mut rng,
+        );
+        bench("assemble/reddit_sim", 0.6, || {
+            assemble(&mfg, &ds, meta, true).unwrap()
+        });
+    } else {
+        println!("(artifacts missing — skipping assemble bench)");
+    }
+    bench_maps();
+    Ok(())
+}
+
+// appended: U32Map vs std::HashMap on the MFG dedup workload (the
+// §Perf A/B for the sampling hot path)
+pub fn bench_maps() {
+    use comm_rand::util::umap::U32Map;
+    use std::collections::HashMap;
+    let mut rng = Rng::new(7);
+    let keys: Vec<u32> = (0..30_000).map(|_| rng.below(16384) as u32).collect();
+    bench("dedup_map/std_hashmap", 0.5, || {
+        let mut m: HashMap<u32, u32> = HashMap::with_capacity(8192);
+        let mut n = 0u32;
+        for &k in &keys {
+            let v = *m.entry(k).or_insert_with(|| { n += 1; n });
+            std::hint::black_box(v);
+        }
+        m.len()
+    });
+    bench("dedup_map/u32map", 0.5, || {
+        let mut m = U32Map::with_capacity(8192);
+        let mut n = 0u32;
+        for &k in &keys {
+            let v = m.get_or_insert_with(k, || { n += 1; n });
+            std::hint::black_box(v);
+        }
+        m.len()
+    });
+}

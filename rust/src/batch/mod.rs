@@ -1,0 +1,377 @@
+//! Padded batch assembly: MFG -> fixed-shape arrays matching the AOT
+//! artifact ABI (see python/compile/model.py's layout docs), plus the
+//! per-batch instrumentation the evaluation consumes (input feature
+//! footprint for Fig. 6, label diversity for Fig. 7, and the feature
+//! access stream fed to the cache simulator).
+
+use anyhow::{bail, Result};
+
+use crate::graph::Dataset;
+use crate::runtime::artifact::ArtifactMeta;
+use crate::sampler::Mfg;
+
+/// One layer of a padded batch (input-most first).
+pub struct PaddedLayer {
+    /// `[cap * width]` neighbor indices (global node ids at layer 1 in
+    /// resident mode; positions into the previous level otherwise).
+    pub idx: Vec<i32>,
+    /// `[cap * width]` aggregation weights (model-specific, mask folded).
+    pub w: Vec<f32>,
+    /// `[cap]` self positions (SAGE/GAT artifacts only).
+    pub self_idx: Vec<i32>,
+}
+
+/// Instrumentation captured during assembly.
+#[derive(Clone, Debug, Default)]
+pub struct BatchStats {
+    /// Unique input-frontier nodes (feature rows fetched).
+    pub input_nodes: usize,
+    /// Bytes of input features this batch reads (Fig. 6 x-axis).
+    pub input_bytes: usize,
+    /// Actual (unpadded) dst rows per layer, input-most first.
+    pub level_sizes: Vec<usize>,
+    /// Distinct labels among the batch's labeled roots (Fig. 7).
+    pub distinct_labels: usize,
+    /// Labeled roots in this batch.
+    pub num_labeled: usize,
+}
+
+/// A fully padded batch, ready for upload.
+pub struct PaddedBatch {
+    pub layers: Vec<PaddedLayer>,
+    /// `[batch_cap]`
+    pub labels: Vec<i32>,
+    pub lmask: Vec<f32>,
+    /// Staged mode only: gathered input features `[cap0 * feat_dim]`.
+    pub x0: Option<Vec<f32>>,
+    /// Global node ids whose features the model reads, in first-touch
+    /// order (cache-simulator input).
+    pub access_stream: Vec<u32>,
+    pub stats: BatchStats,
+}
+
+/// Assemble a padded batch from a sampled MFG.
+///
+/// `use_labels = false` builds an inference batch (labels left empty).
+pub fn assemble(
+    mfg: &Mfg,
+    ds: &Dataset,
+    meta: &ArtifactMeta,
+    use_labels: bool,
+) -> Result<PaddedBatch> {
+    let spec = &meta.spec;
+    let layers = spec.layers;
+    if mfg.num_layers() != layers {
+        bail!("MFG has {} layers, artifact {}", mfg.num_layers(), layers);
+    }
+    let caps = &spec.node_caps;
+    let model = spec.model.as_str();
+    let resident = spec.feat_mode == "resident";
+
+    let mut out_layers = Vec::with_capacity(layers);
+    for l in 1..=layers {
+        let cap = caps[l];
+        let width = spec.idx_widths[l - 1];
+        let fanout = spec.fanouts[l - 1];
+        let lvl = &mfg.levels[l];
+        let lay = &mfg.layers[l - 1];
+        if lvl.len() > cap {
+            bail!(
+                "layer {l} has {} dst rows, cap {cap} (artifact {})",
+                lvl.len(),
+                meta.name
+            );
+        }
+        let mut idx = vec![0i32; cap * width];
+        let mut w = vec![0f32; cap * width];
+        let mut self_idx = vec![0i32; cap];
+
+        // position -> artifact index value: at layer 1 in resident mode
+        // the artifact gathers from the full feature table, so indices
+        // are global node ids.
+        let prev = &mfg.levels[l - 1];
+        let to_val = |pos: u32| -> i32 {
+            if l == 1 && resident {
+                prev[pos as usize] as i32
+            } else {
+                pos as i32
+            }
+        };
+
+        for i in 0..lvl.len() {
+            let c = lay.counts[i] as usize;
+            let row = &lay.nbr_pos[i * fanout..i * fanout + c];
+            self_idx[i] = to_val(i as u32); // dsts are a prefix of prev
+            match model {
+                "sage" => {
+                    // mean over sampled neighbors
+                    let wgt = if c > 0 { 1.0 / c as f32 } else { 0.0 };
+                    for (k, &p) in row.iter().enumerate() {
+                        idx[i * width + k] = to_val(p);
+                        w[i * width + k] = wgt;
+                    }
+                }
+                "gcn" => {
+                    // self loop in slot 0, mean over (self + neighbors)
+                    let wgt = 1.0 / (c + 1) as f32;
+                    idx[i * width] = to_val(i as u32);
+                    w[i * width] = wgt;
+                    for (k, &p) in row.iter().enumerate() {
+                        idx[i * width + 1 + k] = to_val(p);
+                        w[i * width + 1 + k] = wgt;
+                    }
+                }
+                "gat" => {
+                    // self loop slot 0; w is a 0/1 attention mask
+                    idx[i * width] = to_val(i as u32);
+                    w[i * width] = 1.0;
+                    for (k, &p) in row.iter().enumerate() {
+                        idx[i * width + 1 + k] = to_val(p);
+                        w[i * width + 1 + k] = 1.0;
+                    }
+                }
+                m => bail!("unknown model {m}"),
+            }
+        }
+        out_layers.push(PaddedLayer { idx, w, self_idx });
+    }
+
+    // roots / labels
+    let bcap = caps[layers];
+    let roots = mfg.roots();
+    let mut labels = vec![0i32; if use_labels { bcap } else { 0 }];
+    let mut lmask = vec![0f32; if use_labels { bcap } else { 0 }];
+    let mut label_seen = std::collections::HashSet::new();
+    let mut num_labeled = 0usize;
+    if use_labels {
+        for (i, &v) in roots.iter().enumerate() {
+            labels[i] = ds.labels[v as usize] as i32;
+            // ClusterGCN roots include unlabeled nodes: mask to train set
+            let is_train = ds.split[v as usize] == crate::graph::SPLIT_TRAIN;
+            if is_train {
+                lmask[i] = 1.0;
+                label_seen.insert(ds.labels[v as usize]);
+                num_labeled += 1;
+            }
+        }
+    } else {
+        for &v in roots.iter() {
+            label_seen.insert(ds.labels[v as usize]);
+        }
+    }
+
+    // staged feature gather
+    let input = mfg.input_nodes();
+    let x0 = if resident {
+        None
+    } else {
+        let f = spec.feat_dim;
+        let cap0 = caps[0];
+        if input.len() > cap0 {
+            bail!("input frontier {} exceeds cap0 {cap0}", input.len());
+        }
+        let mut x = vec![0f32; cap0 * f];
+        for (i, &v) in input.iter().enumerate() {
+            x[i * f..(i + 1) * f].copy_from_slice(ds.feature_row(v));
+        }
+        Some(x)
+    };
+
+    let stats = BatchStats {
+        input_nodes: input.len(),
+        input_bytes: input.len() * spec.feat_dim * 4,
+        level_sizes: mfg.levels.iter().map(|l| l.len()).collect(),
+        distinct_labels: label_seen.len(),
+        num_labeled,
+    };
+
+    Ok(PaddedBatch {
+        layers: out_layers,
+        labels,
+        lmask,
+        x0,
+        access_stream: input.to_vec(),
+        stats,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifact::{DType, IoSpec, SpecMeta};
+    use crate::sampler::{build_mfg, NeighborPolicy};
+    use crate::util::rng::Rng;
+
+    fn tiny_dataset() -> Dataset {
+        let mut rng = Rng::new(20);
+        let g = crate::graph::gen::generate_sbm(
+            &crate::graph::gen::SbmParams {
+                n: 512,
+                num_comms: 8,
+                avg_deg: 10.0,
+                p_intra: 0.85,
+                deg_alpha: 2.1,
+                size_alpha: 1.5,
+            },
+            &mut rng,
+        );
+        let p = crate::graph::features::synthesize(
+            &g.gt_community,
+            8,
+            &crate::graph::features::FeatureParams {
+                feat_dim: 16,
+                num_classes: 5,
+                label_noise: 0.1,
+                class_signal: 1.0,
+                comm_signal: 0.3,
+                noise: 0.5,
+                train_frac: 0.5,
+                val_frac: 0.1,
+                labeled_frac: 0.9,
+            },
+            &mut rng,
+        );
+        Dataset {
+            name: "t".into(),
+            csr: g.csr,
+            features: p.features,
+            feat_dim: 16,
+            labels: p.labels,
+            num_classes: 5,
+            split: p.split,
+            community: g.gt_community.clone(),
+            num_comms: 8,
+            gt_community: g.gt_community,
+        }
+    }
+
+    fn meta(model: &str, width: usize) -> ArtifactMeta {
+        ArtifactMeta {
+            name: format!("{model}.test"),
+            file: "/dev/null".into(),
+            kind: "train".into(),
+            spec: SpecMeta {
+                model: model.into(),
+                layers: 2,
+                fanouts: vec![5, 5],
+                idx_widths: vec![width, width],
+                batch_size: 64,
+                num_nodes: 512,
+                feat_dim: 16,
+                num_classes: 5,
+                heads: 1,
+                feat_mode: "resident".into(),
+                node_caps: vec![512, 384, 64],
+                padded_edges: 0,
+                edge_chunk: 0,
+            },
+            inputs: vec![IoSpec {
+                name: "p.w".into(),
+                shape: vec![16, 16],
+                dtype: DType::F32,
+            }],
+            outputs: vec![],
+        }
+    }
+
+    #[test]
+    fn sage_batch_weights_sum_to_one() {
+        let ds = tiny_dataset();
+        let mut rng = Rng::new(1);
+        let roots: Vec<u32> = ds.train_nodes()[..64].to_vec();
+        let mfg = build_mfg(
+            &ds.csr, &ds.community, &roots, &[5, 5],
+            NeighborPolicy::Uniform, &mut rng,
+        );
+        let m = meta("sage", 5);
+        let b = assemble(&mfg, &ds, &m, true).unwrap();
+        assert_eq!(b.layers.len(), 2);
+        for (l, lay) in b.layers.iter().enumerate() {
+            let nreal = b.stats.level_sizes[l + 1];
+            for i in 0..nreal {
+                let s: f32 = lay.w[i * 5..(i + 1) * 5].iter().sum();
+                let v = mfg.levels[l + 1][i];
+                if ds.csr.degree(v) > 0 {
+                    assert!((s - 1.0).abs() < 1e-5, "row {i} weights {s}");
+                }
+            }
+            // padded rows are all-zero
+            for i in nreal..lay.self_idx.len() {
+                assert!(lay.w[i * 5..(i + 1) * 5].iter().all(|&x| x == 0.0));
+            }
+        }
+        assert_eq!(b.lmask.iter().filter(|&&x| x > 0.0).count(), 64);
+        assert!(b.x0.is_none());
+        assert_eq!(b.stats.input_nodes, mfg.input_nodes().len());
+    }
+
+    #[test]
+    fn gcn_includes_self_slot() {
+        let ds = tiny_dataset();
+        let mut rng = Rng::new(2);
+        let roots: Vec<u32> = ds.train_nodes()[..32].to_vec();
+        let mfg = build_mfg(
+            &ds.csr, &ds.community, &roots, &[5, 5],
+            NeighborPolicy::Uniform, &mut rng,
+        );
+        let m = meta("gcn", 6);
+        let b = assemble(&mfg, &ds, &m, true).unwrap();
+        let lay = &b.layers[1]; // output layer: positions, not globals
+        for i in 0..b.stats.level_sizes[2] {
+            assert_eq!(lay.idx[i * 6], i as i32, "self slot");
+            let c = mfg.layers[1].counts[i] as usize;
+            let expect = 1.0 / (c + 1) as f32;
+            assert!((lay.w[i * 6] - expect).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn layer1_uses_global_ids_in_resident_mode() {
+        let ds = tiny_dataset();
+        let mut rng = Rng::new(3);
+        let roots: Vec<u32> = ds.train_nodes()[..32].to_vec();
+        let mfg = build_mfg(
+            &ds.csr, &ds.community, &roots, &[5, 5],
+            NeighborPolicy::Uniform, &mut rng,
+        );
+        let m = meta("sage", 5);
+        let b = assemble(&mfg, &ds, &m, true).unwrap();
+        let lay = &b.layers[0];
+        for i in 0..b.stats.level_sizes[1] {
+            let c = mfg.layers[0].counts[i] as usize;
+            for k in 0..c {
+                let global = lay.idx[i * 5 + k];
+                let pos = mfg.layers[0].nbr_pos[i * 5 + k] as usize;
+                assert_eq!(global as u32, mfg.levels[0][pos]);
+            }
+            assert_eq!(lay.self_idx[i] as u32, mfg.levels[1][i]);
+        }
+    }
+
+    #[test]
+    fn staged_mode_gathers_x0() {
+        let ds = tiny_dataset();
+        let mut rng = Rng::new(4);
+        let roots: Vec<u32> = ds.train_nodes()[..32].to_vec();
+        let mfg = build_mfg(
+            &ds.csr, &ds.community, &roots, &[5, 5],
+            NeighborPolicy::Uniform, &mut rng,
+        );
+        let mut m = meta("sage", 5);
+        m.spec.feat_mode = "staged".into();
+        let b = assemble(&mfg, &ds, &m, true).unwrap();
+        let x0 = b.x0.as_ref().unwrap();
+        assert_eq!(x0.len(), 512 * 16);
+        // row i of x0 == features of input node i
+        for (i, &v) in mfg.input_nodes().iter().enumerate().take(10) {
+            assert_eq!(&x0[i * 16..(i + 1) * 16], ds.feature_row(v));
+        }
+        // layer-1 indices are local rows now
+        let lay = &b.layers[0];
+        for i in 0..b.stats.level_sizes[1] {
+            assert!(
+                (lay.self_idx[i] as usize) < mfg.input_nodes().len()
+            );
+        }
+    }
+}

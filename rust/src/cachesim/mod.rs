@@ -1,0 +1,24 @@
+//! Cache simulation + device time model.
+//!
+//! The paper's per-epoch speedups come from on-chip (A100 L2) and
+//! software-managed cache reuse during feature fetches — effects a
+//! CPU-only testbed cannot measure directly. We therefore replay each
+//! batch's feature access stream through:
+//!
+//! * [`lru`] — a set-associative LRU cache modelling the GPU L2
+//!   (Fig. 5/6 per-epoch time model, Fig. 10 capacity sweep), and
+//! * [`swcache`] — a feature-granularity LRU modelling DGL's GPU
+//!   software cache over UVA transfers (Fig. 9),
+//!
+//! and convert hit/miss counts into a modelled epoch time with
+//! [`timemodel`] (bandwidth-calibrated to the A100's L2:HBM ratio).
+//! Wall-clock CPU times are *also* reported by every experiment; the
+//! model is what makes the cache-sensitivity studies reproducible.
+
+pub mod lru;
+pub mod swcache;
+pub mod timemodel;
+
+pub use lru::SetAssocCache;
+pub use swcache::SoftwareCache;
+pub use timemodel::{DeviceModel, EpochCost};

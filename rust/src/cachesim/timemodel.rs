@@ -1,0 +1,117 @@
+//! Modelled device epoch time (the figure-generating experiments
+//! report both this and measured CPU wall-clock).
+//!
+//! GNN mini-batch training on an A100 is memory-bound in the feature
+//! gather: per-batch cost ≈ feature traffic at the achieved level of
+//! the memory hierarchy + a compute term proportional to the sampled
+//! sub-graph's dense work. We model:
+//!
+//!   t_batch = hits * line / BW_l2 + misses * line / BW_hbm
+//!           + dense_flops / F_eff [+ uva_bytes / BW_pcie]
+//!
+//! with A100 constants: BW_l2 ≈ 4 TB/s, BW_hbm ≈ 2 TB/s (2039 GB/s
+//! peak ≈ 0.8 achieved), F_eff ≈ 60 TFLOP/s effective f32 tensor-core
+//! rate on small GEMMs, PCIe-gen4 ≈ 25 GB/s. Absolute numbers are not
+//! the claim (the paper's testbed differs); what the model preserves is
+//! the *relative* cost shift as hit rates move — exactly what Figs
+//! 5/6/9/10 measure.
+
+use super::lru::SetAssocCache;
+
+#[derive(Clone, Debug)]
+pub struct DeviceModel {
+    pub l2_bw: f64,   // bytes/s
+    pub hbm_bw: f64,  // bytes/s
+    pub flops: f64,   // effective flop/s
+    pub pcie_bw: f64, // bytes/s (UVA transfers)
+    pub line_bytes: f64,
+    /// fixed per-batch launch/driver overhead (s)
+    pub batch_overhead: f64,
+}
+
+impl Default for DeviceModel {
+    fn default() -> Self {
+        // Scaled-testbed calibration (DESIGN.md §Cache-Model): the
+        // simulated datasets are ~15-100x smaller than the real ones,
+        // so bandwidths are scaled down 10x from A100 peaks to keep the
+        // *relative* weight of feature traffic vs. dense compute at the
+        // level the paper measures (feature gather dominant, Fig. 6).
+        // The effective GEMM rate reflects small-batch GEMM efficiency
+        // (~15% of tensor-core peak).
+        DeviceModel {
+            l2_bw: 400.0e9,
+            hbm_bw: 160.0e9,
+            flops: 9.0e12,
+            pcie_bw: 2.5e9,
+            line_bytes: 128.0,
+            batch_overhead: 4e-6,
+        }
+    }
+}
+
+/// Accumulated modelled cost over an epoch.
+#[derive(Clone, Debug, Default)]
+pub struct EpochCost {
+    pub l2_hits: u64,
+    pub l2_misses: u64,
+    pub dense_flops: f64,
+    pub uva_bytes: f64,
+    pub batches: usize,
+}
+
+impl EpochCost {
+    pub fn add_cache(&mut self, c: &SetAssocCache) {
+        self.l2_hits += c.hits;
+        self.l2_misses += c.misses;
+    }
+
+    /// Dense work of one batch: Σ_l rows_l · f_in · f_out · 2 (+
+    /// aggregation traffic folded into the cache replay).
+    pub fn add_dense(&mut self, level_sizes: &[usize], dims: &[usize]) {
+        // dims: [feat, hidden, ..., classes]; level_sizes: input-most
+        // first, len = layers+1
+        let layers = dims.len() - 1;
+        for l in 0..layers {
+            let rows = *level_sizes.get(l + 1).unwrap_or(&0) as f64;
+            self.dense_flops += 2.0 * rows * dims[l] as f64 * dims[l + 1] as f64;
+        }
+    }
+
+    pub fn seconds(&self, m: &DeviceModel) -> f64 {
+        self.l2_hits as f64 * m.line_bytes / m.l2_bw
+            + self.l2_misses as f64 * m.line_bytes / m.hbm_bw
+            + self.dense_flops / m.flops
+            + self.uva_bytes / m.pcie_bw
+            + self.batches as f64 * m.batch_overhead
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn more_misses_cost_more() {
+        let m = DeviceModel::default();
+        let mut a = EpochCost { l2_hits: 1000, l2_misses: 10, ..Default::default() };
+        let mut b = EpochCost { l2_hits: 10, l2_misses: 1000, ..Default::default() };
+        a.batches = 1;
+        b.batches = 1;
+        assert!(a.seconds(&m) < b.seconds(&m));
+    }
+
+    #[test]
+    fn dense_term_accumulates() {
+        let mut c = EpochCost::default();
+        c.add_dense(&[100, 50, 10], &[32, 16, 4]);
+        // layer0: 50*32*16*2, layer1: 10*16*4*2
+        assert!((c.dense_flops - (50.0 * 32.0 * 16.0 * 2.0 + 10.0 * 16.0 * 4.0 * 2.0)).abs() < 1.0);
+    }
+
+    #[test]
+    fn uva_term() {
+        let m = DeviceModel::default();
+        let c = EpochCost { uva_bytes: m.pcie_bw, ..Default::default() };
+        assert!((c.seconds(&m) - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,253 @@
+//! Command-line interface of the `comm-rand` leader binary.
+//!
+//! Subcommands (run `comm-rand help` for the list):
+//! * `gen-data [preset...]` — materialize the synthetic datasets
+//! * `smoke`                — end-to-end vertical-slice check (tiny)
+//! * `train`                — train one configuration
+//! * `exp <id>`             — regenerate a paper table/figure
+//! * `bench-epoch`          — per-epoch timing for one configuration
+//! * `inspect <preset>`     — dataset statistics
+//!
+//! Flag syntax is `key=value` (no external CLI crate offline).
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{preset, preset_names, BatchPolicy, TrainConfig};
+use crate::sampler::roots::RootPolicy;
+
+pub struct Args {
+    pub cmd: String,
+    pub pos: Vec<String>,
+    pub kv: BTreeMap<String, String>,
+}
+
+impl Args {
+    pub fn parse(argv: Vec<String>) -> Args {
+        let cmd = argv.first().cloned().unwrap_or_else(|| "help".into());
+        let mut pos = Vec::new();
+        let mut kv = BTreeMap::new();
+        for a in argv.into_iter().skip(1) {
+            if let Some((k, v)) = a.split_once('=') {
+                kv.insert(k.to_string(), v.to_string());
+            } else {
+                pos.push(a);
+            }
+        }
+        Args { cmd, pos, kv }
+    }
+
+    pub fn get(&self, k: &str) -> Option<&str> {
+        self.kv.get(k).map(|s| s.as_str())
+    }
+
+    pub fn get_f64(&self, k: &str, default: f64) -> Result<f64> {
+        match self.get(k) {
+            Some(v) => v.parse().with_context(|| format!("bad {k}={v}")),
+            None => Ok(default),
+        }
+    }
+
+    pub fn get_usize(&self, k: &str, default: usize) -> Result<usize> {
+        match self.get(k) {
+            Some(v) => v.parse().with_context(|| format!("bad {k}={v}")),
+            None => Ok(default),
+        }
+    }
+
+    pub fn get_u64(&self, k: &str, default: u64) -> Result<u64> {
+        match self.get(k) {
+            Some(v) => v.parse().with_context(|| format!("bad {k}={v}")),
+            None => Ok(default),
+        }
+    }
+
+    /// Parse a root policy: rand | norand | mix0 | mix12.5 | mix25 | mix50
+    pub fn root_policy(&self, default: RootPolicy) -> Result<RootPolicy> {
+        match self.get("roots") {
+            None => Ok(default),
+            Some("rand") => Ok(RootPolicy::Rand),
+            Some("norand") => Ok(RootPolicy::NoRand),
+            Some(s) if s.starts_with("mix") => {
+                let pct: f64 = s[3..].parse().with_context(|| format!("bad roots={s}"))?;
+                Ok(RootPolicy::CommRandMix { pct: pct / 100.0 })
+            }
+            Some(s) => bail!("unknown roots policy {s}"),
+        }
+    }
+}
+
+pub fn cli_main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1).collect());
+    match args.cmd.as_str() {
+        "gen-data" => cmd_gen_data(&args),
+        "smoke" => cmd_smoke(&args),
+        "train" => cmd_train(&args),
+        "inspect" => cmd_inspect(&args),
+        "exp" => crate::exp::run(&args),
+        "help" | _ => {
+            print_help();
+            Ok(())
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "comm-rand — community-structure-aware randomized GNN mini-batching
+
+USAGE: comm-rand <cmd> [pos...] [key=value...]
+
+COMMANDS:
+  gen-data [preset...]   materialize datasets (default: all presets)
+  smoke                  vertical-slice check on the tiny dataset
+  train <preset>         train one configuration
+                           roots=rand|norand|mix0|mix12.5|mix25|mix50
+                           p=0.5..1.0  epochs=N  batch=N  seed=N  lr=F
+  inspect <preset>       print dataset statistics
+  exp <id>               regenerate a paper artifact into results/
+                           ids: fig2 fig5 fig6 fig7 fig8 fig9 fig10
+                                tab3 tab4 tab5 fullbatch inference
+                                preproc ablation autotune all
+  help                   this message
+
+Presets: {}",
+        preset_names().join(", ")
+    );
+}
+
+fn cmd_gen_data(args: &Args) -> Result<()> {
+    let names: Vec<String> = if args.pos.is_empty() {
+        preset_names().iter().map(|s| s.to_string()).collect()
+    } else {
+        args.pos.clone()
+    };
+    for n in names {
+        let p = preset(&n).with_context(|| format!("unknown preset {n}"))?;
+        let ds = crate::train::dataset::load_or_build(&p, true)?;
+        println!(
+            "{}: |V|={} |E|={} comms={} train={} val={}",
+            n,
+            ds.n(),
+            ds.csr.num_directed_edges() / 2,
+            ds.num_comms,
+            ds.train_nodes().len(),
+            ds.val_nodes().len()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    let name = args.pos.first().context("inspect <preset>")?;
+    let p = preset(name).with_context(|| format!("unknown preset {name}"))?;
+    let ds = crate::train::dataset::load_or_build(&p, true)?;
+    let deg = crate::graph::stats::degree_stats(&ds.csr);
+    let q = crate::graph::stats::modularity(&ds.csr, &ds.community);
+    let intra = crate::graph::gen::intra_fraction(&ds.csr, &ds.community);
+    println!("dataset {name}");
+    println!("  |V| = {}", ds.n());
+    println!("  |E| = {} (undirected)", ds.csr.num_directed_edges() / 2);
+    println!(
+        "  degree: min {} / median {} / mean {:.1} / max {}",
+        deg.min, deg.median, deg.mean, deg.max
+    );
+    println!("  feat dim = {}, classes = {}", ds.feat_dim, ds.num_classes);
+    println!(
+        "  splits: train {} val {} test {}",
+        ds.train_nodes().len(),
+        ds.val_nodes().len(),
+        ds.test_nodes().len()
+    );
+    println!("  communities (louvain): {}  Q = {q:.3}  intra-edge {intra:.3}", ds.num_comms);
+    Ok(())
+}
+
+fn cmd_smoke(_args: &Args) -> Result<()> {
+    use crate::runtime::{artifact, Runtime};
+    let p = preset("tiny").unwrap();
+    let ds = crate::train::dataset::load_or_build(&p, true)?;
+    let manifest = artifact::Manifest::load(&artifact::default_dir())?;
+    let train_meta = manifest.get("tiny.train")?;
+    let infer_meta = manifest.get("tiny.infer")?;
+    let rt = Runtime::cpu()?;
+    println!(
+        "platform = {} ({} devices)",
+        rt.client.platform_name(),
+        rt.client.device_count()
+    );
+    let mut st = crate::runtime::TrainState::new(
+        &rt,
+        train_meta,
+        Some(infer_meta),
+        Some(&ds),
+        1e-3,
+        0,
+    )?;
+
+    let mut rng = crate::util::rng::Rng::new(7);
+    let train_nodes = ds.train_nodes();
+    let policy = BatchPolicy::baseline();
+    let spec = &train_meta.spec;
+    let mut first_loss = None;
+    let mut last_loss = 0.0;
+    for step in 0..20 {
+        let order = crate::sampler::roots::order_roots(
+            policy.roots,
+            &train_nodes,
+            &ds.community,
+            &mut rng,
+        );
+        let roots = &order[..spec.batch_size.min(order.len())];
+        let mfg = crate::sampler::build_mfg(
+            &ds.csr,
+            &ds.community,
+            roots,
+            &spec.fanouts,
+            crate::sampler::NeighborPolicy::Uniform,
+            &mut rng,
+        );
+        let batch = crate::batch::assemble(&mfg, &ds, train_meta, true)?;
+        let out = st.step(&batch)?;
+        if first_loss.is_none() {
+            first_loss = Some(out.loss);
+        }
+        last_loss = out.loss;
+        if step % 5 == 0 {
+            println!(
+                "step {step:>3}: loss {:.4}  acc {:.3}  (input nodes {})",
+                out.loss,
+                out.correct / batch.stats.num_labeled.max(1) as f32,
+                batch.stats.input_nodes
+            );
+        }
+    }
+    let f = first_loss.unwrap();
+    println!("loss {f:.4} -> {last_loss:.4}");
+    if !(last_loss.is_finite() && last_loss < f) {
+        bail!("smoke: loss did not decrease");
+    }
+    println!("smoke OK");
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let name = args.pos.first().context("train <preset>")?.clone();
+    let p = preset(&name).with_context(|| format!("unknown preset {name}"))?;
+    let policy = BatchPolicy {
+        roots: args.root_policy(RootPolicy::Rand)?,
+        p_intra: args.get_f64("p", 0.5)?,
+    };
+    let cfg = TrainConfig {
+        batch_size: args.get_usize("batch", 256)?,
+        lr: args.get_f64("lr", 1e-3)? as f32,
+        max_epochs: args.get_usize("epochs", 60)?,
+        seed: args.get_u64("seed", 0)?,
+        ..Default::default()
+    };
+    let ds = crate::train::dataset::load_or_build(&p, true)?;
+    let report = crate::train::run_training(&ds, p.artifact, &policy, &cfg, true)?;
+    println!("{}", report.summary());
+    Ok(())
+}

@@ -1,0 +1,16 @@
+//! Community detection and structure-aware node reordering.
+//!
+//! The paper uses RABBIT (hierarchical community detection by
+//! modularity maximization + just-in-time relabeling). RABBIT's source
+//! is not available here, so we implement the same recipe: Louvain
+//! modularity maximization ([`louvain`]) followed by community-sorted
+//! relabeling ([`reorder`]). COMM-RAND only needs the community id of
+//! each node (paper §6.5.3), which both produce.
+
+pub mod louvain;
+pub mod partition;
+pub mod reorder;
+
+pub use louvain::{louvain, LouvainResult};
+pub use partition::pack_partitions;
+pub use reorder::{community_order, degree_order, random_order};

@@ -1,0 +1,97 @@
+//! Balanced graph partitioning for the ClusterGCN baseline (§6.3).
+//!
+//! ClusterGCN partitions with METIS; METIS is unavailable offline, so
+//! we build balanced partitions by greedy bin-packing of Louvain
+//! communities (largest-first into the lightest bin), splitting
+//! communities larger than the target partition size. This preserves
+//! the property ClusterGCN relies on — partitions are internally dense
+//! — which is what its mini-batches are made of (DESIGN.md
+//! §Substitutions).
+
+use crate::util::rng::Rng;
+
+/// Pack nodes into `num_parts` balanced partitions respecting community
+/// boundaries where possible. Returns partition membership lists.
+pub fn pack_partitions(
+    community: &[u32],
+    num_comms: usize,
+    num_parts: usize,
+    rng: &mut Rng,
+) -> Vec<Vec<u32>> {
+    assert!(num_parts >= 1);
+    let n = community.len();
+    let target = n.div_ceil(num_parts);
+
+    // gather members per community
+    let mut members: Vec<Vec<u32>> = vec![Vec::new(); num_comms];
+    for v in 0..n as u32 {
+        members[community[v as usize] as usize].push(v);
+    }
+
+    // split oversized communities into target-sized chunks
+    let mut blocks: Vec<Vec<u32>> = Vec::new();
+    for mut m in members {
+        if m.is_empty() {
+            continue;
+        }
+        rng.shuffle(&mut m);
+        while m.len() > target {
+            let rest = m.split_off(target);
+            blocks.push(std::mem::replace(&mut m, rest));
+        }
+        blocks.push(m);
+    }
+
+    // largest-first into lightest bin
+    blocks.sort_by_key(|b| std::cmp::Reverse(b.len()));
+    let mut parts: Vec<Vec<u32>> = vec![Vec::new(); num_parts];
+    for b in blocks {
+        let lightest = (0..num_parts)
+            .min_by_key(|&i| parts[i].len())
+            .unwrap();
+        parts[lightest].extend_from_slice(&b);
+    }
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn covers_all_nodes_once() {
+        let mut rng = Rng::new(2);
+        let comm: Vec<u32> = (0..997u32).map(|v| v % 13).collect();
+        let parts = pack_partitions(&comm, 13, 8, &mut rng);
+        assert_eq!(parts.len(), 8);
+        let mut all: Vec<u32> = parts.iter().flatten().copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..997u32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn partitions_balanced() {
+        let mut rng = Rng::new(3);
+        // one giant community + several small ones
+        let mut comm = vec![0u32; 800];
+        comm.extend((0..200u32).map(|v| 1 + v % 7));
+        let parts = pack_partitions(&comm, 8, 4, &mut rng);
+        let sizes: Vec<usize> = parts.iter().map(|p| p.len()).collect();
+        let max = *sizes.iter().max().unwrap();
+        let min = *sizes.iter().min().unwrap();
+        assert!(max - min <= 260, "unbalanced: {sizes:?}");
+    }
+
+    #[test]
+    fn keeps_small_communities_together() {
+        let mut rng = Rng::new(4);
+        // 4 equal communities of 25, 4 partitions
+        let comm: Vec<u32> = (0..100u32).map(|v| v / 25).collect();
+        let parts = pack_partitions(&comm, 4, 4, &mut rng);
+        for p in &parts {
+            assert_eq!(p.len(), 25);
+            let c0 = comm[p[0] as usize];
+            assert!(p.iter().all(|&v| comm[v as usize] == c0));
+        }
+    }
+}

@@ -1,0 +1,90 @@
+//! Node reordering strategies (paper §3, Figure 1).
+//!
+//! `community_order` is the RABBIT-style relabeling: nodes of the same
+//! community receive consecutive ids (communities ordered by id, ties
+//! by old id). `random_order` and `degree_order` are the baselines used
+//! by the §3 inference study.
+//!
+//! All functions return a permutation `perm` with the convention
+//! `new_id = perm[old_id]` (apply with `Dataset::permute`).
+
+use crate::util::rng::Rng;
+
+/// Community-sorted relabeling: consecutive ids within each community.
+pub fn community_order(community: &[u32]) -> Vec<u32> {
+    let n = community.len();
+    let mut order: Vec<u32> = (0..n as u32).collect();
+    order.sort_by_key(|&v| (community[v as usize], v));
+    let mut perm = vec![0u32; n];
+    for (new_id, &old_id) in order.iter().enumerate() {
+        perm[old_id as usize] = new_id as u32;
+    }
+    perm
+}
+
+/// Uniform random relabeling (destroys locality; §3 baseline).
+pub fn random_order(n: usize, rng: &mut Rng) -> Vec<u32> {
+    let mut perm: Vec<u32> = (0..n as u32).collect();
+    rng.shuffle(&mut perm);
+    perm
+}
+
+/// Descending-degree relabeling (hub-sort; lightweight reordering
+/// baseline from the graph-analytics literature).
+pub fn degree_order(degrees: &[usize]) -> Vec<u32> {
+    let n = degrees.len();
+    let mut order: Vec<u32> = (0..n as u32).collect();
+    order.sort_by_key(|&v| (std::cmp::Reverse(degrees[v as usize]), v));
+    let mut perm = vec![0u32; n];
+    for (new_id, &old_id) in order.iter().enumerate() {
+        perm[old_id as usize] = new_id as u32;
+    }
+    perm
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn is_permutation(p: &[u32]) -> bool {
+        let mut seen = vec![false; p.len()];
+        for &x in p {
+            if x as usize >= p.len() || seen[x as usize] {
+                return false;
+            }
+            seen[x as usize] = true;
+        }
+        true
+    }
+
+    #[test]
+    fn community_order_groups() {
+        let comm = vec![2, 0, 1, 0, 2, 1];
+        let perm = community_order(&comm);
+        assert!(is_permutation(&perm));
+        // nodes 1,3 (comm 0) -> ids 0,1; nodes 2,5 (comm 1) -> 2,3; ...
+        assert_eq!(perm[1], 0);
+        assert_eq!(perm[3], 1);
+        assert_eq!(perm[2], 2);
+        assert_eq!(perm[5], 3);
+        assert_eq!(perm[0], 4);
+        assert_eq!(perm[4], 5);
+    }
+
+    #[test]
+    fn random_order_is_permutation() {
+        let mut rng = Rng::new(1);
+        assert!(is_permutation(&random_order(1000, &mut rng)));
+    }
+
+    #[test]
+    fn degree_order_descending() {
+        let degs = vec![1usize, 5, 3, 5];
+        let perm = degree_order(&degs);
+        assert!(is_permutation(&perm));
+        assert_eq!(perm[1], 0); // highest degree, lowest old id first
+        assert_eq!(perm[3], 1);
+        assert_eq!(perm[2], 2);
+        assert_eq!(perm[0], 3);
+    }
+}

@@ -1,0 +1,62 @@
+//! Configuration: dataset presets (matched 1:1 with
+//! `python/compile/specs.py`), mini-batching policy knobs, and training
+//! hyper-parameters.
+
+pub mod presets;
+
+pub use presets::{preset, preset_names, DatasetPreset};
+
+use crate::sampler::roots::RootPolicy;
+
+/// The two COMM-RAND knobs (paper §4) plus the baseline policies.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BatchPolicy {
+    /// Root-node partitioning scheme (Table 1).
+    pub roots: RootPolicy,
+    /// Intra-community sampling probability p ∈ [0.5, 1.0] (§4.2);
+    /// 0.5 = uniform, 1.0 = only same-community neighbors when present.
+    pub p_intra: f64,
+}
+
+impl BatchPolicy {
+    pub fn baseline() -> Self {
+        BatchPolicy { roots: RootPolicy::Rand, p_intra: 0.5 }
+    }
+
+    pub fn label(&self) -> String {
+        format!("{}+p{:.2}", self.roots.label(), self.p_intra)
+    }
+}
+
+/// Hyper-parameters of a training run (defaults mirror the paper's DGL
+/// reference configuration, scaled where noted in DESIGN.md).
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub batch_size: usize,
+    pub lr: f32,
+    pub max_epochs: usize,
+    /// Early stopping: stop when val loss hasn't improved for this many
+    /// epochs (paper: 6).
+    pub patience: usize,
+    /// ReduceLROnPlateau patience (paper: 3) and factor (torch default 0.1).
+    pub lr_patience: usize,
+    pub lr_factor: f32,
+    pub seed: u64,
+    /// Cap on batches per epoch (None = full epoch); used by quick tests.
+    pub max_batches: Option<usize>,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            batch_size: 256,
+            lr: 1e-3,
+            max_epochs: 60,
+            patience: 6,
+            lr_patience: 3,
+            lr_factor: 0.1,
+            seed: 0,
+            max_batches: None,
+        }
+    }
+}

@@ -1,0 +1,210 @@
+//! Dataset presets — the simulated stand-ins for the paper's four
+//! benchmarks. Dimensions (feature width, class count, split
+//! fractions) follow Table 2 of the paper; node/edge scale is reduced
+//! to fit a CPU-only testbed and the class/feature dims of the largest
+//! graphs are trimmed accordingly (documented in DESIGN.md
+//! §Substitutions). **These must stay in sync with
+//! `python/compile/specs.py`** — the artifact manifest is
+//! shape-checked at load time, so a drift fails fast.
+//!
+//! `l2_base` scales the modelled A100 L2 so that the ratio of the
+//! dataset's feature footprint to the cache matches the *real*
+//! dataset-vs-40MB pairing (e.g. reddit's 561MB/40MB ≈ 14x ⇒ the 8MB
+//! sim footprint gets a ~0.6MB modelled L2). Without this, the scaled
+//! datasets would fit entirely in the modelled cache and every policy
+//! would look identical — see DESIGN.md §Cache-Model.
+
+use crate::graph::features::FeatureParams;
+use crate::graph::gen::SbmParams;
+
+#[derive(Clone, Debug)]
+pub struct DatasetPreset {
+    pub name: &'static str,
+    /// Artifact base name for the GraphSAGE model on this dataset.
+    pub artifact: &'static str,
+    pub sbm: SbmParams,
+    pub feat: FeatureParams,
+    /// Seed used by `gen-data` (fixed so all experiments share graphs).
+    pub gen_seed: u64,
+    /// Features stay host-side and are staged per batch (UVA-style)?
+    pub staged: bool,
+    /// Modelled-L2 scale (fraction of 40MB) matching the real
+    /// footprint:cache ratio.
+    pub l2_base: f64,
+}
+
+pub fn preset_names() -> &'static [&'static str] {
+    &["reddit_sim", "igb_sim", "products_sim", "papers_sim", "tiny"]
+}
+
+pub fn preset(name: &str) -> Option<DatasetPreset> {
+    let p = match name {
+        // reddit: 233k nodes / 492 avg-deg / 41 cls / 602 feat / 66-10-24
+        // sim   : 16k nodes / 40 avg-deg / 41 cls / 128 feat / same split
+        // footprint 8.4MB, real ratio 561MB/40MB=14 -> L2 0.6MB = 0.015
+        "reddit_sim" => DatasetPreset {
+            name: "reddit_sim",
+            artifact: "reddit_sim",
+            sbm: SbmParams {
+                n: 16384,
+                num_comms: 96,
+                avg_deg: 40.0,
+                p_intra: 0.88,
+                deg_alpha: 2.1,
+                size_alpha: 1.3,
+            },
+            feat: FeatureParams {
+                feat_dim: 128,
+                num_classes: 41,
+                label_noise: 0.35,
+                class_signal: 0.6,
+                comm_signal: 0.4,
+                noise: 1.6,
+                train_frac: 0.66,
+                val_frac: 0.10,
+                labeled_frac: 1.0,
+            },
+            gen_seed: 0xEDD17,
+            staged: false,
+            // nominal cache ≈ the baseline's per-batch working set
+            // (~5MB): at full capacity the baseline still reuses its
+            // own batch (fwd+bwd passes), and shrinking the cache
+            // (Fig. 10) strips that reuse away first — the regime the
+            // paper's MIG study sweeps.
+            l2_base: 0.25,
+        },
+        // igb-small: 1M nodes / 13 deg / 19 cls / 1024 feat / 60-20-20
+        // sim      : 32k nodes / 13 deg / 19 cls / 128 feat / same split
+        // footprint 16.8MB, real ratio 4.1GB/40MB=102 -> L2 0.16MB
+        "igb_sim" => DatasetPreset {
+            name: "igb_sim",
+            artifact: "igb_sim",
+            sbm: SbmParams {
+                n: 32768,
+                num_comms: 160,
+                avg_deg: 13.0,
+                p_intra: 0.85,
+                deg_alpha: 2.2,
+                size_alpha: 1.3,
+            },
+            feat: FeatureParams {
+                feat_dim: 128,
+                num_classes: 19,
+                label_noise: 0.40,
+                class_signal: 0.6,
+                comm_signal: 0.4,
+                noise: 1.7,
+                train_frac: 0.60,
+                val_frac: 0.20,
+                labeled_frac: 1.0,
+            },
+            gen_seed: 0x16B,
+            staged: false,
+            l2_base: 0.004,
+        },
+        // ogbn-products: 2.4M nodes / 50 deg / 47 cls / 100 feat / 8-2-90
+        // sim          : 32k nodes / 32 deg / 47 cls / 100 feat / same
+        // footprint 13.1MB, real ratio 980MB/40MB=24.5 -> L2 0.53MB
+        "products_sim" => DatasetPreset {
+            name: "products_sim",
+            artifact: "products_sim",
+            sbm: SbmParams {
+                n: 32768,
+                num_comms: 160,
+                avg_deg: 32.0,
+                p_intra: 0.88,
+                deg_alpha: 2.1,
+                size_alpha: 1.3,
+            },
+            feat: FeatureParams {
+                feat_dim: 100,
+                num_classes: 47,
+                label_noise: 0.35,
+                class_signal: 0.6,
+                comm_signal: 0.4,
+                noise: 1.6,
+                train_frac: 0.08,
+                val_frac: 0.02,
+                labeled_frac: 1.0,
+            },
+            gen_seed: 0x9120D,
+            staged: false,
+            l2_base: 0.013,
+        },
+        // ogbn-papers100M: 111M nodes / 29 deg / 172 cls / 128 feat /
+        //                  1.1-0.1 split; features exceed GPU memory →
+        //                  UVA. sim: 64k nodes, staged features, 64 cls.
+        "papers_sim" => DatasetPreset {
+            name: "papers_sim",
+            artifact: "papers_sim",
+            sbm: SbmParams {
+                n: 65536,
+                num_comms: 256,
+                avg_deg: 15.0,
+                p_intra: 0.85,
+                deg_alpha: 2.2,
+                size_alpha: 1.3,
+            },
+            feat: FeatureParams {
+                feat_dim: 128,
+                num_classes: 64,
+                label_noise: 0.35,
+                class_signal: 0.6,
+                comm_signal: 0.4,
+                noise: 1.6,
+                train_frac: 0.011,
+                val_frac: 0.001,
+                labeled_frac: 0.014,
+            },
+            gen_seed: 0xBA9E5,
+            staged: true,
+            l2_base: 0.002,
+        },
+        // tiny: integration-test dataset for the `tiny*` artifacts.
+        // footprint 256KB -> L2 64KB = 0.0016 (keeps misses non-trivial)
+        "tiny" => DatasetPreset {
+            name: "tiny",
+            artifact: "tiny",
+            sbm: SbmParams {
+                n: 2048,
+                num_comms: 16,
+                avg_deg: 12.0,
+                p_intra: 0.85,
+                deg_alpha: 2.1,
+                size_alpha: 1.3,
+            },
+            feat: FeatureParams {
+                feat_dim: 32,
+                num_classes: 7,
+                label_noise: 0.30,
+                class_signal: 0.7,
+                comm_signal: 0.4,
+                noise: 1.2,
+                train_frac: 0.50,
+                val_frac: 0.15,
+                labeled_frac: 0.9,
+            },
+            gen_seed: 0x717,
+            staged: false,
+            l2_base: 0.0016,
+        },
+        _ => return None,
+    };
+    Some(p)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_presets_resolve() {
+        for name in preset_names() {
+            let p = preset(name).unwrap();
+            assert_eq!(p.name, *name);
+            assert!(p.feat.train_frac + p.feat.val_frac <= p.feat.labeled_frac + 1e-9);
+            assert!(p.l2_base > 0.0 && p.l2_base <= 1.0);
+        }
+        assert!(preset("nope").is_none());
+    }
+}

@@ -1,0 +1,155 @@
+//! Ablations for the design choices DESIGN.md calls out (not in the
+//! paper; justify this reproduction's substitutions):
+//!
+//! * **Community granularity** — RABBIT uses cache-scale hierarchy
+//!   leaves; we cap Louvain's level at a mean community size. Sweep
+//!   the cap and measure modularity, community count, and the
+//!   fig10-style per-epoch speedup of MIX-0%+p1.0 vs baseline.
+//! * **Cache replay passes** — the L2 model replays each batch's rows
+//!   twice (fwd gather + bwd d_w gather). Show 1-pass vs 2-pass miss
+//!   rates to document why intra-batch reuse matters for Fig. 10.
+
+use anyhow::Result;
+
+use crate::cachesim::lru::CacheConfig;
+use crate::cachesim::SetAssocCache;
+use crate::community::louvain::louvain_capped;
+use crate::community::community_order;
+use crate::config::{preset, BatchPolicy, TrainConfig};
+use crate::sampler::RootPolicy;
+use crate::train::{self, Method};
+use crate::util::json::{num, obj, s, Json};
+use crate::util::rng::Rng;
+
+use super::common::*;
+
+pub fn run(ctx: &mut Ctx) -> Result<()> {
+    let mut md = String::from("# Ablations (reproduction design choices)\n");
+    let mut jout = Vec::new();
+
+    // ---- 1. community granularity ----
+    md.push_str("\n## Louvain hierarchy cap (reddit_sim)\n\n");
+    let mut t = Table::new(&[
+        "mean-size cap", "communities", "modularity Q",
+        "MIX-0%+p1.0 epoch speedup",
+    ]);
+    let p = preset("reddit_sim").unwrap();
+    let cfg = TrainConfig { max_epochs: 2, ..Default::default() };
+    for cap in [128usize, 512, usize::MAX] {
+        // rebuild the dataset with this community granularity
+        let mut rng = Rng::new(p.gen_seed);
+        let g = crate::graph::gen::generate_sbm(&p.sbm, &mut rng);
+        let payload = crate::graph::features::synthesize(
+            &g.gt_community, p.sbm.num_comms, &p.feat, &mut rng);
+        let det = louvain_capped(&g.csr, p.gen_seed ^ 0x10f2, cap);
+        let mut ds = crate::graph::Dataset {
+            name: "reddit_sim".into(),
+            csr: g.csr,
+            features: payload.features,
+            feat_dim: p.feat.feat_dim,
+            labels: payload.labels,
+            num_classes: p.feat.num_classes,
+            split: payload.split,
+            community: det.community,
+            num_comms: det.num_comms,
+            gt_community: g.gt_community,
+        };
+        ds.permute(&community_order(&ds.community));
+
+        let base = ctx.run(&p, &ds,
+            &Method::CommRand(BatchPolicy::baseline()), &cfg, |_| {})?;
+        let biased = ctx.run(
+            &p,
+            &ds,
+            &Method::CommRand(BatchPolicy {
+                roots: RootPolicy::CommRandMix { pct: 0.0 },
+                p_intra: 1.0,
+            }),
+            &cfg,
+            |_| {},
+        )?;
+        let spd = base.mean_epoch_modeled_s() / biased.mean_epoch_modeled_s();
+        let cap_label = if cap == usize::MAX {
+            "none (top level)".to_string()
+        } else {
+            cap.to_string()
+        };
+        t.row(vec![
+            cap_label.clone(),
+            det.num_comms.to_string(),
+            format!("{:.3}", det.modularity),
+            format!("{spd:.2}x"),
+        ]);
+        jout.push(obj(vec![
+            ("ablation", s("louvain_cap")),
+            ("cap", num(if cap == usize::MAX { -1.0 } else { cap as f64 })),
+            ("num_comms", num(det.num_comms as f64)),
+            ("modularity", num(det.modularity)),
+            ("speedup", num(spd)),
+        ]));
+        println!("[ablation] louvain cap {cap_label}: {} comms, {spd:.2}x",
+                 det.num_comms);
+    }
+    md.push_str(&t.to_markdown());
+    md.push_str(
+        "\nCache-scale communities (the RABBIT-style cap) are what make \
+         community-pure batches cache-resident; the modularity-maximal \
+         top level merges into a handful of giant communities and the \
+         locality benefit shrinks.\n",
+    );
+
+    // ---- 2. replay passes ----
+    md.push_str("\n## L2 replay passes (intra-batch reuse)\n\n");
+    let (p, ds) = ctx.dataset("reddit_sim")?;
+    let train_nodes = ds.train_nodes();
+    let mut rng = Rng::new(5);
+    let mut t = Table::new(&["policy", "1-pass miss", "2-pass miss"]);
+    for (label, pol) in [
+        ("baseline", BatchPolicy::baseline()),
+        (
+            "MIX-0%+p1.0",
+            BatchPolicy { roots: RootPolicy::CommRandMix { pct: 0.0 }, p_intra: 1.0 },
+        ),
+    ] {
+        let order = crate::sampler::roots::order_roots(
+            pol.roots, &train_nodes, &ds.community, &mut rng);
+        let mut c1 = SetAssocCache::new(CacheConfig::a100_l2(p.l2_base));
+        let mut c2 = SetAssocCache::new(CacheConfig::a100_l2(p.l2_base));
+        for chunk in order.chunks(256).take(20) {
+            let policy = if pol.p_intra <= 0.5 {
+                crate::sampler::NeighborPolicy::Uniform
+            } else {
+                crate::sampler::NeighborPolicy::Biased { p: pol.p_intra }
+            };
+            let mfg = crate::sampler::build_mfg(
+                &ds.csr, &ds.community, chunk, &[5, 10, 10], policy, &mut rng);
+            for &v in mfg.input_nodes() {
+                c1.access_row(v, ds.feat_dim);
+            }
+            for _ in 0..2 {
+                for &v in mfg.input_nodes() {
+                    c2.access_row(v, ds.feat_dim);
+                }
+            }
+        }
+        t.row(vec![
+            label.into(),
+            f4(c1.miss_rate()),
+            f4(c2.miss_rate()),
+        ]);
+        jout.push(obj(vec![
+            ("ablation", s("replay_passes")),
+            ("policy", s(label)),
+            ("miss_1pass", num(c1.miss_rate())),
+            ("miss_2pass", num(c2.miss_rate())),
+        ]));
+    }
+    md.push_str(&t.to_markdown());
+    md.push_str(
+        "\nWith a single pass the model only sees cross-batch reuse; the \
+         second (backward) pass is what gives the baseline its \
+         at-capacity reuse that the Fig. 10 sweep strips away.\n",
+    );
+
+    write_results("ablation", &md, &Json::Arr(jout))
+}

@@ -1,0 +1,119 @@
+//! Knob auto-tuning (the paper's §6.1.3 future-work suggestion: "cast
+//! the problem of finding the right bias level as a learning problem").
+//!
+//! Successive halving over the (root policy x p) grid: every surviving
+//! configuration gets a doubling epoch budget; half are eliminated per
+//! rung by a cost-adjusted score
+//!
+//! ```text
+//! score = val_acc - lambda * ln(epoch_time / baseline_time)
+//! ```
+//!
+//! so the tuner trades accuracy against per-epoch cost exactly the way
+//! the paper's manual exploration does. Reports the chosen knobs and
+//! compares against the paper's recommended MIX-12.5% + p=1.0.
+
+use anyhow::Result;
+
+use crate::config::{BatchPolicy, TrainConfig};
+use crate::train::Method;
+use crate::util::json::{num, obj, s, Json};
+
+use super::common::*;
+
+pub fn run(ctx: &mut Ctx) -> Result<()> {
+    let ds_name = if quick() { "reddit_sim" } else { "reddit_sim" };
+    let (p, ds) = ctx.dataset(ds_name)?;
+    let lambda = 0.05;
+
+    // rung 0 candidates: the full fig5 grid
+    let mut survivors: Vec<BatchPolicy> = Vec::new();
+    for roots in root_grid() {
+        for p_intra in p_grid() {
+            survivors.push(BatchPolicy { roots, p_intra });
+        }
+    }
+
+    // baseline epoch time for the cost term
+    let probe_cfg = TrainConfig { max_epochs: 1, ..Default::default() };
+    let base = ctx.run(
+        &p, &ds, &Method::CommRand(BatchPolicy::baseline()), &probe_cfg, |_| {})?;
+    let base_epoch = base.mean_epoch_modeled_s();
+
+    let mut md = String::from(
+        "# Auto-tuning the COMM-RAND knobs (successive halving)\n\n",
+    );
+    let mut budget = 1usize;
+    let mut rung = 0;
+    let mut jrungs = Vec::new();
+    while survivors.len() > 1 {
+        let mut scored: Vec<(f64, BatchPolicy, f64, f64)> = Vec::new();
+        for pol in &survivors {
+            let cfg = TrainConfig {
+                max_epochs: budget,
+                patience: usize::MAX,
+                ..Default::default()
+            };
+            let r = ctx.run(&p, &ds, &Method::CommRand(pol.clone()), &cfg, |_| {})?;
+            let t_epoch = r.mean_epoch_modeled_s();
+            let score =
+                r.best_val_acc - lambda * (t_epoch / base_epoch).ln();
+            scored.push((score, pol.clone(), r.best_val_acc, t_epoch));
+        }
+        scored.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        let keep = (scored.len() + 1) / 2;
+        println!(
+            "[autotune] rung {rung} (budget {budget} ep): best {} \
+             (score {:.4}), keeping {keep}/{}",
+            scored[0].1.label(),
+            scored[0].0,
+            scored.len()
+        );
+        jrungs.push(obj(vec![
+            ("rung", num(rung as f64)),
+            ("budget_epochs", num(budget as f64)),
+            ("best", s(&scored[0].1.label())),
+            ("best_score", num(scored[0].0)),
+            ("candidates", num(scored.len() as f64)),
+        ]));
+        md.push_str(&format!(
+            "* rung {rung} (budget {budget} epochs): best `{}` \
+             score {:.4}, acc {:.4}, epoch {:.4}ms — kept {keep}/{}\n",
+            scored[0].1.label(),
+            scored[0].0,
+            scored[0].2,
+            scored[0].3 * 1e3,
+            scored.len()
+        ));
+        survivors = scored.into_iter().take(keep).map(|x| x.1).collect();
+        budget *= 2;
+        rung += 1;
+        if rung > 6 {
+            break;
+        }
+    }
+    let winner = survivors[0].clone();
+
+    // final comparison: winner vs paper-recommended knobs, full budget
+    let cfg = TrainConfig { max_epochs: max_epochs(), ..Default::default() };
+    let rw = ctx.run(&p, &ds, &Method::CommRand(winner.clone()), &cfg, |_| {})?;
+    let rp = ctx.run(&p, &ds, &Method::CommRand(best_policy()), &cfg, |_| {})?;
+    md.push_str(&format!(
+        "\nwinner: **{}** — acc {:.4}, total modeled {:.2}ms\n\
+         paper's pick (MIX-12.5%+p1.0): acc {:.4}, total modeled {:.2}ms\n",
+        winner.label(),
+        rw.best_val_acc,
+        rw.modeled_to_convergence() * 1e3,
+        rp.best_val_acc,
+        rp.modeled_to_convergence() * 1e3,
+    ));
+    let json = obj(vec![
+        ("rungs", Json::Arr(jrungs)),
+        ("winner", s(&winner.label())),
+        ("winner_acc", num(rw.best_val_acc)),
+        ("winner_total_modeled_s", num(rw.modeled_to_convergence())),
+        ("paper_pick_acc", num(rp.best_val_acc)),
+        ("paper_pick_total_modeled_s", num(rp.modeled_to_convergence())),
+    ]);
+    write_results("autotune", &md, &json)
+}

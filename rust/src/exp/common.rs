@@ -1,0 +1,212 @@
+//! Shared experiment plumbing: budgets (quick vs full), result file
+//! emission, the policy grids, and cached multi-config training runs.
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::config::{preset, BatchPolicy, DatasetPreset, TrainConfig};
+use crate::graph::Dataset;
+use crate::sampler::RootPolicy;
+use crate::train::{self, Method, RunOptions, Session, TrainReport};
+use crate::util::json::Json;
+
+/// Quick mode (env COMM_RAND_QUICK=1): fewer epochs / single seed so
+/// `cargo bench figures` finishes in minutes. Full budgets are used by
+/// `comm-rand exp <id>`.
+pub fn quick() -> bool {
+    fast() || std::env::var("COMM_RAND_QUICK").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Fastest tier (env COMM_RAND_FAST=1): smoke-level budgets used by the
+/// `figures` bench target so `cargo bench` stays minutes-scale.
+pub fn fast() -> bool {
+    std::env::var("COMM_RAND_FAST").map(|v| v == "1").unwrap_or(false)
+}
+
+pub fn seeds() -> Vec<u64> {
+    if quick() {
+        vec![0]
+    } else {
+        vec![0, 1]
+    }
+}
+
+pub fn max_epochs() -> usize {
+    if fast() {
+        3
+    } else if quick() {
+        8
+    } else {
+        24
+    }
+}
+
+pub fn results_dir() -> PathBuf {
+    let d = PathBuf::from("results");
+    std::fs::create_dir_all(&d).ok();
+    d
+}
+
+pub fn write_results(id: &str, markdown: &str, json: &Json) -> Result<()> {
+    let dir = results_dir();
+    std::fs::write(dir.join(format!("{id}.md")), markdown)?;
+    std::fs::write(dir.join(format!("{id}.json")), json.to_string_pretty())?;
+    println!("{markdown}");
+    println!("[exp] wrote results/{id}.md and results/{id}.json");
+    Ok(())
+}
+
+/// The Figure-5 policy grid: (label, root policy) x p values.
+pub fn root_grid() -> Vec<RootPolicy> {
+    RootPolicy::figure5_set()
+}
+
+pub fn p_grid() -> Vec<f64> {
+    vec![0.5, 0.9, 1.0]
+}
+
+/// The paper's best COMM-RAND knobs (§6.1.3).
+pub fn best_policy() -> BatchPolicy {
+    BatchPolicy { roots: RootPolicy::CommRandMix { pct: 0.125 }, p_intra: 1.0 }
+}
+
+pub struct Ctx {
+    pub session: Session,
+}
+
+impl Ctx {
+    pub fn new() -> Result<Ctx> {
+        Ok(Ctx { session: Session::new()? })
+    }
+
+    pub fn dataset(&self, name: &str) -> Result<(DatasetPreset, Dataset)> {
+        let p = preset(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown preset {name}"))?;
+        let ds = train::dataset::load_or_build(&p, true)?;
+        Ok((p, ds))
+    }
+
+    /// One training run with the dataset's nominal cache model.
+    pub fn run(
+        &mut self,
+        p: &DatasetPreset,
+        ds: &Dataset,
+        method: &Method,
+        cfg: &TrainConfig,
+        opts_mod: impl FnOnce(&mut RunOptions),
+    ) -> Result<TrainReport> {
+        let mut opts = RunOptions { l2_base: p.l2_base, ..Default::default() };
+        opts_mod(&mut opts);
+        train::train(&mut self.session, ds, p.artifact, method, cfg, &opts)
+    }
+
+    /// Mean over seeds of a metric extracted from per-seed reports.
+    pub fn run_seeds(
+        &mut self,
+        p: &DatasetPreset,
+        ds: &Dataset,
+        method: &Method,
+        base_cfg: &TrainConfig,
+    ) -> Result<Vec<TrainReport>> {
+        let mut out = Vec::new();
+        for s in seeds() {
+            let cfg = TrainConfig { seed: s, ..base_cfg.clone() };
+            out.push(self.run(p, ds, method, &cfg, |_| {})?);
+        }
+        Ok(out)
+    }
+}
+
+/// Aggregates over per-seed reports.
+pub struct Agg {
+    pub val_acc: f64,
+    pub epoch_modeled_s: f64,
+    pub epoch_wall_s: f64,
+    pub converged_epochs: f64,
+    pub total_modeled_s: f64,
+    pub total_wall_s: f64,
+    pub input_bytes: f64,
+    pub labels_per_batch: f64,
+    pub l2_miss: f64,
+}
+
+pub fn aggregate(reports: &[TrainReport]) -> Agg {
+    let n = reports.len().max(1) as f64;
+    let sum = |f: &dyn Fn(&TrainReport) -> f64| -> f64 {
+        reports.iter().map(|r| f(r)).sum::<f64>() / n
+    };
+    Agg {
+        val_acc: sum(&|r| r.best_val_acc),
+        epoch_modeled_s: sum(&|r| r.mean_epoch_modeled_s()),
+        epoch_wall_s: sum(&|r| r.mean_epoch_wall_s()),
+        converged_epochs: sum(&|r| r.converged_epoch as f64),
+        total_modeled_s: sum(&|r| r.modeled_to_convergence()),
+        total_wall_s: sum(&|r| r.wall_to_convergence()),
+        input_bytes: sum(&|r| r.mean_input_bytes()),
+        labels_per_batch: sum(&|r| r.mean_labels_per_batch()),
+        l2_miss: sum(&|r| {
+            let k = r.epochs.len().max(1) as f64;
+            r.epochs.iter().map(|e| e.l2_miss_rate).sum::<f64>() / k
+        }),
+    }
+}
+
+/// Markdown table builder.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(cols: &[&str]) -> Table {
+        Table {
+            header: cols.iter().map(|s| s.to_string()).collect(),
+            rows: vec![],
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len());
+        self.rows.push(cells);
+    }
+
+    pub fn to_markdown(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!("| {} |\n", self.header.join(" | ")));
+        s.push_str(&format!(
+            "|{}\n",
+            "---|".repeat(self.header.len())
+        ));
+        for r in &self.rows {
+            s.push_str(&format!("| {} |\n", r.join(" | ")));
+        }
+        s
+    }
+}
+
+pub fn f2(x: f64) -> String {
+    format!("{x:.2}")
+}
+
+pub fn f4(x: f64) -> String {
+    format!("{x:.4}")
+}
+
+pub fn pct(x: f64) -> String {
+    format!("{:.2}%", x * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_markdown() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        let md = t.to_markdown();
+        assert!(md.contains("| a | b |"));
+        assert!(md.contains("| 1 | 2 |"));
+    }
+}

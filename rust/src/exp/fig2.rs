@@ -1,0 +1,87 @@
+//! Figure 2 — the motivating extreme: entirely community-based
+//! mini-batching (NORAND-ROOTS & p=1.0) vs uniform random, on the
+//! reddit and papers100M stand-ins. Reports the validation-accuracy
+//! trajectory and the per-epoch / epochs / total-time trade-off that
+//! motivates COMM-RAND.
+
+use anyhow::Result;
+
+use crate::config::{BatchPolicy, TrainConfig};
+use crate::sampler::RootPolicy;
+use crate::train::Method;
+use crate::util::json::{arr_f64, num, obj, s, Json};
+
+use super::common::*;
+
+pub fn run(ctx: &mut Ctx) -> Result<()> {
+    let cfg = TrainConfig { max_epochs: max_epochs(), ..Default::default() };
+    let datasets = if quick() {
+        vec!["reddit_sim"]
+    } else {
+        vec!["papers_sim", "reddit_sim"]
+    };
+    let mut md = String::from(
+        "# Figure 2 — cost of eliminating randomization entirely\n\n",
+    );
+    let mut jout = Vec::new();
+    for name in datasets {
+        let (p, ds) = ctx.dataset(name)?;
+        let base = ctx.run_seeds(
+            &p, &ds, &Method::CommRand(BatchPolicy::baseline()), &cfg)?;
+        let pure = ctx.run_seeds(
+            &p,
+            &ds,
+            &Method::CommRand(BatchPolicy {
+                roots: RootPolicy::NoRand,
+                p_intra: 1.0,
+            }),
+            &cfg,
+        )?;
+        let (ab, ap) = (aggregate(&base), aggregate(&pure));
+        md.push_str(&format!("\n## {name}\n\n"));
+        let mut t = Table::new(&[
+            "scheme", "val acc", "per-epoch speedup", "epochs ratio",
+            "net training speedup",
+        ]);
+        t.row(vec![
+            "uniform random".into(),
+            f4(ab.val_acc),
+            "1.00x".into(),
+            "1.00".into(),
+            "1.00x".into(),
+        ]);
+        t.row(vec![
+            "entirely community-based".into(),
+            f4(ap.val_acc),
+            format!("{:.2}x", ab.epoch_modeled_s / ap.epoch_modeled_s),
+            f2(ap.converged_epochs / ab.converged_epochs),
+            format!("{:.2}x", ab.total_modeled_s / ap.total_modeled_s),
+        ]);
+        md.push_str(&t.to_markdown());
+        md.push_str(&format!(
+            "\naccuracy delta: {:.2} pts\n",
+            (ab.val_acc - ap.val_acc) * 100.0
+        ));
+        jout.push(obj(vec![
+            ("dataset", s(name)),
+            ("baseline_acc", num(ab.val_acc)),
+            ("pure_acc", num(ap.val_acc)),
+            (
+                "baseline_curve",
+                arr_f64(
+                    &base[0].epochs.iter().map(|e| e.val_acc).collect::<Vec<_>>(),
+                ),
+            ),
+            (
+                "pure_curve",
+                arr_f64(
+                    &pure[0].epochs.iter().map(|e| e.val_acc).collect::<Vec<_>>(),
+                ),
+            ),
+            ("epoch_speedup", num(ab.epoch_modeled_s / ap.epoch_modeled_s)),
+            ("epochs_ratio", num(ap.converged_epochs / ab.converged_epochs)),
+            ("net_speedup", num(ab.total_modeled_s / ap.total_modeled_s)),
+        ]));
+    }
+    write_results("fig2", &md, &Json::Arr(jout))
+}

@@ -1,0 +1,104 @@
+//! Figure 5 — the headline design-space sweep: every root partitioning
+//! policy (Table 1) x intra-community probability p x dataset, with
+//! four metrics per cell (final val accuracy, per-epoch speedup,
+//! epochs-to-converge ratio, total training speedup), normalized to
+//! the uniform-random baseline (RAND-ROOTS & p = 0.5).
+//!
+//! Writes results/fig5.{md,json}; fig6/fig7 re-read the JSON.
+
+use anyhow::Result;
+
+use crate::config::{BatchPolicy, TrainConfig};
+use crate::train::Method;
+use crate::util::json::{num, obj, s, Json};
+
+use super::common::*;
+
+pub fn datasets() -> Vec<&'static str> {
+    if fast() {
+        vec!["reddit_sim"]
+    } else if quick() {
+        vec!["reddit_sim", "products_sim"]
+    } else {
+        vec!["reddit_sim", "igb_sim", "products_sim", "papers_sim"]
+    }
+}
+
+pub fn run(ctx: &mut Ctx) -> Result<()> {
+    let cfg = TrainConfig { max_epochs: max_epochs(), ..Default::default() };
+    let mut md = String::from("# Figure 5 — COMM-RAND knob sweep\n\n");
+    let mut json_ds = Vec::new();
+
+    for ds_name in datasets() {
+        let (p, ds) = ctx.dataset(ds_name)?;
+        println!("[fig5] {ds_name}: sweeping {} policies x {} p-values",
+                 root_grid().len(), p_grid().len());
+        let mut cells: Vec<(String, f64, Agg)> = Vec::new();
+        for roots in root_grid() {
+            for p_intra in p_grid() {
+                let pol = BatchPolicy { roots, p_intra };
+                let reports = ctx.run_seeds(
+                    &p, &ds, &Method::CommRand(pol.clone()), &cfg)?;
+                let agg = aggregate(&reports);
+                println!(
+                    "[fig5]   {:<28} acc {:.4} ep-mod {:.5}s conv {:.1}",
+                    pol.label(), agg.val_acc, agg.epoch_modeled_s,
+                    agg.converged_epochs
+                );
+                cells.push((pol.label(), p_intra, agg));
+            }
+        }
+        let base = cells
+            .iter()
+            .find(|(l, _, _)| l.starts_with("RAND-ROOTS+p0.50"))
+            .map(|(_, _, a)| {
+                (a.epoch_modeled_s, a.converged_epochs, a.total_modeled_s,
+                 a.val_acc)
+            })
+            .unwrap();
+
+        md.push_str(&format!("\n## {ds_name}\n\n"));
+        let mut t = Table::new(&[
+            "policy", "p", "val acc", "Δacc (pts)", "per-epoch speedup",
+            "epochs ratio", "total speedup",
+        ]);
+        let mut jrows = Vec::new();
+        for (label, p_intra, a) in &cells {
+            t.row(vec![
+                label.clone(),
+                format!("{p_intra:.1}"),
+                f4(a.val_acc),
+                f2((a.val_acc - base.3) * 100.0),
+                format!("{:.2}x", base.0 / a.epoch_modeled_s),
+                f2(a.converged_epochs / base.1),
+                format!("{:.2}x", base.2 / a.total_modeled_s),
+            ]);
+            jrows.push(obj(vec![
+                ("policy", s(label)),
+                ("p", num(*p_intra)),
+                ("val_acc", num(a.val_acc)),
+                ("epoch_modeled_s", num(a.epoch_modeled_s)),
+                ("epoch_wall_s", num(a.epoch_wall_s)),
+                ("converged_epochs", num(a.converged_epochs)),
+                ("total_modeled_s", num(a.total_modeled_s)),
+                ("input_bytes", num(a.input_bytes)),
+                ("labels_per_batch", num(a.labels_per_batch)),
+                ("l2_miss", num(a.l2_miss)),
+            ]));
+        }
+        md.push_str(&t.to_markdown());
+        json_ds.push((ds_name.to_string(), Json::Arr(jrows)));
+    }
+
+    let json = Json::Obj(json_ds.into_iter().collect());
+    write_results("fig5", &md, &json)
+}
+
+/// Load fig5.json, running the sweep first if missing.
+pub fn load_or_run(ctx: &mut Ctx) -> Result<Json> {
+    let path = results_dir().join("fig5.json");
+    if !path.exists() {
+        run(ctx)?;
+    }
+    Json::parse_file(&path)
+}

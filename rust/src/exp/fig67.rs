@@ -1,0 +1,95 @@
+//! Figures 6 and 7 — the two correlation studies behind Figure 5's
+//! trends, recomputed from the fig5 sweep data:
+//!
+//! * Fig. 6 — per-epoch (modeled) time vs mean input-feature bytes per
+//!   batch, with the Pearson correlation per dataset. COMM-RAND's
+//!   speedups come from shrinking each batch's feature footprint.
+//! * Fig. 7 — epochs-until-convergence vs mean distinct labels per
+//!   batch. Lower label diversity (more community bias) delays
+//!   convergence.
+
+use anyhow::Result;
+
+use crate::util::json::{num, obj, s, Json};
+use crate::util::stats::pearson;
+
+use super::common::*;
+use super::fig5;
+
+pub fn run_fig6(ctx: &mut Ctx) -> Result<()> {
+    let data = fig5::load_or_run(ctx)?;
+    let mut md = String::from(
+        "# Figure 6 — per-epoch time vs input feature size\n\n",
+    );
+    let mut jout = Vec::new();
+    for (ds, rows) in data.as_obj()? {
+        let rows = rows.as_arr()?;
+        let xs: Vec<f64> = rows
+            .iter()
+            .map(|r| r.get("input_bytes").unwrap().as_f64().unwrap() / 1e6)
+            .collect();
+        let ys: Vec<f64> = rows
+            .iter()
+            .map(|r| r.get("epoch_modeled_s").unwrap().as_f64().unwrap() * 1e3)
+            .collect();
+        let r = pearson(&xs, &ys);
+        md.push_str(&format!("\n## {ds} (pearson r = {r:.3})\n\n"));
+        let mut t =
+            Table::new(&["policy", "p", "input MB/batch", "epoch time (ms)"]);
+        for (i, row) in rows.iter().enumerate() {
+            t.row(vec![
+                row.get("policy")?.as_str()?.to_string(),
+                format!("{:.1}", row.get("p")?.as_f64()?),
+                f2(xs[i]),
+                format!("{:.3}", ys[i]),
+            ]);
+        }
+        md.push_str(&t.to_markdown());
+        jout.push(obj(vec![
+            ("dataset", s(ds)),
+            ("pearson", num(r)),
+        ]));
+    }
+    write_results("fig6", &md, &Json::Arr(jout))
+}
+
+pub fn run_fig7(ctx: &mut Ctx) -> Result<()> {
+    let data = fig5::load_or_run(ctx)?;
+    let mut md = String::from(
+        "# Figure 7 — convergence vs label diversity per batch\n\n",
+    );
+    let mut jout = Vec::new();
+    for (ds, rows) in data.as_obj()? {
+        // labels/batch is a root-partitioning property; average over p
+        // (the paper notes p has no effect on label counts)
+        let rows = rows.as_arr()?;
+        let mut by_policy: std::collections::BTreeMap<String, (f64, f64, usize)> =
+            Default::default();
+        for r in rows {
+            let label = r.get("policy")?.as_str()?;
+            let root = label.split('+').next().unwrap_or(label).to_string();
+            let e = by_policy.entry(root).or_insert((0.0, 0.0, 0));
+            e.0 += r.get("labels_per_batch")?.as_f64()?;
+            e.1 += r.get("converged_epochs")?.as_f64()?;
+            e.2 += 1;
+        }
+        let xs: Vec<f64> =
+            by_policy.values().map(|(l, _, n)| l / *n as f64).collect();
+        let ys: Vec<f64> =
+            by_policy.values().map(|(_, c, n)| c / *n as f64).collect();
+        let r = pearson(&xs, &ys);
+        md.push_str(&format!("\n## {ds} (pearson r = {r:.3})\n\n"));
+        let mut t =
+            Table::new(&["root policy", "labels/batch", "epochs to converge"]);
+        for (k, (l, c, n)) in &by_policy {
+            t.row(vec![
+                k.clone(),
+                f2(l / *n as f64),
+                f2(c / *n as f64),
+            ]);
+        }
+        md.push_str(&t.to_markdown());
+        jout.push(obj(vec![("dataset", s(ds)), ("pearson", num(r))]));
+    }
+    write_results("fig7", &md, &Json::Arr(jout))
+}

@@ -1,0 +1,97 @@
+//! Figure 9 — software-managed feature cache for mixed CPU-GPU (UVA)
+//! training on the papers100M stand-in: per-epoch speedups with and
+//! without a GPU-resident feature cache, plus the per-policy cache
+//! miss rates the paper quotes (35.46% baseline -> 6.21% for
+//! COMM-RAND-MIX-0%).
+
+use anyhow::Result;
+
+use crate::config::{BatchPolicy, TrainConfig};
+use crate::sampler::RootPolicy;
+use crate::train::Method;
+use crate::util::json::{num, obj, s, Json};
+
+use super::common::*;
+
+pub fn run(ctx: &mut Ctx) -> Result<()> {
+    let (p, ds) = ctx.dataset("papers_sim")?;
+    // paper: a 4M-row cache on papers100M covers most of the training
+    // working set (1.2M train roots' sampled frontiers). The matching
+    // regime here is ~25% of nodes: big enough that community-biased
+    // epochs become cache-resident while the uniform baseline still
+    // thrashes.
+    let cache_rows = ds.n() / 4;
+    let cfg = TrainConfig { max_epochs: if quick() { 3 } else { 6 }, ..Default::default() };
+
+    let policies: Vec<(String, BatchPolicy)> = vec![
+        ("baseline".into(), BatchPolicy::baseline()),
+        (
+            "MIX-50%+p1.0".into(),
+            BatchPolicy { roots: RootPolicy::CommRandMix { pct: 0.50 }, p_intra: 1.0 },
+        ),
+        (
+            "MIX-25%+p1.0".into(),
+            BatchPolicy { roots: RootPolicy::CommRandMix { pct: 0.25 }, p_intra: 1.0 },
+        ),
+        (
+            "MIX-12.5%+p1.0".into(),
+            BatchPolicy { roots: RootPolicy::CommRandMix { pct: 0.125 }, p_intra: 1.0 },
+        ),
+        (
+            "MIX-0%+p1.0".into(),
+            BatchPolicy { roots: RootPolicy::CommRandMix { pct: 0.0 }, p_intra: 1.0 },
+        ),
+    ];
+
+    let mut md = String::from(
+        "# Figure 9 — per-epoch speedup with a software feature cache \
+         (papers_sim, UVA)\n\n",
+    );
+    let mut t = Table::new(&[
+        "policy", "speedup (no SW cache)", "speedup (SW cache)",
+        "SW miss rate",
+    ]);
+    let mut jrows = Vec::new();
+    let mut base_no = 0.0;
+    let mut base_sw = 0.0;
+    for (label, pol) in &policies {
+        let r_no = ctx.run(
+            &p, &ds, &Method::CommRand(pol.clone()), &cfg, |_| {})?;
+        let r_sw = ctx.run(&p, &ds, &Method::CommRand(pol.clone()), &cfg, |o| {
+            o.sw_cache_rows = Some(cache_rows);
+        })?;
+        let t_no = r_no.mean_epoch_modeled_s();
+        let t_sw = r_sw.mean_epoch_modeled_s();
+        let miss = r_sw
+            .epochs
+            .last()
+            .map(|e| e.sw_miss_rate)
+            .unwrap_or(f64::NAN);
+        if label == "baseline" {
+            base_no = t_no;
+            base_sw = t_sw;
+        }
+        t.row(vec![
+            label.clone(),
+            format!("{:.2}x", base_no / t_no),
+            format!("{:.2}x", base_sw / t_sw),
+            pct(miss),
+        ]);
+        jrows.push(obj(vec![
+            ("policy", s(label)),
+            ("epoch_s_nocache", num(t_no)),
+            ("epoch_s_swcache", num(t_sw)),
+            ("sw_miss_rate", num(miss)),
+        ]));
+        println!("[fig9] {label} done (miss {miss:.3})");
+    }
+    md.push_str(&t.to_markdown());
+    md.push_str(&format!(
+        "\nSW cache capacity: {cache_rows} feature rows \
+         ({:.1}% of nodes). Community-biased policies reuse the cache \
+         and cut UVA transfers, mirroring the paper's 35% -> 6% miss \
+         rate trend.\n",
+        100.0 * cache_rows as f64 / ds.n() as f64
+    ));
+    write_results("fig9", &md, &Json::Arr(jrows))
+}

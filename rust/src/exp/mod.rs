@@ -1,0 +1,81 @@
+//! Experiment harness — one module per paper table/figure. `run`
+//! dispatches `comm-rand exp <id>`; every experiment writes
+//! `results/<id>.md` + `results/<id>.json` and prints the table.
+//!
+//! Budget control: env `COMM_RAND_QUICK=1` (set by `cargo bench
+//! figures`) shrinks epochs/seeds/datasets; full budgets otherwise.
+
+pub mod ablation;
+pub mod autotune;
+pub mod common;
+pub mod fig10;
+pub mod fig2;
+pub mod fig5;
+pub mod fig67;
+pub mod fig8;
+pub mod fig9;
+pub mod fullbatch;
+pub mod inference;
+pub mod preproc;
+pub mod tab3;
+pub mod tab4;
+pub mod tab5;
+
+use anyhow::{bail, Result};
+
+use crate::cli::Args;
+use common::Ctx;
+
+pub fn run(args: &Args) -> Result<()> {
+    let id = args.pos.first().map(|s| s.as_str()).unwrap_or("");
+    let mut ctx = Ctx::new()?;
+    match id {
+        "fig2" => fig2::run(&mut ctx),
+        "ablation" => ablation::run(&mut ctx),
+        "autotune" => autotune::run(&mut ctx),
+        "fig5" => fig5::run(&mut ctx),
+        "fig6" => fig67::run_fig6(&mut ctx),
+        "fig7" => fig67::run_fig7(&mut ctx),
+        "fig8" => fig8::run(&mut ctx),
+        "fig9" => fig9::run(&mut ctx),
+        "fig10" => fig10::run(&mut ctx),
+        "tab3" => tab3::run(&mut ctx),
+        "tab4" => tab4::run(&mut ctx),
+        "tab5" => tab5::run(&mut ctx),
+        "fullbatch" => fullbatch::run(&mut ctx),
+        "inference" => inference::run(&mut ctx),
+        "preproc" => preproc::run(&mut ctx),
+        "all" => {
+            for id in [
+                "fig5", "fig2", "fig6", "fig7", "fig8", "fig9", "fig10",
+                "tab4", "tab5", "fullbatch", "inference", "preproc", "tab3",
+            ] {
+                println!("\n================ exp {id} ================");
+                let a = Args::parse(vec!["exp".into(), id.into()]);
+                run_one(&mut ctx, &a)?;
+            }
+            Ok(())
+        }
+        other => bail!("unknown experiment id {other:?} (try `comm-rand help`)"),
+    }
+}
+
+fn run_one(ctx: &mut Ctx, args: &Args) -> Result<()> {
+    let id = args.pos.first().map(|s| s.as_str()).unwrap_or("");
+    match id {
+        "fig2" => fig2::run(ctx),
+        "fig5" => fig5::run(ctx),
+        "fig6" => fig67::run_fig6(ctx),
+        "fig7" => fig67::run_fig7(ctx),
+        "fig8" => fig8::run(ctx),
+        "fig9" => fig9::run(ctx),
+        "fig10" => fig10::run(ctx),
+        "tab3" => tab3::run(ctx),
+        "tab4" => tab4::run(ctx),
+        "tab5" => tab5::run(ctx),
+        "fullbatch" => fullbatch::run(ctx),
+        "inference" => inference::run(ctx),
+        "preproc" => preproc::run(ctx),
+        _ => unreachable!(),
+    }
+}

@@ -1,0 +1,243 @@
+//! Table 3 — fixed-budget hyper-parameter tuning (§6.2): random-search
+//! both the baseline (lr, batch size) and COMM-RAND (lr, batch size,
+//! root policy, p) under the same wall-clock search budget, then train
+//! each winner under the same training budget. COMM-RAND's faster
+//! epochs buy more search trials *and* more training epochs.
+//!
+//! Budgets are scaled from the paper's 1h/30min to seconds (env
+//! COMM_RAND_TUNE_S / COMM_RAND_TRAIN_S override).
+
+use anyhow::Result;
+use std::time::Instant;
+
+use crate::config::{BatchPolicy, TrainConfig};
+use crate::sampler::RootPolicy;
+use crate::train::{self, Method};
+use crate::util::json::{num, obj, s, Json};
+use crate::util::rng::Rng;
+
+use super::common::*;
+
+fn env_s(key: &str, default: f64) -> f64 {
+    std::env::var(key)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn sample_common(rng: &mut Rng) -> (f32, usize) {
+    let lrs = [3e-4f32, 1e-3, 3e-3];
+    let batches = [128usize, 256];
+    (
+        lrs[rng.usize_below(lrs.len())],
+        batches[rng.usize_below(batches.len())],
+    )
+}
+
+fn sample_commrand_policy(rng: &mut Rng) -> BatchPolicy {
+    let roots = [
+        RootPolicy::CommRandMix { pct: 0.0 },
+        RootPolicy::CommRandMix { pct: 0.125 },
+        RootPolicy::CommRandMix { pct: 0.25 },
+        RootPolicy::CommRandMix { pct: 0.50 },
+    ];
+    let ps = [0.9, 1.0];
+    BatchPolicy {
+        roots: roots[rng.usize_below(roots.len())],
+        p_intra: ps[rng.usize_below(ps.len())],
+    }
+}
+
+/// Random search within `budget_s`; each trial trains a few epochs and
+/// is scored by val accuracy. Returns (best_cfg, best_policy, trials).
+fn search(
+    ctx: &mut Ctx,
+    p: &crate::config::DatasetPreset,
+    ds: &crate::graph::Dataset,
+    comm_rand: bool,
+    budget_s: f64,
+) -> Result<(TrainConfig, BatchPolicy, usize, f64)> {
+    let mut rng = Rng::new(0xB07);
+    let t0 = Instant::now();
+    let mut best_acc = -1.0;
+    let mut best: Option<(TrainConfig, BatchPolicy)> = None;
+    let mut trials = 0;
+    while t0.elapsed().as_secs_f64() < budget_s {
+        let (lr, batch) = sample_common(&mut rng);
+        let pol = if comm_rand {
+            sample_commrand_policy(&mut rng)
+        } else {
+            BatchPolicy::baseline()
+        };
+        let cfg = TrainConfig {
+            lr,
+            batch_size: batch,
+            max_epochs: 3,
+            seed: trials as u64,
+            ..Default::default()
+        };
+        let r = ctx.run(p, ds, &Method::CommRand(pol.clone()), &cfg, |_| {})?;
+        trials += 1;
+        if r.best_val_acc > best_acc {
+            best_acc = r.best_val_acc;
+            best = Some((cfg, pol));
+        }
+    }
+    let (cfg, pol) = best.unwrap();
+    Ok((cfg, pol, trials, best_acc))
+}
+
+/// Train under a fixed *device-time* budget (modeled A100 seconds —
+/// on this CPU testbed wall-clock does not express the GPU cache
+/// speedups, so the paper's "same 30min budget" is applied in modeled
+/// time; see EXPERIMENTS.md). Returns (epochs, val acc, test acc).
+fn budget_train(
+    ctx: &mut Ctx,
+    p: &crate::config::DatasetPreset,
+    ds: &crate::graph::Dataset,
+    cfg: &TrainConfig,
+    pol: &BatchPolicy,
+    baseline_epoch_units: f64,
+    base_modeled_epoch_s: f64,
+) -> Result<(f64, f64, f64)> {
+    // estimate modeled epoch cost from a 1-epoch run
+    let probe_cfg = TrainConfig { max_epochs: 1, ..cfg.clone() };
+    let probe = ctx.run(p, ds, &Method::CommRand(pol.clone()), &probe_cfg, |_| {})?;
+    let per_epoch = probe.mean_epoch_modeled_s().max(1e-9);
+    let budget = baseline_epoch_units * base_modeled_epoch_s;
+    let epochs = ((budget / per_epoch).floor() as usize).clamp(1, 60);
+    let full_cfg = TrainConfig {
+        max_epochs: epochs,
+        patience: usize::MAX, // fixed budget: no early stop
+        ..cfg.clone()
+    };
+    let r = ctx.run(p, ds, &Method::CommRand(pol.clone()), &full_cfg, |_| {})?;
+
+    // test accuracy with final params: retrain state is gone; reuse the
+    // report's best val accuracy and re-evaluate test via a fresh short
+    // run is wasteful — instead use train::run_training internals. For
+    // simplicity we re-run evaluation inside train() — report test as
+    // val-acc proxy plus a dedicated test pass:
+    let test_acc = {
+        let train_meta = ctx.session.meta(&format!("{}.train", p.artifact))?;
+        let infer_meta = ctx.session.meta(&format!("{}.infer", p.artifact))?;
+        // quick re-train to the same epoch count to regain params
+        let mut state = crate::runtime::TrainState::new(
+            &ctx.session.rt,
+            &train_meta,
+            Some(&infer_meta),
+            Some(ds),
+            full_cfg.lr,
+            full_cfg.seed,
+        )?;
+        // replay epochs without instrumentation
+        let train_nodes = ds.train_nodes();
+        let mut epoch_rng = Rng::new(full_cfg.seed ^ 0xE90C);
+        for epoch in 0..epochs.min(30) {
+            let order = crate::sampler::roots::order_roots(
+                pol.roots, &train_nodes, &ds.community, &mut epoch_rng,
+            );
+            let plan = train::loader::EpochPlan {
+                batch_roots: order
+                    .chunks(full_cfg.batch_size)
+                    .map(|c| c.to_vec())
+                    .collect(),
+                gen: train::loader::BatchGen::Sampled {
+                    policy: if pol.p_intra <= 0.5 {
+                        crate::sampler::NeighborPolicy::Uniform
+                    } else {
+                        crate::sampler::NeighborPolicy::Biased { p: pol.p_intra }
+                    },
+                },
+                seed: full_cfg.seed
+                    ^ (epoch as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+            };
+            train::loader::run_epoch(
+                ds, &train_meta, &plan, train::default_workers(), true,
+                |_i, b| state.step(&b).map(|_| ()),
+            )?;
+        }
+        train::test_accuracy(&state, ds, &infer_meta, full_cfg.seed)?
+    };
+    Ok((epochs as f64, r.best_val_acc, test_acc))
+}
+
+pub fn run(ctx: &mut Ctx) -> Result<()> {
+    let (p, ds) = ctx.dataset("reddit_sim")?;
+    let (tune_s, train_s) = if quick() {
+        (env_s("COMM_RAND_TUNE_S", 20.0), env_s("COMM_RAND_TRAIN_S", 15.0))
+    } else {
+        (env_s("COMM_RAND_TUNE_S", 90.0), env_s("COMM_RAND_TRAIN_S", 60.0))
+    };
+
+    println!("[tab3] searching baseline ({tune_s}s budget)...");
+    let (cfg_b, pol_b, trials_b, _) = search(ctx, &p, &ds, false, tune_s)?;
+    println!("[tab3] searching comm-rand ({tune_s}s budget)...");
+    let (cfg_c, pol_c, trials_c, _) = search(ctx, &p, &ds, true, tune_s)?;
+
+    // baseline modeled epoch time defines the shared device budget
+    let probe_cfg = TrainConfig { max_epochs: 1, ..cfg_b.clone() };
+    let base_probe = ctx.run(
+        &p, &ds, &Method::CommRand(pol_b.clone()), &probe_cfg, |_| {})?;
+    let base_modeled = base_probe.mean_epoch_modeled_s();
+    // scaled budget: the baseline gets `train_s`-worth of epochs at ~1
+    // epoch/s equivalent (quick: ~12, full: ~24 baseline epochs)
+    let units = (train_s / 4.0).clamp(4.0, 24.0);
+    println!("[tab3] budget-training baseline ({units:.0} baseline-epoch units)...");
+    let (ep_b, val_b, test_b) =
+        budget_train(ctx, &p, &ds, &cfg_b, &pol_b, units, base_modeled)?;
+    println!("[tab3] budget-training comm-rand (same device budget)...");
+    let (ep_c, val_c, test_c) =
+        budget_train(ctx, &p, &ds, &cfg_c, &pol_c, units, base_modeled)?;
+
+    let mut md = String::from(
+        "# Table 3 — fixed-budget hyper-parameter tuning (reddit_sim)\n\n",
+    );
+    md.push_str(&format!(
+        "search budget {tune_s}s wall; training budget = {:.0} \
+         baseline-epoch units of *modeled device time* shared by both \
+         schemes (paper: 1h / 30min on the A100; see EXPERIMENTS.md \
+         §Known-deviations)\n\n",
+        (train_s / 4.0).clamp(4.0, 24.0),
+    ));
+    let mut t = Table::new(&[
+        "", "search trials", "epochs trained", "final val acc", "test acc",
+    ]);
+    t.row(vec![
+        "Baseline".into(),
+        trials_b.to_string(),
+        format!("{ep_b:.0}"),
+        pct(val_b),
+        pct(test_b),
+    ]);
+    t.row(vec![
+        format!("COMM-RAND ({} p={})", pol_c.roots.label(), pol_c.p_intra),
+        trials_c.to_string(),
+        format!("{ep_c:.0}"),
+        pct(val_c),
+        pct(test_c),
+    ]);
+    md.push_str(&t.to_markdown());
+    let json = Json::Arr(vec![
+        obj(vec![
+            ("scheme", s("baseline")),
+            ("trials", num(trials_b as f64)),
+            ("epochs", num(ep_b)),
+            ("val_acc", num(val_b)),
+            ("test_acc", num(test_b)),
+            ("lr", num(cfg_b.lr as f64)),
+            ("batch", num(cfg_b.batch_size as f64)),
+        ]),
+        obj(vec![
+            ("scheme", s("comm-rand")),
+            ("trials", num(trials_c as f64)),
+            ("epochs", num(ep_c)),
+            ("val_acc", num(val_c)),
+            ("test_acc", num(test_c)),
+            ("lr", num(cfg_c.lr as f64)),
+            ("batch", num(cfg_c.batch_size as f64)),
+            ("policy", s(&pol_c.label())),
+        ]),
+    ]);
+    write_results("tab3", &md, &json)
+}

@@ -1,0 +1,55 @@
+//! Table 5 — COMM-RAND generalizes across GNN architectures (§6.4):
+//! GCN and GAT on the reddit stand-in, baseline vs the best COMM-RAND
+//! knobs; reports accuracy, per-epoch time, epochs, total time.
+
+use anyhow::Result;
+
+use crate::config::{BatchPolicy, TrainConfig};
+use crate::train::Method;
+use crate::util::json::{num, obj, s, Json};
+
+use super::common::*;
+
+pub fn run(ctx: &mut Ctx) -> Result<()> {
+    let cfg = TrainConfig { max_epochs: max_epochs(), ..Default::default() };
+    let (p, ds) = ctx.dataset("reddit_sim")?;
+
+    let mut md = String::from(
+        "# Table 5 — other GNN models (reddit_sim)\n\n",
+    );
+    let mut t = Table::new(&[
+        "model", "scheme", "val acc %", "per-epoch (ms, modeled)",
+        "epochs", "total (ms, modeled)",
+    ]);
+    let mut jrows = Vec::new();
+    for (model, artifact) in [("GCN", "reddit_sim_gcn"), ("GAT", "reddit_sim_gat")] {
+        for (mname, pol) in [
+            ("Baseline", BatchPolicy::baseline()),
+            ("COMM-RAND", best_policy()),
+        ] {
+            let mut opts_p = p.clone();
+            opts_p.artifact = artifact;
+            let r = ctx.run(
+                &opts_p, &ds, &Method::CommRand(pol.clone()), &cfg, |_| {})?;
+            t.row(vec![
+                model.into(),
+                mname.into(),
+                format!("{:.2}", r.best_val_acc * 100.0),
+                format!("{:.3}", r.mean_epoch_modeled_s() * 1e3),
+                r.converged_epoch.to_string(),
+                format!("{:.2}", r.modeled_to_convergence() * 1e3),
+            ]);
+            jrows.push(obj(vec![
+                ("model", s(model)),
+                ("scheme", s(mname)),
+                ("val_acc", num(r.best_val_acc)),
+                ("epoch_modeled_s", num(r.mean_epoch_modeled_s())),
+                ("epochs", num(r.converged_epoch as f64)),
+                ("total_modeled_s", num(r.modeled_to_convergence())),
+            ]));
+            println!("[tab5] {model}/{mname} done (acc {:.4})", r.best_val_acc);
+        }
+    }
+    md.push_str(&t.to_markdown());
+    write_results("tab5", &md, &Json::Arr(jrows))
+}

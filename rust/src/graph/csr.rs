@@ -1,0 +1,200 @@
+//! Compressed-sparse-row topology for undirected graphs (both edge
+//! directions stored). Node ids and offsets are u32 — the simulated
+//! datasets top out at ~131k nodes / ~4M directed edges.
+
+/// CSR adjacency. Invariants (checked by `validate`):
+/// * `offsets.len() == n + 1`, monotonically non-decreasing
+/// * `adj.len() == offsets[n]`
+/// * neighbor lists are sorted and deduplicated, no self loops
+/// * symmetric: `(u,v)` present iff `(v,u)` present
+#[derive(Clone, Debug)]
+pub struct Csr {
+    pub n: usize,
+    pub offsets: Vec<u32>,
+    pub adj: Vec<u32>,
+}
+
+impl Csr {
+    /// Build from an undirected edge list (u,v); self loops dropped,
+    /// duplicates merged, both directions stored.
+    pub fn from_edges(n: usize, edges: &[(u32, u32)]) -> Csr {
+        let mut deg = vec![0u32; n];
+        for &(u, v) in edges {
+            if u == v {
+                continue;
+            }
+            deg[u as usize] += 1;
+            deg[v as usize] += 1;
+        }
+        let mut offsets = vec![0u32; n + 1];
+        for i in 0..n {
+            offsets[i + 1] = offsets[i] + deg[i];
+        }
+        let mut adj = vec![0u32; offsets[n] as usize];
+        let mut cursor = offsets.clone();
+        for &(u, v) in edges {
+            if u == v {
+                continue;
+            }
+            adj[cursor[u as usize] as usize] = v;
+            cursor[u as usize] += 1;
+            adj[cursor[v as usize] as usize] = u;
+            cursor[v as usize] += 1;
+        }
+        // sort + dedup each list, then rebuild compactly
+        let mut out_adj = Vec::with_capacity(adj.len());
+        let mut out_off = vec![0u32; n + 1];
+        for v in 0..n {
+            let s = offsets[v] as usize;
+            let e = offsets[v + 1] as usize;
+            let list = &mut adj[s..e];
+            list.sort_unstable();
+            let mut prev = u32::MAX;
+            for &x in list.iter() {
+                if x != prev {
+                    out_adj.push(x);
+                    prev = x;
+                }
+            }
+            out_off[v + 1] = out_adj.len() as u32;
+        }
+        Csr { n, offsets: out_off, adj: out_adj }
+    }
+
+    #[inline]
+    pub fn neighbors(&self, v: u32) -> &[u32] {
+        let s = self.offsets[v as usize] as usize;
+        let e = self.offsets[v as usize + 1] as usize;
+        &self.adj[s..e]
+    }
+
+    #[inline]
+    pub fn degree(&self, v: u32) -> usize {
+        (self.offsets[v as usize + 1] - self.offsets[v as usize]) as usize
+    }
+
+    /// Directed edge slots (2x undirected edge count).
+    pub fn num_directed_edges(&self) -> usize {
+        self.adj.len()
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.offsets.len() != self.n + 1 {
+            return Err("offsets length".into());
+        }
+        if self.offsets[0] != 0 || *self.offsets.last().unwrap() as usize != self.adj.len() {
+            return Err("offset endpoints".into());
+        }
+        for v in 0..self.n {
+            if self.offsets[v] > self.offsets[v + 1] {
+                return Err(format!("non-monotone offsets at {v}"));
+            }
+            let list = self.neighbors(v as u32);
+            for w in list.windows(2) {
+                if w[0] >= w[1] {
+                    return Err(format!("unsorted/dup adj at {v}"));
+                }
+            }
+            for &u in list {
+                if u as usize >= self.n {
+                    return Err(format!("out-of-range neighbor {u}"));
+                }
+                if u as usize == v {
+                    return Err(format!("self loop at {v}"));
+                }
+                if self.neighbors(u).binary_search(&(v as u32)).is_err() {
+                    return Err(format!("asymmetric edge {v}->{u}"));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Relabel nodes: node `v` becomes `perm[v]`.
+    pub fn permute(&self, perm: &[u32]) -> Csr {
+        assert_eq!(perm.len(), self.n);
+        let mut edges = Vec::with_capacity(self.adj.len() / 2);
+        for v in 0..self.n as u32 {
+            for &u in self.neighbors(v) {
+                if v < u {
+                    edges.push((perm[v as usize], perm[u as usize]));
+                }
+            }
+        }
+        Csr::from_edges(self.n, &edges)
+    }
+
+    /// Undirected edge iterator (u < v).
+    pub fn edges(&self) -> impl Iterator<Item = (u32, u32)> + '_ {
+        (0..self.n as u32).flat_map(move |v| {
+            self.neighbors(v)
+                .iter()
+                .filter(move |&&u| v < u)
+                .map(move |&u| (v, u))
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn small_graph() {
+        let g = Csr::from_edges(4, &[(0, 1), (1, 2), (2, 3), (0, 1), (3, 3)]);
+        g.validate().unwrap();
+        assert_eq!(g.neighbors(1), &[0, 2]);
+        assert_eq!(g.degree(3), 1);
+        assert_eq!(g.num_directed_edges(), 6);
+    }
+
+    #[test]
+    fn permute_preserves_structure() {
+        let mut r = Rng::new(5);
+        let n = 64;
+        let mut edges = vec![];
+        for _ in 0..300 {
+            edges.push((r.below(n as u64) as u32, r.below(n as u64) as u32));
+        }
+        let g = Csr::from_edges(n, &edges);
+        g.validate().unwrap();
+        let mut perm: Vec<u32> = (0..n as u32).collect();
+        r.shuffle(&mut perm);
+        let p = g.permute(&perm);
+        p.validate().unwrap();
+        assert_eq!(p.num_directed_edges(), g.num_directed_edges());
+        // degree multiset preserved
+        let mut d1: Vec<usize> = (0..n as u32).map(|v| g.degree(v)).collect();
+        let mut d2: Vec<usize> = (0..n as u32).map(|v| p.degree(v)).collect();
+        d1.sort_unstable();
+        d2.sort_unstable();
+        assert_eq!(d1, d2);
+        // specific edge mapping
+        for (u, v) in g.edges() {
+            assert!(p
+                .neighbors(perm[u as usize])
+                .binary_search(&perm[v as usize])
+                .is_ok());
+        }
+    }
+
+    /// Property: from_edges is idempotent under edge-list round-trip.
+    #[test]
+    fn roundtrip_random_graphs() {
+        let mut r = Rng::new(77);
+        for trial in 0..20 {
+            let n = 8 + r.usize_below(64);
+            let m = r.usize_below(4 * n);
+            let edges: Vec<(u32, u32)> = (0..m)
+                .map(|_| (r.below(n as u64) as u32, r.below(n as u64) as u32))
+                .collect();
+            let g = Csr::from_edges(n, &edges);
+            g.validate().unwrap_or_else(|e| panic!("trial {trial}: {e}"));
+            let back: Vec<(u32, u32)> = g.edges().collect();
+            let g2 = Csr::from_edges(n, &back);
+            assert_eq!(g.offsets, g2.offsets);
+            assert_eq!(g.adj, g2.adj);
+        }
+    }
+}

@@ -1,0 +1,199 @@
+//! Node feature / label / split synthesis.
+//!
+//! Labels correlate with ground-truth communities (homophily): each
+//! community draws a dominant class and nodes flip away from it with
+//! `label_noise`. Features are class centroid + community centroid +
+//! gaussian noise. This reproduces the property COMM-RAND's evaluation
+//! hinges on: community-pure mini-batches have low label entropy
+//! (Fig. 7), which slows convergence, while the feature signal still
+//! lets all policies reach comparable final accuracy.
+
+use crate::util::rng::Rng;
+
+use super::{SPLIT_NONE, SPLIT_TEST, SPLIT_TRAIN, SPLIT_VAL};
+
+#[derive(Clone, Debug)]
+pub struct FeatureParams {
+    pub feat_dim: usize,
+    pub num_classes: usize,
+    /// Probability a node's label deviates from its community's class.
+    pub label_noise: f64,
+    /// Scale of the class-centroid signal in features.
+    pub class_signal: f32,
+    /// Scale of the community-centroid signal in features.
+    pub comm_signal: f32,
+    /// Gaussian feature noise sigma.
+    pub noise: f32,
+    /// Train/val fractions (test = rest, unlabeled beyond labeled_frac).
+    pub train_frac: f64,
+    pub val_frac: f64,
+    /// Fraction of nodes that carry labels at all.
+    pub labeled_frac: f64,
+}
+
+pub struct NodePayload {
+    pub features: Vec<f32>,
+    pub labels: Vec<u16>,
+    pub split: Vec<u8>,
+}
+
+pub fn synthesize(
+    gt_community: &[u32],
+    num_comms: usize,
+    p: &FeatureParams,
+    rng: &mut Rng,
+) -> NodePayload {
+    let n = gt_community.len();
+    let f = p.feat_dim;
+    let c = p.num_classes;
+
+    // community -> dominant class (roughly balanced across classes)
+    let mut comm_class = vec![0u16; num_comms];
+    for (i, cc) in comm_class.iter_mut().enumerate() {
+        *cc = ((i % c) as u16 + (rng.below(c as u64 / 2 + 1) as u16)) % c as u16;
+    }
+
+    // centroids
+    let mut class_centroid = vec![0f32; c * f];
+    for x in class_centroid.iter_mut() {
+        *x = rng.normal() as f32;
+    }
+    let mut comm_centroid = vec![0f32; num_comms * f];
+    for x in comm_centroid.iter_mut() {
+        *x = rng.normal() as f32;
+    }
+
+    let mut labels = vec![0u16; n];
+    let mut features = vec![0f32; n * f];
+    for v in 0..n {
+        let comm = gt_community[v] as usize;
+        let mut label = comm_class[comm];
+        if rng.f64() < p.label_noise {
+            label = rng.below(c as u64) as u16;
+        }
+        labels[v] = label;
+        let row = &mut features[v * f..(v + 1) * f];
+        let cc = &class_centroid[label as usize * f..(label as usize + 1) * f];
+        let mc = &comm_centroid[comm * f..(comm + 1) * f];
+        for j in 0..f {
+            row[j] = p.class_signal * cc[j]
+                + p.comm_signal * mc[j]
+                + p.noise * rng.normal() as f32;
+        }
+    }
+
+    // splits: shuffle nodes, take labeled_frac, then train/val/test
+    let mut order: Vec<u32> = (0..n as u32).collect();
+    rng.shuffle(&mut order);
+    let labeled = ((n as f64) * p.labeled_frac).round() as usize;
+    let ntrain = ((n as f64) * p.train_frac).round() as usize;
+    let nval = ((n as f64) * p.val_frac).round() as usize;
+    assert!(
+        ntrain + nval <= labeled,
+        "train+val exceed labeled fraction"
+    );
+    let mut split = vec![SPLIT_NONE; n];
+    for (i, &v) in order.iter().enumerate().take(labeled) {
+        split[v as usize] = if i < ntrain {
+            SPLIT_TRAIN
+        } else if i < ntrain + nval {
+            SPLIT_VAL
+        } else {
+            SPLIT_TEST
+        };
+    }
+
+    NodePayload { features, labels, split }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params() -> FeatureParams {
+        FeatureParams {
+            feat_dim: 16,
+            num_classes: 5,
+            label_noise: 0.1,
+            class_signal: 1.0,
+            comm_signal: 0.4,
+            noise: 0.5,
+            train_frac: 0.5,
+            val_frac: 0.1,
+            labeled_frac: 0.9,
+        }
+    }
+
+    #[test]
+    fn splits_sum() {
+        let gt: Vec<u32> = (0..1000u32).map(|v| v % 10).collect();
+        let mut rng = Rng::new(4);
+        let d = synthesize(&gt, 10, &params(), &mut rng);
+        let count = |s: u8| d.split.iter().filter(|&&x| x == s).count();
+        assert_eq!(count(SPLIT_TRAIN), 500);
+        assert_eq!(count(SPLIT_VAL), 100);
+        assert_eq!(count(SPLIT_TEST), 300);
+        assert_eq!(count(SPLIT_NONE), 100);
+    }
+
+    #[test]
+    fn labels_correlate_with_communities() {
+        let gt: Vec<u32> = (0..2000u32).map(|v| v % 8).collect();
+        let mut rng = Rng::new(5);
+        let d = synthesize(&gt, 8, &params(), &mut rng);
+        // majority label within a community should dominate
+        let mut hit = 0;
+        let mut tot = 0;
+        for comm in 0..8u32 {
+            let mut hist = [0usize; 5];
+            for v in 0..2000 {
+                if gt[v] == comm {
+                    hist[d.labels[v] as usize] += 1;
+                }
+            }
+            let maxc = *hist.iter().max().unwrap();
+            let sum: usize = hist.iter().sum();
+            hit += maxc;
+            tot += sum;
+        }
+        let frac = hit as f64 / tot as f64;
+        assert!(frac > 0.8, "community label purity {frac}");
+    }
+
+    #[test]
+    fn features_separate_classes() {
+        let gt: Vec<u32> = (0..500u32).map(|v| v % 5).collect();
+        let mut rng = Rng::new(6);
+        let d = synthesize(&gt, 5, &params(), &mut rng);
+        // mean intra-class feature distance < inter-class distance
+        let f = 16;
+        let dist = |a: usize, b: usize| -> f64 {
+            (0..f)
+                .map(|j| {
+                    (d.features[a * f + j] - d.features[b * f + j]) as f64
+                })
+                .map(|x| x * x)
+                .sum::<f64>()
+        };
+        let mut rng2 = Rng::new(7);
+        let mut intra = 0.0;
+        let mut inter = 0.0;
+        let mut ni = 0;
+        let mut nx = 0;
+        for _ in 0..2000 {
+            let a = rng2.usize_below(500);
+            let b = rng2.usize_below(500);
+            if a == b {
+                continue;
+            }
+            if d.labels[a] == d.labels[b] {
+                intra += dist(a, b);
+                ni += 1;
+            } else {
+                inter += dist(a, b);
+                nx += 1;
+            }
+        }
+        assert!(intra / ni as f64 + 0.5 < inter / nx as f64);
+    }
+}

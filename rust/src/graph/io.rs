@@ -1,0 +1,224 @@
+//! Binary dataset serialization (datasets are generated once by
+//! `comm-rand gen-data` and memory-loaded by every experiment).
+//!
+//! Format: magic, version, header dims, then raw little-endian arrays
+//! in a fixed order. No compression — load speed matters more than the
+//! ~100MB on disk.
+
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::{Csr, Dataset};
+
+const MAGIC: &[u8; 8] = b"COMMRND1";
+
+fn w_u64(w: &mut impl Write, x: u64) -> Result<()> {
+    w.write_all(&x.to_le_bytes())?;
+    Ok(())
+}
+
+fn r_u64(r: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn w_u32s(w: &mut impl Write, xs: &[u32]) -> Result<()> {
+    w_u64(w, xs.len() as u64)?;
+    // bulk-write via byte view
+    let bytes = unsafe {
+        std::slice::from_raw_parts(xs.as_ptr() as *const u8, xs.len() * 4)
+    };
+    w.write_all(bytes)?;
+    Ok(())
+}
+
+fn r_u32s(r: &mut impl Read) -> Result<Vec<u32>> {
+    let n = r_u64(r)? as usize;
+    let mut out = vec![0u32; n];
+    let bytes = unsafe {
+        std::slice::from_raw_parts_mut(out.as_mut_ptr() as *mut u8, n * 4)
+    };
+    r.read_exact(bytes)?;
+    Ok(out)
+}
+
+fn w_f32s(w: &mut impl Write, xs: &[f32]) -> Result<()> {
+    w_u64(w, xs.len() as u64)?;
+    let bytes = unsafe {
+        std::slice::from_raw_parts(xs.as_ptr() as *const u8, xs.len() * 4)
+    };
+    w.write_all(bytes)?;
+    Ok(())
+}
+
+fn r_f32s(r: &mut impl Read) -> Result<Vec<f32>> {
+    let n = r_u64(r)? as usize;
+    let mut out = vec![0f32; n];
+    let bytes = unsafe {
+        std::slice::from_raw_parts_mut(out.as_mut_ptr() as *mut u8, n * 4)
+    };
+    r.read_exact(bytes)?;
+    Ok(out)
+}
+
+fn w_u16s(w: &mut impl Write, xs: &[u16]) -> Result<()> {
+    w_u64(w, xs.len() as u64)?;
+    let bytes = unsafe {
+        std::slice::from_raw_parts(xs.as_ptr() as *const u8, xs.len() * 2)
+    };
+    w.write_all(bytes)?;
+    Ok(())
+}
+
+fn r_u16s(r: &mut impl Read) -> Result<Vec<u16>> {
+    let n = r_u64(r)? as usize;
+    let mut out = vec![0u16; n];
+    let bytes = unsafe {
+        std::slice::from_raw_parts_mut(out.as_mut_ptr() as *mut u8, n * 2)
+    };
+    r.read_exact(bytes)?;
+    Ok(out)
+}
+
+fn w_u8s(w: &mut impl Write, xs: &[u8]) -> Result<()> {
+    w_u64(w, xs.len() as u64)?;
+    w.write_all(xs)?;
+    Ok(())
+}
+
+fn r_u8s(r: &mut impl Read) -> Result<Vec<u8>> {
+    let n = r_u64(r)? as usize;
+    let mut out = vec![0u8; n];
+    r.read_exact(&mut out)?;
+    Ok(out)
+}
+
+pub fn save(ds: &Dataset, path: &Path) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let f = std::fs::File::create(path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    let mut w = BufWriter::new(f);
+    w.write_all(MAGIC)?;
+    let name = ds.name.as_bytes();
+    w_u64(&mut w, name.len() as u64)?;
+    w.write_all(name)?;
+    w_u64(&mut w, ds.csr.n as u64)?;
+    w_u64(&mut w, ds.feat_dim as u64)?;
+    w_u64(&mut w, ds.num_classes as u64)?;
+    w_u64(&mut w, ds.num_comms as u64)?;
+    w_u32s(&mut w, &ds.csr.offsets)?;
+    w_u32s(&mut w, &ds.csr.adj)?;
+    w_f32s(&mut w, &ds.features)?;
+    w_u16s(&mut w, &ds.labels)?;
+    w_u8s(&mut w, &ds.split)?;
+    w_u32s(&mut w, &ds.community)?;
+    w_u32s(&mut w, &ds.gt_community)?;
+    w.flush()?;
+    Ok(())
+}
+
+pub fn load(path: &Path) -> Result<Dataset> {
+    let f = std::fs::File::open(path)
+        .with_context(|| format!("opening {}", path.display()))?;
+    let mut r = BufReader::new(f);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{} is not a comm-rand dataset", path.display());
+    }
+    let name_len = r_u64(&mut r)? as usize;
+    let mut name = vec![0u8; name_len];
+    r.read_exact(&mut name)?;
+    let n = r_u64(&mut r)? as usize;
+    let feat_dim = r_u64(&mut r)? as usize;
+    let num_classes = r_u64(&mut r)? as usize;
+    let num_comms = r_u64(&mut r)? as usize;
+    let offsets = r_u32s(&mut r)?;
+    let adj = r_u32s(&mut r)?;
+    let features = r_f32s(&mut r)?;
+    let labels = r_u16s(&mut r)?;
+    let split = r_u8s(&mut r)?;
+    let community = r_u32s(&mut r)?;
+    let gt_community = r_u32s(&mut r)?;
+    let csr = Csr { n, offsets, adj };
+    Ok(Dataset {
+        name: String::from_utf8(name)?,
+        csr,
+        features,
+        feat_dim,
+        labels,
+        num_classes,
+        split,
+        community,
+        num_comms,
+        gt_community,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen::{generate_sbm, SbmParams};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn save_load_roundtrip() {
+        let mut rng = Rng::new(12);
+        let g = generate_sbm(
+            &SbmParams {
+                n: 500,
+                num_comms: 8,
+                avg_deg: 8.0,
+                p_intra: 0.8,
+                deg_alpha: 2.1,
+                size_alpha: 1.5,
+            },
+            &mut rng,
+        );
+        let payload = crate::graph::features::synthesize(
+            &g.gt_community,
+            8,
+            &crate::graph::features::FeatureParams {
+                feat_dim: 8,
+                num_classes: 4,
+                label_noise: 0.1,
+                class_signal: 1.0,
+                comm_signal: 0.3,
+                noise: 0.3,
+                train_frac: 0.5,
+                val_frac: 0.1,
+                labeled_frac: 0.8,
+            },
+            &mut rng,
+        );
+        let ds = Dataset {
+            name: "unit".into(),
+            csr: g.csr,
+            features: payload.features,
+            feat_dim: 8,
+            labels: payload.labels,
+            num_classes: 4,
+            split: payload.split,
+            community: g.gt_community.clone(),
+            num_comms: 8,
+            gt_community: g.gt_community,
+        };
+        let dir = std::env::temp_dir().join("comm_rand_io_test");
+        let path = dir.join("unit.bin");
+        save(&ds, &path).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(back.name, ds.name);
+        assert_eq!(back.csr.offsets, ds.csr.offsets);
+        assert_eq!(back.csr.adj, ds.csr.adj);
+        assert_eq!(back.features, ds.features);
+        assert_eq!(back.labels, ds.labels);
+        assert_eq!(back.split, ds.split);
+        assert_eq!(back.community, ds.community);
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,97 @@
+//! Graph substrate: CSR topology, synthetic community-structured graph
+//! generation (stand-ins for reddit / ogbn-products / igb-small /
+//! ogbn-papers100M — see DESIGN.md §Datasets), node features/labels,
+//! binary dataset IO and structural statistics.
+
+pub mod csr;
+pub mod features;
+pub mod gen;
+pub mod io;
+pub mod stats;
+
+pub use csr::Csr;
+
+/// Train/val/test membership of a node.
+pub const SPLIT_TRAIN: u8 = 0;
+pub const SPLIT_VAL: u8 = 1;
+pub const SPLIT_TEST: u8 = 2;
+pub const SPLIT_NONE: u8 = 3;
+
+/// A fully materialized dataset: topology + node payload + the
+/// community structure used by COMM-RAND.
+///
+/// `community` is whatever the detection pass (community::louvain)
+/// produced — the pipeline never reads the generator's ground truth.
+pub struct Dataset {
+    pub name: String,
+    pub csr: Csr,
+    /// Row-major `[n, feat_dim]`.
+    pub features: Vec<f32>,
+    pub feat_dim: usize,
+    pub labels: Vec<u16>,
+    pub num_classes: usize,
+    pub split: Vec<u8>,
+    /// Community id per node (from detection, contiguous 0..num_comms).
+    pub community: Vec<u32>,
+    pub num_comms: usize,
+    /// Ground-truth block of the generator (kept for tests only).
+    pub gt_community: Vec<u32>,
+}
+
+impl Dataset {
+    pub fn n(&self) -> usize {
+        self.csr.n
+    }
+
+    pub fn train_nodes(&self) -> Vec<u32> {
+        self.nodes_in_split(SPLIT_TRAIN)
+    }
+
+    pub fn val_nodes(&self) -> Vec<u32> {
+        self.nodes_in_split(SPLIT_VAL)
+    }
+
+    pub fn test_nodes(&self) -> Vec<u32> {
+        self.nodes_in_split(SPLIT_TEST)
+    }
+
+    pub fn nodes_in_split(&self, s: u8) -> Vec<u32> {
+        (0..self.n() as u32)
+            .filter(|&v| self.split[v as usize] == s)
+            .collect()
+    }
+
+    pub fn feature_row(&self, v: u32) -> &[f32] {
+        let f = self.feat_dim;
+        &self.features[v as usize * f..(v as usize + 1) * f]
+    }
+
+    /// Apply a node permutation `perm` (new-id -> old-id is
+    /// `perm_inv`): node `v` becomes `perm[v]`.
+    pub fn permute(&mut self, perm: &[u32]) {
+        let n = self.n();
+        assert_eq!(perm.len(), n);
+        self.csr = self.csr.permute(perm);
+        let old = std::mem::take(&mut self.features);
+        let f = self.feat_dim;
+        let mut feats = vec![0f32; old.len()];
+        let mut labels = vec![0u16; n];
+        let mut split = vec![0u8; n];
+        let mut comm = vec![0u32; n];
+        let mut gt = vec![0u32; n];
+        for old_v in 0..n {
+            let new_v = perm[old_v] as usize;
+            feats[new_v * f..(new_v + 1) * f]
+                .copy_from_slice(&old[old_v * f..(old_v + 1) * f]);
+            labels[new_v] = self.labels[old_v];
+            split[new_v] = self.split[old_v];
+            comm[new_v] = self.community[old_v];
+            gt[new_v] = self.gt_community[old_v];
+        }
+        self.features = feats;
+        self.labels = labels;
+        self.split = split;
+        self.community = comm;
+        self.gt_community = gt;
+    }
+}

@@ -1,0 +1,79 @@
+//! Structural statistics: degree distribution summary, modularity and
+//! intra-community edge fraction (used to sanity-check generation and
+//! community detection, and reported by `comm-rand inspect`).
+
+use super::Csr;
+
+pub struct DegreeStats {
+    pub min: usize,
+    pub max: usize,
+    pub mean: f64,
+    pub median: usize,
+}
+
+pub fn degree_stats(csr: &Csr) -> DegreeStats {
+    let mut degs: Vec<usize> = (0..csr.n as u32).map(|v| csr.degree(v)).collect();
+    degs.sort_unstable();
+    DegreeStats {
+        min: *degs.first().unwrap_or(&0),
+        max: *degs.last().unwrap_or(&0),
+        mean: csr.num_directed_edges() as f64 / csr.n.max(1) as f64,
+        median: degs.get(csr.n / 2).copied().unwrap_or(0),
+    }
+}
+
+/// Newman modularity Q of a node->community assignment.
+/// Q = (1/2m) Σ_ij [A_ij - k_i k_j / 2m] δ(c_i, c_j)
+pub fn modularity(csr: &Csr, comm: &[u32]) -> f64 {
+    assert_eq!(comm.len(), csr.n);
+    let two_m = csr.num_directed_edges() as f64;
+    if two_m == 0.0 {
+        return 0.0;
+    }
+    let num_comms = comm.iter().map(|&c| c as usize + 1).max().unwrap_or(0);
+    let mut intra = vec![0f64; num_comms]; // directed intra-edge count
+    let mut deg_sum = vec![0f64; num_comms];
+    for v in 0..csr.n as u32 {
+        let cv = comm[v as usize] as usize;
+        deg_sum[cv] += csr.degree(v) as f64;
+        for &u in csr.neighbors(v) {
+            if comm[u as usize] as usize == cv {
+                intra[cv] += 1.0;
+            }
+        }
+    }
+    let mut q = 0.0;
+    for c in 0..num_comms {
+        q += intra[c] / two_m - (deg_sum[c] / two_m).powi(2);
+    }
+    q
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn modularity_two_cliques() {
+        // two triangles joined by one edge: clear 2-community structure
+        let g = Csr::from_edges(
+            6,
+            &[(0, 1), (1, 2), (0, 2), (3, 4), (4, 5), (3, 5), (2, 3)],
+        );
+        let good = modularity(&g, &[0, 0, 0, 1, 1, 1]);
+        let bad = modularity(&g, &[0, 1, 0, 1, 0, 1]);
+        let trivial = modularity(&g, &[0, 0, 0, 0, 0, 0]);
+        assert!(good > 0.3, "good={good}");
+        assert!(good > bad);
+        assert!(trivial.abs() < 1e-9);
+    }
+
+    #[test]
+    fn degree_stats_basic() {
+        let g = Csr::from_edges(4, &[(0, 1), (0, 2), (0, 3)]);
+        let s = degree_stats(&g);
+        assert_eq!(s.max, 3);
+        assert_eq!(s.min, 1);
+        assert!((s.mean - 1.5).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,42 @@
+//! COMM-RAND: Community-structure-aware randomized mini-batching for
+//! efficient GNN training.
+//!
+//! Reproduction of Balaji et al., "Efficient GNN Training Through
+//! Structure-Aware Randomized Mini-batching" (2025), as a three-layer
+//! rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the data-pipeline coordinator: graph
+//!   substrate, community detection + reordering, the paper's mini-batch
+//!   construction policies (root partitioning + biased neighborhood
+//!   sampling), a pipelined dataloader with backpressure, the trainer,
+//!   and the cache-model instrumentation used by the evaluation.
+//! * **Layer 2 (python/compile/model.py)** — GraphSAGE / GCN / GAT
+//!   forward+backward+Adam as a jitted JAX function, AOT-lowered to HLO
+//!   text at build time (`make artifacts`).
+//! * **Layer 1 (python/compile/kernels/)** — the gather/aggregate compute
+//!   hot-spot as Pallas kernels (interpret=True), called from Layer 2 so
+//!   they lower into the same HLO module.
+//!
+//! Python never runs on the training path: the rust binary loads
+//! `artifacts/*.hlo.txt` through the PJRT C API (`xla` crate) and drives
+//! every epoch itself.
+
+pub mod batch;
+pub mod cachesim;
+pub mod community;
+pub mod config;
+pub mod exp;
+pub mod graph;
+pub mod runtime;
+pub mod sampler;
+pub mod train;
+pub mod util;
+
+pub mod cli;
+
+pub use cli::cli_main;
+
+/// Build an [`cli::Args`] from raw strings (used by bench targets).
+pub fn cli_args(argv: Vec<String>) -> cli::Args {
+    cli::Args::parse(argv)
+}

@@ -1,0 +1,3 @@
+fn main() -> anyhow::Result<()> {
+    comm_rand::cli_main()
+}

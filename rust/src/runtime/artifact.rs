@@ -1,0 +1,238 @@
+//! Artifact manifest: the ABI contract between `python/compile/aot.py`
+//! and the rust runtime. The manifest records, for every artifact, the
+//! exact flattened input/output signature (names, shapes, dtypes) plus
+//! the model spec it was lowered from; the runtime wires buffers by
+//! this record and validates shapes before every compile.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+#[derive(Clone, Debug)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl IoSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Model-spec fields the sampler/trainer need (subset of the python
+/// `ModelSpec`/`FullBatchSpec`).
+#[derive(Clone, Debug)]
+pub struct SpecMeta {
+    pub model: String,
+    pub layers: usize,
+    /// Per-layer fanouts, input-most first.
+    pub fanouts: Vec<usize>,
+    /// Per-layer neighbor-slot widths (fanout, +1 for GCN/GAT self).
+    pub idx_widths: Vec<usize>,
+    pub batch_size: usize,
+    pub num_nodes: usize,
+    pub feat_dim: usize,
+    pub num_classes: usize,
+    pub heads: usize,
+    pub feat_mode: String,
+    /// Padded per-layer dst capacities, input-most first (len layers+1).
+    pub node_caps: Vec<usize>,
+    /// Full-batch artifacts only:
+    pub padded_edges: usize,
+    pub edge_chunk: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: PathBuf,
+    pub kind: String,
+    pub spec: SpecMeta,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+impl ArtifactMeta {
+    pub fn num_params(&self) -> usize {
+        self.inputs
+            .iter()
+            .filter(|i| i.name.starts_with("p."))
+            .count()
+    }
+
+    pub fn param_specs(&self) -> Vec<&IoSpec> {
+        self.inputs
+            .iter()
+            .filter(|i| i.name.starts_with("p."))
+            .collect()
+    }
+
+    pub fn input_index(&self, name: &str) -> Result<usize> {
+        self.inputs
+            .iter()
+            .position(|i| i.name == name)
+            .with_context(|| format!("artifact {} has no input {name}", self.name))
+    }
+}
+
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+fn parse_io(v: &Json) -> Result<IoSpec> {
+    let dtype = match v.get("dtype")?.as_str()? {
+        "f32" => DType::F32,
+        "i32" => DType::I32,
+        d => bail!("unsupported dtype {d}"),
+    };
+    Ok(IoSpec {
+        name: v.get("name")?.as_str()?.to_string(),
+        shape: v
+            .get("shape")?
+            .as_arr()?
+            .iter()
+            .map(|x| x.as_usize())
+            .collect::<Result<_>>()?,
+        dtype,
+    })
+}
+
+fn parse_spec(v: &Json) -> Result<SpecMeta> {
+    let get_usize = |k: &str| -> usize {
+        v.opt(k).and_then(|x| x.as_usize().ok()).unwrap_or(0)
+    };
+    let get_str = |k: &str| -> String {
+        v.opt(k)
+            .and_then(|x| x.as_str().ok())
+            .unwrap_or("")
+            .to_string()
+    };
+    let usize_arr = |k: &str| -> Result<Vec<usize>> {
+        match v.opt(k) {
+            Some(a) => a.as_arr()?.iter().map(|x| x.as_usize()).collect(),
+            None => Ok(Vec::new()),
+        }
+    };
+    let node_caps = usize_arr("node_caps")?;
+    Ok(SpecMeta {
+        model: get_str("model"),
+        layers: get_usize("layers"),
+        fanouts: usize_arr("fanouts")?,
+        idx_widths: usize_arr("idx_widths")?,
+        batch_size: get_usize("batch_size"),
+        num_nodes: get_usize("num_nodes"),
+        feat_dim: get_usize("feat_dim"),
+        num_classes: get_usize("num_classes"),
+        heads: get_usize("heads"),
+        feat_mode: get_str("feat_mode"),
+        node_caps,
+        padded_edges: get_usize("padded_edges"),
+        edge_chunk: get_usize("edge_chunk"),
+    })
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let root = Json::parse_file(&path)?;
+        let mut artifacts = Vec::new();
+        for (name, entry) in root.get("artifacts")?.as_obj()? {
+            let inputs = entry
+                .get("inputs")?
+                .as_arr()?
+                .iter()
+                .map(parse_io)
+                .collect::<Result<Vec<_>>>()
+                .with_context(|| format!("inputs of {name}"))?;
+            let outputs = entry
+                .get("outputs")?
+                .as_arr()?
+                .iter()
+                .map(parse_io)
+                .collect::<Result<Vec<_>>>()?;
+            artifacts.push(ArtifactMeta {
+                name: name.clone(),
+                file: dir.join(entry.get("file")?.as_str()?),
+                kind: entry.get("kind")?.as_str()?.to_string(),
+                spec: parse_spec(entry.get("spec")?)?,
+                inputs,
+                outputs,
+            });
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), artifacts })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .with_context(|| {
+                format!(
+                    "artifact {name} not in manifest (have: {})",
+                    self.artifacts
+                        .iter()
+                        .map(|a| a.name.as_str())
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                )
+            })
+    }
+}
+
+/// Default artifacts directory: `$COMM_RAND_ARTIFACTS` or `./artifacts`.
+pub fn default_dir() -> PathBuf {
+    std::env::var("COMM_RAND_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_manifest_shape() {
+        let j = r#"{
+          "artifacts": {
+            "x.train": {
+              "file": "x.train.hlo.txt",
+              "kind": "train",
+              "spec": {"model": "sage", "layers": 2, "fanouts": [5, 5],
+                       "idx_widths": [5, 5], "batch_size": 128,
+                       "num_nodes": 2048, "feat_dim": 32,
+                       "num_classes": 7, "heads": 1,
+                       "feat_mode": "resident",
+                       "node_caps": [2048, 768, 128]},
+              "inputs": [
+                {"name": "p.w0", "shape": [32, 32], "dtype": "f32"},
+                {"name": "idx_1", "shape": [768, 5], "dtype": "i32"}
+              ],
+              "outputs": [{"name": "loss", "shape": [], "dtype": "f32"}]
+            }
+          }
+        }"#;
+        let tmp = std::env::temp_dir().join("comm_rand_manifest_test");
+        std::fs::create_dir_all(&tmp).unwrap();
+        std::fs::write(tmp.join("manifest.json"), j).unwrap();
+        let m = Manifest::load(&tmp).unwrap();
+        let a = m.get("x.train").unwrap();
+        assert_eq!(a.spec.layers, 2);
+        assert_eq!(a.spec.fanouts, vec![5, 5]);
+        assert_eq!(a.spec.node_caps, vec![2048, 768, 128]);
+        assert_eq!(a.inputs[1].shape, vec![768, 5]);
+        assert_eq!(a.inputs[1].dtype, super::DType::I32);
+        assert_eq!(a.num_params(), 1);
+        assert!(m.get("missing").is_err());
+    }
+}

@@ -1,0 +1,12 @@
+//! PJRT runtime: loads the AOT artifacts emitted by `make artifacts`
+//! (HLO text + manifest.json) and executes them on the CPU PJRT client.
+//! This is the only place the `xla` crate is touched; python never runs
+//! on the training path.
+
+pub mod artifact;
+pub mod pjrt;
+pub mod step;
+
+pub use artifact::{ArtifactMeta, IoSpec, Manifest};
+pub use pjrt::{Executable, Runtime};
+pub use step::{FullBatchState, TrainState};

@@ -1,0 +1,143 @@
+//! PJRT client wrapper: compile HLO-text artifacts once, execute many
+//! times with mixed host/device-resident arguments.
+//!
+//! Execution model: the lowered entry computation returns a single
+//! tuple (jax lowered with `return_tuple=True`); the wrapper
+//! decomposes the result literal into per-output host vectors. Inputs
+//! are device buffers; long-lived ones (the resident feature table)
+//! are uploaded once and reused across steps.
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::artifact::{ArtifactMeta, DType};
+
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Runtime { client })
+    }
+
+    /// Load + compile an artifact. Compilation is the expensive step
+    /// (~seconds); executables are cached by callers and reused.
+    pub fn load(&self, meta: &ArtifactMeta) -> Result<Executable> {
+        let exe = self.compile_file(&meta.file)?;
+        Ok(Executable { exe, meta: meta.clone(), client: self.client.clone() })
+    }
+
+    pub fn compile_file(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e:?}", path.display()))
+    }
+
+    pub fn buf_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow!("upload f32 {dims:?}: {e:?}"))
+    }
+
+    pub fn buf_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow!("upload i32 {dims:?}: {e:?}"))
+    }
+}
+
+/// One output of an execution, copied back to the host.
+#[derive(Clone, Debug)]
+pub enum HostValue {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl HostValue {
+    pub fn f32(&self) -> Result<&[f32]> {
+        match self {
+            HostValue::F32(v) => Ok(v),
+            _ => bail!("output is not f32"),
+        }
+    }
+
+    pub fn scalar_f32(&self) -> Result<f32> {
+        let v = self.f32()?;
+        if v.len() != 1 {
+            bail!("not a scalar: {} elements", v.len());
+        }
+        Ok(v[0])
+    }
+}
+
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub meta: ArtifactMeta,
+    client: xla::PjRtClient,
+}
+
+impl Executable {
+    /// Execute with device buffers; decompose the tuple result into
+    /// host vectors ordered like `meta.outputs`.
+    pub fn run<L: std::borrow::Borrow<xla::PjRtBuffer>>(
+        &self,
+        args: &[L],
+    ) -> Result<Vec<HostValue>> {
+        if args.len() != self.meta.inputs.len() {
+            bail!(
+                "artifact {} expects {} inputs, got {}",
+                self.meta.name,
+                self.meta.inputs.len(),
+                args.len()
+            );
+        }
+        let outs = self
+            .exe
+            .execute_b(args)
+            .map_err(|e| anyhow!("execute {}: {e:?}", self.meta.name))?;
+        let first = outs
+            .first()
+            .and_then(|d| d.first())
+            .context("no output buffer")?;
+        let lit = first
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        let parts = lit
+            .to_tuple()
+            .map_err(|e| anyhow!("tuple decompose: {e:?}"))?;
+        if parts.len() != self.meta.outputs.len() {
+            bail!(
+                "artifact {}: manifest says {} outputs, runtime returned {}",
+                self.meta.name,
+                self.meta.outputs.len(),
+                parts.len()
+            );
+        }
+        let mut host = Vec::with_capacity(parts.len());
+        for (lit, spec) in parts.into_iter().zip(&self.meta.outputs) {
+            let v = match spec.dtype {
+                DType::F32 => HostValue::F32(
+                    lit.to_vec::<f32>()
+                        .map_err(|e| anyhow!("output {}: {e:?}", spec.name))?,
+                ),
+                DType::I32 => HostValue::I32(
+                    lit.to_vec::<i32>()
+                        .map_err(|e| anyhow!("output {}: {e:?}", spec.name))?,
+                ),
+            };
+            host.push(v);
+        }
+        Ok(host)
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+}

@@ -1,0 +1,463 @@
+//! Training/inference state wrappers around compiled artifacts.
+//!
+//! Parameters and Adam moments live in host vectors (copied in/out each
+//! step — sub-millisecond at our model sizes); the resident feature
+//! table is uploaded to the device once and its buffer reused across
+//! every step of a run.
+
+use anyhow::{bail, Context, Result};
+
+use super::artifact::ArtifactMeta;
+use super::pjrt::{Executable, Runtime};
+use crate::batch::PaddedBatch;
+use crate::graph::Dataset;
+use crate::util::rng::Rng;
+
+/// Glorot-uniform for matrices, zeros for vectors/scalars.
+pub fn init_param(shape: &[usize], rng: &mut Rng) -> Vec<f32> {
+    let n: usize = shape.iter().product();
+    if shape.len() >= 2 {
+        let fin = shape[0] as f64;
+        let fout = shape[1..].iter().product::<usize>() as f64;
+        let s = (6.0 / (fin + fout)).sqrt() as f32;
+        (0..n).map(|_| (rng.f32() * 2.0 - 1.0) * s).collect()
+    } else {
+        vec![0.0; n]
+    }
+}
+
+/// Mini-batch training state over a `<name>.train` artifact.
+pub struct TrainState {
+    pub exe: Executable,
+    pub infer: Option<Executable>,
+    pub params: Vec<Vec<f32>>,
+    pub m: Vec<Vec<f32>>,
+    pub v: Vec<Vec<f32>>,
+    pub t: u64,
+    pub lr: f32,
+    /// Device-resident full feature table (resident mode).
+    x_full: Option<xla::PjRtBuffer>,
+    rt_client: xla::PjRtClient,
+}
+
+pub struct StepOut {
+    pub loss: f32,
+    pub correct: f32,
+}
+
+impl TrainState {
+    /// Create a state: compile the train (and optionally infer)
+    /// artifacts, initialize parameters from `seed`, and upload the
+    /// resident feature table if the artifact wants one.
+    pub fn new(
+        rt: &Runtime,
+        train_meta: &ArtifactMeta,
+        infer_meta: Option<&ArtifactMeta>,
+        ds: Option<&Dataset>,
+        lr: f32,
+        seed: u64,
+    ) -> Result<TrainState> {
+        let exe = rt.load(train_meta)?;
+        let infer = infer_meta.map(|m| rt.load(m)).transpose()?;
+        let mut rng = Rng::new(seed ^ 0x9a27_11f3);
+        let pspecs = train_meta.param_specs();
+        let params: Vec<Vec<f32>> = pspecs
+            .iter()
+            .map(|s| init_param(&s.shape, &mut rng))
+            .collect();
+        let m = pspecs.iter().map(|s| vec![0f32; s.elements()]).collect();
+        let v = pspecs.iter().map(|s| vec![0f32; s.elements()]).collect();
+
+        let x_full = if train_meta.spec.feat_mode == "resident" {
+            let ds = ds.context("resident artifact needs a dataset")?;
+            let nv = train_meta.spec.num_nodes;
+            let f = train_meta.spec.feat_dim;
+            if ds.n() != nv || ds.feat_dim != f {
+                bail!(
+                    "dataset {}x{} does not match artifact {}x{}",
+                    ds.n(),
+                    ds.feat_dim,
+                    nv,
+                    f
+                );
+            }
+            Some(rt.buf_f32(&ds.features, &[nv, f])?)
+        } else {
+            None
+        };
+        Ok(TrainState {
+            exe,
+            infer,
+            params,
+            m,
+            v,
+            t: 0,
+            lr,
+            x_full,
+            rt_client: rt.client.clone(),
+        })
+    }
+
+    fn push_batch_inputs(
+        &self,
+        meta: &ArtifactMeta,
+        batch: &PaddedBatch,
+        args: &mut Vec<xla::PjRtBuffer>,
+        start: usize,
+    ) -> Result<()> {
+        let client = &self.rt_client;
+        for spec in &meta.inputs[start..] {
+            let name = spec.name.as_str();
+            let buf = if name == "x0" {
+                let x0 = batch.x0.as_ref().context("batch lacks x0")?;
+                client
+                    .buffer_from_host_buffer(x0, &spec.shape, None)
+                    .map_err(|e| anyhow::anyhow!("{name}: {e:?}"))?
+            } else if let Some(rest) = name.strip_prefix("idx_") {
+                let l: usize = rest.parse()?;
+                client
+                    .buffer_from_host_buffer(
+                        &batch.layers[l - 1].idx,
+                        &spec.shape,
+                        None,
+                    )
+                    .map_err(|e| anyhow::anyhow!("{name}: {e:?}"))?
+            } else if let Some(rest) = name.strip_prefix("w_") {
+                let l: usize = rest.parse()?;
+                client
+                    .buffer_from_host_buffer(
+                        &batch.layers[l - 1].w,
+                        &spec.shape,
+                        None,
+                    )
+                    .map_err(|e| anyhow::anyhow!("{name}: {e:?}"))?
+            } else if let Some(rest) = name.strip_prefix("self_") {
+                let l: usize = rest.parse()?;
+                client
+                    .buffer_from_host_buffer(
+                        &batch.layers[l - 1].self_idx,
+                        &spec.shape,
+                        None,
+                    )
+                    .map_err(|e| anyhow::anyhow!("{name}: {e:?}"))?
+            } else if name == "labels" {
+                client
+                    .buffer_from_host_buffer(&batch.labels, &spec.shape, None)
+                    .map_err(|e| anyhow::anyhow!("{name}: {e:?}"))?
+            } else if name == "lmask" {
+                client
+                    .buffer_from_host_buffer(&batch.lmask, &spec.shape, None)
+                    .map_err(|e| anyhow::anyhow!("{name}: {e:?}"))?
+            } else {
+                bail!("unhandled input {name} in {}", meta.name);
+            };
+            args.push(buf);
+        }
+        Ok(())
+    }
+
+    /// Execute one training step on a padded batch.
+    pub fn step(&mut self, batch: &PaddedBatch) -> Result<StepOut> {
+        self.t += 1;
+        let meta = self.exe.meta.clone();
+        let np = self.params.len();
+        let client = self.rt_client.clone();
+
+        // owned per-step buffers in input order, with x_full skipped
+        let mut args: Vec<xla::PjRtBuffer> = Vec::with_capacity(meta.inputs.len());
+        let up = |data: &[f32], shape: &[usize]| -> Result<xla::PjRtBuffer> {
+            client
+                .buffer_from_host_buffer(data, shape, None)
+                .map_err(|e| anyhow::anyhow!("param upload: {e:?}"))
+        };
+        for (i, spec) in meta.inputs.iter().take(3 * np).enumerate() {
+            let host = if i < np {
+                &self.params[i]
+            } else if i < 2 * np {
+                &self.m[i - np]
+            } else {
+                &self.v[i - 2 * np]
+            };
+            args.push(up(host, &spec.shape)?);
+        }
+        args.push(up(&[self.t as f32], &[])?);
+        args.push(up(&[self.lr], &[])?);
+
+        // feature table (resident) comes right after t, lr; it is
+        // referenced, not copied — PJRT CPU does not donate inputs
+        // unless aliasing is declared, and we declare none.
+        let mut start = 3 * np + 2;
+        if self.x_full.is_some() {
+            start += 1;
+        }
+        self.push_batch_inputs(&meta, batch, &mut args, start)?;
+
+        // interleave: args[..3np+2], x_full?, args[3np+2..]
+        let refs = self.arg_refs(&args, 3 * np + 2);
+        let outs = self.exe.run(&refs)?;
+        // outputs: params', m', v', loss, correct
+        for i in 0..np {
+            self.params[i] = outs[i].f32()?.to_vec();
+            self.m[i] = outs[np + i].f32()?.to_vec();
+            self.v[i] = outs[2 * np + i].f32()?.to_vec();
+        }
+        Ok(StepOut {
+            loss: outs[3 * np].scalar_f32()?,
+            correct: outs[3 * np + 1].scalar_f32()?,
+        })
+    }
+
+    /// Interleave owned per-step buffers with the resident feature
+    /// table at position `split`.
+    fn arg_refs<'a>(
+        &'a self,
+        own: &'a [xla::PjRtBuffer],
+        split: usize,
+    ) -> Vec<&'a xla::PjRtBuffer> {
+        let mut refs: Vec<&xla::PjRtBuffer> = Vec::with_capacity(own.len() + 1);
+        let split = split.min(own.len());
+        refs.extend(own[..split].iter());
+        if let Some(xf) = &self.x_full {
+            refs.push(xf);
+        }
+        refs.extend(own[split..].iter());
+        refs
+    }
+
+    /// Run the inference artifact on a batch; returns logits
+    /// `[batch_cap * num_classes]`.
+    pub fn infer(&self, batch: &PaddedBatch) -> Result<Vec<f32>> {
+        let infer = self.infer.as_ref().context("no infer artifact loaded")?;
+        let meta = infer.meta.clone();
+        let np = self.params.len();
+        let client = self.rt_client.clone();
+        let mut args: Vec<xla::PjRtBuffer> = Vec::with_capacity(meta.inputs.len());
+        for (i, spec) in meta.inputs.iter().take(np).enumerate() {
+            args.push(
+                client
+                    .buffer_from_host_buffer(&self.params[i], &spec.shape, None)
+                    .map_err(|e| anyhow::anyhow!("param upload: {e:?}"))?,
+            );
+        }
+        let mut start = np;
+        if self.x_full.is_some() {
+            start += 1;
+        }
+        self.push_batch_inputs(&meta, batch, &mut args, start)?;
+        let refs = self.arg_refs(&args, np);
+        let outs = infer.run(&refs)?;
+        Ok(outs[0].f32()?.to_vec())
+    }
+}
+
+/// Full-batch GCN training state (`<name>_fb.train` artifacts).
+pub struct FullBatchState {
+    pub exe: Executable,
+    pub params: Vec<Vec<f32>>,
+    pub m: Vec<Vec<f32>>,
+    pub v: Vec<Vec<f32>>,
+    pub t: u64,
+    pub lr: f32,
+    // resident graph inputs
+    x: xla::PjRtBuffer,
+    e_src: xla::PjRtBuffer,
+    e_dst: xla::PjRtBuffer,
+    e_w: xla::PjRtBuffer,
+    labels: xla::PjRtBuffer,
+    train_mask: xla::PjRtBuffer,
+    val_mask: xla::PjRtBuffer,
+    client: xla::PjRtClient,
+}
+
+pub struct FullBatchOut {
+    pub loss: f32,
+    pub acc_train: f32,
+    pub acc_val: f32,
+}
+
+impl FullBatchState {
+    pub fn new(
+        rt: &Runtime,
+        meta: &ArtifactMeta,
+        ds: &Dataset,
+        lr: f32,
+        seed: u64,
+    ) -> Result<FullBatchState> {
+        let exe = rt.load(meta)?;
+        let mut rng = Rng::new(seed ^ 0x51ef_22aa);
+        let pspecs = meta.param_specs();
+        let params: Vec<Vec<f32>> = pspecs
+            .iter()
+            .map(|s| init_param(&s.shape, &mut rng))
+            .collect();
+        let m = pspecs.iter().map(|s| vec![0f32; s.elements()]).collect();
+        let v = pspecs.iter().map(|s| vec![0f32; s.elements()]).collect();
+
+        let n = meta.spec.num_nodes;
+        let e_cap = meta.spec.padded_edges;
+        if ds.n() != n {
+            bail!("dataset has {} nodes, artifact {}", ds.n(), n);
+        }
+        // symmetric-normalized edge list incl. self loops, padded with
+        // zero-weight edges
+        let mut src = vec![0i32; e_cap];
+        let mut dst = vec![0i32; e_cap];
+        let mut w = vec![0f32; e_cap];
+        let deg: Vec<f64> = (0..n as u32)
+            .map(|v| (ds.csr.degree(v) + 1) as f64)
+            .collect();
+        let mut k = 0usize;
+        for vtx in 0..n as u32 {
+            // self loop
+            src[k] = vtx as i32;
+            dst[k] = vtx as i32;
+            w[k] = (1.0 / deg[vtx as usize]) as f32;
+            k += 1;
+            for &u in ds.csr.neighbors(vtx) {
+                src[k] = u as i32;
+                dst[k] = vtx as i32;
+                w[k] = (1.0 / (deg[vtx as usize] * deg[u as usize]).sqrt()) as f32;
+                k += 1;
+            }
+        }
+        if k > e_cap {
+            bail!("graph needs {k} edge slots, artifact has {e_cap}");
+        }
+
+        let labels_host: Vec<i32> = ds.labels.iter().map(|&x| x as i32).collect();
+        let tmask: Vec<f32> = ds
+            .split
+            .iter()
+            .map(|&s| if s == crate::graph::SPLIT_TRAIN { 1.0 } else { 0.0 })
+            .collect();
+        let vmask: Vec<f32> = ds
+            .split
+            .iter()
+            .map(|&s| if s == crate::graph::SPLIT_VAL { 1.0 } else { 0.0 })
+            .collect();
+
+        Ok(FullBatchState {
+            exe,
+            params,
+            m,
+            v,
+            t: 0,
+            lr,
+            x: rt.buf_f32(&ds.features, &[n, ds.feat_dim])?,
+            e_src: rt.buf_i32(&src, &[e_cap])?,
+            e_dst: rt.buf_i32(&dst, &[e_cap])?,
+            e_w: rt.buf_f32(&w, &[e_cap])?,
+            labels: rt.buf_i32(&labels_host, &[n])?,
+            train_mask: rt.buf_f32(&tmask, &[n])?,
+            val_mask: rt.buf_f32(&vmask, &[n])?,
+            client: rt.client.clone(),
+        })
+    }
+
+    pub fn step(&mut self, n_train: usize, n_val: usize) -> Result<FullBatchOut> {
+        self.t += 1;
+        let meta = self.exe.meta.clone();
+        let np = self.params.len();
+        let mut args: Vec<xla::PjRtBuffer> = Vec::with_capacity(meta.inputs.len());
+        for (i, spec) in meta.inputs.iter().take(3 * np).enumerate() {
+            let host = if i < np {
+                &self.params[i]
+            } else if i < 2 * np {
+                &self.m[i - np]
+            } else {
+                &self.v[i - 2 * np]
+            };
+            args.push(
+                self.client
+                    .buffer_from_host_buffer(host, &spec.shape, None)
+                    .map_err(|e| anyhow::anyhow!("upload: {e:?}"))?,
+            );
+        }
+        let up_scalar = |x: f32| -> Result<xla::PjRtBuffer> {
+            self.client
+                .buffer_from_host_buffer(&[x], &[], None)
+                .map_err(|e| anyhow::anyhow!("scalar: {e:?}"))
+        };
+        args.push(up_scalar(self.t as f32)?);
+        args.push(up_scalar(self.lr)?);
+        let mut refs: Vec<&xla::PjRtBuffer> = args.iter().collect();
+        refs.extend([
+            &self.x,
+            &self.e_src,
+            &self.e_dst,
+            &self.e_w,
+            &self.labels,
+            &self.train_mask,
+            &self.val_mask,
+        ]);
+        let outs = self.exe.run(&refs)?;
+        for i in 0..np {
+            self.params[i] = outs[i].f32()?.to_vec();
+            self.m[i] = outs[np + i].f32()?.to_vec();
+            self.v[i] = outs[2 * np + i].f32()?.to_vec();
+        }
+        let loss = outs[3 * np].scalar_f32()?;
+        let ct = outs[3 * np + 1].scalar_f32()?;
+        let cv = outs[3 * np + 2].scalar_f32()?;
+        Ok(FullBatchOut {
+            loss,
+            acc_train: ct / n_train.max(1) as f32,
+            acc_val: cv / n_val.max(1) as f32,
+        })
+    }
+}
+
+/// Shared helper: cross-entropy + accuracy from host logits for the
+/// (unpadded) roots of an eval batch.
+pub fn eval_logits(
+    logits: &[f32],
+    num_classes: usize,
+    roots: &[u32],
+    labels: &[u16],
+) -> (f64, usize) {
+    let mut loss = 0.0f64;
+    let mut correct = 0usize;
+    for (i, &v) in roots.iter().enumerate() {
+        let row = &logits[i * num_classes..(i + 1) * num_classes];
+        let y = labels[v as usize] as usize;
+        let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let lse: f32 = row.iter().map(|&x| (x - mx).exp()).sum::<f32>().ln() + mx;
+        loss += (lse - row[y]) as f64;
+        let pred = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        if pred == y {
+            correct += 1;
+        }
+    }
+    (loss / roots.len().max(1) as f64, correct)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn glorot_init_bounds() {
+        let mut rng = Rng::new(1);
+        let w = init_param(&[64, 32], &mut rng);
+        let s = (6.0f64 / 96.0).sqrt() as f32;
+        assert!(w.iter().all(|&x| x.abs() <= s));
+        assert!(w.iter().any(|&x| x.abs() > s * 0.5));
+        let b = init_param(&[32], &mut rng);
+        assert!(b.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn eval_logits_basic() {
+        // 2 roots, 3 classes
+        let logits = vec![5.0, 0.0, 0.0, 0.0, 0.0, 5.0];
+        let labels = vec![0u16, 1u16];
+        let (loss, correct) = eval_logits(&logits, 3, &[0, 1], &labels);
+        assert_eq!(correct, 1); // root 1 predicted class 2, label 1
+        assert!(loss > 0.0);
+    }
+}

@@ -1,0 +1,161 @@
+//! ClusterGCN baseline (Chiang et al., KDD'19) — §6.3 comparison.
+//!
+//! ClusterGCN partitions the graph (METIS in the paper; community
+//! bin-packing here, see community::partition) and forms a mini-batch
+//! as the union of `q` randomly chosen partitions. Training computes on
+//! *every* node of the union — not just training-set nodes — with loss
+//! masked to labeled roots. Neighborhoods are the full within-union
+//! adjacency (capped at the artifact's fanout width).
+//!
+//! This reproduces the §6.3 behavior: per-epoch cost scales with |V|
+//! (all partitions are visited every epoch) rather than with the
+//! training-set size, which is why ClusterGCN loses badly on
+//! small-train-split datasets (Fig. 8).
+
+use std::collections::HashMap;
+
+use crate::graph::Csr;
+use crate::util::rng::Rng;
+
+use super::mfg::{Mfg, MfgLayer};
+
+/// Epoch schedule: shuffled partition ids grouped `q` per batch.
+pub fn epoch_batches(
+    num_parts: usize,
+    q: usize,
+    rng: &mut Rng,
+) -> Vec<Vec<usize>> {
+    let mut ids: Vec<usize> = (0..num_parts).collect();
+    rng.shuffle(&mut ids);
+    ids.chunks(q.max(1)).map(|c| c.to_vec()).collect()
+}
+
+/// Build the MFG for a union of partitions: roots are the union's
+/// nodes (truncated to `max_roots`, the artifact's batch capacity);
+/// every layer links each node to up to `fanout` *within-union*
+/// neighbors.
+pub fn build_mfg_cluster(
+    csr: &Csr,
+    union_nodes: &[u32],
+    fanouts: &[usize],
+    max_roots: usize,
+    rng: &mut Rng,
+) -> Mfg {
+    let layers = fanouts.len();
+    let mut roots: Vec<u32> = union_nodes.to_vec();
+    if roots.len() > max_roots {
+        // Oversized unions (partition imbalance) are truncated; the
+        // partitioner targets |union| == batch capacity.
+        rng.shuffle(&mut roots);
+        roots.truncate(max_roots);
+        roots.sort_unstable();
+    }
+    let in_union: HashMap<u32, u32> = roots
+        .iter()
+        .enumerate()
+        .map(|(i, &v)| (v, i as u32))
+        .collect();
+
+    // Every level holds the same node set; neighbor positions are
+    // direct indices into that set.
+    let n = roots.len();
+    let mut scratch: Vec<u32> = Vec::with_capacity(64);
+    let mut layers_out = Vec::with_capacity(layers);
+    for &fanout in fanouts {
+        let mut nbr_pos = vec![0u32; n * fanout];
+        let mut counts = vec![0u32; n];
+        for (i, &v) in roots.iter().enumerate() {
+            scratch.clear();
+            for &u in csr.neighbors(v) {
+                if let Some(&p) = in_union.get(&u) {
+                    scratch.push(p);
+                }
+            }
+            let c = if scratch.len() > fanout {
+                // cap: random subset of within-union neighbors
+                for k in 0..fanout {
+                    let j = k + rng.usize_below(scratch.len() - k);
+                    scratch.swap(k, j);
+                }
+                fanout
+            } else {
+                scratch.len()
+            };
+            counts[i] = c as u32;
+            nbr_pos[i * fanout..i * fanout + c].copy_from_slice(&scratch[..c]);
+        }
+        layers_out.push(MfgLayer { fanout, nbr_pos, counts });
+    }
+
+    let levels = vec![roots.clone(); layers + 1];
+    Mfg { levels, layers: layers_out }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::community::partition::pack_partitions;
+    use crate::graph::gen::{generate_sbm, SbmParams};
+
+    #[test]
+    fn batches_cover_all_partitions() {
+        let mut rng = Rng::new(1);
+        let b = epoch_batches(10, 3, &mut rng);
+        assert_eq!(b.len(), 4); // 3+3+3+1
+        let mut all: Vec<usize> = b.into_iter().flatten().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn union_mfg_within_union_only() {
+        let mut rng = Rng::new(2);
+        let g = generate_sbm(
+            &SbmParams {
+                n: 500,
+                num_comms: 10,
+                avg_deg: 10.0,
+                p_intra: 0.85,
+                deg_alpha: 2.1,
+                size_alpha: 1.5,
+            },
+            &mut rng,
+        );
+        let parts = pack_partitions(&g.gt_community, 10, 5, &mut rng);
+        let mut union: Vec<u32> = parts[0].iter().chain(&parts[1]).copied().collect();
+        union.sort_unstable();
+        let mfg = build_mfg_cluster(&g.csr, &union, &[6, 6], 512, &mut rng);
+        let set: std::collections::HashSet<u32> =
+            union.iter().copied().collect();
+        for lvl in &mfg.levels {
+            assert!(lvl.iter().all(|v| set.contains(v)));
+        }
+        let layer = &mfg.layers[0];
+        for (i, &v) in mfg.levels[1].iter().enumerate() {
+            for k in 0..layer.counts[i] as usize {
+                let u = mfg.levels[0][layer.nbr_pos[i * 6 + k] as usize];
+                assert!(g.csr.neighbors(v).binary_search(&u).is_ok());
+                assert!(set.contains(&u));
+            }
+        }
+    }
+
+    #[test]
+    fn truncates_oversized_union() {
+        let mut rng = Rng::new(3);
+        let g = generate_sbm(
+            &SbmParams {
+                n: 300,
+                num_comms: 4,
+                avg_deg: 8.0,
+                p_intra: 0.8,
+                deg_alpha: 2.1,
+                size_alpha: 1.5,
+            },
+            &mut rng,
+        );
+        let union: Vec<u32> = (0..300u32).collect();
+        let mfg = build_mfg_cluster(&g.csr, &union, &[4, 4], 128, &mut rng);
+        assert_eq!(mfg.roots().len(), 128);
+    }
+}

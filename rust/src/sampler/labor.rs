@@ -1,0 +1,167 @@
+//! LABOR-0 baseline sampler (Balin & Çatalyürek, NeurIPS'23) — the
+//! structure-agnostic state-of-the-art compared in §6.3.
+//!
+//! Key idea: instead of sampling each destination's neighborhood
+//! independently, all destinations of a layer share one uniform variate
+//! `r_u` per source node; dst `t` adopts neighbor `u` iff
+//! `r_u <= fanout / deg(t)`. Expected per-dst sample count matches
+//! uniform sampling, but the shared variates make the *union* of
+//! sampled sources much smaller (defusing neighborhood explosion).
+//!
+//! We implement the LABOR-0 variant (uniform importance); the sampled
+//! count per dst is binomial, so rows are truncated at the artifact's
+//! fanout width (bias is negligible at our fanouts and noted in
+//! DESIGN.md).
+
+use std::collections::HashMap;
+
+use crate::graph::Csr;
+use crate::util::rng::Rng;
+use crate::util::umap::U32Map;
+
+use super::mfg::{Mfg, MfgLayer};
+
+pub fn build_mfg_labor(
+    csr: &Csr,
+    roots: &[u32],
+    fanouts: &[usize],
+    rng: &mut Rng,
+) -> Mfg {
+    let layers = fanouts.len();
+    let mut levels_rev: Vec<Vec<u32>> = vec![roots.to_vec()];
+    let mut layers_rev: Vec<MfgLayer> = Vec::with_capacity(layers);
+
+    for li in 0..layers {
+        let fanout = fanouts[layers - 1 - li];
+        let dst = levels_rev.last().unwrap().clone();
+        let n_dst = dst.len();
+        let mut prev: Vec<u32> = dst.clone();
+        let mut pos = U32Map::with_capacity(n_dst * (fanout + 1));
+        for (i, &v) in dst.iter().enumerate() {
+            pos.insert(v, i as u32);
+        }
+        // shared per-source variates, lazily drawn
+        let mut r_u: HashMap<u32, f64> = HashMap::new();
+        let mut nbr_pos = vec![0u32; n_dst * fanout];
+        let mut counts = vec![0u32; n_dst];
+        for (i, &v) in dst.iter().enumerate() {
+            let nbrs = csr.neighbors(v);
+            if nbrs.is_empty() {
+                continue;
+            }
+            let thresh = fanout as f64 / nbrs.len() as f64;
+            let mut c = 0usize;
+            for &u in nbrs {
+                let r = *r_u.entry(u).or_insert_with(|| rng.f64());
+                if r <= thresh {
+                    if c < fanout {
+                        let p = pos.get_or_insert_with(u, || {
+                            prev.push(u);
+                            (prev.len() - 1) as u32
+                        });
+                        nbr_pos[i * fanout + c] = p;
+                        c += 1;
+                    } else {
+                        break; // truncate at artifact width
+                    }
+                }
+            }
+            // degenerate case: nothing crossed the threshold — keep the
+            // smallest-r neighbor so no dst loses its neighborhood
+            if c == 0 {
+                let (&u, _) = nbrs
+                    .iter()
+                    .map(|u| (u, *r_u.entry(*u).or_insert_with(|| rng.f64())))
+                    .reduce(|a, b| if a.1 <= b.1 { a } else { b })
+                    .unwrap();
+                let p = pos.get_or_insert_with(u, || {
+                    prev.push(u);
+                    (prev.len() - 1) as u32
+                });
+                nbr_pos[i * fanout] = p;
+                c = 1;
+            }
+            counts[i] = c as u32;
+        }
+        layers_rev.push(MfgLayer { fanout, nbr_pos, counts });
+        levels_rev.push(prev);
+    }
+
+    levels_rev.reverse();
+    layers_rev.reverse();
+    Mfg { levels: levels_rev, layers: layers_rev }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen::{generate_sbm, SbmParams};
+    use crate::sampler::neighbor::NeighborPolicy;
+
+    fn graph() -> Csr {
+        let mut rng = Rng::new(50);
+        generate_sbm(
+            &SbmParams {
+                n: 800,
+                num_comms: 8,
+                avg_deg: 14.0,
+                p_intra: 0.8,
+                deg_alpha: 2.1,
+                size_alpha: 1.5,
+            },
+            &mut rng,
+        )
+        .csr
+    }
+
+    #[test]
+    fn invariants() {
+        let csr = graph();
+        let mut rng = Rng::new(1);
+        let roots: Vec<u32> = (0..64u32).collect();
+        let mfg = build_mfg_labor(&csr, &roots, &[6, 6], &mut rng);
+        assert_eq!(mfg.num_layers(), 2);
+        for l in 1..=2usize {
+            let layer = &mfg.layers[l - 1];
+            let dst = &mfg.levels[l];
+            let prev = &mfg.levels[l - 1];
+            for (i, &v) in dst.iter().enumerate() {
+                let c = layer.counts[i] as usize;
+                assert!(c <= 6);
+                if !csr.neighbors(v).is_empty() {
+                    assert!(c >= 1, "dst {v} lost all neighbors");
+                }
+                for k in 0..c {
+                    let u = prev[layer.nbr_pos[i * 6 + k] as usize];
+                    assert!(csr.neighbors(v).binary_search(&u).is_ok());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn labor_union_smaller_than_independent() {
+        // LABOR's whole point: the unique source set is smaller than
+        // independent uniform sampling at equal fanout.
+        let csr = graph();
+        let comm = vec![0u32; csr.n];
+        let roots: Vec<u32> = (0..200u32).collect();
+        let mut tot_labor = 0usize;
+        let mut tot_uni = 0usize;
+        for seed in 0..5 {
+            let mut r1 = Rng::new(seed);
+            let mut r2 = Rng::new(seed);
+            tot_labor +=
+                build_mfg_labor(&csr, &roots, &[6, 6], &mut r1).input_nodes().len();
+            tot_uni += crate::sampler::mfg::build_mfg(
+                &csr, &comm, &roots, &[6, 6], NeighborPolicy::Uniform, &mut r2,
+            )
+            .input_nodes()
+            .len();
+        }
+        assert!(
+            tot_labor < tot_uni,
+            "labor union {tot_labor} !< uniform union {tot_uni}"
+        );
+    }
+}

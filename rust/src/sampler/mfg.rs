@@ -1,0 +1,227 @@
+//! Message-flow-graph (MFG) construction: the L-hop sampled sub-graph
+//! of one mini-batch (Algorithm 1, step 2).
+//!
+//! Built output-to-input, DGL-block style: level `L` holds the roots;
+//! expanding layer `l` seeds the previous level with the layer's dst
+//! nodes (so the self connection always resolves) and appends sampled
+//! neighbors, deduplicated via a global→position map. Neighbor slots
+//! store *positions into the previous level*, which is exactly the
+//! local-index layout the padded artifact consumes; the batch builder
+//! rewrites layer-1 positions to global ids in resident-feature mode.
+
+use crate::graph::Csr;
+use crate::util::rng::Rng;
+use crate::util::umap::U32Map;
+
+use super::neighbor::{sample_neighbors, NeighborPolicy};
+
+/// One sampled L-layer sub-graph.
+pub struct Mfg {
+    /// Node arrays per level: `levels[0]` = input frontier,
+    /// `levels[L]` = roots. Values are global node ids.
+    pub levels: Vec<Vec<u32>>,
+    /// Per layer `l` (1-based, `layers[l-1]`): flattened neighbor
+    /// positions into `levels[l-1]`, `counts[i]` valid slots for dst i,
+    /// row stride = `fanout`.
+    pub layers: Vec<MfgLayer>,
+}
+
+pub struct MfgLayer {
+    pub fanout: usize,
+    /// `[n_dst * fanout]`, positions into the previous level;
+    /// only the first `counts[i]` of row i are valid.
+    pub nbr_pos: Vec<u32>,
+    pub counts: Vec<u32>,
+}
+
+impl Mfg {
+    pub fn num_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn roots(&self) -> &[u32] {
+        self.levels.last().unwrap()
+    }
+
+    pub fn input_nodes(&self) -> &[u32] {
+        &self.levels[0]
+    }
+
+    /// Total unique nodes across the input frontier (the batch's input
+    /// feature footprint, Fig. 6's x-axis).
+    pub fn input_bytes(&self, feat_dim: usize) -> usize {
+        self.levels[0].len() * feat_dim * 4
+    }
+}
+
+/// Sample an MFG for `roots`; `fanouts` lists per-layer fanouts,
+/// input-most first (layer `l` samples `fanouts[l-1]` neighbors).
+pub fn build_mfg(
+    csr: &Csr,
+    community: &[u32],
+    roots: &[u32],
+    fanouts: &[usize],
+    policy: NeighborPolicy,
+    rng: &mut Rng,
+) -> Mfg {
+    let layers = fanouts.len();
+    // build output -> input, then reverse
+    let mut levels_rev: Vec<Vec<u32>> = vec![roots.to_vec()];
+    let mut layers_rev: Vec<MfgLayer> = Vec::with_capacity(layers);
+    let mut scratch: Vec<u32> = Vec::with_capacity(32);
+
+    for li in 0..layers {
+        let fanout = fanouts[layers - 1 - li]; // output-most first here
+        let dst = levels_rev.last().unwrap().clone();
+        let n_dst = dst.len();
+        // previous level starts with the dst nodes themselves
+        let mut prev: Vec<u32> = dst.clone();
+        let mut pos = U32Map::with_capacity(n_dst * (fanout + 1));
+        for (i, &v) in dst.iter().enumerate() {
+            pos.insert(v, i as u32);
+        }
+        let mut nbr_pos = vec![0u32; n_dst * fanout];
+        let mut counts = vec![0u32; n_dst];
+        for (i, &v) in dst.iter().enumerate() {
+            sample_neighbors(csr, community, v, fanout, policy, rng, &mut scratch);
+            counts[i] = scratch.len() as u32;
+            for (k, &u) in scratch.iter().enumerate() {
+                let p = pos.get_or_insert_with(u, || {
+                    prev.push(u);
+                    (prev.len() - 1) as u32
+                });
+                nbr_pos[i * fanout + k] = p;
+            }
+        }
+        layers_rev.push(MfgLayer { fanout, nbr_pos, counts });
+        levels_rev.push(prev);
+    }
+
+    levels_rev.reverse();
+    layers_rev.reverse();
+    Mfg { levels: levels_rev, layers: layers_rev }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen::{generate_sbm, SbmParams};
+
+    fn test_graph() -> (Csr, Vec<u32>) {
+        let mut rng = Rng::new(100);
+        let g = generate_sbm(
+            &SbmParams {
+                n: 600,
+                num_comms: 8,
+                avg_deg: 10.0,
+                p_intra: 0.85,
+                deg_alpha: 2.1,
+                size_alpha: 1.5,
+            },
+            &mut rng,
+        );
+        (g.csr, g.gt_community)
+    }
+
+    #[test]
+    fn structure_invariants() {
+        let (csr, comm) = test_graph();
+        let mut rng = Rng::new(1);
+        let roots: Vec<u32> = (0..64u32).collect();
+        let mfg = build_mfg(
+            &csr, &comm, &roots, &[5, 5], NeighborPolicy::Uniform, &mut rng,
+        );
+        assert_eq!(mfg.num_layers(), 2);
+        assert_eq!(mfg.levels.len(), 3);
+        assert_eq!(mfg.roots(), &roots[..]);
+        // each level's nodes are unique
+        for lvl in &mfg.levels {
+            let mut d = lvl.clone();
+            d.sort_unstable();
+            d.dedup();
+            assert_eq!(d.len(), lvl.len(), "duplicate nodes in level");
+        }
+        // dst nodes are a prefix of the previous level
+        for l in 1..=2usize {
+            let dst = &mfg.levels[l];
+            let prev = &mfg.levels[l - 1];
+            assert!(prev.len() >= dst.len());
+            assert_eq!(&prev[..dst.len()], &dst[..]);
+        }
+        // neighbor positions are in range and refer to real neighbors
+        for l in 1..=2usize {
+            let layer = &mfg.layers[l - 1];
+            let dst = &mfg.levels[l];
+            let prev = &mfg.levels[l - 1];
+            for (i, &v) in dst.iter().enumerate() {
+                let c = layer.counts[i] as usize;
+                assert!(c <= 5);
+                for k in 0..c {
+                    let p = layer.nbr_pos[i * 5 + k] as usize;
+                    assert!(p < prev.len());
+                    let u = prev[p];
+                    assert!(
+                        csr.neighbors(v).binary_search(&u).is_ok(),
+                        "{u} is not a neighbor of {v}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn level_sizes_bounded() {
+        let (csr, comm) = test_graph();
+        let mut rng = Rng::new(2);
+        let roots: Vec<u32> = (0..32u32).collect();
+        let mfg = build_mfg(
+            &csr, &comm, &roots, &[4, 4, 4], NeighborPolicy::Uniform, &mut rng,
+        );
+        let mut bound = roots.len();
+        for l in (0..3).rev() {
+            bound *= 4 + 1;
+            assert!(
+                mfg.levels[l].len() <= bound.min(csr.n),
+                "level {l} too large: {} > {bound}",
+                mfg.levels[l].len()
+            );
+        }
+    }
+
+    #[test]
+    fn biased_p1_shrinks_frontier() {
+        let (csr, comm) = test_graph();
+        let mut r1 = Rng::new(3);
+        let mut r2 = Rng::new(3);
+        let roots: Vec<u32> = (0..64u32).collect();
+        let uni = build_mfg(
+            &csr, &comm, &roots, &[8, 8], NeighborPolicy::Uniform, &mut r1,
+        );
+        let biased = build_mfg(
+            &csr, &comm, &roots, &[8, 8],
+            NeighborPolicy::Biased { p: 1.0 }, &mut r2,
+        );
+        // intra-only sampling must touch no more unique inputs
+        assert!(
+            biased.input_nodes().len() <= uni.input_nodes().len(),
+            "biased {} vs uniform {}",
+            biased.input_nodes().len(),
+            uni.input_nodes().len()
+        );
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (csr, comm) = test_graph();
+        let roots: Vec<u32> = (10..42u32).collect();
+        let mut r1 = Rng::new(9);
+        let mut r2 = Rng::new(9);
+        let a = build_mfg(&csr, &comm, &roots, &[5, 5], NeighborPolicy::Uniform, &mut r1);
+        let b = build_mfg(&csr, &comm, &roots, &[5, 5], NeighborPolicy::Uniform, &mut r2);
+        assert_eq!(a.levels, b.levels);
+        for (x, y) in a.layers.iter().zip(&b.layers) {
+            assert_eq!(x.nbr_pos, y.nbr_pos);
+            assert_eq!(x.counts, y.counts);
+        }
+    }
+}

@@ -1,0 +1,21 @@
+//! Mini-batch construction — the paper's contribution (§4).
+//!
+//! Two steps per Algorithm 1:
+//!  1. root-node partitioning ([`roots`]) — how the training set is
+//!     divided across batches each epoch (Table 1 policies);
+//!  2. sub-graph construction ([`mfg`]) — L-hop neighborhood traversal
+//!     with neighbor sampling ([`neighbor`]), including the
+//!     community-biased scheme with knob `p` (§4.2).
+//!
+//! [`labor`] implements the LABOR-0 baseline (§6.3), [`clustergcn`] the
+//! ClusterGCN baseline (§6.3).
+
+pub mod clustergcn;
+pub mod labor;
+pub mod mfg;
+pub mod neighbor;
+pub mod roots;
+
+pub use mfg::{build_mfg, Mfg};
+pub use neighbor::NeighborPolicy;
+pub use roots::RootPolicy;

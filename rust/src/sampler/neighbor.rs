@@ -1,0 +1,288 @@
+//! Neighbor sampling policies (paper §4.2).
+//!
+//! `Biased { p }` is COMM-RAND's knob: an intra-community edge carries
+//! unnormalized weight `p`, an inter-community edge `1-p` (p = 0.5 ⇒
+//! uniform, matching DGL's NeighborSampler with per-edge probabilities;
+//! p = 1.0 ⇒ only same-community neighbors are sampled whenever the
+//! node has any). Sampling is without replacement via exponential-race
+//! keys (Efraimidis–Spirakis), O(deg) per node.
+
+use crate::graph::Csr;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum NeighborPolicy {
+    /// Uniform random `fanout`-sampling (baseline; == Biased{p:0.5}).
+    Uniform,
+    /// Community-biased sampling with intra probability `p` ∈ [0.5, 1].
+    Biased { p: f64 },
+    /// LABOR-0 style dependent sampling (see labor.rs); the field is
+    /// carried here so the MFG builder can dispatch.
+    Labor,
+    /// Only neighbors inside a fixed node set (ClusterGCN batches).
+    WithinSet,
+}
+
+impl NeighborPolicy {
+    pub fn label(&self) -> String {
+        match self {
+            NeighborPolicy::Uniform => "p0.50".into(),
+            NeighborPolicy::Biased { p } => format!("p{p:.2}"),
+            NeighborPolicy::Labor => "labor".into(),
+            NeighborPolicy::WithinSet => "within".into(),
+        }
+    }
+}
+
+/// Sample up to `fanout` distinct neighbors of `v` into `out`.
+///
+/// For `Biased{p=1.0}` only intra-community edges are eligible unless
+/// the node has none (then it falls back to uniform over all; a node
+/// must not lose its entire neighborhood).
+pub fn sample_neighbors(
+    csr: &Csr,
+    community: &[u32],
+    v: u32,
+    fanout: usize,
+    policy: NeighborPolicy,
+    rng: &mut Rng,
+    out: &mut Vec<u32>,
+) {
+    out.clear();
+    let nbrs = csr.neighbors(v);
+    if nbrs.is_empty() {
+        return;
+    }
+    match policy {
+        NeighborPolicy::Uniform => {
+            if nbrs.len() <= fanout {
+                out.extend_from_slice(nbrs);
+            } else {
+                for i in rng.sample_indices(nbrs.len(), fanout) {
+                    out.push(nbrs[i]);
+                }
+            }
+        }
+        NeighborPolicy::Biased { p } => {
+            let cv = community[v as usize];
+            if p >= 1.0 {
+                // hard intra-only: restrict candidate set
+                let intra: Vec<u32> = nbrs
+                    .iter()
+                    .copied()
+                    .filter(|&u| community[u as usize] == cv)
+                    .collect();
+                let cands: &[u32] = if intra.is_empty() { nbrs } else { &intra };
+                if cands.len() <= fanout {
+                    out.extend_from_slice(cands);
+                } else {
+                    for i in rng.sample_indices(cands.len(), fanout) {
+                        out.push(cands[i]);
+                    }
+                }
+            } else if nbrs.len() <= fanout {
+                out.extend_from_slice(nbrs);
+            } else {
+                // weighted w/o replacement: keep the `fanout` smallest
+                // -ln(u)/w keys
+                weighted_sample(
+                    nbrs,
+                    |u| {
+                        if community[u as usize] == cv {
+                            p
+                        } else {
+                            1.0 - p
+                        }
+                    },
+                    fanout,
+                    rng,
+                    out,
+                );
+            }
+        }
+        NeighborPolicy::Labor | NeighborPolicy::WithinSet => {
+            panic!("{policy:?} is handled by its dedicated builder");
+        }
+    }
+}
+
+/// Efraimidis–Spirakis weighted sampling without replacement.
+fn weighted_sample(
+    cands: &[u32],
+    weight: impl Fn(u32) -> f64,
+    k: usize,
+    rng: &mut Rng,
+    out: &mut Vec<u32>,
+) {
+    // (key, node) max-heap of size k on smallest keys
+    let mut heap: Vec<(f64, u32)> = Vec::with_capacity(k + 1);
+    for &u in cands {
+        let w = weight(u).max(1e-12);
+        let key = -rng.f64().max(1e-300).ln() / w;
+        if heap.len() < k {
+            heap.push((key, u));
+            if heap.len() == k {
+                heap.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+            }
+        } else if key < heap[0].0 {
+            // replace current max, restore descending order
+            heap[0] = (key, u);
+            let mut i = 0;
+            while i + 1 < heap.len() && heap[i].0 < heap[i + 1].0 {
+                heap.swap(i, i + 1);
+                i += 1;
+            }
+        }
+    }
+    out.extend(heap.iter().map(|&(_, u)| u));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// star graph: node 0 connected to 1..=40; communities: 1..=20 share
+    /// community 0 with the center, 21..=40 are community 1.
+    fn star() -> (Csr, Vec<u32>) {
+        let edges: Vec<(u32, u32)> = (1..=40u32).map(|u| (0, u)).collect();
+        let csr = Csr::from_edges(41, &edges);
+        let mut comm = vec![0u32; 41];
+        for c in comm.iter_mut().skip(21) {
+            *c = 1;
+        }
+        (csr, comm)
+    }
+
+    #[test]
+    fn uniform_respects_fanout_and_dedup() {
+        let (csr, comm) = star();
+        let mut rng = Rng::new(1);
+        let mut out = Vec::new();
+        for _ in 0..50 {
+            sample_neighbors(
+                &csr, &comm, 0, 10, NeighborPolicy::Uniform, &mut rng, &mut out,
+            );
+            assert_eq!(out.len(), 10);
+            let mut d = out.clone();
+            d.sort_unstable();
+            d.dedup();
+            assert_eq!(d.len(), 10);
+        }
+    }
+
+    #[test]
+    fn takes_all_when_degree_small() {
+        let (csr, comm) = star();
+        let mut rng = Rng::new(2);
+        let mut out = Vec::new();
+        sample_neighbors(
+            &csr, &comm, 5, 10, NeighborPolicy::Uniform, &mut rng, &mut out,
+        );
+        assert_eq!(out, vec![0]);
+    }
+
+    #[test]
+    fn p1_samples_only_intra() {
+        let (csr, comm) = star();
+        let mut rng = Rng::new(3);
+        let mut out = Vec::new();
+        for _ in 0..50 {
+            sample_neighbors(
+                &csr,
+                &comm,
+                0,
+                10,
+                NeighborPolicy::Biased { p: 1.0 },
+                &mut rng,
+                &mut out,
+            );
+            assert!(out.iter().all(|&u| comm[u as usize] == 0), "{out:?}");
+        }
+    }
+
+    #[test]
+    fn p1_falls_back_when_no_intra() {
+        // node 21 (community 1) has only the center (community 0)
+        let (csr, comm) = star();
+        let mut rng = Rng::new(4);
+        let mut out = Vec::new();
+        sample_neighbors(
+            &csr,
+            &comm,
+            21,
+            5,
+            NeighborPolicy::Biased { p: 1.0 },
+            &mut rng,
+            &mut out,
+        );
+        assert_eq!(out, vec![0], "isolated-in-community node lost neighbors");
+    }
+
+    #[test]
+    fn p09_prefers_intra_statistically() {
+        let (csr, comm) = star();
+        let mut rng = Rng::new(5);
+        let mut out = Vec::new();
+        let mut intra = 0usize;
+        let mut total = 0usize;
+        for _ in 0..400 {
+            sample_neighbors(
+                &csr,
+                &comm,
+                0,
+                10,
+                NeighborPolicy::Biased { p: 0.9 },
+                &mut rng,
+                &mut out,
+            );
+            total += out.len();
+            intra += out
+                .iter()
+                .filter(|&&u| comm[u as usize] == 0)
+                .count();
+        }
+        let frac = intra as f64 / total as f64;
+        // 20 intra @ w=0.9 vs 20 inter @ w=0.1 -> strongly intra
+        assert!(frac > 0.75, "intra fraction {frac}");
+    }
+
+    #[test]
+    fn p05_is_unbiased() {
+        let (csr, comm) = star();
+        let mut rng = Rng::new(6);
+        let mut out = Vec::new();
+        let mut intra = 0usize;
+        let mut total = 0usize;
+        for _ in 0..600 {
+            sample_neighbors(
+                &csr,
+                &comm,
+                0,
+                10,
+                NeighborPolicy::Biased { p: 0.5 },
+                &mut rng,
+                &mut out,
+            );
+            total += out.len();
+            intra += out.iter().filter(|&&u| comm[u as usize] == 0).count();
+        }
+        let frac = intra as f64 / total as f64;
+        assert!((frac - 0.5).abs() < 0.06, "intra fraction {frac}");
+    }
+
+    #[test]
+    fn weighted_sample_distinct() {
+        let cands: Vec<u32> = (0..30).collect();
+        let mut rng = Rng::new(7);
+        let mut out = Vec::new();
+        for _ in 0..50 {
+            out.clear();
+            weighted_sample(&cands, |_| 1.0, 7, &mut rng, &mut out);
+            assert_eq!(out.len(), 7);
+            let mut d = out.clone();
+            d.sort_unstable();
+            d.dedup();
+            assert_eq!(d.len(), 7);
+        }
+    }
+}

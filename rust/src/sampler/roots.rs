@@ -1,0 +1,236 @@
+//! Root-node partitioning policies (paper §4.1, Table 1).
+//!
+//! Given the training set and the node->community map, produce the
+//! epoch's ordering of root nodes; consecutive `batch_size` slices form
+//! the mini-batches.
+//!
+//! * `Rand` — uniform random shuffle (the DGL baseline).
+//! * `NoRand` — community-sorted static order (no per-epoch change).
+//! * `CommRandMix { pct }` — COMM-RAND: shuffle communities as whole
+//!   blocks, merge consecutive groups of `ceil(pct * #comms)`
+//!   communities into super-blocks, then shuffle *within* each
+//!   super-block. `pct = 0` keeps single-community blocks (maximum
+//!   structure bias with randomization); larger `pct` mixes more.
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum RootPolicy {
+    Rand,
+    NoRand,
+    /// `pct` ∈ [0, 1]: fraction of the training set's communities
+    /// merged into one shuffling super-block (paper's k%).
+    CommRandMix { pct: f64 },
+}
+
+impl RootPolicy {
+    pub fn label(&self) -> String {
+        match self {
+            RootPolicy::Rand => "RAND-ROOTS".to_string(),
+            RootPolicy::NoRand => "NORAND-ROOTS".to_string(),
+            RootPolicy::CommRandMix { pct } => {
+                format!("COMM-RAND-MIX-{}%", pct * 100.0)
+            }
+        }
+    }
+
+    /// All policies evaluated in Figure 5.
+    pub fn figure5_set() -> Vec<RootPolicy> {
+        vec![
+            RootPolicy::Rand,
+            RootPolicy::NoRand,
+            RootPolicy::CommRandMix { pct: 0.0 },
+            RootPolicy::CommRandMix { pct: 0.125 },
+            RootPolicy::CommRandMix { pct: 0.25 },
+            RootPolicy::CommRandMix { pct: 0.50 },
+        ]
+    }
+}
+
+/// Produce this epoch's root-node order.
+///
+/// `train_nodes` must be sorted ascending (stable input); `community`
+/// maps every graph node to its community id.
+pub fn order_roots(
+    policy: RootPolicy,
+    train_nodes: &[u32],
+    community: &[u32],
+    rng: &mut Rng,
+) -> Vec<u32> {
+    match policy {
+        RootPolicy::Rand => {
+            let mut v = train_nodes.to_vec();
+            rng.shuffle(&mut v);
+            v
+        }
+        RootPolicy::NoRand => {
+            // static community-sorted order, identical every epoch
+            let mut v = train_nodes.to_vec();
+            v.sort_by_key(|&x| (community[x as usize], x));
+            v
+        }
+        RootPolicy::CommRandMix { pct } => {
+            // group the training set by community
+            let mut sorted = train_nodes.to_vec();
+            sorted.sort_by_key(|&x| (community[x as usize], x));
+            let mut blocks: Vec<Vec<u32>> = Vec::new();
+            for &v in &sorted {
+                let c = community[v as usize];
+                match blocks.last() {
+                    Some(b) if community[b[0] as usize] == c => {
+                        blocks.last_mut().unwrap().push(v)
+                    }
+                    _ => blocks.push(vec![v]),
+                }
+            }
+            // (1) shuffle communities as whole blocks
+            rng.shuffle(&mut blocks);
+            // (2) merge into super-blocks of ceil(pct * #comms) comms
+            let ncomm = blocks.len();
+            let group = if pct <= 0.0 {
+                1
+            } else {
+                ((pct * ncomm as f64).ceil() as usize).clamp(1, ncomm)
+            };
+            let mut out = Vec::with_capacity(train_nodes.len());
+            for chunk in blocks.chunks(group) {
+                let start = out.len();
+                for b in chunk {
+                    out.extend_from_slice(b);
+                }
+                // (3) shuffle within the super-block
+                rng.shuffle(&mut out[start..]);
+            }
+            out
+        }
+    }
+}
+
+/// Slice an epoch order into mini-batches of `batch_size` roots (last
+/// batch may be smaller).
+pub fn batches(order: &[u32], batch_size: usize) -> Vec<&[u32]> {
+    order.chunks(batch_size).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup() -> (Vec<u32>, Vec<u32>) {
+        // 300 nodes, 10 communities of 30 consecutive nodes
+        let community: Vec<u32> = (0..300u32).map(|v| v / 30).collect();
+        let train: Vec<u32> = (0..300u32).filter(|v| v % 3 != 2).collect();
+        (train, community)
+    }
+
+    fn is_perm_of(a: &[u32], b: &[u32]) -> bool {
+        let mut x = a.to_vec();
+        let mut y = b.to_vec();
+        x.sort_unstable();
+        y.sort_unstable();
+        x == y
+    }
+
+    #[test]
+    fn all_policies_are_exact_covers() {
+        let (train, comm) = setup();
+        let mut rng = Rng::new(1);
+        for pol in RootPolicy::figure5_set() {
+            let order = order_roots(pol, &train, &comm, &mut rng);
+            assert!(is_perm_of(&order, &train), "{pol:?}");
+        }
+    }
+
+    #[test]
+    fn norand_is_static() {
+        let (train, comm) = setup();
+        let mut r1 = Rng::new(1);
+        let mut r2 = Rng::new(999);
+        let a = order_roots(RootPolicy::NoRand, &train, &comm, &mut r1);
+        let b = order_roots(RootPolicy::NoRand, &train, &comm, &mut r2);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn rand_changes_across_epochs() {
+        let (train, comm) = setup();
+        let mut rng = Rng::new(1);
+        let a = order_roots(RootPolicy::Rand, &train, &comm, &mut rng);
+        let b = order_roots(RootPolicy::Rand, &train, &comm, &mut rng);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn mix0_keeps_communities_contiguous() {
+        let (train, comm) = setup();
+        let mut rng = Rng::new(5);
+        let order = order_roots(
+            RootPolicy::CommRandMix { pct: 0.0 },
+            &train,
+            &comm,
+            &mut rng,
+        );
+        // community changes exactly ncomm-1 times along the order
+        let mut switches = 0;
+        for w in order.windows(2) {
+            if comm[w[0] as usize] != comm[w[1] as usize] {
+                switches += 1;
+            }
+        }
+        assert_eq!(switches, 9, "communities fragmented");
+        // but contents within a community are shuffled
+        let first_comm: Vec<u32> = order
+            .iter()
+            .copied()
+            .take_while(|&v| comm[v as usize] == comm[order[0] as usize])
+            .collect();
+        let mut sorted = first_comm.clone();
+        sorted.sort_unstable();
+        assert_ne!(first_comm, sorted, "intra-community order not shuffled");
+    }
+
+    #[test]
+    fn mix50_creates_two_superblocks() {
+        let (train, comm) = setup();
+        let mut rng = Rng::new(6);
+        let order = order_roots(
+            RootPolicy::CommRandMix { pct: 0.5 },
+            &train,
+            &comm,
+            &mut rng,
+        );
+        // each half of the order should contain exactly 5 communities
+        let half = order.len() / 2;
+        let mut first: Vec<u32> =
+            order[..half].iter().map(|&v| comm[v as usize]).collect();
+        first.sort_unstable();
+        first.dedup();
+        assert_eq!(first.len(), 5, "first super-block has {first:?}");
+    }
+
+    #[test]
+    fn mix_partial_groups_handled() {
+        // 7 communities with pct=0.25 -> groups of 2: 2+2+2+1
+        let comm: Vec<u32> = (0..70u32).map(|v| v / 10).collect();
+        let train: Vec<u32> = (0..70u32).collect();
+        let mut rng = Rng::new(7);
+        let order = order_roots(
+            RootPolicy::CommRandMix { pct: 0.25 },
+            &train,
+            &comm,
+            &mut rng,
+        );
+        assert_eq!(order.len(), 70);
+        let mut s = order.to_vec();
+        s.sort_unstable();
+        assert_eq!(s, train);
+    }
+
+    #[test]
+    fn batches_cover_order() {
+        let order: Vec<u32> = (0..10u32).collect();
+        let b = batches(&order, 4);
+        assert_eq!(b.len(), 3);
+        assert_eq!(b[2], &[8, 9]);
+    }
+}

@@ -1,0 +1,143 @@
+//! Dataset materialization: generate (SBM + features) → detect
+//! communities (Louvain) → community-reorder → cache to `data/*.bin`.
+//!
+//! All experiments load through [`load_or_build`], so every run shares
+//! identical graphs for a given preset. The paper assumes graphs are
+//! already community-ordered (§5); `reorder: false` keeps the shuffled
+//! generator order for the §3 / §6.3 original-ordering baselines.
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::community::{community_order, louvain::louvain_capped};
+use crate::config::DatasetPreset;
+use crate::graph::features::synthesize;
+use crate::graph::gen::generate_sbm;
+use crate::graph::{io, Dataset};
+use crate::util::rng::Rng;
+use crate::util::timer::Timer;
+
+pub fn data_dir() -> PathBuf {
+    std::env::var("COMM_RAND_DATA")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("data"))
+}
+
+/// Build a preset dataset from scratch (no cache).
+pub fn build(preset: &DatasetPreset, reorder: bool) -> Dataset {
+    let mut rng = Rng::new(preset.gen_seed);
+    let g = generate_sbm(&preset.sbm, &mut rng);
+    let payload = synthesize(
+        &g.gt_community,
+        preset.sbm.num_comms,
+        &preset.feat,
+        &mut rng,
+    );
+    // community detection on the generated topology (the pipeline uses
+    // detected communities, never the generator's ground truth)
+    let det = louvain_capped(&g.csr, preset.gen_seed ^ 0x10f2, 2 * 256);
+    let mut ds = Dataset {
+        name: preset.name.to_string(),
+        csr: g.csr,
+        features: payload.features,
+        feat_dim: preset.feat.feat_dim,
+        labels: payload.labels,
+        num_classes: preset.feat.num_classes,
+        split: payload.split,
+        community: det.community,
+        num_comms: det.num_comms,
+        gt_community: g.gt_community,
+    };
+    if reorder {
+        let perm = community_order(&ds.community);
+        ds.permute(&perm);
+    }
+    ds
+}
+
+/// Timed variant used by the §6.5.3 pre-processing-overhead study:
+/// returns (dataset, louvain_seconds, permute_seconds).
+pub fn build_timed(preset: &DatasetPreset) -> (Dataset, f64, f64) {
+    let mut rng = Rng::new(preset.gen_seed);
+    let g = generate_sbm(&preset.sbm, &mut rng);
+    let payload = synthesize(
+        &g.gt_community,
+        preset.sbm.num_comms,
+        &preset.feat,
+        &mut rng,
+    );
+    let t = Timer::start();
+    let det = louvain_capped(&g.csr, preset.gen_seed ^ 0x10f2, 2 * 256);
+    let t_louvain = t.elapsed_s();
+    let mut ds = Dataset {
+        name: preset.name.to_string(),
+        csr: g.csr,
+        features: payload.features,
+        feat_dim: preset.feat.feat_dim,
+        labels: payload.labels,
+        num_classes: preset.feat.num_classes,
+        split: payload.split,
+        community: det.community,
+        num_comms: det.num_comms,
+        gt_community: g.gt_community,
+    };
+    let t = Timer::start();
+    let perm = community_order(&ds.community);
+    ds.permute(&perm);
+    let t_permute = t.elapsed_s();
+    (ds, t_louvain, t_permute)
+}
+
+/// Load the cached binary if present, otherwise build and cache it.
+pub fn load_or_build(preset: &DatasetPreset, reorder: bool) -> Result<Dataset> {
+    let suffix = if reorder { "" } else { ".orig" };
+    let path = data_dir().join(format!("{}{}.bin", preset.name, suffix));
+    if path.exists() {
+        return io::load(&path);
+    }
+    eprintln!(
+        "[data] building {} (reorder={reorder}) -> {}",
+        preset.name,
+        path.display()
+    );
+    let ds = build(preset, reorder);
+    io::save(&ds, &path)?;
+    Ok(ds)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::preset;
+
+    #[test]
+    fn tiny_builds_and_reorders() {
+        let p = preset("tiny").unwrap();
+        let ds = build(&p, true);
+        assert_eq!(ds.n(), 2048);
+        ds.csr.validate().unwrap();
+        // after reordering, community ids are non-decreasing in node id
+        for v in 0..ds.n() - 1 {
+            assert!(ds.community[v] <= ds.community[v + 1]);
+        }
+        // detected communities should be reasonable
+        assert!(ds.num_comms >= 4, "only {} communities", ds.num_comms);
+        let q = crate::graph::stats::modularity(&ds.csr, &ds.community);
+        assert!(q > 0.4, "modularity {q}");
+    }
+
+    #[test]
+    fn unordered_variant_is_shuffled() {
+        let p = preset("tiny").unwrap();
+        let ds = build(&p, false);
+        let mut switches = 0;
+        for v in 0..ds.n() - 1 {
+            if ds.community[v] != ds.community[v + 1] {
+                switches += 1;
+            }
+        }
+        // unordered: communities interleave heavily
+        assert!(switches > ds.num_comms * 4, "switches {switches}");
+    }
+}

@@ -1,0 +1,152 @@
+//! Per-epoch and per-run training metrics (everything the paper's
+//! figures consume), plus JSON result emission.
+
+use crate::util::json::{arr, arr_f64, num, obj, s, Json};
+
+#[derive(Clone, Debug, Default)]
+pub struct EpochMetrics {
+    pub epoch: usize,
+    pub train_loss: f64,
+    pub train_acc: f64,
+    pub val_loss: f64,
+    pub val_acc: f64,
+    /// Measured wall-clock (s): whole epoch / sampling / device step.
+    pub wall_s: f64,
+    pub sample_s: f64,
+    pub step_s: f64,
+    /// Modelled device epoch time (cachesim::timemodel).
+    pub modeled_s: f64,
+    pub l2_miss_rate: f64,
+    pub sw_miss_rate: f64,
+    /// Mean per-batch input feature bytes (Fig. 6 x-axis).
+    pub input_bytes_mean: f64,
+    /// Mean distinct labels per batch (Fig. 7 x-axis).
+    pub labels_per_batch: f64,
+    pub batches: usize,
+    pub lr: f32,
+}
+
+#[derive(Clone, Debug)]
+pub struct TrainReport {
+    pub dataset: String,
+    pub policy: String,
+    pub seed: u64,
+    pub epochs: Vec<EpochMetrics>,
+    /// Epochs until convergence (early-stop best epoch, or max).
+    pub converged_epoch: usize,
+    pub best_val_acc: f64,
+    pub best_val_loss: f64,
+    pub stopped_early: bool,
+}
+
+impl TrainReport {
+    pub fn total_wall_s(&self) -> f64 {
+        self.epochs.iter().map(|e| e.wall_s).sum()
+    }
+
+    pub fn total_modeled_s(&self) -> f64 {
+        self.epochs.iter().map(|e| e.modeled_s).sum()
+    }
+
+    /// Modelled time-to-convergence (the paper's "total training time").
+    pub fn modeled_to_convergence(&self) -> f64 {
+        self.epochs
+            .iter()
+            .take(self.converged_epoch)
+            .map(|e| e.modeled_s)
+            .sum()
+    }
+
+    pub fn wall_to_convergence(&self) -> f64 {
+        self.epochs
+            .iter()
+            .take(self.converged_epoch)
+            .map(|e| e.wall_s)
+            .sum()
+    }
+
+    pub fn mean_epoch_modeled_s(&self) -> f64 {
+        let n = self.epochs.len().max(1);
+        self.total_modeled_s() / n as f64
+    }
+
+    pub fn mean_epoch_wall_s(&self) -> f64 {
+        let n = self.epochs.len().max(1);
+        self.total_wall_s() / n as f64
+    }
+
+    pub fn mean_input_bytes(&self) -> f64 {
+        let n = self.epochs.len().max(1);
+        self.epochs.iter().map(|e| e.input_bytes_mean).sum::<f64>() / n as f64
+    }
+
+    pub fn mean_labels_per_batch(&self) -> f64 {
+        let n = self.epochs.len().max(1);
+        self.epochs.iter().map(|e| e.labels_per_batch).sum::<f64>() / n as f64
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "{} [{}] seed {}: {} epochs (converged {}), best val acc {:.4}, \
+             per-epoch wall {:.3}s / modeled {:.4}s, total wall {:.1}s",
+            self.dataset,
+            self.policy,
+            self.seed,
+            self.epochs.len(),
+            self.converged_epoch,
+            self.best_val_acc,
+            self.mean_epoch_wall_s(),
+            self.mean_epoch_modeled_s(),
+            self.total_wall_s(),
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("dataset", s(&self.dataset)),
+            ("policy", s(&self.policy)),
+            ("seed", num(self.seed as f64)),
+            ("converged_epoch", num(self.converged_epoch as f64)),
+            ("best_val_acc", num(self.best_val_acc)),
+            ("best_val_loss", num(self.best_val_loss)),
+            ("stopped_early", Json::Bool(self.stopped_early)),
+            ("total_wall_s", num(self.total_wall_s())),
+            ("total_modeled_s", num(self.total_modeled_s())),
+            (
+                "val_acc",
+                arr_f64(&self.epochs.iter().map(|e| e.val_acc).collect::<Vec<_>>()),
+            ),
+            (
+                "val_loss",
+                arr_f64(&self.epochs.iter().map(|e| e.val_loss).collect::<Vec<_>>()),
+            ),
+            (
+                "train_loss",
+                arr_f64(&self.epochs.iter().map(|e| e.train_loss).collect::<Vec<_>>()),
+            ),
+            (
+                "epoch_wall_s",
+                arr_f64(&self.epochs.iter().map(|e| e.wall_s).collect::<Vec<_>>()),
+            ),
+            (
+                "epoch_modeled_s",
+                arr_f64(&self.epochs.iter().map(|e| e.modeled_s).collect::<Vec<_>>()),
+            ),
+            (
+                "l2_miss_rate",
+                arr_f64(&self.epochs.iter().map(|e| e.l2_miss_rate).collect::<Vec<_>>()),
+            ),
+            (
+                "input_bytes_mean",
+                arr_f64(
+                    &self
+                        .epochs
+                        .iter()
+                        .map(|e| e.input_bytes_mean)
+                        .collect::<Vec<_>>(),
+                ),
+            ),
+            ("epochs", arr(vec![])),
+        ])
+    }
+}

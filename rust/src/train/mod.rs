@@ -1,0 +1,465 @@
+//! Training orchestration: the epoch loop tying together root
+//! partitioning, the pipelined dataloader, the PJRT train step,
+//! validation, schedulers and the cache-model instrumentation.
+
+pub mod dataset;
+pub mod loader;
+pub mod metrics;
+pub mod sched;
+
+pub use metrics::{EpochMetrics, TrainReport};
+
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+use crate::batch::assemble;
+use crate::cachesim::lru::CacheConfig;
+use crate::cachesim::{DeviceModel, EpochCost, SetAssocCache, SoftwareCache};
+use crate::config::{BatchPolicy, TrainConfig};
+use crate::graph::Dataset;
+use crate::runtime::artifact::{default_dir, ArtifactMeta, Manifest};
+use crate::runtime::{step::eval_logits, Runtime, TrainState};
+use crate::sampler::clustergcn::epoch_batches;
+use crate::sampler::roots::order_roots;
+use crate::sampler::{build_mfg, NeighborPolicy, RootPolicy};
+use crate::util::rng::Rng;
+use crate::util::timer::Timer;
+use loader::{BatchGen, EpochPlan};
+
+/// Shares the PJRT client + manifest across runs of a sweep
+/// (compilation is seconds; steps are milliseconds).
+pub struct Session {
+    pub rt: Runtime,
+    pub manifest: Manifest,
+    metas: HashMap<String, ArtifactMeta>,
+}
+
+impl Session {
+    pub fn new() -> Result<Session> {
+        let manifest = Manifest::load(&default_dir())?;
+        Ok(Session {
+            rt: Runtime::cpu()?,
+            manifest,
+            metas: HashMap::new(),
+        })
+    }
+
+    pub fn meta(&mut self, name: &str) -> Result<ArtifactMeta> {
+        if let Some(m) = self.metas.get(name) {
+            return Ok(m.clone());
+        }
+        let m = self.manifest.get(name)?.clone();
+        self.metas.insert(name.to_string(), m.clone());
+        Ok(m)
+    }
+}
+
+/// Variant selector for one training run.
+#[derive(Clone)]
+pub enum Method {
+    /// COMM-RAND or the uniform baseline (paper §4).
+    CommRand(BatchPolicy),
+    /// LABOR-0 (§6.3).
+    Labor,
+    /// ClusterGCN with `q` partitions per batch (§6.3).
+    ClusterGcn { q: usize },
+}
+
+impl Method {
+    pub fn label(&self) -> String {
+        match self {
+            Method::CommRand(p) => p.label(),
+            Method::Labor => "LABOR".into(),
+            Method::ClusterGcn { q } => format!("ClusterGCN-q{q}"),
+        }
+    }
+}
+
+/// Extra evaluation knobs (cache-model variants, §6.5).
+#[derive(Clone)]
+pub struct RunOptions {
+    /// Relative L2 capacity (1.0 = the dataset's nominal modelled
+    /// cache; 0.5/0.25 are the Fig. 10 MIG variants).
+    pub l2_scale: f64,
+    /// Dataset-nominal modelled L2 as a fraction of the A100's 40MB
+    /// (set from `DatasetPreset::l2_base`; see presets.rs docs).
+    pub l2_base: f64,
+    /// Software feature cache capacity in rows (Fig. 9); None = off.
+    pub sw_cache_rows: Option<usize>,
+    /// Sampling worker threads.
+    pub workers: usize,
+    /// Print per-epoch progress.
+    pub verbose: bool,
+    /// Override the train-set size (Fig. 8's train-size sweep).
+    pub train_subset: Option<usize>,
+}
+
+impl Default for RunOptions {
+    fn default() -> Self {
+        RunOptions {
+            l2_scale: 1.0,
+            l2_base: 1.0,
+            sw_cache_rows: None,
+            workers: default_workers(),
+            verbose: false,
+            train_subset: None,
+        }
+    }
+}
+
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| (n.get().saturating_sub(2)).clamp(1, 8))
+        .unwrap_or(4)
+}
+
+/// Convenience wrapper used by the CLI: owns a fresh session.
+pub fn run_training(
+    ds: &Dataset,
+    artifact_base: &str,
+    policy: &BatchPolicy,
+    cfg: &TrainConfig,
+    verbose: bool,
+) -> Result<TrainReport> {
+    let mut session = Session::new()?;
+    let l2_base = crate::config::preset(&ds.name)
+        .map(|p| p.l2_base)
+        .unwrap_or(1.0);
+    let opts = RunOptions { verbose, l2_base, ..Default::default() };
+    train(
+        &mut session,
+        ds,
+        artifact_base,
+        &Method::CommRand(policy.clone()),
+        cfg,
+        &opts,
+    )
+}
+
+/// Full training run; returns the per-epoch metric trace.
+pub fn train(
+    session: &mut Session,
+    ds: &Dataset,
+    artifact_base: &str,
+    method: &Method,
+    cfg: &TrainConfig,
+    opts: &RunOptions,
+) -> Result<TrainReport> {
+    let train_meta = session.meta(&format!("{artifact_base}.train"))?;
+    let infer_meta = session.meta(&format!("{artifact_base}.infer"))?;
+    let spec = train_meta.spec.clone();
+
+    let mut state = TrainState::new(
+        &session.rt,
+        &train_meta,
+        Some(&infer_meta),
+        Some(ds),
+        cfg.lr,
+        cfg.seed,
+    )?;
+
+    // training set (optionally subsetted for the Fig. 8 sweep)
+    let mut train_nodes = ds.train_nodes();
+    if let Some(k) = opts.train_subset {
+        let mut rng = Rng::new(cfg.seed ^ 0x5b5);
+        rng.shuffle(&mut train_nodes);
+        train_nodes.truncate(k);
+        train_nodes.sort_unstable();
+    }
+    let val_nodes = ds.val_nodes();
+
+    // ClusterGCN partitions: target |union of q parts| == batch capacity
+    let cluster_parts = if let Method::ClusterGcn { q } = method {
+        let num_parts = (ds.n() * q).div_ceil(spec.batch_size.max(1)).max(*q);
+        let mut rng = Rng::new(cfg.seed ^ 0xC1);
+        Some(crate::community::pack_partitions(
+            &ds.community,
+            ds.num_comms,
+            num_parts,
+            &mut rng,
+        ))
+    } else {
+        None
+    };
+
+    // schedulers
+    let mut plateau =
+        sched::ReduceLrOnPlateau::new(cfg.lr, cfg.lr_factor, cfg.lr_patience);
+    let mut early = sched::EarlyStop::new(cfg.patience);
+
+    // cache models
+    let mut sw_cache = opts
+        .sw_cache_rows
+        .map(|rows| SoftwareCache::new(rows, ds.n()));
+    let device = DeviceModel::default();
+    let staged = spec.feat_mode == "staged";
+
+    let mut epoch_rng = Rng::new(cfg.seed ^ 0xE90C);
+    let mut report = TrainReport {
+        dataset: ds.name.clone(),
+        policy: method.label(),
+        seed: cfg.seed,
+        epochs: Vec::new(),
+        converged_epoch: 0,
+        best_val_acc: 0.0,
+        best_val_loss: f64::INFINITY,
+        stopped_early: false,
+    };
+
+    for epoch in 0..cfg.max_epochs {
+        let epoch_timer = Timer::start();
+        // ---- plan the epoch's batches ----
+        let (mut batch_roots, gen): (Vec<Vec<u32>>, BatchGen) = match method {
+            Method::CommRand(pol) => {
+                let order = order_roots(
+                    pol.roots,
+                    &train_nodes,
+                    &ds.community,
+                    &mut epoch_rng,
+                );
+                let policy = if pol.p_intra <= 0.5 {
+                    NeighborPolicy::Uniform
+                } else {
+                    NeighborPolicy::Biased { p: pol.p_intra }
+                };
+                (
+                    order
+                        .chunks(cfg.batch_size.min(spec.batch_size))
+                        .map(|c| c.to_vec())
+                        .collect(),
+                    BatchGen::Sampled { policy },
+                )
+            }
+            Method::Labor => {
+                let order = order_roots(
+                    RootPolicy::Rand,
+                    &train_nodes,
+                    &ds.community,
+                    &mut epoch_rng,
+                );
+                (
+                    order
+                        .chunks(cfg.batch_size.min(spec.batch_size))
+                        .map(|c| c.to_vec())
+                        .collect(),
+                    BatchGen::Labor,
+                )
+            }
+            Method::ClusterGcn { q } => {
+                let parts = cluster_parts.as_ref().unwrap();
+                let sched = epoch_batches(parts.len(), *q, &mut epoch_rng);
+                let unions: Vec<Vec<u32>> = sched
+                    .into_iter()
+                    .map(|ids| {
+                        let mut u: Vec<u32> = ids
+                            .iter()
+                            .flat_map(|&i| parts[i].iter().copied())
+                            .collect();
+                        u.sort_unstable();
+                        u
+                    })
+                    .collect();
+                (unions, BatchGen::Cluster)
+            }
+        };
+        if let Some(maxb) = cfg.max_batches {
+            batch_roots.truncate(maxb);
+        }
+        let plan = EpochPlan {
+            batch_roots,
+            gen,
+            seed: cfg.seed ^ (epoch as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+        };
+
+        // ---- run the epoch ----
+        let mut l2 = SetAssocCache::new(CacheConfig::a100_l2(opts.l2_base * opts.l2_scale));
+        let mut cost = EpochCost::default();
+        let mut loss_sum = 0.0f64;
+        let mut correct_sum = 0.0f64;
+        let mut labeled_sum = 0usize;
+        let mut input_bytes = Vec::new();
+        let mut labels_per_batch = Vec::new();
+        let mut step_s = 0.0f64;
+        let sw_start = sw_cache.as_ref().map(|c| (c.hits, c.misses));
+
+        let dims = model_dims(&spec);
+        {
+            let state = &mut state;
+            let l2 = &mut l2;
+            let cost = &mut cost;
+            let sw_cache = &mut sw_cache;
+            loader::run_epoch(ds, &train_meta, &plan, opts.workers, true, |_i, batch| {
+                // cache replay: the device reads each batch's feature
+                // rows twice (forward layer-1 gather + backward d_w
+                // gather), so intra-batch reuse is part of the model.
+                for _pass in 0..2 {
+                    for &v in &batch.access_stream {
+                        l2.access_row(v, spec.feat_dim);
+                    }
+                }
+                if let Some(sw) = sw_cache.as_mut() {
+                    let mut miss_rows = 0u64;
+                    for &v in &batch.access_stream {
+                        if !sw.access(v) {
+                            miss_rows += 1;
+                        }
+                    }
+                    if staged {
+                        cost.uva_bytes +=
+                            (miss_rows as f64) * (spec.feat_dim * 4) as f64;
+                    }
+                } else if staged {
+                    cost.uva_bytes += batch.stats.input_bytes as f64;
+                }
+                cost.add_dense(&batch.stats.level_sizes, &dims);
+                cost.batches += 1;
+                input_bytes.push(batch.stats.input_bytes as f64);
+                labels_per_batch.push(batch.stats.distinct_labels as f64);
+                labeled_sum += batch.stats.num_labeled;
+
+                let t = Timer::start();
+                let out = state.step(&batch)?;
+                step_s += t.elapsed_s();
+                loss_sum += out.loss as f64 * batch.stats.num_labeled as f64;
+                correct_sum += out.correct as f64;
+                Ok(())
+            })?;
+        }
+        cost.add_cache(&l2);
+        // per-epoch wall time covers training only (sampling + steps);
+        // validation is timed separately, as in the paper's metric
+        let wall_s = epoch_timer.elapsed_s();
+
+        // ---- validation ----
+        let (val_loss, val_acc) =
+            evaluate(&state, ds, &infer_meta, &val_nodes, cfg.seed)?;
+        let modeled_s = cost.seconds(&device);
+        let nb = cost.batches.max(1);
+        let sw_miss = sw_cache
+            .as_ref()
+            .map(|c| {
+                let (h0, m0) = sw_start.unwrap();
+                let h = c.hits - h0;
+                let m = c.misses - m0;
+                if h + m == 0 {
+                    0.0
+                } else {
+                    m as f64 / (h + m) as f64
+                }
+            })
+            .unwrap_or(0.0);
+        let em = EpochMetrics {
+            epoch,
+            train_loss: loss_sum / labeled_sum.max(1) as f64,
+            train_acc: correct_sum / labeled_sum.max(1) as f64,
+            val_loss,
+            val_acc,
+            wall_s,
+            sample_s: (wall_s - step_s).max(0.0),
+            step_s,
+            modeled_s,
+            l2_miss_rate: l2.miss_rate(),
+            sw_miss_rate: sw_miss,
+            input_bytes_mean: crate::util::stats::mean(&input_bytes),
+            labels_per_batch: crate::util::stats::mean(&labels_per_batch),
+            batches: nb,
+            lr: state.lr,
+        };
+        if opts.verbose {
+            println!(
+                "epoch {:>3}: train loss {:.4} acc {:.3} | val loss {:.4} \
+                 acc {:.4} | wall {:.2}s modeled {:.4}s miss {:.3}",
+                epoch,
+                em.train_loss,
+                em.train_acc,
+                em.val_loss,
+                em.val_acc,
+                em.wall_s,
+                em.modeled_s,
+                em.l2_miss_rate
+            );
+        }
+        report.epochs.push(em);
+        if val_acc > report.best_val_acc {
+            report.best_val_acc = val_acc;
+        }
+        if val_loss < report.best_val_loss {
+            report.best_val_loss = val_loss;
+        }
+        state.lr = plateau.step(val_loss);
+        if early.step(val_loss) {
+            report.stopped_early = true;
+            break;
+        }
+    }
+    report.converged_epoch = early_best(&early, report.epochs.len());
+    Ok(report)
+}
+
+fn early_best(early: &sched::EarlyStop, total: usize) -> usize {
+    if early.best_epoch > 0 {
+        early.best_epoch
+    } else {
+        total.max(1)
+    }
+}
+
+fn model_dims(spec: &crate::runtime::artifact::SpecMeta) -> Vec<usize> {
+    // hidden width is constant (64) across our artifact specs — see
+    // python/compile/specs.py; only used for the modelled FLOP term.
+    let mut dims = vec![spec.feat_dim];
+    for _ in 0..spec.layers.saturating_sub(1) {
+        dims.push(64);
+    }
+    dims.push(spec.num_classes);
+    dims
+}
+
+/// Sampled validation with a fixed seed, so early stopping sees a
+/// stable objective across epochs and policies.
+pub fn evaluate(
+    state: &TrainState,
+    ds: &Dataset,
+    infer_meta: &ArtifactMeta,
+    val_nodes: &[u32],
+    seed: u64,
+) -> Result<(f64, f64)> {
+    let spec = &infer_meta.spec;
+    let mut rng = Rng::new(seed ^ 0xEAA1);
+    let mut loss_sum = 0.0;
+    let mut correct = 0usize;
+    let mut count = 0usize;
+    for chunk in val_nodes.chunks(spec.batch_size) {
+        let mfg = build_mfg(
+            &ds.csr,
+            &ds.community,
+            chunk,
+            &spec.fanouts,
+            NeighborPolicy::Uniform,
+            &mut rng,
+        );
+        let batch = assemble(&mfg, ds, infer_meta, false)?;
+        let logits = state.infer(&batch)?;
+        let (l, c) = eval_logits(&logits, spec.num_classes, chunk, &ds.labels);
+        loss_sum += l * chunk.len() as f64;
+        correct += c;
+        count += chunk.len();
+    }
+    Ok((
+        loss_sum / count.max(1) as f64,
+        correct as f64 / count.max(1) as f64,
+    ))
+}
+
+/// Test-set accuracy with the current parameters (Table 3).
+pub fn test_accuracy(
+    state: &TrainState,
+    ds: &Dataset,
+    infer_meta: &ArtifactMeta,
+    seed: u64,
+) -> Result<f64> {
+    let nodes = ds.test_nodes();
+    let (_, acc) = evaluate(state, ds, infer_meta, &nodes, seed ^ 0x7E57)?;
+    Ok(acc)
+}

@@ -1,0 +1,117 @@
+//! Training schedulers: ReduceLROnPlateau (torch semantics, paper §5)
+//! and validation-loss early stopping (paper: patience 6).
+
+/// torch.optim.lr_scheduler.ReduceLROnPlateau (mode=min, default
+/// threshold 1e-4 rel).
+pub struct ReduceLrOnPlateau {
+    pub lr: f32,
+    factor: f32,
+    patience: usize,
+    best: f64,
+    bad_epochs: usize,
+    threshold: f64,
+    min_lr: f32,
+}
+
+impl ReduceLrOnPlateau {
+    pub fn new(lr: f32, factor: f32, patience: usize) -> Self {
+        ReduceLrOnPlateau {
+            lr,
+            factor,
+            patience,
+            best: f64::INFINITY,
+            bad_epochs: 0,
+            threshold: 1e-4,
+            min_lr: 1e-8,
+        }
+    }
+
+    /// Feed this epoch's validation loss; returns the (possibly
+    /// reduced) learning rate.
+    pub fn step(&mut self, val_loss: f64) -> f32 {
+        if val_loss < self.best * (1.0 - self.threshold) {
+            self.best = val_loss;
+            self.bad_epochs = 0;
+        } else {
+            self.bad_epochs += 1;
+            if self.bad_epochs > self.patience {
+                self.lr = (self.lr * self.factor).max(self.min_lr);
+                self.bad_epochs = 0;
+            }
+        }
+        self.lr
+    }
+}
+
+/// Early stopping on validation loss (paper: stop after `patience`
+/// epochs without improvement).
+pub struct EarlyStop {
+    patience: usize,
+    best: f64,
+    bad_epochs: usize,
+    pub best_epoch: usize,
+    epoch: usize,
+}
+
+impl EarlyStop {
+    pub fn new(patience: usize) -> Self {
+        EarlyStop {
+            patience,
+            best: f64::INFINITY,
+            bad_epochs: 0,
+            best_epoch: 0,
+            epoch: 0,
+        }
+    }
+
+    /// Returns true when training should stop.
+    pub fn step(&mut self, val_loss: f64) -> bool {
+        self.epoch += 1;
+        if val_loss < self.best - 1e-6 {
+            self.best = val_loss;
+            self.best_epoch = self.epoch;
+            self.bad_epochs = 0;
+            false
+        } else {
+            self.bad_epochs += 1;
+            self.bad_epochs >= self.patience
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plateau_reduces_after_patience() {
+        let mut s = ReduceLrOnPlateau::new(1.0, 0.1, 2);
+        assert_eq!(s.step(1.0), 1.0); // best=1.0
+        assert_eq!(s.step(1.0), 1.0); // bad 1
+        assert_eq!(s.step(1.0), 1.0); // bad 2
+        let lr = s.step(1.0); // bad 3 > patience -> reduce
+        assert!((lr - 0.1).abs() < 1e-6);
+    }
+
+    #[test]
+    fn plateau_resets_on_improvement() {
+        let mut s = ReduceLrOnPlateau::new(1.0, 0.5, 1);
+        s.step(1.0);
+        s.step(1.0);
+        s.step(0.5); // improvement resets
+        s.step(0.49999); // not enough relative improvement -> bad 1
+        let lr = s.step(0.49999); // bad 2 -> reduce
+        assert!((lr - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn early_stop_fires() {
+        let mut e = EarlyStop::new(3);
+        assert!(!e.step(1.0));
+        assert!(!e.step(0.9));
+        assert!(!e.step(0.95));
+        assert!(!e.step(0.95));
+        assert!(e.step(0.95)); // 3 bad epochs
+        assert_eq!(e.best_epoch, 2);
+    }
+}

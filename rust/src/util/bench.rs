@@ -1,0 +1,82 @@
+//! Tiny criterion-style bench harness (criterion itself is not
+//! available offline). Used by `cargo bench` targets under
+//! `rust/benches/`.
+
+use std::time::Instant;
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub stddev_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchResult {
+    pub fn print(&self) {
+        let (scale, unit) = pick_unit(self.mean_ns);
+        println!(
+            "{:<48} {:>10.3} {unit}/iter (±{:.1}%, min {:.3} {unit}, n={})",
+            self.name,
+            self.mean_ns / scale,
+            100.0 * self.stddev_ns / self.mean_ns.max(1e-9),
+            self.min_ns / scale,
+            self.iters,
+        );
+    }
+}
+
+fn pick_unit(ns: f64) -> (f64, &'static str) {
+    if ns >= 1e9 {
+        (1e9, "s ")
+    } else if ns >= 1e6 {
+        (1e6, "ms")
+    } else if ns >= 1e3 {
+        (1e3, "us")
+    } else {
+        (1.0, "ns")
+    }
+}
+
+/// Run `f` repeatedly for ~`budget_s` seconds (after one warmup call)
+/// and report per-iteration timing.
+pub fn bench<T>(name: &str, budget_s: f64, mut f: impl FnMut() -> T) -> BenchResult {
+    // warmup + calibration
+    let t0 = Instant::now();
+    std::hint::black_box(f());
+    let once = t0.elapsed().as_secs_f64().max(1e-9);
+    let target_iters = ((budget_s / once).ceil() as u64).clamp(3, 10_000);
+
+    let mut samples = Vec::with_capacity(target_iters as usize);
+    for _ in 0..target_iters {
+        let t = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t.elapsed().as_nanos() as f64);
+    }
+    let n = samples.len() as f64;
+    let mean = samples.iter().sum::<f64>() / n;
+    let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+        / (n - 1.0).max(1.0);
+    let min = samples.iter().cloned().fold(f64::INFINITY, f64::min);
+    let r = BenchResult {
+        name: name.to_string(),
+        iters: target_iters,
+        mean_ns: mean,
+        stddev_ns: var.sqrt(),
+        min_ns: min,
+    };
+    r.print();
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs() {
+        let r = bench("noop-sum", 0.01, || (0..1000u64).sum::<u64>());
+        assert!(r.iters >= 3);
+        assert!(r.mean_ns > 0.0);
+    }
+}

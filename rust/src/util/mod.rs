@@ -1,0 +1,10 @@
+//! Self-contained utilities (this offline image ships no crates beyond
+//! `xla`/`anyhow`, so RNG, JSON, stats and the bench harness are
+//! implemented here).
+
+pub mod bench;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod timer;
+pub mod umap;

@@ -1,0 +1,225 @@
+//! Deterministic, seedable RNG (xoshiro256**, split-mix seeded).
+//!
+//! Every stochastic component in the pipeline (graph generation, root
+//! shuffling, neighbor sampling, parameter init) draws from an
+//! explicitly-seeded [`Rng`], so all experiments are reproducible from
+//! the seed recorded in results files.
+
+/// xoshiro256** by Blackman & Vigna — fast, high-quality, 64-bit.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+#[inline]
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s }
+    }
+
+    /// Independent child stream (for per-worker RNGs).
+    pub fn fork(&mut self, tag: u64) -> Rng {
+        Rng::new(self.next_u64() ^ tag.wrapping_mul(0x9E3779B97F4A7C15))
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[1]
+            .wrapping_mul(5)
+            .rotate_left(7)
+            .wrapping_mul(9);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in `[0, n)` (Lemire's multiply-shift, debiased).
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        let mut x = self.next_u64();
+        let mut m = (x as u128).wrapping_mul(n as u128);
+        let mut l = m as u64;
+        if l < n {
+            let t = n.wrapping_neg() % n;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128).wrapping_mul(n as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    #[inline]
+    pub fn usize_below(&mut self, n: usize) -> usize {
+        self.below(n as u64) as usize
+    }
+
+    /// Uniform f64 in `[0, 1)`.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in `[0, 1)`.
+    #[inline]
+    pub fn f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Standard normal (Box–Muller; one value per call, simple and fine
+    /// for init paths).
+    pub fn normal(&mut self) -> f64 {
+        loop {
+            let u = self.f64();
+            let v = self.f64();
+            if u > 1e-12 {
+                return (-2.0 * u.ln()).sqrt() * (2.0 * std::f64::consts::PI * v).cos();
+            }
+        }
+    }
+
+    /// Fisher–Yates in-place shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        let n = xs.len();
+        if n < 2 {
+            return;
+        }
+        for i in (1..n).rev() {
+            let j = self.usize_below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `k` items without replacement from `0..n` (partial
+    /// Fisher–Yates over an index map; O(k) memory for small k).
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        use std::collections::HashMap;
+        let k = k.min(n);
+        let mut swap: HashMap<usize, usize> = HashMap::with_capacity(2 * k);
+        let mut out = Vec::with_capacity(k);
+        for i in 0..k {
+            let j = i + self.usize_below(n - i);
+            let vj = *swap.get(&j).unwrap_or(&j);
+            let vi = *swap.get(&i).unwrap_or(&i);
+            out.push(vj);
+            swap.insert(j, vi);
+        }
+        out
+    }
+
+    /// Geometric-ish power-law sample in [lo, hi] with exponent `alpha`
+    /// (used for community-size and degree skews in the generators).
+    pub fn powerlaw(&mut self, lo: f64, hi: f64, alpha: f64) -> f64 {
+        // inverse-CDF sampling of p(x) ~ x^-alpha on [lo, hi]
+        let u = self.f64();
+        if (alpha - 1.0).abs() < 1e-9 {
+            (lo.ln() + u * (hi.ln() - lo.ln())).exp()
+        } else {
+            let a1 = 1.0 - alpha;
+            ((lo.powf(a1) + u * (hi.powf(a1) - lo.powf(a1))).powf(1.0 / a1))
+                .clamp(lo, hi)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn below_in_range() {
+        let mut r = Rng::new(7);
+        for n in [1u64, 2, 3, 10, 1000] {
+            for _ in 0..200 {
+                assert!(r.below(n) < n);
+            }
+        }
+    }
+
+    #[test]
+    fn f64_unit_interval() {
+        let mut r = Rng::new(1);
+        let mut sum = 0.0;
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+            sum += x;
+        }
+        let mean = sum / 10_000.0;
+        assert!((mean - 0.5).abs() < 0.02, "mean={mean}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(3);
+        let mut v: Vec<u32> = (0..1000).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..1000).collect::<Vec<_>>());
+        assert_ne!(v, (0..1000).collect::<Vec<_>>()); // astronomically unlikely
+    }
+
+    #[test]
+    fn sample_indices_unique() {
+        let mut r = Rng::new(9);
+        for _ in 0..50 {
+            let k = r.usize_below(20) + 1;
+            let s = r.sample_indices(100, k);
+            assert_eq!(s.len(), k);
+            let mut d = s.clone();
+            d.sort_unstable();
+            d.dedup();
+            assert_eq!(d.len(), k, "duplicates in {s:?}");
+            assert!(s.iter().all(|&x| x < 100));
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(11);
+        let n = 20_000;
+        let (mut s1, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = r.normal();
+            s1 += x;
+            s2 += x * x;
+        }
+        let mean = s1 / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.05, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.1, "var={var}");
+    }
+}

@@ -1,0 +1,82 @@
+//! Wall-clock timing helpers and a phase-accumulating stopwatch used by
+//! the trainer's metrics (sampling vs gather vs step time breakdown).
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer { start: Instant::now() }
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+/// Accumulates named phase durations across an epoch.
+#[derive(Default, Clone)]
+pub struct Phases {
+    acc: BTreeMap<&'static str, Duration>,
+}
+
+impl Phases {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a closure under a phase label.
+    pub fn time<T>(&mut self, name: &'static str, f: impl FnOnce() -> T) -> T {
+        let t = Instant::now();
+        let out = f();
+        *self.acc.entry(name).or_default() += t.elapsed();
+        out
+    }
+
+    pub fn add(&mut self, name: &'static str, d: Duration) {
+        *self.acc.entry(name).or_default() += d;
+    }
+
+    pub fn get_s(&self, name: &str) -> f64 {
+        self.acc
+            .iter()
+            .find(|(k, _)| **k == name)
+            .map(|(_, d)| d.as_secs_f64())
+            .unwrap_or(0.0)
+    }
+
+    pub fn merge(&mut self, other: &Phases) {
+        for (k, v) in &other.acc {
+            *self.acc.entry(k).or_default() += *v;
+        }
+    }
+
+    pub fn report(&self) -> Vec<(String, f64)> {
+        self.acc
+            .iter()
+            .map(|(k, v)| (k.to_string(), v.as_secs_f64()))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phases_accumulate() {
+        let mut p = Phases::new();
+        p.time("a", || std::thread::sleep(Duration::from_millis(2)));
+        p.time("a", || std::thread::sleep(Duration::from_millis(2)));
+        assert!(p.get_s("a") >= 0.004);
+        assert_eq!(p.get_s("missing"), 0.0);
+    }
+}

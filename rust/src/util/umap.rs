@@ -1,0 +1,159 @@
+//! Open-addressing u32 -> u32 map for the sampling hot path.
+//!
+//! The MFG builder's global-id -> position dedup map is the hottest
+//! data structure in batch construction; std::HashMap's SipHash and
+//! per-entry layout cost ~3x vs this linear-probing table with a
+//! multiply-shift hash (§Perf in EXPERIMENTS.md).
+
+const EMPTY: u32 = u32::MAX;
+
+pub struct U32Map {
+    keys: Vec<u32>,
+    vals: Vec<u32>,
+    mask: usize,
+    len: usize,
+}
+
+impl U32Map {
+    /// Capacity for about `n` entries (load factor <= 0.5).
+    pub fn with_capacity(n: usize) -> U32Map {
+        let cap = (2 * n.max(8)).next_power_of_two();
+        U32Map {
+            keys: vec![EMPTY; cap],
+            vals: vec![0; cap],
+            mask: cap - 1,
+            len: 0,
+        }
+    }
+
+    #[inline]
+    fn slot(&self, key: u32) -> usize {
+        // Fibonacci multiply-shift
+        ((key as u64).wrapping_mul(0x9E3779B97F4A7C15) >> 40) as usize & self.mask
+    }
+
+    /// Insert if absent; returns the value now stored for `key`.
+    #[inline]
+    pub fn get_or_insert_with(
+        &mut self,
+        key: u32,
+        make: impl FnOnce() -> u32,
+    ) -> u32 {
+        debug_assert!(key != EMPTY);
+        if self.len * 2 >= self.keys.len() {
+            self.grow();
+        }
+        let mut i = self.slot(key);
+        loop {
+            let k = self.keys[i];
+            if k == key {
+                return self.vals[i];
+            }
+            if k == EMPTY {
+                let v = make();
+                self.keys[i] = key;
+                self.vals[i] = v;
+                self.len += 1;
+                return v;
+            }
+            i = (i + 1) & self.mask;
+        }
+    }
+
+    #[inline]
+    pub fn get(&self, key: u32) -> Option<u32> {
+        let mut i = self.slot(key);
+        loop {
+            let k = self.keys[i];
+            if k == key {
+                return Some(self.vals[i]);
+            }
+            if k == EMPTY {
+                return None;
+            }
+            i = (i + 1) & self.mask;
+        }
+    }
+
+    /// Insert (overwrites existing).
+    #[inline]
+    pub fn insert(&mut self, key: u32, val: u32) {
+        if self.len * 2 >= self.keys.len() {
+            self.grow();
+        }
+        let mut i = self.slot(key);
+        loop {
+            let k = self.keys[i];
+            if k == key {
+                self.vals[i] = val;
+                return;
+            }
+            if k == EMPTY {
+                self.keys[i] = key;
+                self.vals[i] = val;
+                self.len += 1;
+                return;
+            }
+            i = (i + 1) & self.mask;
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    fn grow(&mut self) {
+        let old_keys = std::mem::take(&mut self.keys);
+        let old_vals = std::mem::take(&mut self.vals);
+        let cap = old_keys.len() * 2;
+        self.keys = vec![EMPTY; cap];
+        self.vals = vec![0; cap];
+        self.mask = cap - 1;
+        self.len = 0;
+        for (k, v) in old_keys.into_iter().zip(old_vals) {
+            if k != EMPTY {
+                self.insert(k, v);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use std::collections::HashMap;
+
+    #[test]
+    fn matches_std_hashmap() {
+        let mut rng = Rng::new(1);
+        let mut ours = U32Map::with_capacity(4);
+        let mut std_map: HashMap<u32, u32> = HashMap::new();
+        for i in 0..5000u32 {
+            let k = rng.below(2000) as u32;
+            let v = *std_map.entry(k).or_insert(i);
+            let v2 = ours.get_or_insert_with(k, || i);
+            assert_eq!(v, v2, "key {k}");
+        }
+        assert_eq!(ours.len(), std_map.len());
+        for (k, v) in &std_map {
+            assert_eq!(ours.get(*k), Some(*v));
+        }
+        assert_eq!(ours.get(999_999), None);
+    }
+
+    #[test]
+    fn grows_from_small() {
+        let mut m = U32Map::with_capacity(1);
+        for k in 0..1000u32 {
+            m.insert(k, k * 2);
+        }
+        for k in 0..1000u32 {
+            assert_eq!(m.get(k), Some(k * 2));
+        }
+    }
+}

@@ -1,0 +1,203 @@
+//! Integration tests across the full stack: dataset -> sampler ->
+//! padded batch -> PJRT execution -> training dynamics.
+//!
+//! These need `make artifacts` (the tiny artifacts) and are skipped
+//! with a clear message otherwise.
+
+use comm_rand::batch::assemble;
+use comm_rand::config::{preset, BatchPolicy, TrainConfig};
+use comm_rand::runtime::artifact::{default_dir, Manifest};
+use comm_rand::runtime::{Runtime, TrainState};
+use comm_rand::sampler::{build_mfg, NeighborPolicy, RootPolicy};
+use comm_rand::train::{self, Method, RunOptions, Session};
+use comm_rand::util::rng::Rng;
+
+fn have_artifacts() -> bool {
+    default_dir().join("manifest.json").exists()
+}
+
+fn tiny_dataset() -> comm_rand::graph::Dataset {
+    train::dataset::build(&preset("tiny").unwrap(), true)
+}
+
+#[test]
+fn train_step_executes_and_learns() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let ds = tiny_dataset();
+    let manifest = Manifest::load(&default_dir()).unwrap();
+    let train_meta = manifest.get("tiny.train").unwrap();
+    let infer_meta = manifest.get("tiny.infer").unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let mut st =
+        TrainState::new(&rt, train_meta, Some(infer_meta), Some(&ds), 1e-3, 1)
+            .unwrap();
+    let mut rng = Rng::new(3);
+    let train_nodes = ds.train_nodes();
+    let mut losses = Vec::new();
+    for i in 0..12 {
+        let roots: Vec<u32> = (0..128)
+            .map(|_| train_nodes[rng.usize_below(train_nodes.len())])
+            .collect();
+        let mut roots = roots;
+        roots.sort_unstable();
+        roots.dedup();
+        let mfg = build_mfg(
+            &ds.csr,
+            &ds.community,
+            &roots,
+            &train_meta.spec.fanouts,
+            NeighborPolicy::Uniform,
+            &mut rng,
+        );
+        let b = assemble(&mfg, &ds, train_meta, true).unwrap();
+        let out = st.step(&b).unwrap();
+        assert!(out.loss.is_finite(), "step {i} loss not finite");
+        losses.push(out.loss);
+    }
+    assert!(
+        losses.last().unwrap() < losses.first().unwrap(),
+        "loss did not decrease: {losses:?}"
+    );
+}
+
+#[test]
+fn infer_is_deterministic_and_state_isolated() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let ds = tiny_dataset();
+    let manifest = Manifest::load(&default_dir()).unwrap();
+    let train_meta = manifest.get("tiny.train").unwrap();
+    let infer_meta = manifest.get("tiny.infer").unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let st = TrainState::new(&rt, train_meta, Some(infer_meta), Some(&ds), 1e-3, 1)
+        .unwrap();
+    let mut rng = Rng::new(9);
+    let roots: Vec<u32> = ds.val_nodes()[..64].to_vec();
+    let mfg = build_mfg(
+        &ds.csr,
+        &ds.community,
+        &roots,
+        &infer_meta.spec.fanouts,
+        NeighborPolicy::Uniform,
+        &mut rng,
+    );
+    let b = assemble(&mfg, &ds, infer_meta, false).unwrap();
+    let l1 = st.infer(&b).unwrap();
+    let l2 = st.infer(&b).unwrap();
+    assert_eq!(l1, l2, "infer must be pure (resident buffer not donated)");
+}
+
+#[test]
+fn full_training_run_all_policies() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let ds = tiny_dataset();
+    let mut session = Session::new().unwrap();
+    let cfg = TrainConfig {
+        max_epochs: 3,
+        batch_size: 128,
+        ..Default::default()
+    };
+    let opts = RunOptions { l2_base: 0.0016, ..Default::default() };
+    let mut accs = Vec::new();
+    for pol in [
+        BatchPolicy::baseline(),
+        BatchPolicy { roots: RootPolicy::NoRand, p_intra: 1.0 },
+        BatchPolicy { roots: RootPolicy::CommRandMix { pct: 0.125 }, p_intra: 0.9 },
+    ] {
+        let r = train::train(
+            &mut session,
+            &ds,
+            "tiny",
+            &Method::CommRand(pol),
+            &cfg,
+            &opts,
+        )
+        .unwrap();
+        assert_eq!(r.epochs.len(), 3);
+        assert!(r.best_val_acc > 0.2, "policy failed to learn: {}", r.policy);
+        accs.push(r.best_val_acc);
+    }
+}
+
+#[test]
+fn labor_and_clustergcn_methods_run() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let ds = tiny_dataset();
+    let mut session = Session::new().unwrap();
+    let cfg = TrainConfig {
+        max_epochs: 2,
+        batch_size: 128,
+        ..Default::default()
+    };
+    let opts = RunOptions::default();
+    for m in [Method::Labor, Method::ClusterGcn { q: 1 }] {
+        let r = train::train(&mut session, &ds, "tiny", &m, &cfg, &opts).unwrap();
+        assert_eq!(r.epochs.len(), 2, "{}", m.label());
+        assert!(r.epochs[0].train_loss.is_finite());
+    }
+}
+
+#[test]
+fn gcn_and_gat_artifacts_train() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let ds = tiny_dataset();
+    let mut session = Session::new().unwrap();
+    let cfg = TrainConfig {
+        max_epochs: 2,
+        batch_size: 128,
+        ..Default::default()
+    };
+    let opts = RunOptions::default();
+    for artifact in ["tiny_gcn", "tiny_gat"] {
+        let r = train::train(
+            &mut session,
+            &ds,
+            artifact,
+            &Method::CommRand(BatchPolicy::baseline()),
+            &cfg,
+            &opts,
+        )
+        .unwrap();
+        assert!(
+            r.epochs[1].train_loss < r.epochs[0].train_loss + 0.5,
+            "{artifact} diverged: {:?}",
+            r.epochs.iter().map(|e| e.train_loss).collect::<Vec<_>>()
+        );
+    }
+}
+
+#[test]
+fn seeded_runs_are_reproducible() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let ds = tiny_dataset();
+    let mut session = Session::new().unwrap();
+    let cfg = TrainConfig {
+        max_epochs: 2,
+        batch_size: 128,
+        seed: 42,
+        ..Default::default()
+    };
+    let opts = RunOptions::default();
+    let m = Method::CommRand(BatchPolicy::baseline());
+    let a = train::train(&mut session, &ds, "tiny", &m, &cfg, &opts).unwrap();
+    let b = train::train(&mut session, &ds, "tiny", &m, &cfg, &opts).unwrap();
+    assert_eq!(a.epochs[1].train_loss, b.epochs[1].train_loss);
+    assert_eq!(a.best_val_acc, b.best_val_acc);
+}
