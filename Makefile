@@ -1,0 +1,28 @@
+# Build entry points. The rust crate is self-contained (vendored
+# `anyhow` + PJRT shim under rust/vendor/); `artifacts` needs a python
+# with jax to AOT-lower the models, and is optional — everything else
+# (tests, serve bench with the no-op executor, cache studies) runs
+# without it.
+
+.PHONY: build test artifacts data serve-bench clean
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+# AOT-lower the JAX models to artifacts/*.hlo.txt + manifest.json
+artifacts:
+	cd python && python3 -m compile.aot --out ../artifacts
+
+# Materialize the synthetic datasets into data/*.bin
+data: build
+	cargo run --release --bin comm-rand -- gen-data
+
+# Quick online-serving benchmark on the tiny preset
+serve-bench: build
+	cargo run --release --bin comm-rand -- serve bench tiny
+
+clean:
+	rm -rf target

@@ -348,6 +348,105 @@ mod tests {
         }
     }
 
+    /// Dataset of isolated nodes: every neighbor frontier is empty.
+    fn isolated_dataset(n: usize) -> Dataset {
+        Dataset {
+            name: "iso".into(),
+            csr: crate::graph::Csr::from_edges(n, &[]),
+            features: vec![0.5; n * 16],
+            feat_dim: 16,
+            labels: vec![1; n],
+            num_classes: 5,
+            split: vec![crate::graph::SPLIT_TRAIN; n],
+            community: vec![0; n],
+            num_comms: 1,
+            gt_community: vec![0; n],
+        }
+    }
+
+    #[test]
+    fn empty_neighbor_frontier_assembles() {
+        let ds = isolated_dataset(512);
+        let mut rng = Rng::new(8);
+        let roots: Vec<u32> = (0..16u32).collect();
+        let mfg = build_mfg(
+            &ds.csr, &ds.community, &roots, &[5, 5],
+            NeighborPolicy::Uniform, &mut rng,
+        );
+        let m = meta("sage", 5);
+        let b = assemble(&mfg, &ds, &m, true).unwrap();
+        // no neighbors anywhere: frontier is exactly the roots, and
+        // every aggregation weight is zero (no row sums to garbage)
+        assert_eq!(b.stats.input_nodes, roots.len());
+        assert_eq!(b.stats.level_sizes, vec![16, 16, 16]);
+        for lay in &b.layers {
+            assert!(lay.w.iter().all(|&x| x == 0.0));
+            assert!(lay.idx.iter().all(|&x| x == 0));
+        }
+        // labels/masks still line up with the roots
+        assert_eq!(b.lmask.iter().filter(|&&x| x > 0.0).count(), 16);
+        assert!(b.labels[..16].iter().all(|&l| l == 1));
+    }
+
+    #[test]
+    fn batch_smaller_than_pad_capacity_zero_pads() {
+        let ds = tiny_dataset();
+        let mut rng = Rng::new(9);
+        // 3 roots against a 64-root capacity
+        let roots: Vec<u32> = ds.train_nodes()[..3].to_vec();
+        let mfg = build_mfg(
+            &ds.csr, &ds.community, &roots, &[5, 5],
+            NeighborPolicy::Uniform, &mut rng,
+        );
+        let m = meta("sage", 5);
+        let b = assemble(&mfg, &ds, &m, true).unwrap();
+        assert_eq!(b.stats.level_sizes[2], 3);
+        assert_eq!(b.labels.len(), 64);
+        assert_eq!(b.lmask.len(), 64);
+        assert_eq!(b.lmask.iter().filter(|&&x| x > 0.0).count(), 3);
+        assert!(b.lmask[3..].iter().all(|&x| x == 0.0));
+        assert!(b.labels[3..].iter().all(|&l| l == 0));
+        // padded dst rows beyond the real ones stay all-zero
+        let lay = &b.layers[1];
+        for i in b.stats.level_sizes[2]..64 {
+            assert!(lay.w[i * 5..(i + 1) * 5].iter().all(|&x| x == 0.0));
+        }
+    }
+
+    #[test]
+    fn root_set_overflowing_capacity_errors_not_truncates() {
+        let ds = tiny_dataset();
+        let mut rng = Rng::new(10);
+        // 100 roots > the artifact's 64-root capacity
+        let roots: Vec<u32> = ds.train_nodes()[..100].to_vec();
+        let mfg = build_mfg(
+            &ds.csr, &ds.community, &roots, &[5, 5],
+            NeighborPolicy::Uniform, &mut rng,
+        );
+        let m = meta("sage", 5);
+        let err = assemble(&mfg, &ds, &m, true).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("cap"),
+            "error should name the violated capacity: {err:#}"
+        );
+    }
+
+    #[test]
+    fn staged_frontier_overflowing_cap0_errors() {
+        let ds = tiny_dataset();
+        let mut rng = Rng::new(11);
+        let roots: Vec<u32> = ds.train_nodes()[..64].to_vec();
+        let mfg = build_mfg(
+            &ds.csr, &ds.community, &roots, &[5, 5],
+            NeighborPolicy::Uniform, &mut rng,
+        );
+        let mut m = meta("sage", 5);
+        m.spec.feat_mode = "staged".into();
+        m.spec.node_caps[0] = 4; // absurdly small staging buffer
+        let err = assemble(&mfg, &ds, &m, true).unwrap_err();
+        assert!(format!("{err:#}").contains("cap0"), "{err:#}");
+    }
+
     #[test]
     fn staged_mode_gathers_x0() {
         let ds = tiny_dataset();

@@ -1,8 +1,16 @@
-//! Set-associative LRU cache model (GPU L2 stand-in).
+//! Set-associative true-LRU machinery.
 //!
-//! Addresses are byte addresses; the simulator tracks tags per set with
-//! true-LRU replacement. Feature-row accesses are expanded into line
-//! accesses by the caller (a 128-float row = 4 lines of 128B).
+//! Two layers:
+//!
+//! * [`SetAssocCore`] — the reusable tag/stamp core (sets × ways,
+//!   true-LRU replacement, no payload). It backs both the
+//!   statistics-only L2 model below and the *functional* sharded
+//!   feature cache on the serving hot path
+//!   ([`crate::serve::cache::ShardedFeatureCache`]), which attaches a
+//!   payload slab to the core's slot indices.
+//! * [`SetAssocCache`] — the GPU-L2 stand-in used by the evaluation:
+//!   addresses are byte addresses, expanded into line accesses by the
+//!   caller (a 128-float row = 4 lines of 128B).
 
 #[derive(Clone, Debug)]
 pub struct CacheConfig {
@@ -22,14 +30,102 @@ impl CacheConfig {
     }
 }
 
-pub struct SetAssocCache {
-    cfg: CacheConfig,
+/// Result of one [`SetAssocCore::probe`].
+#[derive(Clone, Copy, Debug)]
+pub struct Probe {
+    /// Flat slot index (`set * ways + way`) the key now occupies;
+    /// payload-carrying callers index their slab with this.
+    pub slot: usize,
+    pub hit: bool,
+    /// Key evicted to make room (miss with a valid victim only).
+    pub evicted: Option<u64>,
+}
+
+/// Reusable set-associative true-LRU core: tags and LRU stamps only.
+///
+/// Keys are arbitrary `u64`s except `u64::MAX` (the invalid sentinel);
+/// both users key by values far below that (cache-line numbers, node
+/// ids). A mixer spreads power-of-two-strided keys over sets.
+pub struct SetAssocCore {
     sets: usize,
+    ways: usize,
     /// tags[set * ways + way]; u64::MAX = invalid
     tags: Vec<u64>,
     /// LRU stamps, same layout
     stamp: Vec<u64>,
     clock: u64,
+}
+
+#[inline]
+fn mix(key: u64) -> u64 {
+    let mut h = key;
+    h ^= h >> 33;
+    h = h.wrapping_mul(0xff51afd7ed558ccd);
+    h ^= h >> 33;
+    h
+}
+
+impl SetAssocCore {
+    pub fn new(sets: usize, ways: usize) -> SetAssocCore {
+        let sets = sets.max(1);
+        let ways = ways.max(1);
+        SetAssocCore {
+            sets,
+            ways,
+            tags: vec![u64::MAX; sets * ways],
+            stamp: vec![0; sets * ways],
+            clock: 0,
+        }
+    }
+
+    pub fn sets(&self) -> usize {
+        self.sets
+    }
+
+    pub fn ways(&self) -> usize {
+        self.ways
+    }
+
+    /// Total slot count (`sets * ways`).
+    pub fn slots(&self) -> usize {
+        self.sets * self.ways
+    }
+
+    /// Look up `key`, inserting it (with true-LRU victim selection in
+    /// its set) on a miss.
+    #[inline]
+    pub fn probe(&mut self, key: u64) -> Probe {
+        debug_assert!(key != u64::MAX, "u64::MAX is the invalid-tag sentinel");
+        self.clock += 1;
+        let set = (mix(key) % self.sets as u64) as usize;
+        let base = set * self.ways;
+        let mut victim = base;
+        let mut oldest = u64::MAX;
+        for i in base..base + self.ways {
+            if self.tags[i] == key {
+                self.stamp[i] = self.clock;
+                return Probe { slot: i, hit: true, evicted: None };
+            }
+            if self.stamp[i] < oldest {
+                oldest = self.stamp[i];
+                victim = i;
+            }
+        }
+        let evicted = if self.tags[victim] == u64::MAX {
+            None
+        } else {
+            Some(self.tags[victim])
+        };
+        self.tags[victim] = key;
+        self.stamp[victim] = self.clock;
+        Probe { slot: victim, hit: false, evicted }
+    }
+}
+
+/// Statistics-only set-associative LRU cache model (GPU L2 stand-in).
+pub struct SetAssocCache {
+    cfg: CacheConfig,
+    core: SetAssocCore,
     pub hits: u64,
     pub misses: u64,
 }
@@ -40,10 +136,7 @@ impl SetAssocCache {
         let ways = cfg.ways.min(lines).max(1);
         let sets = (lines / ways).max(1);
         SetAssocCache {
-            sets,
-            tags: vec![u64::MAX; sets * ways],
-            stamp: vec![0; sets * ways],
-            clock: 0,
+            core: SetAssocCore::new(sets, ways),
             hits: 0,
             misses: 0,
             cfg: CacheConfig { ways, ..cfg },
@@ -52,33 +145,14 @@ impl SetAssocCache {
 
     #[inline]
     pub fn access(&mut self, byte_addr: u64) -> bool {
-        self.clock += 1;
         let line = byte_addr / self.cfg.line_bytes as u64;
-        // mix the line number so power-of-two strides spread over sets
-        let mut h = line;
-        h ^= h >> 33;
-        h = h.wrapping_mul(0xff51afd7ed558ccd);
-        h ^= h >> 33;
-        let set = (h % self.sets as u64) as usize;
-        let base = set * self.cfg.ways;
-        let ways = self.cfg.ways;
-        let mut victim = base;
-        let mut oldest = u64::MAX;
-        for i in base..base + ways {
-            if self.tags[i] == line {
-                self.stamp[i] = self.clock;
-                self.hits += 1;
-                return true;
-            }
-            if self.stamp[i] < oldest {
-                oldest = self.stamp[i];
-                victim = i;
-            }
+        let p = self.core.probe(line);
+        if p.hit {
+            self.hits += 1;
+        } else {
+            self.misses += 1;
         }
-        self.tags[victim] = line;
-        self.stamp[victim] = self.clock;
-        self.misses += 1;
-        false
+        p.hit
     }
 
     /// Replay a feature-row access: row `node` of a `[n, feat_dim]` f32
@@ -182,5 +256,30 @@ mod tests {
             small.access_row(n, 16);
         }
         assert!(small.misses >= big.misses);
+    }
+
+    #[test]
+    fn core_fully_associative_is_exact_lru() {
+        // sets=1 => stamps implement exact LRU over all slots
+        let mut core = SetAssocCore::new(1, 2);
+        assert!(!core.probe(10).hit);
+        assert!(!core.probe(20).hit);
+        assert!(core.probe(10).hit); // 10 now MRU
+        let p = core.probe(30); // evicts 20 (LRU)
+        assert!(!p.hit);
+        assert_eq!(p.evicted, Some(20));
+        assert!(core.probe(10).hit);
+        assert!(!core.probe(20).hit); // 20 gone
+    }
+
+    #[test]
+    fn core_slot_stable_across_hits() {
+        let mut core = SetAssocCore::new(4, 4);
+        let a = core.probe(123);
+        assert!(!a.hit);
+        let b = core.probe(123);
+        assert!(b.hit);
+        assert_eq!(a.slot, b.slot);
+        assert!(a.slot < core.slots());
     }
 }

@@ -19,6 +19,6 @@ pub mod lru;
 pub mod swcache;
 pub mod timemodel;
 
-pub use lru::SetAssocCache;
+pub use lru::{SetAssocCache, SetAssocCore};
 pub use swcache::SoftwareCache;
 pub use timemodel::{DeviceModel, EpochCost};

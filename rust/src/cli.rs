@@ -4,6 +4,7 @@
 //! * `gen-data [preset...]` — materialize the synthetic datasets
 //! * `smoke`                — end-to-end vertical-slice check (tiny)
 //! * `train`                — train one configuration
+//! * `serve bench`          — closed-loop online-inference benchmark
 //! * `exp <id>`             — regenerate a paper table/figure
 //! * `bench-epoch`          — per-epoch timing for one configuration
 //! * `inspect <preset>`     — dataset statistics
@@ -85,6 +86,7 @@ pub fn cli_main() -> Result<()> {
         "smoke" => cmd_smoke(&args),
         "train" => cmd_train(&args),
         "inspect" => cmd_inspect(&args),
+        "serve" => cmd_serve(&args),
         "exp" => crate::exp::run(&args),
         "help" | _ => {
             print_help();
@@ -106,10 +108,17 @@ COMMANDS:
                            roots=rand|norand|mix0|mix12.5|mix25|mix50
                            p=0.5..1.0  epochs=N  batch=N  seed=N  lr=F
   inspect <preset>       print dataset statistics
+  serve bench [preset]   closed-loop online-inference benchmark
+                           p=0..1 (community-bias knob)  batch=N
+                           clients=N  requests=N (per client)
+                           delay_ms=F  deadline_ms=F  zipf=F
+                           workers=N  cache_rows=N  shards=N  seed=N
+                           (uses the PJRT infer artifact when present,
+                            a no-op executor otherwise)
   exp <id>               regenerate a paper artifact into results/
                            ids: fig2 fig5 fig6 fig7 fig8 fig9 fig10
                                 tab3 tab4 tab5 fullbatch inference
-                                preproc ablation autotune all
+                                preproc ablation autotune serve all
   help                   this message
 
 Presets: {}",
@@ -229,6 +238,56 @@ fn cmd_smoke(_args: &Args) -> Result<()> {
         bail!("smoke: loss did not decrease");
     }
     println!("smoke OK");
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let sub = args.pos.first().map(String::as_str).unwrap_or("bench");
+    match sub {
+        "bench" => cmd_serve_bench(args),
+        other => bail!("unknown serve subcommand {other:?} (try: serve bench)"),
+    }
+}
+
+fn cmd_serve_bench(args: &Args) -> Result<()> {
+    use crate::serve::{engine, LoadConfig, ServeConfig};
+
+    let name = args.pos.get(1).map(String::as_str).unwrap_or("tiny");
+    let p = preset(name).with_context(|| format!("unknown preset {name}"))?;
+    let ds = crate::train::dataset::load_or_build(&p, true)?;
+
+    let defaults = ServeConfig::for_dataset(&ds);
+    let scfg = ServeConfig {
+        batch_size: args.get_usize("batch", defaults.batch_size)?,
+        max_delay_us: (args.get_f64("delay_ms", 2.0)? * 1e3) as u64,
+        deadline_us: (args.get_f64("deadline_ms", 50.0)? * 1e3) as u64,
+        community_bias: args.get_f64("p", defaults.community_bias)?,
+        workers: args.get_usize("workers", defaults.workers)?,
+        queue_cap: args.get_usize("queue", defaults.queue_cap)?,
+        cache_rows: args.get_usize("cache_rows", defaults.cache_rows)?,
+        cache_shards: args.get_usize("shards", defaults.cache_shards)?,
+        fanouts: defaults.fanouts,
+        seed: args.get_u64("seed", 0)?,
+    };
+    if !(0.0..=1.0).contains(&scfg.community_bias) {
+        bail!("p must be in [0, 1], got {}", scfg.community_bias);
+    }
+    let lcfg = LoadConfig {
+        clients: args.get_usize("clients", 8)?,
+        requests_per_client: args.get_usize("requests", 64)?,
+        zipf_s: args.get_f64("zipf", 1.1)?,
+        seed: scfg.seed ^ 0x10AD,
+    };
+
+    let (exec, meta) = engine::build_executor(&p, &ds, &scfg);
+    let report = engine::run(&ds, &meta, exec.as_ref(), &scfg, &lcfg)?;
+    println!("{}", report.summary());
+    let json = report.to_json().to_string_pretty();
+    println!("{json}");
+    std::fs::create_dir_all("results").ok();
+    std::fs::write("results/serve_bench.json", &json)
+        .context("writing results/serve_bench.json")?;
+    println!("[serve] wrote results/serve_bench.json");
     Ok(())
 }
 

@@ -17,6 +17,7 @@ pub mod fig9;
 pub mod fullbatch;
 pub mod inference;
 pub mod preproc;
+pub mod serve;
 pub mod tab3;
 pub mod tab4;
 pub mod tab5;
@@ -28,6 +29,11 @@ use common::Ctx;
 
 pub fn run(args: &Args) -> Result<()> {
     let id = args.pos.first().map(|s| s.as_str()).unwrap_or("");
+    // the serving sweep needs no PJRT session (it falls back to the
+    // no-op executor), so dispatch it before Ctx loads the manifest
+    if id == "serve" {
+        return serve::run(args);
+    }
     let mut ctx = Ctx::new()?;
     match id {
         "fig2" => fig2::run(&mut ctx),

@@ -1,0 +1,77 @@
+//! Serving-knob sweep: the online-inference analogue of the paper's
+//! training figures. Replays the same Zipf closed-loop trace against
+//! the serving engine for community-bias `p ∈ {0, 0.5, 1}` and tabulates
+//! throughput, tail latency and feature-cache hit rate — the quantity
+//! the knob exists to move.
+//!
+//! Unlike the training experiments this needs no PJRT session: it uses
+//! the compiled infer artifact when available and the no-op executor
+//! otherwise, so `comm-rand exp serve` runs in artifact-less
+//! environments too.
+
+use anyhow::Result;
+
+use crate::cli::Args;
+use crate::config::preset;
+use crate::serve::{engine, LoadConfig, ServeConfig};
+use crate::util::json::Json;
+
+use super::common::{f2, pct, quick, write_results, Table};
+
+pub fn run(args: &Args) -> Result<()> {
+    let name = args.pos.get(1).map(String::as_str).unwrap_or("tiny");
+    let p = preset(name)
+        .ok_or_else(|| anyhow::anyhow!("unknown preset {name}"))?;
+    let ds = crate::train::dataset::load_or_build(&p, true)?;
+
+    let mut scfg = ServeConfig::for_dataset(&ds);
+    scfg.batch_size = args.get_usize("batch", 32)?;
+    scfg.seed = args.get_u64("seed", 0)?;
+    let lcfg = LoadConfig {
+        clients: args.get_usize("clients", 8)?,
+        requests_per_client: args
+            .get_usize("requests", if quick() { 40 } else { 200 })?,
+        zipf_s: args.get_f64("zipf", 1.1)?,
+        seed: scfg.seed ^ 0x10AD,
+    };
+    let (exec, meta) = engine::build_executor(&p, &ds, &scfg);
+
+    let mut table = Table::new(&[
+        "p",
+        "req/s",
+        "p50 ms",
+        "p95 ms",
+        "p99 ms",
+        "cache hit",
+        "req/batch",
+    ]);
+    let mut rows = Vec::new();
+    for bias in [0.0, 0.5, 1.0] {
+        let cfg = ServeConfig { community_bias: bias, ..scfg.clone() };
+        let rep = engine::run(&ds, &meta, exec.as_ref(), &cfg, &lcfg)?;
+        println!("{}", rep.summary());
+        table.row(vec![
+            f2(bias),
+            format!("{:.0}", rep.throughput_rps),
+            f2(rep.lat_p50_ms),
+            f2(rep.lat_p95_ms),
+            f2(rep.lat_p99_ms),
+            pct(rep.cache_hit_rate),
+            f2(rep.mean_batch_size),
+        ]);
+        rows.push(rep.to_json());
+    }
+
+    let md = format!(
+        "# Online serving — community-bias knob sweep ({name})\n\n\
+         Closed loop: {} clients x {} requests, zipf {}, batch cap {}, \
+         executor `{}`.\n\n{}",
+        lcfg.clients,
+        lcfg.requests_per_client,
+        lcfg.zipf_s,
+        scfg.batch_size,
+        exec.name(),
+        table.to_markdown()
+    );
+    write_results("serve", &md, &Json::Arr(rows))
+}

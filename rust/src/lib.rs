@@ -20,6 +20,21 @@
 //! Python never runs on the training path: the rust binary loads
 //! `artifacts/*.hlo.txt` through the PJRT C API (`xla` crate) and drives
 //! every epoch itself.
+//!
+//! # Online serving ([`serve`])
+//!
+//! Beyond the offline reproduction, [`serve`] turns the stack into an
+//! online inference server: a bounded request queue feeds a dynamic
+//! micro-batcher whose **community-bias knob `p ∈ [0, 1]`** interpolates
+//! between pure-FIFO coalescing (`p = 0`) and pure community-grouped
+//! coalescing (`p = 1`); a worker pool samples each micro-batch's MFG,
+//! stages features through a *functional* `Arc`-sharded LRU feature
+//! cache (the same set-associative core as the cache simulator, now
+//! carrying payload), and drives the PJRT infer executable — or a
+//! no-op executor when AOT artifacts are absent. `comm-rand serve
+//! bench` replays a Zipf-skewed closed-loop trace and reports
+//! throughput plus p50/p95/p99 latency and feature-cache hit rate as
+//! JSON; `comm-rand exp serve` sweeps `p` into a paper-style table.
 
 pub mod batch;
 pub mod cachesim;
@@ -29,6 +44,7 @@ pub mod exp;
 pub mod graph;
 pub mod runtime;
 pub mod sampler;
+pub mod serve;
 pub mod train;
 pub mod util;
 

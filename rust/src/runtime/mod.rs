@@ -9,4 +9,4 @@ pub mod step;
 
 pub use artifact::{ArtifactMeta, IoSpec, Manifest};
 pub use pjrt::{Executable, Runtime};
-pub use step::{FullBatchState, TrainState};
+pub use step::{FullBatchState, InferState, TrainState};

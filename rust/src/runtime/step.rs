@@ -98,64 +98,6 @@ impl TrainState {
         })
     }
 
-    fn push_batch_inputs(
-        &self,
-        meta: &ArtifactMeta,
-        batch: &PaddedBatch,
-        args: &mut Vec<xla::PjRtBuffer>,
-        start: usize,
-    ) -> Result<()> {
-        let client = &self.rt_client;
-        for spec in &meta.inputs[start..] {
-            let name = spec.name.as_str();
-            let buf = if name == "x0" {
-                let x0 = batch.x0.as_ref().context("batch lacks x0")?;
-                client
-                    .buffer_from_host_buffer(x0, &spec.shape, None)
-                    .map_err(|e| anyhow::anyhow!("{name}: {e:?}"))?
-            } else if let Some(rest) = name.strip_prefix("idx_") {
-                let l: usize = rest.parse()?;
-                client
-                    .buffer_from_host_buffer(
-                        &batch.layers[l - 1].idx,
-                        &spec.shape,
-                        None,
-                    )
-                    .map_err(|e| anyhow::anyhow!("{name}: {e:?}"))?
-            } else if let Some(rest) = name.strip_prefix("w_") {
-                let l: usize = rest.parse()?;
-                client
-                    .buffer_from_host_buffer(
-                        &batch.layers[l - 1].w,
-                        &spec.shape,
-                        None,
-                    )
-                    .map_err(|e| anyhow::anyhow!("{name}: {e:?}"))?
-            } else if let Some(rest) = name.strip_prefix("self_") {
-                let l: usize = rest.parse()?;
-                client
-                    .buffer_from_host_buffer(
-                        &batch.layers[l - 1].self_idx,
-                        &spec.shape,
-                        None,
-                    )
-                    .map_err(|e| anyhow::anyhow!("{name}: {e:?}"))?
-            } else if name == "labels" {
-                client
-                    .buffer_from_host_buffer(&batch.labels, &spec.shape, None)
-                    .map_err(|e| anyhow::anyhow!("{name}: {e:?}"))?
-            } else if name == "lmask" {
-                client
-                    .buffer_from_host_buffer(&batch.lmask, &spec.shape, None)
-                    .map_err(|e| anyhow::anyhow!("{name}: {e:?}"))?
-            } else {
-                bail!("unhandled input {name} in {}", meta.name);
-            };
-            args.push(buf);
-        }
-        Ok(())
-    }
-
     /// Execute one training step on a padded batch.
     pub fn step(&mut self, batch: &PaddedBatch) -> Result<StepOut> {
         self.t += 1;
@@ -190,10 +132,10 @@ impl TrainState {
         if self.x_full.is_some() {
             start += 1;
         }
-        self.push_batch_inputs(&meta, batch, &mut args, start)?;
+        push_batch_inputs(&client, &meta, batch, &mut args, start)?;
 
         // interleave: args[..3np+2], x_full?, args[3np+2..]
-        let refs = self.arg_refs(&args, 3 * np + 2);
+        let refs = interleave_refs(&args, self.x_full.as_ref(), 3 * np + 2);
         let outs = self.exe.run(&refs)?;
         // outputs: params', m', v', loss, correct
         for i in 0..np {
@@ -207,47 +149,212 @@ impl TrainState {
         })
     }
 
-    /// Interleave owned per-step buffers with the resident feature
-    /// table at position `split`.
-    fn arg_refs<'a>(
-        &'a self,
-        own: &'a [xla::PjRtBuffer],
-        split: usize,
-    ) -> Vec<&'a xla::PjRtBuffer> {
-        let mut refs: Vec<&xla::PjRtBuffer> = Vec::with_capacity(own.len() + 1);
-        let split = split.min(own.len());
-        refs.extend(own[..split].iter());
-        if let Some(xf) = &self.x_full {
-            refs.push(xf);
-        }
-        refs.extend(own[split..].iter());
-        refs
-    }
-
     /// Run the inference artifact on a batch; returns logits
     /// `[batch_cap * num_classes]`.
     pub fn infer(&self, batch: &PaddedBatch) -> Result<Vec<f32>> {
         let infer = self.infer.as_ref().context("no infer artifact loaded")?;
-        let meta = infer.meta.clone();
-        let np = self.params.len();
-        let client = self.rt_client.clone();
-        let mut args: Vec<xla::PjRtBuffer> = Vec::with_capacity(meta.inputs.len());
-        for (i, spec) in meta.inputs.iter().take(np).enumerate() {
-            args.push(
-                client
-                    .buffer_from_host_buffer(&self.params[i], &spec.shape, None)
-                    .map_err(|e| anyhow::anyhow!("param upload: {e:?}"))?,
-            );
-        }
-        let mut start = np;
-        if self.x_full.is_some() {
-            start += 1;
-        }
-        self.push_batch_inputs(&meta, batch, &mut args, start)?;
-        let refs = self.arg_refs(&args, np);
-        let outs = infer.run(&refs)?;
-        Ok(outs[0].f32()?.to_vec())
+        run_infer(
+            infer,
+            &self.rt_client,
+            &self.params,
+            self.x_full.as_ref(),
+            batch,
+        )
     }
+}
+
+/// Inference-only state over a `<name>.infer` artifact: parameters +
+/// the (optional) resident feature table, with no optimizer moments.
+/// This is what the online serving path
+/// ([`crate::serve::worker::PjrtExecutor`]) drives; a fresh state
+/// carries seed-initialized parameters and [`InferState::set_params`]
+/// installs trained ones.
+pub struct InferState {
+    pub exe: Executable,
+    pub params: Vec<Vec<f32>>,
+    /// Device-resident full feature table (resident mode).
+    x_full: Option<xla::PjRtBuffer>,
+    rt_client: xla::PjRtClient,
+}
+
+impl InferState {
+    /// Compile the infer artifact, initialize parameters from `seed`
+    /// (same stream as [`TrainState::new`], so equal seeds produce the
+    /// same initial model) and upload the resident feature table if the
+    /// artifact wants one.
+    pub fn new(
+        rt: &Runtime,
+        infer_meta: &ArtifactMeta,
+        ds: Option<&Dataset>,
+        seed: u64,
+    ) -> Result<InferState> {
+        let exe = rt.load(infer_meta)?;
+        let mut rng = Rng::new(seed ^ 0x9a27_11f3);
+        let params: Vec<Vec<f32>> = infer_meta
+            .param_specs()
+            .iter()
+            .map(|s| init_param(&s.shape, &mut rng))
+            .collect();
+        let x_full = if infer_meta.spec.feat_mode == "resident" {
+            let ds = ds.context("resident artifact needs a dataset")?;
+            let nv = infer_meta.spec.num_nodes;
+            let f = infer_meta.spec.feat_dim;
+            if ds.n() != nv || ds.feat_dim != f {
+                bail!(
+                    "dataset {}x{} does not match artifact {}x{}",
+                    ds.n(),
+                    ds.feat_dim,
+                    nv,
+                    f
+                );
+            }
+            Some(rt.buf_f32(&ds.features, &[nv, f])?)
+        } else {
+            None
+        };
+        Ok(InferState {
+            exe,
+            params,
+            x_full,
+            rt_client: rt.client.clone(),
+        })
+    }
+
+    /// Install trained parameters (e.g. copied out of a [`TrainState`]).
+    pub fn set_params(&mut self, params: Vec<Vec<f32>>) -> Result<()> {
+        let want = self.exe.meta.num_params();
+        if params.len() != want {
+            bail!("artifact wants {want} params, got {}", params.len());
+        }
+        self.params = params;
+        Ok(())
+    }
+
+    /// Run inference on a batch; returns logits
+    /// `[batch_cap * num_classes]`.
+    pub fn infer(&self, batch: &PaddedBatch) -> Result<Vec<f32>> {
+        run_infer(
+            &self.exe,
+            &self.rt_client,
+            &self.params,
+            self.x_full.as_ref(),
+            batch,
+        )
+    }
+}
+
+/// Upload the per-batch inputs (`meta.inputs[start..]`) in artifact
+/// order; shared by the train step and both inference paths.
+fn push_batch_inputs(
+    client: &xla::PjRtClient,
+    meta: &ArtifactMeta,
+    batch: &PaddedBatch,
+    args: &mut Vec<xla::PjRtBuffer>,
+    start: usize,
+) -> Result<()> {
+    for spec in &meta.inputs[start..] {
+        let name = spec.name.as_str();
+        let buf = if name == "x0" {
+            let x0 = batch.x0.as_ref().context("batch lacks x0")?;
+            client
+                .buffer_from_host_buffer(x0, &spec.shape, None)
+                .map_err(|e| anyhow::anyhow!("{name}: {e:?}"))?
+        } else if let Some(rest) = name.strip_prefix("idx_") {
+            let l: usize = rest.parse()?;
+            client
+                .buffer_from_host_buffer(
+                    &batch.layers[l - 1].idx,
+                    &spec.shape,
+                    None,
+                )
+                .map_err(|e| anyhow::anyhow!("{name}: {e:?}"))?
+        } else if let Some(rest) = name.strip_prefix("w_") {
+            let l: usize = rest.parse()?;
+            client
+                .buffer_from_host_buffer(
+                    &batch.layers[l - 1].w,
+                    &spec.shape,
+                    None,
+                )
+                .map_err(|e| anyhow::anyhow!("{name}: {e:?}"))?
+        } else if let Some(rest) = name.strip_prefix("self_") {
+            let l: usize = rest.parse()?;
+            client
+                .buffer_from_host_buffer(
+                    &batch.layers[l - 1].self_idx,
+                    &spec.shape,
+                    None,
+                )
+                .map_err(|e| anyhow::anyhow!("{name}: {e:?}"))?
+        } else if name == "labels" {
+            client
+                .buffer_from_host_buffer(&batch.labels, &spec.shape, None)
+                .map_err(|e| anyhow::anyhow!("{name}: {e:?}"))?
+        } else if name == "lmask" {
+            client
+                .buffer_from_host_buffer(&batch.lmask, &spec.shape, None)
+                .map_err(|e| anyhow::anyhow!("{name}: {e:?}"))?
+        } else {
+            bail!("unhandled input {name} in {}", meta.name);
+        };
+        args.push(buf);
+    }
+    Ok(())
+}
+
+/// Interleave owned per-step buffers with the (optional) resident
+/// feature table at position `split`.
+fn interleave_refs<'a>(
+    own: &'a [xla::PjRtBuffer],
+    resident: Option<&'a xla::PjRtBuffer>,
+    split: usize,
+) -> Vec<&'a xla::PjRtBuffer> {
+    let mut refs: Vec<&xla::PjRtBuffer> = Vec::with_capacity(own.len() + 1);
+    let split = split.min(own.len());
+    refs.extend(own[..split].iter());
+    if let Some(xf) = resident {
+        refs.push(xf);
+    }
+    refs.extend(own[split..].iter());
+    refs
+}
+
+/// Run an infer executable: upload `params`, splice in the resident
+/// feature table, push the batch inputs, execute, return logits
+/// `[batch_cap * num_classes]`. Shared by [`TrainState::infer`]
+/// (validation) and [`InferState::infer`] (serving).
+fn run_infer(
+    exe: &Executable,
+    client: &xla::PjRtClient,
+    params: &[Vec<f32>],
+    x_full: Option<&xla::PjRtBuffer>,
+    batch: &PaddedBatch,
+) -> Result<Vec<f32>> {
+    let meta = exe.meta.clone();
+    let np = meta.num_params();
+    if params.len() != np {
+        bail!(
+            "artifact {} wants {np} params, state holds {}",
+            meta.name,
+            params.len()
+        );
+    }
+    let mut args: Vec<xla::PjRtBuffer> = Vec::with_capacity(meta.inputs.len());
+    for (i, spec) in meta.inputs.iter().take(np).enumerate() {
+        args.push(
+            client
+                .buffer_from_host_buffer(&params[i], &spec.shape, None)
+                .map_err(|e| anyhow::anyhow!("param upload: {e:?}"))?,
+        );
+    }
+    let mut start = np;
+    if x_full.is_some() {
+        start += 1;
+    }
+    push_batch_inputs(client, &meta, batch, &mut args, start)?;
+    let refs = interleave_refs(&args, x_full, np);
+    let outs = exe.run(&refs)?;
+    Ok(outs[0].f32()?.to_vec())
 }
 
 /// Full-batch GCN training state (`<name>_fb.train` artifacts).

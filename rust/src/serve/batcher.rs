@@ -1,0 +1,278 @@
+//! Dynamic micro-batcher: coalesces queued requests into batches under
+//! a latency budget, with a COMM-RAND-style community-bias knob.
+//!
+//! Pure, clock-injected logic (no threads, no `Instant`): the engine's
+//! batcher thread feeds it wall time, unit tests feed it synthetic
+//! time. A batch forms when either
+//!
+//! * enough requests are pending (`batch_size`), or
+//! * some request reaches its *flush point*
+//!   `min(arrive + max_delay, deadline)` — so a lone request is flushed
+//!   at its deadline, never starved.
+//!
+//! Batch membership is where the knob `p` acts: overdue requests are
+//! always taken (deadlines dominate), then remaining slots are filled
+//! by drawing per slot — with probability `p` the next pending request
+//! from the *seed community* (the oldest member's community), otherwise
+//! the global FIFO head. `p = 0` degenerates to pure FIFO; `p = 1`
+//! admits only seed-community requests and sends a short batch rather
+//! than mix communities.
+
+use std::collections::VecDeque;
+
+use crate::util::rng::Rng;
+
+use super::Request;
+
+#[derive(Clone, Debug)]
+pub struct BatcherConfig {
+    /// Maximum requests per micro-batch (≤ the artifact's batch cap).
+    pub batch_size: usize,
+    /// Coalescing budget: a request waits at most this long before its
+    /// batch is flushed, deadline permitting.
+    pub max_delay_us: u64,
+    /// Community-bias knob `p ∈ [0, 1]`.
+    pub community_bias: f64,
+}
+
+pub struct MicroBatcher {
+    cfg: BatcherConfig,
+    /// Arrival (FIFO) order.
+    pending: VecDeque<Request>,
+    rng: Rng,
+}
+
+impl MicroBatcher {
+    pub fn new(cfg: BatcherConfig, seed: u64) -> MicroBatcher {
+        MicroBatcher {
+            cfg,
+            pending: VecDeque::new(),
+            rng: Rng::new(seed ^ 0xBA7C_4E5A),
+        }
+    }
+
+    pub fn push(&mut self, r: Request) {
+        self.pending.push_back(r);
+    }
+
+    pub fn len(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pending.is_empty()
+    }
+
+    fn flush_at(&self, r: &Request) -> u64 {
+        (r.arrive_us.saturating_add(self.cfg.max_delay_us)).min(r.deadline_us)
+    }
+
+    /// Earliest time at which [`MicroBatcher::poll`] must run again
+    /// (None when nothing is pending).
+    pub fn next_flush_us(&self) -> Option<u64> {
+        self.pending.iter().map(|r| self.flush_at(r)).min()
+    }
+
+    /// Form the next micro-batch if one is due at `now_us`; `community`
+    /// maps node id → community id.
+    pub fn poll(&mut self, now_us: u64, community: &[u32]) -> Option<Vec<Request>> {
+        if self.pending.is_empty() {
+            return None;
+        }
+        let overdue = self.pending.iter().any(|r| self.flush_at(r) <= now_us);
+        if !overdue && self.pending.len() < self.cfg.batch_size.max(1) {
+            return None;
+        }
+        Some(self.form_batch(now_us, community))
+    }
+
+    fn form_batch(&mut self, now_us: u64, community: &[u32]) -> Vec<Request> {
+        let cap = self.cfg.batch_size.max(1);
+        let mut batch: Vec<Request> = Vec::with_capacity(cap);
+
+        // 1. every overdue request rides, FIFO order, up to capacity —
+        //    the community knob never delays a request past its flush
+        //    point.
+        let mut i = 0;
+        while i < self.pending.len() && batch.len() < cap {
+            if self.flush_at(&self.pending[i]) <= now_us {
+                batch.push(self.pending.remove(i).unwrap());
+            } else {
+                i += 1;
+            }
+        }
+
+        // 2. seed community = the oldest member's (or, for a pure
+        //    size-triggered flush, the FIFO head's).
+        let seed_node = batch
+            .first()
+            .map(|r| r.node)
+            .or_else(|| self.pending.front().map(|r| r.node));
+        let seed_comm = match seed_node {
+            Some(v) => community[v as usize],
+            None => return batch,
+        };
+        if batch.is_empty() {
+            batch.push(self.pending.pop_front().unwrap());
+        }
+
+        // 3. fill remaining slots with bias p toward the seed community.
+        while batch.len() < cap && !self.pending.is_empty() {
+            let prefer_same = self.rng.f64() < self.cfg.community_bias;
+            let pick = if prefer_same {
+                self.pending
+                    .iter()
+                    .position(|r| community[r.node as usize] == seed_comm)
+            } else {
+                Some(0)
+            };
+            match pick {
+                Some(k) => batch.push(self.pending.remove(k).unwrap()),
+                // no same-community request pending: at p = 1 keep the
+                // batch pure (short batch), otherwise fall back to FIFO
+                None if self.cfg.community_bias >= 1.0 => break,
+                None => batch.push(self.pending.pop_front().unwrap()),
+            }
+        }
+        batch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+
+    fn req(id: u64, node: u32, arrive_us: u64, deadline_us: u64) -> Request {
+        // the batcher never sends on `reply`; a dropped receiver is fine
+        let (tx, _rx) = mpsc::channel();
+        Request { id, node, arrive_us, deadline_us, reply: tx }
+    }
+
+    fn ids(batch: &[Request]) -> Vec<u64> {
+        batch.iter().map(|r| r.id).collect()
+    }
+
+    #[test]
+    fn lone_request_flushes_at_deadline_not_before() {
+        let mut mb = MicroBatcher::new(
+            BatcherConfig {
+                batch_size: 8,
+                max_delay_us: 10_000,
+                community_bias: 1.0,
+            },
+            1,
+        );
+        let comm = vec![0u32; 4];
+        // deadline (5ms) earlier than arrive+max_delay (10ms)
+        mb.push(req(1, 0, 0, 5_000));
+        assert!(mb.poll(4_999, &comm).is_none(), "flushed early");
+        let b = mb.poll(5_000, &comm).expect("must flush at deadline");
+        assert_eq!(ids(&b), vec![1]);
+        assert!(mb.is_empty());
+    }
+
+    #[test]
+    fn lone_request_flushes_after_max_delay() {
+        let mut mb = MicroBatcher::new(
+            BatcherConfig {
+                batch_size: 8,
+                max_delay_us: 2_000,
+                community_bias: 0.5,
+            },
+            1,
+        );
+        let comm = vec![0u32; 4];
+        mb.push(req(7, 2, 1_000, 1_000_000));
+        assert_eq!(mb.next_flush_us(), Some(3_000));
+        assert!(mb.poll(2_999, &comm).is_none());
+        assert_eq!(ids(&mb.poll(3_000, &comm).unwrap()), vec![7]);
+    }
+
+    #[test]
+    fn p0_is_pure_fifo() {
+        let mut mb = MicroBatcher::new(
+            BatcherConfig {
+                batch_size: 3,
+                max_delay_us: 1_000_000,
+                community_bias: 0.0,
+            },
+            1,
+        );
+        let comm = vec![0, 1, 0, 1, 0];
+        for (id, node) in [(1, 0u32), (2, 1), (3, 2), (4, 3), (5, 4)] {
+            mb.push(req(id, node, 0, 1_000_000));
+        }
+        // size-triggered flush, FIFO membership and order
+        let b = mb.poll(1, &comm).unwrap();
+        assert_eq!(ids(&b), vec![1, 2, 3]);
+        assert_eq!(mb.len(), 2);
+    }
+
+    #[test]
+    fn p1_groups_by_community_and_stays_pure() {
+        let mut mb = MicroBatcher::new(
+            BatcherConfig {
+                batch_size: 3,
+                max_delay_us: 1_000_000,
+                community_bias: 1.0,
+            },
+            1,
+        );
+        let comm = vec![0, 1, 0, 1, 0];
+        // nodes 0,1,2,3 pending: communities 0,1,0,1
+        for (id, node) in [(1, 0u32), (2, 1), (3, 2), (4, 3)] {
+            mb.push(req(id, node, 0, 1_000_000));
+        }
+        let b = mb.poll(1, &comm).unwrap();
+        // seed = id 1 (comm 0); only id 3 shares the community; the
+        // batch stays pure rather than filling with community 1
+        assert_eq!(ids(&b), vec![1, 3]);
+        assert_eq!(mb.len(), 2);
+    }
+
+    #[test]
+    fn overdue_requests_ride_regardless_of_community() {
+        let mut mb = MicroBatcher::new(
+            BatcherConfig {
+                batch_size: 4,
+                max_delay_us: 1_000,
+                community_bias: 1.0,
+            },
+            1,
+        );
+        let comm = vec![0, 1, 2, 3];
+        mb.push(req(1, 0, 0, 1_000_000)); // flush at 1_000
+        mb.push(req(2, 1, 0, 1_000_000)); // flush at 1_000, other comm
+        let b = mb.poll(1_000, &comm).unwrap();
+        assert_eq!(ids(&b), vec![1, 2], "deadlines dominate the knob");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let comm: Vec<u32> = (0..16u32).map(|v| v % 4).collect();
+        let run = |seed: u64| -> Vec<Vec<u64>> {
+            let mut mb = MicroBatcher::new(
+                BatcherConfig {
+                    batch_size: 4,
+                    max_delay_us: 10,
+                    community_bias: 0.5,
+                },
+                seed,
+            );
+            for id in 0..16u64 {
+                mb.push(req(id, (id as u32 * 5) % 16, 0, 1_000));
+            }
+            let mut out = Vec::new();
+            while let Some(b) = mb.poll(1_000, &comm) {
+                out.push(ids(&b));
+            }
+            out
+        };
+        assert_eq!(run(9), run(9));
+        // all 16 delivered exactly once
+        let mut all: Vec<u64> = run(9).into_iter().flatten().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..16).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,285 @@
+//! Functional sharded feature cache for the serving hot path.
+//!
+//! Unlike the statistics-only cache models in [`crate::cachesim`], this
+//! cache really stores feature rows: a hit copies the row out of the
+//! cache slab instead of reading the (large, cold) feature table. The
+//! set-associative true-LRU bookkeeping is the same
+//! [`SetAssocCore`](crate::cachesim::SetAssocCore) that backs the L2
+//! model — promoted here from simulator to data structure by attaching
+//! a payload slab indexed by the core's slot ids.
+//!
+//! Sharding: node id → shard (round-robin by id, so community-ordered
+//! ids spread evenly), one mutex per shard, `Arc`-shareable across the
+//! worker pool. Hit/miss counters live with each shard and aggregate
+//! into [`CacheStats`].
+
+use std::sync::Mutex;
+
+use crate::cachesim::SetAssocCore;
+
+#[derive(Clone, Debug)]
+pub struct FeatureCacheConfig {
+    /// Total feature rows cached across all shards.
+    pub rows: usize,
+    pub shards: usize,
+    /// Associativity within a shard (clamped to the shard's rows; a
+    /// shard with `ways == rows` is fully associative = exact LRU).
+    pub ways: usize,
+    pub feat_dim: usize,
+}
+
+impl FeatureCacheConfig {
+    /// Serving default: cache ~1/8 of the table in 8 shards, 8-way.
+    pub fn for_dataset(n: usize, feat_dim: usize) -> FeatureCacheConfig {
+        FeatureCacheConfig {
+            rows: (n / 8).max(64),
+            shards: 8,
+            ways: 8,
+            feat_dim,
+        }
+    }
+}
+
+struct Shard {
+    core: SetAssocCore,
+    /// `slots * feat_dim` payload, indexed by the core's slot ids.
+    slab: Vec<f32>,
+    hits: u64,
+    misses: u64,
+}
+
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl CacheStats {
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+pub struct ShardedFeatureCache {
+    shards: Vec<Mutex<Shard>>,
+    feat_dim: usize,
+}
+
+impl ShardedFeatureCache {
+    /// Geometry is rounded *up* to whole sets, so the effective
+    /// capacity is ≥ `cfg.rows` (never silently below the knob);
+    /// [`ShardedFeatureCache::rows`] reports the exact figure.
+    pub fn new(cfg: &FeatureCacheConfig) -> ShardedFeatureCache {
+        let n_shards = cfg.shards.max(1);
+        let rows_per_shard = cfg.rows.div_ceil(n_shards).max(1);
+        let ways = cfg.ways.clamp(1, rows_per_shard);
+        let sets = rows_per_shard.div_ceil(ways);
+        let shards = (0..n_shards)
+            .map(|_| {
+                let core = SetAssocCore::new(sets, ways);
+                let slab = vec![0f32; core.slots() * cfg.feat_dim];
+                Mutex::new(Shard { core, slab, hits: 0, misses: 0 })
+            })
+            .collect();
+        ShardedFeatureCache { shards, feat_dim: cfg.feat_dim }
+    }
+
+    pub fn feat_dim(&self) -> usize {
+        self.feat_dim
+    }
+
+    /// Effective total capacity in feature rows (all shards).
+    pub fn rows(&self) -> usize {
+        self.shards.len() * self.shards[0].lock().unwrap().core.slots()
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    #[inline]
+    fn shard_of(&self, node: u32) -> usize {
+        node as usize % self.shards.len()
+    }
+
+    /// Fetch `node`'s feature row into `dst`: on a hit the row comes
+    /// from the cache slab (the feature-table read is skipped); on a
+    /// miss `src` (the table row) is installed and copied through.
+    /// Returns whether it hit.
+    pub fn fetch(&self, node: u32, src: &[f32], dst: &mut [f32]) -> bool {
+        let f = self.feat_dim;
+        debug_assert_eq!(src.len(), f);
+        debug_assert_eq!(dst.len(), f);
+        let mut sh = self.shards[self.shard_of(node)].lock().unwrap();
+        let p = sh.core.probe(node as u64);
+        let off = p.slot * f;
+        if p.hit {
+            sh.hits += 1;
+            dst.copy_from_slice(&sh.slab[off..off + f]);
+            true
+        } else {
+            sh.misses += 1;
+            sh.slab[off..off + f].copy_from_slice(src);
+            dst.copy_from_slice(src);
+            false
+        }
+    }
+
+    /// Aggregate hit/miss counters over all shards.
+    pub fn stats(&self) -> CacheStats {
+        let mut s = CacheStats::default();
+        for sh in &self.shards {
+            let g = sh.lock().unwrap();
+            s.hits += g.hits;
+            s.misses += g.misses;
+        }
+        s
+    }
+
+    pub fn reset_counters(&self) {
+        for sh in &self.shards {
+            let mut g = sh.lock().unwrap();
+            g.hits = 0;
+            g.misses = 0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cachesim::SoftwareCache;
+    use crate::util::rng::Rng;
+
+    fn table(n: usize, f: usize) -> Vec<f32> {
+        (0..n * f).map(|i| i as f32).collect()
+    }
+
+    fn row(t: &[f32], v: u32, f: usize) -> &[f32] {
+        &t[v as usize * f..(v as usize + 1) * f]
+    }
+
+    #[test]
+    fn hit_returns_cached_row_contents() {
+        let f = 8;
+        let t = table(100, f);
+        let cache = ShardedFeatureCache::new(&FeatureCacheConfig {
+            rows: 32,
+            shards: 4,
+            ways: 8,
+            feat_dim: f,
+        });
+        let mut dst = vec![0f32; f];
+        assert!(!cache.fetch(5, row(&t, 5, f), &mut dst));
+        assert_eq!(dst, row(&t, 5, f));
+        let mut dst2 = vec![0f32; f];
+        assert!(cache.fetch(5, row(&t, 5, f), &mut dst2));
+        assert_eq!(dst2, row(&t, 5, f));
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses), (1, 1));
+    }
+
+    /// Acceptance check: with fully-associative shards, hit/miss
+    /// accounting matches a reference single-shard exact-LRU
+    /// ([`SoftwareCache`]) replayed per shard, request by request.
+    #[test]
+    fn sharded_accounting_matches_reference_lru() {
+        let f = 4;
+        let n = 500usize;
+        let shards = 4usize;
+        let rows_per_shard = 16usize;
+        let t = table(n, f);
+        let cache = ShardedFeatureCache::new(&FeatureCacheConfig {
+            rows: shards * rows_per_shard,
+            shards,
+            ways: rows_per_shard, // fully associative per shard
+            feat_dim: f,
+        });
+        let mut reference: Vec<SoftwareCache> = (0..shards)
+            .map(|_| SoftwareCache::new(rows_per_shard, n))
+            .collect();
+        let mut rng = Rng::new(42);
+        let mut dst = vec![0f32; f];
+        for step in 0..20_000 {
+            // skewed stream with locality bursts
+            let v = if step % 3 == 0 {
+                rng.usize_below(32) as u32
+            } else {
+                rng.usize_below(n) as u32
+            };
+            let want = reference[v as usize % shards].access(v);
+            let got = cache.fetch(v, row(&t, v, f), &mut dst);
+            assert_eq!(got, want, "step {step} node {v}");
+            assert_eq!(dst, row(&t, v, f), "payload corrupt at node {v}");
+        }
+        let s = cache.stats();
+        let ref_hits: u64 = reference.iter().map(|c| c.hits).sum();
+        let ref_misses: u64 = reference.iter().map(|c| c.misses).sum();
+        assert_eq!((s.hits, s.misses), (ref_hits, ref_misses));
+        assert!(s.hits > 0 && s.misses > 0);
+    }
+
+    #[test]
+    fn concurrent_fetches_are_consistent() {
+        let f = 8;
+        let n = 256usize;
+        let t = table(n, f);
+        let cache = ShardedFeatureCache::new(&FeatureCacheConfig {
+            rows: 64,
+            shards: 8,
+            ways: 8,
+            feat_dim: f,
+        });
+        std::thread::scope(|s| {
+            for tid in 0..4u64 {
+                let cache = &cache;
+                let t = &t;
+                s.spawn(move || {
+                    let mut rng = Rng::new(tid);
+                    let mut dst = vec![0f32; f];
+                    for _ in 0..5_000 {
+                        let v = rng.usize_below(n) as u32;
+                        cache.fetch(v, row(t, v, f), &mut dst);
+                        assert_eq!(dst, row(t, v, f));
+                    }
+                });
+            }
+        });
+        let s = cache.stats();
+        assert_eq!(s.hits + s.misses, 20_000);
+    }
+
+    #[test]
+    fn capacity_rounds_up_not_down() {
+        // 100 rows over 8 shards doesn't divide evenly; geometry must
+        // never deliver less capacity than the knob requested
+        let c = ShardedFeatureCache::new(&FeatureCacheConfig {
+            rows: 100,
+            shards: 8,
+            ways: 8,
+            feat_dim: 2,
+        });
+        assert!(c.rows() >= 100, "effective {} < requested 100", c.rows());
+    }
+
+    #[test]
+    fn reset_counters_clears_stats() {
+        let f = 2;
+        let t = table(10, f);
+        let cache = ShardedFeatureCache::new(&FeatureCacheConfig {
+            rows: 8,
+            shards: 2,
+            ways: 4,
+            feat_dim: f,
+        });
+        let mut dst = vec![0f32; f];
+        cache.fetch(1, row(&t, 1, f), &mut dst);
+        cache.reset_counters();
+        assert_eq!(cache.stats(), CacheStats::default());
+    }
+}

@@ -1,0 +1,504 @@
+//! Serving engine: wires queue → micro-batcher → worker pool →
+//! replies, drives the closed-loop load generator against it, and
+//! reports throughput + latency percentiles + feature-cache hit rate.
+//!
+//! Thread layout (all scoped, nothing outlives a run):
+//!
+//! * N client threads ([`super::loadgen`]) push Zipf-skewed requests
+//!   and block on their replies (closed loop);
+//! * 1 batcher thread drains the queue into a [`MicroBatcher`],
+//!   sleeping only until the earliest pending flush point;
+//! * `workers` worker threads consume formed batches from a bounded
+//!   channel and run sampling → cache staging → assembly → executor.
+
+use std::sync::mpsc::{sync_channel, Receiver};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::config::DatasetPreset;
+use crate::graph::Dataset;
+use crate::runtime::artifact::{default_dir, ArtifactMeta, Manifest, SpecMeta};
+use crate::runtime::{InferState, Runtime};
+use crate::util::json::{num, obj, s, Json};
+use crate::util::rng::Rng;
+use crate::util::stats::percentile;
+
+use super::batcher::{BatcherConfig, MicroBatcher};
+use super::cache::{FeatureCacheConfig, ShardedFeatureCache};
+use super::loadgen::{self, LoadConfig, ReqRecord};
+use super::queue::{Pop, RequestQueue};
+use super::worker::{
+    process_batch, InferExecutor, NullExecutor, PjrtExecutor, WorkerCtx,
+};
+use super::{Request, ServeClock};
+
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Max requests coalesced per micro-batch.
+    pub batch_size: usize,
+    /// Coalescing budget per request (µs).
+    pub max_delay_us: u64,
+    /// Per-request completion deadline (µs, from arrival).
+    pub deadline_us: u64,
+    /// Community-bias knob `p ∈ [0, 1]`.
+    pub community_bias: f64,
+    /// Worker threads running sampling + assembly + the executable.
+    pub workers: usize,
+    /// Bounded request-queue capacity (backpressure bound).
+    pub queue_cap: usize,
+    /// Sharded feature cache: total rows and shard count.
+    pub cache_rows: usize,
+    pub cache_shards: usize,
+    /// Neighbor fanouts used when no artifact dictates them.
+    pub fanouts: Vec<usize>,
+    pub seed: u64,
+}
+
+impl ServeConfig {
+    pub fn for_dataset(ds: &Dataset) -> ServeConfig {
+        ServeConfig {
+            batch_size: 32,
+            max_delay_us: 2_000,
+            deadline_us: 50_000,
+            community_bias: 0.5,
+            workers: crate::train::default_workers(),
+            queue_cap: 1024,
+            cache_rows: (ds.n() / 8).max(64),
+            cache_shards: 8,
+            fanouts: vec![10, 10],
+            seed: 0,
+        }
+    }
+}
+
+/// End-of-run serving report (`serve bench` prints this as JSON).
+#[derive(Clone, Debug)]
+pub struct ServeReport {
+    pub dataset: String,
+    pub executor: String,
+    pub community_bias: f64,
+    pub requests: usize,
+    pub errors: usize,
+    pub wall_s: f64,
+    pub throughput_rps: f64,
+    pub lat_mean_ms: f64,
+    pub lat_p50_ms: f64,
+    pub lat_p95_ms: f64,
+    pub lat_p99_ms: f64,
+    pub lat_max_ms: f64,
+    pub deadline_miss_frac: f64,
+    pub batches: usize,
+    pub mean_batch_size: f64,
+    pub mean_input_nodes: f64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub cache_hit_rate: f64,
+    /// Effective cache capacity in rows (geometry rounds the
+    /// `cache_rows` knob up to whole sets).
+    pub cache_rows: usize,
+}
+
+impl ServeReport {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("dataset", s(&self.dataset)),
+            ("executor", s(&self.executor)),
+            ("p", num(self.community_bias)),
+            ("requests", num(self.requests as f64)),
+            ("errors", num(self.errors as f64)),
+            ("wall_s", num(self.wall_s)),
+            ("throughput_rps", num(self.throughput_rps)),
+            ("lat_mean_ms", num(self.lat_mean_ms)),
+            ("lat_p50_ms", num(self.lat_p50_ms)),
+            ("lat_p95_ms", num(self.lat_p95_ms)),
+            ("lat_p99_ms", num(self.lat_p99_ms)),
+            ("lat_max_ms", num(self.lat_max_ms)),
+            ("deadline_miss_frac", num(self.deadline_miss_frac)),
+            ("batches", num(self.batches as f64)),
+            ("mean_batch_size", num(self.mean_batch_size)),
+            ("mean_input_nodes", num(self.mean_input_nodes)),
+            ("cache_hits", num(self.cache_hits as f64)),
+            ("cache_misses", num(self.cache_misses as f64)),
+            ("cache_hit_rate", num(self.cache_hit_rate)),
+            ("cache_rows_effective", num(self.cache_rows as f64)),
+        ])
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "[serve] {} exec={} p={:.2}: {} req in {:.2}s = {:.0} req/s | \
+             lat ms p50 {:.2} p95 {:.2} p99 {:.2} | miss-deadline {:.1}% | \
+             cache hit {:.1}% | {:.1} req/batch",
+            self.dataset,
+            self.executor,
+            self.community_bias,
+            self.requests,
+            self.wall_s,
+            self.throughput_rps,
+            self.lat_p50_ms,
+            self.lat_p95_ms,
+            self.lat_p99_ms,
+            self.deadline_miss_frac * 100.0,
+            self.cache_hit_rate * 100.0,
+            self.mean_batch_size,
+        )
+    }
+}
+
+#[derive(Default)]
+struct EngineStats {
+    batches: usize,
+    requests: usize,
+    input_nodes: usize,
+}
+
+/// Synthetic infer spec for artifact-less serving: resident-feature
+/// SAGE shapes sized so assembly can never overflow its caps.
+pub fn synthetic_infer_meta(
+    ds: &Dataset,
+    batch_size: usize,
+    fanouts: &[usize],
+) -> ArtifactMeta {
+    let layers = fanouts.len();
+    let mut caps = vec![0usize; layers + 1];
+    caps[layers] = batch_size;
+    let mut bound = batch_size;
+    for l in (0..layers).rev() {
+        // level l-1 holds level l's dsts plus ≤ fanout neighbors each
+        bound = bound.saturating_mul(fanouts[l] + 1).min(ds.n());
+        caps[l] = bound;
+    }
+    ArtifactMeta {
+        name: "serve.synthetic".to_string(),
+        file: "/dev/null".into(),
+        kind: "infer".to_string(),
+        spec: SpecMeta {
+            model: "sage".to_string(),
+            layers,
+            fanouts: fanouts.to_vec(),
+            idx_widths: fanouts.to_vec(),
+            batch_size,
+            num_nodes: ds.n(),
+            feat_dim: ds.feat_dim,
+            num_classes: ds.num_classes,
+            heads: 1,
+            feat_mode: "resident".to_string(),
+            node_caps: caps,
+            padded_edges: 0,
+            edge_chunk: 0,
+        },
+        inputs: Vec::new(),
+        outputs: Vec::new(),
+    }
+}
+
+/// Build the best available executor for a preset: the compiled
+/// `<artifact>.infer` PJRT executable when artifacts (and a real PJRT)
+/// exist, otherwise the no-op executor with a synthetic spec. Returns
+/// the executor plus the batch spec the workers should assemble
+/// against.
+pub fn build_executor(
+    preset: &DatasetPreset,
+    ds: &Dataset,
+    cfg: &ServeConfig,
+) -> (Box<dyn InferExecutor>, ArtifactMeta) {
+    match try_pjrt_executor(preset, ds, cfg.seed) {
+        Ok((exec, meta)) => {
+            println!("[serve] executor: pjrt ({}.infer)", preset.artifact);
+            (Box::new(exec), meta)
+        }
+        Err(e) => {
+            eprintln!(
+                "[serve] PJRT unavailable ({e:#}); \
+                 using no-op executor (queue/coalesce/cache/assemble only)"
+            );
+            (
+                Box::new(NullExecutor { num_classes: ds.num_classes }),
+                synthetic_infer_meta(ds, cfg.batch_size, &cfg.fanouts),
+            )
+        }
+    }
+}
+
+fn try_pjrt_executor(
+    preset: &DatasetPreset,
+    ds: &Dataset,
+    seed: u64,
+) -> Result<(PjrtExecutor, ArtifactMeta)> {
+    let manifest = Manifest::load(&default_dir())?;
+    let meta = manifest
+        .get(&format!("{}.infer", preset.artifact))
+        .context("infer artifact missing")?
+        .clone();
+    let rt = Runtime::cpu()?;
+    let state = InferState::new(&rt, &meta, Some(ds), seed)?;
+    let classes = meta.spec.num_classes;
+    Ok((PjrtExecutor::new(state, classes), meta))
+}
+
+/// Run one closed-loop serving benchmark to completion.
+pub fn run(
+    ds: &Dataset,
+    meta: &ArtifactMeta,
+    exec: &dyn InferExecutor,
+    scfg: &ServeConfig,
+    lcfg: &LoadConfig,
+) -> Result<ServeReport> {
+    // never coalesce past the artifact's root capacity
+    let root_cap = meta.spec.node_caps.last().copied().unwrap_or(scfg.batch_size);
+    let batch_size = scfg.batch_size.clamp(1, root_cap.max(1));
+    let queue: RequestQueue<Request> = RequestQueue::new(scfg.queue_cap);
+    let cache = ShardedFeatureCache::new(&FeatureCacheConfig {
+        rows: scfg.cache_rows,
+        shards: scfg.cache_shards,
+        ways: 8,
+        feat_dim: ds.feat_dim,
+    });
+    let records: Mutex<Vec<ReqRecord>> = Mutex::new(Vec::new());
+    let stats: Mutex<EngineStats> = Mutex::new(EngineStats::default());
+
+    // popularity ranking: rank -> node, via a seeded shuffle so hot
+    // nodes scatter across communities
+    let perm = loadgen::popularity_perm(ds.n(), lcfg.seed);
+    let zipf = loadgen::ZipfSampler::new(ds.n(), lcfg.zipf_s);
+
+    let (batch_tx, batch_rx) = sync_channel::<Vec<Request>>(scfg.workers.max(1) * 2);
+    let batch_rx: Mutex<Receiver<Vec<Request>>> = Mutex::new(batch_rx);
+
+    // start the clock only once setup (popularity shuffle, Zipf CDF,
+    // cache slabs) is done, so wall_s measures serving, not O(n) prep
+    let clock = ServeClock::start();
+
+    std::thread::scope(|scope| {
+        // batcher thread owns batch_tx; workers see channel close when
+        // it exits
+        let batcher_handle = {
+            let queue = &queue;
+            let clock = &clock;
+            let community = &ds.community;
+            scope.spawn(move || {
+                let mut mb = MicroBatcher::new(
+                    BatcherConfig {
+                        batch_size,
+                        max_delay_us: scfg.max_delay_us,
+                        community_bias: scfg.community_bias,
+                    },
+                    scfg.seed,
+                );
+                loop {
+                    if let Some(b) = mb.poll(clock.now_us(), community) {
+                        if batch_tx.send(b).is_err() {
+                            return;
+                        }
+                        continue;
+                    }
+                    let wait_us = match mb.next_flush_us() {
+                        Some(t) => t.saturating_sub(clock.now_us()).clamp(50, 20_000),
+                        None => 20_000,
+                    };
+                    match queue.pop_timeout(Duration::from_micros(wait_us)) {
+                        Pop::Item(r) => {
+                            mb.push(r);
+                            // opportunistically drain whatever is ready
+                            while mb.len() < batch_size {
+                                match queue.try_pop() {
+                                    Some(r2) => mb.push(r2),
+                                    None => break,
+                                }
+                            }
+                        }
+                        Pop::TimedOut => {}
+                        Pop::Closed => {
+                            // drain: everything is overdue at t = ∞
+                            while let Some(b) = mb.poll(u64::MAX, community) {
+                                if batch_tx.send(b).is_err() {
+                                    return;
+                                }
+                            }
+                            return;
+                        }
+                    }
+                }
+            })
+        };
+
+        // worker pool
+        let mut worker_handles = Vec::new();
+        for w in 0..scfg.workers.max(1) {
+            let ctx = WorkerCtx {
+                ds,
+                meta,
+                cache: &cache,
+                exec,
+                clock: &clock,
+            };
+            let batch_rx = &batch_rx;
+            let stats = &stats;
+            let seed = scfg.seed ^ (w as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+            worker_handles.push(scope.spawn(move || {
+                let mut rng = Rng::new(seed ^ 0x5EBF_11);
+                loop {
+                    let next = batch_rx.lock().unwrap().recv();
+                    let Ok(reqs) = next else { return };
+                    let out = process_batch(&ctx, reqs, &mut rng);
+                    let mut g = stats.lock().unwrap();
+                    g.batches += 1;
+                    g.requests += out.requests;
+                    g.input_nodes += out.input_nodes;
+                }
+            }));
+        }
+
+        // closed-loop clients
+        let mut client_handles = Vec::new();
+        for c in 0..lcfg.clients.max(1) {
+            let queue = &queue;
+            let clock = &clock;
+            let records = &records;
+            let perm = &perm;
+            let zipf = &zipf;
+            client_handles.push(scope.spawn(move || {
+                loadgen::client_loop(
+                    c as u64, queue, clock, lcfg, scfg.deadline_us, perm, zipf,
+                    records,
+                );
+            }));
+        }
+
+        for h in client_handles {
+            let _ = h.join();
+        }
+        // all requests issued and answered (closed loop) — shut down
+        queue.close();
+        let _ = batcher_handle.join();
+        for h in worker_handles {
+            let _ = h.join();
+        }
+    });
+
+    let wall_s = clock.now_us() as f64 / 1e6;
+    let records = records.into_inner().unwrap();
+    let stats = stats.into_inner().unwrap();
+    let cache_stats = cache.stats();
+
+    // errored requests count toward errors/deadlines, not latency
+    // percentiles (their latency reflects the failure, not serving)
+    let lats_ms: Vec<f64> = records
+        .iter()
+        .filter(|r| !r.error)
+        .map(|r| r.latency_us as f64 / 1e3)
+        .collect();
+    let misses = records.iter().filter(|r| r.deadline_missed).count();
+    let errors = records.iter().filter(|r| r.error).count();
+    let n = records.len();
+    let nb = stats.batches.max(1);
+    // keep the report finite (and its JSON parseable) on empty runs
+    let pct = |p: f64| if lats_ms.is_empty() { 0.0 } else { percentile(&lats_ms, p) };
+    let mean_ms = if lats_ms.is_empty() {
+        0.0
+    } else {
+        crate::util::stats::mean(&lats_ms)
+    };
+    Ok(ServeReport {
+        dataset: ds.name.clone(),
+        executor: exec.name().to_string(),
+        community_bias: scfg.community_bias,
+        requests: n,
+        errors,
+        wall_s,
+        throughput_rps: n as f64 / wall_s.max(1e-9),
+        lat_mean_ms: mean_ms,
+        lat_p50_ms: pct(50.0),
+        lat_p95_ms: pct(95.0),
+        lat_p99_ms: pct(99.0),
+        lat_max_ms: lats_ms.iter().cloned().fold(0.0, f64::max),
+        deadline_miss_frac: misses as f64 / n.max(1) as f64,
+        batches: stats.batches,
+        mean_batch_size: stats.requests as f64 / nb as f64,
+        mean_input_nodes: stats.input_nodes as f64 / nb as f64,
+        cache_hits: cache_stats.hits,
+        cache_misses: cache_stats.misses,
+        cache_hit_rate: cache_stats.hit_rate(),
+        cache_rows: cache.rows(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::preset;
+
+    fn tiny() -> Dataset {
+        crate::train::dataset::build(&preset("tiny").unwrap(), true)
+    }
+
+    #[test]
+    fn serve_bench_end_to_end_without_artifacts() {
+        let ds = tiny();
+        let mut scfg = ServeConfig::for_dataset(&ds);
+        scfg.batch_size = 16;
+        scfg.max_delay_us = 1_000;
+        scfg.deadline_us = 200_000;
+        scfg.community_bias = 1.0;
+        scfg.workers = 2;
+        scfg.fanouts = vec![5, 5];
+        scfg.seed = 7;
+        let meta = synthetic_infer_meta(&ds, scfg.batch_size, &scfg.fanouts);
+        let exec = NullExecutor { num_classes: ds.num_classes };
+        let lcfg = LoadConfig {
+            clients: 4,
+            requests_per_client: 25,
+            zipf_s: 1.1,
+            seed: 3,
+        };
+        let rep = run(&ds, &meta, &exec, &scfg, &lcfg).unwrap();
+        assert_eq!(rep.requests, 100, "closed loop must answer every request");
+        assert_eq!(rep.errors, 0);
+        assert!(rep.throughput_rps > 0.0);
+        assert!(rep.lat_p50_ms <= rep.lat_p99_ms);
+        assert!(rep.lat_p99_ms.is_finite());
+        assert!(rep.batches >= 1);
+        assert!(rep.cache_hits + rep.cache_misses > 0, "cache not exercised");
+        assert!((0.0..=1.0).contains(&rep.cache_hit_rate));
+        // report serializes
+        let j = rep.to_json().to_string_pretty();
+        assert!(j.contains("throughput_rps"));
+    }
+
+    #[test]
+    fn community_knob_sweeps_cleanly() {
+        let ds = tiny();
+        let meta = synthetic_infer_meta(&ds, 8, &[5, 5]);
+        let exec = NullExecutor { num_classes: ds.num_classes };
+        for p in [0.0, 0.5, 1.0] {
+            let mut scfg = ServeConfig::for_dataset(&ds);
+            scfg.batch_size = 8;
+            scfg.community_bias = p;
+            scfg.workers = 1;
+            scfg.fanouts = vec![5, 5];
+            let lcfg = LoadConfig {
+                clients: 2,
+                requests_per_client: 20,
+                zipf_s: 1.2,
+                seed: 11,
+            };
+            let rep = run(&ds, &meta, &exec, &scfg, &lcfg).unwrap();
+            assert_eq!(rep.requests, 40, "p={p}");
+            assert_eq!(rep.errors, 0, "p={p}");
+        }
+    }
+
+    #[test]
+    fn synthetic_meta_caps_bound_mfg_levels() {
+        let ds = tiny();
+        let meta = synthetic_infer_meta(&ds, 32, &[10, 10]);
+        let caps = &meta.spec.node_caps;
+        assert_eq!(caps.len(), 3);
+        assert_eq!(caps[2], 32);
+        assert!(caps[1] >= 32 && caps[0] >= caps[1].min(ds.n()));
+        // worst case: batch * (fanout+1) per hop, clamped to |V|
+        assert_eq!(caps[1], (32 * 11).min(ds.n()));
+    }
+}

@@ -1,0 +1,166 @@
+//! Closed-loop load generator: N client threads replay a Zipf-skewed
+//! request trace against the serving queue, each blocking on its reply
+//! before issuing the next request (so offered load adapts to server
+//! capacity, and every latency sample includes queueing).
+//!
+//! Popularity is assigned by a seeded random permutation (rank →
+//! node), so hot nodes scatter across communities instead of
+//! clustering in the low ids the community reordering produces —
+//! community locality must then be *recovered* by the batcher's knob,
+//! which is exactly what the benchmark measures.
+
+use std::sync::mpsc;
+use std::sync::Mutex;
+
+use crate::util::rng::Rng;
+
+use super::queue::RequestQueue;
+use super::{Request, ServeClock};
+
+#[derive(Clone, Debug)]
+pub struct LoadConfig {
+    pub clients: usize,
+    pub requests_per_client: usize,
+    /// Zipf exponent (1.0–1.3 is typical web skew; 0 = uniform).
+    pub zipf_s: f64,
+    pub seed: u64,
+}
+
+/// Per-request record collected by the clients.
+#[derive(Clone, Copy, Debug)]
+pub struct ReqRecord {
+    pub latency_us: u64,
+    pub deadline_missed: bool,
+    /// The reply carried an executor error (its latency is excluded
+    /// from the report's percentiles).
+    pub error: bool,
+}
+
+/// Rank → node popularity mapping (seeded shuffle of all node ids).
+pub fn popularity_perm(n: usize, seed: u64) -> Vec<u32> {
+    let mut perm: Vec<u32> = (0..n as u32).collect();
+    let mut rng = Rng::new(seed ^ 0x21F0_5EED);
+    rng.shuffle(&mut perm);
+    perm
+}
+
+/// Zipf(rank) sampler over `0..n` via a precomputed CDF + binary
+/// search; built once and shared read-only across client threads.
+pub struct ZipfSampler {
+    cdf: Vec<f64>,
+}
+
+impl ZipfSampler {
+    pub fn new(n: usize, s: f64) -> ZipfSampler {
+        let n = n.max(1);
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0f64;
+        for r in 0..n {
+            acc += 1.0 / ((r + 1) as f64).powf(s);
+            cdf.push(acc);
+        }
+        ZipfSampler { cdf }
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let total = *self.cdf.last().unwrap();
+        let x = rng.f64() * total;
+        match self.cdf.binary_search_by(|v| v.partial_cmp(&x).unwrap()) {
+            Ok(i) => i,
+            Err(i) => i.min(self.cdf.len() - 1),
+        }
+    }
+}
+
+/// One closed-loop client: sample node → enqueue → block on reply →
+/// record latency → repeat.
+#[allow(clippy::too_many_arguments)]
+pub fn client_loop(
+    client_id: u64,
+    queue: &RequestQueue<Request>,
+    clock: &ServeClock,
+    lcfg: &LoadConfig,
+    deadline_us: u64,
+    perm: &[u32],
+    zipf: &ZipfSampler,
+    records: &Mutex<Vec<ReqRecord>>,
+) {
+    let mut rng = Rng::new(
+        lcfg.seed ^ (client_id.wrapping_add(1)).wrapping_mul(0xA24B_AED4_963E_E407),
+    );
+    for k in 0..lcfg.requests_per_client {
+        let rank = zipf.sample(&mut rng);
+        let node = perm[rank];
+        let (tx, rx) = mpsc::channel();
+        let arrive_us = clock.now_us();
+        let req = Request {
+            id: (client_id << 32) | k as u64,
+            node,
+            arrive_us,
+            deadline_us: arrive_us + deadline_us,
+            reply: tx,
+        };
+        if queue.push(req).is_err() {
+            return; // queue closed under us
+        }
+        let Ok(reply) = rx.recv() else { return };
+        let done_us = clock.now_us();
+        let rec = ReqRecord {
+            latency_us: done_us.saturating_sub(arrive_us),
+            deadline_missed: done_us > arrive_us + deadline_us,
+            error: reply.error,
+        };
+        records.lock().unwrap().push(rec);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zipf_is_skewed_toward_low_ranks() {
+        let z = ZipfSampler::new(1000, 1.2);
+        let mut rng = Rng::new(4);
+        let mut low = 0usize;
+        let draws = 20_000;
+        for _ in 0..draws {
+            if z.sample(&mut rng) < 10 {
+                low += 1;
+            }
+        }
+        // top-1% of ranks should draw far more than 1% of traffic
+        assert!(low > draws / 10, "only {low}/{draws} in top-10 ranks");
+    }
+
+    #[test]
+    fn zipf_zero_exponent_is_roughly_uniform() {
+        let z = ZipfSampler::new(100, 0.0);
+        let mut rng = Rng::new(5);
+        let mut counts = [0usize; 100];
+        for _ in 0..50_000 {
+            counts[z.sample(&mut rng)] += 1;
+        }
+        let max = *counts.iter().max().unwrap() as f64;
+        let min = *counts.iter().min().unwrap() as f64;
+        assert!(max / min.max(1.0) < 2.0, "uniform draw too skewed");
+    }
+
+    #[test]
+    fn zipf_samples_in_range() {
+        let z = ZipfSampler::new(7, 1.1);
+        let mut rng = Rng::new(6);
+        for _ in 0..1000 {
+            assert!(z.sample(&mut rng) < 7);
+        }
+    }
+
+    #[test]
+    fn popularity_perm_is_a_permutation() {
+        let p = popularity_perm(500, 9);
+        let mut sorted = p.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..500u32).collect::<Vec<_>>());
+        assert_ne!(p, (0..500u32).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,80 @@
+//! Online GNN inference serving with community-aware request batching.
+//!
+//! The offline stack trains by *constructing* locality (COMM-RAND root
+//! partitioning + biased sampling). This subsystem applies the same
+//! insight to an online workload: per-node inference requests arrive on
+//! a bounded queue, and the dynamic micro-batcher coalesces them into
+//! padded batches under a latency budget with a community-bias knob
+//! `p ∈ [0, 1]` — pure-FIFO coalescing at `p = 0`, pure
+//! community-grouped at `p = 1`. Grouping same-community requests makes
+//! their sampled L-hop frontiers overlap, which the *functional*
+//! sharded feature cache ([`cache::ShardedFeatureCache`]) converts into
+//! skipped feature gathers — the serving-side analogue of the paper's
+//! on-chip reuse (and of Cooperative Minibatching's cross-batch
+//! overlap).
+//!
+//! Pipeline: [`queue::RequestQueue`] → [`batcher::MicroBatcher`] →
+//! [`worker`] pool (sampling + cache-fed assembly + the PJRT infer
+//! executable, or a no-op executor when AOT artifacts are absent) →
+//! per-request replies. [`loadgen`] drives the closed loop with a
+//! Zipf-skewed trace and [`engine::run`] ties it all together and
+//! produces the throughput / tail-latency report
+//! (`comm-rand serve bench`, `comm-rand exp serve`).
+
+pub mod batcher;
+pub mod cache;
+pub mod engine;
+pub mod loadgen;
+pub mod queue;
+pub mod worker;
+
+pub use batcher::{BatcherConfig, MicroBatcher};
+pub use cache::{CacheStats, FeatureCacheConfig, ShardedFeatureCache};
+pub use engine::{run, ServeConfig, ServeReport};
+pub use loadgen::LoadConfig;
+pub use queue::RequestQueue;
+pub use worker::{InferExecutor, NullExecutor, PjrtExecutor};
+
+use std::time::Instant;
+
+/// One inference request: classify `node` before `deadline_us`.
+pub struct Request {
+    pub id: u64,
+    pub node: u32,
+    /// [`ServeClock`] microseconds at enqueue time.
+    pub arrive_us: u64,
+    /// Absolute completion deadline, same clock.
+    pub deadline_us: u64,
+    /// Completion channel back to the issuing client.
+    pub reply: std::sync::mpsc::Sender<Reply>,
+}
+
+/// Completion record delivered to the client.
+pub struct Reply {
+    pub id: u64,
+    pub node: u32,
+    /// Logits row for `node` (empty under the no-op executor).
+    pub logits: Vec<f32>,
+    /// [`ServeClock`] microseconds at completion.
+    pub finish_us: u64,
+    /// Size of the micro-batch this request rode in.
+    pub batch_size: usize,
+    /// The worker hit an execution error; `logits` is empty.
+    pub error: bool,
+}
+
+/// Monotonic microsecond clock shared by every serving component, so
+/// deadlines and latencies live on one timeline.
+pub struct ServeClock {
+    start: Instant,
+}
+
+impl ServeClock {
+    pub fn start() -> ServeClock {
+        ServeClock { start: Instant::now() }
+    }
+
+    pub fn now_us(&self) -> u64 {
+        self.start.elapsed().as_micros() as u64
+    }
+}

@@ -1,0 +1,184 @@
+//! Bounded MPSC request queue: many client threads push, the batcher
+//! thread pops. `push` blocks while the queue is full (closed-loop
+//! backpressure — an overloaded server slows its clients instead of
+//! buffering unboundedly), and `close` wakes everyone for shutdown.
+//!
+//! Generic over the item so tests can drive it with plain values; the
+//! engine instantiates it with [`super::Request`].
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+pub struct RequestQueue<T> {
+    inner: Mutex<Inner<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    cap: usize,
+}
+
+struct Inner<T> {
+    q: VecDeque<T>,
+    closed: bool,
+}
+
+/// Outcome of a timed pop.
+pub enum Pop<T> {
+    Item(T),
+    TimedOut,
+    /// Queue closed and drained.
+    Closed,
+}
+
+impl<T> RequestQueue<T> {
+    pub fn new(cap: usize) -> RequestQueue<T> {
+        RequestQueue {
+            inner: Mutex::new(Inner { q: VecDeque::new(), closed: false }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            cap: cap.max(1),
+        }
+    }
+
+    /// Blocking push; returns the item back if the queue was closed.
+    pub fn push(&self, item: T) -> Result<(), T> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if g.closed {
+                return Err(item);
+            }
+            if g.q.len() < self.cap {
+                g.q.push_back(item);
+                drop(g);
+                self.not_empty.notify_one();
+                return Ok(());
+            }
+            g = self.not_full.wait(g).unwrap();
+        }
+    }
+
+    /// Non-blocking pop.
+    pub fn try_pop(&self) -> Option<T> {
+        let mut g = self.inner.lock().unwrap();
+        let item = g.q.pop_front();
+        if item.is_some() {
+            drop(g);
+            self.not_full.notify_one();
+        }
+        item
+    }
+
+    /// Pop, waiting up to `timeout` for an item. Items still queued
+    /// after `close` are drained before [`Pop::Closed`] is reported.
+    pub fn pop_timeout(&self, timeout: Duration) -> Pop<T> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = g.q.pop_front() {
+                drop(g);
+                self.not_full.notify_one();
+                return Pop::Item(item);
+            }
+            if g.closed {
+                return Pop::Closed;
+            }
+            let (g2, to) = self.not_empty.wait_timeout(g, timeout).unwrap();
+            g = g2;
+            if to.timed_out() {
+                if let Some(item) = g.q.pop_front() {
+                    drop(g);
+                    self.not_full.notify_one();
+                    return Pop::Item(item);
+                }
+                return if g.closed { Pop::Closed } else { Pop::TimedOut };
+            }
+        }
+    }
+
+    /// Close the queue: pushes fail from now on; queued items remain
+    /// poppable.
+    pub fn close(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.closed = true;
+        drop(g);
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_order() {
+        let q = RequestQueue::new(8);
+        for i in 0..5 {
+            q.push(i).unwrap();
+        }
+        for i in 0..5 {
+            assert_eq!(q.try_pop(), Some(i));
+        }
+        assert_eq!(q.try_pop(), None);
+    }
+
+    #[test]
+    fn pop_timeout_times_out_when_empty() {
+        let q: RequestQueue<u32> = RequestQueue::new(4);
+        match q.pop_timeout(Duration::from_millis(5)) {
+            Pop::TimedOut => {}
+            _ => panic!("expected timeout"),
+        }
+    }
+
+    #[test]
+    fn close_drains_then_reports_closed() {
+        let q = RequestQueue::new(4);
+        q.push(1u32).unwrap();
+        q.close();
+        assert!(q.push(2).is_err());
+        match q.pop_timeout(Duration::from_millis(1)) {
+            Pop::Item(1) => {}
+            _ => panic!("expected queued item"),
+        }
+        match q.pop_timeout(Duration::from_millis(1)) {
+            Pop::Closed => {}
+            _ => panic!("expected closed"),
+        }
+    }
+
+    #[test]
+    fn full_queue_blocks_until_pop() {
+        let q = RequestQueue::new(2);
+        q.push(1u32).unwrap();
+        q.push(2).unwrap();
+        std::thread::scope(|s| {
+            let h = s.spawn(|| q.push(3)); // blocks: queue full
+            std::thread::sleep(Duration::from_millis(10));
+            assert_eq!(q.try_pop(), Some(1));
+            h.join().unwrap().unwrap();
+        });
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.try_pop(), Some(2));
+        assert_eq!(q.try_pop(), Some(3));
+    }
+
+    #[test]
+    fn close_unblocks_pusher() {
+        let q = RequestQueue::new(1);
+        q.push(1u32).unwrap();
+        std::thread::scope(|s| {
+            let h = s.spawn(|| q.push(2));
+            std::thread::sleep(Duration::from_millis(10));
+            q.close();
+            assert!(h.join().unwrap().is_err());
+        });
+    }
+}

@@ -1,0 +1,244 @@
+//! Serving workers: take a coalesced micro-batch, sample its L-hop
+//! MFG, stage features through the sharded cache, assemble the padded
+//! batch and drive the inference executable, then fan per-request
+//! replies back out.
+//!
+//! The executable is abstracted behind [`InferExecutor`] so the whole
+//! pipeline (queue → coalesce → cache → assemble) runs end-to-end even
+//! when no AOT artifacts exist: [`NullExecutor`] skips the PJRT call
+//! and returns empty logits, [`PjrtExecutor`] wraps a compiled
+//! [`InferState`].
+
+use std::sync::Mutex;
+
+use anyhow::Result;
+
+use crate::batch::assemble;
+use crate::graph::Dataset;
+use crate::runtime::artifact::ArtifactMeta;
+use crate::runtime::InferState;
+use crate::sampler::{build_mfg, NeighborPolicy};
+use crate::util::rng::Rng;
+
+use super::cache::ShardedFeatureCache;
+use super::{Reply, Request, ServeClock};
+
+/// Inference backend driven by the worker pool.
+pub trait InferExecutor: Send + Sync {
+    fn name(&self) -> &str;
+
+    fn num_classes(&self) -> usize;
+
+    /// Returns logits `[batch_cap * num_classes]`, or an empty vector
+    /// for a no-op backend.
+    fn infer(&self, batch: &crate::batch::PaddedBatch) -> Result<Vec<f32>>;
+}
+
+/// No-op backend for artifact-less environments: exercises everything
+/// up to (and including) batch assembly, returns empty logits.
+pub struct NullExecutor {
+    pub num_classes: usize,
+}
+
+impl InferExecutor for NullExecutor {
+    fn name(&self) -> &str {
+        "null"
+    }
+
+    fn num_classes(&self) -> usize {
+        self.num_classes
+    }
+
+    fn infer(&self, _batch: &crate::batch::PaddedBatch) -> Result<Vec<f32>> {
+        Ok(Vec::new())
+    }
+}
+
+/// PJRT-backed executor over a compiled `<name>.infer` artifact. The
+/// state is mutex-guarded: PJRT CPU execution is serialized across
+/// workers (sampling/assembly still overlap it).
+pub struct PjrtExecutor {
+    state: Mutex<InferState>,
+    num_classes: usize,
+}
+
+impl PjrtExecutor {
+    pub fn new(state: InferState, num_classes: usize) -> PjrtExecutor {
+        PjrtExecutor { state: Mutex::new(state), num_classes }
+    }
+}
+
+impl InferExecutor for PjrtExecutor {
+    fn name(&self) -> &str {
+        "pjrt"
+    }
+
+    fn num_classes(&self) -> usize {
+        self.num_classes
+    }
+
+    fn infer(&self, batch: &crate::batch::PaddedBatch) -> Result<Vec<f32>> {
+        self.state.lock().unwrap().infer(batch)
+    }
+}
+
+/// Shared read-only context one worker needs.
+pub struct WorkerCtx<'a> {
+    pub ds: &'a Dataset,
+    pub meta: &'a ArtifactMeta,
+    pub cache: &'a ShardedFeatureCache,
+    pub exec: &'a dyn InferExecutor,
+    pub clock: &'a ServeClock,
+}
+
+/// Per-batch accounting merged into the engine's totals (cache
+/// hit/miss counters live in the shared [`ShardedFeatureCache`];
+/// executor failures travel per request via [`Reply::error`]).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BatchOutcome {
+    pub requests: usize,
+    /// Unique input-frontier nodes sampled for the batch.
+    pub input_nodes: usize,
+}
+
+/// Process one coalesced micro-batch end to end. Every request is
+/// always replied to — executor failures produce `error` replies, so a
+/// closed-loop client can never hang on a lost request.
+pub fn process_batch(
+    ctx: &WorkerCtx<'_>,
+    reqs: Vec<Request>,
+    rng: &mut Rng,
+) -> BatchOutcome {
+    let ds = ctx.ds;
+    let spec = &ctx.meta.spec;
+
+    // duplicate nodes collapse into one root; replies fan back out
+    let mut roots: Vec<u32> = reqs.iter().map(|r| r.node).collect();
+    roots.sort_unstable();
+    roots.dedup();
+
+    let mfg = build_mfg(
+        &ds.csr,
+        &ds.community,
+        &roots,
+        &spec.fanouts,
+        NeighborPolicy::Uniform,
+        rng,
+    );
+
+    // stage the input frontier through the serving feature cache; this
+    // is the gather the community-biased coalescing exists to shrink.
+    // In resident-feature mode this staging buffer is what a real
+    // deployment would DMA to the device alongside the index arrays;
+    // in staged mode it becomes the batch's x0 payload below.
+    let f = ds.feat_dim;
+    let input = mfg.input_nodes();
+    let mut staged = vec![0f32; input.len() * f];
+    for (i, &v) in input.iter().enumerate() {
+        ctx.cache.fetch(v, ds.feature_row(v), &mut staged[i * f..(i + 1) * f]);
+    }
+
+    let result: Result<Vec<f32>> =
+        assemble(&mfg, ds, ctx.meta, false).and_then(|mut batch| {
+            if let Some(x0) = batch.x0.as_mut() {
+                // staged-mode artifact: serve the executable from the
+                // cache-staged rows, not assemble's own table gather
+                x0[..staged.len()].copy_from_slice(&staged);
+            }
+            ctx.exec.infer(&batch)
+        });
+
+    let outcome = BatchOutcome {
+        requests: reqs.len(),
+        input_nodes: input.len(),
+    };
+    let now = ctx.clock.now_us();
+    let bsz = reqs.len();
+    match result {
+        Ok(logits) => {
+            let nc = ctx.exec.num_classes().max(1);
+            for r in reqs {
+                let row = if logits.is_empty() {
+                    Vec::new()
+                } else {
+                    // roots is sorted, so the row index is its rank
+                    let i = roots.binary_search(&r.node).unwrap();
+                    logits[i * nc..(i + 1) * nc].to_vec()
+                };
+                let _ = r.reply.send(Reply {
+                    id: r.id,
+                    node: r.node,
+                    logits: row,
+                    finish_us: now,
+                    batch_size: bsz,
+                    error: false,
+                });
+            }
+            outcome
+        }
+        Err(_) => {
+            for r in reqs {
+                let _ = r.reply.send(Reply {
+                    id: r.id,
+                    node: r.node,
+                    logits: Vec::new(),
+                    finish_us: now,
+                    batch_size: bsz,
+                    error: true,
+                });
+            }
+            outcome
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::preset;
+    use crate::serve::cache::FeatureCacheConfig;
+    use crate::serve::engine::synthetic_infer_meta;
+    use std::sync::mpsc;
+
+    #[test]
+    fn process_batch_replies_to_every_request() {
+        let ds = crate::train::dataset::build(&preset("tiny").unwrap(), true);
+        let meta = synthetic_infer_meta(&ds, 8, &[5, 5]);
+        let cache = ShardedFeatureCache::new(&FeatureCacheConfig::for_dataset(
+            ds.n(),
+            ds.feat_dim,
+        ));
+        let exec = NullExecutor { num_classes: ds.num_classes };
+        let clock = ServeClock::start();
+        let ctx = WorkerCtx {
+            ds: &ds,
+            meta: &meta,
+            cache: &cache,
+            exec: &exec,
+            clock: &clock,
+        };
+        let (tx, rx) = mpsc::channel();
+        // includes a duplicate node: both requests must be answered
+        let reqs: Vec<Request> = [(1u64, 3u32), (2, 7), (3, 3)]
+            .iter()
+            .map(|&(id, node)| Request {
+                id,
+                node,
+                arrive_us: 0,
+                deadline_us: 1_000_000,
+                reply: tx.clone(),
+            })
+            .collect();
+        let mut rng = Rng::new(5);
+        let out = process_batch(&ctx, reqs, &mut rng);
+        assert_eq!(out.requests, 3);
+        assert!(out.input_nodes >= 2);
+        drop(tx);
+        let replies: Vec<Reply> = rx.iter().collect();
+        assert_eq!(replies.len(), 3);
+        let mut ids: Vec<u64> = replies.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![1, 2, 3]);
+        assert!(replies.iter().all(|r| !r.error && r.batch_size == 3));
+    }
+}

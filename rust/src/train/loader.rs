@@ -247,6 +247,49 @@ mod tests {
         }
     }
 
+    /// The module-header contract, checked bit-for-bit: every array of
+    /// every batch (neighbor indices, weights, self positions, labels,
+    /// masks) is identical whether sampling runs on 1 or 4 workers —
+    /// including under the community-biased neighbor policy, whose
+    /// per-batch RNG must not depend on scheduling.
+    #[test]
+    fn worker_count_never_changes_batch_bits() {
+        let ds = build(&preset("tiny").unwrap(), true);
+        let meta = tiny_meta();
+        let train = ds.train_nodes();
+        let batch_roots: Vec<Vec<u32>> =
+            train.chunks(96).take(8).map(|c| c.to_vec()).collect();
+        let plan = EpochPlan {
+            batch_roots,
+            gen: BatchGen::Sampled {
+                policy: NeighborPolicy::Biased { p: 0.9 },
+            },
+            seed: 0xD00D,
+        };
+        type Snap = (Vec<Vec<i32>>, Vec<Vec<f32>>, Vec<Vec<i32>>, Vec<i32>, Vec<f32>);
+        let capture = |workers: usize| -> Vec<Snap> {
+            let mut out: Vec<Snap> = vec![];
+            run_epoch(&ds, &meta, &plan, workers, true, |_i, b| {
+                out.push((
+                    b.layers.iter().map(|l| l.idx.clone()).collect(),
+                    b.layers.iter().map(|l| l.w.clone()).collect(),
+                    b.layers.iter().map(|l| l.self_idx.clone()).collect(),
+                    b.labels.clone(),
+                    b.lmask.clone(),
+                ));
+                Ok(())
+            })
+            .unwrap();
+            out
+        };
+        let one = capture(1);
+        let four = capture(4);
+        assert_eq!(one.len(), four.len());
+        for (k, (a, b)) in one.iter().zip(&four).enumerate() {
+            assert_eq!(a, b, "batch {k} differs between 1 and 4 workers");
+        }
+    }
+
     #[test]
     fn error_propagates() {
         let ds = build(&preset("tiny").unwrap(), true);

@@ -121,7 +121,11 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(x) => {
-                if x.fract() == 0.0 && x.abs() < 9e15 {
+                if !x.is_finite() {
+                    // JSON has no NaN/inf literal; null keeps the
+                    // document parseable
+                    out.push_str("null");
+                } else if x.fract() == 0.0 && x.abs() < 9e15 {
                     let _ = write!(out, "{}", *x as i64);
                 } else {
                     let _ = write!(out, "{x}");
@@ -412,6 +416,21 @@ mod tests {
     fn rejects_trailing() {
         assert!(Json::parse("{} x").is_err());
         assert!(Json::parse("[1,]").is_err());
+    }
+
+    #[test]
+    fn non_finite_serializes_as_null() {
+        let v = Json::Arr(vec![
+            Json::Num(f64::NAN),
+            Json::Num(f64::INFINITY),
+            Json::Num(1.5),
+        ]);
+        let out = v.to_string_pretty();
+        let back = Json::parse(&out).unwrap();
+        let a = back.as_arr().unwrap();
+        assert_eq!(a[0], Json::Null);
+        assert_eq!(a[1], Json::Null);
+        assert_eq!(a[2].as_f64().unwrap(), 1.5);
     }
 
     #[test]

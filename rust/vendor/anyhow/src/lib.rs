@@ -1,0 +1,211 @@
+//! Offline drop-in subset of the `anyhow` crate.
+//!
+//! The image this repository builds in has no registry access, so the
+//! error-handling surface the codebase uses is re-implemented here:
+//! [`Error`], [`Result`], [`anyhow!`], [`bail!`] and the [`Context`]
+//! extension trait for `Result` and `Option`. An [`Error`] is a chain
+//! of display strings (outermost context first); `{:#}` formats the
+//! whole chain on one line and `{:?}` formats it anyhow-style with a
+//! `Caused by:` block.
+
+use std::fmt;
+
+/// A chain of error messages; `chain[0]` is the outermost context.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from any displayable message (what `anyhow!` expands to).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The outermost message.
+    pub fn to_msg(&self) -> &str {
+        &self.chain[0]
+    }
+
+    /// The message chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain[0])?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for (i, c) in self.chain[1..].iter().enumerate() {
+                write!(f, "\n    {i}: {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// `Error` deliberately does NOT implement `std::error::Error`: that is
+// what lets this blanket conversion coexist with the reflexive
+// `From<T> for T` impl, exactly as in the real anyhow.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string or displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)+) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)+))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Early-return with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Attach context to errors (`Result`) or missing values (`Option`).
+pub trait Context<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(
+        self,
+        context: C,
+    ) -> Result<T>;
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: Into<Error>> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(
+        self,
+        context: C,
+    ) -> Result<T> {
+        self.map_err(|e| {
+            let err: Error = e.into();
+            err.context(context)
+        })
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| {
+            let err: Error = e.into();
+            err.context(f())
+        })
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(
+        self,
+        context: C,
+    ) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn macro_forms() {
+        let a: Error = anyhow!("plain");
+        assert_eq!(a.to_msg(), "plain");
+        let b: Error = anyhow!("x = {}", 7);
+        assert_eq!(b.to_msg(), "x = 7");
+        let c: Error = anyhow!(String::from("owned"));
+        assert_eq!(c.to_msg(), "owned");
+    }
+
+    #[test]
+    fn bail_returns() {
+        fn f(fail: bool) -> Result<u32> {
+            if fail {
+                bail!("no {}", "good");
+            }
+            Ok(3)
+        }
+        assert_eq!(f(false).unwrap(), 3);
+        assert_eq!(f(true).unwrap_err().to_msg(), "no good");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<String> {
+            let s = std::str::from_utf8(&[0xffu8])?;
+            Ok(s.to_string())
+        }
+        assert!(f().is_err());
+    }
+
+    #[test]
+    fn context_chains() {
+        let r: Result<()> = Err(io_err().into());
+        let e = r.context("opening config").unwrap_err();
+        assert_eq!(e.to_msg(), "opening config");
+        assert_eq!(format!("{e:#}"), "opening config: gone");
+        assert!(format!("{e:?}").contains("Caused by:"));
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.with_context(|| format!("missing {}", "key")).unwrap_err();
+        assert_eq!(e.to_msg(), "missing key");
+        assert_eq!(Some(5u32).context("x").unwrap(), 5);
+    }
+}

@@ -1,0 +1,161 @@
+//! PJRT API shim with the exact surface `comm_rand::runtime` consumes.
+//!
+//! The offline build image has neither the `xla` registry crate nor a
+//! native XLA/PJRT library, so this shim keeps the whole workspace
+//! compiling and lets every non-executing code path (manifest parsing,
+//! dataset pipeline, sampling, batch assembly, cache models, the
+//! serving engine's no-op executor) run for real. Anything that would
+//! actually execute an HLO module returns a clear
+//! "PJRT execution unavailable" error instead; swap this path
+//! dependency for a real xla-rs build with the same API to run the AOT
+//! artifacts.
+
+use std::borrow::Borrow;
+use std::path::Path;
+
+/// Error type; call sites only format it with `{:?}`.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+const UNAVAILABLE: &str =
+    "PJRT execution unavailable: built against the offline xla shim \
+     (rust/vendor/xla); link a real xla-rs to run AOT artifacts";
+
+/// Element types uploadable as device buffers.
+pub trait ArrayElement: Copy + Send + Sync + 'static {
+    const NAME: &'static str;
+}
+
+impl ArrayElement for f32 {
+    const NAME: &'static str = "f32";
+}
+
+impl ArrayElement for i32 {
+    const NAME: &'static str = "i32";
+}
+
+/// Placeholder device handle (the `Option<&PjRtDevice>` parameter of
+/// `buffer_from_host_buffer`).
+#[derive(Debug, Clone, Copy)]
+pub struct PjRtDevice;
+
+#[derive(Clone)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient)
+    }
+
+    pub fn platform_name(&self) -> String {
+        "cpu (offline xla shim)".to_string()
+    }
+
+    pub fn device_count(&self) -> usize {
+        1
+    }
+
+    pub fn buffer_from_host_buffer<T: ArrayElement>(
+        &self,
+        data: &[T],
+        dims: &[usize],
+        _device: Option<&PjRtDevice>,
+    ) -> Result<PjRtBuffer> {
+        let want: usize = dims.iter().product();
+        // scalars are passed with empty dims
+        if !dims.is_empty() && want != data.len() {
+            return Err(Error(format!(
+                "host buffer has {} elements, shape {:?} wants {}",
+                data.len(),
+                dims,
+                want
+            )));
+        }
+        Ok(PjRtBuffer { elements: data.len() })
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error(UNAVAILABLE.to_string()))
+    }
+}
+
+/// Device buffer handle (host-side bookkeeping only in the shim).
+pub struct PjRtBuffer {
+    pub elements: usize,
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error(UNAVAILABLE.to_string()))
+    }
+}
+
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b<L: Borrow<PjRtBuffer>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error(UNAVAILABLE.to_string()))
+    }
+}
+
+/// Parsed HLO module (the shim only checks the file is readable).
+pub struct HloModuleProto {
+    pub text: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &Path) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error(format!("{}: {e}", path.display())))?;
+        Ok(HloModuleProto { text })
+    }
+}
+
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Host literal (never constructed by the shim; kept for API parity).
+pub struct Literal;
+
+impl Literal {
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(Error(UNAVAILABLE.to_string()))
+    }
+
+    pub fn to_vec<T: ArrayElement>(&self) -> Result<Vec<T>> {
+        Err(Error(UNAVAILABLE.to_string()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_and_buffers_work_without_pjrt() {
+        let c = PjRtClient::cpu().unwrap();
+        assert_eq!(c.device_count(), 1);
+        let b = c.buffer_from_host_buffer(&[1.0f32; 6], &[2, 3], None).unwrap();
+        assert_eq!(b.elements, 6);
+        assert!(c.buffer_from_host_buffer(&[1.0f32; 5], &[2, 3], None).is_err());
+        // scalar upload with empty dims
+        assert!(c.buffer_from_host_buffer(&[1i32], &[], None).is_ok());
+    }
+
+    #[test]
+    fn execution_reports_unavailable() {
+        let c = PjRtClient::cpu().unwrap();
+        let err = c.compile(&XlaComputation).unwrap_err();
+        assert!(err.0.contains("unavailable"));
+    }
+}
