@@ -4,14 +4,21 @@
 //! vs pure community-grouped coalescing (p=1) — printing throughput,
 //! tail latency and the feature-cache hit rate each way.
 //!
+//! With `shards=N` the engine partitions communities across N logical
+//! device shards (each with its own worker pool and feature cache) and
+//! routes every micro-batch to the shard owning its community;
+//! `spill=strict|steal|broadcast` picks the cross-shard policy and the
+//! demo prints the per-shard breakdown.
+//!
 //! Runs with or without AOT artifacts (`make artifacts`): without them
-//! a no-op executor still exercises queue → coalesce → cache →
+//! a no-op executor still exercises queue → coalesce → route → cache →
 //! assemble.
 //!
-//!     cargo run --release --example serve_demo [preset] [p=F] [requests=N]
+//!     cargo run --release --example serve_demo [preset] [requests=N] \
+//!         [shards=N] [spill=strict|steal|broadcast]
 
 use comm_rand::config::preset;
-use comm_rand::serve::{engine, LoadConfig, ServeConfig};
+use comm_rand::serve::{engine, LoadConfig, ServeConfig, SpillPolicy};
 
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -24,18 +31,33 @@ fn main() -> anyhow::Result<()> {
         .iter()
         .find_map(|a| a.strip_prefix("requests=").map(|v| v.parse().unwrap()))
         .unwrap_or(200);
+    let shards: usize = args
+        .iter()
+        .find_map(|a| a.strip_prefix("shards=").map(|v| v.parse().unwrap()))
+        .unwrap_or(1);
+    let spill = args
+        .iter()
+        .find_map(|a| a.strip_prefix("spill="))
+        .map(SpillPolicy::parse)
+        .transpose()?
+        .unwrap_or(SpillPolicy::Strict);
 
     let p = preset(&name).expect("unknown preset");
     let ds = comm_rand::train::dataset::load_or_build(&p, true)?;
     println!(
-        "serving {}: {} nodes, {} communities, feat dim {}",
+        "serving {}: {} nodes, {} communities, feat dim {}, {} shard(s), \
+         spill {}",
         ds.name,
         ds.n(),
         ds.num_comms,
-        ds.feat_dim
+        ds.feat_dim,
+        shards.max(1),
+        spill.name(),
     );
 
-    let scfg = ServeConfig::for_dataset(&ds);
+    let mut scfg = ServeConfig::for_dataset(&ds);
+    scfg.shards = shards.max(1);
+    scfg.spill = spill;
     let lcfg = LoadConfig {
         clients: 8,
         requests_per_client: (requests / 8).max(1),
@@ -49,6 +71,21 @@ fn main() -> anyhow::Result<()> {
         let cfg = ServeConfig { community_bias: bias, ..scfg.clone() };
         let rep = engine::run(&ds, &meta, exec.as_ref(), &cfg, &lcfg)?;
         println!("{}", rep.summary());
+        if rep.n_shards > 1 {
+            for sh in &rep.shards {
+                println!(
+                    "  shard {}: {} comms / {} nodes owned | {} req \
+                     ({} foreign) | p99 {:.2} ms | cache hit {:.1}%",
+                    sh.id,
+                    sh.owned_comms,
+                    sh.owned_nodes,
+                    sh.requests,
+                    sh.foreign_requests,
+                    sh.lat_p99_ms,
+                    sh.cache_hit_rate * 100.0,
+                );
+            }
+        }
         reports.push(rep);
     }
 

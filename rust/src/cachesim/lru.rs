@@ -282,4 +282,87 @@ mod tests {
         assert_eq!(a.slot, b.slot);
         assert!(a.slot < core.slots());
     }
+
+    /// Regression: eviction strictly follows true-LRU order within a
+    /// set, including after hits reorder the recency stamps.
+    #[test]
+    fn core_eviction_order_is_true_lru() {
+        let mut core = SetAssocCore::new(1, 3);
+        assert_eq!(core.probe(1).evicted, None); // fills empty ways:
+        assert_eq!(core.probe(2).evicted, None); // no victim until the
+        assert_eq!(core.probe(3).evicted, None); // set is full
+        assert!(core.probe(1).hit); // recency now: 2 < 3 < 1
+        let p = core.probe(4);
+        assert!(!p.hit);
+        assert_eq!(p.evicted, Some(2), "2 was least recently used");
+        // recency now: 3 < 1 < 4
+        let p = core.probe(2);
+        assert_eq!(p.evicted, Some(3));
+        // recency now: 1 < 4 < 2
+        let p = core.probe(5);
+        assert_eq!(p.evicted, Some(1));
+        // survivors hit, victims miss
+        assert!(core.probe(4).hit);
+        assert!(core.probe(2).hit);
+        assert!(!core.probe(3).hit);
+    }
+
+    /// Regression: traffic in one set never evicts another set's lines
+    /// (with `ways = 1`, any cross-set interference would be an
+    /// immediate miss).
+    #[test]
+    fn core_sets_are_isolated() {
+        // find two keys that land in different sets, and one sharing
+        // a's set, by probing fresh cores
+        let set_of = |k: u64| {
+            let mut c = SetAssocCore::new(2, 1);
+            c.probe(k).slot // ways = 1 => slot == set index
+        };
+        let a = 0u64;
+        let b = (1..100u64).find(|&k| set_of(k) != set_of(a)).unwrap();
+        let a2 = (1..100u64)
+            .find(|&k| set_of(k) == set_of(a) && k != a)
+            .unwrap();
+        let mut core = SetAssocCore::new(2, 1);
+        core.probe(a);
+        core.probe(b);
+        // hammer b's set: a must survive untouched
+        for _ in 0..10 {
+            assert!(core.probe(b).hit);
+        }
+        assert!(core.probe(a).hit, "cross-set eviction");
+        // same-set conflict does evict (ways = 1)
+        let p = core.probe(a2);
+        assert_eq!(p.evicted, Some(a));
+        assert!(!core.probe(a).hit);
+        assert!(core.probe(b).hit, "victim must come from a's set only");
+    }
+
+    /// Regression: hit + miss accounting is exact and deterministic —
+    /// the serving feature cache reuses this core, so a silent change
+    /// here would skew `serve bench` hit rates too.
+    #[test]
+    fn core_accounting_is_exact_and_deterministic() {
+        let run = || {
+            let mut c = SetAssocCache::new(CacheConfig {
+                capacity_bytes: 8 * 1024,
+                line_bytes: 64,
+                ways: 4,
+            });
+            for i in 0..5_000u32 {
+                // 8 hot rows (short reuse distance -> hits) interleaved
+                // with a long streaming scan (capacity misses)
+                let node =
+                    if i % 2 == 0 { (i / 2) % 8 } else { (i * 37) % 512 };
+                c.access_row(node, 16);
+            }
+            (c.hits, c.misses)
+        };
+        let (h1, m1) = run();
+        let (h2, m2) = run();
+        assert_eq!((h1, m1), (h2, m2), "replay must be deterministic");
+        // 16 floats * 4B = 64B = exactly 1 line per row
+        assert_eq!(h1 + m1, 5_000, "every access accounted exactly once");
+        assert!(h1 > 0 && m1 > 0, "stream must exercise both paths");
+    }
 }

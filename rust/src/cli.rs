@@ -112,7 +112,10 @@ COMMANDS:
                            p=0..1 (community-bias knob)  batch=N
                            clients=N  requests=N (per client)
                            delay_ms=F  deadline_ms=F  zipf=F
-                           workers=N  cache_rows=N  shards=N  seed=N
+                           workers=N  cache_rows=N  cache_shards=N
+                           shards=N (logical device shards; communities
+                           are partitioned across them)
+                           spill=strict|steal|broadcast  seed=N
                            (uses the PJRT infer artifact when present,
                             a no-op executor otherwise)
   exp <id>               regenerate a paper artifact into results/
@@ -250,7 +253,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve_bench(args: &Args) -> Result<()> {
-    use crate::serve::{engine, LoadConfig, ServeConfig};
+    use crate::serve::{engine, LoadConfig, ServeConfig, SpillPolicy};
 
     let name = args.pos.get(1).map(String::as_str).unwrap_or("tiny");
     let p = preset(name).with_context(|| format!("unknown preset {name}"))?;
@@ -265,12 +268,17 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         workers: args.get_usize("workers", defaults.workers)?,
         queue_cap: args.get_usize("queue", defaults.queue_cap)?,
         cache_rows: args.get_usize("cache_rows", defaults.cache_rows)?,
-        cache_shards: args.get_usize("shards", defaults.cache_shards)?,
+        cache_shards: args.get_usize("cache_shards", defaults.cache_shards)?,
+        shards: args.get_usize("shards", defaults.shards)?,
+        spill: SpillPolicy::parse(args.get("spill").unwrap_or("strict"))?,
         fanouts: defaults.fanouts,
         seed: args.get_u64("seed", 0)?,
     };
     if !(0.0..=1.0).contains(&scfg.community_bias) {
         bail!("p must be in [0, 1], got {}", scfg.community_bias);
+    }
+    if scfg.shards == 0 {
+        bail!("shards must be >= 1");
     }
     let lcfg = LoadConfig {
         clients: args.get_usize("clients", 8)?,
@@ -282,6 +290,25 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     let (exec, meta) = engine::build_executor(&p, &ds, &scfg);
     let report = engine::run(&ds, &meta, exec.as_ref(), &scfg, &lcfg)?;
     println!("{}", report.summary());
+    if report.n_shards > 1 {
+        for sh in &report.shards {
+            println!(
+                "  shard {}: {} comms / {} nodes owned | {} req \
+                 ({} foreign) in {} batches | depth max {} | \
+                 p50 {:.2} p99 {:.2} ms | cache hit {:.1}%",
+                sh.id,
+                sh.owned_comms,
+                sh.owned_nodes,
+                sh.requests,
+                sh.foreign_requests,
+                sh.batches,
+                sh.queue_depth_max,
+                sh.lat_p50_ms,
+                sh.lat_p99_ms,
+                sh.cache_hit_rate * 100.0,
+            );
+        }
+    }
     let json = report.to_json().to_string_pretty();
     println!("{json}");
     std::fs::create_dir_all("results").ok();

@@ -1,8 +1,13 @@
-//! Serving-knob sweep: the online-inference analogue of the paper's
+//! Serving-knob sweeps: the online-inference analogue of the paper's
 //! training figures. Replays the same Zipf closed-loop trace against
-//! the serving engine for community-bias `p ∈ {0, 0.5, 1}` and tabulates
-//! throughput, tail latency and feature-cache hit rate — the quantity
-//! the knob exists to move.
+//! the serving engine along two axes:
+//!
+//! * community-bias `p ∈ {0, 0.5, 1}` on one shard — the knob's effect
+//!   on throughput, tail latency and feature-cache hit rate;
+//! * shard count `∈ {1, 2, 4}` at fixed `p` — community-affinity
+//!   scaling: each shard's cache only sees its own communities, so the
+//!   aggregate hit rate should hold (or improve) as the per-shard
+//!   cache slice shrinks.
 //!
 //! Unlike the training experiments this needs no PJRT session: it uses
 //! the compiled infer artifact when available and the no-op executor
@@ -13,8 +18,8 @@ use anyhow::Result;
 
 use crate::cli::Args;
 use crate::config::preset;
-use crate::serve::{engine, LoadConfig, ServeConfig};
-use crate::util::json::Json;
+use crate::serve::{engine, LoadConfig, ServeConfig, SpillPolicy};
+use crate::util::json::{obj, Json};
 
 use super::common::{f2, pct, quick, write_results, Table};
 
@@ -27,6 +32,7 @@ pub fn run(args: &Args) -> Result<()> {
     let mut scfg = ServeConfig::for_dataset(&ds);
     scfg.batch_size = args.get_usize("batch", 32)?;
     scfg.seed = args.get_u64("seed", 0)?;
+    let spill = SpillPolicy::parse(args.get("spill").unwrap_or("strict"))?;
     let lcfg = LoadConfig {
         clients: args.get_usize("clients", 8)?,
         requests_per_client: args
@@ -36,7 +42,8 @@ pub fn run(args: &Args) -> Result<()> {
     };
     let (exec, meta) = engine::build_executor(&p, &ds, &scfg);
 
-    let mut table = Table::new(&[
+    // axis 1: community-bias knob on a single shard
+    let mut p_table = Table::new(&[
         "p",
         "req/s",
         "p50 ms",
@@ -45,12 +52,19 @@ pub fn run(args: &Args) -> Result<()> {
         "cache hit",
         "req/batch",
     ]);
-    let mut rows = Vec::new();
+    let shard_p = args.get_f64("shard_p", 1.0)?;
+    if !(0.0..=1.0).contains(&shard_p) {
+        anyhow::bail!("shard_p must be in [0, 1], got {shard_p}");
+    }
+    let mut p_rows = Vec::new();
+    // the p-sweep row matching (shard_p, 1 shard, default spill) doubles
+    // as the shard sweep's baseline, so that config isn't re-run below
+    let mut one_shard_baseline = None;
     for bias in [0.0, 0.5, 1.0] {
         let cfg = ServeConfig { community_bias: bias, ..scfg.clone() };
         let rep = engine::run(&ds, &meta, exec.as_ref(), &cfg, &lcfg)?;
         println!("{}", rep.summary());
-        table.row(vec![
+        p_table.row(vec![
             f2(bias),
             format!("{:.0}", rep.throughput_rps),
             f2(rep.lat_p50_ms),
@@ -59,19 +73,74 @@ pub fn run(args: &Args) -> Result<()> {
             pct(rep.cache_hit_rate),
             f2(rep.mean_batch_size),
         ]);
-        rows.push(rep.to_json());
+        p_rows.push(rep.to_json());
+        if bias == shard_p && scfg.shards == 1 && spill == scfg.spill {
+            one_shard_baseline = Some(rep);
+        }
+    }
+
+    // axis 2: shard count at fixed p (community affinity across
+    // logical devices, `spill=` selects the cross-shard policy)
+    let mut s_table = Table::new(&[
+        "shards",
+        "spill",
+        "req/s",
+        "p50 ms",
+        "p99 ms",
+        "cache hit",
+        "foreign",
+        "depth max",
+    ]);
+    let mut s_rows = Vec::new();
+    for n_shards in [1usize, 2, 4] {
+        let rep = match (n_shards, one_shard_baseline.take()) {
+            (1, Some(baseline)) => baseline, // identical config: reuse
+            _ => {
+                let cfg = ServeConfig {
+                    community_bias: shard_p,
+                    shards: n_shards,
+                    spill,
+                    ..scfg.clone()
+                };
+                let rep = engine::run(&ds, &meta, exec.as_ref(), &cfg, &lcfg)?;
+                println!("{}", rep.summary());
+                rep
+            }
+        };
+        let depth_max =
+            rep.shards.iter().map(|sh| sh.queue_depth_max).max().unwrap_or(0);
+        s_table.row(vec![
+            format!("{n_shards}"),
+            spill.name().to_string(),
+            format!("{:.0}", rep.throughput_rps),
+            f2(rep.lat_p50_ms),
+            f2(rep.lat_p99_ms),
+            pct(rep.cache_hit_rate),
+            format!("{}", rep.foreign_requests()),
+            format!("{depth_max}"),
+        ]);
+        s_rows.push(rep.to_json());
     }
 
     let md = format!(
-        "# Online serving — community-bias knob sweep ({name})\n\n\
+        "# Online serving — community-bias knob and shard sweeps ({name})\n\n\
          Closed loop: {} clients x {} requests, zipf {}, batch cap {}, \
-         executor `{}`.\n\n{}",
+         executor `{}`.\n\n\
+         ## Community-bias knob (1 shard)\n\n{}\n\
+         ## Shard sweep (p = {}, spill = {})\n\n{}",
         lcfg.clients,
         lcfg.requests_per_client,
         lcfg.zipf_s,
         scfg.batch_size,
         exec.name(),
-        table.to_markdown()
+        p_table.to_markdown(),
+        shard_p,
+        spill.name(),
+        s_table.to_markdown()
     );
-    write_results("serve", &md, &Json::Arr(rows))
+    let json = obj(vec![
+        ("p_sweep", Json::Arr(p_rows)),
+        ("shard_sweep", Json::Arr(s_rows)),
+    ]);
+    write_results("serve", &md, &json)
 }

@@ -31,10 +31,16 @@
 //! stages features through a *functional* `Arc`-sharded LRU feature
 //! cache (the same set-associative core as the cache simulator, now
 //! carrying payload), and drives the PJRT infer executable — or a
-//! no-op executor when AOT artifacts are absent. `comm-rand serve
-//! bench` replays a Zipf-skewed closed-loop trace and reports
-//! throughput plus p50/p95/p99 latency and feature-cache hit rate as
-//! JSON; `comm-rand exp serve` sweeps `p` into a paper-style table.
+//! no-op executor when AOT artifacts are absent. With `shards=N` the
+//! engine partitions communities across N logical device shards
+//! (consistent assignment from the Louvain labels) and routes each
+//! micro-batch to the shard owning its community, with a configurable
+//! spill policy (`strict` / `steal` / `broadcast`) for cross-shard
+//! batches — each shard runs its own worker pool and feature cache.
+//! `comm-rand serve bench` replays a Zipf-skewed closed-loop trace and
+//! reports throughput plus p50/p95/p99 latency and feature-cache hit
+//! rate (per shard and rolled up) as JSON; `comm-rand exp serve`
+//! sweeps `p` and the shard count into paper-style tables.
 
 pub mod batch;
 pub mod cachesim;

@@ -248,6 +248,157 @@ mod tests {
         assert_eq!(ids(&b), vec![1, 2], "deadlines dominate the knob");
     }
 
+    /// Flush ordering honors deadlines: with the coalescing budget out
+    /// of the picture, the request with the earlier deadline defines
+    /// the first flush point even though it arrived second.
+    #[test]
+    fn flush_ordering_honors_deadlines() {
+        let mut mb = MicroBatcher::new(
+            BatcherConfig {
+                batch_size: 1, // every flush carries exactly one request
+                max_delay_us: 1_000_000,
+                community_bias: 0.0,
+            },
+            1,
+        );
+        let comm = vec![0u32; 4];
+        mb.push(req(1, 0, 0, 10_000)); // arrived first, later deadline
+        mb.push(req(2, 1, 0, 2_000)); // arrived second, earlier deadline
+        // batch_size 1: the size trigger fires immediately and takes
+        // the FIFO head only
+        let b = mb.poll(0, &comm).unwrap();
+        assert_eq!(ids(&b), vec![1]);
+        // now the earlier-deadline request defines the flush point
+        assert_eq!(mb.next_flush_us(), Some(2_000));
+        let b = mb.poll(2_000, &comm).unwrap();
+        assert_eq!(ids(&b), vec![2]);
+    }
+
+    /// Same check without the size trigger: deadlines alone decide who
+    /// flushes first, in deadline (not arrival) order.
+    #[test]
+    fn deadline_order_beats_arrival_order() {
+        let mut mb = MicroBatcher::new(
+            BatcherConfig {
+                batch_size: 8, // never size-triggered (2 pending)
+                max_delay_us: 1_000_000,
+                community_bias: 0.0,
+            },
+            1,
+        );
+        let comm = vec![0u32, 1, 2, 3];
+        mb.push(req(1, 0, 0, 10_000));
+        mb.push(req(2, 1, 0, 2_000));
+        assert_eq!(mb.next_flush_us(), Some(2_000));
+        assert!(mb.poll(1_999, &comm).is_none());
+        // at t=2000 only request 2 is overdue; it seeds the batch and
+        // (p=0) request 1 rides along FIFO — overdue-first ordering
+        let b = mb.poll(2_000, &comm).unwrap();
+        assert_eq!(ids(&b)[0], 2, "overdue request must lead the batch");
+    }
+
+    /// `next_flush_us` is the exact time `poll` starts producing: one
+    /// microsecond earlier yields nothing, the reported instant yields
+    /// a batch — over a whole staggered schedule. Every request sits in
+    /// its own community at `p = 1`, so flushes stay singletons instead
+    /// of coalescing the still-early pending requests.
+    #[test]
+    fn next_flush_us_agrees_with_actual_flush_times() {
+        let mut mb = MicroBatcher::new(
+            BatcherConfig {
+                batch_size: 100, // flushes are time-triggered only
+                max_delay_us: 5_000,
+                community_bias: 1.0,
+            },
+            3,
+        );
+        let comm: Vec<u32> = (0..16u32).collect();
+        // staggered arrivals; two get deadline-capped flush points
+        mb.push(req(1, 0, 0, 3_000)); // flush 3_000 (deadline < delay)
+        mb.push(req(2, 1, 1_000, 1_000_000)); // flush 6_000
+        mb.push(req(3, 2, 4_000, 4_500)); // flush 4_500
+        mb.push(req(4, 3, 9_000, 1_000_000)); // flush 14_000
+        let mut flushed = Vec::new();
+        while let Some(t) = mb.next_flush_us() {
+            assert!(
+                mb.poll(t - 1, &comm).is_none(),
+                "flushed before the advertised time {t}"
+            );
+            let b = mb.poll(t, &comm).expect("advertised flush must fire");
+            flushed.push((t, ids(&b)));
+        }
+        assert!(mb.is_empty());
+        let times: Vec<u64> = flushed.iter().map(|(t, _)| *t).collect();
+        assert_eq!(times, vec![3_000, 4_500, 6_000, 14_000]);
+        let all: Vec<u64> =
+            flushed.iter().flat_map(|(_, ids)| ids.clone()).collect();
+        assert_eq!(all, vec![1, 3, 2, 4], "flush order = flush-point order");
+    }
+
+    /// `p = 0` stays pure FIFO across *successive* batches, whatever
+    /// the community layout.
+    #[test]
+    fn p0_fifo_across_batches() {
+        let mut mb = MicroBatcher::new(
+            BatcherConfig {
+                batch_size: 4,
+                max_delay_us: 1_000_000,
+                community_bias: 0.0,
+            },
+            99,
+        );
+        let comm: Vec<u32> = (0..12u32).map(|v| v % 3).collect();
+        for id in 0..12u64 {
+            mb.push(req(id, id as u32, 0, 1_000_000));
+        }
+        let mut seen = Vec::new();
+        while let Some(b) = mb.poll(0, &comm) {
+            seen.extend(ids(&b));
+        }
+        assert_eq!(seen, (0..12).collect::<Vec<u64>>());
+    }
+
+    /// `p = 1` groups by community deterministically: same seed, same
+    /// batches; every batch is community-pure on a size-triggered
+    /// flush.
+    #[test]
+    fn p1_grouping_is_deterministic_under_fixed_seed() {
+        // 3 communities interleaved in arrival order
+        let comm: Vec<u32> = (0..12u32).map(|v| v % 3).collect();
+        let run = |seed: u64| -> Vec<Vec<u64>> {
+            let mut mb = MicroBatcher::new(
+                BatcherConfig {
+                    batch_size: 4,
+                    max_delay_us: 1_000_000,
+                    community_bias: 1.0,
+                },
+                seed,
+            );
+            for id in 0..12u64 {
+                mb.push(req(id, id as u32, 0, 1_000_000));
+            }
+            let mut out = Vec::new();
+            // t=0: nothing overdue, so membership is pure p=1 grouping
+            while let Some(b) = mb.poll(0, &comm) {
+                out.push(ids(&b));
+            }
+            out
+        };
+        let a = run(7);
+        assert_eq!(a, run(7), "same seed must reproduce identical batches");
+        // every batch single-community; all 12 requests delivered once
+        for batch in &a {
+            let c0 = comm[batch[0] as usize];
+            assert!(
+                batch.iter().all(|&id| comm[id as usize] == c0),
+                "mixed-community batch under p=1: {batch:?}"
+            );
+        }
+        let mut all: Vec<u64> = a.iter().flatten().copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..12).collect::<Vec<_>>());
+    }
+
     #[test]
     fn deterministic_given_seed() {
         let comm: Vec<u32> = (0..16u32).map(|v| v % 4).collect();

@@ -1,16 +1,24 @@
-//! Serving engine: wires queue → micro-batcher → worker pool →
-//! replies, drives the closed-loop load generator against it, and
-//! reports throughput + latency percentiles + feature-cache hit rate.
+//! Serving engine: wires queue → micro-batcher → shard router →
+//! per-shard worker pools → replies, drives the closed-loop load
+//! generator against it, and reports throughput + latency percentiles
+//! + feature-cache hit rate, per shard and rolled up.
 //!
 //! Thread layout (all scoped, nothing outlives a run):
 //!
 //! * N client threads ([`super::loadgen`]) push Zipf-skewed requests
 //!   and block on their replies (closed loop);
 //! * 1 batcher thread drains the queue into a [`MicroBatcher`],
-//!   sleeping only until the earliest pending flush point;
-//! * `workers` worker threads consume formed batches from a bounded
-//!   channel and run sampling → cache staging → assembly → executor.
+//!   sleeping only until the earliest pending flush point, and routes
+//!   each formed micro-batch to the shard owning its community
+//!   ([`super::shard::route_batch`], spill policy configurable);
+//! * per shard, a worker pool consumes routed batches from that
+//!   shard's bounded channel and runs sampling → cache staging →
+//!   assembly → executor against the shard's own feature cache.
+//!
+//! The single-device path is simply `shards = 1`: one plan owning every
+//! community, one channel, one cache — not a separate code path.
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver};
 use std::sync::Mutex;
 use std::time::Duration;
@@ -21,16 +29,19 @@ use crate::config::DatasetPreset;
 use crate::graph::Dataset;
 use crate::runtime::artifact::{default_dir, ArtifactMeta, Manifest, SpecMeta};
 use crate::runtime::{InferState, Runtime};
-use crate::util::json::{num, obj, s, Json};
+use crate::util::json::{arr, num, obj, s, Json};
 use crate::util::rng::Rng;
 use crate::util::stats::percentile;
 
 use super::batcher::{BatcherConfig, MicroBatcher};
-use super::cache::{FeatureCacheConfig, ShardedFeatureCache};
+use super::cache::{CacheStats, FeatureCacheConfig, ShardedFeatureCache};
 use super::loadgen::{self, LoadConfig, ReqRecord};
 use super::queue::{Pop, RequestQueue};
+use super::shard::{
+    route_batch, ShardPlan, ShardReport, ShardStatsCell, SpillPolicy,
+};
 use super::worker::{
-    process_batch, InferExecutor, NullExecutor, PjrtExecutor, WorkerCtx,
+    shard_worker_loop, InferExecutor, NullExecutor, PjrtExecutor, WorkerCtx,
 };
 use super::{Request, ServeClock};
 
@@ -44,13 +55,20 @@ pub struct ServeConfig {
     pub deadline_us: u64,
     /// Community-bias knob `p ∈ [0, 1]`.
     pub community_bias: f64,
-    /// Worker threads running sampling + assembly + the executable.
+    /// Worker threads running sampling + assembly + the executable,
+    /// distributed round-robin across shards (≥ 1 per shard).
     pub workers: usize,
     /// Bounded request-queue capacity (backpressure bound).
     pub queue_cap: usize,
-    /// Sharded feature cache: total rows and shard count.
+    /// Feature cache: total rows across all device shards, and the
+    /// mutex-striping count *within* each shard's cache.
     pub cache_rows: usize,
     pub cache_shards: usize,
+    /// Logical device shards; communities are partitioned across them
+    /// and each runs its own worker pool + feature cache.
+    pub shards: usize,
+    /// What to do with micro-batches that span shards.
+    pub spill: SpillPolicy,
     /// Neighbor fanouts used when no artifact dictates them.
     pub fanouts: Vec<usize>,
     pub seed: u64,
@@ -67,6 +85,8 @@ impl ServeConfig {
             queue_cap: 1024,
             cache_rows: (ds.n() / 8).max(64),
             cache_shards: 8,
+            shards: 1,
+            spill: SpillPolicy::Strict,
             fanouts: vec![10, 10],
             seed: 0,
         }
@@ -95,9 +115,13 @@ pub struct ServeReport {
     pub cache_hits: u64,
     pub cache_misses: u64,
     pub cache_hit_rate: f64,
-    /// Effective cache capacity in rows (geometry rounds the
-    /// `cache_rows` knob up to whole sets).
+    /// Effective cache capacity in rows, summed over shards (geometry
+    /// rounds the `cache_rows` knob up to whole sets).
     pub cache_rows: usize,
+    pub n_shards: usize,
+    pub spill: String,
+    /// Per-shard breakdown (one entry even when `n_shards == 1`).
+    pub shards: Vec<ShardReport>,
 }
 
 impl ServeReport {
@@ -123,17 +147,32 @@ impl ServeReport {
             ("cache_misses", num(self.cache_misses as f64)),
             ("cache_hit_rate", num(self.cache_hit_rate)),
             ("cache_rows_effective", num(self.cache_rows as f64)),
+            ("n_shards", num(self.n_shards as f64)),
+            ("spill", s(&self.spill)),
+            (
+                "shards",
+                arr(self.shards.iter().map(|sh| sh.to_json()).collect()),
+            ),
         ])
+    }
+
+    /// Requests processed off their owning shard, summed over shards
+    /// (0 under strict spill).
+    pub fn foreign_requests(&self) -> usize {
+        self.shards.iter().map(|sh| sh.foreign_requests).sum()
     }
 
     pub fn summary(&self) -> String {
         format!(
-            "[serve] {} exec={} p={:.2}: {} req in {:.2}s = {:.0} req/s | \
-             lat ms p50 {:.2} p95 {:.2} p99 {:.2} | miss-deadline {:.1}% | \
-             cache hit {:.1}% | {:.1} req/batch",
+            "[serve] {} exec={} p={:.2} shards={} spill={}: {} req in \
+             {:.2}s = {:.0} req/s | lat ms p50 {:.2} p95 {:.2} p99 {:.2} | \
+             miss-deadline {:.1}% | cache hit {:.1}% | {:.1} req/batch | \
+             foreign {}",
             self.dataset,
             self.executor,
             self.community_bias,
+            self.n_shards,
+            self.spill,
             self.requests,
             self.wall_s,
             self.throughput_rps,
@@ -143,15 +182,9 @@ impl ServeReport {
             self.deadline_miss_frac * 100.0,
             self.cache_hit_rate * 100.0,
             self.mean_batch_size,
+            self.foreign_requests(),
         )
     }
-}
-
-#[derive(Default)]
-struct EngineStats {
-    batches: usize,
-    requests: usize,
-    input_nodes: usize,
 }
 
 /// Synthetic infer spec for artifact-less serving: resident-feature
@@ -249,35 +282,74 @@ pub fn run(
     // never coalesce past the artifact's root capacity
     let root_cap = meta.spec.node_caps.last().copied().unwrap_or(scfg.batch_size);
     let batch_size = scfg.batch_size.clamp(1, root_cap.max(1));
+    let n_shards = scfg.shards.max(1);
     let queue: RequestQueue<Request> = RequestQueue::new(scfg.queue_cap);
-    let cache = ShardedFeatureCache::new(&FeatureCacheConfig {
-        rows: scfg.cache_rows,
-        shards: scfg.cache_shards,
-        ways: 8,
-        feat_dim: ds.feat_dim,
-    });
+
+    // consistent community -> shard assignment from the Louvain labels
+    let plan = ShardPlan::build(&ds.community, ds.num_comms, n_shards);
+
+    // the cache_rows budget is split across device shards: each shard
+    // only ever caches its own communities (under strict spill), so
+    // per-shard capacity covers a proportionally smaller working set
+    let rows_per_shard = scfg.cache_rows.div_ceil(n_shards).max(1);
+    let caches: Vec<ShardedFeatureCache> = (0..n_shards)
+        .map(|_| {
+            ShardedFeatureCache::new(&FeatureCacheConfig {
+                rows: rows_per_shard,
+                shards: scfg.cache_shards,
+                ways: 8,
+                feat_dim: ds.feat_dim,
+            })
+        })
+        .collect();
+
     let records: Mutex<Vec<ReqRecord>> = Mutex::new(Vec::new());
-    let stats: Mutex<EngineStats> = Mutex::new(EngineStats::default());
+    let shard_cells: Vec<Mutex<ShardStatsCell>> =
+        (0..n_shards).map(|_| Mutex::new(ShardStatsCell::default())).collect();
+
+    // workers round-robin across shards, at least one each
+    let total_workers = scfg.workers.max(1).max(n_shards);
+    let mut shard_workers = vec![0usize; n_shards];
+    for w in 0..total_workers {
+        shard_workers[w % n_shards] += 1;
+    }
 
     // popularity ranking: rank -> node, via a seeded shuffle so hot
     // nodes scatter across communities
     let perm = loadgen::popularity_perm(ds.n(), lcfg.seed);
     let zipf = loadgen::ZipfSampler::new(ds.n(), lcfg.zipf_s);
 
-    let (batch_tx, batch_rx) = sync_channel::<Vec<Request>>(scfg.workers.max(1) * 2);
-    let batch_rx: Mutex<Receiver<Vec<Request>>> = Mutex::new(batch_rx);
+    // one bounded batch channel per shard; its capacity doubles as the
+    // steal policy's overload threshold
+    let mut txs = Vec::with_capacity(n_shards);
+    let mut rxs: Vec<Mutex<Receiver<Vec<Request>>>> =
+        Vec::with_capacity(n_shards);
+    let mut caps = Vec::with_capacity(n_shards);
+    for &nw in &shard_workers {
+        let cap = nw * 2;
+        let (tx, rx) = sync_channel::<Vec<Request>>(cap);
+        txs.push(tx);
+        rxs.push(Mutex::new(rx));
+        caps.push(cap);
+    }
+    let depths: Vec<AtomicUsize> =
+        (0..n_shards).map(|_| AtomicUsize::new(0)).collect();
 
     // start the clock only once setup (popularity shuffle, Zipf CDF,
-    // cache slabs) is done, so wall_s measures serving, not O(n) prep
+    // cache slabs, shard plan) is done, so wall_s measures serving,
+    // not O(n) prep
     let clock = ServeClock::start();
 
     std::thread::scope(|scope| {
-        // batcher thread owns batch_tx; workers see channel close when
-        // it exits
+        // batcher thread owns every shard sender; workers see their
+        // channel close when it exits
         let batcher_handle = {
             let queue = &queue;
             let clock = &clock;
             let community = &ds.community;
+            let plan = &plan;
+            let depths = &depths;
+            let caps = &caps;
             scope.spawn(move || {
                 let mut mb = MicroBatcher::new(
                     BatcherConfig {
@@ -287,9 +359,30 @@ pub fn run(
                     },
                     scfg.seed,
                 );
+                // route one formed batch to its shard(s); false once
+                // any shard channel has closed. `rr` rotates depth-tie
+                // breaks across shards batch by batch.
+                let mut rr = 0usize;
+                let mut send_routed = |b: Vec<Request>| -> bool {
+                    let snapshot: Vec<usize> = depths
+                        .iter()
+                        .map(|d| d.load(Ordering::Relaxed))
+                        .collect();
+                    let routed = route_batch(
+                        plan, community, scfg.spill, &snapshot, caps, rr, b,
+                    );
+                    rr = rr.wrapping_add(1);
+                    for (sid, sub) in routed {
+                        depths[sid].fetch_add(1, Ordering::Relaxed);
+                        if txs[sid].send(sub).is_err() {
+                            return false;
+                        }
+                    }
+                    true
+                };
                 loop {
                     if let Some(b) = mb.poll(clock.now_us(), community) {
-                        if batch_tx.send(b).is_err() {
+                        if !send_routed(b) {
                             return;
                         }
                         continue;
@@ -313,7 +406,7 @@ pub fn run(
                         Pop::Closed => {
                             // drain: everything is overdue at t = ∞
                             while let Some(b) = mb.poll(u64::MAX, community) {
-                                if batch_tx.send(b).is_err() {
+                                if !send_routed(b) {
                                     return;
                                 }
                             }
@@ -324,31 +417,31 @@ pub fn run(
             })
         };
 
-        // worker pool
+        // per-shard worker pools, each against its shard's cache
         let mut worker_handles = Vec::new();
-        for w in 0..scfg.workers.max(1) {
-            let ctx = WorkerCtx {
-                ds,
-                meta,
-                cache: &cache,
-                exec,
-                clock: &clock,
-            };
-            let batch_rx = &batch_rx;
-            let stats = &stats;
-            let seed = scfg.seed ^ (w as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
-            worker_handles.push(scope.spawn(move || {
-                let mut rng = Rng::new(seed ^ 0x5EBF_11);
-                loop {
-                    let next = batch_rx.lock().unwrap().recv();
-                    let Ok(reqs) = next else { return };
-                    let out = process_batch(&ctx, reqs, &mut rng);
-                    let mut g = stats.lock().unwrap();
-                    g.batches += 1;
-                    g.requests += out.requests;
-                    g.input_nodes += out.input_nodes;
-                }
-            }));
+        let mut widx = 0u64;
+        for sidx in 0..n_shards {
+            for _ in 0..shard_workers[sidx] {
+                let ctx = WorkerCtx {
+                    ds,
+                    meta,
+                    cache: &caches[sidx],
+                    exec,
+                    clock: &clock,
+                };
+                let rx = &rxs[sidx];
+                let cell = &shard_cells[sidx];
+                let depth = &depths[sidx];
+                let plan = &plan;
+                let seed = scfg.seed ^ widx.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+                widx += 1;
+                worker_handles.push(scope.spawn(move || {
+                    let mut rng = Rng::new(seed ^ 0x5EBF_11);
+                    shard_worker_loop(
+                        &ctx, sidx, plan, rx, depth, cell, &mut rng,
+                    );
+                }));
+            }
         }
 
         // closed-loop clients
@@ -380,8 +473,23 @@ pub fn run(
 
     let wall_s = clock.now_us() as f64 / 1e6;
     let records = records.into_inner().unwrap();
-    let stats = stats.into_inner().unwrap();
-    let cache_stats = cache.stats();
+
+    // roll per-shard cells + caches up into shard reports and totals
+    let mut shard_reports = Vec::with_capacity(n_shards);
+    let mut cache_stats = CacheStats::default();
+    let mut stats_batches = 0usize;
+    let mut stats_requests = 0usize;
+    let mut stats_input_nodes = 0usize;
+    for (sidx, cell) in shard_cells.into_iter().enumerate() {
+        let cell = cell.into_inner().unwrap();
+        let cstats = caches[sidx].stats();
+        cache_stats.hits += cstats.hits;
+        cache_stats.misses += cstats.misses;
+        stats_batches += cell.batches;
+        stats_requests += cell.requests;
+        stats_input_nodes += cell.input_nodes;
+        shard_reports.push(ShardReport::from_cell(sidx, &plan, &cell, cstats));
+    }
 
     // errored requests count toward errors/deadlines, not latency
     // percentiles (their latency reflects the failure, not serving)
@@ -393,7 +501,7 @@ pub fn run(
     let misses = records.iter().filter(|r| r.deadline_missed).count();
     let errors = records.iter().filter(|r| r.error).count();
     let n = records.len();
-    let nb = stats.batches.max(1);
+    let nb = stats_batches.max(1);
     // keep the report finite (and its JSON parseable) on empty runs
     let pct = |p: f64| if lats_ms.is_empty() { 0.0 } else { percentile(&lats_ms, p) };
     let mean_ms = if lats_ms.is_empty() {
@@ -415,13 +523,16 @@ pub fn run(
         lat_p99_ms: pct(99.0),
         lat_max_ms: lats_ms.iter().cloned().fold(0.0, f64::max),
         deadline_miss_frac: misses as f64 / n.max(1) as f64,
-        batches: stats.batches,
-        mean_batch_size: stats.requests as f64 / nb as f64,
-        mean_input_nodes: stats.input_nodes as f64 / nb as f64,
+        batches: stats_batches,
+        mean_batch_size: stats_requests as f64 / nb as f64,
+        mean_input_nodes: stats_input_nodes as f64 / nb as f64,
         cache_hits: cache_stats.hits,
         cache_misses: cache_stats.misses,
         cache_hit_rate: cache_stats.hit_rate(),
-        cache_rows: cache.rows(),
+        cache_rows: caches.iter().map(|c| c.rows()).sum(),
+        n_shards,
+        spill: scfg.spill.name().to_string(),
+        shards: shard_reports,
     })
 }
 
@@ -462,9 +573,51 @@ mod tests {
         assert!(rep.batches >= 1);
         assert!(rep.cache_hits + rep.cache_misses > 0, "cache not exercised");
         assert!((0.0..=1.0).contains(&rep.cache_hit_rate));
+        // single-device = one shard owning everything, nothing foreign
+        assert_eq!(rep.n_shards, 1);
+        assert_eq!(rep.shards.len(), 1);
+        assert_eq!(rep.shards[0].owned_nodes, ds.n());
+        assert_eq!(rep.foreign_requests(), 0);
         // report serializes
         let j = rep.to_json().to_string_pretty();
         assert!(j.contains("throughput_rps"));
+        assert!(j.contains("n_shards"));
+        assert!(j.contains("foreign_requests"));
+    }
+
+    // NOTE: the strict-spill affinity acceptance check (2/4 shards,
+    // zero foreign requests, per-shard accounting sums) lives in
+    // rust/tests/serve_shard.rs — not duplicated here.
+
+    #[test]
+    fn spill_policies_run_end_to_end() {
+        let ds = tiny();
+        let meta = synthetic_infer_meta(&ds, 8, &[5, 5]);
+        let exec = NullExecutor { num_classes: ds.num_classes };
+        for spill in
+            [SpillPolicy::Strict, SpillPolicy::Steal, SpillPolicy::Broadcast]
+        {
+            let mut scfg = ServeConfig::for_dataset(&ds);
+            scfg.batch_size = 8;
+            scfg.community_bias = 0.5;
+            scfg.workers = 2;
+            scfg.shards = 2;
+            scfg.spill = spill;
+            scfg.fanouts = vec![5, 5];
+            let lcfg = LoadConfig {
+                clients: 2,
+                requests_per_client: 20,
+                zipf_s: 1.2,
+                seed: 11,
+            };
+            let rep = run(&ds, &meta, &exec, &scfg, &lcfg).unwrap();
+            assert_eq!(rep.requests, 40, "spill={}", spill.name());
+            assert_eq!(rep.errors, 0, "spill={}", spill.name());
+            assert_eq!(rep.spill, spill.name());
+            if spill == SpillPolicy::Strict {
+                assert_eq!(rep.foreign_requests(), 0);
+            }
+        }
     }
 
     #[test]

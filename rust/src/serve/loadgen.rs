@@ -163,4 +163,51 @@ mod tests {
         assert_eq!(sorted, (0..500u32).collect::<Vec<_>>());
         assert_ne!(p, (0..500u32).collect::<Vec<_>>());
     }
+
+    /// Statistical check: empirical rank frequencies match the Zipf
+    /// pmf `p(r) ∝ (r+1)^-s` at a fixed seed. 200k draws over 50 ranks
+    /// put the expected per-rank sampling error well below the bounds
+    /// asserted here (the seed makes the test exactly reproducible).
+    #[test]
+    fn zipf_empirical_frequencies_match_pmf() {
+        let n = 50usize;
+        let s = 1.1f64;
+        let draws = 200_000usize;
+        let z = ZipfSampler::new(n, s);
+        let mut rng = Rng::new(42);
+        let mut counts = vec![0usize; n];
+        for _ in 0..draws {
+            counts[z.sample(&mut rng)] += 1;
+        }
+        // reference pmf
+        let weights: Vec<f64> =
+            (0..n).map(|r| 1.0 / ((r + 1) as f64).powf(s)).collect();
+        let total: f64 = weights.iter().sum();
+        let pmf: Vec<f64> = weights.iter().map(|w| w / total).collect();
+        // total-variation distance over all ranks
+        let tv: f64 = counts
+            .iter()
+            .zip(&pmf)
+            .map(|(&c, &p)| (c as f64 / draws as f64 - p).abs())
+            .sum::<f64>()
+            / 2.0;
+        assert!(tv < 0.01, "TV distance to Zipf pmf too large: {tv:.4}");
+        // the head rank individually: ~27% of mass, tight relative bound
+        let emp0 = counts[0] as f64 / draws as f64;
+        let rel = (emp0 - pmf[0]).abs() / pmf[0];
+        assert!(rel < 0.05, "head rank off by {:.1}%", rel * 100.0);
+        // monotone-ish: the pmf head must dominate the tail empirically
+        assert!(counts[0] > counts[n - 1] * 5, "no Zipf skew visible");
+    }
+
+    /// The popularity permutation is a pure function of (n, seed):
+    /// bitwise-identical across calls, different across seeds.
+    #[test]
+    fn popularity_perm_is_bitwise_stable_across_calls() {
+        let a = popularity_perm(1_000, 7);
+        let b = popularity_perm(1_000, 7);
+        assert_eq!(a, b, "same (n, seed) must give the same permutation");
+        let c = popularity_perm(1_000, 8);
+        assert_ne!(a, c, "different seed must reshuffle");
+    }
 }

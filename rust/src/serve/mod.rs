@@ -14,11 +14,15 @@
 //! overlap).
 //!
 //! Pipeline: [`queue::RequestQueue`] → [`batcher::MicroBatcher`] →
-//! [`worker`] pool (sampling + cache-fed assembly + the PJRT infer
-//! executable, or a no-op executor when AOT artifacts are absent) →
-//! per-request replies. [`loadgen`] drives the closed loop with a
-//! Zipf-skewed trace and [`engine::run`] ties it all together and
-//! produces the throughput / tail-latency report
+//! [`shard`] router (communities partitioned across `n_shards` logical
+//! devices; strict/steal/broadcast spill for cross-shard batches) →
+//! per-shard [`worker`] pools (sampling + cache-fed assembly + the
+//! PJRT infer executable, or a no-op executor when AOT artifacts are
+//! absent) → per-request replies. Each shard owns its own feature
+//! cache, so under strict spill a shard's cache only ever sees its own
+//! communities. [`loadgen`] drives the closed loop with a Zipf-skewed
+//! trace and [`engine::run`] ties it all together and produces the
+//! throughput / tail-latency report with a per-shard breakdown
 //! (`comm-rand serve bench`, `comm-rand exp serve`).
 
 pub mod batcher;
@@ -26,6 +30,7 @@ pub mod cache;
 pub mod engine;
 pub mod loadgen;
 pub mod queue;
+pub mod shard;
 pub mod worker;
 
 pub use batcher::{BatcherConfig, MicroBatcher};
@@ -33,6 +38,7 @@ pub use cache::{CacheStats, FeatureCacheConfig, ShardedFeatureCache};
 pub use engine::{run, ServeConfig, ServeReport};
 pub use loadgen::LoadConfig;
 pub use queue::RequestQueue;
+pub use shard::{ShardPlan, ShardReport, SpillPolicy};
 pub use worker::{InferExecutor, NullExecutor, PjrtExecutor};
 
 use std::time::Instant;

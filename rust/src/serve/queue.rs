@@ -57,6 +57,21 @@ impl<T> RequestQueue<T> {
         }
     }
 
+    /// Non-blocking push; returns the item back when the queue is full
+    /// (capacity rejection) or closed, so callers that would rather
+    /// shed load than block — admission control, spill paths — never
+    /// lose the request.
+    pub fn try_push(&self, item: T) -> Result<(), T> {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed || g.q.len() >= self.cap {
+            return Err(item);
+        }
+        g.q.push_back(item);
+        drop(g);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
     /// Non-blocking pop.
     pub fn try_pop(&self) -> Option<T> {
         let mut g = self.inner.lock().unwrap();
@@ -180,5 +195,109 @@ mod tests {
             q.close();
             assert!(h.join().unwrap().is_err());
         });
+    }
+
+    /// Multi-producer stress: every pushed item is popped exactly once
+    /// and each producer's items keep their relative (FIFO) order.
+    #[test]
+    fn multi_producer_delivers_everything_once_in_order() {
+        const PRODUCERS: u32 = 4;
+        const PER: u32 = 100;
+        let q: RequestQueue<u32> = RequestQueue::new(8); // small: forces blocking
+        let mut got = Vec::new();
+        std::thread::scope(|s| {
+            for t in 0..PRODUCERS {
+                let q = &q;
+                s.spawn(move || {
+                    for k in 0..PER {
+                        q.push(t * 1_000 + k).unwrap();
+                    }
+                });
+            }
+            while got.len() < (PRODUCERS * PER) as usize {
+                match q.pop_timeout(Duration::from_secs(5)) {
+                    Pop::Item(v) => got.push(v),
+                    Pop::TimedOut => panic!("starved with producers alive"),
+                    Pop::Closed => panic!("nobody closed the queue"),
+                }
+            }
+        });
+        assert_eq!(got.len(), (PRODUCERS * PER) as usize);
+        let mut sorted = got.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), got.len(), "duplicate delivery");
+        // per-producer FIFO: each producer's subsequence is increasing
+        for t in 0..PRODUCERS {
+            let seq: Vec<u32> =
+                got.iter().copied().filter(|v| v / 1_000 == t).collect();
+            assert_eq!(seq.len(), PER as usize, "producer {t} lost items");
+            assert!(
+                seq.windows(2).all(|w| w[0] < w[1]),
+                "producer {t} reordered: {seq:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn try_push_full_queue_rejects_and_returns_item() {
+        let q = RequestQueue::new(2);
+        assert!(q.try_push(1u32).is_ok());
+        assert!(q.try_push(2).is_ok());
+        // full: the rejected item comes back to the caller intact
+        assert_eq!(q.try_push(3).unwrap_err(), 3);
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.try_pop(), Some(1));
+        assert!(q.try_push(3).is_ok());
+        assert_eq!(q.try_pop(), Some(2));
+        assert_eq!(q.try_pop(), Some(3));
+    }
+
+    #[test]
+    fn try_push_after_close_returns_item() {
+        let q = RequestQueue::new(4);
+        q.close();
+        assert_eq!(q.try_push(9u32).unwrap_err(), 9);
+    }
+
+    /// A pop already blocked on an empty queue is woken by `close` and
+    /// reports `Closed` (not a timeout) once nothing is left to drain.
+    #[test]
+    fn close_wakes_pending_pop_with_closed() {
+        let q: RequestQueue<u32> = RequestQueue::new(4);
+        std::thread::scope(|s| {
+            let h = s.spawn(|| q.pop_timeout(Duration::from_secs(10)));
+            std::thread::sleep(Duration::from_millis(20));
+            q.close();
+            match h.join().unwrap() {
+                Pop::Closed => {}
+                Pop::Item(v) => panic!("phantom item {v}"),
+                Pop::TimedOut => panic!("blocked pop timed out, not woken"),
+            }
+        });
+    }
+
+    /// Items queued before `close` drain in FIFO order before `Closed`
+    /// is reported; `push` fails throughout.
+    #[test]
+    fn close_semantics_drain_then_closed() {
+        let q = RequestQueue::new(8);
+        for i in 0..3u32 {
+            q.push(i).unwrap();
+        }
+        q.close();
+        assert!(q.push(99).is_err(), "push after close must fail");
+        for i in 0..3u32 {
+            match q.pop_timeout(Duration::from_millis(5)) {
+                Pop::Item(v) => assert_eq!(v, i),
+                _ => panic!("expected queued item {i}"),
+            }
+        }
+        for _ in 0..2 {
+            match q.pop_timeout(Duration::from_millis(5)) {
+                Pop::Closed => {}
+                _ => panic!("drained queue must report Closed"),
+            }
+        }
     }
 }

@@ -1,0 +1,486 @@
+//! Multi-shard community-affinity layer: partition communities across
+//! `n_shards` logical devices and route every micro-batch to the shard
+//! that owns its community.
+//!
+//! COMM-RAND's locality argument is that community structure turns
+//! irregular feature access into reuse; on one device the serving
+//! cache captures that reuse, and sharding extends it across devices:
+//! each shard's feature cache only ever sees its own communities, so
+//! per-device working sets shrink by roughly the shard count
+//! (the same cross-batch-reuse argument Cooperative Minibatching makes,
+//! arXiv 2310.12403). Shards here are *logical* devices — each gets its
+//! own worker pool, feature cache and batch channel; binding each shard
+//! to a distinct PJRT device is the remaining mechanical step.
+//!
+//! Three pieces:
+//!
+//! * [`ShardPlan`] — deterministic community → shard assignment
+//!   (largest community first into the lightest shard, node-balanced),
+//!   built once from the Louvain labels.
+//! * [`route_batch`] — splits or redirects a formed micro-batch
+//!   according to the [`SpillPolicy`] when its members span shards.
+//! * [`ShardStatsCell`] / [`ShardReport`] — per-shard accounting
+//!   (queue depth, affinity violations, latency percentiles, cache hit
+//!   rate) rolled up into the engine's `ServeReport`.
+
+use anyhow::{bail, Result};
+
+use crate::util::json::{num, obj, Json};
+use crate::util::stats::percentile;
+
+use super::Request;
+
+/// What to do with a micro-batch whose requests span several shards.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpillPolicy {
+    /// Split the batch: every request is processed by the shard owning
+    /// its community, always. Maximum cache affinity; cross-shard
+    /// batches become several smaller per-shard batches.
+    Strict,
+    /// Keep the batch whole on the majority owner's shard, but let the
+    /// least-loaded shard steal it when the owner's channel is full.
+    /// Affinity most of the time, load balance under pressure.
+    Steal,
+    /// Ignore affinity: the whole batch goes to the least-loaded
+    /// shard, so every shard's cache eventually sees every community
+    /// (the no-affinity baseline the other two policies are measured
+    /// against).
+    Broadcast,
+}
+
+impl SpillPolicy {
+    pub fn parse(s: &str) -> Result<SpillPolicy> {
+        match s {
+            "strict" => Ok(SpillPolicy::Strict),
+            "steal" => Ok(SpillPolicy::Steal),
+            "broadcast" => Ok(SpillPolicy::Broadcast),
+            other => bail!(
+                "unknown spill policy {other:?} (try: strict | steal | broadcast)"
+            ),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SpillPolicy::Strict => "strict",
+            SpillPolicy::Steal => "steal",
+            SpillPolicy::Broadcast => "broadcast",
+        }
+    }
+}
+
+/// Deterministic community → shard assignment.
+///
+/// Communities are packed largest-first into the lightest shard (by
+/// node count, ties broken by lower id on both sides), the same greedy
+/// balancing [`crate::community::pack_partitions`] uses for the
+/// ClusterGCN baseline — but keyed purely by the label array, so the
+/// same Louvain labels always yield the same plan on every run and
+/// every process.
+pub struct ShardPlan {
+    n_shards: usize,
+    /// community id → owning shard.
+    comm_shard: Vec<u32>,
+    /// Per shard: number of (non-empty) communities owned.
+    owned_comms: Vec<usize>,
+    /// Per shard: number of nodes owned.
+    owned_nodes: Vec<usize>,
+}
+
+impl ShardPlan {
+    pub fn build(community: &[u32], num_comms: usize, n_shards: usize) -> ShardPlan {
+        let n_shards = n_shards.max(1);
+        let mut size = vec![0usize; num_comms.max(1)];
+        for &c in community {
+            size[c as usize] += 1;
+        }
+        let mut order: Vec<usize> = (0..size.len()).collect();
+        order.sort_by_key(|&c| (std::cmp::Reverse(size[c]), c));
+        let mut comm_shard = vec![0u32; size.len()];
+        let mut owned_comms = vec![0usize; n_shards];
+        let mut owned_nodes = vec![0usize; n_shards];
+        for c in order {
+            let lightest = (0..n_shards)
+                .min_by_key(|&s| (owned_nodes[s], s))
+                .unwrap();
+            comm_shard[c] = lightest as u32;
+            owned_nodes[lightest] += size[c];
+            if size[c] > 0 {
+                owned_comms[lightest] += 1;
+            }
+        }
+        ShardPlan { n_shards, comm_shard, owned_comms, owned_nodes }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.n_shards
+    }
+
+    pub fn shard_of_comm(&self, comm: u32) -> usize {
+        self.comm_shard[comm as usize] as usize
+    }
+
+    pub fn shard_of_node(&self, community: &[u32], node: u32) -> usize {
+        self.shard_of_comm(community[node as usize])
+    }
+
+    pub fn owned_comms(&self, shard: usize) -> usize {
+        self.owned_comms[shard]
+    }
+
+    pub fn owned_nodes(&self, shard: usize) -> usize {
+        self.owned_nodes[shard]
+    }
+}
+
+/// Route one formed micro-batch to shards under `policy`.
+///
+/// `depths` is a snapshot of each shard's queued-batch count and
+/// `caps` the per-shard channel capacity (used by [`SpillPolicy::Steal`]
+/// to detect an overloaded owner). `rr` is a per-batch counter the
+/// caller increments: depth ties break round-robin from it, so a fast
+/// no-op executor (where depth snapshots are almost always all-zero)
+/// still spreads broadcast/steal traffic over every shard instead of
+/// collapsing onto shard 0. Returns `(shard, sub-batch)` pairs; every
+/// request appears in exactly one sub-batch.
+pub fn route_batch(
+    plan: &ShardPlan,
+    community: &[u32],
+    policy: SpillPolicy,
+    depths: &[usize],
+    caps: &[usize],
+    rr: usize,
+    batch: Vec<Request>,
+) -> Vec<(usize, Vec<Request>)> {
+    let n = plan.n_shards();
+    if n == 1 || batch.is_empty() {
+        return vec![(0, batch)];
+    }
+    match policy {
+        SpillPolicy::Strict => {
+            let mut per: Vec<Vec<Request>> = (0..n).map(|_| Vec::new()).collect();
+            for r in batch {
+                per[plan.shard_of_node(community, r.node)].push(r);
+            }
+            per.into_iter()
+                .enumerate()
+                .filter(|(_, b)| !b.is_empty())
+                .collect()
+        }
+        SpillPolicy::Steal => {
+            let owner = majority_owner(plan, community, &batch);
+            let target = if depths[owner] >= caps[owner].max(1) {
+                least_loaded(depths, rr)
+            } else {
+                owner
+            };
+            vec![(target, batch)]
+        }
+        SpillPolicy::Broadcast => vec![(least_loaded(depths, rr), batch)],
+    }
+}
+
+/// Shard owning the plurality of the batch's requests (ties → lower
+/// shard id).
+fn majority_owner(plan: &ShardPlan, community: &[u32], batch: &[Request]) -> usize {
+    let mut count = vec![0usize; plan.n_shards()];
+    for r in batch {
+        count[plan.shard_of_node(community, r.node)] += 1;
+    }
+    (0..count.len()).max_by_key(|&s| (count[s], usize::MAX - s)).unwrap_or(0)
+}
+
+/// Shallowest queue, scanning from `start` so equal depths rotate
+/// instead of always electing shard 0.
+fn least_loaded(depths: &[usize], start: usize) -> usize {
+    let n = depths.len().max(1);
+    (0..n)
+        .map(|k| (start + k) % n)
+        .min_by_key(|&s| depths.get(s).copied().unwrap_or(0))
+        .unwrap_or(0)
+}
+
+/// Mutable per-shard accounting, written by that shard's workers.
+#[derive(Clone, Debug, Default)]
+pub struct ShardStatsCell {
+    pub batches: usize,
+    pub requests: usize,
+    /// Requests processed here whose community this shard does NOT
+    /// own — always 0 under [`SpillPolicy::Strict`].
+    pub foreign_requests: usize,
+    /// Unique input-frontier nodes across this shard's batches.
+    pub input_nodes: usize,
+    /// Max queued batches observed on this shard's channel.
+    pub queue_depth_max: usize,
+    /// Per-request completion latency, µs (error replies excluded, so
+    /// per-shard percentiles share the global report's definition).
+    pub lat_us: Vec<u64>,
+}
+
+/// Per-shard slice of the end-of-run report.
+#[derive(Clone, Debug)]
+pub struct ShardReport {
+    pub id: usize,
+    pub owned_comms: usize,
+    pub owned_nodes: usize,
+    pub requests: usize,
+    pub foreign_requests: usize,
+    pub batches: usize,
+    pub queue_depth_max: usize,
+    pub lat_p50_ms: f64,
+    pub lat_p95_ms: f64,
+    pub lat_p99_ms: f64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub cache_hit_rate: f64,
+}
+
+impl ShardReport {
+    pub fn from_cell(
+        id: usize,
+        plan: &ShardPlan,
+        cell: &ShardStatsCell,
+        cache: super::cache::CacheStats,
+    ) -> ShardReport {
+        let lats_ms: Vec<f64> =
+            cell.lat_us.iter().map(|&u| u as f64 / 1e3).collect();
+        let pct = |p: f64| {
+            if lats_ms.is_empty() { 0.0 } else { percentile(&lats_ms, p) }
+        };
+        ShardReport {
+            id,
+            owned_comms: plan.owned_comms(id),
+            owned_nodes: plan.owned_nodes(id),
+            requests: cell.requests,
+            foreign_requests: cell.foreign_requests,
+            batches: cell.batches,
+            queue_depth_max: cell.queue_depth_max,
+            lat_p50_ms: pct(50.0),
+            lat_p95_ms: pct(95.0),
+            lat_p99_ms: pct(99.0),
+            cache_hits: cache.hits,
+            cache_misses: cache.misses,
+            cache_hit_rate: cache.hit_rate(),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("shard", num(self.id as f64)),
+            ("owned_comms", num(self.owned_comms as f64)),
+            ("owned_nodes", num(self.owned_nodes as f64)),
+            ("requests", num(self.requests as f64)),
+            ("foreign_requests", num(self.foreign_requests as f64)),
+            ("batches", num(self.batches as f64)),
+            ("queue_depth_max", num(self.queue_depth_max as f64)),
+            ("lat_p50_ms", num(self.lat_p50_ms)),
+            ("lat_p95_ms", num(self.lat_p95_ms)),
+            ("lat_p99_ms", num(self.lat_p99_ms)),
+            ("cache_hits", num(self.cache_hits as f64)),
+            ("cache_misses", num(self.cache_misses as f64)),
+            ("cache_hit_rate", num(self.cache_hit_rate)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+
+    fn req(id: u64, node: u32) -> Request {
+        let (tx, _rx) = mpsc::channel();
+        Request { id, node, arrive_us: 0, deadline_us: 1_000_000, reply: tx }
+    }
+
+    fn ids(batch: &[Request]) -> Vec<u64> {
+        batch.iter().map(|r| r.id).collect()
+    }
+
+    #[test]
+    fn plan_covers_every_community_and_balances_nodes() {
+        // 6 communities with skewed sizes over 2 shards
+        let sizes = [40usize, 30, 10, 10, 5, 5];
+        let mut community = Vec::new();
+        for (c, &s) in sizes.iter().enumerate() {
+            let len = community.len();
+            community.resize(len + s, c as u32);
+        }
+        let plan = ShardPlan::build(&community, sizes.len(), 2);
+        assert_eq!(plan.n_shards(), 2);
+        for c in 0..sizes.len() as u32 {
+            assert!(plan.shard_of_comm(c) < 2);
+        }
+        let total: usize = (0..2).map(|s| plan.owned_nodes(s)).sum();
+        assert_eq!(total, community.len());
+        let comms: usize = (0..2).map(|s| plan.owned_comms(s)).sum();
+        assert_eq!(comms, sizes.len());
+        // largest-first greedy keeps the split within the largest block
+        let diff = plan.owned_nodes(0).abs_diff(plan.owned_nodes(1));
+        assert!(diff <= 40, "unbalanced: {diff}");
+    }
+
+    #[test]
+    fn plan_is_deterministic() {
+        let community: Vec<u32> = (0..997u32).map(|v| v % 13).collect();
+        let a = ShardPlan::build(&community, 13, 4);
+        let b = ShardPlan::build(&community, 13, 4);
+        assert_eq!(a.comm_shard, b.comm_shard);
+    }
+
+    #[test]
+    fn plan_single_shard_owns_everything() {
+        let community: Vec<u32> = (0..100u32).map(|v| v % 5).collect();
+        let plan = ShardPlan::build(&community, 5, 1);
+        assert_eq!(plan.owned_nodes(0), 100);
+        assert_eq!(plan.owned_comms(0), 5);
+        for c in 0..5 {
+            assert_eq!(plan.shard_of_comm(c), 0);
+        }
+    }
+
+    #[test]
+    fn strict_splits_by_owning_shard() {
+        // 2 communities, one per shard
+        let community = vec![0u32, 0, 1, 1];
+        let plan = ShardPlan::build(&community, 2, 2);
+        let batch = vec![req(1, 0), req(2, 2), req(3, 1), req(4, 3)];
+        let routed = route_batch(
+            &plan,
+            &community,
+            SpillPolicy::Strict,
+            &[0, 0],
+            &[4, 4],
+            0,
+            batch,
+        );
+        assert_eq!(routed.len(), 2);
+        let total: usize = routed.iter().map(|(_, b)| b.len()).sum();
+        assert_eq!(total, 4);
+        for (shard, sub) in &routed {
+            for r in sub {
+                assert_eq!(
+                    plan.shard_of_node(&community, r.node),
+                    *shard,
+                    "request {} on foreign shard",
+                    r.id
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn steal_keeps_batch_whole_on_majority_owner() {
+        let community = vec![0u32, 0, 1, 1];
+        let plan = ShardPlan::build(&community, 2, 2);
+        let owner0 = plan.shard_of_comm(0);
+        // 2 requests from community 0, 1 from community 1
+        let batch = vec![req(1, 0), req(2, 1), req(3, 2)];
+        let routed = route_batch(
+            &plan,
+            &community,
+            SpillPolicy::Steal,
+            &[0, 0],
+            &[4, 4],
+            0,
+            batch,
+        );
+        assert_eq!(routed.len(), 1);
+        assert_eq!(routed[0].0, owner0);
+        assert_eq!(ids(&routed[0].1), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn steal_spills_to_least_loaded_when_owner_full() {
+        let community = vec![0u32, 0, 1, 1];
+        let plan = ShardPlan::build(&community, 2, 2);
+        let owner0 = plan.shard_of_comm(0);
+        let other = 1 - owner0;
+        let mut depths = [0usize, 0];
+        depths[owner0] = 4; // at cap
+        let batch = vec![req(1, 0), req(2, 1)];
+        let routed = route_batch(
+            &plan,
+            &community,
+            SpillPolicy::Steal,
+            &depths,
+            &[4, 4],
+            0,
+            batch,
+        );
+        assert_eq!(routed.len(), 1);
+        assert_eq!(routed[0].0, other, "full owner must spill");
+    }
+
+    #[test]
+    fn broadcast_targets_least_loaded_shard() {
+        let community = vec![0u32, 0, 1, 1];
+        let plan = ShardPlan::build(&community, 2, 2);
+        let batch = vec![req(1, 0), req(2, 0)];
+        let routed = route_batch(
+            &plan,
+            &community,
+            SpillPolicy::Broadcast,
+            &[3, 1],
+            &[4, 4],
+            0,
+            batch,
+        );
+        assert_eq!(routed.len(), 1);
+        assert_eq!(routed[0].0, 1, "must pick the shallower queue");
+    }
+
+    /// With an idle pool (all depths zero) broadcast must still spread
+    /// batches across shards via the round-robin tie-break, not funnel
+    /// everything into shard 0.
+    #[test]
+    fn broadcast_rotates_across_idle_shards() {
+        let community = vec![0u32, 1, 2, 3];
+        let plan = ShardPlan::build(&community, 4, 4);
+        let mut hit = [0usize; 4];
+        for rr in 0..8 {
+            let batch = vec![req(rr as u64, 0)];
+            let routed = route_batch(
+                &plan,
+                &community,
+                SpillPolicy::Broadcast,
+                &[0, 0, 0, 0],
+                &[2, 2, 2, 2],
+                rr,
+                batch,
+            );
+            hit[routed[0].0] += 1;
+        }
+        assert_eq!(hit, [2, 2, 2, 2], "idle shards must share batches");
+    }
+
+    #[test]
+    fn single_shard_routes_whole_batch_to_zero() {
+        let community = vec![0u32, 1, 2, 3];
+        let plan = ShardPlan::build(&community, 4, 1);
+        for policy in
+            [SpillPolicy::Strict, SpillPolicy::Steal, SpillPolicy::Broadcast]
+        {
+            let batch = vec![req(1, 0), req(2, 3)];
+            let routed =
+                route_batch(&plan, &community, policy, &[0], &[2], 0, batch);
+            assert_eq!(routed.len(), 1);
+            assert_eq!(routed[0].0, 0);
+            assert_eq!(routed[0].1.len(), 2);
+        }
+    }
+
+    #[test]
+    fn spill_policy_parses_and_round_trips() {
+        for (s, p) in [
+            ("strict", SpillPolicy::Strict),
+            ("steal", SpillPolicy::Steal),
+            ("broadcast", SpillPolicy::Broadcast),
+        ] {
+            let parsed = SpillPolicy::parse(s).unwrap();
+            assert_eq!(parsed, p);
+            assert_eq!(parsed.name(), s);
+        }
+        assert!(SpillPolicy::parse("bogus").is_err());
+    }
+}

@@ -9,6 +9,8 @@
 //! and returns empty logits, [`PjrtExecutor`] wraps a compiled
 //! [`InferState`].
 
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::Receiver;
 use std::sync::Mutex;
 
 use anyhow::Result;
@@ -21,6 +23,7 @@ use crate::sampler::{build_mfg, NeighborPolicy};
 use crate::util::rng::Rng;
 
 use super::cache::ShardedFeatureCache;
+use super::shard::{ShardPlan, ShardStatsCell};
 use super::{Reply, Request, ServeClock};
 
 /// Inference backend driven by the worker pool.
@@ -99,6 +102,56 @@ pub struct BatchOutcome {
     pub requests: usize,
     /// Unique input-frontier nodes sampled for the batch.
     pub input_nodes: usize,
+    /// Requests answered with an error reply (executor failure is
+    /// all-or-nothing per batch: 0 or `requests`).
+    pub errors: usize,
+}
+
+/// One shard worker: drain the shard's batch channel until it closes,
+/// processing each sub-batch against the shard's own feature cache and
+/// folding the outcome into the shard's stats cell.
+///
+/// `depth` is the shard's queued-batch counter (incremented by the
+/// router at send time); the observed value at receive time feeds the
+/// per-shard `queue_depth_max` stat. `foreign_requests` counts the
+/// requests whose community this shard does not own — the affinity
+/// violation metric that is zero by construction under strict spill.
+#[allow(clippy::too_many_arguments)]
+pub fn shard_worker_loop(
+    ctx: &WorkerCtx<'_>,
+    shard_id: usize,
+    plan: &ShardPlan,
+    rx: &Mutex<Receiver<Vec<Request>>>,
+    depth: &AtomicUsize,
+    cell: &Mutex<ShardStatsCell>,
+    rng: &mut Rng,
+) {
+    loop {
+        let next = rx.lock().unwrap().recv();
+        let Ok(reqs) = next else { return };
+        // depth at receive time (pre-decrement) still includes this batch
+        let d = depth.fetch_sub(1, Ordering::Relaxed);
+        let community = &ctx.ds.community;
+        let foreign = reqs
+            .iter()
+            .filter(|r| plan.shard_of_node(community, r.node) != shard_id)
+            .count();
+        let arrives: Vec<u64> = reqs.iter().map(|r| r.arrive_us).collect();
+        let out = process_batch(ctx, reqs, rng);
+        let now = ctx.clock.now_us();
+        let mut g = cell.lock().unwrap();
+        g.batches += 1;
+        g.requests += out.requests;
+        g.foreign_requests += foreign;
+        g.input_nodes += out.input_nodes;
+        g.queue_depth_max = g.queue_depth_max.max(d);
+        // error replies stay out of the latency samples, matching the
+        // engine's global percentile definition
+        if out.errors == 0 {
+            g.lat_us
+                .extend(arrives.iter().map(|&a| now.saturating_sub(a)));
+        }
+    }
 }
 
 /// Process one coalesced micro-batch end to end. Every request is
@@ -148,9 +201,10 @@ pub fn process_batch(
             ctx.exec.infer(&batch)
         });
 
-    let outcome = BatchOutcome {
+    let mut outcome = BatchOutcome {
         requests: reqs.len(),
         input_nodes: input.len(),
+        errors: 0,
     };
     let now = ctx.clock.now_us();
     let bsz = reqs.len();
@@ -187,6 +241,7 @@ pub fn process_batch(
                     error: true,
                 });
             }
+            outcome.errors = bsz;
             outcome
         }
     }
@@ -232,6 +287,7 @@ mod tests {
         let mut rng = Rng::new(5);
         let out = process_batch(&ctx, reqs, &mut rng);
         assert_eq!(out.requests, 3);
+        assert_eq!(out.errors, 0);
         assert!(out.input_nodes >= 2);
         drop(tx);
         let replies: Vec<Reply> = rx.iter().collect();

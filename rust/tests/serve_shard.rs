@@ -1,0 +1,125 @@
+//! Integration tests for multi-shard community-affinity serving.
+//!
+//! Unlike `integration.rs`, these need no AOT artifacts and no real
+//! PJRT: the no-op executor exercises the whole pipeline — queue →
+//! micro-batcher → shard router → per-shard worker pools → per-shard
+//! feature caches — on the synthetic tiny dataset, so they run
+//! everywhere `cargo test` does.
+
+use comm_rand::config::preset;
+use comm_rand::serve::engine::{self, synthetic_infer_meta};
+use comm_rand::serve::{
+    LoadConfig, NullExecutor, ServeConfig, ShardPlan, SpillPolicy,
+};
+
+fn tiny_dataset() -> comm_rand::graph::Dataset {
+    comm_rand::train::dataset::build(&preset("tiny").unwrap(), true)
+}
+
+fn base_config(ds: &comm_rand::graph::Dataset) -> ServeConfig {
+    let mut scfg = ServeConfig::for_dataset(ds);
+    scfg.batch_size = 16;
+    scfg.max_delay_us = 1_000;
+    scfg.deadline_us = 200_000;
+    scfg.community_bias = 0.5;
+    scfg.workers = 4;
+    scfg.fanouts = vec![5, 5];
+    scfg.seed = 21;
+    scfg
+}
+
+/// Acceptance check: `serve bench --shards {2,4}` end-to-end with the
+/// no-op executor, per-shard stats reported, and — under strict spill —
+/// every request's seed community processed on the shard that owns it.
+#[test]
+fn strict_spill_places_every_request_on_its_owning_shard() {
+    let ds = tiny_dataset();
+    for n_shards in [2usize, 4] {
+        let mut scfg = base_config(&ds);
+        scfg.shards = n_shards;
+        scfg.spill = SpillPolicy::Strict;
+        let meta = synthetic_infer_meta(&ds, scfg.batch_size, &scfg.fanouts);
+        let exec = NullExecutor { num_classes: ds.num_classes };
+        let lcfg = LoadConfig {
+            clients: 4,
+            requests_per_client: 40,
+            zipf_s: 1.1,
+            seed: 5,
+        };
+        let rep = engine::run(&ds, &meta, &exec, &scfg, &lcfg).unwrap();
+
+        // closed loop answered everything, with per-shard stats
+        assert_eq!(rep.requests, 160, "shards={n_shards}");
+        assert_eq!(rep.errors, 0, "shards={n_shards}");
+        assert_eq!(rep.n_shards, n_shards);
+        assert_eq!(rep.spill, "strict");
+        assert_eq!(rep.shards.len(), n_shards);
+
+        // strict affinity: zero foreign requests on every shard
+        for sh in &rep.shards {
+            assert_eq!(
+                sh.foreign_requests, 0,
+                "shards={n_shards}: shard {} served a community it does \
+                 not own",
+                sh.id
+            );
+        }
+
+        // shard accounting sums to the run totals
+        let req_sum: usize = rep.shards.iter().map(|sh| sh.requests).sum();
+        assert_eq!(req_sum, rep.requests);
+        let batch_sum: usize = rep.shards.iter().map(|sh| sh.batches).sum();
+        assert_eq!(batch_sum, rep.batches);
+        let hit_sum: u64 = rep.shards.iter().map(|sh| sh.cache_hits).sum();
+        let miss_sum: u64 = rep.shards.iter().map(|sh| sh.cache_misses).sum();
+        assert_eq!((hit_sum, miss_sum), (rep.cache_hits, rep.cache_misses));
+        assert!(hit_sum + miss_sum > 0, "caches not exercised");
+
+        // per-shard latency percentiles are sane wherever traffic ran
+        for sh in rep.shards.iter().filter(|sh| sh.requests > 0) {
+            assert!(sh.lat_p50_ms <= sh.lat_p99_ms, "shard {}", sh.id);
+            assert!(sh.lat_p99_ms.is_finite(), "shard {}", sh.id);
+        }
+
+        // the report's JSON carries the per-shard breakdown
+        let json = rep.to_json().to_string_pretty();
+        assert!(json.contains("foreign_requests"));
+        assert!(json.contains("queue_depth_max"));
+    }
+}
+
+/// The plan the engine routes with is a pure function of the labels:
+/// what the report says each shard owns matches an independently built
+/// plan, request placement included.
+#[test]
+fn shard_plan_is_consistent_with_reported_ownership() {
+    let ds = tiny_dataset();
+    let plan = ShardPlan::build(&ds.community, ds.num_comms, 2);
+    let plan2 = ShardPlan::build(&ds.community, ds.num_comms, 2);
+    let mut owned = [0usize; 2];
+    for v in 0..ds.n() as u32 {
+        let s = plan.shard_of_node(&ds.community, v);
+        assert_eq!(s, plan2.shard_of_node(&ds.community, v), "node {v}");
+        owned[s] += 1;
+    }
+    assert_eq!(owned[0] + owned[1], ds.n());
+    assert_eq!(owned[0], plan.owned_nodes(0));
+    assert_eq!(owned[1], plan.owned_nodes(1));
+
+    let mut scfg = base_config(&ds);
+    scfg.shards = 2;
+    scfg.spill = SpillPolicy::Strict;
+    let meta = synthetic_infer_meta(&ds, scfg.batch_size, &scfg.fanouts);
+    let exec = NullExecutor { num_classes: ds.num_classes };
+    let lcfg =
+        LoadConfig { clients: 2, requests_per_client: 25, zipf_s: 1.1, seed: 9 };
+    let rep = engine::run(&ds, &meta, &exec, &scfg, &lcfg).unwrap();
+    for sh in &rep.shards {
+        assert_eq!(sh.owned_nodes, plan.owned_nodes(sh.id));
+        assert_eq!(sh.owned_comms, plan.owned_comms(sh.id));
+    }
+}
+
+// NOTE: steal/broadcast closed-loop coverage lives in the engine's
+// unit tests (`spill_policies_run_end_to_end`); this file is the
+// strict-affinity acceptance check.
