@@ -1,8 +1,8 @@
 //! Online-serving demo: stand up the serving engine on the tiny
-//! dataset and replay the same Zipf closed-loop trace with the
-//! community-bias knob at both extremes — pure-FIFO coalescing (p=0)
-//! vs pure community-grouped coalescing (p=1) — printing throughput,
-//! tail latency and the feature-cache hit rate each way.
+//! dataset and replay the same Zipf trace with the community-bias knob
+//! at both extremes — pure-FIFO coalescing (p=0) vs pure
+//! community-grouped coalescing (p=1) — printing throughput, tail
+//! latency and the feature-cache hit rate each way.
 //!
 //! With `shards=N` the engine partitions communities across N logical
 //! device shards (each with its own worker pool and feature cache) and
@@ -10,15 +10,24 @@
 //! `spill=strict|steal|broadcast` picks the cross-shard policy and the
 //! demo prints the per-shard breakdown.
 //!
+//! With `arrival=poisson:RATE` the trace is issued open-loop at a
+//! fixed offered rate instead of closed-loop self-pacing — push RATE
+//! past what your machine sustains and watch p99 climb; add
+//! `admission=reject` (or `degrade`) to see the deadline-aware gate
+//! shed (or fanout-degrade) the unmeetable requests instead.
+//!
 //! Runs with or without AOT artifacts (`make artifacts`): without them
-//! a no-op executor still exercises queue → coalesce → route → cache →
-//! assemble.
+//! a no-op executor still exercises queue → admit → coalesce → route →
+//! cache → assemble.
 //!
 //!     cargo run --release --example serve_demo [preset] [requests=N] \
-//!         [shards=N] [spill=strict|steal|broadcast]
+//!         [shards=N] [spill=strict|steal|broadcast] \
+//!         [arrival=closed|poisson:RATE] [admission=none|reject|degrade]
 
 use comm_rand::config::preset;
-use comm_rand::serve::{engine, LoadConfig, ServeConfig, SpillPolicy};
+use comm_rand::serve::{
+    engine, AdmissionPolicy, Arrival, LoadConfig, ServeConfig, SpillPolicy,
+};
 
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -41,27 +50,43 @@ fn main() -> anyhow::Result<()> {
         .map(SpillPolicy::parse)
         .transpose()?
         .unwrap_or(SpillPolicy::Strict);
+    let arrival = args
+        .iter()
+        .find_map(|a| a.strip_prefix("arrival="))
+        .map(Arrival::parse)
+        .transpose()?
+        .unwrap_or(Arrival::Closed);
+    let admission = args
+        .iter()
+        .find_map(|a| a.strip_prefix("admission="))
+        .map(AdmissionPolicy::parse)
+        .transpose()?
+        .unwrap_or(AdmissionPolicy::None);
 
     let p = preset(&name).expect("unknown preset");
     let ds = comm_rand::train::dataset::load_or_build(&p, true)?;
     println!(
         "serving {}: {} nodes, {} communities, feat dim {}, {} shard(s), \
-         spill {}",
+         spill {}, arrival {}, admission {}",
         ds.name,
         ds.n(),
         ds.num_comms,
         ds.feat_dim,
         shards.max(1),
         spill.name(),
+        arrival.label(),
+        admission.name(),
     );
 
     let mut scfg = ServeConfig::for_dataset(&ds);
     scfg.shards = shards.max(1);
     scfg.spill = spill;
+    scfg.admission = admission;
     let lcfg = LoadConfig {
         clients: 8,
         requests_per_client: (requests / 8).max(1),
         zipf_s: 1.1,
+        arrival,
         seed: 1,
     };
     let (exec, meta) = engine::build_executor(&p, &ds, &scfg);
@@ -75,12 +100,15 @@ fn main() -> anyhow::Result<()> {
             for sh in &rep.shards {
                 println!(
                     "  shard {}: {} comms / {} nodes owned | {} req \
-                     ({} foreign) | p99 {:.2} ms | cache hit {:.1}%",
+                     ({} foreign, {} shed, {} degraded) | p99 {:.2} ms | \
+                     cache hit {:.1}%",
                     sh.id,
                     sh.owned_comms,
                     sh.owned_nodes,
                     sh.requests,
                     sh.foreign_requests,
+                    sh.shed,
+                    sh.degraded,
                     sh.lat_p99_ms,
                     sh.cache_hit_rate * 100.0,
                 );
@@ -98,5 +126,13 @@ fn main() -> anyhow::Result<()> {
         fifo.lat_p99_ms,
         comm.lat_p99_ms,
     );
+    if fifo.shed + comm.shed > 0 {
+        println!(
+            "shed (admission {} / drop-tail): {:.1}% at p=0, {:.1}% at p=1",
+            admission.name(),
+            fifo.shed_rate * 100.0,
+            comm.shed_rate * 100.0,
+        );
+    }
     Ok(())
 }

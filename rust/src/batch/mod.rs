@@ -72,9 +72,20 @@ pub fn assemble(
     for l in 1..=layers {
         let cap = caps[l];
         let width = spec.idx_widths[l - 1];
-        let fanout = spec.fanouts[l - 1];
         let lvl = &mfg.levels[l];
         let lay = &mfg.layers[l - 1];
+        // read stride = the MFG's own sampling fanout: it may be
+        // smaller than the artifact's (degraded serving batches sample
+        // fewer neighbors into the same padded shape), never larger
+        let fanout = lay.fanout;
+        if fanout > spec.fanouts[l - 1] {
+            bail!(
+                "layer {l} sampled fanout {fanout} exceeds artifact \
+                 fanout {} ({})",
+                spec.fanouts[l - 1],
+                meta.name
+            );
+        }
         if lvl.len() > cap {
             bail!(
                 "layer {l} has {} dst rows, cap {cap} (artifact {})",

@@ -108,7 +108,7 @@ COMMANDS:
                            roots=rand|norand|mix0|mix12.5|mix25|mix50
                            p=0.5..1.0  epochs=N  batch=N  seed=N  lr=F
   inspect <preset>       print dataset statistics
-  serve bench [preset]   closed-loop online-inference benchmark
+  serve bench [preset]   online-inference benchmark
                            p=0..1 (community-bias knob)  batch=N
                            clients=N  requests=N (per client)
                            delay_ms=F  deadline_ms=F  zipf=F
@@ -116,6 +116,10 @@ COMMANDS:
                            shards=N (logical device shards; communities
                            are partitioned across them)
                            spill=strict|steal|broadcast  seed=N
+                           arrival=closed|poisson:RATE (open-loop
+                           Poisson arrivals at RATE req/s)
+                           admission=none|reject|degrade (shed or
+                           fanout-degrade unmeetable deadlines)
                            (uses the PJRT infer artifact when present,
                             a no-op executor otherwise)
   exp <id>               regenerate a paper artifact into results/
@@ -253,7 +257,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve_bench(args: &Args) -> Result<()> {
-    use crate::serve::{engine, LoadConfig, ServeConfig, SpillPolicy};
+    use crate::serve::{
+        engine, AdmissionPolicy, Arrival, LoadConfig, ServeConfig, SpillPolicy,
+    };
 
     let name = args.pos.get(1).map(String::as_str).unwrap_or("tiny");
     let p = preset(name).with_context(|| format!("unknown preset {name}"))?;
@@ -271,6 +277,9 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         cache_shards: args.get_usize("cache_shards", defaults.cache_shards)?,
         shards: args.get_usize("shards", defaults.shards)?,
         spill: SpillPolicy::parse(args.get("spill").unwrap_or("strict"))?,
+        admission: AdmissionPolicy::parse(
+            args.get("admission").unwrap_or("none"),
+        )?,
         fanouts: defaults.fanouts,
         seed: args.get_u64("seed", 0)?,
     };
@@ -284,6 +293,7 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         clients: args.get_usize("clients", 8)?,
         requests_per_client: args.get_usize("requests", 64)?,
         zipf_s: args.get_f64("zipf", 1.1)?,
+        arrival: Arrival::parse(args.get("arrival").unwrap_or("closed"))?,
         seed: scfg.seed ^ 0x10AD,
     };
 
@@ -294,15 +304,19 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         for sh in &report.shards {
             println!(
                 "  shard {}: {} comms / {} nodes owned | {} req \
-                 ({} foreign) in {} batches | depth max {} | \
+                 ({} foreign, {} shed, {} degraded) in {} batches | \
+                 depth max {} | est service {:.0} us | \
                  p50 {:.2} p99 {:.2} ms | cache hit {:.1}%",
                 sh.id,
                 sh.owned_comms,
                 sh.owned_nodes,
                 sh.requests,
                 sh.foreign_requests,
+                sh.shed,
+                sh.degraded,
                 sh.batches,
                 sh.queue_depth_max,
+                sh.est_service_us,
                 sh.lat_p50_ms,
                 sh.lat_p99_ms,
                 sh.cache_hit_rate * 100.0,

@@ -1,24 +1,33 @@
 //! Serving-knob sweeps: the online-inference analogue of the paper's
-//! training figures. Replays the same Zipf closed-loop trace against
-//! the serving engine along two axes:
+//! training figures. Replays the same Zipf trace against the serving
+//! engine along three axes:
 //!
 //! * community-bias `p ∈ {0, 0.5, 1}` on one shard — the knob's effect
-//!   on throughput, tail latency and feature-cache hit rate;
+//!   on throughput, tail latency and feature-cache hit rate (closed
+//!   loop);
 //! * shard count `∈ {1, 2, 4}` at fixed `p` — community-affinity
 //!   scaling: each shard's cache only sees its own communities, so the
 //!   aggregate hit rate should hold (or improve) as the per-shard
-//!   cache slice shrinks.
+//!   cache slice shrinks (closed loop);
+//! * offered load × admission policy — open-loop Poisson arrivals
+//!   swept past saturation, `admission ∈ {none, reject}`: with `none`
+//!   the p99 latency diverges with the backlog (the latency cliff, at
+//!   best clipped by queue-full drop-tail); with `reject` unmeetable
+//!   requests are shed at enqueue, so p99 stays bounded and the
+//!   shed-rate column shows the price.
 //!
 //! Unlike the training experiments this needs no PJRT session: it uses
 //! the compiled infer artifact when available and the no-op executor
 //! otherwise, so `comm-rand exp serve` runs in artifact-less
 //! environments too.
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use crate::cli::Args;
 use crate::config::preset;
-use crate::serve::{engine, LoadConfig, ServeConfig, SpillPolicy};
+use crate::serve::{
+    engine, AdmissionPolicy, Arrival, LoadConfig, ServeConfig, SpillPolicy,
+};
 use crate::util::json::{obj, Json};
 
 use super::common::{f2, pct, quick, write_results, Table};
@@ -38,6 +47,7 @@ pub fn run(args: &Args) -> Result<()> {
         requests_per_client: args
             .get_usize("requests", if quick() { 40 } else { 200 })?,
         zipf_s: args.get_f64("zipf", 1.1)?,
+        arrival: Arrival::Closed,
         seed: scfg.seed ^ 0x10AD,
     };
     let (exec, meta) = engine::build_executor(&p, &ds, &scfg);
@@ -122,12 +132,78 @@ pub fn run(args: &Args) -> Result<()> {
         s_rows.push(rep.to_json());
     }
 
+    // axis 3: offered load x admission policy (open-loop Poisson).
+    // The sweep deliberately crosses the saturation rate: closed-loop
+    // throughput above tells us roughly where it is, and the top rates
+    // sit well past it, so the `none` rows show the latency cliff and
+    // the `reject` rows show it clipped (nonzero shed-rate instead).
+    let rates: Vec<f64> = match args.get("rates") {
+        Some(spec) => spec
+            .split(',')
+            .map(|v| v.trim().parse::<f64>().context("bad rates= value"))
+            .collect::<Result<Vec<f64>>>()?,
+        None if quick() => vec![2_000.0, 16_000.0],
+        None => vec![2_000.0, 8_000.0, 32_000.0, 128_000.0],
+    };
+    // same validity rule Arrival::parse enforces on the CLI path — a
+    // zero/negative/NaN rate would make the open-loop clients sleep
+    // (near) forever instead of erroring
+    for &r in &rates {
+        if !(r.is_finite() && r > 0.0) {
+            anyhow::bail!("rates= values must be positive numbers, got {r}");
+        }
+    }
+    let mut a_table = Table::new(&[
+        "rate rps",
+        "admission",
+        "done",
+        "done rps",
+        "p50 ms",
+        "p99 ms",
+        "shed rate",
+        "degraded",
+    ]);
+    let mut a_rows = Vec::new();
+    for &rate in &rates {
+        for adm in [AdmissionPolicy::None, AdmissionPolicy::Reject] {
+            let cfg = ServeConfig {
+                community_bias: shard_p,
+                admission: adm,
+                ..scfg.clone()
+            };
+            let l = LoadConfig {
+                arrival: Arrival::Poisson { rate_rps: rate },
+                ..lcfg.clone()
+            };
+            let rep = engine::run(&ds, &meta, exec.as_ref(), &cfg, &l)?;
+            println!("{}", rep.summary());
+            a_table.row(vec![
+                format!("{rate:.0}"),
+                adm.name().to_string(),
+                format!("{}", rep.requests),
+                format!("{:.0}", rep.throughput_rps),
+                f2(rep.lat_p50_ms),
+                f2(rep.lat_p99_ms),
+                pct(rep.shed_rate),
+                format!("{}", rep.degraded),
+            ]);
+            a_rows.push(rep.to_json());
+        }
+    }
+
     let md = format!(
-        "# Online serving — community-bias knob and shard sweeps ({name})\n\n\
+        "# Online serving — community-bias, shard and offered-load \
+         sweeps ({name})\n\n\
          Closed loop: {} clients x {} requests, zipf {}, batch cap {}, \
          executor `{}`.\n\n\
          ## Community-bias knob (1 shard)\n\n{}\n\
-         ## Shard sweep (p = {}, spill = {})\n\n{}",
+         ## Shard sweep (p = {}, spill = {})\n\n{}\n\
+         ## Offered-load sweep (open loop, Poisson arrivals, p = {})\n\n\
+         Same trace volume issued at a fixed offered rate instead of \
+         closed-loop self-pacing; `admission=none` rides the latency \
+         cliff past saturation (bounded only by queue-full drop-tail), \
+         `admission=reject` sheds unmeetable requests at enqueue and \
+         keeps p99 bounded.\n\n{}",
         lcfg.clients,
         lcfg.requests_per_client,
         lcfg.zipf_s,
@@ -136,11 +212,14 @@ pub fn run(args: &Args) -> Result<()> {
         p_table.to_markdown(),
         shard_p,
         spill.name(),
-        s_table.to_markdown()
+        s_table.to_markdown(),
+        shard_p,
+        a_table.to_markdown()
     );
     let json = obj(vec![
         ("p_sweep", Json::Arr(p_rows)),
         ("shard_sweep", Json::Arr(s_rows)),
+        ("load_sweep", Json::Arr(a_rows)),
     ]);
     write_results("serve", &md, &json)
 }

@@ -37,23 +37,47 @@
 //! micro-batch to the shard owning its community, with a configurable
 //! spill policy (`strict` / `steal` / `broadcast`) for cross-shard
 //! batches — each shard runs its own worker pool and feature cache.
-//! `comm-rand serve bench` replays a Zipf-skewed closed-loop trace and
-//! reports throughput plus p50/p95/p99 latency and feature-cache hit
-//! rate (per shard and rolled up) as JSON; `comm-rand exp serve`
-//! sweeps `p` and the shard count into paper-style tables.
+//! `comm-rand serve bench` replays a Zipf-skewed trace — closed loop,
+//! or **open-loop Poisson** (`arrival=poisson:RATE`) to sweep offered
+//! load past saturation — through a **deadline-aware admission gate**
+//! (`admission=none|reject|degrade`, per-shard service-time EWMA) and
+//! reports throughput plus p50/p95/p99 latency, shed/degrade counts
+//! and feature-cache hit rate (per shard and rolled up) as JSON;
+//! `comm-rand exp serve` sweeps `p`, the shard count and the offered
+//! load into paper-style tables. The request lifecycle and knob
+//! reference live in `docs/ARCHITECTURE.md`.
 
+#![warn(missing_docs)]
+// missing_docs burn-down: the crate root and the serving subsystem
+// (`serve/`) are fully documented and the lint is enforced in CI via
+// `cargo doc` with RUSTDOCFLAGS="-D warnings". The offline
+// reproduction modules below predate the lint and carry a scoped
+// allow until their own docs pass lands (tracked in ROADMAP.md);
+// remove an `#[allow]` to burn one down.
+
+#[allow(missing_docs)]
 pub mod batch;
+#[allow(missing_docs)]
 pub mod cachesim;
+#[allow(missing_docs)]
 pub mod community;
+#[allow(missing_docs)]
 pub mod config;
+#[allow(missing_docs)]
 pub mod exp;
+#[allow(missing_docs)]
 pub mod graph;
+#[allow(missing_docs)]
 pub mod runtime;
+#[allow(missing_docs)]
 pub mod sampler;
 pub mod serve;
+#[allow(missing_docs)]
 pub mod train;
+#[allow(missing_docs)]
 pub mod util;
 
+#[allow(missing_docs)]
 pub mod cli;
 
 pub use cli::cli_main;

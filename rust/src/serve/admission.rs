@@ -1,0 +1,554 @@
+//! Deadline-aware admission control / load shedding.
+//!
+//! Under open-loop load (see [`super::loadgen::Arrival::Poisson`]) an
+//! overloaded server cannot slow its clients down; without admission
+//! control every queued request is processed *late*, so past the
+//! saturation point tail latency diverges with queue depth while
+//! goodput (replies inside their deadline) collapses to zero. This
+//! module sheds that work at enqueue time instead: each arriving
+//! request gets a **feasibility check** — "given the current backlog
+//! and the observed per-micro-batch service time, can this deadline
+//! still be met?" — and an [`AdmissionPolicy`] decides what to do when
+//! the answer is no.
+//!
+//! The service-time estimate is a rolling per-shard EWMA
+//! ([`ServiceEwma`]) fed by the shard workers after every micro-batch,
+//! so the controller adapts to the executor actually in use (PJRT vs
+//! no-op) and to per-shard load imbalance. Because batch-construction
+//! policy changes per-request work (the Cooperative Minibatching
+//! observation, arXiv 2310.12403), the `degrade` policy does not just
+//! gate on the queue: it shrinks the *sampling fanout* of the admitted
+//! request until the estimated MFG work fits the remaining deadline
+//! budget ([`degraded_fanouts`]).
+//!
+//! The three policies:
+//!
+//! * `none` — admit everything (the latency-cliff baseline);
+//! * `reject` — shed requests whose deadline is already unmeetable,
+//!   counted as `shed` in the `ServeReport`;
+//! * `degrade` — admit, but cap the request's per-layer fanouts so its
+//!   micro-batch fits the remaining budget (counted as `degraded`).
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+use anyhow::{bail, Result};
+
+/// What to do with a request whose deadline is already unmeetable at
+/// enqueue time.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AdmissionPolicy {
+    /// Admit everything; requests past saturation are processed late.
+    None,
+    /// Shed the request (no reply is ever produced; the load generator
+    /// records it as shed).
+    Reject,
+    /// Admit the request but shrink its sampling fanout so the MFG
+    /// fits the remaining deadline budget (see [`degraded_fanouts`]).
+    Degrade,
+}
+
+impl AdmissionPolicy {
+    /// Parse a CLI knob value: `none | reject | degrade`.
+    pub fn parse(s: &str) -> Result<AdmissionPolicy> {
+        match s {
+            "none" => Ok(AdmissionPolicy::None),
+            "reject" => Ok(AdmissionPolicy::Reject),
+            "degrade" => Ok(AdmissionPolicy::Degrade),
+            other => bail!(
+                "unknown admission policy {other:?} (try: none | reject | degrade)"
+            ),
+        }
+    }
+
+    /// The knob spelling this policy parses from.
+    pub fn name(&self) -> &'static str {
+        match self {
+            AdmissionPolicy::None => "none",
+            AdmissionPolicy::Reject => "reject",
+            AdmissionPolicy::Degrade => "degrade",
+        }
+    }
+}
+
+/// Lock-free rolling EWMA of micro-batch service time in microseconds.
+///
+/// The value lives as `f64` bits in an `AtomicU64` (zero bits encode
+/// "no sample yet"), updated with a CAS loop so many workers can feed
+/// it and many clients read it without a mutex on the admission path.
+pub struct ServiceEwma {
+    bits: AtomicU64,
+    alpha: f64,
+}
+
+impl ServiceEwma {
+    /// New empty estimator; `alpha` is the EWMA smoothing factor in
+    /// `(0, 1]` (higher = reacts faster, noisier).
+    pub fn new(alpha: f64) -> ServiceEwma {
+        ServiceEwma { bits: AtomicU64::new(0), alpha: alpha.clamp(1e-3, 1.0) }
+    }
+
+    /// Fold one observed per-batch service time (µs) into the average.
+    pub fn record(&self, service_us: f64) {
+        if !service_us.is_finite() || service_us < 0.0 {
+            return;
+        }
+        let mut cur = self.bits.load(Ordering::Relaxed);
+        loop {
+            let next = if cur == 0 {
+                service_us
+            } else {
+                let prev = f64::from_bits(cur);
+                prev + self.alpha * (service_us - prev)
+            };
+            // never store the 0 bit pattern for a real sample: 0 means
+            // "empty", and a literal 0.0 µs sample becomes ~5e-324
+            let nb = next.to_bits().max(1);
+            match self.bits.compare_exchange_weak(
+                cur,
+                nb,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return,
+                Err(v) => cur = v,
+            }
+        }
+    }
+
+    /// Current estimate (µs), or `None` before the first sample.
+    pub fn get(&self) -> Option<f64> {
+        let bits = self.bits.load(Ordering::Relaxed);
+        if bits == 0 {
+            None
+        } else {
+            Some(f64::from_bits(bits))
+        }
+    }
+}
+
+/// Estimated completion time (µs) for a request enqueued at `now_us`
+/// behind `batches_ahead` *sequential* micro-batches (or parallel
+/// drain waves — see [`AdmissionController::decide`]), each taking
+/// `service_us` on the EWMA estimate — the request itself rides the
+/// `+ 1`-th.
+///
+/// ```
+/// use comm_rand::serve::admission::est_finish_us;
+///
+/// // 3 batches ahead at ~1 ms each: a 2 ms deadline is unmeetable,
+/// // a 5 ms deadline is fine
+/// let est = est_finish_us(0, 3, 1_000.0);
+/// assert!(est > 2_000);
+/// assert!(est <= 5_000);
+/// ```
+pub fn est_finish_us(now_us: u64, batches_ahead: usize, service_us: f64) -> u64 {
+    let work = (batches_ahead as f64 + 1.0) * service_us.max(0.0);
+    now_us.saturating_add(work as u64)
+}
+
+/// Per-layer fanouts shrunk so an estimated `est_full_us` of MFG work
+/// fits into `budget_us`: every fanout is scaled by
+/// `clamp(budget / est_full, 0, 1)` and floored at 1 neighbor, so the
+/// degraded request still produces a (cheap) answer instead of an
+/// error. Monotone: a smaller budget never yields a larger fanout.
+///
+/// ```
+/// use comm_rand::serve::admission::degraded_fanouts;
+///
+/// // half the budget -> half the fanout
+/// assert_eq!(degraded_fanouts(&[10, 10], 500.0, 1_000.0), vec![5, 5]);
+/// // no budget left at all -> minimum fanout, never zero
+/// assert_eq!(degraded_fanouts(&[10, 10], 0.0, 1_000.0), vec![1, 1]);
+/// // budget covers the full estimate -> untouched
+/// assert_eq!(degraded_fanouts(&[10, 10], 2_000.0, 1_000.0), vec![10, 10]);
+/// ```
+pub fn degraded_fanouts(
+    base: &[usize],
+    budget_us: f64,
+    est_full_us: f64,
+) -> Vec<usize> {
+    let scale = if est_full_us > 0.0 {
+        (budget_us / est_full_us).clamp(0.0, 1.0)
+    } else {
+        1.0
+    };
+    base.iter()
+        .map(|&f| (((f as f64) * scale).floor() as usize).max(1))
+        .collect()
+}
+
+/// Outcome of one admission decision.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum AdmitDecision {
+    /// Enqueue the request unchanged.
+    Admit,
+    /// Enqueue the request with these per-layer fanout caps attached
+    /// (`Request::fanout_cap`).
+    Degrade(Vec<usize>),
+    /// Drop the request; its deadline is already unmeetable.
+    Shed,
+}
+
+/// Per-shard admission state: the service-time estimator plus the
+/// shed/degrade counters reported per shard.
+struct ShardAdm {
+    ewma: ServiceEwma,
+    shed: AtomicUsize,
+    degraded: AtomicUsize,
+}
+
+/// Deadline-feasibility gate shared by the load generators (decide at
+/// enqueue) and the shard workers (EWMA feedback after every batch).
+///
+/// Everything is atomics, so one controller is shared by reference
+/// across every client and worker thread of a run.
+pub struct AdmissionController {
+    policy: AdmissionPolicy,
+    shards: Vec<ShardAdm>,
+    /// Worker threads per shard: queued batches drain in parallel
+    /// waves of this size, so the backlog wait divides by it.
+    shard_workers: Vec<usize>,
+    batch_size: usize,
+    /// Micro-batcher coalescing budget (µs): a known, configured wait
+    /// every admitted request pays before its batch even forms, so
+    /// feasibility accounts for it on top of the backlog estimate.
+    coalesce_us: u64,
+    base_fanouts: Vec<usize>,
+}
+
+impl AdmissionController {
+    /// `batch_size` is the micro-batch cap (used to convert queued
+    /// requests into queued batches), `coalesce_us` the micro-batcher's
+    /// per-request coalescing budget (added to every feasibility
+    /// estimate), `shard_workers` the per-shard worker-pool sizes (one
+    /// entry per shard — defines the shard count, and how many queued
+    /// batches drain concurrently), and `base_fanouts` the per-layer
+    /// sampling fanouts a non-degraded request uses; `alpha` is the
+    /// EWMA smoothing factor.
+    pub fn new(
+        policy: AdmissionPolicy,
+        batch_size: usize,
+        coalesce_us: u64,
+        shard_workers: Vec<usize>,
+        base_fanouts: Vec<usize>,
+        alpha: f64,
+    ) -> AdmissionController {
+        let shard_workers =
+            if shard_workers.is_empty() { vec![1] } else { shard_workers };
+        let n_shards = shard_workers.len();
+        let shards = (0..n_shards)
+            .map(|_| ShardAdm {
+                ewma: ServiceEwma::new(alpha),
+                shed: AtomicUsize::new(0),
+                degraded: AtomicUsize::new(0),
+            })
+            .collect();
+        AdmissionController {
+            policy,
+            shards,
+            shard_workers,
+            batch_size: batch_size.max(1),
+            coalesce_us,
+            base_fanouts,
+        }
+    }
+
+    /// The configured policy.
+    pub fn policy(&self) -> AdmissionPolicy {
+        self.policy
+    }
+
+    /// Worker feedback: one micro-batch on `shard` took `service_us`.
+    pub fn record_service(&self, shard: usize, service_us: f64) {
+        self.shards[shard].ewma.record(service_us);
+    }
+
+    /// Current EWMA service-time estimate for `shard` (µs).
+    pub fn est_service_us(&self, shard: usize) -> Option<f64> {
+        self.shards[shard].ewma.get()
+    }
+
+    /// Count a shed that happened outside [`AdmissionController::decide`]
+    /// (the open-loop generator's queue-full drop-tail).
+    pub fn note_shed(&self, shard: usize) {
+        self.shards[shard].shed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Requests shed on `shard` so far (admission + drop-tail).
+    pub fn shard_shed(&self, shard: usize) -> usize {
+        self.shards[shard].shed.load(Ordering::Relaxed)
+    }
+
+    /// Requests admitted degraded on `shard` so far.
+    pub fn shard_degraded(&self, shard: usize) -> usize {
+        self.shards[shard].degraded.load(Ordering::Relaxed)
+    }
+
+    /// Total sheds across shards.
+    pub fn total_shed(&self) -> usize {
+        self.shards.iter().map(|s| s.shed.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Total degraded admissions across shards.
+    pub fn total_degraded(&self) -> usize {
+        self.shards.iter().map(|s| s.degraded.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Decide admission for a request arriving at `now_us` with
+    /// absolute deadline `deadline_us`, destined for `shard`.
+    ///
+    /// `queue_len` is the global request-queue depth and `shard_depth`
+    /// the number of micro-batches already routed to (and queued on)
+    /// the shard's channel. The wait model: this shard's share of the
+    /// global queue (`queue_len / n_shards` — the batcher has not
+    /// routed those requests yet) plus its routed batches, drained in
+    /// parallel *waves* of the shard's worker-pool size; each wave
+    /// takes one EWMA service time, and every request additionally
+    /// pays the micro-batcher's coalescing budget (`coalesce_us`)
+    /// before its batch forms. Before the first service-time sample
+    /// (cold start) everything is admitted. `Shed` / `Degrade`
+    /// outcomes bump the shard's counters.
+    pub fn decide(
+        &self,
+        now_us: u64,
+        deadline_us: u64,
+        shard: usize,
+        queue_len: usize,
+        shard_depth: usize,
+    ) -> AdmitDecision {
+        if self.policy == AdmissionPolicy::None {
+            return AdmitDecision::Admit;
+        }
+        let Some(service) = self.shards[shard].ewma.get() else {
+            return AdmitDecision::Admit; // cold start: no estimate yet
+        };
+        let own_queue = queue_len / self.shards.len().max(1);
+        let batches_ahead = own_queue.div_ceil(self.batch_size) + shard_depth;
+        let waves_ahead =
+            batches_ahead.div_ceil(self.shard_workers[shard].max(1));
+        let start_us = now_us.saturating_add(self.coalesce_us);
+        if est_finish_us(start_us, waves_ahead, service) <= deadline_us {
+            return AdmitDecision::Admit;
+        }
+        match self.policy {
+            AdmissionPolicy::Reject => {
+                self.shards[shard].shed.fetch_add(1, Ordering::Relaxed);
+                AdmitDecision::Shed
+            }
+            AdmissionPolicy::Degrade => {
+                // neither the wait behind queued batches nor the
+                // coalescing delay can be degraded away; only this
+                // request's own service slice can
+                let wait = waves_ahead as f64 * service;
+                let budget =
+                    deadline_us as f64 - start_us as f64 - wait;
+                self.shards[shard].degraded.fetch_add(1, Ordering::Relaxed);
+                AdmitDecision::Degrade(degraded_fanouts(
+                    &self.base_fanouts,
+                    budget,
+                    service,
+                ))
+            }
+            AdmissionPolicy::None => unreachable!("handled above"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // coalesce_us = 0 and 1 worker per shard keep the backlog
+    // arithmetic in these tests exact (waves == batches); the
+    // coalescing and parallelism terms have their own tests below
+    fn ctrl(policy: AdmissionPolicy) -> AdmissionController {
+        AdmissionController::new(policy, 8, 0, vec![1, 1], vec![10, 10], 0.3)
+    }
+
+    #[test]
+    fn policy_parses_and_round_trips() {
+        for (s, p) in [
+            ("none", AdmissionPolicy::None),
+            ("reject", AdmissionPolicy::Reject),
+            ("degrade", AdmissionPolicy::Degrade),
+        ] {
+            let parsed = AdmissionPolicy::parse(s).unwrap();
+            assert_eq!(parsed, p);
+            assert_eq!(parsed.name(), s);
+        }
+        assert!(AdmissionPolicy::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn ewma_converges_to_constant_stream() {
+        let e = ServiceEwma::new(0.3);
+        assert_eq!(e.get(), None);
+        for _ in 0..50 {
+            e.record(1_000.0);
+        }
+        let v = e.get().unwrap();
+        assert!((v - 1_000.0).abs() < 1e-6, "ewma {v} != 1000");
+    }
+
+    #[test]
+    fn ewma_tracks_a_level_shift() {
+        let e = ServiceEwma::new(0.5);
+        for _ in 0..20 {
+            e.record(100.0);
+        }
+        for _ in 0..20 {
+            e.record(900.0);
+        }
+        let v = e.get().unwrap();
+        assert!(v > 800.0, "ewma {v} stuck at the old level");
+    }
+
+    #[test]
+    fn cold_start_admits_everything() {
+        let c = ctrl(AdmissionPolicy::Reject);
+        // no service samples yet: even an absurd deadline is admitted
+        assert_eq!(c.decide(1_000, 1_001, 0, 10_000, 50), AdmitDecision::Admit);
+        assert_eq!(c.total_shed(), 0);
+    }
+
+    /// `none` is a no-op: unmeetable deadlines are admitted unchanged
+    /// and nothing is ever counted.
+    #[test]
+    fn none_policy_is_a_noop() {
+        let c = ctrl(AdmissionPolicy::None);
+        c.record_service(0, 10_000.0);
+        let d = c.decide(0, 1, 0, 1_000, 100);
+        assert_eq!(d, AdmitDecision::Admit);
+        assert_eq!(c.total_shed(), 0);
+        assert_eq!(c.total_degraded(), 0);
+    }
+
+    /// `reject` sheds a request whose deadline is already unmeetable
+    /// and admits one with slack, counting sheds per shard.
+    #[test]
+    fn reject_sheds_unmeetable_deadline() {
+        let c = ctrl(AdmissionPolicy::Reject);
+        c.record_service(0, 10_000.0); // 10 ms per batch
+        // empty queue: our own batch alone takes 10 ms > 5 ms deadline
+        assert_eq!(c.decide(0, 5_000, 0, 0, 0), AdmitDecision::Shed);
+        // generous deadline is admitted
+        assert_eq!(c.decide(0, 1_000_000, 0, 0, 0), AdmitDecision::Admit);
+        // backlog makes the same deadline unmeetable again: 32 global
+        // requests / 2 shards / batch 8 = 2 batches ahead -> est 30 ms
+        assert_eq!(c.decide(0, 25_000, 0, 32, 0), AdmitDecision::Shed);
+        assert_eq!(c.shard_shed(0), 2);
+        assert_eq!(c.shard_shed(1), 0);
+        assert_eq!(c.total_shed(), 2);
+    }
+
+    /// A bigger worker pool drains the same backlog in parallel waves,
+    /// turning a shed into an admit at the same deadline.
+    #[test]
+    fn worker_parallelism_divides_the_backlog_wait() {
+        let serial = ctrl(AdmissionPolicy::Reject); // 1 worker/shard
+        serial.record_service(0, 10_000.0);
+        // 4 routed batches ahead at 10 ms each -> est 50 ms > 30 ms
+        assert_eq!(serial.decide(0, 30_000, 0, 0, 4), AdmitDecision::Shed);
+        // 4 workers on the shard: the 4 batches drain in one wave ->
+        // est (1+1)*10 ms = 20 ms <= 30 ms
+        let pooled = AdmissionController::new(
+            AdmissionPolicy::Reject,
+            8,
+            0,
+            vec![4],
+            vec![10, 10],
+            0.3,
+        );
+        pooled.record_service(0, 10_000.0);
+        assert_eq!(pooled.decide(0, 30_000, 0, 0, 4), AdmitDecision::Admit);
+    }
+
+    /// `degrade` admits everything, but fanouts shrink monotonically as
+    /// the remaining deadline budget shrinks — and never reach zero.
+    #[test]
+    fn degrade_shrinks_fanout_monotonically() {
+        let c = ctrl(AdmissionPolicy::Degrade);
+        c.record_service(0, 10_000.0);
+        let mut last = vec![usize::MAX; 2];
+        // deadlines from almost-feasible down to hopeless
+        for deadline in [9_000u64, 7_000, 5_000, 3_000, 1_000, 0] {
+            match c.decide(0, deadline, 0, 0, 0) {
+                AdmitDecision::Degrade(f) => {
+                    assert_eq!(f.len(), 2);
+                    for (a, (&b, &base)) in
+                        f.iter().zip(last.iter().zip([10usize, 10].iter()))
+                    {
+                        assert!(*a <= b, "fanout grew as budget shrank");
+                        assert!(*a >= 1, "fanout reached zero");
+                        assert!(*a <= base);
+                    }
+                    last = f;
+                }
+                other => panic!("degrade policy never sheds, got {other:?}"),
+            }
+        }
+        // the hopeless deadline bottoms out at the minimum fanout
+        assert_eq!(last, vec![1, 1]);
+        assert_eq!(c.total_degraded(), 6);
+        assert_eq!(c.total_shed(), 0);
+    }
+
+    /// The coalescing budget counts against feasibility: a deadline
+    /// the backlog alone would meet becomes unmeetable once the
+    /// batcher's coalescing delay is added.
+    #[test]
+    fn coalescing_budget_counts_against_the_deadline() {
+        // service alone (10 ms) fits an 11 ms deadline...
+        let zero = ctrl(AdmissionPolicy::Reject);
+        zero.record_service(0, 10_000.0);
+        assert_eq!(zero.decide(0, 11_000, 0, 0, 0), AdmitDecision::Admit);
+        // ...but not once a 2 ms coalescing budget starts the clock
+        let with_delay = AdmissionController::new(
+            AdmissionPolicy::Reject,
+            8,
+            2_000,
+            vec![1],
+            vec![10, 10],
+            0.3,
+        );
+        with_delay.record_service(0, 10_000.0);
+        assert_eq!(with_delay.decide(0, 11_000, 0, 0, 0), AdmitDecision::Shed);
+        assert_eq!(with_delay.decide(0, 13_000, 0, 0, 0), AdmitDecision::Admit);
+    }
+
+    #[test]
+    fn degraded_fanouts_pure_function_bounds() {
+        // budget >= estimate leaves fanouts untouched
+        assert_eq!(degraded_fanouts(&[5, 7], 100.0, 100.0), vec![5, 7]);
+        // negative budget clamps to the floor
+        assert_eq!(degraded_fanouts(&[5, 7], -50.0, 100.0), vec![1, 1]);
+        // zero estimate (degenerate) is treated as "no information"
+        assert_eq!(degraded_fanouts(&[5, 7], 10.0, 0.0), vec![5, 7]);
+    }
+
+    #[test]
+    fn est_finish_accounts_for_backlog() {
+        assert_eq!(est_finish_us(100, 0, 1_000.0), 1_100);
+        assert_eq!(est_finish_us(100, 3, 1_000.0), 4_100);
+        // saturating at u64::MAX rather than wrapping
+        assert_eq!(est_finish_us(u64::MAX, 1, 1e12), u64::MAX);
+    }
+
+    /// Concurrent recorders never corrupt the estimate (CAS loop).
+    #[test]
+    fn ewma_concurrent_records_stay_finite() {
+        let e = ServiceEwma::new(0.2);
+        std::thread::scope(|s| {
+            for t in 0..4 {
+                let e = &e;
+                s.spawn(move || {
+                    for i in 0..5_000 {
+                        e.record(100.0 + ((t * i) % 100) as f64);
+                    }
+                });
+            }
+        });
+        let v = e.get().unwrap();
+        assert!(v.is_finite() && (100.0..=200.0).contains(&v), "ewma {v}");
+    }
+}

@@ -17,6 +17,12 @@
 //! the global FIFO head. `p = 0` degenerates to pure FIFO; `p = 1`
 //! admits only seed-community requests and sends a short batch rather
 //! than mix communities.
+//!
+//! Admission metadata rides through untouched: a degraded request
+//! (`Request::fanout_cap`, set by [`super::admission`]) is coalesced
+//! exactly like any other — the *worker* applies the cap when it
+//! samples the batch's MFG, so the batcher stays a pure
+//! membership/timing policy.
 
 use std::collections::VecDeque;
 
@@ -24,6 +30,7 @@ use crate::util::rng::Rng;
 
 use super::Request;
 
+/// Micro-batcher knobs (a subset of the engine's `ServeConfig`).
 #[derive(Clone, Debug)]
 pub struct BatcherConfig {
     /// Maximum requests per micro-batch (≤ the artifact's batch cap).
@@ -35,6 +42,7 @@ pub struct BatcherConfig {
     pub community_bias: f64,
 }
 
+/// Dynamic micro-batcher (see the module docs for the policy).
 pub struct MicroBatcher {
     cfg: BatcherConfig,
     /// Arrival (FIFO) order.
@@ -43,6 +51,7 @@ pub struct MicroBatcher {
 }
 
 impl MicroBatcher {
+    /// New batcher; `seed` fixes the per-slot bias draws.
     pub fn new(cfg: BatcherConfig, seed: u64) -> MicroBatcher {
         MicroBatcher {
             cfg,
@@ -51,14 +60,17 @@ impl MicroBatcher {
         }
     }
 
+    /// Add a dequeued request to the pending pool.
     pub fn push(&mut self, r: Request) {
         self.pending.push_back(r);
     }
 
+    /// Requests currently pending.
     pub fn len(&self) -> usize {
         self.pending.len()
     }
 
+    /// Whether nothing is pending.
     pub fn is_empty(&self) -> bool {
         self.pending.is_empty()
     }
@@ -146,7 +158,7 @@ mod tests {
     fn req(id: u64, node: u32, arrive_us: u64, deadline_us: u64) -> Request {
         // the batcher never sends on `reply`; a dropped receiver is fine
         let (tx, _rx) = mpsc::channel();
-        Request { id, node, arrive_us, deadline_us, reply: tx }
+        Request { id, node, arrive_us, deadline_us, fanout_cap: None, reply: tx }
     }
 
     fn ids(batch: &[Request]) -> Vec<u64> {

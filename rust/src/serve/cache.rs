@@ -17,14 +17,18 @@ use std::sync::Mutex;
 
 use crate::cachesim::SetAssocCore;
 
+/// Geometry of one [`ShardedFeatureCache`].
 #[derive(Clone, Debug)]
 pub struct FeatureCacheConfig {
     /// Total feature rows cached across all shards.
     pub rows: usize,
+    /// Mutex-striped shards within the cache (concurrency, not device
+    /// shards).
     pub shards: usize,
     /// Associativity within a shard (clamped to the shard's rows; a
     /// shard with `ways == rows` is fully associative = exact LRU).
     pub ways: usize,
+    /// Floats per cached feature row.
     pub feat_dim: usize,
 }
 
@@ -48,13 +52,17 @@ struct Shard {
     misses: u64,
 }
 
+/// Aggregated hit/miss counters.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct CacheStats {
+    /// Fetches served from the cache slab.
     pub hits: u64,
+    /// Fetches that fell through to the feature table.
     pub misses: u64,
 }
 
 impl CacheStats {
+    /// hits / (hits + misses); 0 when nothing was fetched.
     pub fn hit_rate(&self) -> f64 {
         let total = self.hits + self.misses;
         if total == 0 {
@@ -65,6 +73,7 @@ impl CacheStats {
     }
 }
 
+/// Mutex-striped set-associative feature-row cache (see module docs).
 pub struct ShardedFeatureCache {
     shards: Vec<Mutex<Shard>>,
     feat_dim: usize,
@@ -89,6 +98,7 @@ impl ShardedFeatureCache {
         ShardedFeatureCache { shards, feat_dim: cfg.feat_dim }
     }
 
+    /// Floats per cached row.
     pub fn feat_dim(&self) -> usize {
         self.feat_dim
     }
@@ -98,6 +108,7 @@ impl ShardedFeatureCache {
         self.shards.len() * self.shards[0].lock().unwrap().core.slots()
     }
 
+    /// Mutex-striped shard count.
     pub fn num_shards(&self) -> usize {
         self.shards.len()
     }
@@ -141,6 +152,7 @@ impl ShardedFeatureCache {
         s
     }
 
+    /// Zero the hit/miss counters (contents stay cached).
     pub fn reset_counters(&self) {
         for sh in &self.shards {
             let mut g = sh.lock().unwrap();

@@ -1,12 +1,17 @@
-//! Serving engine: wires queue → micro-batcher → shard router →
-//! per-shard worker pools → replies, drives the closed-loop load
-//! generator against it, and reports throughput + latency percentiles
-//! + feature-cache hit rate, per shard and rolled up.
+//! Serving engine: wires admission gate → queue → micro-batcher →
+//! shard router → per-shard worker pools → replies, drives the load
+//! generator against it (closed loop or open-loop Poisson), and
+//! reports throughput + latency percentiles + shed/degrade counts +
+//! feature-cache hit rate, per shard and rolled up.
 //!
 //! Thread layout (all scoped, nothing outlives a run):
 //!
-//! * N client threads ([`super::loadgen`]) push Zipf-skewed requests
-//!   and block on their replies (closed loop);
+//! * N client threads ([`super::loadgen`]) push Zipf-skewed requests —
+//!   closed loop blocks each client on its reply; open loop issues at
+//!   Poisson times and a single collector thread drains the replies;
+//! * every arriving request passes the [`super::admission`] gate
+//!   (deadline feasibility from the per-shard service-time EWMA the
+//!   workers feed back);
 //! * 1 batcher thread drains the queue into a [`MicroBatcher`],
 //!   sleeping only until the earliest pending flush point, and routes
 //!   each formed micro-batch to the shard owning its community
@@ -33,9 +38,10 @@ use crate::util::json::{arr, num, obj, s, Json};
 use crate::util::rng::Rng;
 use crate::util::stats::percentile;
 
+use super::admission::{AdmissionController, AdmissionPolicy};
 use super::batcher::{BatcherConfig, MicroBatcher};
 use super::cache::{CacheStats, FeatureCacheConfig, ShardedFeatureCache};
-use super::loadgen::{self, LoadConfig, ReqRecord};
+use super::loadgen::{self, Arrival, ClientCtx, LoadConfig, ReqRecord};
 use super::queue::{Pop, RequestQueue};
 use super::shard::{
     route_batch, ShardPlan, ShardReport, ShardStatsCell, SpillPolicy,
@@ -43,8 +49,9 @@ use super::shard::{
 use super::worker::{
     shard_worker_loop, InferExecutor, NullExecutor, PjrtExecutor, WorkerCtx,
 };
-use super::{Request, ServeClock};
+use super::{Reply, Request, ServeClock};
 
+/// Engine-side configuration of one serving run.
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
     /// Max requests coalesced per micro-batch.
@@ -60,21 +67,26 @@ pub struct ServeConfig {
     pub workers: usize,
     /// Bounded request-queue capacity (backpressure bound).
     pub queue_cap: usize,
-    /// Feature cache: total rows across all device shards, and the
-    /// mutex-striping count *within* each shard's cache.
+    /// Feature cache: total rows across all device shards.
     pub cache_rows: usize,
+    /// Mutex-striping count *within* each shard's cache.
     pub cache_shards: usize,
     /// Logical device shards; communities are partitioned across them
     /// and each runs its own worker pool + feature cache.
     pub shards: usize,
     /// What to do with micro-batches that span shards.
     pub spill: SpillPolicy,
+    /// Admission policy for requests whose deadline is unmeetable at
+    /// enqueue time (`none` / `reject` / `degrade`).
+    pub admission: AdmissionPolicy,
     /// Neighbor fanouts used when no artifact dictates them.
     pub fanouts: Vec<usize>,
+    /// Engine seed (batcher bias draws, per-worker RNG streams).
     pub seed: u64,
 }
 
 impl ServeConfig {
+    /// Serving defaults sized to a dataset (cache ≈ 1/8 of the table).
     pub fn for_dataset(ds: &Dataset) -> ServeConfig {
         ServeConfig {
             batch_size: 32,
@@ -87,6 +99,7 @@ impl ServeConfig {
             cache_shards: 8,
             shards: 1,
             spill: SpillPolicy::Strict,
+            admission: AdmissionPolicy::None,
             fanouts: vec![10, 10],
             seed: 0,
         }
@@ -96,42 +109,84 @@ impl ServeConfig {
 /// End-of-run serving report (`serve bench` prints this as JSON).
 #[derive(Clone, Debug)]
 pub struct ServeReport {
+    /// Dataset served.
     pub dataset: String,
+    /// Executor used (`pjrt` / `null`).
     pub executor: String,
+    /// Community-bias knob value.
     pub community_bias: f64,
+    /// Arrival discipline label (`closed` / `poisson:RATE`).
+    pub arrival: String,
+    /// Admission policy label (`none` / `reject` / `degrade`).
+    pub admission: String,
+    /// Offered load in req/s (0 for the closed loop, which has no
+    /// fixed offered rate).
+    pub offered_rps: f64,
+    /// Requests completed (replied to).
     pub requests: usize,
+    /// Completed requests whose reply carried an executor error.
     pub errors: usize,
+    /// Requests shed (admission rejects + open-loop drop-tail).
+    pub shed: usize,
+    /// shed / (completed + shed).
+    pub shed_rate: f64,
+    /// Requests admitted with degraded (capped) fanout.
+    pub degraded: usize,
+    /// Serving wall time, seconds.
     pub wall_s: f64,
+    /// Completed requests per second of wall time.
     pub throughput_rps: f64,
+    /// Mean completion latency, ms.
     pub lat_mean_ms: f64,
+    /// Median completion latency, ms.
     pub lat_p50_ms: f64,
+    /// 95th-percentile completion latency, ms.
     pub lat_p95_ms: f64,
+    /// 99th-percentile completion latency, ms.
     pub lat_p99_ms: f64,
+    /// Worst completion latency, ms.
     pub lat_max_ms: f64,
+    /// Fraction of completed requests that finished past their
+    /// deadline (shed requests are counted in `shed_rate`, not here).
     pub deadline_miss_frac: f64,
+    /// Micro-batches processed.
     pub batches: usize,
+    /// Mean requests per micro-batch.
     pub mean_batch_size: f64,
+    /// Mean unique input-frontier nodes per micro-batch.
     pub mean_input_nodes: f64,
+    /// Feature-cache hits, summed over shards.
     pub cache_hits: u64,
+    /// Feature-cache misses, summed over shards.
     pub cache_misses: u64,
+    /// hits / (hits + misses) over all shards.
     pub cache_hit_rate: f64,
     /// Effective cache capacity in rows, summed over shards (geometry
     /// rounds the `cache_rows` knob up to whole sets).
     pub cache_rows: usize,
+    /// Logical device shards in the run.
     pub n_shards: usize,
+    /// Spill policy label.
     pub spill: String,
     /// Per-shard breakdown (one entry even when `n_shards == 1`).
     pub shards: Vec<ShardReport>,
 }
 
 impl ServeReport {
+    /// Serialize the full report (the `serve bench` JSON artifact).
     pub fn to_json(&self) -> Json {
         obj(vec![
             ("dataset", s(&self.dataset)),
             ("executor", s(&self.executor)),
             ("p", num(self.community_bias)),
+            ("arrival", s(&self.arrival)),
+            ("admission", s(&self.admission)),
+            ("offered_rps", num(self.offered_rps)),
             ("requests", num(self.requests as f64)),
             ("errors", num(self.errors as f64)),
+            ("shed", num(self.shed as f64)),
+            ("shed_rate", num(self.shed_rate)),
+            ("degraded", num(self.degraded as f64)),
             ("wall_s", num(self.wall_s)),
             ("throughput_rps", num(self.throughput_rps)),
             ("lat_mean_ms", num(self.lat_mean_ms)),
@@ -162,17 +217,21 @@ impl ServeReport {
         self.shards.iter().map(|sh| sh.foreign_requests).sum()
     }
 
+    /// One-line human summary printed by `serve bench` and `exp serve`.
     pub fn summary(&self) -> String {
         format!(
-            "[serve] {} exec={} p={:.2} shards={} spill={}: {} req in \
-             {:.2}s = {:.0} req/s | lat ms p50 {:.2} p95 {:.2} p99 {:.2} | \
-             miss-deadline {:.1}% | cache hit {:.1}% | {:.1} req/batch | \
-             foreign {}",
+            "[serve] {} exec={} p={:.2} shards={} spill={} arrival={} \
+             admission={}: {} req in {:.2}s = {:.0} req/s | lat ms p50 \
+             {:.2} p95 {:.2} p99 {:.2} | miss-deadline {:.1}% | shed \
+             {} ({:.1}%) degraded {} | cache hit {:.1}% | {:.1} \
+             req/batch | foreign {}",
             self.dataset,
             self.executor,
             self.community_bias,
             self.n_shards,
             self.spill,
+            self.arrival,
+            self.admission,
             self.requests,
             self.wall_s,
             self.throughput_rps,
@@ -180,6 +239,9 @@ impl ServeReport {
             self.lat_p95_ms,
             self.lat_p99_ms,
             self.deadline_miss_frac * 100.0,
+            self.shed,
+            self.shed_rate * 100.0,
+            self.degraded,
             self.cache_hit_rate * 100.0,
             self.mean_batch_size,
             self.foreign_requests(),
@@ -271,7 +333,8 @@ fn try_pjrt_executor(
     Ok((PjrtExecutor::new(state, classes), meta))
 }
 
-/// Run one closed-loop serving benchmark to completion.
+/// Run one serving benchmark to completion (closed or open loop,
+/// depending on `lcfg.arrival`).
 pub fn run(
     ds: &Dataset,
     meta: &ArtifactMeta,
@@ -314,6 +377,19 @@ pub fn run(
         shard_workers[w % n_shards] += 1;
     }
 
+    // admission gate: per-shard service EWMA fed by the workers,
+    // consulted by every load generator at enqueue time. The batcher's
+    // coalescing budget counts against every feasibility estimate, and
+    // each shard's backlog drains in waves of its worker-pool size.
+    let adm = AdmissionController::new(
+        scfg.admission,
+        batch_size,
+        scfg.max_delay_us,
+        shard_workers.clone(),
+        meta.spec.fanouts.clone(),
+        0.3,
+    );
+
     // popularity ranking: rank -> node, via a seeded shuffle so hot
     // nodes scatter across communities
     let perm = loadgen::popularity_perm(ds.n(), lcfg.seed);
@@ -339,6 +415,21 @@ pub fn run(
     // cache slabs, shard plan) is done, so wall_s measures serving,
     // not O(n) prep
     let clock = ServeClock::start();
+
+    // everything a load-generator thread reads, shared by reference
+    let cctx = ClientCtx {
+        queue: &queue,
+        clock: &clock,
+        lcfg,
+        deadline_us: scfg.deadline_us,
+        perm: &perm,
+        zipf: &zipf,
+        records: &records,
+        adm: &adm,
+        plan: &plan,
+        community: &ds.community,
+        depths: &depths,
+    };
 
     std::thread::scope(|scope| {
         // batcher thread owns every shard sender; workers see their
@@ -433,37 +524,63 @@ pub fn run(
                 let cell = &shard_cells[sidx];
                 let depth = &depths[sidx];
                 let plan = &plan;
+                let adm = &adm;
                 let seed = scfg.seed ^ widx.wrapping_mul(0x9E37_79B9_7F4A_7C15);
                 widx += 1;
                 worker_handles.push(scope.spawn(move || {
                     let mut rng = Rng::new(seed ^ 0x5EBF_11);
                     shard_worker_loop(
-                        &ctx, sidx, plan, rx, depth, cell, &mut rng,
+                        &ctx, sidx, plan, rx, depth, cell, adm, &mut rng,
                     );
                 }));
             }
         }
 
-        // closed-loop clients
+        // load generators: closed-loop clients block on their replies;
+        // open-loop clients share one reply channel drained by a
+        // collector thread
         let mut client_handles = Vec::new();
-        for c in 0..lcfg.clients.max(1) {
-            let queue = &queue;
-            let clock = &clock;
-            let records = &records;
-            let perm = &perm;
-            let zipf = &zipf;
-            client_handles.push(scope.spawn(move || {
-                loadgen::client_loop(
-                    c as u64, queue, clock, lcfg, scfg.deadline_us, perm, zipf,
-                    records,
-                );
-            }));
+        let mut collector_handle = None;
+        let cctx = &cctx;
+        match lcfg.arrival {
+            Arrival::Closed => {
+                for c in 0..lcfg.clients.max(1) {
+                    client_handles.push(scope.spawn(move || {
+                        loadgen::client_loop(c as u64, cctx);
+                    }));
+                }
+            }
+            Arrival::Poisson { rate_rps } => {
+                let (rtx, rrx) = std::sync::mpsc::channel::<Reply>();
+                let records = &records;
+                let deadline_us = scfg.deadline_us;
+                collector_handle = Some(scope.spawn(move || {
+                    loadgen::collector_loop(rrx, deadline_us, records);
+                }));
+                let clients = lcfg.clients.max(1);
+                let per_client = rate_rps / clients as f64;
+                for c in 0..clients {
+                    let rtx = rtx.clone();
+                    client_handles.push(scope.spawn(move || {
+                        loadgen::open_loop_client(
+                            c as u64, cctx, per_client, rtx,
+                        );
+                    }));
+                }
+                // the collector exits once every clone (clients +
+                // in-flight requests) is gone
+                drop(rtx);
+            }
         }
 
         for h in client_handles {
             let _ = h.join();
         }
-        // all requests issued and answered (closed loop) — shut down
+        // open loop: wait until every in-flight request has replied
+        if let Some(h) = collector_handle {
+            let _ = h.join();
+        }
+        // all requests issued and answered — shut down
         queue.close();
         let _ = batcher_handle.join();
         for h in worker_handles {
@@ -474,7 +591,8 @@ pub fn run(
     let wall_s = clock.now_us() as f64 / 1e6;
     let records = records.into_inner().unwrap();
 
-    // roll per-shard cells + caches up into shard reports and totals
+    // roll per-shard cells + caches + admission counters up into shard
+    // reports and totals
     let mut shard_reports = Vec::with_capacity(n_shards);
     let mut cache_stats = CacheStats::default();
     let mut stats_batches = 0usize;
@@ -488,7 +606,8 @@ pub fn run(
         stats_batches += cell.batches;
         stats_requests += cell.requests;
         stats_input_nodes += cell.input_nodes;
-        shard_reports.push(ShardReport::from_cell(sidx, &plan, &cell, cstats));
+        shard_reports
+            .push(ShardReport::from_cell(sidx, &plan, &cell, cstats, &adm));
     }
 
     // errored requests count toward errors/deadlines, not latency
@@ -501,6 +620,7 @@ pub fn run(
     let misses = records.iter().filter(|r| r.deadline_missed).count();
     let errors = records.iter().filter(|r| r.error).count();
     let n = records.len();
+    let shed = adm.total_shed();
     let nb = stats_batches.max(1);
     // keep the report finite (and its JSON parseable) on empty runs
     let pct = |p: f64| if lats_ms.is_empty() { 0.0 } else { percentile(&lats_ms, p) };
@@ -513,8 +633,14 @@ pub fn run(
         dataset: ds.name.clone(),
         executor: exec.name().to_string(),
         community_bias: scfg.community_bias,
+        arrival: lcfg.arrival.label(),
+        admission: scfg.admission.name().to_string(),
+        offered_rps: lcfg.arrival.offered_rps().unwrap_or(0.0),
         requests: n,
         errors,
+        shed,
+        shed_rate: shed as f64 / (n + shed).max(1) as f64,
+        degraded: adm.total_degraded(),
         wall_s,
         throughput_rps: n as f64 / wall_s.max(1e-9),
         lat_mean_ms: mean_ms,
@@ -545,6 +671,16 @@ mod tests {
         crate::train::dataset::build(&preset("tiny").unwrap(), true)
     }
 
+    fn closed(clients: usize, per: usize, seed: u64) -> LoadConfig {
+        LoadConfig {
+            clients,
+            requests_per_client: per,
+            zipf_s: 1.1,
+            arrival: Arrival::Closed,
+            seed,
+        }
+    }
+
     #[test]
     fn serve_bench_end_to_end_without_artifacts() {
         let ds = tiny();
@@ -558,15 +694,15 @@ mod tests {
         scfg.seed = 7;
         let meta = synthetic_infer_meta(&ds, scfg.batch_size, &scfg.fanouts);
         let exec = NullExecutor { num_classes: ds.num_classes };
-        let lcfg = LoadConfig {
-            clients: 4,
-            requests_per_client: 25,
-            zipf_s: 1.1,
-            seed: 3,
-        };
+        let lcfg = closed(4, 25, 3);
         let rep = run(&ds, &meta, &exec, &scfg, &lcfg).unwrap();
         assert_eq!(rep.requests, 100, "closed loop must answer every request");
         assert_eq!(rep.errors, 0);
+        // admission=none: nothing shed, nothing degraded
+        assert_eq!(rep.shed, 0);
+        assert_eq!(rep.degraded, 0);
+        assert_eq!(rep.arrival, "closed");
+        assert_eq!(rep.admission, "none");
         assert!(rep.throughput_rps > 0.0);
         assert!(rep.lat_p50_ms <= rep.lat_p99_ms);
         assert!(rep.lat_p99_ms.is_finite());
@@ -578,16 +714,22 @@ mod tests {
         assert_eq!(rep.shards.len(), 1);
         assert_eq!(rep.shards[0].owned_nodes, ds.n());
         assert_eq!(rep.foreign_requests(), 0);
+        // workers fed the admission EWMA even under admission=none
+        assert!(rep.shards[0].est_service_us > 0.0);
         // report serializes
         let j = rep.to_json().to_string_pretty();
         assert!(j.contains("throughput_rps"));
         assert!(j.contains("n_shards"));
         assert!(j.contains("foreign_requests"));
+        assert!(j.contains("shed_rate"));
+        assert!(j.contains("arrival"));
     }
 
     // NOTE: the strict-spill affinity acceptance check (2/4 shards,
     // zero foreign requests, per-shard accounting sums) lives in
-    // rust/tests/serve_shard.rs — not duplicated here.
+    // rust/tests/serve_shard.rs, and the admission/open-loop
+    // saturation checks in rust/tests/serve_admission.rs — not
+    // duplicated here.
 
     #[test]
     fn spill_policies_run_end_to_end() {
@@ -604,12 +746,7 @@ mod tests {
             scfg.shards = 2;
             scfg.spill = spill;
             scfg.fanouts = vec![5, 5];
-            let lcfg = LoadConfig {
-                clients: 2,
-                requests_per_client: 20,
-                zipf_s: 1.2,
-                seed: 11,
-            };
+            let lcfg = closed(2, 20, 11);
             let rep = run(&ds, &meta, &exec, &scfg, &lcfg).unwrap();
             assert_eq!(rep.requests, 40, "spill={}", spill.name());
             assert_eq!(rep.errors, 0, "spill={}", spill.name());
@@ -631,16 +768,74 @@ mod tests {
             scfg.community_bias = p;
             scfg.workers = 1;
             scfg.fanouts = vec![5, 5];
-            let lcfg = LoadConfig {
-                clients: 2,
-                requests_per_client: 20,
-                zipf_s: 1.2,
-                seed: 11,
-            };
+            let lcfg = closed(2, 20, 11);
             let rep = run(&ds, &meta, &exec, &scfg, &lcfg).unwrap();
             assert_eq!(rep.requests, 40, "p={p}");
             assert_eq!(rep.errors, 0, "p={p}");
         }
+    }
+
+    /// Open-loop Poisson run at an easily-sustainable rate: every
+    /// issued request is either completed or shed (none lost), and the
+    /// report labels the arrival discipline and offered rate.
+    #[test]
+    fn open_loop_poisson_accounts_for_every_request() {
+        let ds = tiny();
+        let mut scfg = ServeConfig::for_dataset(&ds);
+        scfg.batch_size = 16;
+        scfg.max_delay_us = 500;
+        scfg.deadline_us = 500_000;
+        scfg.workers = 2;
+        scfg.fanouts = vec![5, 5];
+        scfg.admission = AdmissionPolicy::Reject;
+        let meta = synthetic_infer_meta(&ds, scfg.batch_size, &scfg.fanouts);
+        let exec = NullExecutor { num_classes: ds.num_classes };
+        let lcfg = LoadConfig {
+            clients: 4,
+            requests_per_client: 30,
+            zipf_s: 1.1,
+            arrival: Arrival::Poisson { rate_rps: 4_000.0 },
+            seed: 5,
+        };
+        let rep = run(&ds, &meta, &exec, &scfg, &lcfg).unwrap();
+        assert_eq!(
+            rep.requests + rep.shed,
+            120,
+            "open loop must account for every issued request"
+        );
+        assert_eq!(rep.errors, 0);
+        assert_eq!(rep.arrival, "poisson:4000");
+        assert_eq!(rep.admission, "reject");
+        assert!((rep.offered_rps - 4_000.0).abs() < 1e-9);
+        assert!((0.0..=1.0).contains(&rep.shed_rate));
+        if rep.requests > 0 {
+            assert!(rep.lat_p99_ms.is_finite());
+        }
+    }
+
+    /// `degrade` admission in a closed loop still answers everything:
+    /// degraded requests produce (cheaper) replies, never errors.
+    #[test]
+    fn degrade_admission_answers_every_request() {
+        let ds = tiny();
+        let mut scfg = ServeConfig::for_dataset(&ds);
+        scfg.batch_size = 8;
+        scfg.workers = 1;
+        // deadline so tight that, once the EWMA warms up, requests
+        // get degraded rather than processed at full fanout
+        scfg.deadline_us = 300;
+        scfg.max_delay_us = 100;
+        scfg.fanouts = vec![5, 5];
+        scfg.admission = AdmissionPolicy::Degrade;
+        let meta = synthetic_infer_meta(&ds, scfg.batch_size, &scfg.fanouts);
+        let exec = NullExecutor { num_classes: ds.num_classes };
+        let lcfg = closed(2, 30, 13);
+        let rep = run(&ds, &meta, &exec, &scfg, &lcfg).unwrap();
+        // degrade never sheds: every request is answered
+        assert_eq!(rep.requests, 60);
+        assert_eq!(rep.shed, 0);
+        assert_eq!(rep.errors, 0);
+        assert_eq!(rep.admission, "degrade");
     }
 
     #[test]

@@ -13,18 +13,30 @@
 //! on-chip reuse (and of Cooperative Minibatching's cross-batch
 //! overlap).
 //!
-//! Pipeline: [`queue::RequestQueue`] → [`batcher::MicroBatcher`] →
-//! [`shard`] router (communities partitioned across `n_shards` logical
-//! devices; strict/steal/broadcast spill for cross-shard batches) →
-//! per-shard [`worker`] pools (sampling + cache-fed assembly + the
-//! PJRT infer executable, or a no-op executor when AOT artifacts are
-//! absent) → per-request replies. Each shard owns its own feature
-//! cache, so under strict spill a shard's cache only ever sees its own
-//! communities. [`loadgen`] drives the closed loop with a Zipf-skewed
-//! trace and [`engine::run`] ties it all together and produces the
-//! throughput / tail-latency report with a per-shard breakdown
-//! (`comm-rand serve bench`, `comm-rand exp serve`).
+//! Pipeline: [`admission`] gate → [`queue::RequestQueue`] →
+//! [`batcher::MicroBatcher`] → [`shard`] router (communities
+//! partitioned across `n_shards` logical devices; strict/steal/
+//! broadcast spill for cross-shard batches) → per-shard [`worker`]
+//! pools (sampling + cache-fed assembly + the PJRT infer executable,
+//! or a no-op executor when AOT artifacts are absent) → per-request
+//! replies. Each shard owns its own feature cache, so under strict
+//! spill a shard's cache only ever sees its own communities.
+//!
+//! [`loadgen`] drives the load two ways: a **closed loop** (each Zipf
+//! client blocks on its reply, so offered load adapts to capacity) and
+//! an **open loop** (Poisson arrivals at a fixed offered rate, so the
+//! latency cliff past saturation is measurable). [`admission`] protects
+//! that cliff: per-request deadline feasibility from a rolling
+//! per-shard EWMA of micro-batch service time, with `reject` (shed) and
+//! `degrade` (shrink sampling fanout to fit the remaining budget)
+//! policies. [`engine::run`] ties it all together and produces the
+//! throughput / tail-latency / shed-rate report with a per-shard
+//! breakdown (`comm-rand serve bench`, `comm-rand exp serve`).
+//!
+//! See `docs/ARCHITECTURE.md` for the request lifecycle diagram and
+//! the knob reference.
 
+pub mod admission;
 pub mod batcher;
 pub mod cache;
 pub mod engine;
@@ -33,10 +45,11 @@ pub mod queue;
 pub mod shard;
 pub mod worker;
 
+pub use admission::{AdmissionController, AdmissionPolicy, AdmitDecision};
 pub use batcher::{BatcherConfig, MicroBatcher};
 pub use cache::{CacheStats, FeatureCacheConfig, ShardedFeatureCache};
 pub use engine::{run, ServeConfig, ServeReport};
-pub use loadgen::LoadConfig;
+pub use loadgen::{Arrival, LoadConfig};
 pub use queue::RequestQueue;
 pub use shard::{ShardPlan, ShardReport, SpillPolicy};
 pub use worker::{InferExecutor, NullExecutor, PjrtExecutor};
@@ -45,22 +58,35 @@ use std::time::Instant;
 
 /// One inference request: classify `node` before `deadline_us`.
 pub struct Request {
+    /// Client-assigned id, unique within a run.
     pub id: u64,
+    /// Global node id to classify.
     pub node: u32,
     /// [`ServeClock`] microseconds at enqueue time.
     pub arrive_us: u64,
     /// Absolute completion deadline, same clock.
     pub deadline_us: u64,
+    /// Degraded-fanout metadata set by [`admission`]: per-layer caps on
+    /// the sampling fanout (`None` = the artifact's full fanouts). The
+    /// micro-batcher carries this through untouched; the worker takes
+    /// the elementwise minimum across a batch's members.
+    pub fanout_cap: Option<Vec<usize>>,
     /// Completion channel back to the issuing client.
     pub reply: std::sync::mpsc::Sender<Reply>,
 }
 
 /// Completion record delivered to the client.
 pub struct Reply {
+    /// The request's id.
     pub id: u64,
+    /// The node that was classified.
     pub node: u32,
     /// Logits row for `node` (empty under the no-op executor).
     pub logits: Vec<f32>,
+    /// [`ServeClock`] microseconds the request was enqueued (copied
+    /// from the request, so open-loop collectors can compute latency
+    /// without a side table).
+    pub arrive_us: u64,
     /// [`ServeClock`] microseconds at completion.
     pub finish_us: u64,
     /// Size of the micro-batch this request rode in.
@@ -76,10 +102,12 @@ pub struct ServeClock {
 }
 
 impl ServeClock {
+    /// Start the timeline at 0 µs.
     pub fn start() -> ServeClock {
         ServeClock { start: Instant::now() }
     }
 
+    /// Microseconds elapsed since [`ServeClock::start`].
     pub fn now_us(&self) -> u64 {
         self.start.elapsed().as_micros() as u64
     }

@@ -3,6 +3,13 @@
 //! backpressure — an overloaded server slows its clients instead of
 //! buffering unboundedly), and `close` wakes everyone for shutdown.
 //!
+//! Two non-blocking entry points serve the load-shedding paths:
+//! [`RequestQueue::try_push`] (plain capacity rejection) and
+//! [`RequestQueue::push_gated`], the **admission hook** — it runs a
+//! caller-supplied gate under the queue lock, handing it the exact
+//! queue depth, so an admission decision and the enqueue it authorizes
+//! are atomic with respect to other producers.
+//!
 //! Generic over the item so tests can drive it with plain values; the
 //! engine instantiates it with [`super::Request`].
 
@@ -10,6 +17,8 @@ use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
 use std::time::Duration;
 
+/// Bounded multi-producer/single-consumer FIFO with blocking,
+/// non-blocking and gated push paths (see the module docs).
 pub struct RequestQueue<T> {
     inner: Mutex<Inner<T>>,
     not_empty: Condvar,
@@ -24,13 +33,27 @@ struct Inner<T> {
 
 /// Outcome of a timed pop.
 pub enum Pop<T> {
+    /// An item was dequeued.
     Item(T),
+    /// Nothing arrived within the timeout; the queue is still open.
     TimedOut,
     /// Queue closed and drained.
     Closed,
 }
 
+/// Why [`RequestQueue::push_gated`] refused an item; each variant hands
+/// the item back so the caller can account for it.
+pub enum PushRejected<T> {
+    /// The queue was closed (shutdown).
+    Closed(T),
+    /// The queue is at capacity (open-loop drop-tail shed).
+    Full(T),
+    /// The gate declined the item (admission shed).
+    Denied(T),
+}
+
 impl<T> RequestQueue<T> {
+    /// New queue holding at most `cap` items (floored at 1).
     pub fn new(cap: usize) -> RequestQueue<T> {
         RequestQueue {
             inner: Mutex::new(Inner { q: VecDeque::new(), closed: false }),
@@ -65,6 +88,34 @@ impl<T> RequestQueue<T> {
         let mut g = self.inner.lock().unwrap();
         if g.closed || g.q.len() >= self.cap {
             return Err(item);
+        }
+        g.q.push_back(item);
+        drop(g);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Non-blocking **admission-gated** push: `gate` runs under the
+    /// queue lock with the current queue depth and a mutable reference
+    /// to the item (so an admission controller can both decide and
+    /// attach degraded-fanout metadata in one step). The item is
+    /// enqueued only if the gate returns `true`; otherwise it comes
+    /// back as [`PushRejected::Denied`]. Closed/full checks happen
+    /// first, so a full queue never consults the gate.
+    pub fn push_gated(
+        &self,
+        mut item: T,
+        gate: impl FnOnce(usize, &mut T) -> bool,
+    ) -> Result<(), PushRejected<T>> {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            return Err(PushRejected::Closed(item));
+        }
+        if g.q.len() >= self.cap {
+            return Err(PushRejected::Full(item));
+        }
+        if !gate(g.q.len(), &mut item) {
+            return Err(PushRejected::Denied(item));
         }
         g.q.push_back(item);
         drop(g);
@@ -119,10 +170,12 @@ impl<T> RequestQueue<T> {
         self.not_full.notify_all();
     }
 
+    /// Current queue depth (a snapshot; racy by nature).
     pub fn len(&self) -> usize {
         self.inner.lock().unwrap().q.len()
     }
 
+    /// Whether the queue is currently empty (snapshot).
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -258,6 +311,50 @@ mod tests {
         let q = RequestQueue::new(4);
         q.close();
         assert_eq!(q.try_push(9u32).unwrap_err(), 9);
+    }
+
+    /// The gate observes the exact depth under the lock, can mutate the
+    /// item before it lands, and a `false` verdict hands it back.
+    #[test]
+    fn push_gated_sees_depth_and_can_mutate() {
+        let q = RequestQueue::new(4);
+        q.push(10u32).unwrap();
+        q.push(20).unwrap();
+        // gate admits and rewrites the item based on observed depth
+        q.push_gated(0u32, |len, item| {
+            assert_eq!(len, 2);
+            *item = 99;
+            true
+        })
+        .unwrap();
+        // gate declines: item comes back via Denied
+        match q.push_gated(7u32, |len, _| {
+            assert_eq!(len, 3);
+            false
+        }) {
+            Err(PushRejected::Denied(7)) => {}
+            _ => panic!("expected Denied(7)"),
+        }
+        assert_eq!(q.try_pop(), Some(10));
+        assert_eq!(q.try_pop(), Some(20));
+        assert_eq!(q.try_pop(), Some(99));
+        assert_eq!(q.try_pop(), None);
+    }
+
+    /// Full and closed queues reject *before* the gate runs.
+    #[test]
+    fn push_gated_full_and_closed_skip_the_gate() {
+        let q = RequestQueue::new(1);
+        q.push(1u32).unwrap();
+        match q.push_gated(2u32, |_, _| panic!("gate ran on a full queue")) {
+            Err(PushRejected::Full(2)) => {}
+            _ => panic!("expected Full(2)"),
+        }
+        q.close();
+        match q.push_gated(3u32, |_, _| panic!("gate ran on a closed queue")) {
+            Err(PushRejected::Closed(3)) => {}
+            _ => panic!("expected Closed(3)"),
+        }
     }
 
     /// A pop already blocked on an empty queue is woken by `close` and

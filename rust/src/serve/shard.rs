@@ -49,6 +49,7 @@ pub enum SpillPolicy {
 }
 
 impl SpillPolicy {
+    /// Parse a CLI knob value: `strict | steal | broadcast`.
     pub fn parse(s: &str) -> Result<SpillPolicy> {
         match s {
             "strict" => Ok(SpillPolicy::Strict),
@@ -60,6 +61,7 @@ impl SpillPolicy {
         }
     }
 
+    /// The knob spelling this policy parses from.
     pub fn name(&self) -> &'static str {
         match self {
             SpillPolicy::Strict => "strict",
@@ -77,6 +79,25 @@ impl SpillPolicy {
 /// ClusterGCN baseline — but keyed purely by the label array, so the
 /// same Louvain labels always yield the same plan on every run and
 /// every process.
+///
+/// ```
+/// use comm_rand::serve::ShardPlan;
+///
+/// // three communities with sizes 3, 2, 1 packed onto two shards
+/// let community = vec![0, 0, 0, 1, 1, 2];
+/// let plan = ShardPlan::build(&community, 3, 2);
+///
+/// // the largest community seeds one shard; greedy largest-first
+/// // packing then stacks the two smaller ones on the other, so the
+/// // node counts balance 3 / 3
+/// assert_eq!(plan.n_shards(), 2);
+/// assert_eq!(plan.shard_of_comm(1), plan.shard_of_comm(2));
+/// assert_ne!(plan.shard_of_comm(0), plan.shard_of_comm(1));
+/// assert_eq!(plan.owned_nodes(0) + plan.owned_nodes(1), 6);
+///
+/// // routing a request follows its node's community label
+/// assert_eq!(plan.shard_of_node(&community, 4), plan.shard_of_comm(1));
+/// ```
 pub struct ShardPlan {
     n_shards: usize,
     /// community id → owning shard.
@@ -88,6 +109,8 @@ pub struct ShardPlan {
 }
 
 impl ShardPlan {
+    /// Build the plan from per-node community labels (`community[v]`
+    /// in `0..num_comms`) for `n_shards` logical devices.
     pub fn build(community: &[u32], num_comms: usize, n_shards: usize) -> ShardPlan {
         let n_shards = n_shards.max(1);
         let mut size = vec![0usize; num_comms.max(1)];
@@ -112,22 +135,27 @@ impl ShardPlan {
         ShardPlan { n_shards, comm_shard, owned_comms, owned_nodes }
     }
 
+    /// Number of shards this plan partitions across.
     pub fn n_shards(&self) -> usize {
         self.n_shards
     }
 
+    /// Shard owning community `comm`.
     pub fn shard_of_comm(&self, comm: u32) -> usize {
         self.comm_shard[comm as usize] as usize
     }
 
+    /// Shard owning `node`, via its community label.
     pub fn shard_of_node(&self, community: &[u32], node: u32) -> usize {
         self.shard_of_comm(community[node as usize])
     }
 
+    /// Non-empty communities assigned to `shard`.
     pub fn owned_comms(&self, shard: usize) -> usize {
         self.owned_comms[shard]
     }
 
+    /// Nodes assigned to `shard` (through their communities).
     pub fn owned_nodes(&self, shard: usize) -> usize {
         self.owned_nodes[shard]
     }
@@ -203,7 +231,9 @@ fn least_loaded(depths: &[usize], start: usize) -> usize {
 /// Mutable per-shard accounting, written by that shard's workers.
 #[derive(Clone, Debug, Default)]
 pub struct ShardStatsCell {
+    /// Micro-batches processed.
     pub batches: usize,
+    /// Requests processed.
     pub requests: usize,
     /// Requests processed here whose community this shard does NOT
     /// own — always 0 under [`SpillPolicy::Strict`].
@@ -220,27 +250,52 @@ pub struct ShardStatsCell {
 /// Per-shard slice of the end-of-run report.
 #[derive(Clone, Debug)]
 pub struct ShardReport {
+    /// Shard id (`0..n_shards`).
     pub id: usize,
+    /// Non-empty communities this shard owns.
     pub owned_comms: usize,
+    /// Nodes this shard owns.
     pub owned_nodes: usize,
+    /// Requests processed on this shard.
     pub requests: usize,
+    /// Requests processed here whose community this shard does not own
+    /// (0 under strict spill).
     pub foreign_requests: usize,
+    /// Requests shed toward this shard (admission + open-loop
+    /// drop-tail).
+    pub shed: usize,
+    /// Requests admitted with degraded fanout toward this shard.
+    pub degraded: usize,
+    /// Micro-batches processed on this shard.
     pub batches: usize,
+    /// Max queued batches observed on this shard's channel.
     pub queue_depth_max: usize,
+    /// Final EWMA micro-batch service-time estimate, µs (0 before any
+    /// sample).
+    pub est_service_us: f64,
+    /// Median per-request latency, ms.
     pub lat_p50_ms: f64,
+    /// 95th-percentile per-request latency, ms.
     pub lat_p95_ms: f64,
+    /// 99th-percentile per-request latency, ms.
     pub lat_p99_ms: f64,
+    /// Feature-cache hits on this shard's cache.
     pub cache_hits: u64,
+    /// Feature-cache misses on this shard's cache.
     pub cache_misses: u64,
+    /// hits / (hits + misses), 0 when the cache was never touched.
     pub cache_hit_rate: f64,
 }
 
 impl ShardReport {
+    /// Roll one shard's stats cell, cache counters and admission
+    /// counters up into its report slice.
     pub fn from_cell(
         id: usize,
         plan: &ShardPlan,
         cell: &ShardStatsCell,
         cache: super::cache::CacheStats,
+        adm: &super::admission::AdmissionController,
     ) -> ShardReport {
         let lats_ms: Vec<f64> =
             cell.lat_us.iter().map(|&u| u as f64 / 1e3).collect();
@@ -253,8 +308,11 @@ impl ShardReport {
             owned_nodes: plan.owned_nodes(id),
             requests: cell.requests,
             foreign_requests: cell.foreign_requests,
+            shed: adm.shard_shed(id),
+            degraded: adm.shard_degraded(id),
             batches: cell.batches,
             queue_depth_max: cell.queue_depth_max,
+            est_service_us: adm.est_service_us(id).unwrap_or(0.0),
             lat_p50_ms: pct(50.0),
             lat_p95_ms: pct(95.0),
             lat_p99_ms: pct(99.0),
@@ -264,6 +322,7 @@ impl ShardReport {
         }
     }
 
+    /// Serialize this shard's slice of the `ServeReport` JSON.
     pub fn to_json(&self) -> Json {
         obj(vec![
             ("shard", num(self.id as f64)),
@@ -271,8 +330,11 @@ impl ShardReport {
             ("owned_nodes", num(self.owned_nodes as f64)),
             ("requests", num(self.requests as f64)),
             ("foreign_requests", num(self.foreign_requests as f64)),
+            ("shed", num(self.shed as f64)),
+            ("degraded", num(self.degraded as f64)),
             ("batches", num(self.batches as f64)),
             ("queue_depth_max", num(self.queue_depth_max as f64)),
+            ("est_service_us", num(self.est_service_us)),
             ("lat_p50_ms", num(self.lat_p50_ms)),
             ("lat_p95_ms", num(self.lat_p95_ms)),
             ("lat_p99_ms", num(self.lat_p99_ms)),
@@ -290,7 +352,14 @@ mod tests {
 
     fn req(id: u64, node: u32) -> Request {
         let (tx, _rx) = mpsc::channel();
-        Request { id, node, arrive_us: 0, deadline_us: 1_000_000, reply: tx }
+        Request {
+            id,
+            node,
+            arrive_us: 0,
+            deadline_us: 1_000_000,
+            fanout_cap: None,
+            reply: tx,
+        }
     }
 
     fn ids(batch: &[Request]) -> Vec<u64> {

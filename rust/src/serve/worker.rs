@@ -8,6 +8,13 @@
 //! when no AOT artifacts exist: [`NullExecutor`] skips the PJRT call
 //! and returns empty logits, [`PjrtExecutor`] wraps a compiled
 //! [`InferState`].
+//!
+//! Two admission-control hooks live here: the per-batch service time
+//! each worker measures feeds the [`AdmissionController`]'s per-shard
+//! EWMA, and a batch containing degraded requests
+//! (`Request::fanout_cap`) is sampled with the elementwise-minimum
+//! fanout — the padded artifact shape is unchanged, only the sampled
+//! neighbor count shrinks.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::Receiver;
@@ -22,14 +29,17 @@ use crate::runtime::InferState;
 use crate::sampler::{build_mfg, NeighborPolicy};
 use crate::util::rng::Rng;
 
+use super::admission::AdmissionController;
 use super::cache::ShardedFeatureCache;
 use super::shard::{ShardPlan, ShardStatsCell};
 use super::{Reply, Request, ServeClock};
 
 /// Inference backend driven by the worker pool.
 pub trait InferExecutor: Send + Sync {
+    /// Short name for reports (`pjrt` / `null`).
     fn name(&self) -> &str;
 
+    /// Logit columns per root row.
     fn num_classes(&self) -> usize;
 
     /// Returns logits `[batch_cap * num_classes]`, or an empty vector
@@ -40,6 +50,7 @@ pub trait InferExecutor: Send + Sync {
 /// No-op backend for artifact-less environments: exercises everything
 /// up to (and including) batch assembly, returns empty logits.
 pub struct NullExecutor {
+    /// Logit columns the (absent) model would produce.
     pub num_classes: usize,
 }
 
@@ -66,6 +77,7 @@ pub struct PjrtExecutor {
 }
 
 impl PjrtExecutor {
+    /// Wrap a compiled infer state producing `num_classes` logits.
     pub fn new(state: InferState, num_classes: usize) -> PjrtExecutor {
         PjrtExecutor { state: Mutex::new(state), num_classes }
     }
@@ -87,10 +99,15 @@ impl InferExecutor for PjrtExecutor {
 
 /// Shared read-only context one worker needs.
 pub struct WorkerCtx<'a> {
+    /// The dataset being served (graph + features + communities).
     pub ds: &'a Dataset,
+    /// Artifact spec the padded batches are assembled against.
     pub meta: &'a ArtifactMeta,
+    /// This shard's feature cache.
     pub cache: &'a ShardedFeatureCache,
+    /// Inference backend (PJRT or no-op).
     pub exec: &'a dyn InferExecutor,
+    /// The run's shared monotonic clock.
     pub clock: &'a ServeClock,
 }
 
@@ -99,6 +116,7 @@ pub struct WorkerCtx<'a> {
 /// executor failures travel per request via [`Reply::error`]).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct BatchOutcome {
+    /// Requests carried by the batch (before root dedup).
     pub requests: usize,
     /// Unique input-frontier nodes sampled for the batch.
     pub input_nodes: usize,
@@ -116,6 +134,8 @@ pub struct BatchOutcome {
 /// per-shard `queue_depth_max` stat. `foreign_requests` counts the
 /// requests whose community this shard does not own — the affinity
 /// violation metric that is zero by construction under strict spill.
+/// Each processed batch's wall service time is folded into `adm`'s
+/// per-shard EWMA — the estimate admission decisions run on.
 #[allow(clippy::too_many_arguments)]
 pub fn shard_worker_loop(
     ctx: &WorkerCtx<'_>,
@@ -124,6 +144,7 @@ pub fn shard_worker_loop(
     rx: &Mutex<Receiver<Vec<Request>>>,
     depth: &AtomicUsize,
     cell: &Mutex<ShardStatsCell>,
+    adm: &AdmissionController,
     rng: &mut Rng,
 ) {
     loop {
@@ -137,8 +158,10 @@ pub fn shard_worker_loop(
             .filter(|r| plan.shard_of_node(community, r.node) != shard_id)
             .count();
         let arrives: Vec<u64> = reqs.iter().map(|r| r.arrive_us).collect();
+        let t0 = ctx.clock.now_us();
         let out = process_batch(ctx, reqs, rng);
         let now = ctx.clock.now_us();
+        adm.record_service(shard_id, now.saturating_sub(t0) as f64);
         let mut g = cell.lock().unwrap();
         g.batches += 1;
         g.requests += out.requests;
@@ -157,6 +180,11 @@ pub fn shard_worker_loop(
 /// Process one coalesced micro-batch end to end. Every request is
 /// always replied to — executor failures produce `error` replies, so a
 /// closed-loop client can never hang on a lost request.
+///
+/// Degraded requests (`Request::fanout_cap`) cap the batch's sampling
+/// fanout at the elementwise minimum across members — one degraded
+/// rider shrinks the whole batch's MFG, which is the point: the batch
+/// must fit the tightest remaining deadline budget in it.
 pub fn process_batch(
     ctx: &WorkerCtx<'_>,
     reqs: Vec<Request>,
@@ -170,11 +198,21 @@ pub fn process_batch(
     roots.sort_unstable();
     roots.dedup();
 
+    // effective fanouts: the artifact's, capped by any degraded rider
+    let mut fanouts = spec.fanouts.clone();
+    for r in &reqs {
+        if let Some(cap) = &r.fanout_cap {
+            for (f, &c) in fanouts.iter_mut().zip(cap.iter()) {
+                *f = (*f).min(c.max(1));
+            }
+        }
+    }
+
     let mfg = build_mfg(
         &ds.csr,
         &ds.community,
         &roots,
-        &spec.fanouts,
+        &fanouts,
         NeighborPolicy::Uniform,
         rng,
     );
@@ -223,6 +261,7 @@ pub fn process_batch(
                     id: r.id,
                     node: r.node,
                     logits: row,
+                    arrive_us: r.arrive_us,
                     finish_us: now,
                     batch_size: bsz,
                     error: false,
@@ -236,6 +275,7 @@ pub fn process_batch(
                     id: r.id,
                     node: r.node,
                     logits: Vec::new(),
+                    arrive_us: r.arrive_us,
                     finish_us: now,
                     batch_size: bsz,
                     error: true,
@@ -281,6 +321,7 @@ mod tests {
                 node,
                 arrive_us: 0,
                 deadline_us: 1_000_000,
+                fanout_cap: None,
                 reply: tx.clone(),
             })
             .collect();
@@ -296,5 +337,61 @@ mod tests {
         ids.sort_unstable();
         assert_eq!(ids, vec![1, 2, 3]);
         assert!(replies.iter().all(|r| !r.error && r.batch_size == 3));
+    }
+
+    /// A degraded rider caps the whole batch's sampling fanout: the
+    /// input frontier shrinks versus the same batch at full fanout,
+    /// and every request is still answered without error.
+    #[test]
+    fn degraded_fanout_cap_shrinks_the_frontier() {
+        let ds = crate::train::dataset::build(&preset("tiny").unwrap(), true);
+        let meta = synthetic_infer_meta(&ds, 8, &[8, 8]);
+        let cache = ShardedFeatureCache::new(&FeatureCacheConfig::for_dataset(
+            ds.n(),
+            ds.feat_dim,
+        ));
+        let exec = NullExecutor { num_classes: ds.num_classes };
+        let clock = ServeClock::start();
+        let ctx = WorkerCtx {
+            ds: &ds,
+            meta: &meta,
+            cache: &cache,
+            exec: &exec,
+            clock: &clock,
+        };
+        let nodes: [u32; 4] = [11, 23, 42, 57];
+        let run = |caps: Option<Vec<usize>>| -> BatchOutcome {
+            let (tx, rx) = mpsc::channel();
+            let reqs: Vec<Request> = nodes
+                .iter()
+                .enumerate()
+                .map(|(i, &node)| Request {
+                    id: i as u64,
+                    node,
+                    arrive_us: 0,
+                    deadline_us: 1_000_000,
+                    // one degraded rider is enough to cap the batch
+                    fanout_cap: if i == 0 { caps.clone() } else { None },
+                    reply: tx.clone(),
+                })
+                .collect();
+            let mut rng = Rng::new(9);
+            let out = process_batch(&ctx, reqs, &mut rng);
+            drop(tx);
+            let replies: Vec<Reply> = rx.iter().collect();
+            assert_eq!(replies.len(), 4);
+            assert!(replies.iter().all(|r| !r.error));
+            out
+        };
+        let full = run(None);
+        let degraded = run(Some(vec![1, 1]));
+        assert_eq!(full.requests, 4);
+        assert_eq!(degraded.requests, 4);
+        assert!(
+            degraded.input_nodes < full.input_nodes,
+            "fanout cap [1,1] must shrink the frontier: {} !< {}",
+            degraded.input_nodes,
+            full.input_nodes
+        );
     }
 }

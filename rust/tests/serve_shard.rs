@@ -9,7 +9,7 @@
 use comm_rand::config::preset;
 use comm_rand::serve::engine::{self, synthetic_infer_meta};
 use comm_rand::serve::{
-    LoadConfig, NullExecutor, ServeConfig, ShardPlan, SpillPolicy,
+    Arrival, LoadConfig, NullExecutor, ServeConfig, ShardPlan, SpillPolicy,
 };
 
 fn tiny_dataset() -> comm_rand::graph::Dataset {
@@ -44,6 +44,7 @@ fn strict_spill_places_every_request_on_its_owning_shard() {
             clients: 4,
             requests_per_client: 40,
             zipf_s: 1.1,
+            arrival: Arrival::Closed,
             seed: 5,
         };
         let rep = engine::run(&ds, &meta, &exec, &scfg, &lcfg).unwrap();
@@ -111,8 +112,13 @@ fn shard_plan_is_consistent_with_reported_ownership() {
     scfg.spill = SpillPolicy::Strict;
     let meta = synthetic_infer_meta(&ds, scfg.batch_size, &scfg.fanouts);
     let exec = NullExecutor { num_classes: ds.num_classes };
-    let lcfg =
-        LoadConfig { clients: 2, requests_per_client: 25, zipf_s: 1.1, seed: 9 };
+    let lcfg = LoadConfig {
+        clients: 2,
+        requests_per_client: 25,
+        zipf_s: 1.1,
+        arrival: Arrival::Closed,
+        seed: 9,
+    };
     let rep = engine::run(&ds, &meta, &exec, &scfg, &lcfg).unwrap();
     for sh in &rep.shards {
         assert_eq!(sh.owned_nodes, plan.owned_nodes(sh.id));
