@@ -16,13 +16,22 @@
 //! `admission=reject` (or `degrade`) to see the deadline-aware gate
 //! shed (or fanout-degrade) the unmeetable requests instead.
 //!
+//! With `ckpt=PATH` (a checkpoint file, or a directory whose newest
+//! checkpoint wins) the engine installs trained parameters before the
+//! first request, so the printed reports carry real top-1 accuracy;
+//! add `cache_warm=1` to pre-stage the checkpoint's hot feature rows.
+//! Train one first with
+//! `comm-rand train tiny backend=host ckpt_dir=ckpts`.
+//!
 //! Runs with or without AOT artifacts (`make artifacts`): without them
-//! a no-op executor still exercises queue → admit → coalesce → route →
-//! cache → assemble.
+//! the pure-rust host executor still produces real logits, so the
+//! whole queue → admit → coalesce → route → cache → assemble → infer
+//! path is exercised.
 //!
 //!     cargo run --release --example serve_demo [preset] [requests=N] \
 //!         [shards=N] [spill=strict|steal|broadcast] \
-//!         [arrival=closed|poisson:RATE] [admission=none|reject|degrade]
+//!         [arrival=closed|poisson:RATE] [admission=none|reject|degrade] \
+//!         [ckpt=PATH] [cache_warm=1]
 
 use comm_rand::config::preset;
 use comm_rand::serve::{
@@ -62,6 +71,13 @@ fn main() -> anyhow::Result<()> {
         .map(AdmissionPolicy::parse)
         .transpose()?
         .unwrap_or(AdmissionPolicy::None);
+    let ckpt = args
+        .iter()
+        .find_map(|a| a.strip_prefix("ckpt="))
+        .map(std::path::PathBuf::from);
+    let cache_warm = args
+        .iter()
+        .any(|a| a == "cache_warm=1");
 
     let p = preset(&name).expect("unknown preset");
     let ds = comm_rand::train::dataset::load_or_build(&p, true)?;
@@ -82,6 +98,8 @@ fn main() -> anyhow::Result<()> {
     scfg.shards = shards.max(1);
     scfg.spill = spill;
     scfg.admission = admission;
+    scfg.ckpt = ckpt;
+    scfg.cache_warm = cache_warm;
     let lcfg = LoadConfig {
         clients: 8,
         requests_per_client: (requests / 8).max(1),
@@ -126,6 +144,14 @@ fn main() -> anyhow::Result<()> {
         fifo.lat_p99_ms,
         comm.lat_p99_ms,
     );
+    if comm.evaluated > 0 {
+        println!(
+            "top-1 accuracy (param version {}): {:.1}% over {} replies",
+            comm.param_version,
+            comm.accuracy * 100.0,
+            comm.evaluated,
+        );
+    }
     if fifo.shed + comm.shed > 0 {
         println!(
             "shed (admission {} / drop-tail): {:.1}% at p=0, {:.1}% at p=1",

@@ -39,6 +39,9 @@ pub struct BatchStats {
 /// A fully padded batch, ready for upload.
 pub struct PaddedBatch {
     pub layers: Vec<PaddedLayer>,
+    /// Global node ids of the (unpadded) roots, in root-row order —
+    /// logits row `i` of an infer executable answers `roots[i]`.
+    pub roots: Vec<u32>,
     /// `[batch_cap]`
     pub labels: Vec<i32>,
     pub lmask: Vec<f32>,
@@ -198,6 +201,7 @@ pub fn assemble(
 
     Ok(PaddedBatch {
         layers: out_layers,
+        roots: roots.to_vec(),
         labels,
         lmask,
         x0,

@@ -1,0 +1,529 @@
+//! On-disk checkpoint format: a versioned, CRC-checked binary record
+//! of trained parameters plus the metadata needed to decide whether a
+//! checkpoint may be served at all.
+//!
+//! Layout (all integers little-endian):
+//!
+//! ```text
+//! offset  size        contents
+//! 0       4           magic  b"CRCK"
+//! 4       4           format version (u32, currently 1)
+//! 8       4           header length H (u32, bytes)
+//! 12      H           JSON header (dataset, model, epoch, val metrics,
+//!                     seed, policy label, community fingerprint,
+//!                     parameter shapes, hot-node list)
+//! 12+H    sum(shape)  parameter payload, f32 LE, tensors concatenated
+//!                     in shape order
+//! end-4   4           CRC-32 (IEEE) over every preceding byte
+//! ```
+//!
+//! Two validation layers protect the serving side:
+//!
+//! * **Integrity** — [`Checkpoint::decode`] refuses truncated files,
+//!   bad magic, unknown format versions, CRC mismatches and payloads
+//!   whose length disagrees with the declared shapes.
+//! * **Version fencing** — the header records a fingerprint of the
+//!   Louvain labeling the parameters were trained against
+//!   ([`community_fingerprint`]). [`Checkpoint::validate_against`]
+//!   rejects a checkpoint whose fingerprint does not match the serving
+//!   dataset: after a re-detection or re-reorder, node ids mean
+//!   different things and silently serving the old parameters would be
+//!   wrong in a way no shape check can catch.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::graph::Dataset;
+use crate::util::json::{arr, arr_f64, num, obj, s, Json};
+
+/// File magic: "CRCK" (Comm-Rand ChecKpoint).
+pub const MAGIC: [u8; 4] = *b"CRCK";
+
+/// Current format version; bumped on any layout change.
+pub const FORMAT_VERSION: u32 = 1;
+
+/// CRC-32 (IEEE 802.3, reflected, poly 0xEDB88320) — the same
+/// polynomial zlib/gzip use, computed bitwise (the payloads are small
+/// enough that a lookup table buys nothing).
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut crc = 0xFFFF_FFFFu32;
+    for &b in data {
+        crc ^= b as u32;
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
+        }
+    }
+    !crc
+}
+
+/// FNV-1a (64-bit) over the community labeling: `num_comms`, the label
+/// count, then every per-node label in node order. Any change to the
+/// detection output or the node permutation changes the fingerprint,
+/// which is exactly the property the checkpoint fence needs.
+pub fn community_fingerprint(community: &[u32], num_comms: usize) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    let mut mix = |x: u64| {
+        for byte in x.to_le_bytes() {
+            h ^= byte as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01B3);
+        }
+    };
+    mix(num_comms as u64);
+    mix(community.len() as u64);
+    for &c in community {
+        mix(c as u64);
+    }
+    h
+}
+
+/// Structural hot-node proxy stored in checkpoint metadata: the `k`
+/// highest-degree nodes (ties broken by lower id). High-degree nodes
+/// appear in many sampled frontiers regardless of the request mix, so
+/// they are the rows a cold serving cache benefits most from holding
+/// before the first request lands (`serve bench cache_warm=1`).
+pub fn degree_hot_nodes(ds: &Dataset, k: usize) -> Vec<u32> {
+    let n = ds.n();
+    let mut order: Vec<u32> = (0..n as u32).collect();
+    order.sort_by_key(|&v| (std::cmp::Reverse(ds.csr.degree(v)), v));
+    order.truncate(k.min(n));
+    order
+}
+
+/// Everything the header records about a checkpoint besides the raw
+/// parameter payload.
+#[derive(Clone, Debug)]
+pub struct CkptMeta {
+    /// Dataset the parameters were trained on (preset name).
+    pub dataset: String,
+    /// Model family the parameter layout belongs to (`sage` / `gcn` /
+    /// `gat` for PJRT artifacts, `host-sgc` for the host reference
+    /// model).
+    pub model: String,
+    /// Label of the batching policy the run used.
+    pub policy: String,
+    /// Training epoch this checkpoint was taken at (0-based).
+    pub epoch: usize,
+    /// Validation accuracy at `epoch` (retention keeps the best).
+    pub val_acc: f64,
+    /// Validation loss at `epoch`.
+    pub val_loss: f64,
+    /// Training seed, for provenance.
+    pub seed: u64,
+    /// [`community_fingerprint`] of the Louvain labeling the run
+    /// trained against.
+    pub comm_fp: u64,
+    /// `num_comms` of that labeling (redundant with the fingerprint,
+    /// kept for readable error messages).
+    pub num_comms: usize,
+    /// Shape of every parameter tensor, in payload order.
+    pub shapes: Vec<Vec<usize>>,
+    /// Hot-node list for serving cache warmup (may be empty).
+    pub hot_nodes: Vec<u32>,
+}
+
+impl CkptMeta {
+    /// Total f32 elements across all parameter tensors.
+    pub fn num_elements(&self) -> usize {
+        self.shapes.iter().map(|sh| sh.iter().product::<usize>()).sum()
+    }
+
+    /// Run-level template for a training run on `ds`: fingerprint and
+    /// hot-node list filled in, per-epoch fields (`epoch`, `val_acc`,
+    /// `val_loss`) zeroed for the caller to stamp at each write.
+    pub fn for_run(
+        ds: &Dataset,
+        model: &str,
+        policy: &str,
+        seed: u64,
+        shapes: Vec<Vec<usize>>,
+    ) -> CkptMeta {
+        CkptMeta {
+            dataset: ds.name.clone(),
+            model: model.to_string(),
+            policy: policy.to_string(),
+            epoch: 0,
+            val_acc: 0.0,
+            val_loss: 0.0,
+            seed,
+            comm_fp: community_fingerprint(&ds.community, ds.num_comms),
+            num_comms: ds.num_comms,
+            shapes,
+            hot_nodes: degree_hot_nodes(ds, 1024),
+        }
+    }
+}
+
+/// One decoded checkpoint: metadata + parameter tensors.
+#[derive(Clone, Debug)]
+pub struct Checkpoint {
+    /// Header metadata.
+    pub meta: CkptMeta,
+    /// Parameter tensors, flattened row-major, in `meta.shapes` order.
+    pub params: Vec<Vec<f32>>,
+}
+
+impl Checkpoint {
+    /// Build a checkpoint, deriving `shapes` from `params` shapes given
+    /// explicitly (they cannot be recovered from flat vectors).
+    pub fn new(meta: CkptMeta, params: Vec<Vec<f32>>) -> Result<Checkpoint> {
+        if meta.shapes.len() != params.len() {
+            bail!(
+                "checkpoint meta declares {} tensors, got {}",
+                meta.shapes.len(),
+                params.len()
+            );
+        }
+        for (i, (sh, p)) in meta.shapes.iter().zip(&params).enumerate() {
+            let want: usize = sh.iter().product();
+            if want != p.len() {
+                bail!(
+                    "checkpoint tensor {i} has {} elements, shape {sh:?} \
+                     wants {want}",
+                    p.len()
+                );
+            }
+        }
+        Ok(Checkpoint { meta, params })
+    }
+
+    fn header_json(&self) -> Json {
+        let m = &self.meta;
+        obj(vec![
+            ("dataset", s(&m.dataset)),
+            ("model", s(&m.model)),
+            ("policy", s(&m.policy)),
+            ("epoch", num(m.epoch as f64)),
+            ("val_acc", num(m.val_acc)),
+            ("val_loss", num(m.val_loss)),
+            // u64 values (seed, fingerprint) are stored as hex strings:
+            // JSON numbers are f64 and would silently round above 2^53
+            ("seed", s(&format!("{:016x}", m.seed))),
+            ("comm_fp", s(&format!("{:016x}", m.comm_fp))),
+            ("num_comms", num(m.num_comms as f64)),
+            (
+                "shapes",
+                arr(m
+                    .shapes
+                    .iter()
+                    .map(|sh| {
+                        arr_f64(&sh.iter().map(|&d| d as f64).collect::<Vec<_>>())
+                    })
+                    .collect()),
+            ),
+            (
+                "hot_nodes",
+                arr_f64(&m.hot_nodes.iter().map(|&v| v as f64).collect::<Vec<_>>()),
+            ),
+        ])
+    }
+
+    /// Serialize to the on-disk byte layout (see module docs).
+    pub fn encode(&self) -> Vec<u8> {
+        let header = self.header_json().to_string_pretty();
+        let payload_len: usize = self.params.iter().map(|p| p.len() * 4).sum();
+        let mut out =
+            Vec::with_capacity(16 + header.len() + payload_len);
+        out.extend_from_slice(&MAGIC);
+        out.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
+        out.extend_from_slice(&(header.len() as u32).to_le_bytes());
+        out.extend_from_slice(header.as_bytes());
+        for p in &self.params {
+            for &x in p {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        let crc = crc32(&out);
+        out.extend_from_slice(&crc.to_le_bytes());
+        out
+    }
+
+    /// Parse and fully validate the byte layout (magic, version, CRC,
+    /// header, payload size).
+    pub fn decode(bytes: &[u8]) -> Result<Checkpoint> {
+        if bytes.len() < 16 {
+            bail!("truncated checkpoint: {} bytes", bytes.len());
+        }
+        if bytes[0..4] != MAGIC {
+            bail!("not a checkpoint file (bad magic)");
+        }
+        let ver = u32::from_le_bytes(bytes[4..8].try_into().unwrap());
+        if ver != FORMAT_VERSION {
+            bail!(
+                "unsupported checkpoint format version {ver} \
+                 (this build reads {FORMAT_VERSION})"
+            );
+        }
+        let body = &bytes[..bytes.len() - 4];
+        let stored =
+            u32::from_le_bytes(bytes[bytes.len() - 4..].try_into().unwrap());
+        let computed = crc32(body);
+        if stored != computed {
+            bail!(
+                "checkpoint CRC mismatch: stored {stored:08x}, computed \
+                 {computed:08x} (corrupt or truncated file)"
+            );
+        }
+        let hlen =
+            u32::from_le_bytes(bytes[8..12].try_into().unwrap()) as usize;
+        if 12 + hlen > body.len() {
+            bail!("truncated checkpoint: header overruns file");
+        }
+        let header_str = std::str::from_utf8(&body[12..12 + hlen])
+            .context("checkpoint header is not UTF-8")?;
+        let h = Json::parse(header_str).context("checkpoint header JSON")?;
+
+        let hex_u64 = |key: &str| -> Result<u64> {
+            let v = h.get(key)?.as_str()?;
+            u64::from_str_radix(v, 16)
+                .with_context(|| format!("bad hex field {key}={v:?}"))
+        };
+        let shapes: Vec<Vec<usize>> = h
+            .get("shapes")?
+            .as_arr()?
+            .iter()
+            .map(|sh| {
+                sh.as_arr()?.iter().map(|d| d.as_usize()).collect::<Result<_>>()
+            })
+            .collect::<Result<_>>()?;
+        let hot_nodes: Vec<u32> = h
+            .get("hot_nodes")?
+            .as_arr()?
+            .iter()
+            .map(|v| Ok(v.as_usize()? as u32))
+            .collect::<Result<_>>()?;
+        let meta = CkptMeta {
+            dataset: h.get("dataset")?.as_str()?.to_string(),
+            model: h.get("model")?.as_str()?.to_string(),
+            policy: h.get("policy")?.as_str()?.to_string(),
+            epoch: h.get("epoch")?.as_usize()?,
+            val_acc: h.get("val_acc")?.as_f64()?,
+            val_loss: h.get("val_loss")?.as_f64()?,
+            seed: hex_u64("seed")?,
+            comm_fp: hex_u64("comm_fp")?,
+            num_comms: h.get("num_comms")?.as_usize()?,
+            shapes,
+            hot_nodes,
+        };
+
+        let payload = &body[12 + hlen..];
+        let want = meta.num_elements() * 4;
+        if payload.len() != want {
+            bail!(
+                "checkpoint payload is {} bytes, shapes declare {want} \
+                 (truncated or shape-corrupt file)",
+                payload.len()
+            );
+        }
+        let mut params = Vec::with_capacity(meta.shapes.len());
+        let mut off = 0usize;
+        for sh in &meta.shapes {
+            let n: usize = sh.iter().product();
+            let mut t = Vec::with_capacity(n);
+            for _ in 0..n {
+                t.push(f32::from_le_bytes(
+                    payload[off..off + 4].try_into().unwrap(),
+                ));
+                off += 4;
+            }
+            params.push(t);
+        }
+        Ok(Checkpoint { meta, params })
+    }
+
+    /// Load and validate a checkpoint file.
+    pub fn load(path: &Path) -> Result<Checkpoint> {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading checkpoint {}", path.display()))?;
+        Checkpoint::decode(&bytes)
+            .with_context(|| format!("decoding checkpoint {}", path.display()))
+    }
+
+    /// Write atomically: serialize to a sibling temp file, then rename
+    /// over `path`. Readers (the reload watcher, a concurrent `serve
+    /// bench`) never observe a half-written checkpoint — they either
+    /// see the old file or the complete new one.
+    pub fn write_atomic(&self, path: &Path) -> Result<()> {
+        let bytes = self.encode();
+        let mut tmp = path.as_os_str().to_owned();
+        tmp.push(format!(".tmp{}", std::process::id()));
+        let tmp = std::path::PathBuf::from(tmp);
+        std::fs::write(&tmp, &bytes)
+            .with_context(|| format!("writing {}", tmp.display()))?;
+        std::fs::rename(&tmp, path).with_context(|| {
+            format!("renaming {} -> {}", tmp.display(), path.display())
+        })
+    }
+
+    /// Version fence: refuse to pair this checkpoint with a dataset
+    /// whose community labeling differs from the one it was trained
+    /// against (node ids would no longer mean the same thing).
+    pub fn validate_against(
+        &self,
+        community: &[u32],
+        num_comms: usize,
+    ) -> Result<()> {
+        let fp = community_fingerprint(community, num_comms);
+        if fp != self.meta.comm_fp {
+            bail!(
+                "checkpoint community fingerprint {:016x} (dataset {:?}, \
+                 {} comms) does not match the serving dataset's {fp:016x} \
+                 ({num_comms} comms): the Louvain labeling/reorder \
+                 changed since training; retrain or regenerate the data",
+                self.meta.comm_fp,
+                self.meta.dataset,
+                self.meta.num_comms,
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_meta() -> CkptMeta {
+        CkptMeta {
+            dataset: "tiny".into(),
+            model: "host-sgc".into(),
+            policy: "host".into(),
+            epoch: 3,
+            val_acc: 0.75,
+            val_loss: 0.9,
+            seed: 0xDEAD_BEEF_0123_4567,
+            comm_fp: 0xABCD_EF00_1122_3344,
+            num_comms: 12,
+            shapes: vec![vec![4, 3], vec![3]],
+            hot_nodes: vec![5, 1, 9],
+        }
+    }
+
+    fn sample_ckpt() -> Checkpoint {
+        let params = vec![
+            (0..12).map(|i| i as f32 * 0.25 - 1.0).collect(),
+            vec![0.5, -0.5, 3.25],
+        ];
+        Checkpoint::new(sample_meta(), params).unwrap()
+    }
+
+    #[test]
+    fn crc32_matches_known_vectors() {
+        // standard test vector for CRC-32/IEEE
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn roundtrip_is_bitwise_exact() {
+        let ck = sample_ckpt();
+        let bytes = ck.encode();
+        let back = Checkpoint::decode(&bytes).unwrap();
+        assert_eq!(back.meta.dataset, "tiny");
+        assert_eq!(back.meta.epoch, 3);
+        assert_eq!(back.meta.seed, 0xDEAD_BEEF_0123_4567);
+        assert_eq!(back.meta.comm_fp, 0xABCD_EF00_1122_3344);
+        assert_eq!(back.meta.shapes, ck.meta.shapes);
+        assert_eq!(back.meta.hot_nodes, vec![5, 1, 9]);
+        assert_eq!(back.params.len(), ck.params.len());
+        for (a, b) in ck.params.iter().zip(&back.params) {
+            let ab: Vec<u32> = a.iter().map(|x| x.to_bits()).collect();
+            let bb: Vec<u32> = b.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(ab, bb, "payload must round-trip bit-for-bit");
+        }
+        // re-encoding the decoded checkpoint reproduces the same bytes
+        assert_eq!(back.encode(), bytes);
+    }
+
+    #[test]
+    fn truncated_files_are_rejected() {
+        let bytes = sample_ckpt().encode();
+        for cut in [0, 3, 8, 15, bytes.len() / 2, bytes.len() - 1] {
+            assert!(
+                Checkpoint::decode(&bytes[..cut]).is_err(),
+                "decode accepted a file truncated to {cut} bytes"
+            );
+        }
+    }
+
+    #[test]
+    fn corrupt_crc_is_rejected() {
+        let mut bytes = sample_ckpt().encode();
+        // flip one payload byte: CRC catches it
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x40;
+        let err = Checkpoint::decode(&bytes).unwrap_err();
+        assert!(format!("{err:#}").contains("CRC"), "{err:#}");
+        // flip it back, corrupt the stored CRC itself
+        bytes[mid] ^= 0x40;
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0x01;
+        assert!(Checkpoint::decode(&bytes).is_err());
+    }
+
+    #[test]
+    fn bad_magic_and_version_are_rejected() {
+        let mut bytes = sample_ckpt().encode();
+        bytes[0] = b'X';
+        assert!(Checkpoint::decode(&bytes).is_err());
+        // fix magic, bump version (and re-CRC so only the version is bad)
+        let ck = sample_ckpt();
+        let mut raw = ck.encode();
+        raw[4] = 99;
+        let body_len = raw.len() - 4;
+        let crc = crc32(&raw[..body_len]).to_le_bytes();
+        raw[body_len..].copy_from_slice(&crc);
+        let err = Checkpoint::decode(&raw).unwrap_err();
+        assert!(format!("{err:#}").contains("version"), "{err:#}");
+    }
+
+    #[test]
+    fn fingerprint_mismatch_is_rejected() {
+        let community = vec![0u32, 0, 1, 1, 2];
+        let fp = community_fingerprint(&community, 3);
+        let mut meta = sample_meta();
+        meta.comm_fp = fp;
+        let ck = Checkpoint::new(meta, vec![vec![0.0; 12], vec![0.0; 3]])
+            .unwrap();
+        ck.validate_against(&community, 3).unwrap();
+        // different labeling → fence trips
+        let other = vec![0u32, 1, 0, 1, 2];
+        let err = ck.validate_against(&other, 3).unwrap_err();
+        assert!(format!("{err:#}").contains("fingerprint"), "{err:#}");
+        // different num_comms → fence trips too
+        assert!(ck.validate_against(&community, 4).is_err());
+    }
+
+    #[test]
+    fn fingerprint_is_order_sensitive() {
+        let a = community_fingerprint(&[0, 1, 2], 3);
+        let b = community_fingerprint(&[2, 1, 0], 3);
+        assert_ne!(a, b);
+        assert_eq!(a, community_fingerprint(&[0, 1, 2], 3));
+    }
+
+    #[test]
+    fn shape_payload_mismatch_is_rejected_at_build() {
+        let meta = sample_meta();
+        assert!(Checkpoint::new(meta.clone(), vec![vec![0.0; 5]]).is_err());
+        assert!(Checkpoint::new(
+            meta,
+            vec![vec![0.0; 11], vec![0.0; 3]]
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn atomic_write_then_load() {
+        let dir = std::env::temp_dir().join("comm_rand_ckpt_fmt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("rt.bin");
+        let ck = sample_ckpt();
+        ck.write_atomic(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.meta.epoch, ck.meta.epoch);
+        assert_eq!(back.params, ck.params);
+        std::fs::remove_file(&path).ok();
+    }
+}

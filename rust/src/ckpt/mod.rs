@@ -1,0 +1,35 @@
+//! Checkpoint & parameter-store subsystem: versioned training
+//! checkpoints with zero-downtime hot swap into the serving engine.
+//!
+//! Three pieces bridge the train → serve gap:
+//!
+//! * [`format`] — the on-disk record: a CRC-checked, versioned binary
+//!   layout carrying parameters, layer shapes, training metadata and a
+//!   fingerprint of the community labeling the run trained against
+//!   ([`format::community_fingerprint`]), so a checkpoint is only
+//!   loadable against the matching Louvain labeling/reorder.
+//! * [`store`] — [`CheckpointWriter`] hooks the training loop
+//!   (`ckpt_dir=` / `ckpt_every=`, atomic rename, retention keeping
+//!   best-by-val-acc + latest) and [`ParamStore`] serves immutable
+//!   `Arc<ParamVersion>` snapshots to the serving side.
+//! * [`watch`] — the reload watcher the engine runs during a serving
+//!   run: poll the checkpoint directory, validate + stage new
+//!   versions, and hand them to the executor, which swaps them in
+//!   between micro-batches (per-shard `param_version` / `swaps`
+//!   counters in the `ServeReport` make the swap observable).
+//!
+//! The lifecycle diagram and failure-mode walk-through live in
+//! `docs/ARCHITECTURE.md` ("Checkpoint lifecycle & hot-swap").
+
+pub mod format;
+pub mod store;
+pub mod watch;
+
+pub use format::{
+    community_fingerprint, degree_hot_nodes, Checkpoint, CkptMeta,
+};
+pub use store::{
+    resolve_checkpoint, CheckpointWriter, ParamStore, ParamVersion,
+    Retention, WrittenCkpt,
+};
+pub use watch::{watch_loop, DirWatcher};

@@ -1,0 +1,371 @@
+//! Parameter store (serving side) and checkpoint writer (training
+//! side).
+//!
+//! * [`ParamStore`] holds the currently-published parameter set as an
+//!   `Arc<ParamVersion>` snapshot. Publishing assigns a monotonically
+//!   increasing version number; readers clone the `Arc` and keep
+//!   working on their snapshot while a newer version lands — the
+//!   zero-downtime half of hot swapping.
+//! * [`CheckpointWriter`] is the training-loop hook: write a
+//!   checkpoint every `every` epochs (atomic rename via
+//!   [`Checkpoint::write_atomic`]) and prune according to the
+//!   [`Retention`] policy — by default keeping the best-by-val-acc
+//!   checkpoint plus the latest one.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Context, Result};
+
+use super::format::{Checkpoint, CkptMeta};
+
+/// One published, immutable parameter snapshot.
+#[derive(Clone, Debug)]
+pub struct ParamVersion {
+    /// Store-assigned version, monotonically increasing from 1.
+    pub version: u64,
+    /// Parameter tensors (flattened, in `meta.shapes` order).
+    pub params: Vec<Vec<f32>>,
+    /// The checkpoint metadata this version was published from.
+    pub meta: CkptMeta,
+    /// File the version was loaded from (for logs/reports).
+    pub source: PathBuf,
+}
+
+/// Versioned holder of the current parameter snapshot (see module
+/// docs). Cheap to read: `current()` is one mutex-guarded `Arc` clone.
+#[derive(Debug, Default)]
+pub struct ParamStore {
+    cur: Mutex<Option<Arc<ParamVersion>>>,
+    published: AtomicU64,
+}
+
+impl ParamStore {
+    /// Empty store: no version published yet (`version()` is 0).
+    pub fn new() -> ParamStore {
+        ParamStore::default()
+    }
+
+    /// Publish a checkpoint as the next parameter version and return
+    /// the snapshot.
+    pub fn publish(&self, ck: Checkpoint, source: PathBuf) -> Arc<ParamVersion> {
+        let version = self.published.fetch_add(1, Ordering::SeqCst) + 1;
+        let v = Arc::new(ParamVersion {
+            version,
+            params: ck.params,
+            meta: ck.meta,
+            source,
+        });
+        *self.cur.lock().unwrap() = Some(v.clone());
+        v
+    }
+
+    /// Latest published snapshot, if any.
+    pub fn current(&self) -> Option<Arc<ParamVersion>> {
+        self.cur.lock().unwrap().clone()
+    }
+
+    /// Version of the latest snapshot (0 when nothing is published).
+    pub fn version(&self) -> u64 {
+        self.current().map(|v| v.version).unwrap_or(0)
+    }
+}
+
+/// What [`CheckpointWriter`] keeps on disk after each write.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Retention {
+    /// Keep the checkpoint with the best validation accuracy plus the
+    /// most recent one (they may be the same file). The default.
+    BestAndLatest,
+    /// Never delete (epoch sweeps, tests).
+    All,
+}
+
+/// One checkpoint the writer has on disk.
+#[derive(Clone, Debug)]
+pub struct WrittenCkpt {
+    /// File path (inside the writer's directory).
+    pub path: PathBuf,
+    /// Training epoch of the checkpoint.
+    pub epoch: usize,
+    /// Validation accuracy recorded in its header.
+    pub val_acc: f64,
+}
+
+/// Training-loop checkpoint sink: cadence, atomic writes, retention.
+pub struct CheckpointWriter {
+    dir: PathBuf,
+    every: usize,
+    retention: Retention,
+    entries: Vec<WrittenCkpt>,
+}
+
+impl CheckpointWriter {
+    /// Create the directory (if needed) and a writer that fires every
+    /// `every` epochs (floored at 1).
+    pub fn new(
+        dir: impl Into<PathBuf>,
+        every: usize,
+        retention: Retention,
+    ) -> Result<CheckpointWriter> {
+        let dir = dir.into();
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("creating ckpt dir {}", dir.display()))?;
+        Ok(CheckpointWriter {
+            dir,
+            every: every.max(1),
+            entries: Vec::new(),
+            retention,
+        })
+    }
+
+    /// The directory checkpoints land in.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Whether the cadence fires at `epoch` (0-based): epochs
+    /// `every-1, 2*every-1, ...`, i.e. "every N epochs" counting from
+    /// the first.
+    pub fn cadence_hit(&self, epoch: usize) -> bool {
+        (epoch + 1) % self.every == 0
+    }
+
+    /// Write `ck` if the cadence fires at its epoch; returns the path
+    /// written, if any.
+    pub fn maybe_write(&mut self, ck: &Checkpoint) -> Result<Option<PathBuf>> {
+        if !self.cadence_hit(ck.meta.epoch) {
+            return Ok(None);
+        }
+        self.write(ck).map(Some)
+    }
+
+    /// Unconditionally write `ck` (atomic rename) and apply retention.
+    pub fn write(&mut self, ck: &Checkpoint) -> Result<PathBuf> {
+        let path = self.dir.join(format!("ckpt-e{:05}.bin", ck.meta.epoch));
+        ck.write_atomic(&path)?;
+        // re-writing the same epoch replaces its entry
+        self.entries.retain(|e| e.path != path);
+        self.entries.push(WrittenCkpt {
+            path: path.clone(),
+            epoch: ck.meta.epoch,
+            val_acc: ck.meta.val_acc,
+        });
+        self.prune();
+        Ok(path)
+    }
+
+    /// Retention pass: under [`Retention::BestAndLatest`], delete every
+    /// file except the best-val-acc checkpoint (ties → later epoch) and
+    /// the latest-epoch one.
+    fn prune(&mut self) {
+        if self.retention == Retention::All || self.entries.len() <= 1 {
+            return;
+        }
+        let best = self
+            .entries
+            .iter()
+            .max_by(|a, b| {
+                a.val_acc
+                    .partial_cmp(&b.val_acc)
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(a.epoch.cmp(&b.epoch))
+            })
+            .map(|e| e.path.clone());
+        let latest = self
+            .entries
+            .iter()
+            .max_by_key(|e| e.epoch)
+            .map(|e| e.path.clone());
+        self.entries.retain(|e| {
+            let keep = Some(&e.path) == best.as_ref()
+                || Some(&e.path) == latest.as_ref();
+            if !keep {
+                std::fs::remove_file(&e.path).ok();
+            }
+            keep
+        });
+    }
+
+    /// Checkpoints currently on disk (post-retention).
+    pub fn entries(&self) -> &[WrittenCkpt] {
+        &self.entries
+    }
+
+    /// The on-disk checkpoint with the best validation accuracy.
+    pub fn best(&self) -> Option<&WrittenCkpt> {
+        self.entries.iter().max_by(|a, b| {
+            a.val_acc
+                .partial_cmp(&b.val_acc)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.epoch.cmp(&b.epoch))
+        })
+    }
+
+    /// The on-disk checkpoint from the latest epoch.
+    pub fn latest(&self) -> Option<&WrittenCkpt> {
+        self.entries.iter().max_by_key(|e| e.epoch)
+    }
+}
+
+/// Resolve a `ckpt=` argument and load it in one pass: a file path is
+/// loaded as-is; a directory is scanned for `*.bin` checkpoints and
+/// the one with the highest epoch wins (what a deployment means by
+/// "serve the newest checkpoint in this directory"). Returning the
+/// decoded [`Checkpoint`] alongside the path saves the caller a
+/// second full read + CRC pass over the winner.
+pub fn resolve_checkpoint(path: &Path) -> Result<(PathBuf, Checkpoint)> {
+    if path.is_file() {
+        let ck = Checkpoint::load(path)?;
+        return Ok((path.to_path_buf(), ck));
+    }
+    if !path.is_dir() {
+        bail!("checkpoint path {} does not exist", path.display());
+    }
+    let mut best: Option<(PathBuf, Checkpoint)> = None;
+    for entry in std::fs::read_dir(path)
+        .with_context(|| format!("reading ckpt dir {}", path.display()))?
+    {
+        let p = entry?.path();
+        if p.extension().and_then(|e| e.to_str()) != Some("bin") {
+            continue;
+        }
+        let Ok(ck) = Checkpoint::load(&p) else {
+            continue; // unreadable/foreign file: skip, don't fail the scan
+        };
+        let better = match &best {
+            Some((_, b)) => ck.meta.epoch > b.meta.epoch,
+            None => true,
+        };
+        if better {
+            best = Some((p, ck));
+        }
+    }
+    best.with_context(|| {
+        format!("no loadable *.bin checkpoint in {}", path.display())
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ckpt::format::community_fingerprint;
+
+    fn meta_at(epoch: usize, val_acc: f64) -> CkptMeta {
+        CkptMeta {
+            dataset: "t".into(),
+            model: "host-sgc".into(),
+            policy: "host".into(),
+            epoch,
+            val_acc,
+            val_loss: 1.0 - val_acc,
+            seed: 7,
+            comm_fp: community_fingerprint(&[0, 0, 1], 2),
+            num_comms: 2,
+            shapes: vec![vec![2, 2]],
+            hot_nodes: vec![],
+        }
+    }
+
+    fn ck_at(epoch: usize, val_acc: f64) -> Checkpoint {
+        Checkpoint::new(meta_at(epoch, val_acc), vec![vec![epoch as f32; 4]])
+            .unwrap()
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("comm_rand_store_{tag}_{}", std::process::id()));
+        std::fs::remove_dir_all(&d).ok();
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn store_versions_are_monotone_and_snapshots_stable() {
+        let st = ParamStore::new();
+        assert_eq!(st.version(), 0);
+        assert!(st.current().is_none());
+        let v1 = st.publish(ck_at(0, 0.5), PathBuf::from("a"));
+        assert_eq!(v1.version, 1);
+        let held = st.current().unwrap();
+        let v2 = st.publish(ck_at(1, 0.6), PathBuf::from("b"));
+        assert_eq!(v2.version, 2);
+        assert_eq!(st.version(), 2);
+        // the old snapshot is untouched by the publish
+        assert_eq!(held.version, 1);
+        assert_eq!(held.params[0], vec![0.0; 4]);
+    }
+
+    #[test]
+    fn retention_keeps_best_and_latest_only() {
+        let dir = tmpdir("retention");
+        let mut w =
+            CheckpointWriter::new(&dir, 1, Retention::BestAndLatest).unwrap();
+        // val accs: best lands mid-run, then decays
+        for (e, acc) in [(0, 0.10), (1, 0.90), (2, 0.30), (3, 0.50)] {
+            w.maybe_write(&ck_at(e, acc)).unwrap().expect("every=1 writes");
+        }
+        let mut on_disk: Vec<String> = std::fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+            .collect();
+        on_disk.sort();
+        assert_eq!(
+            on_disk,
+            vec!["ckpt-e00001.bin", "ckpt-e00003.bin"],
+            "retention must keep best (e1, 0.90) + latest (e3)"
+        );
+        assert_eq!(w.best().unwrap().epoch, 1);
+        assert_eq!(w.latest().unwrap().epoch, 3);
+        // when the latest is also the best, a single file remains
+        w.write(&ck_at(4, 0.99)).unwrap();
+        let files: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().path())
+            .collect();
+        assert_eq!(files.len(), 1);
+        assert!(files[0].ends_with("ckpt-e00004.bin"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn cadence_respects_every() {
+        let dir = tmpdir("cadence");
+        let mut w = CheckpointWriter::new(&dir, 2, Retention::All).unwrap();
+        let mut written = Vec::new();
+        for e in 0..6 {
+            if let Some(p) = w.maybe_write(&ck_at(e, 0.5)).unwrap() {
+                written.push(p);
+            }
+        }
+        // every=2 fires at epochs 1, 3, 5
+        assert_eq!(written.len(), 3);
+        assert_eq!(w.entries().len(), 3);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn resolve_picks_highest_epoch_and_skips_garbage() {
+        let dir = tmpdir("resolve");
+        let mut w = CheckpointWriter::new(&dir, 1, Retention::All).unwrap();
+        w.write(&ck_at(2, 0.4)).unwrap();
+        w.write(&ck_at(7, 0.3)).unwrap();
+        w.write(&ck_at(5, 0.9)).unwrap();
+        // garbage that must not derail the scan
+        std::fs::write(dir.join("notes.txt"), b"hello").unwrap();
+        std::fs::write(dir.join("broken.bin"), b"CRCKgarbage").unwrap();
+        let (p, ck) = resolve_checkpoint(&dir).unwrap();
+        assert!(p.ends_with("ckpt-e00007.bin"), "{}", p.display());
+        assert_eq!(ck.meta.epoch, 7);
+        // a file path resolves to itself
+        let (p2, ck2) = resolve_checkpoint(&p).unwrap();
+        assert_eq!(p2, p);
+        assert_eq!(ck2.meta.epoch, 7);
+        // an empty dir errors
+        let empty = tmpdir("resolve_empty");
+        assert!(resolve_checkpoint(&empty).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::remove_dir_all(&empty).ok();
+    }
+}

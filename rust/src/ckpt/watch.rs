@@ -1,0 +1,297 @@
+//! Checkpoint-directory reload watcher: the serving side of hot
+//! swapping.
+//!
+//! A [`DirWatcher`] polls a checkpoint directory for `*.bin` files it
+//! has not seen (or whose mtime changed), decodes and validates each
+//! candidate — CRC + community-fingerprint fence, both from
+//! [`super::format`] — and surfaces the newest one whose epoch is
+//! strictly greater than the last *confirmed install*
+//! ([`DirWatcher::mark_loaded`]). Invalid or stale files are
+//! remembered and skipped, so a corrupt upload never busy-loops the
+//! watcher and never reaches the workers.
+//!
+//! [`watch_loop`] is the thread body the serving engine runs: poll,
+//! hand validated checkpoints to a `publish` callback (the engine
+//! publishes to its [`super::ParamStore`] and installs into the
+//! executor), sleep, repeat — exiting promptly when `stop` is set.
+//! Because checkpoint writers rename atomically, a poll observes
+//! either the old file set or the complete new one, never a torn
+//! write.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::{Duration, SystemTime};
+
+use anyhow::Result;
+
+use super::format::Checkpoint;
+
+/// Incremental scanner over one checkpoint directory (see module docs).
+pub struct DirWatcher {
+    dir: PathBuf,
+    /// Files already examined, by mtime (stale entries are harmless).
+    seen: HashMap<PathBuf, SystemTime>,
+    /// Epoch of the last checkpoint surfaced (`None` = none yet).
+    loaded_epoch: Option<usize>,
+}
+
+impl DirWatcher {
+    /// Watch `dir`, surfacing only checkpoints newer than
+    /// `loaded_epoch` (pass the initially-loaded checkpoint's epoch, or
+    /// `None` to surface the first valid file).
+    pub fn new(dir: impl Into<PathBuf>, loaded_epoch: Option<usize>) -> DirWatcher {
+        DirWatcher {
+            dir: dir.into(),
+            seen: HashMap::new(),
+            loaded_epoch,
+        }
+    }
+
+    /// The watched directory.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// One scan: decode + validate unseen/changed `*.bin` files and
+    /// return the newest checkpoint that advances the loaded epoch, if
+    /// any. Files that fail to decode or validate are logged once and
+    /// not retried until their mtime changes.
+    ///
+    /// Polling does **not** advance the epoch fence — the caller
+    /// confirms a successful install with [`DirWatcher::mark_loaded`].
+    /// That way a checkpoint whose install fails (e.g. shapes that
+    /// don't fit the executor) doesn't poison the fence: a corrected
+    /// re-upload at the same epoch (new mtime) is re-examined and can
+    /// still land.
+    pub fn poll(
+        &mut self,
+        community: &[u32],
+        num_comms: usize,
+    ) -> Option<(PathBuf, Checkpoint)> {
+        let entries = match std::fs::read_dir(&self.dir) {
+            Ok(e) => e,
+            Err(_) => return None, // dir may not exist yet; keep polling
+        };
+        let mut newest: Option<(usize, PathBuf, Checkpoint)> = None;
+        for entry in entries.flatten() {
+            let path = entry.path();
+            if path.extension().and_then(|e| e.to_str()) != Some("bin") {
+                continue;
+            }
+            let mtime = entry
+                .metadata()
+                .and_then(|m| m.modified())
+                .unwrap_or(SystemTime::UNIX_EPOCH);
+            if self.seen.get(&path) == Some(&mtime) {
+                continue;
+            }
+            self.seen.insert(path.clone(), mtime);
+            let ck = match Checkpoint::load(&path) {
+                Ok(ck) => ck,
+                Err(e) => {
+                    eprintln!(
+                        "[ckpt-watch] ignoring {}: {e:#}",
+                        path.display()
+                    );
+                    continue;
+                }
+            };
+            if let Err(e) = ck.validate_against(community, num_comms) {
+                eprintln!("[ckpt-watch] rejecting {}: {e:#}", path.display());
+                continue;
+            }
+            let advances = match self.loaded_epoch {
+                Some(le) => ck.meta.epoch > le,
+                None => true,
+            };
+            let newer_than_candidate = match &newest {
+                Some((e, _, _)) => ck.meta.epoch > *e,
+                None => true,
+            };
+            if advances && newer_than_candidate {
+                newest = Some((ck.meta.epoch, path, ck));
+            }
+        }
+        newest.map(|(_, path, ck)| (path, ck))
+    }
+
+    /// Record that a checkpoint at `epoch` was successfully installed:
+    /// only strictly newer epochs surface from now on.
+    pub fn mark_loaded(&mut self, epoch: usize) {
+        self.loaded_epoch =
+            Some(self.loaded_epoch.map_or(epoch, |e| e.max(epoch)));
+    }
+}
+
+/// Thread body for background hot-swap: poll every `poll_ms`
+/// milliseconds, hand each validated new checkpoint to `publish`
+/// (which installs it into the serving executor), exit when `stop` is
+/// set. `publish` errors are logged, not fatal — the workers keep
+/// serving the version they have.
+pub fn watch_loop(
+    mut watcher: DirWatcher,
+    community: &[u32],
+    num_comms: usize,
+    poll_ms: u64,
+    stop: &AtomicBool,
+    publish: &(dyn Fn(PathBuf, Checkpoint) -> Result<()> + Sync),
+) {
+    let poll_ms = poll_ms.max(1);
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            return;
+        }
+        if let Some((path, ck)) = watcher.poll(community, num_comms) {
+            let label = path.display().to_string();
+            let epoch = ck.meta.epoch;
+            match publish(path, ck) {
+                Ok(()) => {
+                    watcher.mark_loaded(epoch);
+                    println!("[ckpt-watch] hot-swapped in {label}");
+                }
+                Err(e) => {
+                    // fence NOT advanced: a fixed re-upload of this
+                    // epoch (new mtime) can still install later
+                    eprintln!("[ckpt-watch] failed to install {label}: {e:#}")
+                }
+            }
+            continue; // re-poll immediately: more files may be pending
+        }
+        // sleep in short slices so `stop` is honored promptly even at
+        // long poll intervals
+        let mut left = poll_ms;
+        while left > 0 {
+            if stop.load(Ordering::Relaxed) {
+                return;
+            }
+            let step = left.min(20);
+            std::thread::sleep(Duration::from_millis(step));
+            left -= step;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ckpt::format::{community_fingerprint, CkptMeta};
+
+    fn community() -> Vec<u32> {
+        vec![0, 0, 1, 1, 2, 2]
+    }
+
+    fn ck_at(epoch: usize, comm: &[u32]) -> Checkpoint {
+        let meta = CkptMeta {
+            dataset: "t".into(),
+            model: "host-sgc".into(),
+            policy: "host".into(),
+            epoch,
+            val_acc: 0.5,
+            val_loss: 0.5,
+            seed: 1,
+            comm_fp: community_fingerprint(comm, 3),
+            num_comms: 3,
+            shapes: vec![vec![2]],
+            hot_nodes: vec![],
+        };
+        Checkpoint::new(meta, vec![vec![epoch as f32, 0.0]]).unwrap()
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("comm_rand_watch_{tag}_{}", std::process::id()));
+        std::fs::remove_dir_all(&d).ok();
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn poll_surfaces_only_advancing_epochs() {
+        let dir = tmpdir("advance");
+        let comm = community();
+        let mut w = DirWatcher::new(&dir, Some(2));
+        // nothing there yet
+        assert!(w.poll(&comm, 3).is_none());
+        // an older checkpoint must not surface
+        ck_at(1, &comm).write_atomic(&dir.join("ckpt-e00001.bin")).unwrap();
+        assert!(w.poll(&comm, 3).is_none());
+        // a newer one does, exactly once
+        ck_at(5, &comm).write_atomic(&dir.join("ckpt-e00005.bin")).unwrap();
+        let (_, ck) = w.poll(&comm, 3).expect("epoch 5 advances past 2");
+        assert_eq!(ck.meta.epoch, 5);
+        assert!(w.poll(&comm, 3).is_none(), "same file must not re-surface");
+        // once the install is confirmed, epochs at/below 5 are fenced
+        w.mark_loaded(5);
+        ck_at(4, &comm).write_atomic(&dir.join("ckpt-e00004.bin")).unwrap();
+        assert!(w.poll(&comm, 3).is_none(), "epoch 4 must not surface");
+        ck_at(6, &comm).write_atomic(&dir.join("ckpt-e00006.bin")).unwrap();
+        assert_eq!(w.poll(&comm, 3).unwrap().1.meta.epoch, 6);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// A failed install must not poison the fence: the same epoch,
+    /// re-uploaded (new mtime), surfaces again because the caller
+    /// never confirmed it with `mark_loaded`.
+    #[test]
+    fn unconfirmed_epoch_can_be_reuploaded_and_resurfaces() {
+        let dir = tmpdir("reupload");
+        let comm = community();
+        let mut w = DirWatcher::new(&dir, Some(1));
+        let path = dir.join("ckpt-e00003.bin");
+        ck_at(3, &comm).write_atomic(&path).unwrap();
+        assert_eq!(w.poll(&comm, 3).unwrap().1.meta.epoch, 3);
+        // install failed (no mark_loaded); same mtime → not re-polled
+        assert!(w.poll(&comm, 3).is_none());
+        // re-upload the fixed checkpoint at the SAME epoch; the sleep
+        // guarantees a distinct mtime on any filesystem with >= 10 ms
+        // timestamp resolution (ext4/tmpfs are nanosecond)
+        std::thread::sleep(Duration::from_millis(20));
+        ck_at(3, &comm).write_atomic(&path).unwrap();
+        let (_, ck) = w
+            .poll(&comm, 3)
+            .expect("re-uploaded epoch must surface again");
+        assert_eq!(ck.meta.epoch, 3);
+        // ...and once confirmed, it is fenced like any installed epoch
+        w.mark_loaded(3);
+        std::thread::sleep(Duration::from_millis(20));
+        ck_at(3, &comm).write_atomic(&path).unwrap();
+        assert!(w.poll(&comm, 3).is_none(), "confirmed epoch re-fenced");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn poll_skips_invalid_files_without_stalling() {
+        let dir = tmpdir("invalid");
+        let comm = community();
+        let mut w = DirWatcher::new(&dir, None);
+        // corrupt file + fingerprint-mismatched file + valid file
+        std::fs::write(dir.join("junk.bin"), b"CRCKnope").unwrap();
+        let foreign = vec![0u32, 1, 2, 0, 1, 2];
+        ck_at(9, &foreign).write_atomic(&dir.join("ckpt-e00009.bin")).unwrap();
+        ck_at(4, &comm).write_atomic(&dir.join("ckpt-e00004.bin")).unwrap();
+        let (_, ck) = w.poll(&comm, 3).expect("the valid file surfaces");
+        assert_eq!(ck.meta.epoch, 4);
+        // the bad files stay ignored on later polls
+        assert!(w.poll(&comm, 3).is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn poll_picks_newest_when_several_land_at_once() {
+        let dir = tmpdir("newest");
+        let comm = community();
+        let mut w = DirWatcher::new(&dir, None);
+        for e in [3usize, 8, 6] {
+            ck_at(e, &comm)
+                .write_atomic(&dir.join(format!("ckpt-e{e:05}.bin")))
+                .unwrap();
+        }
+        let (_, ck) = w.poll(&comm, 3).unwrap();
+        assert_eq!(ck.meta.epoch, 8, "newest epoch wins");
+        // the older two never surface later: already examined (seen
+        // by mtime), so only a rewrite would re-candidate them
+        assert!(w.poll(&comm, 3).is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -107,6 +107,12 @@ COMMANDS:
   train <preset>         train one configuration
                            roots=rand|norand|mix0|mix12.5|mix25|mix50
                            p=0.5..1.0  epochs=N  batch=N  seed=N  lr=F
+                           ckpt_dir=PATH  ckpt_every=N (write CRC-checked
+                           checkpoints every N epochs; retention keeps
+                           best-by-val-acc + latest)
+                           backend=auto|pjrt|host (host = pure-rust
+                           SGC reference model; auto falls back to it
+                           when AOT artifacts are absent)
   inspect <preset>       print dataset statistics
   serve bench [preset]   online-inference benchmark
                            p=0..1 (community-bias knob)  batch=N
@@ -120,12 +126,20 @@ COMMANDS:
                            Poisson arrivals at RATE req/s)
                            admission=none|reject|degrade (shed or
                            fanout-degrade unmeetable deadlines)
+                           ckpt=PATH (serve trained parameters from a
+                           checkpoint file, or the newest in a dir;
+                           real top-1 accuracy lands in the report)
+                           watch_ms=N (poll the ckpt dir during the
+                           run and hot-swap newer checkpoints in)
+                           cache_warm=1 (pre-stage hot feature rows
+                           before the bench clock starts)
                            (uses the PJRT infer artifact when present,
-                            a no-op executor otherwise)
+                            the pure-rust host executor otherwise)
   exp <id>               regenerate a paper artifact into results/
                            ids: fig2 fig5 fig6 fig7 fig8 fig9 fig10
                                 tab3 tab4 tab5 fullbatch inference
-                                preproc ablation autotune serve all
+                                preproc ablation autotune serve ckpt
+                                all
   help                   this message
 
 Presets: {}",
@@ -282,6 +296,9 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         )?,
         fanouts: defaults.fanouts,
         seed: args.get_u64("seed", 0)?,
+        ckpt: args.get("ckpt").map(std::path::PathBuf::from),
+        ckpt_watch_ms: args.get_u64("watch_ms", 0)?,
+        cache_warm: args.get_usize("cache_warm", 0)? != 0,
     };
     if !(0.0..=1.0).contains(&scfg.community_bias) {
         bail!("p must be in [0, 1], got {}", scfg.community_bias);
@@ -305,8 +322,8 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
             println!(
                 "  shard {}: {} comms / {} nodes owned | {} req \
                  ({} foreign, {} shed, {} degraded) in {} batches | \
-                 depth max {} | est service {:.0} us | \
-                 p50 {:.2} p99 {:.2} ms | cache hit {:.1}%",
+                 params v{} ({} swaps) | depth max {} | est service \
+                 {:.0} us | p50 {:.2} p99 {:.2} ms | cache hit {:.1}%",
                 sh.id,
                 sh.owned_comms,
                 sh.owned_nodes,
@@ -315,6 +332,8 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
                 sh.shed,
                 sh.degraded,
                 sh.batches,
+                sh.param_version,
+                sh.swaps,
                 sh.queue_depth_max,
                 sh.est_service_us,
                 sh.lat_p50_ms,
@@ -333,8 +352,76 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
+    use crate::ckpt::{CheckpointWriter, Retention};
+    use crate::train::CkptConfig;
+
     let name = args.pos.first().context("train <preset>")?.clone();
     let p = preset(&name).with_context(|| format!("unknown preset {name}"))?;
+    let ds = crate::train::dataset::load_or_build(&p, true)?;
+    let ckpt = match args.get("ckpt_dir") {
+        Some(dir) => Some(CkptConfig {
+            dir: dir.into(),
+            every: args.get_usize("ckpt_every", 1)?.max(1),
+            retention: Retention::BestAndLatest,
+        }),
+        None => None,
+    };
+
+    // backend selection: the PJRT trainer needs the AOT artifacts; the
+    // host backend (pure-rust SGC reference model) runs anywhere and
+    // writes the same checkpoint format
+    let backend = args.get("backend").unwrap_or("auto");
+    let pjrt_available = crate::runtime::artifact::Manifest::load(
+        &crate::runtime::artifact::default_dir(),
+    )
+    .and_then(|m| m.get(&format!("{}.train", p.artifact)).map(|_| ()))
+    .is_ok();
+    let use_host = match backend {
+        "host" => true,
+        "pjrt" => false,
+        "auto" => {
+            if !pjrt_available {
+                eprintln!(
+                    "[train] AOT artifacts unavailable; falling back to \
+                     backend=host (pure-rust SGC reference model)"
+                );
+            }
+            !pjrt_available
+        }
+        other => bail!("unknown backend {other:?} (try: auto | pjrt | host)"),
+    };
+
+    if use_host {
+        // the linear host model takes a larger step size than the GNN
+        let cfg = TrainConfig {
+            batch_size: args.get_usize("batch", 256)?,
+            lr: args.get_f64("lr", 0.5)? as f32,
+            max_epochs: args.get_usize("epochs", 8)?,
+            seed: args.get_u64("seed", 0)?,
+            ..Default::default()
+        };
+        let mut writer = match &ckpt {
+            Some(cc) => {
+                Some(CheckpointWriter::new(&cc.dir, cc.every, cc.retention)?)
+            }
+            None => None,
+        };
+        let (_, report) =
+            crate::train::train_host(&ds, &cfg, writer.as_mut(), true)?;
+        println!("{}", report.summary());
+        if let Some(w) = &writer {
+            for e in w.entries() {
+                println!(
+                    "[ckpt] kept {} (epoch {}, val acc {:.4})",
+                    e.path.display(),
+                    e.epoch,
+                    e.val_acc
+                );
+            }
+        }
+        return Ok(());
+    }
+
     let policy = BatchPolicy {
         roots: args.root_policy(RootPolicy::Rand)?,
         p_intra: args.get_f64("p", 0.5)?,
@@ -346,8 +433,8 @@ fn cmd_train(args: &Args) -> Result<()> {
         seed: args.get_u64("seed", 0)?,
         ..Default::default()
     };
-    let ds = crate::train::dataset::load_or_build(&p, true)?;
-    let report = crate::train::run_training(&ds, p.artifact, &policy, &cfg, true)?;
+    let report =
+        crate::train::run_training(&ds, p.artifact, &policy, &cfg, true, ckpt)?;
     println!("{}", report.summary());
     Ok(())
 }

@@ -1,0 +1,174 @@
+//! Train → checkpoint → serve: the accuracy-vs-latency sweep that
+//! closes the loop the ROADMAP calls "trained-parameter serving".
+//!
+//! Pipeline: the host trainer runs for a few epochs writing a
+//! checkpoint *per epoch* (retention = keep-all, so the sweep can
+//! serve every training stage), then `serve bench` replays the same
+//! Zipf trace once with seed parameters and once per checkpoint. The
+//! table shows top-1 serving accuracy climbing with training epoch
+//! while latency stays flat — accuracy is a property of the
+//! parameters, latency of the serving stack.
+//!
+//! This experiment is also the end-to-end smoke gate CI runs: it
+//! writes `results/e2e_accuracy.json` and **fails** unless the final
+//! trained checkpoint serves with accuracy meaningfully above the
+//! seed-parameter baseline. No PJRT session or AOT artifacts are
+//! needed — the host reference executor produces real logits anywhere.
+
+use anyhow::{bail, Result};
+
+use crate::ckpt::{CheckpointWriter, Retention};
+use crate::cli::Args;
+use crate::config::{preset, TrainConfig};
+use crate::serve::{engine, Arrival, HostExecutor, LoadConfig, ServeConfig};
+use crate::train::train_host;
+use crate::util::json::{arr, num, obj, s, Json};
+
+use super::common::{f2, f4, pct, quick, results_dir, write_results, Table};
+
+pub fn run(args: &Args) -> Result<()> {
+    let name = args.pos.get(1).map(String::as_str).unwrap_or("tiny");
+    let p = preset(name)
+        .ok_or_else(|| anyhow::anyhow!("unknown preset {name}"))?;
+    let ds = crate::train::dataset::load_or_build(&p, true)?;
+    let seed = args.get_u64("seed", 0)?;
+    let epochs = args.get_usize("epochs", if quick() { 4 } else { 8 })?;
+
+    // ---- train, checkpointing every epoch ----
+    let dir = results_dir().join(format!("ckpts-{name}"));
+    std::fs::remove_dir_all(&dir).ok();
+    let mut writer = CheckpointWriter::new(&dir, 1, Retention::All)?;
+    let tcfg = TrainConfig {
+        batch_size: 256,
+        lr: 0.5,
+        max_epochs: epochs,
+        seed,
+        ..Default::default()
+    };
+    let (_, treport) = train_host(&ds, &tcfg, Some(&mut writer), false)?;
+    println!("{}", treport.summary());
+
+    // ---- serve each checkpoint against the same trace ----
+    let mut scfg = ServeConfig::for_dataset(&ds);
+    scfg.batch_size = 32;
+    scfg.fanouts = vec![5, 5];
+    scfg.seed = seed;
+    let lcfg = LoadConfig {
+        clients: 4,
+        requests_per_client: args
+            .get_usize("requests", if quick() { 40 } else { 120 })?,
+        zipf_s: args.get_f64("zipf", 1.1)?,
+        arrival: Arrival::Closed,
+        seed: seed ^ 0x10AD,
+    };
+    let exec = HostExecutor::new(&ds, scfg.seed);
+    let meta =
+        engine::synthetic_infer_meta(&ds, scfg.batch_size, &scfg.fanouts);
+
+    let mut table = Table::new(&[
+        "params",
+        "train val acc",
+        "serve acc",
+        "req/s",
+        "p50 ms",
+        "p99 ms",
+        "param v",
+    ]);
+    let mut rows = Vec::new();
+    let mut serve_one = |label: String,
+                         val_acc: f64,
+                         cfg: &ServeConfig|
+     -> Result<(f64, Json)> {
+        let rep = engine::run(&ds, &meta, &exec, cfg, &lcfg)?;
+        println!("{}", rep.summary());
+        table.row(vec![
+            label.clone(),
+            f4(val_acc),
+            pct(rep.accuracy),
+            format!("{:.0}", rep.throughput_rps),
+            f2(rep.lat_p50_ms),
+            f2(rep.lat_p99_ms),
+            format!("{}", rep.param_version),
+        ]);
+        let j = obj(vec![
+            ("params", s(&label)),
+            ("train_val_acc", num(val_acc)),
+            ("serve_accuracy", num(rep.accuracy)),
+            ("evaluated", num(rep.evaluated as f64)),
+            ("throughput_rps", num(rep.throughput_rps)),
+            ("lat_p50_ms", num(rep.lat_p50_ms)),
+            ("lat_p99_ms", num(rep.lat_p99_ms)),
+            ("param_version", num(rep.param_version as f64)),
+            ("errors", num(rep.errors as f64)),
+        ]);
+        Ok((rep.accuracy, j))
+    };
+
+    // seed baseline first: the executor has no checkpoint installed yet
+    let (seed_acc, j) = serve_one("seed".into(), 0.0, &scfg)?;
+    rows.push(j);
+
+    let mut entries: Vec<_> = writer.entries().to_vec();
+    entries.sort_by_key(|e| e.epoch);
+    let mut trained_acc = seed_acc;
+    for e in &entries {
+        let cfg = ServeConfig { ckpt: Some(e.path.clone()), ..scfg.clone() };
+        let (acc, j) =
+            serve_one(format!("epoch {}", e.epoch), e.val_acc, &cfg)?;
+        rows.push(j);
+        trained_acc = acc;
+    }
+    drop(serve_one); // release the table borrow before rendering it
+
+    let improvement = trained_acc - seed_acc;
+    let pass = improvement > 0.05;
+    let e2e = obj(vec![
+        ("dataset", s(name)),
+        ("train_epochs", num(epochs as f64)),
+        ("seed_accuracy", num(seed_acc)),
+        ("trained_accuracy", num(trained_acc)),
+        ("improvement", num(improvement)),
+        ("best_train_val_acc", num(treport.best_val_acc)),
+        ("pass", Json::Bool(pass)),
+        ("runs", arr(rows.clone())),
+    ]);
+    std::fs::write(
+        results_dir().join("e2e_accuracy.json"),
+        e2e.to_string_pretty(),
+    )?;
+    println!("[exp] wrote results/e2e_accuracy.json");
+
+    let md = format!(
+        "# Train → checkpoint → serve: accuracy vs latency ({name})\n\n\
+         Host trainer, {epochs} epochs, one checkpoint per epoch \
+         (`{}`); each row replays the same closed-loop Zipf trace \
+         ({} clients x {} requests) through the host executor with \
+         that row's parameters installed.\n\n{}\n\
+         Seed-parameter accuracy {} → trained accuracy {} \
+         (improvement {:+.1}%).\n",
+        dir.display(),
+        lcfg.clients,
+        lcfg.requests_per_client,
+        table.to_markdown(),
+        pct(seed_acc),
+        pct(trained_acc),
+        improvement * 100.0,
+    );
+    write_results(
+        "ckpt",
+        &md,
+        &obj(vec![
+            ("seed_accuracy", num(seed_acc)),
+            ("trained_accuracy", num(trained_acc)),
+            ("runs", arr(rows)),
+        ]),
+    )?;
+
+    if !pass {
+        bail!(
+            "e2e accuracy gate failed: trained {trained_acc:.4} vs seed \
+             {seed_acc:.4} (improvement {improvement:+.4} <= 0.05)"
+        );
+    }
+    Ok(())
+}

@@ -7,6 +7,7 @@
 
 pub mod ablation;
 pub mod autotune;
+pub mod ckpt;
 pub mod common;
 pub mod fig10;
 pub mod fig2;
@@ -29,10 +30,14 @@ use common::Ctx;
 
 pub fn run(args: &Args) -> Result<()> {
     let id = args.pos.first().map(|s| s.as_str()).unwrap_or("");
-    // the serving sweep needs no PJRT session (it falls back to the
-    // no-op executor), so dispatch it before Ctx loads the manifest
+    // the serving sweep and the train→checkpoint→serve pipeline need
+    // no PJRT session (they fall back to the host executor), so
+    // dispatch them before Ctx loads the manifest
     if id == "serve" {
         return serve::run(args);
+    }
+    if id == "ckpt" {
+        return ckpt::run(args);
     }
     let mut ctx = Ctx::new()?;
     match id {

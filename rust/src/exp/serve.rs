@@ -191,6 +191,50 @@ pub fn run(args: &Args) -> Result<()> {
         }
     }
 
+    // axis 4: hot swap under load. Only meaningful on the host
+    // executor (its checkpoints are self-contained); with PJRT the
+    // params come from a real training run instead — see `exp ckpt`.
+    let mut h_rows = Vec::new();
+    // (executor errors are only counted per run, not per shard, so
+    // the table carries them in the note line above it)
+    let mut h_table = Table::new(&[
+        "shard",
+        "requests",
+        "param v",
+        "swaps",
+        "regressions",
+    ]);
+    let hot_swap_note;
+    if exec.name() == "host" {
+        let rep = hot_swap_under_load(&ds, &meta, exec.as_ref(), &scfg)?;
+        println!("{}", rep.summary());
+        hot_swap_note = format!(
+            "A second checkpoint lands mid-run (watcher poll 5 ms): \
+             {} requests completed with {} errors; final param version \
+             {} after {} swap(s).\n\n",
+            rep.requests,
+            rep.errors,
+            rep.param_version,
+            rep.swaps
+        );
+        for sh in &rep.shards {
+            h_table.row(vec![
+                format!("{}", sh.id),
+                format!("{}", sh.requests),
+                format!("{}", sh.param_version),
+                format!("{}", sh.swaps),
+                format!("{}", sh.version_regressions),
+            ]);
+        }
+        h_rows.push(rep.to_json());
+    } else {
+        hot_swap_note =
+            "(skipped: PJRT executor active — host-model checkpoints \
+             do not apply; see `exp ckpt` for the trained-parameter \
+             pipeline)\n\n"
+                .to_string();
+    }
+
     let md = format!(
         "# Online serving — community-bias, shard and offered-load \
          sweeps ({name})\n\n\
@@ -203,7 +247,8 @@ pub fn run(args: &Args) -> Result<()> {
          closed-loop self-pacing; `admission=none` rides the latency \
          cliff past saturation (bounded only by queue-full drop-tail), \
          `admission=reject` sheds unmeetable requests at enqueue and \
-         keeps p99 bounded.\n\n{}",
+         keeps p99 bounded.\n\n{}\n\
+         ## Hot swap under load (2 shards, closed loop)\n\n{}{}",
         lcfg.clients,
         lcfg.requests_per_client,
         lcfg.zipf_s,
@@ -214,12 +259,94 @@ pub fn run(args: &Args) -> Result<()> {
         spill.name(),
         s_table.to_markdown(),
         shard_p,
-        a_table.to_markdown()
+        a_table.to_markdown(),
+        hot_swap_note,
+        h_table.to_markdown()
     );
     let json = obj(vec![
         ("p_sweep", Json::Arr(p_rows)),
         ("shard_sweep", Json::Arr(s_rows)),
         ("load_sweep", Json::Arr(a_rows)),
+        ("hot_swap", Json::Arr(h_rows)),
     ]);
     write_results("serve", &md, &json)
+}
+
+/// Stage two host-model checkpoints, start a watched serving run on
+/// the first, and land the second mid-run: the report's per-shard
+/// `param_version` / `swaps` counters show the zero-downtime swap.
+fn hot_swap_under_load(
+    ds: &crate::graph::Dataset,
+    meta: &crate::runtime::artifact::ArtifactMeta,
+    exec: &dyn crate::serve::InferExecutor,
+    scfg: &ServeConfig,
+) -> Result<crate::serve::ServeReport> {
+    use crate::ckpt::{CheckpointWriter, Retention};
+    use crate::config::TrainConfig;
+
+    // two quick training stages → two checkpoints
+    let stage = std::env::temp_dir().join(format!(
+        "comm_rand_expserve_stage_{}",
+        std::process::id()
+    ));
+    std::fs::remove_dir_all(&stage).ok();
+    let mut w = CheckpointWriter::new(&stage, 1, Retention::All)?;
+    let tcfg = TrainConfig {
+        batch_size: 256,
+        lr: 0.5,
+        max_epochs: 2,
+        seed: scfg.seed,
+        ..Default::default()
+    };
+    crate::train::train_host(ds, &tcfg, Some(&mut w), false)?;
+    let mut entries: Vec<_> = w.entries().to_vec();
+    entries.sort_by_key(|e| e.epoch);
+    if entries.len() != 2 {
+        anyhow::bail!("expected 2 staged checkpoints, got {}", entries.len());
+    }
+
+    // the watch dir starts with only the first checkpoint
+    let watch = std::env::temp_dir().join(format!(
+        "comm_rand_expserve_watch_{}",
+        std::process::id()
+    ));
+    std::fs::remove_dir_all(&watch).ok();
+    std::fs::create_dir_all(&watch)?;
+    let first = crate::ckpt::Checkpoint::load(&entries[0].path)?;
+    first.write_atomic(&watch.join("ckpt-e00000.bin"))?;
+    let second = crate::ckpt::Checkpoint::load(&entries[1].path)?;
+
+    let cfg = ServeConfig {
+        shards: 2,
+        workers: 2,
+        // stretch the run so the mid-run swap lands well before the
+        // trace drains
+        max_delay_us: 3_000,
+        ckpt: Some(watch.clone()),
+        ckpt_watch_ms: 5,
+        ..scfg.clone()
+    };
+    let lcfg = LoadConfig {
+        clients: 4,
+        requests_per_client: 60,
+        zipf_s: 1.1,
+        arrival: Arrival::Closed,
+        seed: scfg.seed ^ 0x5A5A,
+    };
+    let rep = std::thread::scope(|scope| {
+        let watch_ref = &watch;
+        let second_ref = &second;
+        let writer = scope.spawn(move || {
+            std::thread::sleep(std::time::Duration::from_millis(60));
+            second_ref
+                .write_atomic(&watch_ref.join("ckpt-e00001.bin"))
+                .expect("staging the swap checkpoint");
+        });
+        let rep = engine::run(ds, meta, exec, &cfg, &lcfg);
+        let _ = writer.join();
+        rep
+    })?;
+    std::fs::remove_dir_all(&stage).ok();
+    std::fs::remove_dir_all(&watch).ok();
+    Ok(rep)
 }

@@ -30,8 +30,9 @@
 //! coalescing (`p = 1`); a worker pool samples each micro-batch's MFG,
 //! stages features through a *functional* `Arc`-sharded LRU feature
 //! cache (the same set-associative core as the cache simulator, now
-//! carrying payload), and drives the PJRT infer executable — or a
-//! no-op executor when AOT artifacts are absent. With `shards=N` the
+//! carrying payload), and drives the PJRT infer executable — or the
+//! pure-rust host reference model when AOT artifacts are absent, so
+//! logits (and accuracy) are real anywhere. With `shards=N` the
 //! engine partitions communities across N logical device shards
 //! (consistent assignment from the Louvain labels) and routes each
 //! micro-batch to the shard owning its community, with a configurable
@@ -46,6 +47,21 @@
 //! `comm-rand exp serve` sweeps `p`, the shard count and the offered
 //! load into paper-style tables. The request lifecycle and knob
 //! reference live in `docs/ARCHITECTURE.md`.
+//!
+//! # Checkpoints & hot swap ([`ckpt`])
+//!
+//! The [`ckpt`] subsystem bridges train → serve: the training loop
+//! writes versioned, CRC-checked checkpoints (`ckpt_dir=` /
+//! `ckpt_every=`, retention keeps best-by-val-acc + latest), each
+//! fenced by a fingerprint of the Louvain labeling it was trained
+//! against, and `serve bench ckpt=...` loads one — so the bench
+//! reports **real top-1 accuracy** next to latency. With `watch_ms=N`
+//! the engine polls the checkpoint directory during the run and
+//! hot-swaps newer versions in between micro-batches with zero
+//! dropped requests (`param_version` / `swaps` per shard in the
+//! report). In artifact-less environments the pure-rust host
+//! reference model ([`runtime::host`], `train backend=host`) stands
+//! in for the PJRT executable end to end.
 
 #![warn(missing_docs)]
 // missing_docs burn-down: the crate root and the serving subsystem
@@ -59,6 +75,7 @@
 pub mod batch;
 #[allow(missing_docs)]
 pub mod cachesim;
+pub mod ckpt;
 #[allow(missing_docs)]
 pub mod community;
 #[allow(missing_docs)]
@@ -72,7 +89,6 @@ pub mod runtime;
 #[allow(missing_docs)]
 pub mod sampler;
 pub mod serve;
-#[allow(missing_docs)]
 pub mod train;
 #[allow(missing_docs)]
 pub mod util;

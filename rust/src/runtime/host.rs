@@ -1,0 +1,181 @@
+//! Host (pure-rust) reference model: an SGC-style classifier that
+//! runs anywhere — no AOT artifacts, no PJRT.
+//!
+//! The model is deliberately minimal: features are smoothed once over
+//! the graph (`agg[v] = mean of x over {v} ∪ N(v)`, the 1-hop SGC
+//! propagation) and a single linear layer maps the smoothed feature to
+//! class logits. That is enough to (a) learn the synthetic datasets'
+//! class signal well above chance, (b) give `serve bench` *real*
+//! trained-parameter accuracy in environments without XLA, and (c)
+//! exercise the full checkpoint → param-store → hot-swap path with a
+//! parameter layout ([`param_shapes`]) the checkpoint subsystem treats
+//! exactly like a PJRT artifact's. When real artifacts exist, the PJRT
+//! executor takes precedence and this model is not used.
+//!
+//! Parameter layout: `params[0]` is `W` with shape
+//! `[feat_dim, num_classes]` (row-major), `params[1]` is the bias `b`
+//! with shape `[num_classes]`.
+
+use anyhow::{bail, Result};
+
+use crate::graph::Dataset;
+use crate::util::rng::Rng;
+
+use super::step::init_param;
+
+/// Model name recorded in checkpoints produced by the host trainer.
+pub const HOST_MODEL: &str = "host-sgc";
+
+/// Parameter shapes of the host model for a dataset geometry.
+pub fn param_shapes(feat_dim: usize, num_classes: usize) -> Vec<Vec<usize>> {
+    vec![vec![feat_dim, num_classes], vec![num_classes]]
+}
+
+/// Seed-initialized host parameters (Glorot `W`, zero `b`) — the same
+/// init family the PJRT states use, so "seed params" means the same
+/// thing on every backend.
+pub fn init_params(
+    feat_dim: usize,
+    num_classes: usize,
+    seed: u64,
+) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed ^ 0x9a27_11f3);
+    param_shapes(feat_dim, num_classes)
+        .iter()
+        .map(|sh| init_param(sh, &mut rng))
+        .collect()
+}
+
+/// Check a parameter set against the host layout; errors name the
+/// offending tensor so checkpoint-mismatch reports are actionable.
+pub fn check_params(
+    params: &[Vec<f32>],
+    feat_dim: usize,
+    num_classes: usize,
+) -> Result<()> {
+    let shapes = param_shapes(feat_dim, num_classes);
+    if params.len() != shapes.len() {
+        bail!(
+            "host model wants {} tensors ({feat_dim}x{num_classes} + bias), \
+             got {}",
+            shapes.len(),
+            params.len()
+        );
+    }
+    for (i, (p, sh)) in params.iter().zip(&shapes).enumerate() {
+        let want: usize = sh.iter().product();
+        if p.len() != want {
+            bail!(
+                "host model tensor {i} has {} elements, shape {sh:?} \
+                 wants {want}",
+                p.len()
+            );
+        }
+    }
+    Ok(())
+}
+
+/// The 1-hop SGC propagation, materialized once: row `v` is the mean
+/// of the raw features over `{v} ∪ N(v)`. `n * feat_dim` f32 — the
+/// same footprint as the feature table itself.
+pub fn aggregate_table(ds: &Dataset) -> Vec<f32> {
+    let n = ds.n();
+    let f = ds.feat_dim;
+    let mut agg = vec![0f32; n * f];
+    for v in 0..n as u32 {
+        let row = &mut agg[v as usize * f..(v as usize + 1) * f];
+        row.copy_from_slice(ds.feature_row(v));
+        let nbrs = ds.csr.neighbors(v);
+        for &u in nbrs {
+            for (r, &x) in row.iter_mut().zip(ds.feature_row(u)) {
+                *r += x;
+            }
+        }
+        let inv = 1.0 / (nbrs.len() + 1) as f32;
+        for x in row.iter_mut() {
+            *x *= inv;
+        }
+    }
+    agg
+}
+
+/// Logits for one (already aggregated) feature row into `out`
+/// (`len == num_classes`).
+pub fn logits_into(params: &[Vec<f32>], feat: &[f32], out: &mut [f32]) {
+    let c = out.len();
+    let w = &params[0];
+    let b = &params[1];
+    out.copy_from_slice(&b[..c]);
+    for (i, &x) in feat.iter().enumerate() {
+        if x == 0.0 {
+            continue;
+        }
+        let wrow = &w[i * c..(i + 1) * c];
+        for (o, &wv) in out.iter_mut().zip(wrow) {
+            *o += x * wv;
+        }
+    }
+}
+
+/// Index of the largest logit (ties → lowest index).
+pub fn top1(logits: &[f32]) -> usize {
+    let mut best = 0usize;
+    for (i, &x) in logits.iter().enumerate().skip(1) {
+        if x > logits[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::preset;
+
+    #[test]
+    fn shapes_and_init_agree() {
+        let p = init_params(8, 3, 42);
+        check_params(&p, 8, 3).unwrap();
+        assert_eq!(p[0].len(), 24);
+        assert_eq!(p[1], vec![0.0; 3]);
+        // deterministic in the seed
+        assert_eq!(init_params(8, 3, 42), p);
+        assert_ne!(init_params(8, 3, 43)[0], p[0]);
+        // wrong layouts are named
+        assert!(check_params(&p, 7, 3).is_err());
+        assert!(check_params(&p[..1], 8, 3).is_err());
+    }
+
+    #[test]
+    fn aggregate_is_mean_over_closed_neighborhood() {
+        let ds = crate::train::dataset::build(&preset("tiny").unwrap(), true);
+        let agg = aggregate_table(&ds);
+        let f = ds.feat_dim;
+        for &v in &[0u32, 7, 100] {
+            let nbrs = ds.csr.neighbors(v);
+            let mut want = ds.feature_row(v).to_vec();
+            for &u in nbrs {
+                for (j, x) in ds.feature_row(u).iter().enumerate() {
+                    want[j] += x;
+                }
+            }
+            let inv = 1.0 / (nbrs.len() + 1) as f32;
+            for (j, w) in want.iter().enumerate() {
+                let got = agg[v as usize * f + j];
+                assert!((got - w * inv).abs() < 1e-5, "node {v} dim {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn logits_are_affine_in_features() {
+        // W = identity-ish, b = [1, 2]
+        let params = vec![vec![1.0, 0.0, 0.0, 1.0], vec![1.0, 2.0]];
+        let mut out = vec![0f32; 2];
+        logits_into(&params, &[3.0, 5.0], &mut out);
+        assert_eq!(out, vec![4.0, 7.0]);
+        assert_eq!(top1(&out), 1);
+        assert_eq!(top1(&[2.0, 2.0, 1.0]), 0, "ties break low");
+    }
+}

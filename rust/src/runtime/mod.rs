@@ -4,6 +4,7 @@
 //! on the training path.
 
 pub mod artifact;
+pub mod host;
 pub mod pjrt;
 pub mod step;
 

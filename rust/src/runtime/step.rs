@@ -220,11 +220,34 @@ impl InferState {
         })
     }
 
-    /// Install trained parameters (e.g. copied out of a [`TrainState`]).
+    /// Install trained parameters (copied out of a [`TrainState`], or
+    /// loaded from a checkpoint by the serving hot-swap path).
+    /// Validates tensor count *and* per-tensor element counts against
+    /// the artifact's param specs, so a checkpoint from a different
+    /// model/geometry fails loudly here instead of corrupting an
+    /// upload.
     pub fn set_params(&mut self, params: Vec<Vec<f32>>) -> Result<()> {
-        let want = self.exe.meta.num_params();
-        if params.len() != want {
-            bail!("artifact wants {want} params, got {}", params.len());
+        let specs = self.exe.meta.param_specs();
+        if params.len() != specs.len() {
+            bail!(
+                "artifact {} wants {} params, got {}",
+                self.exe.meta.name,
+                specs.len(),
+                params.len()
+            );
+        }
+        for (i, (p, s)) in params.iter().zip(&specs).enumerate() {
+            if p.len() != s.elements() {
+                bail!(
+                    "artifact {} param {i} ({}) wants shape {:?} = {} \
+                     elements, got {}",
+                    self.exe.meta.name,
+                    s.name,
+                    s.shape,
+                    s.elements(),
+                    p.len()
+                );
+            }
         }
         self.params = params;
         Ok(())

@@ -158,7 +158,15 @@ mod tests {
     fn req(id: u64, node: u32, arrive_us: u64, deadline_us: u64) -> Request {
         // the batcher never sends on `reply`; a dropped receiver is fine
         let (tx, _rx) = mpsc::channel();
-        Request { id, node, arrive_us, deadline_us, fanout_cap: None, reply: tx }
+        Request {
+            id,
+            node,
+            label: 0,
+            arrive_us,
+            deadline_us,
+            fanout_cap: None,
+            reply: tx,
+        }
     }
 
     fn ids(batch: &[Request]) -> Vec<u64> {

@@ -23,13 +23,15 @@
 //! The single-device path is simply `shards = 1`: one plan owning every
 //! community, one channel, one cache — not a separate code path.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver};
 use std::sync::Mutex;
 use std::time::Duration;
 
 use anyhow::{Context, Result};
 
+use crate::ckpt::{self, ParamStore};
 use crate::config::DatasetPreset;
 use crate::graph::Dataset;
 use crate::runtime::artifact::{default_dir, ArtifactMeta, Manifest, SpecMeta};
@@ -47,7 +49,7 @@ use super::shard::{
     route_batch, ShardPlan, ShardReport, ShardStatsCell, SpillPolicy,
 };
 use super::worker::{
-    shard_worker_loop, InferExecutor, NullExecutor, PjrtExecutor, WorkerCtx,
+    shard_worker_loop, HostExecutor, InferExecutor, PjrtExecutor, WorkerCtx,
 };
 use super::{Reply, Request, ServeClock};
 
@@ -83,6 +85,21 @@ pub struct ServeConfig {
     pub fanouts: Vec<usize>,
     /// Engine seed (batcher bias draws, per-worker RNG streams).
     pub seed: u64,
+    /// Checkpoint to serve (`ckpt=`): a file, or a directory whose
+    /// newest checkpoint is loaded. Validated (CRC + community
+    /// fingerprint) and installed into the executor before the clock
+    /// starts; `None` serves seed-initialized parameters.
+    pub ckpt: Option<PathBuf>,
+    /// Hot-swap watcher poll interval in ms (`watch_ms=`): when > 0
+    /// and `ckpt` is a directory, a watcher thread polls it during the
+    /// run and installs newer checkpoints between micro-batches. 0
+    /// disables watching.
+    pub ckpt_watch_ms: u64,
+    /// Pre-populate each shard's feature cache before the bench clock
+    /// starts (`cache_warm=1`): rows come from the checkpoint's
+    /// hot-node list when one is loaded, else the Zipf-hot prefix of
+    /// the popularity ranking.
+    pub cache_warm: bool,
 }
 
 impl ServeConfig {
@@ -102,6 +119,9 @@ impl ServeConfig {
             admission: AdmissionPolicy::None,
             fanouts: vec![10, 10],
             seed: 0,
+            ckpt: None,
+            ckpt_watch_ms: 0,
+            cache_warm: false,
         }
     }
 }
@@ -111,7 +131,7 @@ impl ServeConfig {
 pub struct ServeReport {
     /// Dataset served.
     pub dataset: String,
-    /// Executor used (`pjrt` / `null`).
+    /// Executor used (`pjrt` / `host` / `null`).
     pub executor: String,
     /// Community-bias knob value.
     pub community_bias: f64,
@@ -132,6 +152,18 @@ pub struct ServeReport {
     pub shed_rate: f64,
     /// Requests admitted with degraded (capped) fanout.
     pub degraded: usize,
+    /// Completed, non-error replies that carried logits — the accuracy
+    /// denominator (0 under the no-op executor).
+    pub evaluated: usize,
+    /// Top-1 accuracy over `evaluated` replies, scored against the
+    /// ground-truth labels the requests carried (0 when nothing was
+    /// evaluated).
+    pub accuracy: f64,
+    /// Highest parameter version any shard served a batch with
+    /// (0 = seed parameters throughout).
+    pub param_version: u64,
+    /// Hot swaps observed, summed over shards.
+    pub swaps: usize,
     /// Serving wall time, seconds.
     pub wall_s: f64,
     /// Completed requests per second of wall time.
@@ -187,6 +219,10 @@ impl ServeReport {
             ("shed", num(self.shed as f64)),
             ("shed_rate", num(self.shed_rate)),
             ("degraded", num(self.degraded as f64)),
+            ("evaluated", num(self.evaluated as f64)),
+            ("accuracy", num(self.accuracy)),
+            ("param_version", num(self.param_version as f64)),
+            ("swaps", num(self.swaps as f64)),
             ("wall_s", num(self.wall_s)),
             ("throughput_rps", num(self.throughput_rps)),
             ("lat_mean_ms", num(self.lat_mean_ms)),
@@ -219,12 +255,17 @@ impl ServeReport {
 
     /// One-line human summary printed by `serve bench` and `exp serve`.
     pub fn summary(&self) -> String {
+        let acc = if self.evaluated > 0 {
+            format!("{:.1}% ({})", self.accuracy * 100.0, self.evaluated)
+        } else {
+            "n/a".to_string()
+        };
         format!(
             "[serve] {} exec={} p={:.2} shards={} spill={} arrival={} \
-             admission={}: {} req in {:.2}s = {:.0} req/s | lat ms p50 \
-             {:.2} p95 {:.2} p99 {:.2} | miss-deadline {:.1}% | shed \
-             {} ({:.1}%) degraded {} | cache hit {:.1}% | {:.1} \
-             req/batch | foreign {}",
+             admission={}: {} req in {:.2}s = {:.0} req/s | acc {} | \
+             params v{} swaps {} | lat ms p50 {:.2} p95 {:.2} p99 {:.2} \
+             | miss-deadline {:.1}% | shed {} ({:.1}%) degraded {} | \
+             cache hit {:.1}% | {:.1} req/batch | foreign {}",
             self.dataset,
             self.executor,
             self.community_bias,
@@ -235,6 +276,9 @@ impl ServeReport {
             self.requests,
             self.wall_s,
             self.throughput_rps,
+            acc,
+            self.param_version,
+            self.swaps,
             self.lat_p50_ms,
             self.lat_p95_ms,
             self.lat_p99_ms,
@@ -291,9 +335,11 @@ pub fn synthetic_infer_meta(
 
 /// Build the best available executor for a preset: the compiled
 /// `<artifact>.infer` PJRT executable when artifacts (and a real PJRT)
-/// exist, otherwise the no-op executor with a synthetic spec. Returns
-/// the executor plus the batch spec the workers should assemble
-/// against.
+/// exist, otherwise the pure-rust host reference executor with a
+/// synthetic spec — which still produces real logits, so `serve bench`
+/// reports true top-1 accuracy (and can load host-model checkpoints)
+/// in artifact-less environments. Returns the executor plus the batch
+/// spec the workers should assemble against.
 pub fn build_executor(
     preset: &DatasetPreset,
     ds: &Dataset,
@@ -306,11 +352,11 @@ pub fn build_executor(
         }
         Err(e) => {
             eprintln!(
-                "[serve] PJRT unavailable ({e:#}); \
-                 using no-op executor (queue/coalesce/cache/assemble only)"
+                "[serve] PJRT unavailable ({e:#}); using the host \
+                 reference executor (real logits, pure rust)"
             );
             (
-                Box::new(NullExecutor { num_classes: ds.num_classes }),
+                Box::new(HostExecutor::new(ds, cfg.seed)),
                 synthetic_infer_meta(ds, cfg.batch_size, &cfg.fanouts),
             )
         }
@@ -390,10 +436,82 @@ pub fn run(
         0.3,
     );
 
+    // ---- trained parameters (ckpt=) ----
+    // Load + fence-validate the checkpoint and install it into the
+    // executor before any request is served; the watcher (below) keeps
+    // installing newer versions during the run. The store assigns the
+    // monotone version numbers the per-shard swap counters observe.
+    let store = ParamStore::new();
+    if let Some(ckpt_path) = &scfg.ckpt {
+        let (file, ck) = ckpt::resolve_checkpoint(ckpt_path)?;
+        ck.validate_against(&ds.community, ds.num_comms)?;
+        if ck.meta.dataset != ds.name {
+            eprintln!(
+                "[serve] warning: checkpoint was trained on {:?}, serving \
+                 {:?} (fingerprint matches, proceeding)",
+                ck.meta.dataset, ds.name
+            );
+        }
+        let info = (ck.meta.epoch, ck.meta.val_acc);
+        let v = store.publish(ck, file.clone());
+        exec.try_install(&v).with_context(|| {
+            format!("installing checkpoint {}", file.display())
+        })?;
+        println!(
+            "[serve] installed checkpoint {} (epoch {}, val acc {:.4}) \
+             as param version {}",
+            file.display(),
+            info.0,
+            info.1,
+            v.version
+        );
+    }
+    let watch_dir = match &scfg.ckpt {
+        Some(p) if scfg.ckpt_watch_ms > 0 && p.is_dir() => Some(p.clone()),
+        _ => None,
+    };
+    let watch_stop = AtomicBool::new(false);
+
     // popularity ranking: rank -> node, via a seeded shuffle so hot
     // nodes scatter across communities
     let perm = loadgen::popularity_perm(ds.n(), lcfg.seed);
     let zipf = loadgen::ZipfSampler::new(ds.n(), lcfg.zipf_s);
+
+    // ---- cache warmup (cache_warm=1) ----
+    // Fill each shard's feature cache with its share of the hot set —
+    // the checkpoint's hot-node list when one is loaded, else the
+    // Zipf-hot prefix of the popularity ranking — then zero the
+    // counters so warmup traffic never pollutes the reported hit rate.
+    if scfg.cache_warm {
+        let hot: Vec<u32> = match store.current() {
+            Some(v) if !v.meta.hot_nodes.is_empty() => {
+                v.meta.hot_nodes.clone()
+            }
+            _ => perm.clone(),
+        };
+        let mut filled = vec![0usize; n_shards];
+        let mut buf = vec![0f32; ds.feat_dim];
+        let mut warmed = 0usize;
+        for &v in &hot {
+            if (v as usize) >= ds.n() {
+                continue; // stale hot list from another geometry
+            }
+            let sid = plan.shard_of_node(&ds.community, v);
+            if filled[sid] >= caches[sid].rows() {
+                continue;
+            }
+            caches[sid].fetch(v, ds.feature_row(v), &mut buf);
+            filled[sid] += 1;
+            warmed += 1;
+            if filled.iter().zip(&caches).all(|(f, c)| *f >= c.rows()) {
+                break;
+            }
+        }
+        for c in &caches {
+            c.reset_counters();
+        }
+        println!("[serve] cache warm: staged {warmed} hot rows");
+    }
 
     // one bounded batch channel per shard; its capacity doubles as the
     // steal policy's overload threshold
@@ -423,6 +541,7 @@ pub fn run(
         lcfg,
         deadline_us: scfg.deadline_us,
         perm: &perm,
+        labels: &ds.labels,
         zipf: &zipf,
         records: &records,
         adm: &adm,
@@ -432,6 +551,31 @@ pub fn run(
     };
 
     std::thread::scope(|scope| {
+        // checkpoint-dir watcher: validate + stage new versions in the
+        // background; workers pick them up between micro-batches
+        let watcher_handle = watch_dir.as_ref().map(|dir| {
+            let loaded = store.current().map(|v| v.meta.epoch);
+            let watcher = ckpt::DirWatcher::new(dir, loaded);
+            let store = &store;
+            let community = &ds.community;
+            let num_comms = ds.num_comms;
+            let poll_ms = scfg.ckpt_watch_ms;
+            let stop = &watch_stop;
+            scope.spawn(move || {
+                ckpt::watch_loop(
+                    watcher,
+                    community,
+                    num_comms,
+                    poll_ms,
+                    stop,
+                    &|path, ck| {
+                        let v = store.publish(ck, path);
+                        exec.try_install(&v)
+                    },
+                );
+            })
+        });
+
         // batcher thread owns every shard sender; workers see their
         // channel close when it exits
         let batcher_handle = {
@@ -586,6 +730,10 @@ pub fn run(
         for h in worker_handles {
             let _ = h.join();
         }
+        watch_stop.store(true, Ordering::Relaxed);
+        if let Some(h) = watcher_handle {
+            let _ = h.join();
+        }
     });
 
     let wall_s = clock.now_us() as f64 / 1e6;
@@ -619,9 +767,14 @@ pub fn run(
         .collect();
     let misses = records.iter().filter(|r| r.deadline_missed).count();
     let errors = records.iter().filter(|r| r.error).count();
+    let evaluated = records.iter().filter(|r| r.evaluated).count();
+    let correct = records.iter().filter(|r| r.correct).count();
     let n = records.len();
     let shed = adm.total_shed();
     let nb = stats_batches.max(1);
+    let param_version =
+        shard_reports.iter().map(|sh| sh.param_version).max().unwrap_or(0);
+    let swaps: usize = shard_reports.iter().map(|sh| sh.swaps).sum();
     // keep the report finite (and its JSON parseable) on empty runs
     let pct = |p: f64| if lats_ms.is_empty() { 0.0 } else { percentile(&lats_ms, p) };
     let mean_ms = if lats_ms.is_empty() {
@@ -641,6 +794,10 @@ pub fn run(
         shed,
         shed_rate: shed as f64 / (n + shed).max(1) as f64,
         degraded: adm.total_degraded(),
+        evaluated,
+        accuracy: correct as f64 / evaluated.max(1) as f64,
+        param_version,
+        swaps,
         wall_s,
         throughput_rps: n as f64 / wall_s.max(1e-9),
         lat_mean_ms: mean_ms,
@@ -666,6 +823,7 @@ pub fn run(
 mod tests {
     use super::*;
     use crate::config::preset;
+    use crate::serve::worker::NullExecutor;
 
     fn tiny() -> Dataset {
         crate::train::dataset::build(&preset("tiny").unwrap(), true)
@@ -836,6 +994,76 @@ mod tests {
         assert_eq!(rep.shed, 0);
         assert_eq!(rep.errors, 0);
         assert_eq!(rep.admission, "degrade");
+    }
+
+    /// The host reference executor end to end: every completed request
+    /// carries real logits (evaluated == requests), accuracy is a
+    /// well-formed fraction, and with no checkpoint loaded the served
+    /// parameter version stays 0.
+    #[test]
+    fn host_executor_reports_real_accuracy() {
+        let ds = tiny();
+        let mut scfg = ServeConfig::for_dataset(&ds);
+        scfg.batch_size = 16;
+        scfg.workers = 2;
+        scfg.fanouts = vec![5, 5];
+        scfg.cache_warm = true;
+        let meta = synthetic_infer_meta(&ds, scfg.batch_size, &scfg.fanouts);
+        let exec = super::super::worker::HostExecutor::new(&ds, 0);
+        let lcfg = closed(4, 25, 3);
+        let rep = run(&ds, &meta, &exec, &scfg, &lcfg).unwrap();
+        assert_eq!(rep.requests, 100);
+        assert_eq!(rep.errors, 0);
+        assert_eq!(rep.executor, "host");
+        assert_eq!(
+            rep.evaluated, 100,
+            "host executor must produce logits for every reply"
+        );
+        assert!((0.0..=1.0).contains(&rep.accuracy));
+        assert_eq!(rep.param_version, 0, "no checkpoint loaded");
+        assert_eq!(rep.swaps, 0);
+        let j = rep.to_json().to_string_pretty();
+        assert!(j.contains("accuracy"));
+        assert!(j.contains("param_version"));
+    }
+
+    /// `ckpt=` pointing at the no-op executor is a startup error, not a
+    /// silent seed-accuracy run.
+    #[test]
+    fn null_executor_with_ckpt_errors_at_startup() {
+        use crate::ckpt::{Checkpoint, CkptMeta};
+        let ds = tiny();
+        let dir = std::env::temp_dir()
+            .join(format!("comm_rand_engine_ck_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        let meta_ck = CkptMeta::for_run(
+            &ds,
+            "host-sgc",
+            "t",
+            0,
+            crate::runtime::host::param_shapes(ds.feat_dim, ds.num_classes),
+        );
+        let params = crate::runtime::host::init_params(
+            ds.feat_dim,
+            ds.num_classes,
+            1,
+        );
+        let file = dir.join("ckpt-e00000.bin");
+        Checkpoint::new(meta_ck, params).unwrap().write_atomic(&file).unwrap();
+
+        let mut scfg = ServeConfig::for_dataset(&ds);
+        scfg.fanouts = vec![5, 5];
+        scfg.ckpt = Some(file);
+        let meta = synthetic_infer_meta(&ds, scfg.batch_size, &scfg.fanouts);
+        let exec = NullExecutor { num_classes: ds.num_classes };
+        let lcfg = closed(1, 5, 3);
+        let err = run(&ds, &meta, &exec, &scfg, &lcfg).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("install"),
+            "expected install failure, got: {err:#}"
+        );
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

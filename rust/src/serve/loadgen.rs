@@ -32,6 +32,7 @@ use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
+use crate::runtime::host::top1;
 use crate::util::rng::Rng;
 
 use super::admission::{AdmissionController, AdmissionPolicy, AdmitDecision};
@@ -115,6 +116,21 @@ pub struct ReqRecord {
     /// The reply carried an executor error (its latency is excluded
     /// from the report's percentiles).
     pub error: bool,
+    /// The reply carried logits, so it counts toward accuracy (false
+    /// for error replies and for the no-op executor's empty logits).
+    pub evaluated: bool,
+    /// Top-1 prediction matched the request's ground-truth label
+    /// (only meaningful when `evaluated`).
+    pub correct: bool,
+}
+
+/// Score one reply for the accuracy columns: a reply is `evaluated`
+/// when it carries logits and no error, and `correct` when the argmax
+/// matches the ground-truth label the request carried through.
+fn score_reply(rep: &Reply) -> (bool, bool) {
+    let evaluated = !rep.error && !rep.logits.is_empty();
+    let correct = evaluated && top1(&rep.logits) == rep.label as usize;
+    (evaluated, correct)
 }
 
 /// Everything a load-generator thread needs, shared by reference
@@ -130,6 +146,9 @@ pub struct ClientCtx<'a> {
     pub deadline_us: u64,
     /// Rank → node popularity permutation ([`popularity_perm`]).
     pub perm: &'a [u32],
+    /// Ground-truth labels (node id → label), attached to every
+    /// request so accuracy is scored on real labels.
+    pub labels: &'a [u16],
     /// Shared Zipf sampler over popularity ranks.
     pub zipf: &'a ZipfSampler,
     /// Sink for completion records.
@@ -245,6 +264,7 @@ pub fn client_loop(client_id: u64, ctx: &ClientCtx<'_>) {
         let req = Request {
             id: (client_id << 32) | k as u64,
             node,
+            label: ctx.labels[node as usize],
             arrive_us,
             deadline_us,
             fanout_cap,
@@ -257,10 +277,13 @@ pub fn client_loop(client_id: u64, ctx: &ClientCtx<'_>) {
         // stamp latency at batch completion (the reply's timestamp),
         // exactly like the open-loop collector and the per-shard
         // percentiles — both loops report the same quantity
+        let (evaluated, correct) = score_reply(&reply);
         let rec = ReqRecord {
             latency_us: reply.finish_us.saturating_sub(arrive_us),
             deadline_missed: reply.finish_us > deadline_us,
             error: reply.error,
+            evaluated,
+            correct,
         };
         ctx.records.lock().unwrap().push(rec);
     }
@@ -293,6 +316,7 @@ pub fn open_loop_client(
         let req = Request {
             id: (client_id << 32) | k as u64,
             node,
+            label: ctx.labels[node as usize],
             arrive_us,
             deadline_us,
             fanout_cap: None,
@@ -329,10 +353,13 @@ pub fn collector_loop(
 ) {
     while let Ok(rep) = rx.recv() {
         let latency_us = rep.finish_us.saturating_sub(rep.arrive_us);
+        let (evaluated, correct) = score_reply(&rep);
         let rec = ReqRecord {
             latency_us,
             deadline_missed: latency_us > deadline_us,
             error: rep.error,
+            evaluated,
+            correct,
         };
         records.lock().unwrap().push(rec);
     }

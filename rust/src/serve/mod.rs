@@ -18,9 +18,15 @@
 //! partitioned across `n_shards` logical devices; strict/steal/
 //! broadcast spill for cross-shard batches) → per-shard [`worker`]
 //! pools (sampling + cache-fed assembly + the PJRT infer executable,
-//! or a no-op executor when AOT artifacts are absent) → per-request
-//! replies. Each shard owns its own feature cache, so under strict
-//! spill a shard's cache only ever sees its own communities.
+//! or the pure-rust host reference executor when AOT artifacts are
+//! absent) → per-request replies. Each shard owns its own feature
+//! cache, so under strict spill a shard's cache only ever sees its
+//! own communities. Trained parameters arrive via the checkpoint
+//! subsystem ([`crate::ckpt`]): `ckpt=` installs a validated
+//! checkpoint before the clock starts (real top-1 accuracy in the
+//! report), and `watch_ms=` hot-swaps newer checkpoints in mid-run
+//! between micro-batches — zero dropped requests, per-shard
+//! `param_version`/`swaps` counters.
 //!
 //! [`loadgen`] drives the load two ways: a **closed loop** (each Zipf
 //! client blocks on its reply, so offered load adapts to capacity) and
@@ -52,7 +58,9 @@ pub use engine::{run, ServeConfig, ServeReport};
 pub use loadgen::{Arrival, LoadConfig};
 pub use queue::RequestQueue;
 pub use shard::{ShardPlan, ShardReport, SpillPolicy};
-pub use worker::{InferExecutor, NullExecutor, PjrtExecutor};
+pub use worker::{
+    HostExecutor, InferExecutor, InferOut, NullExecutor, PjrtExecutor,
+};
 
 use std::time::Instant;
 
@@ -62,6 +70,10 @@ pub struct Request {
     pub id: u64,
     /// Global node id to classify.
     pub node: u32,
+    /// Ground-truth label of `node`, carried through to the reply so
+    /// the load generator can score top-1 accuracy on real labels
+    /// without a side lookup.
+    pub label: u16,
     /// [`ServeClock`] microseconds at enqueue time.
     pub arrive_us: u64,
     /// Absolute completion deadline, same clock.
@@ -81,6 +93,9 @@ pub struct Reply {
     pub id: u64,
     /// The node that was classified.
     pub node: u32,
+    /// Ground-truth label (copied from the request) — compare against
+    /// the logits' argmax for top-1 accuracy.
+    pub label: u16,
     /// Logits row for `node` (empty under the no-op executor).
     pub logits: Vec<f32>,
     /// [`ServeClock`] microseconds the request was enqueued (copied

@@ -242,6 +242,19 @@ pub struct ShardStatsCell {
     pub input_nodes: usize,
     /// Max queued batches observed on this shard's channel.
     pub queue_depth_max: usize,
+    /// Highest parameter version any batch on this shard was served
+    /// with (0 = seed parameters). Monotone by construction.
+    pub param_version: u64,
+    /// Whether any batch has recorded a version yet.
+    pub seen_version: bool,
+    /// Hot swaps observed: upward transitions of `param_version`.
+    pub swaps: usize,
+    /// Batches that completed carrying a version *older* than the
+    /// shard's maximum. 0 whenever the shard's batches are serialized
+    /// (one worker per shard — the reload tests assert this); with
+    /// several workers it can also count benign in-flight overlap at
+    /// the swap instant, never a rolled-back report.
+    pub version_regressions: usize,
     /// Per-request completion latency, µs (error replies excluded, so
     /// per-shard percentiles share the global report's definition).
     pub lat_us: Vec<u64>,
@@ -270,6 +283,19 @@ pub struct ShardReport {
     pub batches: usize,
     /// Max queued batches observed on this shard's channel.
     pub queue_depth_max: usize,
+    /// Highest parameter version this shard served a batch with
+    /// (0 = seed parameters; bumps when a checkpoint hot-swaps in).
+    /// Monotone: a pre-swap batch finishing late cannot roll it back.
+    pub param_version: u64,
+    /// Hot swaps this shard's workers observed (upward version
+    /// transitions between micro-batches).
+    pub swaps: usize,
+    /// Completions carrying a version older than the shard's maximum.
+    /// Exactly 0 when the shard runs one worker (batches serialized —
+    /// the reload integration test asserts monotonicity through
+    /// this); with several workers per shard a nonzero value can also
+    /// reflect benign in-flight overlap at the swap instant.
+    pub version_regressions: usize,
     /// Final EWMA micro-batch service-time estimate, µs (0 before any
     /// sample).
     pub est_service_us: f64,
@@ -312,6 +338,9 @@ impl ShardReport {
             degraded: adm.shard_degraded(id),
             batches: cell.batches,
             queue_depth_max: cell.queue_depth_max,
+            param_version: cell.param_version,
+            swaps: cell.swaps,
+            version_regressions: cell.version_regressions,
             est_service_us: adm.est_service_us(id).unwrap_or(0.0),
             lat_p50_ms: pct(50.0),
             lat_p95_ms: pct(95.0),
@@ -334,6 +363,9 @@ impl ShardReport {
             ("degraded", num(self.degraded as f64)),
             ("batches", num(self.batches as f64)),
             ("queue_depth_max", num(self.queue_depth_max as f64)),
+            ("param_version", num(self.param_version as f64)),
+            ("swaps", num(self.swaps as f64)),
+            ("version_regressions", num(self.version_regressions as f64)),
             ("est_service_us", num(self.est_service_us)),
             ("lat_p50_ms", num(self.lat_p50_ms)),
             ("lat_p95_ms", num(self.lat_p95_ms)),
@@ -355,6 +387,7 @@ mod tests {
         Request {
             id,
             node,
+            label: 0,
             arrive_us: 0,
             deadline_us: 1_000_000,
             fanout_cap: None,

@@ -5,9 +5,20 @@
 //!
 //! The executable is abstracted behind [`InferExecutor`] so the whole
 //! pipeline (queue → coalesce → cache → assemble) runs end-to-end even
-//! when no AOT artifacts exist: [`NullExecutor`] skips the PJRT call
-//! and returns empty logits, [`PjrtExecutor`] wraps a compiled
-//! [`InferState`].
+//! when no AOT artifacts exist: [`NullExecutor`] skips the model call
+//! and returns empty logits, [`HostExecutor`] runs the pure-rust
+//! SGC reference model ([`crate::runtime::host`]) so accuracy is real
+//! without PJRT, and [`PjrtExecutor`] wraps a compiled [`InferState`].
+//!
+//! **Hot swap** happens at this layer's seams: the engine (startup
+//! load or the checkpoint watcher) pushes a validated
+//! [`ParamVersion`] through [`InferExecutor::try_install`]; executors
+//! stash it behind a mutex and every [`InferExecutor::infer`] call —
+//! i.e. every micro-batch — picks up whatever version is installed at
+//! that moment. Workers never pause: a batch runs either entirely on
+//! the old version or entirely on the new one, and each reply's batch
+//! reports the version it was computed with ([`InferOut`]), which
+//! feeds the per-shard `param_version` / `swaps` counters.
 //!
 //! Two admission-control hooks live here: the per-batch service time
 //! each worker measures feeds the [`AdmissionController`]'s per-shard
@@ -18,13 +29,15 @@
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::Receiver;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::batch::assemble;
+use crate::ckpt::ParamVersion;
 use crate::graph::Dataset;
 use crate::runtime::artifact::ArtifactMeta;
+use crate::runtime::host;
 use crate::runtime::InferState;
 use crate::sampler::{build_mfg, NeighborPolicy};
 use crate::util::rng::Rng;
@@ -34,21 +47,44 @@ use super::cache::ShardedFeatureCache;
 use super::shard::{ShardPlan, ShardStatsCell};
 use super::{Reply, Request, ServeClock};
 
+/// Result of one executor call: the logits plus the parameter version
+/// they were computed with (0 = seed/initial parameters, >0 = the
+/// store version of an installed checkpoint).
+pub struct InferOut {
+    /// Logits, `num_classes` per root row (empty under [`NullExecutor`]).
+    pub logits: Vec<f32>,
+    /// Parameter version used for this batch.
+    pub param_version: u64,
+}
+
 /// Inference backend driven by the worker pool.
 pub trait InferExecutor: Send + Sync {
-    /// Short name for reports (`pjrt` / `null`).
+    /// Short name for reports (`pjrt` / `host` / `null`).
     fn name(&self) -> &str;
 
     /// Logit columns per root row.
     fn num_classes(&self) -> usize;
 
-    /// Returns logits `[batch_cap * num_classes]`, or an empty vector
-    /// for a no-op backend.
-    fn infer(&self, batch: &crate::batch::PaddedBatch) -> Result<Vec<f32>>;
+    /// Run one micro-batch; returns logits plus the parameter version
+    /// they were computed with.
+    fn infer(&self, batch: &crate::batch::PaddedBatch) -> Result<InferOut>;
+
+    /// Atomically install a published parameter version; subsequent
+    /// [`InferExecutor::infer`] calls (micro-batch boundaries) use it.
+    /// The default refuses — a backend with no parameters (the no-op
+    /// executor) cannot serve a checkpoint, and the engine surfaces
+    /// that at startup rather than silently reporting seed accuracy.
+    fn try_install(&self, version: &Arc<ParamVersion>) -> Result<()> {
+        let _ = version;
+        bail!(
+            "executor {:?} cannot install checkpoint parameters",
+            self.name()
+        )
+    }
 }
 
-/// No-op backend for artifact-less environments: exercises everything
-/// up to (and including) batch assembly, returns empty logits.
+/// No-op backend for pipeline-only benchmarks: exercises everything up
+/// to (and including) batch assembly, returns empty logits.
 pub struct NullExecutor {
     /// Logit columns the (absent) model would produce.
     pub num_classes: usize,
@@ -63,23 +99,103 @@ impl InferExecutor for NullExecutor {
         self.num_classes
     }
 
-    fn infer(&self, _batch: &crate::batch::PaddedBatch) -> Result<Vec<f32>> {
-        Ok(Vec::new())
+    fn infer(&self, _batch: &crate::batch::PaddedBatch) -> Result<InferOut> {
+        Ok(InferOut { logits: Vec::new(), param_version: 0 })
+    }
+}
+
+/// Pure-rust reference backend: the SGC-style host model over 1-hop
+/// smoothed features ([`crate::runtime::host`]). Real logits — and
+/// therefore real top-1 accuracy — with no artifacts and no PJRT, and
+/// the default artifact-less executor since the checkpoint subsystem
+/// landed. Parameters hot-swap via [`InferExecutor::try_install`].
+pub struct HostExecutor {
+    /// 1-hop aggregated feature table (`n * feat_dim`), built once.
+    agg: Vec<f32>,
+    feat_dim: usize,
+    num_classes: usize,
+    /// Installed parameters + their version (0 = seed init).
+    cur: Mutex<InstalledParams>,
+}
+
+/// A host executor's installed parameter snapshot and its version.
+type InstalledParams = (Arc<Vec<Vec<f32>>>, u64);
+
+impl HostExecutor {
+    /// Build the aggregation table and seed-initialize parameters
+    /// (version 0) — `seed` matches the host trainer's init stream, so
+    /// an untrained serving run reports true "seed parameter" accuracy.
+    pub fn new(ds: &Dataset, seed: u64) -> HostExecutor {
+        HostExecutor {
+            agg: host::aggregate_table(ds),
+            feat_dim: ds.feat_dim,
+            num_classes: ds.num_classes,
+            cur: Mutex::new((
+                Arc::new(host::init_params(ds.feat_dim, ds.num_classes, seed)),
+                0,
+            )),
+        }
+    }
+
+    /// The installed parameter version (0 until a checkpoint lands).
+    pub fn param_version(&self) -> u64 {
+        self.cur.lock().unwrap().1
+    }
+}
+
+impl InferExecutor for HostExecutor {
+    fn name(&self) -> &str {
+        "host"
+    }
+
+    fn num_classes(&self) -> usize {
+        self.num_classes
+    }
+
+    fn infer(&self, batch: &crate::batch::PaddedBatch) -> Result<InferOut> {
+        // snapshot the installed version: the whole batch runs on it
+        let (params, version) = {
+            let g = self.cur.lock().unwrap();
+            (g.0.clone(), g.1)
+        };
+        let c = self.num_classes;
+        let f = self.feat_dim;
+        let mut logits = vec![0f32; batch.roots.len() * c];
+        for (i, &v) in batch.roots.iter().enumerate() {
+            let feat = &self.agg[v as usize * f..(v as usize + 1) * f];
+            host::logits_into(&params, feat, &mut logits[i * c..(i + 1) * c]);
+        }
+        Ok(InferOut { logits, param_version: version })
+    }
+
+    fn try_install(&self, version: &Arc<ParamVersion>) -> Result<()> {
+        host::check_params(&version.params, self.feat_dim, self.num_classes)?;
+        let mut g = self.cur.lock().unwrap();
+        *g = (Arc::new(version.params.clone()), version.version);
+        Ok(())
     }
 }
 
 /// PJRT-backed executor over a compiled `<name>.infer` artifact. The
 /// state is mutex-guarded: PJRT CPU execution is serialized across
-/// workers (sampling/assembly still overlap it).
+/// workers (sampling/assembly still overlap it). Checkpoints install
+/// through [`InferState::set_params`], which validates tensor count
+/// and shapes against the artifact's param specs.
 pub struct PjrtExecutor {
     state: Mutex<InferState>,
     num_classes: usize,
+    /// Version of the installed parameters (0 = seed init).
+    installed: std::sync::atomic::AtomicU64,
 }
 
 impl PjrtExecutor {
     /// Wrap a compiled infer state producing `num_classes` logits.
     pub fn new(state: InferState, num_classes: usize) -> PjrtExecutor {
-        PjrtExecutor { state: Mutex::new(state), num_classes }
+        PjrtExecutor {
+            state: Mutex::new(state),
+            num_classes,
+            installed: std::sync::atomic::AtomicU64::new(0),
+        }
     }
 }
 
@@ -92,8 +208,20 @@ impl InferExecutor for PjrtExecutor {
         self.num_classes
     }
 
-    fn infer(&self, batch: &crate::batch::PaddedBatch) -> Result<Vec<f32>> {
-        self.state.lock().unwrap().infer(batch)
+    fn infer(&self, batch: &crate::batch::PaddedBatch) -> Result<InferOut> {
+        // the state lock spans the whole call, so the version read
+        // under it is exactly the one the executable ran with
+        let g = self.state.lock().unwrap();
+        let logits = g.infer(batch)?;
+        let param_version = self.installed.load(Ordering::Acquire);
+        Ok(InferOut { logits, param_version })
+    }
+
+    fn try_install(&self, version: &Arc<ParamVersion>) -> Result<()> {
+        let mut g = self.state.lock().unwrap();
+        g.set_params(version.params.clone())?;
+        self.installed.store(version.version, Ordering::Release);
+        Ok(())
     }
 }
 
@@ -105,7 +233,7 @@ pub struct WorkerCtx<'a> {
     pub meta: &'a ArtifactMeta,
     /// This shard's feature cache.
     pub cache: &'a ShardedFeatureCache,
-    /// Inference backend (PJRT or no-op).
+    /// Inference backend (PJRT, host reference, or no-op).
     pub exec: &'a dyn InferExecutor,
     /// The run's shared monotonic clock.
     pub clock: &'a ServeClock,
@@ -123,6 +251,9 @@ pub struct BatchOutcome {
     /// Requests answered with an error reply (executor failure is
     /// all-or-nothing per batch: 0 or `requests`).
     pub errors: usize,
+    /// Parameter version the batch was served with (meaningful only
+    /// when `errors == 0`).
+    pub param_version: u64,
 }
 
 /// One shard worker: drain the shard's batch channel until it closes,
@@ -135,7 +266,11 @@ pub struct BatchOutcome {
 /// requests whose community this shard does not own — the affinity
 /// violation metric that is zero by construction under strict spill.
 /// Each processed batch's wall service time is folded into `adm`'s
-/// per-shard EWMA — the estimate admission decisions run on.
+/// per-shard EWMA — the estimate admission decisions run on. The
+/// batch's parameter version feeds the shard's hot-swap counters:
+/// `param_version` (latest observed), `swaps` (version changes seen)
+/// and `version_regressions` (observed version going backwards —
+/// always 0 unless the swap path is broken).
 #[allow(clippy::too_many_arguments)]
 pub fn shard_worker_loop(
     ctx: &WorkerCtx<'_>,
@@ -168,11 +303,30 @@ pub fn shard_worker_loop(
         g.foreign_requests += foreign;
         g.input_nodes += out.input_nodes;
         g.queue_depth_max = g.queue_depth_max.max(d);
-        // error replies stay out of the latency samples, matching the
-        // engine's global percentile definition
         if out.errors == 0 {
+            // error replies stay out of the latency samples, matching
+            // the engine's global percentile definition
             g.lat_us
                 .extend(arrives.iter().map(|&a| now.saturating_sub(a)));
+            // hot-swap accounting. `param_version` tracks the highest
+            // version served (monotone by construction, so a batch
+            // that started pre-swap and finished late can never roll
+            // the reported version back), `swaps` counts upward
+            // transitions of that maximum, and a completion carrying
+            // an *older* version than the maximum counts as a
+            // regression — guaranteed 0 when the shard's batches are
+            // serialized (one worker); with several workers per shard
+            // it can also capture benign in-flight overlap at the
+            // exact swap instant (see ShardReport docs).
+            if !g.seen_version {
+                g.param_version = out.param_version;
+                g.seen_version = true;
+            } else if out.param_version > g.param_version {
+                g.swaps += 1;
+                g.param_version = out.param_version;
+            } else if out.param_version < g.param_version {
+                g.version_regressions += 1;
+            }
         }
     }
 }
@@ -229,7 +383,7 @@ pub fn process_batch(
         ctx.cache.fetch(v, ds.feature_row(v), &mut staged[i * f..(i + 1) * f]);
     }
 
-    let result: Result<Vec<f32>> =
+    let result: Result<InferOut> =
         assemble(&mfg, ds, ctx.meta, false).and_then(|mut batch| {
             if let Some(x0) = batch.x0.as_mut() {
                 // staged-mode artifact: serve the executable from the
@@ -243,11 +397,14 @@ pub fn process_batch(
         requests: reqs.len(),
         input_nodes: input.len(),
         errors: 0,
+        param_version: 0,
     };
     let now = ctx.clock.now_us();
     let bsz = reqs.len();
     match result {
-        Ok(logits) => {
+        Ok(out) => {
+            outcome.param_version = out.param_version;
+            let logits = out.logits;
             let nc = ctx.exec.num_classes().max(1);
             for r in reqs {
                 let row = if logits.is_empty() {
@@ -260,6 +417,7 @@ pub fn process_batch(
                 let _ = r.reply.send(Reply {
                     id: r.id,
                     node: r.node,
+                    label: r.label,
                     logits: row,
                     arrive_us: r.arrive_us,
                     finish_us: now,
@@ -274,6 +432,7 @@ pub fn process_batch(
                 let _ = r.reply.send(Reply {
                     id: r.id,
                     node: r.node,
+                    label: r.label,
                     logits: Vec::new(),
                     arrive_us: r.arrive_us,
                     finish_us: now,
@@ -290,14 +449,36 @@ pub fn process_batch(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::ckpt::{Checkpoint, CkptMeta, ParamStore};
     use crate::config::preset;
     use crate::serve::cache::FeatureCacheConfig;
     use crate::serve::engine::synthetic_infer_meta;
     use std::sync::mpsc;
 
+    fn tiny() -> Dataset {
+        crate::train::dataset::build(&preset("tiny").unwrap(), true)
+    }
+
+    fn mk_req(
+        id: u64,
+        node: u32,
+        label: u16,
+        tx: &mpsc::Sender<Reply>,
+    ) -> Request {
+        Request {
+            id,
+            node,
+            label,
+            arrive_us: 0,
+            deadline_us: 1_000_000,
+            fanout_cap: None,
+            reply: tx.clone(),
+        }
+    }
+
     #[test]
     fn process_batch_replies_to_every_request() {
-        let ds = crate::train::dataset::build(&preset("tiny").unwrap(), true);
+        let ds = tiny();
         let meta = synthetic_infer_meta(&ds, 8, &[5, 5]);
         let cache = ShardedFeatureCache::new(&FeatureCacheConfig::for_dataset(
             ds.n(),
@@ -316,14 +497,7 @@ mod tests {
         // includes a duplicate node: both requests must be answered
         let reqs: Vec<Request> = [(1u64, 3u32), (2, 7), (3, 3)]
             .iter()
-            .map(|&(id, node)| Request {
-                id,
-                node,
-                arrive_us: 0,
-                deadline_us: 1_000_000,
-                fanout_cap: None,
-                reply: tx.clone(),
-            })
+            .map(|&(id, node)| mk_req(id, node, ds.labels[node as usize], &tx))
             .collect();
         let mut rng = Rng::new(5);
         let out = process_batch(&ctx, reqs, &mut rng);
@@ -337,6 +511,10 @@ mod tests {
         ids.sort_unstable();
         assert_eq!(ids, vec![1, 2, 3]);
         assert!(replies.iter().all(|r| !r.error && r.batch_size == 3));
+        // ground-truth labels ride the reply for accuracy accounting
+        for r in &replies {
+            assert_eq!(r.label, ds.labels[r.node as usize]);
+        }
     }
 
     /// A degraded rider caps the whole batch's sampling fanout: the
@@ -344,7 +522,7 @@ mod tests {
     /// and every request is still answered without error.
     #[test]
     fn degraded_fanout_cap_shrinks_the_frontier() {
-        let ds = crate::train::dataset::build(&preset("tiny").unwrap(), true);
+        let ds = tiny();
         let meta = synthetic_infer_meta(&ds, 8, &[8, 8]);
         let cache = ShardedFeatureCache::new(&FeatureCacheConfig::for_dataset(
             ds.n(),
@@ -365,14 +543,13 @@ mod tests {
             let reqs: Vec<Request> = nodes
                 .iter()
                 .enumerate()
-                .map(|(i, &node)| Request {
-                    id: i as u64,
-                    node,
-                    arrive_us: 0,
-                    deadline_us: 1_000_000,
+                .map(|(i, &node)| {
+                    let mut r = mk_req(i as u64, node, 0, &tx);
                     // one degraded rider is enough to cap the batch
-                    fanout_cap: if i == 0 { caps.clone() } else { None },
-                    reply: tx.clone(),
+                    if i == 0 {
+                        r.fanout_cap = caps.clone();
+                    }
+                    r
                 })
                 .collect();
             let mut rng = Rng::new(9);
@@ -393,5 +570,92 @@ mod tests {
             degraded.input_nodes,
             full.input_nodes
         );
+    }
+
+    /// Host executor: real logits for every root, param version 0
+    /// before any install, bumped after a checkpoint installs, and
+    /// shape-mismatched checkpoints are refused.
+    #[test]
+    fn host_executor_serves_and_hot_swaps() {
+        let ds = tiny();
+        let meta = synthetic_infer_meta(&ds, 8, &[5, 5]);
+        let cache = ShardedFeatureCache::new(&FeatureCacheConfig::for_dataset(
+            ds.n(),
+            ds.feat_dim,
+        ));
+        let exec = HostExecutor::new(&ds, 0);
+        assert_eq!(exec.param_version(), 0);
+        let clock = ServeClock::start();
+        let ctx = WorkerCtx {
+            ds: &ds,
+            meta: &meta,
+            cache: &cache,
+            exec: &exec,
+            clock: &clock,
+        };
+        let (tx, rx) = mpsc::channel();
+        let reqs =
+            vec![mk_req(1, 10, ds.labels[10], &tx), mk_req(2, 20, ds.labels[20], &tx)];
+        let mut rng = Rng::new(1);
+        let out = process_batch(&ctx, reqs, &mut rng);
+        assert_eq!(out.errors, 0);
+        assert_eq!(out.param_version, 0);
+        drop(tx);
+        let replies: Vec<Reply> = rx.iter().collect();
+        assert_eq!(replies.len(), 2);
+        for r in &replies {
+            assert_eq!(r.logits.len(), ds.num_classes, "real logits expected");
+        }
+
+        // install a trained-shape checkpoint → version bumps
+        let store = ParamStore::new();
+        let meta_ck = CkptMeta::for_run(
+            &ds,
+            "host-sgc",
+            "t",
+            0,
+            crate::runtime::host::param_shapes(ds.feat_dim, ds.num_classes),
+        );
+        let params = crate::runtime::host::init_params(
+            ds.feat_dim,
+            ds.num_classes,
+            99,
+        );
+        let ck = Checkpoint::new(meta_ck.clone(), params).unwrap();
+        let v = store.publish(ck, "mem".into());
+        exec.try_install(&v).unwrap();
+        assert_eq!(exec.param_version(), 1);
+        let (tx2, rx2) = mpsc::channel();
+        let out2 = process_batch(
+            &ctx,
+            vec![mk_req(3, 10, ds.labels[10], &tx2)],
+            &mut rng,
+        );
+        assert_eq!(out2.param_version, 1);
+        drop(tx2);
+        assert_eq!(rx2.iter().count(), 1);
+
+        // wrong shapes are refused and leave the installed version alone
+        let mut bad_meta = meta_ck;
+        bad_meta.shapes = vec![vec![3, 3]];
+        let bad =
+            Checkpoint::new(bad_meta, vec![vec![0.0; 9]]).unwrap();
+        let vbad = store.publish(bad, "mem".into());
+        assert!(exec.try_install(&vbad).is_err());
+        assert_eq!(exec.param_version(), 1);
+    }
+
+    /// The no-op executor cannot serve a checkpoint: the default
+    /// `try_install` refuses, which the engine turns into a startup
+    /// error instead of silently reporting seed accuracy.
+    #[test]
+    fn null_executor_refuses_checkpoints() {
+        let ds = tiny();
+        let exec = NullExecutor { num_classes: ds.num_classes };
+        let store = ParamStore::new();
+        let meta_ck = CkptMeta::for_run(&ds, "host-sgc", "t", 0, vec![vec![1]]);
+        let ck = Checkpoint::new(meta_ck, vec![vec![0.5]]).unwrap();
+        let v = store.publish(ck, "mem".into());
+        assert!(exec.try_install(&v).is_err());
     }
 }

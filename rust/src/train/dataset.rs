@@ -18,6 +18,7 @@ use crate::graph::{io, Dataset};
 use crate::util::rng::Rng;
 use crate::util::timer::Timer;
 
+/// Dataset cache directory: `$COMM_RAND_DATA` or `./data`.
 pub fn data_dir() -> PathBuf {
     std::env::var("COMM_RAND_DATA")
         .map(PathBuf::from)

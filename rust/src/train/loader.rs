@@ -36,6 +36,7 @@ pub enum BatchGen {
 pub struct EpochPlan {
     /// Root sets, one per batch (already policy-ordered).
     pub batch_roots: Vec<Vec<u32>>,
+    /// How each root set becomes an MFG.
     pub gen: BatchGen,
     /// Base RNG seed; per-batch streams are forked from this.
     pub seed: u64,

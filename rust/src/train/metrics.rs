@@ -3,47 +3,70 @@
 
 use crate::util::json::{arr, arr_f64, num, obj, s, Json};
 
+/// Everything measured for one training epoch.
 #[derive(Clone, Debug, Default)]
 pub struct EpochMetrics {
+    /// Epoch index (0-based).
     pub epoch: usize,
+    /// Mean training cross-entropy over the epoch's labeled roots.
     pub train_loss: f64,
+    /// Training top-1 accuracy over the epoch's labeled roots.
     pub train_acc: f64,
+    /// Sampled-validation cross-entropy after the epoch.
     pub val_loss: f64,
+    /// Sampled-validation top-1 accuracy after the epoch.
     pub val_acc: f64,
     /// Measured wall-clock (s): whole epoch / sampling / device step.
     pub wall_s: f64,
+    /// Wall-clock spent sampling/assembling (wall minus device step).
     pub sample_s: f64,
+    /// Wall-clock spent in the PJRT train step.
     pub step_s: f64,
     /// Modelled device epoch time (cachesim::timemodel).
     pub modeled_s: f64,
+    /// Modelled L2 miss rate over the epoch's feature accesses.
     pub l2_miss_rate: f64,
+    /// Software feature-cache miss rate (0 when the cache is off).
     pub sw_miss_rate: f64,
     /// Mean per-batch input feature bytes (Fig. 6 x-axis).
     pub input_bytes_mean: f64,
     /// Mean distinct labels per batch (Fig. 7 x-axis).
     pub labels_per_batch: f64,
+    /// Batches processed this epoch.
     pub batches: usize,
+    /// Learning rate in effect during the epoch.
     pub lr: f32,
 }
 
+/// Full-run training report: per-epoch trace plus run-level summary
+/// fields (what every experiment table consumes).
 #[derive(Clone, Debug)]
 pub struct TrainReport {
+    /// Dataset trained on.
     pub dataset: String,
+    /// Label of the batching policy/method.
     pub policy: String,
+    /// Run seed.
     pub seed: u64,
+    /// Per-epoch metrics, in order.
     pub epochs: Vec<EpochMetrics>,
     /// Epochs until convergence (early-stop best epoch, or max).
     pub converged_epoch: usize,
+    /// Best validation accuracy across epochs.
     pub best_val_acc: f64,
+    /// Best validation loss across epochs.
     pub best_val_loss: f64,
+    /// Whether early stopping ended the run before `max_epochs`.
     pub stopped_early: bool,
 }
 
 impl TrainReport {
+    /// Total measured wall time across epochs, seconds.
     pub fn total_wall_s(&self) -> f64 {
         self.epochs.iter().map(|e| e.wall_s).sum()
     }
 
+    /// Total modelled device time across epochs, seconds.
     pub fn total_modeled_s(&self) -> f64 {
         self.epochs.iter().map(|e| e.modeled_s).sum()
     }
@@ -57,6 +80,7 @@ impl TrainReport {
             .sum()
     }
 
+    /// Measured wall time to convergence, seconds.
     pub fn wall_to_convergence(&self) -> f64 {
         self.epochs
             .iter()
@@ -65,26 +89,31 @@ impl TrainReport {
             .sum()
     }
 
+    /// Mean modelled epoch time, seconds.
     pub fn mean_epoch_modeled_s(&self) -> f64 {
         let n = self.epochs.len().max(1);
         self.total_modeled_s() / n as f64
     }
 
+    /// Mean measured epoch wall time, seconds.
     pub fn mean_epoch_wall_s(&self) -> f64 {
         let n = self.epochs.len().max(1);
         self.total_wall_s() / n as f64
     }
 
+    /// Mean per-batch input feature bytes, averaged over epochs.
     pub fn mean_input_bytes(&self) -> f64 {
         let n = self.epochs.len().max(1);
         self.epochs.iter().map(|e| e.input_bytes_mean).sum::<f64>() / n as f64
     }
 
+    /// Mean distinct labels per batch, averaged over epochs.
     pub fn mean_labels_per_batch(&self) -> f64 {
         let n = self.epochs.len().max(1);
         self.epochs.iter().map(|e| e.labels_per_batch).sum::<f64>() / n as f64
     }
 
+    /// One-line human summary (printed by `comm-rand train`).
     pub fn summary(&self) -> String {
         format!(
             "{} [{}] seed {}: {} epochs (converged {}), best val acc {:.4}, \
@@ -101,6 +130,7 @@ impl TrainReport {
         )
     }
 
+    /// Serialize the report (the experiment harness' JSON artifact).
     pub fn to_json(&self) -> Json {
         obj(vec![
             ("dataset", s(&self.dataset)),

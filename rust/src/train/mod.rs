@@ -3,17 +3,21 @@
 //! validation, schedulers and the cache-model instrumentation.
 
 pub mod dataset;
+pub mod host;
 pub mod loader;
 pub mod metrics;
 pub mod sched;
 
+pub use host::{train_host, HostEpoch, HostTrainReport};
 pub use metrics::{EpochMetrics, TrainReport};
 
 use std::collections::HashMap;
+use std::path::PathBuf;
 
 use anyhow::Result;
 
 use crate::batch::assemble;
+use crate::ckpt::{Checkpoint, CheckpointWriter, CkptMeta, Retention};
 use crate::cachesim::lru::CacheConfig;
 use crate::cachesim::{DeviceModel, EpochCost, SetAssocCache, SoftwareCache};
 use crate::config::{BatchPolicy, TrainConfig};
@@ -30,12 +34,15 @@ use loader::{BatchGen, EpochPlan};
 /// Shares the PJRT client + manifest across runs of a sweep
 /// (compilation is seconds; steps are milliseconds).
 pub struct Session {
+    /// The PJRT runtime every run of the sweep executes on.
     pub rt: Runtime,
+    /// The artifact manifest (`artifacts/manifest.json`).
     pub manifest: Manifest,
     metas: HashMap<String, ArtifactMeta>,
 }
 
 impl Session {
+    /// Load the manifest and stand up the CPU PJRT client.
     pub fn new() -> Result<Session> {
         let manifest = Manifest::load(&default_dir())?;
         Ok(Session {
@@ -45,6 +52,7 @@ impl Session {
         })
     }
 
+    /// Cached lookup of one artifact's metadata by manifest name.
     pub fn meta(&mut self, name: &str) -> Result<ArtifactMeta> {
         if let Some(m) = self.metas.get(name) {
             return Ok(m.clone());
@@ -67,6 +75,7 @@ pub enum Method {
 }
 
 impl Method {
+    /// Human/JSON label of the variant (used in reports and tables).
     pub fn label(&self) -> String {
         match self {
             Method::CommRand(p) => p.label(),
@@ -74,6 +83,17 @@ impl Method {
             Method::ClusterGcn { q } => format!("ClusterGCN-q{q}"),
         }
     }
+}
+
+/// Training-loop checkpoint cadence (`train ckpt_dir=... ckpt_every=N`).
+#[derive(Clone, Debug)]
+pub struct CkptConfig {
+    /// Directory checkpoints are written into (created if absent).
+    pub dir: PathBuf,
+    /// Write every N epochs (1 = every epoch).
+    pub every: usize,
+    /// What stays on disk after each write (default: best + latest).
+    pub retention: Retention,
 }
 
 /// Extra evaluation knobs (cache-model variants, §6.5).
@@ -93,6 +113,8 @@ pub struct RunOptions {
     pub verbose: bool,
     /// Override the train-set size (Fig. 8's train-size sweep).
     pub train_subset: Option<usize>,
+    /// Checkpoint cadence; `None` writes nothing (the default).
+    pub ckpt: Option<CkptConfig>,
 }
 
 impl Default for RunOptions {
@@ -104,10 +126,13 @@ impl Default for RunOptions {
             workers: default_workers(),
             verbose: false,
             train_subset: None,
+            ckpt: None,
         }
     }
 }
 
+/// Default sampling-worker count: available cores minus two, clamped
+/// to `[1, 8]`.
 pub fn default_workers() -> usize {
     std::thread::available_parallelism()
         .map(|n| (n.get().saturating_sub(2)).clamp(1, 8))
@@ -121,12 +146,13 @@ pub fn run_training(
     policy: &BatchPolicy,
     cfg: &TrainConfig,
     verbose: bool,
+    ckpt: Option<CkptConfig>,
 ) -> Result<TrainReport> {
     let mut session = Session::new()?;
     let l2_base = crate::config::preset(&ds.name)
         .map(|p| p.l2_base)
         .unwrap_or(1.0);
-    let opts = RunOptions { verbose, l2_base, ..Default::default() };
+    let opts = RunOptions { verbose, l2_base, ckpt, ..Default::default() };
     train(
         &mut session,
         ds,
@@ -187,6 +213,31 @@ pub fn train(
     let mut plateau =
         sched::ReduceLrOnPlateau::new(cfg.lr, cfg.lr_factor, cfg.lr_patience);
     let mut early = sched::EarlyStop::new(cfg.patience);
+
+    // checkpoint sink (ckpt_dir= / ckpt_every=): parameter shapes come
+    // from the artifact's own param specs, so a PJRT checkpoint is
+    // re-loadable against the same artifact (set_params validates)
+    let mut ckpt_sink = match &opts.ckpt {
+        Some(cc) => {
+            let shapes: Vec<Vec<usize>> = train_meta
+                .param_specs()
+                .iter()
+                .map(|s| s.shape.clone())
+                .collect();
+            let template = CkptMeta::for_run(
+                ds,
+                &spec.model,
+                &method.label(),
+                cfg.seed,
+                shapes,
+            );
+            Some((
+                CheckpointWriter::new(&cc.dir, cc.every, cc.retention)?,
+                template,
+            ))
+        }
+        None => None,
+    };
 
     // cache models
     let mut sw_cache = opts
@@ -381,6 +432,18 @@ pub fn train(
             );
         }
         report.epochs.push(em);
+        if let Some((writer, template)) = ckpt_sink.as_mut() {
+            let mut meta = template.clone();
+            meta.epoch = epoch;
+            meta.val_acc = val_acc;
+            meta.val_loss = val_loss;
+            let ck = Checkpoint::new(meta, state.params.clone())?;
+            if let Some(path) = writer.maybe_write(&ck)? {
+                if opts.verbose {
+                    println!("[ckpt] wrote {}", path.display());
+                }
+            }
+        }
         if val_acc > report.best_val_acc {
             report.best_val_acc = val_acc;
         }

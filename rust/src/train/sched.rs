@@ -4,6 +4,7 @@
 /// torch.optim.lr_scheduler.ReduceLROnPlateau (mode=min, default
 /// threshold 1e-4 rel).
 pub struct ReduceLrOnPlateau {
+    /// Current learning rate (reduced in place on plateaus).
     pub lr: f32,
     factor: f32,
     patience: usize,
@@ -14,6 +15,8 @@ pub struct ReduceLrOnPlateau {
 }
 
 impl ReduceLrOnPlateau {
+    /// Scheduler starting at `lr`, multiplying by `factor` after
+    /// `patience` epochs without relative improvement.
     pub fn new(lr: f32, factor: f32, patience: usize) -> Self {
         ReduceLrOnPlateau {
             lr,
@@ -49,11 +52,14 @@ pub struct EarlyStop {
     patience: usize,
     best: f64,
     bad_epochs: usize,
+    /// 1-based epoch of the best validation loss seen so far (0 until
+    /// the first improvement).
     pub best_epoch: usize,
     epoch: usize,
 }
 
 impl EarlyStop {
+    /// Stop after `patience` epochs without validation-loss improvement.
     pub fn new(patience: usize) -> Self {
         EarlyStop {
             patience,
