@@ -32,4 +32,4 @@ pub use store::{
     resolve_checkpoint, CheckpointWriter, ParamStore, ParamVersion,
     Retention, WrittenCkpt,
 };
-pub use watch::{watch_loop, DirWatcher};
+pub use watch::{watch_loop, watch_loop_with, DirWatcher};

@@ -69,6 +69,17 @@ impl DirWatcher {
         community: &[u32],
         num_comms: usize,
     ) -> Option<(PathBuf, Checkpoint)> {
+        self.poll_with(&|ck| ck.validate_against(community, num_comms))
+    }
+
+    /// Like [`DirWatcher::poll`], but with a caller-supplied validator
+    /// — used by streaming serving runs, where a mid-run full relabel
+    /// replaces the community labeling (and therefore the fence
+    /// fingerprint) the next poll must validate against.
+    pub fn poll_with(
+        &mut self,
+        validate: &dyn Fn(&Checkpoint) -> Result<()>,
+    ) -> Option<(PathBuf, Checkpoint)> {
         let entries = match std::fs::read_dir(&self.dir) {
             Ok(e) => e,
             Err(_) => return None, // dir may not exist yet; keep polling
@@ -97,7 +108,7 @@ impl DirWatcher {
                     continue;
                 }
             };
-            if let Err(e) = ck.validate_against(community, num_comms) {
+            if let Err(e) = validate(&ck) {
                 eprintln!("[ckpt-watch] rejecting {}: {e:#}", path.display());
                 continue;
             }
@@ -130,11 +141,31 @@ impl DirWatcher {
 /// set. `publish` errors are logged, not fatal — the workers keep
 /// serving the version they have.
 pub fn watch_loop(
-    mut watcher: DirWatcher,
+    watcher: DirWatcher,
     community: &[u32],
     num_comms: usize,
     poll_ms: u64,
     stop: &AtomicBool,
+    publish: &(dyn Fn(PathBuf, Checkpoint) -> Result<()> + Sync),
+) {
+    watch_loop_with(
+        watcher,
+        poll_ms,
+        stop,
+        &|ck| ck.validate_against(community, num_comms),
+        publish,
+    )
+}
+
+/// [`watch_loop`] with a caller-supplied validator, evaluated fresh on
+/// every poll — a streaming serving run passes a closure reading its
+/// *current* label snapshot, so checkpoints from before a mid-run full
+/// relabel stop validating the moment the fence fingerprint changes.
+pub fn watch_loop_with(
+    mut watcher: DirWatcher,
+    poll_ms: u64,
+    stop: &AtomicBool,
+    validate: &(dyn Fn(&Checkpoint) -> Result<()> + Sync),
     publish: &(dyn Fn(PathBuf, Checkpoint) -> Result<()> + Sync),
 ) {
     let poll_ms = poll_ms.max(1);
@@ -142,7 +173,7 @@ pub fn watch_loop(
         if stop.load(Ordering::Relaxed) {
             return;
         }
-        if let Some((path, ck)) = watcher.poll(community, num_comms) {
+        if let Some((path, ck)) = watcher.poll_with(validate) {
             let label = path.display().to_string();
             let epoch = ck.meta.epoch;
             match publish(path, ck) {

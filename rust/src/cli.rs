@@ -133,13 +133,21 @@ COMMANDS:
                            run and hot-swap newer checkpoints in)
                            cache_warm=1 (pre-stage hot feature rows
                            before the bench clock starts)
+                           mutate=RATE (streaming graph churn at RATE
+                           updates/s: edge inserts/deletes + feature
+                           rewrites, applied in epochs while serving)
+                           mutate_epoch=N (updates per mutation epoch)
+                           maint=incr|full (incremental community
+                           refinement vs naive full relabel per epoch)
+                           drift=F (modularity-drift threshold that
+                           triggers a full relabel under maint=incr)
                            (uses the PJRT infer artifact when present,
                             the pure-rust host executor otherwise)
   exp <id>               regenerate a paper artifact into results/
                            ids: fig2 fig5 fig6 fig7 fig8 fig9 fig10
                                 tab3 tab4 tab5 fullbatch inference
                                 preproc ablation autotune serve ckpt
-                                all
+                                stream all
   help                   this message
 
 Presets: {}",
@@ -274,6 +282,7 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     use crate::serve::{
         engine, AdmissionPolicy, Arrival, LoadConfig, ServeConfig, SpillPolicy,
     };
+    use crate::stream::MaintenanceMode;
 
     let name = args.pos.get(1).map(String::as_str).unwrap_or("tiny");
     let p = preset(name).with_context(|| format!("unknown preset {name}"))?;
@@ -299,12 +308,24 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         ckpt: args.get("ckpt").map(std::path::PathBuf::from),
         ckpt_watch_ms: args.get_u64("watch_ms", 0)?,
         cache_warm: args.get_usize("cache_warm", 0)? != 0,
+        mutate_rps: args.get_f64("mutate", 0.0)?,
+        mutate_epoch: args.get_usize("mutate_epoch", 64)?,
+        drift_threshold: args.get_f64("drift", 0.15)?,
+        maintenance: MaintenanceMode::parse(
+            args.get("maint").unwrap_or("incr"),
+        )?,
     };
     if !(0.0..=1.0).contains(&scfg.community_bias) {
         bail!("p must be in [0, 1], got {}", scfg.community_bias);
     }
     if scfg.shards == 0 {
         bail!("shards must be >= 1");
+    }
+    if !scfg.mutate_rps.is_finite() || scfg.mutate_rps < 0.0 {
+        bail!("mutate must be a non-negative rate, got {}", scfg.mutate_rps);
+    }
+    if !(scfg.drift_threshold.is_finite() && scfg.drift_threshold > 0.0) {
+        bail!("drift must be a positive threshold, got {}", scfg.drift_threshold);
     }
     let lcfg = LoadConfig {
         clients: args.get_usize("clients", 8)?,
@@ -323,7 +344,8 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
                 "  shard {}: {} comms / {} nodes owned | {} req \
                  ({} foreign, {} shed, {} degraded) in {} batches | \
                  params v{} ({} swaps) | depth max {} | est service \
-                 {:.0} us | p50 {:.2} p99 {:.2} ms | cache hit {:.1}%",
+                 {:.0} us | p50 {:.2} p99 {:.2} ms | cache hit {:.1}% \
+                 ({} stale)",
                 sh.id,
                 sh.owned_comms,
                 sh.owned_nodes,
@@ -339,6 +361,7 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
                 sh.lat_p50_ms,
                 sh.lat_p99_ms,
                 sh.cache_hit_rate * 100.0,
+                sh.stale_hits,
             );
         }
     }

@@ -6,6 +6,16 @@
 //! modularity maximization ([`louvain`]) followed by community-sorted
 //! relabeling ([`reorder`]). COMM-RAND only needs the community id of
 //! each node (paper §6.5.3), which both produce.
+//!
+//! Everything downstream keys on this module's output being a pure
+//! function of `(graph, seed)`: the shard plan
+//! ([`crate::serve::ShardPlan`]) and the checkpoint fence fingerprint
+//! ([`crate::ckpt::community_fingerprint`]) are derived directly from
+//! the label array, and the streaming incremental maintainer
+//! ([`crate::stream::CommunityMaintainer`]) refines these labels in
+//! place between full re-detections — so determinism per seed is a
+//! tested contract here, not a nicety. [`partition`] reuses the same
+//! greedy largest-first packing for the ClusterGCN baseline.
 
 pub mod louvain;
 pub mod partition;

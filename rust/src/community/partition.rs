@@ -82,6 +82,56 @@ mod tests {
         assert!(max - min <= 260, "unbalanced: {sizes:?}");
     }
 
+    /// Edge case: `num_comms` declares ids that no node carries (an
+    /// empty community — exactly what incremental label maintenance
+    /// can produce when a community drains). Empty blocks must be
+    /// skipped, every real node placed exactly once.
+    #[test]
+    fn empty_communities_are_skipped() {
+        let mut rng = Rng::new(9);
+        // ids 0 and 3 populated; 1, 2, 4 declared but empty
+        let comm: Vec<u32> =
+            (0..60u32).map(|v| if v % 2 == 0 { 0 } else { 3 }).collect();
+        let parts = pack_partitions(&comm, 5, 3, &mut rng);
+        assert_eq!(parts.len(), 3);
+        let mut all: Vec<u32> = parts.iter().flatten().copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..60u32).collect::<Vec<_>>());
+        let sizes: Vec<usize> = parts.iter().map(|p| p.len()).collect();
+        assert!(*sizes.iter().max().unwrap() <= 30, "unbalanced: {sizes:?}");
+    }
+
+    /// Edge case: one giant community holding every node must be split
+    /// across partitions (never one partition with everything) and
+    /// still cover each node exactly once.
+    #[test]
+    fn single_giant_community_is_split_and_balanced() {
+        let mut rng = Rng::new(10);
+        let comm = vec![0u32; 1000];
+        let parts = pack_partitions(&comm, 1, 4, &mut rng);
+        assert_eq!(parts.len(), 4);
+        let mut all: Vec<u32> = parts.iter().flatten().copied().collect();
+        all.sort_unstable();
+        assert_eq!(all.len(), 1000);
+        all.dedup();
+        assert_eq!(all.len(), 1000, "duplicated nodes across partitions");
+        let sizes: Vec<usize> = parts.iter().map(|p| p.len()).collect();
+        let max = *sizes.iter().max().unwrap();
+        let min = *sizes.iter().min().unwrap();
+        assert_eq!(max, 250, "giant community must split evenly: {sizes:?}");
+        assert_eq!(min, 250, "giant community must split evenly: {sizes:?}");
+    }
+
+    /// Degenerate but legal: a single partition swallows everything.
+    #[test]
+    fn one_partition_takes_all() {
+        let mut rng = Rng::new(11);
+        let comm: Vec<u32> = (0..40u32).map(|v| v % 4).collect();
+        let parts = pack_partitions(&comm, 4, 1, &mut rng);
+        assert_eq!(parts.len(), 1);
+        assert_eq!(parts[0].len(), 40);
+    }
+
     #[test]
     fn keeps_small_communities_together() {
         let mut rng = Rng::new(4);

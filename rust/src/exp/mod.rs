@@ -19,6 +19,7 @@ pub mod fullbatch;
 pub mod inference;
 pub mod preproc;
 pub mod serve;
+pub mod stream;
 pub mod tab3;
 pub mod tab4;
 pub mod tab5;
@@ -30,7 +31,7 @@ use common::Ctx;
 
 pub fn run(args: &Args) -> Result<()> {
     let id = args.pos.first().map(|s| s.as_str()).unwrap_or("");
-    // the serving sweep and the train→checkpoint→serve pipeline need
+    // the serving sweeps and the train→checkpoint→serve pipeline need
     // no PJRT session (they fall back to the host executor), so
     // dispatch them before Ctx loads the manifest
     if id == "serve" {
@@ -38,6 +39,9 @@ pub fn run(args: &Args) -> Result<()> {
     }
     if id == "ckpt" {
         return ckpt::run(args);
+    }
+    if id == "stream" {
+        return stream::run(args);
     }
     let mut ctx = Ctx::new()?;
     match id {

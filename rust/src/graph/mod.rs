@@ -7,9 +7,38 @@ pub mod csr;
 pub mod features;
 pub mod gen;
 pub mod io;
+pub mod overlay;
 pub mod stats;
 
 pub use csr::Csr;
+pub use overlay::TopoSnapshot;
+
+/// Read-only adjacency access, implemented by both the frozen
+/// [`Csr`] and the versioned delta-overlay snapshots
+/// ([`overlay::TopoSnapshot`]) the streaming-mutation subsystem
+/// publishes. Samplers are generic over this trait, so an in-flight
+/// sampler keeps reading one consistent snapshot while newer versions
+/// are published next to it.
+pub trait Topology: Sync {
+    /// Number of nodes.
+    fn num_nodes(&self) -> usize;
+    /// Sorted, deduplicated neighbor list of `v`.
+    fn neighbors(&self, v: u32) -> &[u32];
+    /// Degree of `v`.
+    fn degree(&self, v: u32) -> usize {
+        self.neighbors(v).len()
+    }
+}
+
+impl Topology for Csr {
+    fn num_nodes(&self) -> usize {
+        self.n
+    }
+
+    fn neighbors(&self, v: u32) -> &[u32] {
+        Csr::neighbors(self, v)
+    }
+}
 
 /// Train/val/test membership of a node.
 pub const SPLIT_TRAIN: u8 = 0;

@@ -1,0 +1,294 @@
+//! Versioned CSR delta-overlay: a consistent, immutable topology
+//! snapshot that layers streaming edge mutations over a frozen base
+//! [`Csr`] without rebuilding it.
+//!
+//! A [`TopoSnapshot`] is `base ⊕ patched`: vertices untouched since the
+//! last compaction read their adjacency straight out of the base CSR;
+//! a vertex with at least one inserted/deleted incident edge carries a
+//! full replacement list in the `patched` map (sorted + deduplicated,
+//! same invariants as the CSR). Snapshots are immutable — applying an
+//! update epoch produces a *new* snapshot with a bumped version, so
+//! in-flight samplers holding an `Arc` of the old one keep reading a
+//! consistent graph while the new version is published beside them.
+//!
+//! When the patch map grows past [`TopoSnapshot::COMPACT_FRAC`] of the
+//! node count, [`TopoSnapshot::apply`] folds everything into a fresh
+//! base CSR (an O(E) rebuild, done off the serving path by the single
+//! writer) and the overlay starts empty again — so per-epoch apply
+//! cost stays proportional to the epoch's touched set, not run length.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use super::{Csr, Topology};
+
+/// One immutable, versioned view of the mutating topology (see the
+/// module docs).
+pub struct TopoSnapshot {
+    version: u64,
+    base: Arc<Csr>,
+    /// Vertex → full replacement adjacency (sorted, deduplicated).
+    /// Lists are `Arc`-shared between snapshot generations and cloned
+    /// copy-on-write only when an epoch touches them, so applying an
+    /// epoch costs O(touched set), not O(overlay size).
+    patched: HashMap<u32, Arc<Vec<u32>>>,
+    /// Directed-edge delta of `patched` versus `base`.
+    edge_delta: i64,
+}
+
+impl TopoSnapshot {
+    /// Compact when the patch map covers more than 1/8 of the nodes.
+    pub const COMPACT_FRAC: usize = 8;
+
+    /// Version-0 snapshot over an unmodified base CSR.
+    pub fn from_base(base: Arc<Csr>) -> TopoSnapshot {
+        TopoSnapshot {
+            version: 0,
+            base,
+            patched: HashMap::new(),
+            edge_delta: 0,
+        }
+    }
+
+    /// Monotone snapshot version (0 = the pristine base).
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    /// Vertices currently carrying a patched adjacency list.
+    pub fn patched_len(&self) -> usize {
+        self.patched.len()
+    }
+
+    /// Directed edge slots in this snapshot (base ± the overlay delta).
+    pub fn num_directed_edges(&self) -> usize {
+        (self.base.num_directed_edges() as i64 + self.edge_delta).max(0)
+            as usize
+    }
+
+    fn adj_of(&self, v: u32) -> &[u32] {
+        match self.patched.get(&v) {
+            Some(list) => list.as_slice(),
+            None => self.base.neighbors(v),
+        }
+    }
+
+    /// Whether the undirected edge `(u, v)` is present.
+    pub fn has_edge(&self, u: u32, v: u32) -> bool {
+        self.adj_of(u).binary_search(&v).is_ok()
+    }
+
+    /// Apply a batch of undirected edge updates (`(u, v, insert)`)
+    /// and return `(next_snapshot, applied)` where `applied` lists the
+    /// updates that actually changed the graph — inserting an existing
+    /// edge, deleting a missing one, self loops and out-of-range
+    /// endpoints are all no-ops and are filtered out.
+    ///
+    /// The returned snapshot has `version + 1`; `self` is untouched.
+    /// When the patch map outgrows `n / COMPACT_FRAC` the result is
+    /// compacted into a fresh base CSR with an empty overlay.
+    pub fn apply(
+        &self,
+        updates: &[(u32, u32, bool)],
+    ) -> (TopoSnapshot, Vec<(u32, u32, bool)>) {
+        let n = self.base.n;
+        let mut patched = self.patched.clone();
+        let mut edge_delta = self.edge_delta;
+        let mut applied = Vec::with_capacity(updates.len());
+        for &(u, v, insert) in updates {
+            if u == v || u as usize >= n || v as usize >= n {
+                continue;
+            }
+            let present = match patched.get(&u) {
+                Some(list) => list.binary_search(&v).is_ok(),
+                None => self.base.neighbors(u).binary_search(&v).is_ok(),
+            };
+            if present == insert {
+                continue; // no-op
+            }
+            for (a, b) in [(u, v), (v, u)] {
+                let entry = patched.entry(a).or_insert_with(|| {
+                    Arc::new(self.base.neighbors(a).to_vec())
+                });
+                // copy-on-write: clones the list only if an older
+                // snapshot still shares it
+                let list = Arc::make_mut(entry);
+                match list.binary_search(&b) {
+                    Ok(i) if !insert => {
+                        list.remove(i);
+                    }
+                    Err(i) if insert => {
+                        list.insert(i, b);
+                    }
+                    _ => {}
+                }
+            }
+            edge_delta += if insert { 2 } else { -2 };
+            applied.push((u, v, insert));
+        }
+        let next = TopoSnapshot {
+            version: self.version + 1,
+            base: self.base.clone(),
+            patched,
+            edge_delta,
+        };
+        if next.patched.len() > n.max(Self::COMPACT_FRAC) / Self::COMPACT_FRAC
+        {
+            let compacted = TopoSnapshot {
+                version: next.version,
+                base: Arc::new(next.compact()),
+                patched: HashMap::new(),
+                edge_delta: 0,
+            };
+            return (compacted, applied);
+        }
+        (next, applied)
+    }
+
+    /// Materialize the overlay into a standalone CSR (used for full
+    /// community relabels and by the compaction path).
+    pub fn compact(&self) -> Csr {
+        let n = self.base.n;
+        let mut edges: Vec<(u32, u32)> =
+            Vec::with_capacity(self.num_directed_edges() / 2);
+        for v in 0..n as u32 {
+            for &u in self.adj_of(v) {
+                if v < u {
+                    edges.push((v, u));
+                }
+            }
+        }
+        Csr::from_edges(n, &edges)
+    }
+}
+
+impl Topology for TopoSnapshot {
+    fn num_nodes(&self) -> usize {
+        self.base.n
+    }
+
+    fn neighbors(&self, v: u32) -> &[u32] {
+        self.adj_of(v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn base_graph() -> Arc<Csr> {
+        Arc::new(Csr::from_edges(
+            8,
+            &[(0, 1), (1, 2), (2, 3), (3, 4), (4, 5), (5, 6), (6, 7)],
+        ))
+    }
+
+    #[test]
+    fn pristine_snapshot_mirrors_base() {
+        let base = base_graph();
+        let s = TopoSnapshot::from_base(base.clone());
+        assert_eq!(s.version(), 0);
+        assert_eq!(s.num_nodes(), 8);
+        assert_eq!(s.num_directed_edges(), base.num_directed_edges());
+        for v in 0..8u32 {
+            assert_eq!(Topology::neighbors(&s, v), base.neighbors(v));
+        }
+    }
+
+    #[test]
+    fn insert_and_delete_round_trip() {
+        let s0 = TopoSnapshot::from_base(base_graph());
+        let (s1, applied) = s0.apply(&[(0, 7, true), (3, 4, false)]);
+        assert_eq!(applied.len(), 2);
+        assert_eq!(s1.version(), 1);
+        assert!(s1.has_edge(0, 7) && s1.has_edge(7, 0));
+        assert!(!s1.has_edge(3, 4) && !s1.has_edge(4, 3));
+        // the old snapshot is untouched — consistent for in-flight readers
+        assert!(!s0.has_edge(0, 7));
+        assert!(s0.has_edge(3, 4));
+        assert_eq!(
+            s1.num_directed_edges() as i64,
+            s0.num_directed_edges() as i64
+        );
+        // lists stay sorted
+        for v in 0..8u32 {
+            let l = Topology::neighbors(&s1, v);
+            assert!(l.windows(2).all(|w| w[0] < w[1]), "unsorted at {v}");
+        }
+    }
+
+    #[test]
+    fn noop_updates_are_filtered() {
+        let s0 = TopoSnapshot::from_base(base_graph());
+        let (s1, applied) = s0.apply(&[
+            (0, 1, true),   // already present
+            (0, 5, false),  // absent
+            (2, 2, true),   // self loop
+            (0, 100, true), // out of range
+        ]);
+        assert!(applied.is_empty());
+        assert_eq!(s1.version(), 1, "version still advances per epoch");
+        assert_eq!(s1.num_directed_edges(), s0.num_directed_edges());
+    }
+
+    #[test]
+    fn compact_matches_incremental_state() {
+        let mut rng = Rng::new(11);
+        let n = 64usize;
+        let mut edges = vec![];
+        for _ in 0..200 {
+            edges.push((rng.below(n as u64) as u32, rng.below(n as u64) as u32));
+        }
+        let base = Arc::new(Csr::from_edges(n, &edges));
+        let mut snap = TopoSnapshot::from_base(base);
+        // random churn, tracked against a reference edge set
+        for _ in 0..40 {
+            let mut batch = vec![];
+            for _ in 0..8 {
+                let u = rng.below(n as u64) as u32;
+                let v = rng.below(n as u64) as u32;
+                batch.push((u, v, rng.f64() < 0.5));
+            }
+            let (next, _) = snap.apply(&batch);
+            snap = next;
+        }
+        let compacted = snap.compact();
+        compacted.validate().unwrap();
+        assert_eq!(compacted.num_directed_edges(), snap.num_directed_edges());
+        for v in 0..n as u32 {
+            assert_eq!(
+                compacted.neighbors(v),
+                Topology::neighbors(&snap, v),
+                "adjacency mismatch at {v}"
+            );
+        }
+    }
+
+    #[test]
+    fn auto_compaction_preserves_the_graph() {
+        let n = 32usize;
+        let base = Arc::new(Csr::from_edges(n, &[(0, 1)]));
+        let mut snap = TopoSnapshot::from_base(base);
+        // touch every vertex so the patch map exceeds n / COMPACT_FRAC
+        let mut rng = Rng::new(3);
+        for round in 0..16u64 {
+            let mut batch = vec![];
+            for _ in 0..6 {
+                let u = rng.below(n as u64) as u32;
+                let v = rng.below(n as u64) as u32;
+                batch.push((u, v, true));
+            }
+            let (next, _) = snap.apply(&batch);
+            snap = next;
+            assert_eq!(snap.version(), round + 1);
+            assert!(
+                snap.patched_len() <= n / TopoSnapshot::COMPACT_FRAC,
+                "overlay never exceeds the compaction bound after apply"
+            );
+        }
+        let csr = snap.compact();
+        csr.validate().unwrap();
+        assert_eq!(csr.num_directed_edges(), snap.num_directed_edges());
+    }
+}

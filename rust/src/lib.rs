@@ -48,6 +48,23 @@
 //! load into paper-style tables. The request lifecycle and knob
 //! reference live in `docs/ARCHITECTURE.md`.
 //!
+//! # Streaming graph mutation ([`stream`])
+//!
+//! The [`stream`] subsystem opens the dynamic-graph workload: `serve
+//! bench mutate=RATE` drives timestamped edge inserts/deletes and
+//! feature-row rewrites alongside the request load. Updates batch
+//! into epochs applied through a versioned CSR delta-overlay
+//! ([`graph::TopoSnapshot`]) so in-flight samplers read consistent
+//! snapshots; an incremental community maintainer re-refines the
+//! Louvain labels only around touched vertices and escalates to a
+//! stop-the-world full relabel (new shard plan, flushed caches, new
+//! checkpoint-fence fingerprint) when modularity drift crosses the
+//! threshold; and the serving feature cache is version-tagged, so
+//! rewrites turn cached rows *stale* (`stale_hits`, served like
+//! misses, `hits + misses + stale_hits == lookups` exactly).
+//! `comm-rand exp stream` sweeps throughput/accuracy against churn
+//! with incremental vs. naive full-relabel maintenance.
+//!
 //! # Checkpoints & hot swap ([`ckpt`])
 //!
 //! The [`ckpt`] subsystem bridges train → serve: the training loop
@@ -76,7 +93,6 @@ pub mod batch;
 #[allow(missing_docs)]
 pub mod cachesim;
 pub mod ckpt;
-#[allow(missing_docs)]
 pub mod community;
 #[allow(missing_docs)]
 pub mod config;
@@ -89,6 +105,7 @@ pub mod runtime;
 #[allow(missing_docs)]
 pub mod sampler;
 pub mod serve;
+pub mod stream;
 pub mod train;
 #[allow(missing_docs)]
 pub mod util;

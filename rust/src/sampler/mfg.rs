@@ -9,7 +9,7 @@
 //! local-index layout the padded artifact consumes; the batch builder
 //! rewrites layer-1 positions to global ids in resident-feature mode.
 
-use crate::graph::Csr;
+use crate::graph::Topology;
 use crate::util::rng::Rng;
 use crate::util::umap::U32Map;
 
@@ -56,8 +56,13 @@ impl Mfg {
 
 /// Sample an MFG for `roots`; `fanouts` lists per-layer fanouts,
 /// input-most first (layer `l` samples `fanouts[l-1]` neighbors).
-pub fn build_mfg(
-    csr: &Csr,
+///
+/// Generic over [`Topology`], so it samples identically from a frozen
+/// [`crate::graph::Csr`] and from a streaming
+/// [`crate::graph::TopoSnapshot`] — an in-flight build keeps reading
+/// whatever snapshot it was handed.
+pub fn build_mfg<T: Topology + ?Sized>(
+    csr: &T,
     community: &[u32],
     roots: &[u32],
     fanouts: &[usize],
@@ -106,6 +111,7 @@ pub fn build_mfg(
 mod tests {
     use super::*;
     use crate::graph::gen::{generate_sbm, SbmParams};
+    use crate::graph::Csr;
 
     fn test_graph() -> (Csr, Vec<u32>) {
         let mut rng = Rng::new(100);

@@ -7,7 +7,7 @@
 //! node has any). Sampling is without replacement via exponential-race
 //! keys (Efraimidis–Spirakis), O(deg) per node.
 
-use crate::graph::Csr;
+use crate::graph::Topology;
 use crate::util::rng::Rng;
 
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -39,8 +39,8 @@ impl NeighborPolicy {
 /// For `Biased{p=1.0}` only intra-community edges are eligible unless
 /// the node has none (then it falls back to uniform over all; a node
 /// must not lose its entire neighborhood).
-pub fn sample_neighbors(
-    csr: &Csr,
+pub fn sample_neighbors<T: Topology + ?Sized>(
+    topo: &T,
     community: &[u32],
     v: u32,
     fanout: usize,
@@ -49,7 +49,7 @@ pub fn sample_neighbors(
     out: &mut Vec<u32>,
 ) {
     out.clear();
-    let nbrs = csr.neighbors(v);
+    let nbrs = topo.neighbors(v);
     if nbrs.is_empty() {
         return;
     }
@@ -140,6 +140,7 @@ fn weighted_sample(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::graph::Csr;
 
     /// star graph: node 0 connected to 1..=40; communities: 1..=20 share
     /// community 0 with the center, 21..=40 are community 1.

@@ -12,6 +12,18 @@
 //! ids spread evenly), one mutex per shard, `Arc`-shareable across the
 //! worker pool. Hit/miss counters live with each shard and aggregate
 //! into [`CacheStats`].
+//!
+//! **Versioned rows** (streaming mutation support): every cached slot
+//! remembers the *feature version* it was staged at. A probe that
+//! finds the node but at an older version is a **stale hit** — counted
+//! separately (`stale_hits`) and served like a miss (the fresh row is
+//! installed and copied through), so a feature rewrite invalidates
+//! every cached copy without touching the cache. The accounting
+//! invariant `hits + misses + stale_hits == lookups` holds per shard
+//! and in aggregate (`lookups` is counted independently at fetch
+//! entry, so the invariant is a real cross-check, not a tautology).
+//! Frozen-table callers use version 0 everywhere and can never see a
+//! stale hit.
 
 use std::sync::Mutex;
 
@@ -48,27 +60,49 @@ struct Shard {
     core: SetAssocCore,
     /// `slots * feat_dim` payload, indexed by the core's slot ids.
     slab: Vec<f32>,
+    /// Feature version each slot was staged at, same indexing.
+    ver: Vec<u64>,
     hits: u64,
     misses: u64,
+    stale_hits: u64,
+    /// Independent fetch counter (the accounting-invariant witness).
+    lookups: u64,
 }
 
-/// Aggregated hit/miss counters.
+/// Outcome of one versioned fetch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Fetched {
+    /// Served from the cache slab at the requested version.
+    Hit,
+    /// The node was cached at an older feature version: refreshed from
+    /// `src`, counted as `stale_hits`.
+    Stale,
+    /// Not cached: installed from `src`.
+    Miss,
+}
+
+/// Aggregated fetch counters.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct CacheStats {
-    /// Fetches served from the cache slab.
+    /// Fetches served from the cache slab at the current version.
     pub hits: u64,
     /// Fetches that fell through to the feature table.
     pub misses: u64,
+    /// Fetches that found the node cached at an older feature version
+    /// (treated as misses: refreshed in place).
+    pub stale_hits: u64,
+    /// Total fetches, counted independently — must always equal
+    /// `hits + misses + stale_hits`.
+    pub lookups: u64,
 }
 
 impl CacheStats {
-    /// hits / (hits + misses); 0 when nothing was fetched.
+    /// hits / lookups; 0 when nothing was fetched.
     pub fn hit_rate(&self) -> f64 {
-        let total = self.hits + self.misses;
-        if total == 0 {
+        if self.lookups == 0 {
             0.0
         } else {
-            self.hits as f64 / total as f64
+            self.hits as f64 / self.lookups as f64
         }
     }
 }
@@ -92,7 +126,16 @@ impl ShardedFeatureCache {
             .map(|_| {
                 let core = SetAssocCore::new(sets, ways);
                 let slab = vec![0f32; core.slots() * cfg.feat_dim];
-                Mutex::new(Shard { core, slab, hits: 0, misses: 0 })
+                let ver = vec![0u64; core.slots()];
+                Mutex::new(Shard {
+                    core,
+                    slab,
+                    ver,
+                    hits: 0,
+                    misses: 0,
+                    stale_hits: 0,
+                    lookups: 0,
+                })
             })
             .collect();
         ShardedFeatureCache { shards, feat_dim: cfg.feat_dim }
@@ -118,46 +161,92 @@ impl ShardedFeatureCache {
         node as usize % self.shards.len()
     }
 
-    /// Fetch `node`'s feature row into `dst`: on a hit the row comes
-    /// from the cache slab (the feature-table read is skipped); on a
-    /// miss `src` (the table row) is installed and copied through.
-    /// Returns whether it hit.
+    /// Fetch `node`'s feature row into `dst` (frozen-table path:
+    /// version 0 everywhere, never stale). Returns whether it hit.
     pub fn fetch(&self, node: u32, src: &[f32], dst: &mut [f32]) -> bool {
+        self.fetch_versioned(node, 0, src, dst) == Fetched::Hit
+    }
+
+    /// Versioned fetch: serve `node`'s row from the slab only if it
+    /// was staged at `version`; a cached row at an *older* version is
+    /// a stale hit — refreshed from `src` (the authoritative row for
+    /// `version`) and counted separately. On a miss `src` is installed
+    /// tagged with `version`.
+    ///
+    /// A reader that raced a rewrite can arrive with an *older*
+    /// version than the slot holds; it is served its own (consistent)
+    /// `src` and counted stale, but the newer cached row is **not**
+    /// downgraded — slot versions only move forward.
+    pub fn fetch_versioned(
+        &self,
+        node: u32,
+        version: u64,
+        src: &[f32],
+        dst: &mut [f32],
+    ) -> Fetched {
         let f = self.feat_dim;
         debug_assert_eq!(src.len(), f);
         debug_assert_eq!(dst.len(), f);
         let mut sh = self.shards[self.shard_of(node)].lock().unwrap();
+        sh.lookups += 1;
         let p = sh.core.probe(node as u64);
         let off = p.slot * f;
-        if p.hit {
+        if p.hit && sh.ver[p.slot] == version {
             sh.hits += 1;
             dst.copy_from_slice(&sh.slab[off..off + f]);
-            true
+            return Fetched::Hit;
+        }
+        let outcome = if p.hit {
+            sh.stale_hits += 1;
+            Fetched::Stale
         } else {
             sh.misses += 1;
+            Fetched::Miss
+        };
+        if !p.hit || sh.ver[p.slot] < version {
+            sh.ver[p.slot] = version;
             sh.slab[off..off + f].copy_from_slice(src);
-            dst.copy_from_slice(src);
-            false
         }
+        dst.copy_from_slice(src);
+        outcome
     }
 
-    /// Aggregate hit/miss counters over all shards.
+    /// Aggregate fetch counters over all shards.
     pub fn stats(&self) -> CacheStats {
         let mut s = CacheStats::default();
         for sh in &self.shards {
             let g = sh.lock().unwrap();
             s.hits += g.hits;
             s.misses += g.misses;
+            s.stale_hits += g.stale_hits;
+            s.lookups += g.lookups;
         }
         s
     }
 
-    /// Zero the hit/miss counters (contents stay cached).
+    /// Zero the fetch counters (contents stay cached).
     pub fn reset_counters(&self) {
         for sh in &self.shards {
             let mut g = sh.lock().unwrap();
             g.hits = 0;
             g.misses = 0;
+            g.stale_hits = 0;
+            g.lookups = 0;
+        }
+    }
+
+    /// Drop every cached row (counters are kept): subsequent fetches
+    /// miss and restage. Used when a full community relabel rebuilds
+    /// the shard plan — per-shard ownership changes wholesale, so the
+    /// resident rows no longer match the communities the shard serves.
+    pub fn invalidate_all(&self) {
+        for sh in &self.shards {
+            let mut g = sh.lock().unwrap();
+            let (sets, ways) = (g.core.sets(), g.core.ways());
+            g.core = SetAssocCore::new(sets, ways);
+            for v in g.ver.iter_mut() {
+                *v = 0;
+            }
         }
     }
 }
@@ -277,6 +366,108 @@ mod tests {
             feat_dim: 2,
         });
         assert!(c.rows() >= 100, "effective {} < requested 100", c.rows());
+    }
+
+    /// A feature-version bump turns the cached row stale: the next
+    /// fetch refreshes it (counted as `stale_hits`), after which the
+    /// new version hits normally — and the accounting invariant
+    /// `hits + misses + stale_hits == lookups` holds throughout.
+    #[test]
+    fn version_bump_invalidates_cached_row() {
+        let f = 4;
+        let cache = ShardedFeatureCache::new(&FeatureCacheConfig {
+            rows: 16,
+            shards: 2,
+            ways: 8,
+            feat_dim: f,
+        });
+        let old_row = vec![1.0f32; f];
+        let new_row = vec![2.0f32; f];
+        let mut dst = vec![0f32; f];
+        assert_eq!(cache.fetch_versioned(7, 0, &old_row, &mut dst), Fetched::Miss);
+        assert_eq!(cache.fetch_versioned(7, 0, &old_row, &mut dst), Fetched::Hit);
+        assert_eq!(dst, old_row);
+        // rewrite lands: version 3 — cached copy must not be served
+        assert_eq!(
+            cache.fetch_versioned(7, 3, &new_row, &mut dst),
+            Fetched::Stale
+        );
+        assert_eq!(dst, new_row, "stale fetch must serve the fresh row");
+        assert_eq!(cache.fetch_versioned(7, 3, &new_row, &mut dst), Fetched::Hit);
+        assert_eq!(dst, new_row);
+        // a racing reader with an OLD version is served its own row
+        // but must not downgrade the newer cached copy
+        assert_eq!(
+            cache.fetch_versioned(7, 0, &old_row, &mut dst),
+            Fetched::Stale
+        );
+        assert_eq!(dst, old_row, "old-version reader sees its own view");
+        assert_eq!(
+            cache.fetch_versioned(7, 3, &new_row, &mut dst),
+            Fetched::Hit,
+            "slot version must not move backwards"
+        );
+        assert_eq!(dst, new_row);
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.stale_hits), (3, 1, 2));
+        assert_eq!(s.lookups, s.hits + s.misses + s.stale_hits);
+    }
+
+    #[test]
+    fn invalidate_all_drops_rows_but_keeps_counters() {
+        let f = 2;
+        let t = table(10, f);
+        let cache = ShardedFeatureCache::new(&FeatureCacheConfig {
+            rows: 8,
+            shards: 2,
+            ways: 4,
+            feat_dim: f,
+        });
+        let mut dst = vec![0f32; f];
+        cache.fetch(1, row(&t, 1, f), &mut dst);
+        assert!(cache.fetch(1, row(&t, 1, f), &mut dst), "warm hit");
+        cache.invalidate_all();
+        assert!(
+            !cache.fetch(1, row(&t, 1, f), &mut dst),
+            "flushed row must miss"
+        );
+        assert_eq!(dst, row(&t, 1, f));
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses), (1, 2), "counters survive the flush");
+        assert_eq!(s.lookups, 3);
+    }
+
+    /// Concurrent versioned fetches keep the invariant exact.
+    #[test]
+    fn concurrent_versioned_accounting_invariant() {
+        let f = 4;
+        let n = 128usize;
+        let t = table(n, f);
+        let cache = ShardedFeatureCache::new(&FeatureCacheConfig {
+            rows: 32,
+            shards: 4,
+            ways: 8,
+            feat_dim: f,
+        });
+        std::thread::scope(|s| {
+            for tid in 0..4u64 {
+                let cache = &cache;
+                let t = &t;
+                s.spawn(move || {
+                    let mut rng = Rng::new(tid ^ 0xF00D);
+                    let mut dst = vec![0f32; f];
+                    for _ in 0..2_500 {
+                        let v = rng.usize_below(n) as u32;
+                        let ver = rng.below(3); // churn the version tag
+                        cache.fetch_versioned(v, ver, row(t, v, f), &mut dst);
+                    }
+                });
+            }
+        });
+        let s = cache.stats();
+        assert_eq!(s.lookups, 10_000);
+        assert_eq!(s.lookups, s.hits + s.misses + s.stale_hits);
+        assert!(s.stale_hits > 0, "version churn must produce stale hits");
     }
 
     #[test]

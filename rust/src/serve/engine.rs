@@ -18,7 +18,11 @@
 //!   ([`super::shard::route_batch`], spill policy configurable);
 //! * per shard, a worker pool consumes routed batches from that
 //!   shard's bounded channel and runs sampling → cache staging →
-//!   assembly → executor against the shard's own feature cache.
+//!   assembly → executor against the shard's own feature cache;
+//! * with `mutate > 0`, one churn thread ([`crate::stream`]) generates
+//!   and applies graph-update epochs — topology delta-overlay swaps,
+//!   incremental label maintenance, feature-version bumps — while
+//!   everything above reads immutable snapshots.
 //!
 //! The single-device path is simply `shards = 1`: one plan owning every
 //! community, one channel, one cache — not a separate code path.
@@ -36,6 +40,9 @@ use crate::config::DatasetPreset;
 use crate::graph::Dataset;
 use crate::runtime::artifact::{default_dir, ArtifactMeta, Manifest, SpecMeta};
 use crate::runtime::{InferState, Runtime};
+use crate::stream::{
+    churn_loop, MaintenanceMode, StreamConfig, StreamReport, StreamState,
+};
 use crate::util::json::{arr, num, obj, s, Json};
 use crate::util::rng::Rng;
 use crate::util::stats::percentile;
@@ -46,7 +53,8 @@ use super::cache::{CacheStats, FeatureCacheConfig, ShardedFeatureCache};
 use super::loadgen::{self, Arrival, ClientCtx, LoadConfig, ReqRecord};
 use super::queue::{Pop, RequestQueue};
 use super::shard::{
-    route_batch, ShardPlan, ShardReport, ShardStatsCell, SpillPolicy,
+    route_batch, LabelCell, LabelSnapshot, ShardReport, ShardStatsCell,
+    SpillPolicy,
 };
 use super::worker::{
     shard_worker_loop, HostExecutor, InferExecutor, PjrtExecutor, WorkerCtx,
@@ -100,6 +108,19 @@ pub struct ServeConfig {
     /// hot-node list when one is loaded, else the Zipf-hot prefix of
     /// the popularity ranking.
     pub cache_warm: bool,
+    /// Streaming churn rate in graph updates per second
+    /// (`mutate=RATE`); 0 disables the mutation subsystem entirely
+    /// (the frozen-graph fast path).
+    pub mutate_rps: f64,
+    /// Updates batched per mutation epoch (`mutate_epoch=`).
+    pub mutate_epoch: usize,
+    /// Modularity-drift threshold triggering a full relabel under
+    /// incremental maintenance (`drift=`).
+    pub drift_threshold: f64,
+    /// Community maintenance mode under churn (`maint=incr|full`):
+    /// incremental local refinement, or the naive stop-the-world full
+    /// relabel every epoch.
+    pub maintenance: MaintenanceMode,
 }
 
 impl ServeConfig {
@@ -122,6 +143,10 @@ impl ServeConfig {
             ckpt: None,
             ckpt_watch_ms: 0,
             cache_warm: false,
+            mutate_rps: 0.0,
+            mutate_epoch: 64,
+            drift_threshold: 0.15,
+            maintenance: MaintenanceMode::Incremental,
         }
     }
 }
@@ -191,7 +216,15 @@ pub struct ServeReport {
     pub cache_hits: u64,
     /// Feature-cache misses, summed over shards.
     pub cache_misses: u64,
-    /// hits / (hits + misses) over all shards.
+    /// Stale feature-cache hits (row cached at an older feature
+    /// version; refreshed, served like a miss), summed over shards.
+    /// Always 0 on frozen-graph runs.
+    pub stale_hits: u64,
+    /// Total feature-cache fetches, summed over shards — the
+    /// accounting invariant `hits + misses + stale_hits == lookups`
+    /// holds exactly.
+    pub cache_lookups: u64,
+    /// hits / lookups over all shards.
     pub cache_hit_rate: f64,
     /// Effective cache capacity in rows, summed over shards (geometry
     /// rounds the `cache_rows` knob up to whole sets).
@@ -202,6 +235,10 @@ pub struct ServeReport {
     pub spill: String,
     /// Per-shard breakdown (one entry even when `n_shards == 1`).
     pub shards: Vec<ShardReport>,
+    /// Streaming-mutation telemetry (`mutate=RATE` runs only): churn
+    /// volume, relabel waves, full relabels, drift, label/topology/
+    /// feature versions.
+    pub stream: Option<StreamReport>,
 }
 
 impl ServeReport {
@@ -236,6 +273,8 @@ impl ServeReport {
             ("mean_input_nodes", num(self.mean_input_nodes)),
             ("cache_hits", num(self.cache_hits as f64)),
             ("cache_misses", num(self.cache_misses as f64)),
+            ("stale_hits", num(self.stale_hits as f64)),
+            ("cache_lookups", num(self.cache_lookups as f64)),
             ("cache_hit_rate", num(self.cache_hit_rate)),
             ("cache_rows_effective", num(self.cache_rows as f64)),
             ("n_shards", num(self.n_shards as f64)),
@@ -243,6 +282,13 @@ impl ServeReport {
             (
                 "shards",
                 arr(self.shards.iter().map(|sh| sh.to_json()).collect()),
+            ),
+            (
+                "stream",
+                match &self.stream {
+                    Some(st) => st.to_json(),
+                    None => Json::Null,
+                },
             ),
         ])
     }
@@ -253,19 +299,35 @@ impl ServeReport {
         self.shards.iter().map(|sh| sh.foreign_requests).sum()
     }
 
-    /// One-line human summary printed by `serve bench` and `exp serve`.
+    /// One-line human summary printed by `serve bench` and `exp serve`
+    /// (streaming runs append a churn/relabel/drift tail).
     pub fn summary(&self) -> String {
         let acc = if self.evaluated > 0 {
             format!("{:.1}% ({})", self.accuracy * 100.0, self.evaluated)
         } else {
             "n/a".to_string()
         };
+        let stream_tail = match &self.stream {
+            Some(st) => format!(
+                " | churn {:.0}/s ({}) epochs {} waves {} moved {} \
+                 full-relabels {} stale {} drift {:.3}",
+                st.mutate_ups,
+                st.maintenance,
+                st.epochs,
+                st.relabel_waves,
+                st.moved_vertices,
+                st.full_relabels,
+                self.stale_hits,
+                st.drift,
+            ),
+            None => String::new(),
+        };
         format!(
             "[serve] {} exec={} p={:.2} shards={} spill={} arrival={} \
              admission={}: {} req in {:.2}s = {:.0} req/s | acc {} | \
              params v{} swaps {} | lat ms p50 {:.2} p95 {:.2} p99 {:.2} \
              | miss-deadline {:.1}% | shed {} ({:.1}%) degraded {} | \
-             cache hit {:.1}% | {:.1} req/batch | foreign {}",
+             cache hit {:.1}% | {:.1} req/batch | foreign {}{}",
             self.dataset,
             self.executor,
             self.community_bias,
@@ -289,6 +351,7 @@ impl ServeReport {
             self.cache_hit_rate * 100.0,
             self.mean_batch_size,
             self.foreign_requests(),
+            stream_tail,
         )
     }
 }
@@ -394,8 +457,34 @@ pub fn run(
     let n_shards = scfg.shards.max(1);
     let queue: RequestQueue<Request> = RequestQueue::new(scfg.queue_cap);
 
-    // consistent community -> shard assignment from the Louvain labels
-    let plan = ShardPlan::build(&ds.community, ds.num_comms, n_shards);
+    // snapshot-versioned community labels + shard plan: version 0 is
+    // the dataset's Louvain labeling; under churn (`mutate=`) the
+    // maintenance thread publishes newer snapshots through this cell
+    // and every reader (clients, batcher, workers) picks up whichever
+    // snapshot is current when it looks
+    let labels = LabelCell::new(LabelSnapshot::initial(
+        &ds.community,
+        ds.num_comms,
+        n_shards,
+    ));
+
+    // streaming-mutation state (churn generator + delta overlay +
+    // incremental maintainer); None = frozen graph, zero overhead
+    let stream: Option<StreamState> = if scfg.mutate_rps > 0.0 {
+        Some(StreamState::new(
+            ds,
+            StreamConfig {
+                rate_ups: scfg.mutate_rps,
+                epoch_updates: scfg.mutate_epoch.max(1),
+                drift_threshold: scfg.drift_threshold,
+                mode: scfg.maintenance,
+                seed: scfg.seed,
+                louvain_cap: 512,
+            },
+        ))
+    } else {
+        None
+    };
 
     // the cache_rows budget is split across device shards: each shard
     // only ever caches its own communities (under strict spill), so
@@ -483,6 +572,7 @@ pub fn run(
     // Zipf-hot prefix of the popularity ranking — then zero the
     // counters so warmup traffic never pollutes the reported hit rate.
     if scfg.cache_warm {
+        let warm_snap = labels.snapshot();
         let hot: Vec<u32> = match store.current() {
             Some(v) if !v.meta.hot_nodes.is_empty() => {
                 v.meta.hot_nodes.clone()
@@ -496,7 +586,7 @@ pub fn run(
             if (v as usize) >= ds.n() {
                 continue; // stale hot list from another geometry
             }
-            let sid = plan.shard_of_node(&ds.community, v);
+            let sid = warm_snap.owner_shard(v);
             if filled[sid] >= caches[sid].rows() {
                 continue;
             }
@@ -545,29 +635,59 @@ pub fn run(
         zipf: &zipf,
         records: &records,
         adm: &adm,
-        plan: &plan,
-        community: &ds.community,
+        label_cell: &labels,
         depths: &depths,
     };
 
+    let churn_stop = AtomicBool::new(false);
+
     std::thread::scope(|scope| {
+        // churn thread (mutate=RATE): the single writer — generate
+        // updates at the configured rate, seal epochs, apply them
+        // (topology swap, label maintenance, feature versions)
+        let churn_handle = stream.as_ref().map(|st| {
+            let labels = &labels;
+            let caches = &caches[..];
+            let clock = &clock;
+            let stop = &churn_stop;
+            scope.spawn(move || {
+                churn_loop(st, labels, ds, caches, clock, stop);
+            })
+        });
+
         // checkpoint-dir watcher: validate + stage new versions in the
-        // background; workers pick them up between micro-batches
+        // background; workers pick them up between micro-batches. The
+        // validator fences against the current snapshot's *generation*
+        // fingerprint — stable across incremental refinement waves
+        // (checkpoints keep hot-swapping under churn), regenerated by
+        // a full relabel (pre-relabel checkpoints stop validating).
         let watcher_handle = watch_dir.as_ref().map(|dir| {
             let loaded = store.current().map(|v| v.meta.epoch);
             let watcher = ckpt::DirWatcher::new(dir, loaded);
             let store = &store;
-            let community = &ds.community;
-            let num_comms = ds.num_comms;
+            let labels = &labels;
             let poll_ms = scfg.ckpt_watch_ms;
             let stop = &watch_stop;
             scope.spawn(move || {
-                ckpt::watch_loop(
+                ckpt::watch_loop_with(
                     watcher,
-                    community,
-                    num_comms,
                     poll_ms,
                     stop,
+                    &|ck| {
+                        let snap = labels.snapshot();
+                        if ck.meta.comm_fp != snap.fingerprint {
+                            anyhow::bail!(
+                                "community fingerprint mismatch: checkpoint \
+                                 {:#018x} vs serving generation {:#018x} \
+                                 (label snapshot v{}) — retrain against the \
+                                 current labeling",
+                                ck.meta.comm_fp,
+                                snap.fingerprint,
+                                snap.version
+                            );
+                        }
+                        Ok(())
+                    },
                     &|path, ck| {
                         let v = store.publish(ck, path);
                         exec.try_install(&v)
@@ -581,8 +701,7 @@ pub fn run(
         let batcher_handle = {
             let queue = &queue;
             let clock = &clock;
-            let community = &ds.community;
-            let plan = &plan;
+            let labels = &labels;
             let depths = &depths;
             let caps = &caps;
             scope.spawn(move || {
@@ -596,28 +715,31 @@ pub fn run(
                 );
                 // route one formed batch to its shard(s); false once
                 // any shard channel has closed. `rr` rotates depth-tie
-                // breaks across shards batch by batch.
+                // breaks across shards batch by batch. Each batch is
+                // grouped AND routed under one label snapshot.
                 let mut rr = 0usize;
-                let mut send_routed = |b: Vec<Request>| -> bool {
-                    let snapshot: Vec<usize> = depths
-                        .iter()
-                        .map(|d| d.load(Ordering::Relaxed))
-                        .collect();
-                    let routed = route_batch(
-                        plan, community, scfg.spill, &snapshot, caps, rr, b,
-                    );
-                    rr = rr.wrapping_add(1);
-                    for (sid, sub) in routed {
-                        depths[sid].fetch_add(1, Ordering::Relaxed);
-                        if txs[sid].send(sub).is_err() {
-                            return false;
+                let mut send_routed =
+                    |b: Vec<Request>, snap: &LabelSnapshot| -> bool {
+                        let snapshot: Vec<usize> = depths
+                            .iter()
+                            .map(|d| d.load(Ordering::Relaxed))
+                            .collect();
+                        let routed = route_batch(
+                            snap, scfg.spill, &snapshot, caps, rr, b,
+                        );
+                        rr = rr.wrapping_add(1);
+                        for (sid, sub) in routed {
+                            depths[sid].fetch_add(1, Ordering::Relaxed);
+                            if txs[sid].send(sub).is_err() {
+                                return false;
+                            }
                         }
-                    }
-                    true
-                };
+                        true
+                    };
                 loop {
-                    if let Some(b) = mb.poll(clock.now_us(), community) {
-                        if !send_routed(b) {
+                    let snap = labels.snapshot();
+                    if let Some(b) = mb.poll(clock.now_us(), &snap.labels) {
+                        if !send_routed(b, &snap) {
                             return;
                         }
                         continue;
@@ -640,8 +762,10 @@ pub fn run(
                         Pop::TimedOut => {}
                         Pop::Closed => {
                             // drain: everything is overdue at t = ∞
-                            while let Some(b) = mb.poll(u64::MAX, community) {
-                                if !send_routed(b) {
+                            let snap = labels.snapshot();
+                            while let Some(b) = mb.poll(u64::MAX, &snap.labels)
+                            {
+                                if !send_routed(b, &snap) {
                                     return;
                                 }
                             }
@@ -663,18 +787,19 @@ pub fn run(
                     cache: &caches[sidx],
                     exec,
                     clock: &clock,
+                    stream: stream.as_ref(),
                 };
                 let rx = &rxs[sidx];
                 let cell = &shard_cells[sidx];
                 let depth = &depths[sidx];
-                let plan = &plan;
+                let labels = &labels;
                 let adm = &adm;
                 let seed = scfg.seed ^ widx.wrapping_mul(0x9E37_79B9_7F4A_7C15);
                 widx += 1;
                 worker_handles.push(scope.spawn(move || {
                     let mut rng = Rng::new(seed ^ 0x5EBF_11);
                     shard_worker_loop(
-                        &ctx, sidx, plan, rx, depth, cell, adm, &mut rng,
+                        &ctx, sidx, labels, rx, depth, cell, adm, &mut rng,
                     );
                 }));
             }
@@ -724,7 +849,11 @@ pub fn run(
         if let Some(h) = collector_handle {
             let _ = h.join();
         }
-        // all requests issued and answered — shut down
+        // the load is answered: stop mutating, then shut down
+        churn_stop.store(true, Ordering::Relaxed);
+        if let Some(h) = churn_handle {
+            let _ = h.join();
+        }
         queue.close();
         let _ = batcher_handle.join();
         for h in worker_handles {
@@ -740,7 +869,10 @@ pub fn run(
     let records = records.into_inner().unwrap();
 
     // roll per-shard cells + caches + admission counters up into shard
-    // reports and totals
+    // reports and totals; ownership columns reflect the FINAL label
+    // snapshot (relabels move them during streaming runs)
+    let final_snap = labels.snapshot();
+    let stream_report = stream.as_ref().map(|st| st.report(&labels));
     let mut shard_reports = Vec::with_capacity(n_shards);
     let mut cache_stats = CacheStats::default();
     let mut stats_batches = 0usize;
@@ -751,11 +883,18 @@ pub fn run(
         let cstats = caches[sidx].stats();
         cache_stats.hits += cstats.hits;
         cache_stats.misses += cstats.misses;
+        cache_stats.stale_hits += cstats.stale_hits;
+        cache_stats.lookups += cstats.lookups;
         stats_batches += cell.batches;
         stats_requests += cell.requests;
         stats_input_nodes += cell.input_nodes;
-        shard_reports
-            .push(ShardReport::from_cell(sidx, &plan, &cell, cstats, &adm));
+        shard_reports.push(ShardReport::from_cell(
+            sidx,
+            &final_snap.plan,
+            &cell,
+            cstats,
+            &adm,
+        ));
     }
 
     // errored requests count toward errors/deadlines, not latency
@@ -811,11 +950,14 @@ pub fn run(
         mean_input_nodes: stats_input_nodes as f64 / nb as f64,
         cache_hits: cache_stats.hits,
         cache_misses: cache_stats.misses,
+        stale_hits: cache_stats.stale_hits,
+        cache_lookups: cache_stats.lookups,
         cache_hit_rate: cache_stats.hit_rate(),
         cache_rows: caches.iter().map(|c| c.rows()).sum(),
         n_shards,
         spill: scfg.spill.name().to_string(),
         shards: shard_reports,
+        stream: stream_report,
     })
 }
 
@@ -1064,6 +1206,79 @@ mod tests {
             "expected install failure, got: {err:#}"
         );
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Streaming churn (`mutate=`) end to end on the no-op executor:
+    /// every request answered, no errors, the stream section reports
+    /// applied epochs, and the stale-hit accounting invariant holds.
+    #[test]
+    fn streaming_churn_serves_without_errors() {
+        let ds = tiny();
+        let mut scfg = ServeConfig::for_dataset(&ds);
+        scfg.batch_size = 16;
+        scfg.max_delay_us = 1_000;
+        scfg.deadline_us = 500_000;
+        scfg.workers = 2;
+        scfg.fanouts = vec![5, 5];
+        scfg.seed = 11;
+        scfg.mutate_rps = 20_000.0;
+        scfg.mutate_epoch = 32;
+        let meta = synthetic_infer_meta(&ds, scfg.batch_size, &scfg.fanouts);
+        let exec = NullExecutor { num_classes: ds.num_classes };
+        let lcfg = closed(4, 50, 3);
+        let rep = run(&ds, &meta, &exec, &scfg, &lcfg).unwrap();
+        assert_eq!(rep.requests, 200, "closed loop answers everything");
+        assert_eq!(rep.errors, 0);
+        let st = rep.stream.as_ref().expect("mutate>0 must report stream");
+        assert!(st.updates_ingested > 0, "churn generator never ran");
+        assert!(st.epochs >= 1, "no update epoch applied");
+        assert_eq!(
+            st.edge_inserts
+                + st.edge_deletes
+                + st.feature_rewrites
+                + st.noop_updates,
+            st.updates_ingested as usize,
+            "every ingested update must be accounted for"
+        );
+        // the stale-hit accounting invariant, rollup and per shard
+        assert_eq!(
+            rep.cache_lookups,
+            rep.cache_hits + rep.cache_misses + rep.stale_hits
+        );
+        for sh in &rep.shards {
+            assert_eq!(
+                sh.cache_lookups,
+                sh.cache_hits + sh.cache_misses + sh.stale_hits,
+                "shard {}",
+                sh.id
+            );
+        }
+        let j = rep.to_json().to_string_pretty();
+        assert!(j.contains("mutate_ups"));
+        assert!(j.contains("stale_hits"));
+    }
+
+    /// A frozen-graph run reports no stream section and can never see
+    /// a stale hit.
+    #[test]
+    fn frozen_run_has_no_stream_section() {
+        let ds = tiny();
+        let mut scfg = ServeConfig::for_dataset(&ds);
+        scfg.batch_size = 8;
+        scfg.workers = 1;
+        scfg.fanouts = vec![5, 5];
+        let meta = synthetic_infer_meta(&ds, scfg.batch_size, &scfg.fanouts);
+        let exec = NullExecutor { num_classes: ds.num_classes };
+        let lcfg = closed(2, 10, 7);
+        let rep = run(&ds, &meta, &exec, &scfg, &lcfg).unwrap();
+        assert!(rep.stream.is_none());
+        assert_eq!(rep.stale_hits, 0);
+        assert_eq!(
+            rep.cache_lookups,
+            rep.cache_hits + rep.cache_misses
+        );
+        let j = rep.to_json().to_string_pretty();
+        assert!(j.contains("\"stream\": null"));
     }
 
     #[test]

@@ -37,7 +37,7 @@ use crate::util::rng::Rng;
 
 use super::admission::{AdmissionController, AdmissionPolicy, AdmitDecision};
 use super::queue::{PushRejected, RequestQueue};
-use super::shard::ShardPlan;
+use super::shard::LabelCell;
 use super::{Reply, Request, ServeClock};
 
 /// Arrival discipline of the load generator.
@@ -155,11 +155,10 @@ pub struct ClientCtx<'a> {
     pub records: &'a Mutex<Vec<ReqRecord>>,
     /// Admission gate consulted at enqueue time.
     pub adm: &'a AdmissionController,
-    /// Community → shard plan (to attribute a request to its shard
-    /// before it is enqueued).
-    pub plan: &'a ShardPlan,
-    /// Node id → community id labels.
-    pub community: &'a [u32],
+    /// Current community-label snapshot cell (labels + shard plan),
+    /// read per request so admission attribution follows live
+    /// relabels.
+    pub label_cell: &'a LabelCell,
     /// Per-shard queued-batch depth counters (routing backlog).
     pub depths: &'a [AtomicUsize],
 }
@@ -173,7 +172,7 @@ impl ClientCtx<'_> {
     /// The shard that would own a request for `node`, and its current
     /// routed-batch backlog (admission inputs).
     fn shard_and_depth(&self, node: u32) -> (usize, usize) {
-        let shard = self.plan.shard_of_node(self.community, node);
+        let shard = self.label_cell.snapshot().owner_shard(node);
         (shard, self.depths[shard].load(Ordering::Relaxed))
     }
 }

@@ -39,8 +39,19 @@
 //! throughput / tail-latency / shed-rate report with a per-shard
 //! breakdown (`comm-rand serve bench`, `comm-rand exp serve`).
 //!
-//! See `docs/ARCHITECTURE.md` for the request lifecycle diagram and
-//! the knob reference.
+//! With `mutate=RATE` the graph itself churns while it is served
+//! ([`crate::stream`]): edge inserts/deletes and feature rewrites land
+//! in epochs through versioned snapshots — workers sample the current
+//! [`crate::graph::TopoSnapshot`], route against the current
+//! [`LabelSnapshot`] ([`shard::LabelCell`]), and stage features
+//! through the version-tagged cache, where a rewritten row's cached
+//! copies turn *stale* (counted, served like misses). Incremental
+//! community maintenance keeps the shard plan aligned with the live
+//! topology; full relabels re-fingerprint the checkpoint fence.
+//!
+//! See `docs/ARCHITECTURE.md` for the request lifecycle diagram, the
+//! knob reference, and the update lifecycle (mutation → relabel →
+//! invalidation).
 
 pub mod admission;
 pub mod batcher;
@@ -53,11 +64,11 @@ pub mod worker;
 
 pub use admission::{AdmissionController, AdmissionPolicy, AdmitDecision};
 pub use batcher::{BatcherConfig, MicroBatcher};
-pub use cache::{CacheStats, FeatureCacheConfig, ShardedFeatureCache};
+pub use cache::{CacheStats, FeatureCacheConfig, Fetched, ShardedFeatureCache};
 pub use engine::{run, ServeConfig, ServeReport};
 pub use loadgen::{Arrival, LoadConfig};
 pub use queue::RequestQueue;
-pub use shard::{ShardPlan, ShardReport, SpillPolicy};
+pub use shard::{LabelCell, LabelSnapshot, ShardPlan, ShardReport, SpillPolicy};
 pub use worker::{
     HostExecutor, InferExecutor, InferOut, NullExecutor, PjrtExecutor,
 };

@@ -23,8 +23,12 @@
 //!   (queue depth, affinity violations, latency percentiles, cache hit
 //!   rate) rolled up into the engine's `ServeReport`.
 
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
 use anyhow::{bail, Result};
 
+use crate::ckpt::format::community_fingerprint;
 use crate::util::json::{num, obj, Json};
 use crate::util::stats::percentile;
 
@@ -98,6 +102,7 @@ impl SpillPolicy {
 /// // routing a request follows its node's community label
 /// assert_eq!(plan.shard_of_node(&community, 4), plan.shard_of_comm(1));
 /// ```
+#[derive(Clone, Debug)]
 pub struct ShardPlan {
     n_shards: usize,
     /// community id → owning shard.
@@ -159,9 +164,131 @@ impl ShardPlan {
     pub fn owned_nodes(&self, shard: usize) -> usize {
         self.owned_nodes[shard]
     }
+
+    /// Patch the plan in place for one vertex that moved from
+    /// community `old_c` to `new_c` (incremental maintenance): the
+    /// community → shard mapping is untouched — only the per-shard
+    /// node-ownership counters follow the mover. `owned_comms` is left
+    /// as-is even if a community empties; a full relabel rebuilds the
+    /// plan exactly.
+    pub fn apply_move(&mut self, old_c: u32, new_c: u32) {
+        let s_old = self.shard_of_comm(old_c);
+        let s_new = self.shard_of_comm(new_c);
+        if s_old != s_new {
+            self.owned_nodes[s_old] = self.owned_nodes[s_old].saturating_sub(1);
+            self.owned_nodes[s_new] += 1;
+        }
+    }
 }
 
-/// Route one formed micro-batch to shards under `policy`.
+/// One immutable, versioned view of the community labeling and the
+/// routing state derived from it: the label array, its shard plan,
+/// the checkpoint-fence fingerprint of the labeling *generation*, and
+/// the warm-cache routing overrides for recent cross-shard movers.
+///
+/// Static runs build one at startup and never replace it; streaming
+/// runs publish a new snapshot per refinement wave (cheap: labels are
+/// copied, the plan is patched) and per full relabel (plan rebuilt,
+/// fingerprint regenerated — which is what fences stale checkpoints).
+/// Readers hold an `Arc` per batch/request, so routing, foreign-
+/// request accounting and sampling within one batch all see the same
+/// labeling.
+pub struct LabelSnapshot {
+    /// Monotone snapshot version (0 = the labels the run started with).
+    pub version: u64,
+    /// Node → community labels.
+    pub labels: Vec<u32>,
+    /// Size of the community id space.
+    pub num_comms: usize,
+    /// [`community_fingerprint`] of the labeling *generation*: stable
+    /// across incremental refinement waves, regenerated by a full
+    /// relabel (checkpoints fenced against it stop validating then).
+    pub fingerprint: u64,
+    /// Community → shard plan for this labeling.
+    pub plan: ShardPlan,
+    /// Node → shard routing overrides for cross-shard movers: for one
+    /// refinement wave the mover keeps routing to its *old* shard,
+    /// whose cache still holds its rows (the strict-spill fallback;
+    /// the move shows up as a foreign request there, so the affinity
+    /// cost stays observable).
+    pub overrides: HashMap<u32, u32>,
+}
+
+impl LabelSnapshot {
+    /// Version-0 snapshot over a frozen labeling (the non-streaming
+    /// path, and the starting point of every streaming run).
+    pub fn initial(
+        labels: &[u32],
+        num_comms: usize,
+        n_shards: usize,
+    ) -> LabelSnapshot {
+        LabelSnapshot {
+            version: 0,
+            labels: labels.to_vec(),
+            num_comms,
+            fingerprint: community_fingerprint(labels, num_comms),
+            plan: ShardPlan::build(labels, num_comms, n_shards),
+            overrides: HashMap::new(),
+        }
+    }
+
+    /// The shard that *owns* `node` under the plan (plan truth — used
+    /// for foreign-request accounting and admission attribution).
+    pub fn owner_shard(&self, node: u32) -> usize {
+        self.plan.shard_of_comm(self.labels[node as usize])
+    }
+
+    /// The shard a request for `node` is *routed* to: the owner,
+    /// unless a recent cross-shard move left its rows warm on the old
+    /// shard (the override).
+    pub fn route_shard(&self, node: u32) -> usize {
+        if let Some(&s) = self.overrides.get(&node) {
+            return s as usize;
+        }
+        self.owner_shard(node)
+    }
+}
+
+/// Shared cell holding the current [`LabelSnapshot`]: readers take
+/// cheap `Arc` snapshots; the streaming applier publishes replacements
+/// through [`LabelCell::replace_blocking`]. A stop-the-world full
+/// relabel runs its (expensive) rebuild *inside* the lock on purpose —
+/// that serialization is the cost the naive maintenance baseline pays
+/// and `exp stream` measures.
+pub struct LabelCell {
+    cur: Mutex<Arc<LabelSnapshot>>,
+}
+
+impl LabelCell {
+    /// Cell starting at `snap`.
+    pub fn new(snap: LabelSnapshot) -> LabelCell {
+        LabelCell { cur: Mutex::new(Arc::new(snap)) }
+    }
+
+    /// The current snapshot (lock + `Arc` clone).
+    pub fn snapshot(&self) -> Arc<LabelSnapshot> {
+        self.cur.lock().unwrap().clone()
+    }
+
+    /// Replace the snapshot with `f(current)`, holding the cell locked
+    /// while `f` runs — readers block until the replacement is
+    /// published. Incremental waves keep `f` in the microsecond range;
+    /// the naive full relabel deliberately runs Louvain inside it.
+    pub fn replace_blocking<F>(&self, f: F) -> Arc<LabelSnapshot>
+    where
+        F: FnOnce(&LabelSnapshot) -> LabelSnapshot,
+    {
+        let mut g = self.cur.lock().unwrap();
+        let next = Arc::new(f(&**g));
+        *g = next.clone();
+        next
+    }
+}
+
+/// Route one formed micro-batch to shards under `policy`, against one
+/// consistent [`LabelSnapshot`] (routing follows
+/// [`LabelSnapshot::route_shard`], i.e. the plan plus the cross-shard
+/// mover overrides).
 ///
 /// `depths` is a snapshot of each shard's queued-batch count and
 /// `caps` the per-shard channel capacity (used by [`SpillPolicy::Steal`]
@@ -172,15 +299,14 @@ impl ShardPlan {
 /// collapsing onto shard 0. Returns `(shard, sub-batch)` pairs; every
 /// request appears in exactly one sub-batch.
 pub fn route_batch(
-    plan: &ShardPlan,
-    community: &[u32],
+    snap: &LabelSnapshot,
     policy: SpillPolicy,
     depths: &[usize],
     caps: &[usize],
     rr: usize,
     batch: Vec<Request>,
 ) -> Vec<(usize, Vec<Request>)> {
-    let n = plan.n_shards();
+    let n = snap.plan.n_shards();
     if n == 1 || batch.is_empty() {
         return vec![(0, batch)];
     }
@@ -188,7 +314,7 @@ pub fn route_batch(
         SpillPolicy::Strict => {
             let mut per: Vec<Vec<Request>> = (0..n).map(|_| Vec::new()).collect();
             for r in batch {
-                per[plan.shard_of_node(community, r.node)].push(r);
+                per[snap.route_shard(r.node)].push(r);
             }
             per.into_iter()
                 .enumerate()
@@ -196,7 +322,7 @@ pub fn route_batch(
                 .collect()
         }
         SpillPolicy::Steal => {
-            let owner = majority_owner(plan, community, &batch);
+            let owner = majority_owner(snap, &batch);
             let target = if depths[owner] >= caps[owner].max(1) {
                 least_loaded(depths, rr)
             } else {
@@ -210,10 +336,10 @@ pub fn route_batch(
 
 /// Shard owning the plurality of the batch's requests (ties → lower
 /// shard id).
-fn majority_owner(plan: &ShardPlan, community: &[u32], batch: &[Request]) -> usize {
-    let mut count = vec![0usize; plan.n_shards()];
+fn majority_owner(snap: &LabelSnapshot, batch: &[Request]) -> usize {
+    let mut count = vec![0usize; snap.plan.n_shards()];
     for r in batch {
-        count[plan.shard_of_node(community, r.node)] += 1;
+        count[snap.route_shard(r.node)] += 1;
     }
     (0..count.len()).max_by_key(|&s| (count[s], usize::MAX - s)).unwrap_or(0)
 }
@@ -309,7 +435,13 @@ pub struct ShardReport {
     pub cache_hits: u64,
     /// Feature-cache misses on this shard's cache.
     pub cache_misses: u64,
-    /// hits / (hits + misses), 0 when the cache was never touched.
+    /// Stale hits (cached at an older feature version; refreshed and
+    /// served like misses) on this shard's cache.
+    pub stale_hits: u64,
+    /// Total fetches on this shard's cache — always equals
+    /// `cache_hits + cache_misses + stale_hits`.
+    pub cache_lookups: u64,
+    /// hits / lookups, 0 when the cache was never touched.
     pub cache_hit_rate: f64,
 }
 
@@ -347,6 +479,8 @@ impl ShardReport {
             lat_p99_ms: pct(99.0),
             cache_hits: cache.hits,
             cache_misses: cache.misses,
+            stale_hits: cache.stale_hits,
+            cache_lookups: cache.lookups,
             cache_hit_rate: cache.hit_rate(),
         }
     }
@@ -372,6 +506,8 @@ impl ShardReport {
             ("lat_p99_ms", num(self.lat_p99_ms)),
             ("cache_hits", num(self.cache_hits as f64)),
             ("cache_misses", num(self.cache_misses as f64)),
+            ("stale_hits", num(self.stale_hits as f64)),
+            ("cache_lookups", num(self.cache_lookups as f64)),
             ("cache_hit_rate", num(self.cache_hit_rate)),
         ])
     }
@@ -445,11 +581,10 @@ mod tests {
     fn strict_splits_by_owning_shard() {
         // 2 communities, one per shard
         let community = vec![0u32, 0, 1, 1];
-        let plan = ShardPlan::build(&community, 2, 2);
+        let snap = LabelSnapshot::initial(&community, 2, 2);
         let batch = vec![req(1, 0), req(2, 2), req(3, 1), req(4, 3)];
         let routed = route_batch(
-            &plan,
-            &community,
+            &snap,
             SpillPolicy::Strict,
             &[0, 0],
             &[4, 4],
@@ -462,7 +597,7 @@ mod tests {
         for (shard, sub) in &routed {
             for r in sub {
                 assert_eq!(
-                    plan.shard_of_node(&community, r.node),
+                    snap.owner_shard(r.node),
                     *shard,
                     "request {} on foreign shard",
                     r.id
@@ -474,13 +609,12 @@ mod tests {
     #[test]
     fn steal_keeps_batch_whole_on_majority_owner() {
         let community = vec![0u32, 0, 1, 1];
-        let plan = ShardPlan::build(&community, 2, 2);
-        let owner0 = plan.shard_of_comm(0);
+        let snap = LabelSnapshot::initial(&community, 2, 2);
+        let owner0 = snap.plan.shard_of_comm(0);
         // 2 requests from community 0, 1 from community 1
         let batch = vec![req(1, 0), req(2, 1), req(3, 2)];
         let routed = route_batch(
-            &plan,
-            &community,
+            &snap,
             SpillPolicy::Steal,
             &[0, 0],
             &[4, 4],
@@ -495,15 +629,14 @@ mod tests {
     #[test]
     fn steal_spills_to_least_loaded_when_owner_full() {
         let community = vec![0u32, 0, 1, 1];
-        let plan = ShardPlan::build(&community, 2, 2);
-        let owner0 = plan.shard_of_comm(0);
+        let snap = LabelSnapshot::initial(&community, 2, 2);
+        let owner0 = snap.plan.shard_of_comm(0);
         let other = 1 - owner0;
         let mut depths = [0usize, 0];
         depths[owner0] = 4; // at cap
         let batch = vec![req(1, 0), req(2, 1)];
         let routed = route_batch(
-            &plan,
-            &community,
+            &snap,
             SpillPolicy::Steal,
             &depths,
             &[4, 4],
@@ -517,11 +650,10 @@ mod tests {
     #[test]
     fn broadcast_targets_least_loaded_shard() {
         let community = vec![0u32, 0, 1, 1];
-        let plan = ShardPlan::build(&community, 2, 2);
+        let snap = LabelSnapshot::initial(&community, 2, 2);
         let batch = vec![req(1, 0), req(2, 0)];
         let routed = route_batch(
-            &plan,
-            &community,
+            &snap,
             SpillPolicy::Broadcast,
             &[3, 1],
             &[4, 4],
@@ -538,13 +670,12 @@ mod tests {
     #[test]
     fn broadcast_rotates_across_idle_shards() {
         let community = vec![0u32, 1, 2, 3];
-        let plan = ShardPlan::build(&community, 4, 4);
+        let snap = LabelSnapshot::initial(&community, 4, 4);
         let mut hit = [0usize; 4];
         for rr in 0..8 {
             let batch = vec![req(rr as u64, 0)];
             let routed = route_batch(
-                &plan,
-                &community,
+                &snap,
                 SpillPolicy::Broadcast,
                 &[0, 0, 0, 0],
                 &[2, 2, 2, 2],
@@ -559,17 +690,87 @@ mod tests {
     #[test]
     fn single_shard_routes_whole_batch_to_zero() {
         let community = vec![0u32, 1, 2, 3];
-        let plan = ShardPlan::build(&community, 4, 1);
+        let snap = LabelSnapshot::initial(&community, 4, 1);
         for policy in
             [SpillPolicy::Strict, SpillPolicy::Steal, SpillPolicy::Broadcast]
         {
             let batch = vec![req(1, 0), req(2, 3)];
             let routed =
-                route_batch(&plan, &community, policy, &[0], &[2], 0, batch);
+                route_batch(&snap, policy, &[0], &[2], 0, batch);
             assert_eq!(routed.len(), 1);
             assert_eq!(routed[0].0, 0);
             assert_eq!(routed[0].1.len(), 2);
         }
+    }
+
+    /// A cross-shard mover with a routing override keeps landing on
+    /// its old (warm-cache) shard under strict spill, while
+    /// `owner_shard` reports plan truth — so the batch is still
+    /// accounted as foreign there.
+    #[test]
+    fn mover_override_routes_to_the_warm_shard() {
+        let community = vec![0u32, 0, 1, 1];
+        let mut snap = LabelSnapshot::initial(&community, 2, 2);
+        let s0 = snap.plan.shard_of_comm(0);
+        let s1 = snap.plan.shard_of_comm(1);
+        assert_ne!(s0, s1);
+        // node 1 moves community 0 -> 1 (now owned by s1), but keeps
+        // routing to s0 for one wave
+        snap.labels[1] = 1;
+        snap.plan.apply_move(0, 1);
+        snap.overrides.insert(1, s0 as u32);
+        assert_eq!(snap.owner_shard(1), s1, "plan truth follows the move");
+        assert_eq!(snap.route_shard(1), s0, "override keeps the cache warm");
+        let routed = route_batch(
+            &snap,
+            SpillPolicy::Strict,
+            &[0, 0],
+            &[4, 4],
+            0,
+            vec![req(1, 1)],
+        );
+        assert_eq!(routed.len(), 1);
+        assert_eq!(routed[0].0, s0);
+        // ownership counters followed the mover
+        assert_eq!(snap.plan.owned_nodes(s0), 1);
+        assert_eq!(snap.plan.owned_nodes(s1), 3);
+    }
+
+    #[test]
+    fn initial_snapshot_matches_plan_and_fingerprint() {
+        let community: Vec<u32> = (0..100u32).map(|v| v % 5).collect();
+        let snap = LabelSnapshot::initial(&community, 5, 2);
+        assert_eq!(snap.version, 0);
+        assert_eq!(snap.num_comms, 5);
+        assert!(snap.overrides.is_empty());
+        assert_eq!(
+            snap.fingerprint,
+            crate::ckpt::format::community_fingerprint(&community, 5)
+        );
+        for v in 0..100u32 {
+            assert_eq!(
+                snap.owner_shard(v),
+                snap.plan.shard_of_node(&community, v)
+            );
+            assert_eq!(snap.route_shard(v), snap.owner_shard(v));
+        }
+    }
+
+    #[test]
+    fn label_cell_publishes_replacements_atomically() {
+        let community = vec![0u32, 1, 2, 3];
+        let cell = LabelCell::new(LabelSnapshot::initial(&community, 4, 2));
+        assert_eq!(cell.snapshot().version, 0);
+        let published = cell.replace_blocking(|old| LabelSnapshot {
+            version: old.version + 1,
+            labels: old.labels.clone(),
+            num_comms: old.num_comms,
+            fingerprint: old.fingerprint,
+            plan: old.plan.clone(),
+            overrides: HashMap::new(),
+        });
+        assert_eq!(published.version, 1);
+        assert_eq!(cell.snapshot().version, 1);
     }
 
     #[test]

@@ -35,16 +35,17 @@ use anyhow::{bail, Result};
 
 use crate::batch::assemble;
 use crate::ckpt::ParamVersion;
-use crate::graph::Dataset;
+use crate::graph::{Dataset, Topology};
 use crate::runtime::artifact::ArtifactMeta;
 use crate::runtime::host;
 use crate::runtime::InferState;
 use crate::sampler::{build_mfg, NeighborPolicy};
+use crate::stream::StreamState;
 use crate::util::rng::Rng;
 
 use super::admission::AdmissionController;
 use super::cache::ShardedFeatureCache;
-use super::shard::{ShardPlan, ShardStatsCell};
+use super::shard::{LabelCell, LabelSnapshot, ShardStatsCell};
 use super::{Reply, Request, ServeClock};
 
 /// Result of one executor call: the logits plus the parameter version
@@ -237,6 +238,11 @@ pub struct WorkerCtx<'a> {
     pub exec: &'a dyn InferExecutor,
     /// The run's shared monotonic clock.
     pub clock: &'a ServeClock,
+    /// Streaming-mutation state (`serve bench mutate=`): when present,
+    /// each batch samples against the current topology snapshot and
+    /// stages features at their live versions (stale cached copies
+    /// refresh and count as `stale_hits`). `None` = frozen graph.
+    pub stream: Option<&'a StreamState>,
 }
 
 /// Per-batch accounting merged into the engine's totals (cache
@@ -275,7 +281,7 @@ pub struct BatchOutcome {
 pub fn shard_worker_loop(
     ctx: &WorkerCtx<'_>,
     shard_id: usize,
-    plan: &ShardPlan,
+    labels: &LabelCell,
     rx: &Mutex<Receiver<Vec<Request>>>,
     depth: &AtomicUsize,
     cell: &Mutex<ShardStatsCell>,
@@ -287,14 +293,16 @@ pub fn shard_worker_loop(
         let Ok(reqs) = next else { return };
         // depth at receive time (pre-decrement) still includes this batch
         let d = depth.fetch_sub(1, Ordering::Relaxed);
-        let community = &ctx.ds.community;
+        // one label snapshot per batch: foreign accounting, sampling
+        // bias and (for movers) the warm-cache routing all agree
+        let snap = labels.snapshot();
         let foreign = reqs
             .iter()
-            .filter(|r| plan.shard_of_node(community, r.node) != shard_id)
+            .filter(|r| snap.owner_shard(r.node) != shard_id)
             .count();
         let arrives: Vec<u64> = reqs.iter().map(|r| r.arrive_us).collect();
         let t0 = ctx.clock.now_us();
-        let out = process_batch(ctx, reqs, rng);
+        let out = process_batch(ctx, &snap, reqs, rng);
         let now = ctx.clock.now_us();
         adm.record_service(shard_id, now.saturating_sub(t0) as f64);
         let mut g = cell.lock().unwrap();
@@ -339,8 +347,15 @@ pub fn shard_worker_loop(
 /// fanout at the elementwise minimum across members — one degraded
 /// rider shrinks the whole batch's MFG, which is the point: the batch
 /// must fit the tightest remaining deadline budget in it.
+///
+/// `snap` is the label snapshot the batch was routed under; sampling
+/// reads its labels, so a batch is consistent with its own routing
+/// even while refinement publishes newer snapshots. Under streaming
+/// (`ctx.stream`) the MFG samples the current topology snapshot and
+/// feature staging goes through the versioned cache path.
 pub fn process_batch(
     ctx: &WorkerCtx<'_>,
+    snap: &LabelSnapshot,
     reqs: Vec<Request>,
     rng: &mut Rng,
 ) -> BatchOutcome {
@@ -362,9 +377,17 @@ pub fn process_batch(
         }
     }
 
+    // topology: the frozen CSR, or — streaming — the snapshot current
+    // at batch start (held for the whole batch, so the MFG is
+    // internally consistent no matter what epochs land meanwhile)
+    let topo_snap = ctx.stream.map(|st| st.topo());
+    let topo: &dyn Topology = match &topo_snap {
+        Some(t) => &**t,
+        None => &ds.csr,
+    };
     let mfg = build_mfg(
-        &ds.csr,
-        &ds.community,
+        topo,
+        &snap.labels,
         &roots,
         &fanouts,
         NeighborPolicy::Uniform,
@@ -380,7 +403,23 @@ pub fn process_batch(
     let input = mfg.input_nodes();
     let mut staged = vec![0f32; input.len() * f];
     for (i, &v) in input.iter().enumerate() {
-        ctx.cache.fetch(v, ds.feature_row(v), &mut staged[i * f..(i + 1) * f]);
+        let dst = &mut staged[i * f..(i + 1) * f];
+        match ctx.stream {
+            Some(st) => {
+                // versioned path: a rewritten row carries its overlay
+                // version; cached copies at older versions refresh and
+                // count as stale hits
+                let (ver, row) = st.feat().version_and_row(v);
+                let src: &[f32] = match &row {
+                    Some(r) => r.as_slice(),
+                    None => ds.feature_row(v),
+                };
+                ctx.cache.fetch_versioned(v, ver, src, dst);
+            }
+            None => {
+                ctx.cache.fetch(v, ds.feature_row(v), dst);
+            }
+        }
     }
 
     let result: Result<InferOut> =
@@ -492,6 +531,7 @@ mod tests {
             cache: &cache,
             exec: &exec,
             clock: &clock,
+            stream: None,
         };
         let (tx, rx) = mpsc::channel();
         // includes a duplicate node: both requests must be answered
@@ -499,8 +539,9 @@ mod tests {
             .iter()
             .map(|&(id, node)| mk_req(id, node, ds.labels[node as usize], &tx))
             .collect();
+        let snap = LabelSnapshot::initial(&ds.community, ds.num_comms, 1);
         let mut rng = Rng::new(5);
-        let out = process_batch(&ctx, reqs, &mut rng);
+        let out = process_batch(&ctx, &snap, reqs, &mut rng);
         assert_eq!(out.requests, 3);
         assert_eq!(out.errors, 0);
         assert!(out.input_nodes >= 2);
@@ -536,6 +577,7 @@ mod tests {
             cache: &cache,
             exec: &exec,
             clock: &clock,
+            stream: None,
         };
         let nodes: [u32; 4] = [11, 23, 42, 57];
         let run = |caps: Option<Vec<usize>>| -> BatchOutcome {
@@ -552,8 +594,10 @@ mod tests {
                     r
                 })
                 .collect();
+            let snap =
+                LabelSnapshot::initial(&ds.community, ds.num_comms, 1);
             let mut rng = Rng::new(9);
-            let out = process_batch(&ctx, reqs, &mut rng);
+            let out = process_batch(&ctx, &snap, reqs, &mut rng);
             drop(tx);
             let replies: Vec<Reply> = rx.iter().collect();
             assert_eq!(replies.len(), 4);
@@ -592,12 +636,14 @@ mod tests {
             cache: &cache,
             exec: &exec,
             clock: &clock,
+            stream: None,
         };
+        let snap = LabelSnapshot::initial(&ds.community, ds.num_comms, 1);
         let (tx, rx) = mpsc::channel();
         let reqs =
             vec![mk_req(1, 10, ds.labels[10], &tx), mk_req(2, 20, ds.labels[20], &tx)];
         let mut rng = Rng::new(1);
-        let out = process_batch(&ctx, reqs, &mut rng);
+        let out = process_batch(&ctx, &snap, reqs, &mut rng);
         assert_eq!(out.errors, 0);
         assert_eq!(out.param_version, 0);
         drop(tx);
@@ -628,6 +674,7 @@ mod tests {
         let (tx2, rx2) = mpsc::channel();
         let out2 = process_batch(
             &ctx,
+            &snap,
             vec![mk_req(3, 10, ds.labels[10], &tx2)],
             &mut rng,
         );

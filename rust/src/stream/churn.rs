@@ -1,0 +1,240 @@
+//! Synthetic churn generation: a paced stream of edge inserts, edge
+//! deletes and feature-row rewrites driven alongside the load
+//! generator (`serve bench mutate=RATE`).
+//!
+//! The mix is fixed (≈ 30 % feature rewrites, 35 % inserts, 35 %
+//! deletes), endpoints are uniform over the node space, and deletes
+//! target *existing* edges (sampled vertex → random live neighbor), so
+//! at a steady rate the edge count stays roughly stationary while the
+//! community structure erodes — the regime the incremental maintainer
+//! exists for. Rewrites perturb the node's current row (overlay row if
+//! one exists, the base table otherwise) with gaussian noise, so
+//! feature versions advance without the payload wandering off
+//! distribution.
+//!
+//! [`churn_loop`] is the engine's single writer thread: pace updates
+//! at `rate_ups`, seal the log every `epoch_updates`, apply the epoch
+//! ([`StreamState::apply_epoch`]), repeat until stopped. If an apply
+//! runs long (a stop-the-world full relabel), pacing falls behind and
+//! the loop catches up by bursting — offered churn is open-loop, like
+//! the Poisson request generator.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::Duration;
+
+use crate::graph::{Dataset, Topology, TopoSnapshot};
+use crate::serve::cache::ShardedFeatureCache;
+use crate::serve::shard::LabelCell;
+use crate::serve::ServeClock;
+use crate::util::rng::Rng;
+
+use super::state::{FeatureOverlay, StreamState};
+use super::update::Mutation;
+
+/// Deterministic churn generator (pure function of its seed and the
+/// snapshots it samples from).
+pub struct ChurnGen {
+    rng: Rng,
+    noise: f32,
+}
+
+impl ChurnGen {
+    /// New generator; `seed` fixes the mutation stream.
+    pub fn new(seed: u64) -> ChurnGen {
+        ChurnGen { rng: Rng::new(seed ^ 0xC0_FFEE), noise: 0.2 }
+    }
+
+    /// Draw the next mutation against the current topology snapshot.
+    pub fn generate(
+        &mut self,
+        topo: &TopoSnapshot,
+        ds: &Dataset,
+        overlay: &FeatureOverlay,
+    ) -> Mutation {
+        let n = topo.num_nodes().max(2) as u64;
+        let roll = self.rng.f64();
+        if roll < 0.30 {
+            let node = self.rng.below(n) as u32;
+            let (_, cur) = overlay.version_and_row(node);
+            let mut row: Vec<f32> = match cur {
+                Some(r) => (*r).clone(),
+                None => ds.feature_row(node).to_vec(),
+            };
+            for x in row.iter_mut() {
+                *x += self.noise * self.rng.normal() as f32;
+            }
+            return Mutation::FeatureRewrite { node, row };
+        }
+        if roll < 0.65 {
+            // insert: uniform pair (an existing edge is a no-op, which
+            // the applier counts but does not apply)
+            let u = self.rng.below(n) as u32;
+            let mut v = self.rng.below(n) as u32;
+            if v == u {
+                v = (v + 1) % n as u32;
+            }
+            return Mutation::EdgeInsert { u, v };
+        }
+        // delete: find a vertex with a live neighbor (bounded probes)
+        for _ in 0..16 {
+            let u = self.rng.below(n) as u32;
+            let d = topo.degree(u);
+            if d > 0 {
+                let v = topo.neighbors(u)[self.rng.usize_below(d)];
+                return Mutation::EdgeDelete { u, v };
+            }
+        }
+        // fully disconnected region: fall back to an insert
+        let u = self.rng.below(n) as u32;
+        let v = (u + 1) % n as u32;
+        Mutation::EdgeInsert { u, v }
+    }
+}
+
+/// Engine thread body: pace → log → seal → apply, until `stop`.
+/// Sleeps in short slices so `stop` is honored promptly; drains one
+/// final partial epoch on the way out so the report's counters cover
+/// every ingested update.
+pub fn churn_loop(
+    st: &StreamState,
+    labels: &LabelCell,
+    ds: &Dataset,
+    caches: &[ShardedFeatureCache],
+    clock: &ServeClock,
+    stop: &AtomicBool,
+) {
+    let cfg = st.cfg().clone();
+    if cfg.rate_ups <= 0.0 {
+        return;
+    }
+    let mut gen = ChurnGen::new(cfg.seed);
+    let per_update_us = 1e6 / cfg.rate_ups;
+    let epoch_updates = cfg.epoch_updates.max(1);
+    let mut next_us = clock.now_us() as f64;
+    'outer: while !stop.load(Ordering::Relaxed) {
+        for _ in 0..epoch_updates {
+            next_us += per_update_us;
+            // sleep to the pace point in ≤ 5 ms slices
+            loop {
+                if stop.load(Ordering::Relaxed) {
+                    break 'outer;
+                }
+                let now = clock.now_us();
+                if (next_us as u64) <= now {
+                    break;
+                }
+                let wait = ((next_us as u64) - now).min(5_000);
+                std::thread::sleep(Duration::from_micros(wait));
+            }
+            let topo = st.topo();
+            let m = gen.generate(&topo, ds, st.feat());
+            st.log().append(clock.now_us(), m);
+        }
+        if let Some(ep) = st.log().seal() {
+            st.apply_epoch(ep, labels, caches);
+        }
+    }
+    if let Some(ep) = st.log().seal() {
+        st.apply_epoch(ep, labels, caches);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::preset;
+    use crate::serve::shard::LabelSnapshot;
+    use crate::stream::state::StreamConfig;
+
+    fn tiny() -> Dataset {
+        crate::train::dataset::build(&preset("tiny").unwrap(), true)
+    }
+
+    #[test]
+    fn generator_mix_covers_all_mutation_kinds() {
+        let ds = tiny();
+        let st = StreamState::new(&ds, StreamConfig::default());
+        let mut gen = ChurnGen::new(7);
+        let topo = st.topo();
+        let (mut ins, mut dels, mut rws) = (0usize, 0usize, 0usize);
+        for _ in 0..600 {
+            match gen.generate(&topo, &ds, st.feat()) {
+                Mutation::EdgeInsert { u, v } => {
+                    assert_ne!(u, v);
+                    assert!((u as usize) < ds.n() && (v as usize) < ds.n());
+                    ins += 1;
+                }
+                Mutation::EdgeDelete { u, v } => {
+                    assert!(topo.has_edge(u, v), "deletes target live edges");
+                    dels += 1;
+                }
+                Mutation::FeatureRewrite { node, row } => {
+                    assert!((node as usize) < ds.n());
+                    assert_eq!(row.len(), ds.feat_dim);
+                    assert!(row.iter().all(|x| x.is_finite()));
+                    rws += 1;
+                }
+            }
+        }
+        assert!(ins > 100, "inserts missing from the mix: {ins}");
+        assert!(dels > 100, "deletes missing from the mix: {dels}");
+        assert!(rws > 100, "rewrites missing from the mix: {rws}");
+    }
+
+    #[test]
+    fn generator_is_deterministic_per_seed() {
+        let ds = tiny();
+        let st = StreamState::new(&ds, StreamConfig::default());
+        let topo = st.topo();
+        let mut a = ChurnGen::new(5);
+        let mut b = ChurnGen::new(5);
+        for _ in 0..50 {
+            assert_eq!(
+                a.generate(&topo, &ds, st.feat()),
+                b.generate(&topo, &ds, st.feat())
+            );
+        }
+    }
+
+    #[test]
+    fn churn_loop_applies_epochs_and_stops() {
+        let ds = tiny();
+        let cfg = StreamConfig {
+            rate_ups: 50_000.0,
+            epoch_updates: 32,
+            ..StreamConfig::default()
+        };
+        let st = StreamState::new(&ds, cfg);
+        let labels = LabelCell::new(LabelSnapshot::initial(
+            &ds.community,
+            ds.num_comms,
+            1,
+        ));
+        let caches: Vec<ShardedFeatureCache> = vec![];
+        let clock = ServeClock::start();
+        let stop = AtomicBool::new(false);
+        std::thread::scope(|s| {
+            let st = &st;
+            let labels = &labels;
+            let ds = &ds;
+            let caches = &caches[..];
+            let clock = &clock;
+            let stop_ref = &stop;
+            let h = s.spawn(move || {
+                churn_loop(st, labels, ds, caches, clock, stop_ref);
+            });
+            std::thread::sleep(Duration::from_millis(60));
+            stop.store(true, Ordering::Relaxed);
+            h.join().unwrap();
+        });
+        use std::sync::atomic::Ordering as O;
+        let epochs = st.counters.epochs_applied.load(O::Relaxed);
+        assert!(epochs >= 1, "at least one epoch must apply in 60 ms");
+        assert_eq!(st.log().pending_len(), 0, "final drain leaves nothing");
+        let applied = st.counters.edge_inserts.load(O::Relaxed)
+            + st.counters.edge_deletes.load(O::Relaxed)
+            + st.counters.feature_rewrites.load(O::Relaxed)
+            + st.counters.noop_updates.load(O::Relaxed);
+        assert_eq!(applied as u64, st.log().ingested());
+    }
+}

@@ -1,0 +1,391 @@
+//! Incremental community maintenance: keep the Louvain labeling
+//! aligned with a mutating topology without re-running Louvain.
+//!
+//! The maintainer owns the live label array plus O(num_comms)
+//! bookkeeping — per-community degree sums and intra-edge counts, the
+//! total edge weight and the sum of squared community degrees — which
+//! is exactly enough to evaluate Newman modularity in O(1) and a
+//! single-vertex move gain in O(deg). Three operations:
+//!
+//! * [`CommunityMaintainer::note_edge`] — O(1) counter update per
+//!   applied edge insert/delete;
+//! * [`CommunityMaintainer::refine`] — a bounded local-move wave over
+//!   the vertices an update epoch touched (plus a one-hop ripple from
+//!   every vertex that moves): each vertex greedily joins the
+//!   neighboring community with the best modularity gain, the same
+//!   move rule as Louvain's phase 1, but evaluated only where the
+//!   graph actually changed;
+//! * [`CommunityMaintainer::full_relabel`] — the escape hatch: when
+//!   [`CommunityMaintainer::drift`] (relative modularity loss since
+//!   the last full detection) crosses the configured threshold, run
+//!   [`louvain_capped`] from scratch over the compacted topology and
+//!   reset the baseline. The caller is responsible for republishing
+//!   the shard plan and the community fingerprint — a full relabel
+//!   changes what node labels *mean*, which is why it also fences
+//!   checkpoints (see `docs/ARCHITECTURE.md`).
+//!
+//! Local moves deliberately never create or renumber communities, so
+//! between full relabels the community id space — and therefore the
+//! community → shard plan and the checkpoint fence fingerprint's
+//! *generation* — stays stable; only vertex membership drifts.
+
+use std::collections::HashMap;
+
+use crate::community::louvain::louvain_capped;
+use crate::graph::{Csr, Topology};
+
+/// One applied vertex move: `(vertex, old_community, new_community)`.
+pub type Move = (u32, u32, u32);
+
+/// Incremental Louvain-label maintainer (see the module docs).
+pub struct CommunityMaintainer {
+    labels: Vec<u32>,
+    num_comms: usize,
+    /// Total directed edge weight (2m).
+    two_m: f64,
+    /// Per-community degree sums.
+    deg: Vec<f64>,
+    /// Per-community directed intra-edge counts.
+    intra: Vec<f64>,
+    sum_sq: f64,
+    intra_total: f64,
+    /// Modularity at the last full detection (the drift baseline).
+    q_baseline: f64,
+    /// Vertices moved by `refine` since the last full relabel.
+    moved_since_full: usize,
+}
+
+impl CommunityMaintainer {
+    /// Build from a topology and its current labeling (O(E) scan).
+    pub fn new<T: Topology + ?Sized>(
+        topo: &T,
+        labels: Vec<u32>,
+        num_comms: usize,
+    ) -> CommunityMaintainer {
+        let n = topo.num_nodes();
+        assert_eq!(labels.len(), n);
+        let mut deg = vec![0f64; num_comms.max(1)];
+        let mut intra = vec![0f64; num_comms.max(1)];
+        let mut two_m = 0f64;
+        for v in 0..n as u32 {
+            let cv = labels[v as usize] as usize;
+            let d = topo.degree(v) as f64;
+            deg[cv] += d;
+            two_m += d;
+            for &u in topo.neighbors(v) {
+                if labels[u as usize] as usize == cv {
+                    intra[cv] += 1.0;
+                }
+            }
+        }
+        let sum_sq = deg.iter().map(|d| d * d).sum();
+        let intra_total = intra.iter().sum();
+        let mut m = CommunityMaintainer {
+            labels,
+            num_comms,
+            two_m,
+            deg,
+            intra,
+            sum_sq,
+            intra_total,
+            q_baseline: 0.0,
+            moved_since_full: 0,
+        };
+        m.q_baseline = m.modularity();
+        m
+    }
+
+    /// The live label array (node → community).
+    pub fn labels(&self) -> &[u32] {
+        &self.labels
+    }
+
+    /// Size of the community id space (fixed between full relabels).
+    pub fn num_comms(&self) -> usize {
+        self.num_comms
+    }
+
+    /// Vertices moved by refinement since the last full relabel.
+    pub fn moved_since_full(&self) -> usize {
+        self.moved_since_full
+    }
+
+    /// Newman modularity of the current labeling over the live
+    /// topology, from the incremental counters (O(1)).
+    pub fn modularity(&self) -> f64 {
+        if self.two_m <= 0.0 {
+            return 0.0;
+        }
+        self.intra_total / self.two_m - self.sum_sq / (self.two_m * self.two_m)
+    }
+
+    /// Modularity baseline captured at the last full detection.
+    pub fn baseline(&self) -> f64 {
+        self.q_baseline
+    }
+
+    /// Relative modularity loss since the last full detection, in
+    /// `[0, ∞)`; 0 while the labeling still fits the topology.
+    pub fn drift(&self) -> f64 {
+        (self.q_baseline - self.modularity()).max(0.0)
+            / self.q_baseline.abs().max(1e-6)
+    }
+
+    /// Fold one *applied* edge insert/delete into the counters. Must
+    /// mirror exactly the updates the topology snapshot accepted
+    /// ([`crate::graph::TopoSnapshot::apply`]'s `applied` list).
+    pub fn note_edge(&mut self, u: u32, v: u32, insert: bool) {
+        let s = if insert { 1.0 } else { -1.0 };
+        let cu = self.labels[u as usize] as usize;
+        let cv = self.labels[v as usize] as usize;
+        self.two_m += 2.0 * s;
+        for c in [cu, cv] {
+            self.sum_sq -= self.deg[c] * self.deg[c];
+            self.deg[c] += s;
+            self.sum_sq += self.deg[c] * self.deg[c];
+        }
+        if cu == cv {
+            self.intra[cu] += 2.0 * s;
+            self.intra_total += 2.0 * s;
+        }
+    }
+
+    /// One bounded local-move wave over `touched` (plus a one-hop
+    /// ripple from every vertex that moves). Returns the applied
+    /// moves. `topo` must already include the epoch's edge updates.
+    pub fn refine<T: Topology + ?Sized>(
+        &mut self,
+        topo: &T,
+        touched: &[u32],
+    ) -> Vec<Move> {
+        let mut queue: Vec<u32> = touched.to_vec();
+        queue.sort_unstable();
+        queue.dedup();
+        let budget = (queue.len() * 4).max(64);
+        let mut moves = Vec::new();
+        let mut visited = 0usize;
+        let mut head = 0usize;
+        let mut nbr_w: HashMap<u32, f64> = HashMap::new();
+        let mut cands: Vec<(u32, f64)> = Vec::new();
+        let two_m = self.two_m.max(1e-9);
+        while head < queue.len() && visited < budget {
+            let v = queue[head];
+            head += 1;
+            visited += 1;
+            let k_v = topo.degree(v) as f64;
+            if k_v == 0.0 {
+                continue;
+            }
+            nbr_w.clear();
+            for &u in topo.neighbors(v) {
+                *nbr_w.entry(self.labels[u as usize]).or_insert(0.0) += 1.0;
+            }
+            let c_old = self.labels[v as usize];
+            let w_own = nbr_w.get(&c_old).copied().unwrap_or(0.0);
+            // gain of staying, with v notionally removed from c_old
+            let stay =
+                w_own - (self.deg[c_old as usize] - k_v) * k_v / two_m;
+            // candidates in ascending community order: HashMap
+            // iteration order is randomized per process, and exact
+            // gain ties must resolve identically across runs (the
+            // determinism-per-seed contract); strictly-greater picks
+            // the lowest community id on a tie.
+            cands.clear();
+            cands.extend(nbr_w.iter().map(|(&c, &w)| (c, w)));
+            cands.sort_unstable_by_key(|&(c, _)| c);
+            let mut best_c = c_old;
+            let mut best_gain = stay;
+            for &(c, w) in &cands {
+                if c == c_old {
+                    continue;
+                }
+                let gain = w - self.deg[c as usize] * k_v / two_m;
+                if gain > best_gain + 1e-9 {
+                    best_gain = gain;
+                    best_c = c;
+                }
+            }
+            if best_c == c_old {
+                continue;
+            }
+            // apply the move: degree mass and intra edges follow v
+            let w_new = nbr_w.get(&best_c).copied().unwrap_or(0.0);
+            for (c, dk) in [(c_old, -k_v), (best_c, k_v)] {
+                let c = c as usize;
+                self.sum_sq -= self.deg[c] * self.deg[c];
+                self.deg[c] += dk;
+                self.sum_sq += self.deg[c] * self.deg[c];
+            }
+            self.intra[c_old as usize] -= 2.0 * w_own;
+            self.intra[best_c as usize] += 2.0 * w_new;
+            self.intra_total += 2.0 * (w_new - w_own);
+            self.labels[v as usize] = best_c;
+            self.moved_since_full += 1;
+            moves.push((v, c_old, best_c));
+            // ripple: a move can unlock its neighbors' moves
+            for &u in topo.neighbors(v) {
+                if queue.len() < budget {
+                    queue.push(u);
+                }
+            }
+        }
+        moves
+    }
+
+    /// Stop-the-world re-detection: run [`louvain_capped`] over the
+    /// compacted topology, adopt its labeling and reset the drift
+    /// baseline. Returns the new community count.
+    pub fn full_relabel(
+        &mut self,
+        csr: &Csr,
+        seed: u64,
+        max_mean_size: usize,
+    ) -> usize {
+        let r = louvain_capped(csr, seed, max_mean_size);
+        *self = CommunityMaintainer::new(csr, r.community, r.num_comms);
+        self.num_comms
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::overlay::TopoSnapshot;
+    use crate::graph::stats;
+    use crate::util::rng::Rng;
+    use std::sync::Arc;
+
+    fn random_graph(n: usize, m: usize, seed: u64) -> Csr {
+        let mut rng = Rng::new(seed);
+        let edges: Vec<(u32, u32)> = (0..m)
+            .map(|_| {
+                (rng.below(n as u64) as u32, rng.below(n as u64) as u32)
+            })
+            .collect();
+        Csr::from_edges(n, &edges)
+    }
+
+    #[test]
+    fn counters_match_reference_modularity() {
+        let g = random_graph(80, 300, 1);
+        let labels: Vec<u32> = (0..80u32).map(|v| v % 5).collect();
+        let m = CommunityMaintainer::new(&g, labels.clone(), 5);
+        let q_ref = stats::modularity(&g, &labels);
+        assert!((m.modularity() - q_ref).abs() < 1e-9);
+        assert!(m.drift() < 1e-12, "fresh maintainer has no drift");
+    }
+
+    #[test]
+    fn note_edge_tracks_mutations_exactly() {
+        let g = random_graph(60, 200, 2);
+        let labels: Vec<u32> = (0..60u32).map(|v| v % 4).collect();
+        let mut m = CommunityMaintainer::new(&g, labels.clone(), 4);
+        let mut snap = TopoSnapshot::from_base(Arc::new(g));
+        let mut rng = Rng::new(3);
+        for _ in 0..30 {
+            let batch: Vec<(u32, u32, bool)> = (0..6)
+                .map(|_| {
+                    (
+                        rng.below(60) as u32,
+                        rng.below(60) as u32,
+                        rng.f64() < 0.5,
+                    )
+                })
+                .collect();
+            let (next, applied) = snap.apply(&batch);
+            snap = next;
+            for (u, v, ins) in applied {
+                m.note_edge(u, v, ins);
+            }
+        }
+        let compacted = snap.compact();
+        let q_ref = stats::modularity(&compacted, &labels);
+        assert!(
+            (m.modularity() - q_ref).abs() < 1e-9,
+            "incremental {} vs reference {}",
+            m.modularity(),
+            q_ref
+        );
+    }
+
+    #[test]
+    fn refine_repairs_a_mislabeled_vertex() {
+        // two K4 cliques joined by a bridge; vertex 0 mislabeled
+        let g = Csr::from_edges(
+            8,
+            &[
+                (0, 1), (0, 2), (0, 3), (1, 2), (1, 3), (2, 3),
+                (4, 5), (4, 6), (4, 7), (5, 6), (5, 7), (6, 7),
+                (3, 4),
+            ],
+        );
+        let mut labels = vec![0u32, 0, 0, 0, 1, 1, 1, 1];
+        labels[0] = 1; // wrong side
+        let mut m = CommunityMaintainer::new(&g, labels, 2);
+        let q_before = m.modularity();
+        let moves = m.refine(&g, &[0]);
+        assert_eq!(moves, vec![(0, 1, 0)]);
+        assert_eq!(m.labels()[0], 0);
+        assert!(m.modularity() > q_before, "refine must improve Q");
+        assert_eq!(m.moved_since_full(), 1);
+        // counters stay exact after the move
+        let q_ref = stats::modularity(&g, m.labels());
+        assert!((m.modularity() - q_ref).abs() < 1e-9);
+    }
+
+    #[test]
+    fn refine_is_a_noop_on_a_stable_labeling() {
+        let g = Csr::from_edges(
+            6,
+            &[(0, 1), (1, 2), (0, 2), (3, 4), (4, 5), (3, 5)],
+        );
+        let labels = vec![0u32, 0, 0, 1, 1, 1];
+        let mut m = CommunityMaintainer::new(&g, labels, 2);
+        let q = m.modularity();
+        let moves = m.refine(&g, &[0, 1, 2, 3, 4, 5]);
+        assert!(moves.is_empty(), "stable labeling must not move");
+        assert!((m.modularity() - q).abs() < 1e-12);
+    }
+
+    #[test]
+    fn drift_rises_under_structure_erosion_and_full_relabel_resets_it() {
+        // two tight cliques; then rewire to destroy the split
+        let mut edges = vec![];
+        for a in 0..8u32 {
+            for b in (a + 1)..8 {
+                edges.push((a, b));
+            }
+        }
+        for a in 8..16u32 {
+            for b in (a + 1)..16 {
+                edges.push((a, b));
+            }
+        }
+        edges.push((0, 8));
+        let g = Csr::from_edges(16, &edges);
+        let labels: Vec<u32> =
+            (0..16u32).map(|v| if v < 8 { 0 } else { 1 }).collect();
+        let mut m = CommunityMaintainer::new(&g, labels, 2);
+        let mut snap = TopoSnapshot::from_base(Arc::new(g));
+        // delete intra edges, insert inter edges
+        let mut batch = vec![];
+        for a in 1..8u32 {
+            batch.push((0, a, false));
+            batch.push((a, 8 + a, true));
+        }
+        let (next, applied) = snap.apply(&batch);
+        snap = next;
+        for (u, v, ins) in applied {
+            m.note_edge(u, v, ins);
+        }
+        assert!(m.drift() > 0.05, "erosion must register: {}", m.drift());
+        let csr = snap.compact();
+        let nc = m.full_relabel(&csr, 7, 64);
+        assert!(nc >= 1);
+        assert!(m.drift() < 1e-9, "full relabel resets the baseline");
+        assert_eq!(m.labels().len(), 16);
+        assert!(m.labels().iter().all(|&c| (c as usize) < m.num_comms()));
+        let q_ref = stats::modularity(&csr, m.labels());
+        assert!((m.modularity() - q_ref).abs() < 1e-9);
+    }
+}

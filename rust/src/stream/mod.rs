@@ -1,0 +1,115 @@
+//! Dynamic-graph mutation subsystem: streaming edge/feature updates
+//! with incremental community maintenance and versioned cache
+//! invalidation.
+//!
+//! Everything COMM-RAND builds on — the reorder, the shard plan, the
+//! feature caches, the checkpoint fingerprint fence — assumes the
+//! Louvain structure is computed once and frozen. Real graphs mutate
+//! continuously, and the locality benefits evaporate once the
+//! partitioning drifts from the live topology. This subsystem opens
+//! that workload:
+//!
+//! * [`update`] — the ingest log: timestamped edge inserts/deletes and
+//!   feature-row rewrites, batched into epochs and applied atomically.
+//! * Topology epochs land as a **versioned CSR delta-overlay**
+//!   ([`crate::graph::TopoSnapshot`]): immutable snapshots layered
+//!   over a frozen base CSR, so in-flight samplers keep reading a
+//!   consistent graph; the overlay auto-compacts into a fresh base
+//!   when it grows.
+//! * [`maintainer`] — **incremental community maintenance**: a bounded
+//!   Louvain-style local-move wave re-refines labels only around the
+//!   vertices an epoch touched, tracks a modularity-drift metric
+//!   against the last full detection, and triggers a stop-the-world
+//!   full relabel (new shard plan, flushed caches, new community
+//!   fingerprint — fencing stale checkpoints through the existing
+//!   [`crate::ckpt`] validation) when drift crosses the threshold.
+//! * [`state`] — the shared run state: topology cell, the
+//!   **versioned feature overlay** (rewritten rows carry a monotone
+//!   feature version; cache slots remember the version they staged,
+//!   so rewrites turn cached copies *stale* — counted separately and
+//!   served like misses), counters and the end-of-run
+//!   [`StreamReport`].
+//! * [`churn`] — the synthetic churn generator `serve bench
+//!   mutate=RATE` drives alongside the load generator.
+//!
+//! The serving engine consumes all of this through snapshot-versioned
+//! access: workers sample against `Arc<TopoSnapshot>`, route against
+//! `Arc<LabelSnapshot>` ([`crate::serve::shard::LabelCell`]) and stage
+//! features through the version-tagged cache. `comm-rand exp stream`
+//! sweeps throughput and accuracy against churn rate with incremental
+//! vs. naive full-relabel maintenance; the update lifecycle diagram
+//! lives in `docs/ARCHITECTURE.md`.
+
+pub mod churn;
+pub mod maintainer;
+pub mod state;
+pub mod update;
+
+pub use churn::{churn_loop, ChurnGen};
+pub use maintainer::CommunityMaintainer;
+pub use state::{
+    FeatureOverlay, StreamConfig, StreamCounters, StreamReport, StreamState,
+};
+pub use update::{Mutation, Timestamped, UpdateEpoch, UpdateLog};
+
+use anyhow::{bail, Result};
+
+/// How the community labeling follows the mutating topology.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MaintenanceMode {
+    /// Bounded local refinement around touched vertices per epoch;
+    /// full relabel only when modularity drift crosses the threshold.
+    Incremental,
+    /// Naive baseline: a stop-the-world full Louvain relabel (plus
+    /// shard-plan rebuild and cache flush) on every update epoch.
+    Full,
+}
+
+impl MaintenanceMode {
+    /// Parse the CLI knob: `incr | full`.
+    pub fn parse(s: &str) -> Result<MaintenanceMode> {
+        match s {
+            "incr" | "incremental" => Ok(MaintenanceMode::Incremental),
+            "full" | "naive" => Ok(MaintenanceMode::Full),
+            other => {
+                bail!("unknown maintenance mode {other:?} (try: incr | full)")
+            }
+        }
+    }
+
+    /// The knob spelling this mode parses from.
+    pub fn name(&self) -> &'static str {
+        match self {
+            MaintenanceMode::Incremental => "incr",
+            MaintenanceMode::Full => "full",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maintenance_mode_parses_and_round_trips() {
+        assert_eq!(
+            MaintenanceMode::parse("incr").unwrap(),
+            MaintenanceMode::Incremental
+        );
+        assert_eq!(
+            MaintenanceMode::parse("incremental").unwrap(),
+            MaintenanceMode::Incremental
+        );
+        assert_eq!(
+            MaintenanceMode::parse("full").unwrap(),
+            MaintenanceMode::Full
+        );
+        assert_eq!(
+            MaintenanceMode::parse("naive").unwrap(),
+            MaintenanceMode::Full
+        );
+        assert_eq!(MaintenanceMode::Incremental.name(), "incr");
+        assert_eq!(MaintenanceMode::Full.name(), "full");
+        assert!(MaintenanceMode::parse("bogus").is_err());
+    }
+}

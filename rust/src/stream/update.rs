@@ -1,0 +1,165 @@
+//! The update log: timestamped graph mutations, batched into epochs.
+//!
+//! Producers ([`super::churn`], tests, a future ingest RPC) append
+//! [`Mutation`]s with a monotone sequence number and the run-clock
+//! timestamp; the single applier thread seals the pending tail into an
+//! [`UpdateEpoch`] and applies it atomically — one topology snapshot,
+//! one maintainer wave, one feature-version batch per epoch. Batching
+//! is what keeps the delta-overlay cheap: the per-epoch apply cost is
+//! proportional to the epoch's touched set, and in-flight samplers
+//! only ever observe epoch boundaries, never half-applied updates.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// One streaming graph mutation.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Mutation {
+    /// Insert the undirected edge `(u, v)` (no-op if present).
+    EdgeInsert {
+        /// One endpoint.
+        u: u32,
+        /// The other endpoint.
+        v: u32,
+    },
+    /// Delete the undirected edge `(u, v)` (no-op if absent).
+    EdgeDelete {
+        /// One endpoint.
+        u: u32,
+        /// The other endpoint.
+        v: u32,
+    },
+    /// Replace `node`'s feature row (bumps its feature version, so
+    /// cached copies everywhere turn stale).
+    FeatureRewrite {
+        /// The rewritten node.
+        node: u32,
+        /// The new feature row (`feat_dim` floats).
+        row: Vec<f32>,
+    },
+}
+
+/// A [`Mutation`] stamped with its ingest order and arrival time.
+#[derive(Clone, Debug)]
+pub struct Timestamped {
+    /// Monotone ingest sequence number (unique within a run).
+    pub seq: u64,
+    /// [`crate::serve::ServeClock`] microseconds at ingest.
+    pub t_us: u64,
+    /// The mutation itself.
+    pub m: Mutation,
+}
+
+/// One sealed batch of updates, applied atomically.
+#[derive(Debug)]
+pub struct UpdateEpoch {
+    /// Epoch number (0-based, monotone).
+    pub id: u64,
+    /// The epoch's updates, in ingest order.
+    pub updates: Vec<Timestamped>,
+}
+
+/// Ingest log: concurrent appends, single-consumer epoch sealing.
+#[derive(Default)]
+pub struct UpdateLog {
+    pending: Mutex<Vec<Timestamped>>,
+    next_seq: AtomicU64,
+    next_epoch: AtomicU64,
+}
+
+impl UpdateLog {
+    /// Empty log.
+    pub fn new() -> UpdateLog {
+        UpdateLog::default()
+    }
+
+    /// Append one mutation; returns its sequence number.
+    pub fn append(&self, t_us: u64, m: Mutation) -> u64 {
+        let seq = self.next_seq.fetch_add(1, Ordering::Relaxed);
+        self.pending
+            .lock()
+            .unwrap()
+            .push(Timestamped { seq, t_us, m });
+        seq
+    }
+
+    /// Updates ingested so far (sealed or not).
+    pub fn ingested(&self) -> u64 {
+        self.next_seq.load(Ordering::Relaxed)
+    }
+
+    /// Updates waiting for the next seal.
+    pub fn pending_len(&self) -> usize {
+        self.pending.lock().unwrap().len()
+    }
+
+    /// Epochs sealed so far.
+    pub fn epochs_sealed(&self) -> u64 {
+        self.next_epoch.load(Ordering::Relaxed)
+    }
+
+    /// Seal the pending tail into an epoch (`None` when nothing is
+    /// pending).
+    pub fn seal(&self) -> Option<UpdateEpoch> {
+        let mut g = self.pending.lock().unwrap();
+        if g.is_empty() {
+            return None;
+        }
+        let updates = std::mem::take(&mut *g);
+        drop(g);
+        let id = self.next_epoch.fetch_add(1, Ordering::Relaxed);
+        Some(UpdateEpoch { id, updates })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sequences_are_monotone_and_epochs_drain() {
+        let log = UpdateLog::new();
+        assert!(log.seal().is_none());
+        for i in 0..10u32 {
+            let s = log.append(i as u64, Mutation::EdgeInsert { u: i, v: i + 1 });
+            assert_eq!(s, i as u64);
+        }
+        assert_eq!(log.pending_len(), 10);
+        let ep = log.seal().unwrap();
+        assert_eq!(ep.id, 0);
+        assert_eq!(ep.updates.len(), 10);
+        assert!(ep.updates.windows(2).all(|w| w[0].seq < w[1].seq));
+        assert_eq!(log.pending_len(), 0);
+        assert!(log.seal().is_none());
+        log.append(99, Mutation::FeatureRewrite { node: 1, row: vec![0.5] });
+        let ep2 = log.seal().unwrap();
+        assert_eq!(ep2.id, 1);
+        assert_eq!(ep2.updates[0].seq, 10);
+        assert_eq!(log.epochs_sealed(), 2);
+        assert_eq!(log.ingested(), 11);
+    }
+
+    #[test]
+    fn concurrent_appends_never_lose_updates() {
+        let log = UpdateLog::new();
+        std::thread::scope(|s| {
+            for t in 0..4u32 {
+                let log = &log;
+                s.spawn(move || {
+                    for i in 0..500u32 {
+                        log.append(
+                            0,
+                            Mutation::EdgeInsert { u: t, v: i },
+                        );
+                    }
+                });
+            }
+        });
+        let ep = log.seal().unwrap();
+        assert_eq!(ep.updates.len(), 2000);
+        let mut seqs: Vec<u64> = ep.updates.iter().map(|u| u.seq).collect();
+        seqs.sort_unstable();
+        seqs.dedup();
+        assert_eq!(seqs.len(), 2000, "duplicate sequence numbers");
+    }
+}
