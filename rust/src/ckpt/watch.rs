@@ -17,6 +17,12 @@
 //! Because checkpoint writers rename atomically, a poll observes
 //! either the old file set or the complete new one, never a torn
 //! write.
+//!
+//! Under request tracing the engine's `publish` callback emits a
+//! `CkptSwap` instant (carrying the installed epoch) on the dedicated
+//! watcher track after each successful install, so hot swaps line up
+//! against the per-shard request spans in Perfetto — the watcher
+//! itself stays trace-agnostic (see [`crate::obs`]).
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};

@@ -141,13 +141,21 @@ COMMANDS:
                            refinement vs naive full relabel per epoch)
                            drift=F (modularity-drift threshold that
                            triggers a full relabel under maint=incr)
+                           trace=PATH (record per-request span events
+                           and export a Chrome-trace JSON — load it in
+                           Perfetto or chrome://tracing)
+                           trace_sample=N (trace N permille of request
+                           ids, default 1000 = all)
+                           metrics_ms=N (write a Prometheus text
+                           snapshot to results/serve_metrics.prom
+                           every N ms; 0 = off)
                            (uses the PJRT infer artifact when present,
                             the pure-rust host executor otherwise)
   exp <id>               regenerate a paper artifact into results/
                            ids: fig2 fig5 fig6 fig7 fig8 fig9 fig10
                                 tab3 tab4 tab5 fullbatch inference
                                 preproc ablation autotune serve ckpt
-                                stream all
+                                stream obs all
   help                   this message
 
 Presets: {}",
@@ -314,6 +322,10 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         maintenance: MaintenanceMode::parse(
             args.get("maint").unwrap_or("incr"),
         )?,
+        trace: args.get("trace").map(std::path::PathBuf::from),
+        trace_sample: args.get_u64("trace_sample", 1000)? as u32,
+        metrics_ms: args.get_u64("metrics_ms", 0)?,
+        metrics_path: defaults.metrics_path,
     };
     if !(0.0..=1.0).contains(&scfg.community_bias) {
         bail!("p must be in [0, 1], got {}", scfg.community_bias);
@@ -326,6 +338,12 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     }
     if !(scfg.drift_threshold.is_finite() && scfg.drift_threshold > 0.0) {
         bail!("drift must be a positive threshold, got {}", scfg.drift_threshold);
+    }
+    if scfg.trace_sample > 1000 {
+        bail!(
+            "trace_sample is permille in [0, 1000], got {}",
+            scfg.trace_sample
+        );
     }
     let lcfg = LoadConfig {
         clients: args.get_usize("clients", 8)?,

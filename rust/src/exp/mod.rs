@@ -17,6 +17,7 @@ pub mod fig8;
 pub mod fig9;
 pub mod fullbatch;
 pub mod inference;
+pub mod obs;
 pub mod preproc;
 pub mod serve;
 pub mod stream;
@@ -42,6 +43,9 @@ pub fn run(args: &Args) -> Result<()> {
     }
     if id == "stream" {
         return stream::run(args);
+    }
+    if id == "obs" {
+        return obs::run(args);
     }
     let mut ctx = Ctx::new()?;
     match id {

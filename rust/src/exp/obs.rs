@@ -1,0 +1,266 @@
+//! Observability overhead gate + trace validation (`comm-rand exp
+//! obs`).
+//!
+//! Tracing that distorts the thing it measures is worse than no
+//! tracing, so this experiment runs the same closed-loop serve bench
+//! three ways — tracing off, sampled (100 ‰ of request ids), and full
+//! rate (1000 ‰) — and **fails** if full-rate tracing costs more than
+//! [`MAX_OVERHEAD_FRAC`] of untraced throughput. Each mode takes the
+//! best of several trials so a scheduler hiccup cannot flunk the gate.
+//!
+//! It then re-parses the full-rate Chrome trace and checks it is a
+//! usable artifact, not just a nonempty file: sample / gather /
+//! execute spans present on the shard tracks, gather spans tagged
+//! with cache hit/stale/miss counts, coalesce spans carrying the
+//! community-purity counters, and the ring-drop count accounted for
+//! in the file's metadata.
+//!
+//! Like `exp serve` this needs no PJRT session (host-executor
+//! fallback), so it runs — and gates CI — in artifact-less
+//! environments.
+
+use anyhow::{bail, Result};
+
+use crate::cli::Args;
+use crate::config::preset;
+use crate::serve::{engine, Arrival, LoadConfig, ServeConfig};
+use crate::util::json::{num, obj, s, Json};
+
+use super::common::{f2, quick, results_dir, write_results, Table};
+
+/// Full-rate tracing may cost at most this fraction of untraced
+/// throughput (the ≤ 5 % acceptance bar).
+pub const MAX_OVERHEAD_FRAC: f64 = 0.05;
+
+struct Mode {
+    label: &'static str,
+    /// `None` = tracing off; `Some(permille)` = trace at that rate.
+    sample: Option<u32>,
+}
+
+pub fn run(args: &Args) -> Result<()> {
+    let name = args.pos.get(1).map(String::as_str).unwrap_or("tiny");
+    let p = preset(name)
+        .ok_or_else(|| anyhow::anyhow!("unknown preset {name}"))?;
+    let ds = crate::train::dataset::load_or_build(&p, true)?;
+
+    let mut scfg = ServeConfig::for_dataset(&ds);
+    scfg.batch_size = args.get_usize("batch", 32)?;
+    scfg.workers = args.get_usize("workers", scfg.workers)?;
+    scfg.shards = args.get_usize("shards", 2)?;
+    scfg.seed = args.get_u64("seed", 0)?;
+    let lcfg = LoadConfig {
+        clients: args.get_usize("clients", 4)?,
+        requests_per_client: args
+            .get_usize("requests", if quick() { 50 } else { 200 })?,
+        zipf_s: args.get_f64("zipf", 1.1)?,
+        arrival: Arrival::Closed,
+        seed: scfg.seed ^ 0x10AD,
+    };
+    let trials = args.get_usize("trials", if quick() { 2 } else { 3 })?.max(1);
+    let (exec, meta) = engine::build_executor(&p, &ds, &scfg);
+
+    let trace_path = results_dir().join("obs_trace.json");
+    let modes = [
+        Mode { label: "off", sample: None },
+        Mode { label: "sampled", sample: Some(100) },
+        Mode { label: "full", sample: Some(1000) },
+    ];
+
+    let mut table = Table::new(&[
+        "mode",
+        "sample ‰",
+        "req/s (best)",
+        "p50 ms",
+        "p99 ms",
+        "overhead",
+    ]);
+    let mut rows = Vec::new();
+    let mut best = [0.0f64; 3];
+    for (mi, mode) in modes.iter().enumerate() {
+        let cfg = ServeConfig {
+            trace: mode.sample.map(|_| trace_path.clone()),
+            trace_sample: mode.sample.unwrap_or(1000),
+            ..scfg.clone()
+        };
+        let mut best_rep = None;
+        for t in 0..trials {
+            let l = LoadConfig { seed: lcfg.seed ^ t as u64, ..lcfg.clone() };
+            let rep = engine::run(&ds, &meta, exec.as_ref(), &cfg, &l)?;
+            println!("[obs] {} trial {}: {}", mode.label, t, rep.summary());
+            if rep.requests != lcfg.clients * lcfg.requests_per_client {
+                bail!(
+                    "mode {} answered {} of {} requests",
+                    mode.label,
+                    rep.requests,
+                    lcfg.clients * lcfg.requests_per_client
+                );
+            }
+            if rep.throughput_rps > best[mi] {
+                best[mi] = rep.throughput_rps;
+                best_rep = Some(rep);
+            }
+        }
+        let rep = best_rep.expect("at least one trial ran");
+        let overhead = 1.0 - best[mi] / best[0].max(1e-9);
+        table.row(vec![
+            mode.label.to_string(),
+            mode.sample.map(|s| s.to_string()).unwrap_or("-".into()),
+            format!("{:.0}", best[mi]),
+            f2(rep.lat_p50_ms),
+            f2(rep.lat_p99_ms),
+            if mi == 0 {
+                "-".to_string()
+            } else {
+                format!("{:+.1}%", overhead * 100.0)
+            },
+        ]);
+        rows.push(obj(vec![
+            ("mode", s(mode.label)),
+            (
+                "sample_permille",
+                num(mode.sample.map(|v| v as f64).unwrap_or(0.0)),
+            ),
+            ("throughput_rps", num(best[mi])),
+            ("overhead_frac", num(if mi == 0 { 0.0 } else { overhead })),
+            ("report", rep.to_json()),
+        ]));
+    }
+
+    // ---- the overhead gate ----
+    let overhead = 1.0 - best[2] / best[0].max(1e-9);
+    println!(
+        "[obs] full-rate tracing overhead: {:+.2}% of untraced throughput \
+         ({:.0} -> {:.0} req/s, gate {:.0}%)",
+        overhead * 100.0,
+        best[0],
+        best[2],
+        MAX_OVERHEAD_FRAC * 100.0
+    );
+    if overhead > MAX_OVERHEAD_FRAC {
+        bail!(
+            "full-rate tracing costs {:.1}% throughput (> {:.0}% budget): \
+             {:.0} req/s untraced vs {:.0} req/s traced",
+            overhead * 100.0,
+            MAX_OVERHEAD_FRAC * 100.0,
+            best[0],
+            best[2]
+        );
+    }
+
+    // ---- trace validation (the last full-rate run's export) ----
+    let checks = validate_trace(&trace_path)?;
+    println!(
+        "[obs] trace ok: {} spans ({} sample / {} gather / {} execute), \
+         {} coalesce with purity tags, {} dropped",
+        checks.spans,
+        checks.sample,
+        checks.gather,
+        checks.execute,
+        checks.coalesce,
+        checks.dropped
+    );
+
+    let md = format!(
+        "# Observability overhead gate ({name})\n\n\
+         Closed loop: {} clients x {} requests, batch cap {}, {} shards, \
+         executor `{}`, best of {} trial(s) per mode.\n\n{}\n\
+         Full-rate tracing overhead {:+.2}% (budget {:.0}%). The full-rate \
+         Chrome trace at `results/obs_trace.json` carries {} spans \
+         ({} sample / {} gather / {} execute); every gather span is tagged \
+         with cache hit/stale/miss counts and every coalesce span with the \
+         micro-batch's community purity. {} events were dropped to ring \
+         wraparound (accounted in the trace metadata).\n",
+        lcfg.clients,
+        lcfg.requests_per_client,
+        scfg.batch_size,
+        scfg.shards,
+        exec.name(),
+        trials,
+        table.to_markdown(),
+        overhead * 100.0,
+        MAX_OVERHEAD_FRAC * 100.0,
+        checks.spans,
+        checks.sample,
+        checks.gather,
+        checks.execute,
+        checks.dropped
+    );
+    let json = obj(vec![
+        ("modes", Json::Arr(rows)),
+        ("overhead_frac", num(overhead)),
+        ("overhead_budget_frac", num(MAX_OVERHEAD_FRAC)),
+        ("trace_spans", num(checks.spans as f64)),
+        ("trace_dropped", num(checks.dropped as f64)),
+    ]);
+    write_results("obs", &md, &json)
+}
+
+struct TraceChecks {
+    spans: usize,
+    sample: usize,
+    gather: usize,
+    execute: usize,
+    coalesce: usize,
+    dropped: usize,
+}
+
+/// Re-parse an exported Chrome trace and verify it is the artifact the
+/// docs promise: per-request pipeline spans with their counter tags.
+fn validate_trace(path: &std::path::Path) -> Result<TraceChecks> {
+    let doc = Json::parse_file(path)?;
+    let events = doc.get("traceEvents")?.as_arr()?;
+    let mut c = TraceChecks {
+        spans: 0,
+        sample: 0,
+        gather: 0,
+        execute: 0,
+        coalesce: 0,
+        dropped: doc.get("otherData")?.get("dropped_events")?.as_usize()?,
+    };
+    for ev in events {
+        let ph = ev.get("ph")?.as_str()?;
+        if ph != "X" {
+            continue;
+        }
+        c.spans += 1;
+        let name = ev.get("name")?.as_str()?;
+        let args = ev.get("args")?;
+        match name {
+            "sample" => {
+                c.sample += 1;
+                args.get("overlap_permille")?.as_usize()?;
+            }
+            "gather" => {
+                c.gather += 1;
+                for tag in ["hits", "misses", "stale"] {
+                    args.get(tag)?.as_usize()?;
+                }
+            }
+            "execute" => c.execute += 1,
+            "coalesce" => {
+                c.coalesce += 1;
+                let purity = args.get("purity_permille")?.as_usize()?;
+                if purity > 1000 {
+                    bail!("coalesce purity {purity} out of permille range");
+                }
+                args.get("communities")?.as_usize()?;
+            }
+            _ => {}
+        }
+    }
+    if c.spans == 0 {
+        bail!("trace at {} has no spans", path.display());
+    }
+    for (what, n) in [
+        ("sample", c.sample),
+        ("gather", c.gather),
+        ("execute", c.execute),
+        ("coalesce", c.coalesce),
+    ] {
+        if n == 0 {
+            bail!("trace at {} has no {what} spans", path.display());
+        }
+    }
+    Ok(c)
+}

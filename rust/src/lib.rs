@@ -79,6 +79,22 @@
 //! report). In artifact-less environments the pure-rust host
 //! reference model ([`runtime::host`], `train backend=host`) stands
 //! in for the PJRT executable end to end.
+//!
+//! # Observability ([`obs`])
+//!
+//! Always compiled in, off by default: `serve bench trace=PATH`
+//! records every pipeline stage of every (sampled) request — enqueue,
+//! admission verdicts, queue wait, coalesce (with community-purity
+//! counters), sample (with cross-request neighborhood overlap),
+//! feature gather (hit/stale/miss tags), execute, reply — into
+//! fixed-capacity lock-free ring buffers and exports a Chrome-trace
+//! JSON that Perfetto loads directly, one track per shard plus the
+//! batcher/maintainer/watcher/client threads. Latency percentiles
+//! everywhere (the serve report, per-shard tables, the `metrics_ms=N`
+//! Prometheus text snapshot) come from one mergeable log-bucketed
+//! histogram type ([`obs::LogHist`]), so no two surfaces of a run can
+//! disagree about p50/p99. `comm-rand exp obs` gates full-rate
+//! tracing overhead at ≤ 5 % of untraced throughput.
 
 #![warn(missing_docs)]
 // missing_docs burn-down: the crate root and the serving subsystem
@@ -100,6 +116,7 @@ pub mod config;
 pub mod exp;
 #[allow(missing_docs)]
 pub mod graph;
+pub mod obs;
 #[allow(missing_docs)]
 pub mod runtime;
 #[allow(missing_docs)]
@@ -107,7 +124,6 @@ pub mod sampler;
 pub mod serve;
 pub mod stream;
 pub mod train;
-#[allow(missing_docs)]
 pub mod util;
 
 #[allow(missing_docs)]

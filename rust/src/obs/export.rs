@@ -1,0 +1,403 @@
+//! Trace and metrics exporters.
+//!
+//! Two output formats, both hand-emitted (no serde offline):
+//!
+//! * **Chrome trace-event JSON** ([`write_chrome_trace`]) — the
+//!   `{"traceEvents": [...]}` format Perfetto and `chrome://tracing`
+//!   load directly. Each recorder track becomes one named thread
+//!   (`pid` 0): span events (`ph:"X"`, with `ts`/`dur` in µs on the
+//!   run's shared clock) for queue wait / coalesce / sample / gather /
+//!   execute, instant events (`ph:"i"`) for enqueue, admission
+//!   outcomes, replies and the churn / maintainer / checkpoint-watcher
+//!   markers. Per-kind counters ride in `args` (cache hit/stale/miss
+//!   tags on gather, community purity on coalesce, …), so the `p`
+//!   knob's locality effect is visible directly in the trace UI.
+//! * **Prometheus text exposition** ([`PromText`]) — a plain-text
+//!   snapshot of counters, gauges and histogram summaries, rewritten
+//!   atomically every `metrics_ms=` by the engine's metrics thread.
+//!
+//! The Chrome exporter returns an [`ExportSummary`] (span / instant /
+//! dropped counts) that the CLI prints and the CI trace-smoke job
+//! gates on: an empty trace or an unaccounted drop is an error, never
+//! a silently small file.
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use crate::util::json::{arr, num, obj, s, Json};
+
+use super::hist::LogHist;
+use super::span::{track_name, Recorder};
+
+/// What [`write_chrome_trace`] emitted, for gating and logs.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ExportSummary {
+    /// Complete (`ph:"X"`) span events written.
+    pub spans: u64,
+    /// Instant (`ph:"i"`) events written.
+    pub instants: u64,
+    /// Events lost to ring wraparound before export (also recorded in
+    /// the trace's metadata so the file itself is self-describing).
+    pub dropped: u64,
+}
+
+/// Write the recorder's retained events as Chrome trace-event JSON at
+/// `path`. Fails if the recorder is enabled but exported **zero**
+/// events — a trace that silently says nothing is a bug, not a result.
+pub fn write_chrome_trace(path: &Path, rec: &Recorder) -> Result<ExportSummary> {
+    if !rec.is_enabled() {
+        bail!("trace export requested but the recorder is disabled");
+    }
+    let mut events: Vec<Json> = Vec::new();
+    let mut summary = ExportSummary { dropped: rec.total_dropped(), ..Default::default() };
+    for (track, ring) in rec.rings().iter().enumerate() {
+        events.push(obj(vec![
+            ("name", s("thread_name")),
+            ("ph", s("M")),
+            ("pid", num(0.0)),
+            ("tid", num(track as f64)),
+            ("args", obj(vec![("name", s(&track_name(track)))])),
+        ]));
+        for ev in ring.snapshot() {
+            let mut fields = vec![
+                ("name", s(ev.kind.name())),
+                ("cat", s("serve")),
+                ("pid", num(0.0)),
+                ("tid", num(track as f64)),
+                ("ts", num(ev.ts_us as f64)),
+                ("args", event_args(&ev)),
+            ];
+            if ev.kind.is_span() {
+                summary.spans += 1;
+                fields.push(("ph", s("X")));
+                fields.push(("dur", num(ev.dur_us as f64)));
+            } else {
+                summary.instants += 1;
+                fields.push(("ph", s("i")));
+                fields.push(("s", s("t"))); // thread-scoped instant
+            }
+            events.push(obj(fields));
+        }
+    }
+    if summary.spans + summary.instants == 0 {
+        bail!(
+            "trace export at {} produced zero events — tracing was on \
+             but nothing was recorded",
+            path.display()
+        );
+    }
+    let doc = obj(vec![
+        ("traceEvents", arr(events)),
+        ("displayTimeUnit", s("ms")),
+        (
+            "otherData",
+            obj(vec![
+                ("dropped_events", num(summary.dropped as f64)),
+                ("sample_permille", num(rec.sample_permille() as f64)),
+            ]),
+        ),
+    ]);
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    std::fs::write(path, doc.to_string_pretty())?;
+    Ok(summary)
+}
+
+/// Per-kind `args` payload names, mirroring the [`super::span::EventKind`]
+/// counter documentation.
+fn event_args(ev: &super::span::Event) -> Json {
+    use super::span::EventKind as K;
+    let n = |x: u32| num(x as f64);
+    let mut pairs: Vec<(&str, Json)> = match ev.kind {
+        K::Coalesce => vec![
+            ("batch", n(ev.a)),
+            ("purity_permille", n(ev.b)),
+            ("communities", n(ev.c)),
+        ],
+        K::Sample => vec![
+            ("roots", n(ev.a)),
+            ("input_nodes", n(ev.b)),
+            ("overlap_permille", n(ev.c)),
+        ],
+        K::Gather => vec![
+            ("hits", n(ev.a)),
+            ("misses", n(ev.b)),
+            ("stale", n(ev.c)),
+        ],
+        K::Execute => vec![
+            ("batch", n(ev.a)),
+            ("param_version", n(ev.b)),
+        ],
+        K::Reply => vec![
+            ("deadline_missed", n(ev.a)),
+            ("error", n(ev.b)),
+        ],
+        K::Degrade => vec![("fanout0", n(ev.a))],
+        K::Churn => vec![("applied", n(ev.a)), ("moves", n(ev.b))],
+        K::Refine => vec![("visited", n(ev.a)), ("moves", n(ev.b))],
+        K::Relabel => vec![("num_comms", n(ev.a))],
+        K::CkptSwap => vec![("epoch", n(ev.a))],
+        K::MetricsFlush => vec![("seq", n(ev.a))],
+        K::Enqueue | K::Shed | K::QueueWait => vec![],
+    };
+    if ev.req_id != 0 {
+        pairs.push(("req", num(ev.req_id as f64)));
+    }
+    obj(pairs)
+}
+
+/// Prometheus text-exposition builder. The engine's metrics thread
+/// fills one of these every `metrics_ms=` and writes it atomically
+/// (tmp + rename), so a scrape never reads a torn snapshot.
+#[derive(Default)]
+pub struct PromText {
+    buf: String,
+}
+
+fn fmt_labels(labels: &[(&str, &str)]) -> String {
+    if labels.is_empty() {
+        return String::new();
+    }
+    let inner: Vec<String> = labels
+        .iter()
+        .map(|(k, v)| format!("{k}=\"{}\"", v.replace('"', "\\\"")))
+        .collect();
+    format!("{{{}}}", inner.join(","))
+}
+
+impl PromText {
+    /// Empty snapshot.
+    pub fn new() -> PromText {
+        PromText::default()
+    }
+
+    /// `# HELP` / `# TYPE` header for a metric family. Emit once per
+    /// family, before its samples.
+    pub fn family(&mut self, name: &str, kind: &str, help: &str) {
+        self.buf.push_str(&format!("# HELP {name} {help}\n"));
+        self.buf.push_str(&format!("# TYPE {name} {kind}\n"));
+    }
+
+    /// One counter/gauge sample.
+    pub fn sample(&mut self, name: &str, labels: &[(&str, &str)], v: f64) {
+        self.buf
+            .push_str(&format!("{name}{} {v}\n", fmt_labels(labels)));
+    }
+
+    /// A histogram as a Prometheus *summary*: `{quantile=...}` samples
+    /// straight from the shared [`LogHist`] — the very same buckets
+    /// the `ServeReport` percentiles come from, so the two can never
+    /// disagree.
+    pub fn summary(
+        &mut self,
+        name: &str,
+        labels: &[(&str, &str)],
+        h: &LogHist,
+    ) {
+        for (q, qs) in [(0.5, "0.5"), (0.95, "0.95"), (0.99, "0.99")] {
+            let mut ls: Vec<(&str, &str)> = labels.to_vec();
+            ls.push(("quantile", qs));
+            self.sample(name, &ls, h.quantile(q) as f64);
+        }
+        self.buf.push_str(&format!(
+            "{name}_sum{} {}\n",
+            fmt_labels(labels),
+            h.sum()
+        ));
+        self.buf.push_str(&format!(
+            "{name}_count{} {}\n",
+            fmt_labels(labels),
+            h.count()
+        ));
+    }
+
+    /// The accumulated exposition text.
+    pub fn text(&self) -> &str {
+        &self.buf
+    }
+
+    /// Write atomically at `path` (tmp file + rename).
+    pub fn write(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        let tmp = path.with_extension("tmp");
+        std::fs::write(&tmp, &self.buf)?;
+        std::fs::rename(&tmp, path)?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::span::{
+        shard_track, EventKind, TRACK_BATCHER, TRACK_CLIENT,
+    };
+    use std::time::Instant;
+
+    fn tmppath(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir()
+            .join(format!("comm_rand_obs_{tag}_{}.json", std::process::id()))
+    }
+
+    /// Build a recorder with two requests' worth of realistic events,
+    /// export it, re-parse the JSON, and check structure: valid
+    /// trace-event fields, thread names present, and every traced
+    /// request's spans well-ordered (queue_wait before sample before
+    /// gather before execute) with phase durations summing to at most
+    /// the request's wall time.
+    #[test]
+    fn chrome_trace_round_trips_and_spans_nest() {
+        let rec = Recorder::new(1, 1024, 1000, Instant::now());
+        for (req, base) in [(1u64, 100u64), (2, 200)] {
+            rec.instant(TRACK_CLIENT, EventKind::Enqueue, base, req, 0, 0, 0);
+            rec.span(
+                TRACK_CLIENT, EventKind::QueueWait, base, 50, req, 0, 0, 0,
+            );
+            let t = shard_track(0);
+            rec.span(t, EventKind::Sample, base + 50, 20, req, 8, 64, 300);
+            rec.span(t, EventKind::Gather, base + 70, 15, req, 40, 20, 4);
+            rec.span(t, EventKind::Execute, base + 85, 10, req, 8, 1, 0);
+            rec.instant(TRACK_CLIENT, EventKind::Reply, base + 95, req, 0, 0, 0);
+        }
+        rec.instant(TRACK_BATCHER, EventKind::Coalesce, 90, 0, 8, 875, 2);
+        let path = tmppath("roundtrip");
+        let summary = write_chrome_trace(&path, &rec).unwrap();
+        assert_eq!(summary.dropped, 0);
+        assert!(summary.spans >= 8, "8 spans recorded, got {}", summary.spans);
+
+        let doc = Json::parse_file(&path).unwrap();
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        // thread-name metadata for all 5 tracks (4 fixed + 1 shard)
+        let names: Vec<&str> = events
+            .iter()
+            .filter(|e| e.get("ph").unwrap().as_str().unwrap() == "M")
+            .map(|e| {
+                e.get("args").unwrap().get("name").unwrap().as_str().unwrap()
+            })
+            .collect();
+        assert_eq!(names.len(), 5);
+        assert!(names.contains(&"batcher"));
+        assert!(names.contains(&"shard0"));
+
+        // per-request span ordering + wall-time bound
+        for req in [1.0, 2.0] {
+            let mut spans: Vec<(&str, f64, f64)> = events
+                .iter()
+                .filter(|e| {
+                    e.get("ph").unwrap().as_str().unwrap() == "X"
+                        && e.get("args")
+                            .unwrap()
+                            .opt("req")
+                            .map(|r| r.as_f64().unwrap() == req)
+                            .unwrap_or(false)
+                })
+                .map(|e| {
+                    (
+                        e.get("name").unwrap().as_str().unwrap(),
+                        e.get("ts").unwrap().as_f64().unwrap(),
+                        e.get("dur").unwrap().as_f64().unwrap(),
+                    )
+                })
+                .collect();
+            spans.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+            let order: Vec<&str> = spans.iter().map(|s| s.0).collect();
+            assert_eq!(
+                order,
+                vec!["queue_wait", "sample", "gather", "execute"],
+                "span order for req {req}"
+            );
+            // spans do not overlap backwards and fit the wall time
+            for w in spans.windows(2) {
+                assert!(
+                    w[0].1 + w[0].2 <= w[1].1 + 1e-9,
+                    "span {} overlaps {}",
+                    w[0].0,
+                    w[1].0
+                );
+            }
+            let wall = 95.0; // enqueue -> reply
+            let total: f64 = spans.iter().map(|s| s.2).sum();
+            assert!(total <= wall, "phases {total} exceed wall {wall}");
+        }
+
+        // gather spans carry the cache tags
+        let gather = events
+            .iter()
+            .find(|e| e.get("name").unwrap().as_str().unwrap() == "gather")
+            .unwrap();
+        let args = gather.get("args").unwrap();
+        assert_eq!(args.get("hits").unwrap().as_usize().unwrap(), 40);
+        assert_eq!(args.get("misses").unwrap().as_usize().unwrap(), 20);
+        assert_eq!(args.get("stale").unwrap().as_usize().unwrap(), 4);
+        // coalesce carries the purity counter
+        let coalesce = events
+            .iter()
+            .find(|e| e.get("name").unwrap().as_str().unwrap() == "coalesce")
+            .unwrap();
+        assert_eq!(
+            coalesce
+                .get("args")
+                .unwrap()
+                .get("purity_permille")
+                .unwrap()
+                .as_usize()
+                .unwrap(),
+            875
+        );
+        // dropped count is in the file itself
+        assert_eq!(
+            doc.get("otherData")
+                .unwrap()
+                .get("dropped_events")
+                .unwrap()
+                .as_usize()
+                .unwrap(),
+            0
+        );
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn empty_enabled_trace_is_an_error() {
+        let rec = Recorder::new(1, 16, 1000, Instant::now());
+        let path = tmppath("empty");
+        assert!(write_chrome_trace(&path, &rec).is_err());
+        assert!(write_chrome_trace(&path, &Recorder::disabled()).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn prom_text_shape() {
+        let mut h = LogHist::new();
+        for v in [100u64, 200, 300, 400, 5000] {
+            h.record(v);
+        }
+        let mut p = PromText::new();
+        p.family("serve_queue_depth", "gauge", "requests waiting");
+        p.sample("serve_queue_depth", &[], 7.0);
+        p.family("serve_cache_hits_total", "counter", "feature cache hits");
+        p.sample("serve_cache_hits_total", &[("shard", "0")], 123.0);
+        p.family("serve_latency_us", "summary", "request latency");
+        p.summary("serve_latency_us", &[("shard", "0")], &h);
+        let t = p.text();
+        assert!(t.contains("# TYPE serve_queue_depth gauge"));
+        assert!(t.contains("serve_queue_depth 7\n"));
+        assert!(t.contains("serve_cache_hits_total{shard=\"0\"} 123\n"));
+        assert!(t.contains("serve_latency_us{shard=\"0\",quantile=\"0.5\"}"));
+        assert!(t.contains("serve_latency_us_count{shard=\"0\"} 5\n"));
+        assert!(t.contains("serve_latency_us_sum{shard=\"0\"} 6000\n"));
+        // atomic write lands the file
+        let path = tmppath("prom");
+        p.write(&path).unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), t);
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,348 @@
+//! Mergeable log-bucketed (HDR-style) histograms.
+//!
+//! The serving stack used to keep every latency sample in a `Vec` and
+//! sort it at report time — O(n) memory and O(n log n) time that grows
+//! with offered load, and impossible to snapshot mid-run without
+//! copying the whole vector. A [`LogHist`] replaces that with a fixed
+//! ~2k-bucket layout: values are binned by their power of two with
+//! [`SUB_BUCKETS`] linear sub-buckets per octave, so any quantile is
+//! reconstructed with relative error at most `1 / SUB_BUCKETS`
+//! (≈ 3.1%), independent of how many samples were recorded.
+//!
+//! Histograms **merge** by bucket-wise addition ([`LogHist::merge`]),
+//! which is associative and commutative — per-shard histograms roll up
+//! into the global report and into the Prometheus snapshot without
+//! ever disagreeing about what p50/p99 mean, because they are all the
+//! *same* bucketed data (see `ServeReport` and
+//! [`crate::obs::export`]).
+
+/// Linear sub-buckets per power-of-two octave. 32 sub-buckets bound
+/// the relative quantile error by 1/32 ≈ 3.1%.
+pub const SUB_BUCKETS: u64 = 32;
+
+const SUB_BITS: u32 = 5; // log2(SUB_BUCKETS)
+/// Bucket count: values below `SUB_BUCKETS` get exact unit buckets;
+/// each of the remaining `64 - SUB_BITS` octaves gets `SUB_BUCKETS`
+/// sub-buckets.
+const NUM_BUCKETS: usize = ((64 - SUB_BITS as usize) + 1) * SUB_BUCKETS as usize;
+
+/// Index of the bucket holding `v` (values `< SUB_BUCKETS` map to
+/// themselves, so small values are exact).
+#[inline]
+fn bucket_index(v: u64) -> usize {
+    if v < SUB_BUCKETS {
+        return v as usize;
+    }
+    let msb = 63 - v.leading_zeros(); // >= SUB_BITS
+    let shift = msb - SUB_BITS;
+    let sub = ((v >> shift) & (SUB_BUCKETS - 1)) as usize;
+    ((shift as usize + 1) << SUB_BITS) + sub
+}
+
+/// Inclusive lower bound of bucket `i` (inverse of [`bucket_index`]).
+#[inline]
+fn bucket_lo(i: usize) -> u64 {
+    if i < SUB_BUCKETS as usize {
+        return i as u64;
+    }
+    let shift = (i >> SUB_BITS) as u32 - 1;
+    let sub = (i & (SUB_BUCKETS as usize - 1)) as u64;
+    (SUB_BUCKETS + sub) << shift
+}
+
+/// Exclusive upper bound of bucket `i`.
+#[inline]
+fn bucket_hi(i: usize) -> u64 {
+    if i < SUB_BUCKETS as usize {
+        return i as u64 + 1;
+    }
+    let shift = (i >> SUB_BITS) as u32 - 1;
+    let sub = (i & (SUB_BUCKETS as usize - 1)) as u64;
+    (SUB_BUCKETS + sub + 1) << shift
+}
+
+/// Fixed-memory log-bucketed histogram over `u64` values (µs, bytes,
+/// batch sizes — anything non-negative). See the module docs for the
+/// error bound.
+#[derive(Clone)]
+pub struct LogHist {
+    counts: Vec<u64>,
+    count: u64,
+    sum: u128,
+    min: u64,
+    max: u64,
+}
+
+impl Default for LogHist {
+    fn default() -> LogHist {
+        LogHist::new()
+    }
+}
+
+impl std::fmt::Debug for LogHist {
+    /// Summarized (the ~2k bucket array would drown any debug dump).
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("LogHist")
+            .field("count", &self.count)
+            .field("min", &self.min())
+            .field("max", &self.max)
+            .field("mean", &self.mean())
+            .finish()
+    }
+}
+
+impl LogHist {
+    /// Empty histogram (~16 KiB of buckets, allocated eagerly so
+    /// recording never allocates).
+    pub fn new() -> LogHist {
+        LogHist {
+            counts: vec![0; NUM_BUCKETS],
+            count: 0,
+            sum: 0,
+            min: u64::MAX,
+            max: 0,
+        }
+    }
+
+    /// Record one value.
+    #[inline]
+    pub fn record(&mut self, v: u64) {
+        self.counts[bucket_index(v)] += 1;
+        self.count += 1;
+        self.sum += v as u128;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    /// Bucket-wise addition: `self` absorbs `other`'s samples.
+    /// Associative and commutative, so any merge order over a set of
+    /// histograms yields the same result.
+    pub fn merge(&mut self, other: &LogHist) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// Samples recorded.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// True when no sample has been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Exact sum of all recorded values.
+    pub fn sum(&self) -> u128 {
+        self.sum
+    }
+
+    /// Exact mean of all recorded values (0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Smallest recorded value (exact; 0 when empty).
+    pub fn min(&self) -> u64 {
+        if self.count == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    /// Largest recorded value (exact; 0 when empty).
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// The `q`-quantile (`q` in `[0, 1]`), reconstructed as the
+    /// midpoint of the bucket holding the `ceil(q * count)`-th sample
+    /// and clamped to the observed `[min, max]` — so p0/p100 are exact
+    /// and everything between carries the `1 / SUB_BUCKETS` relative
+    /// error bound. Returns 0 on an empty histogram.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let q = q.clamp(0.0, 1.0);
+        let rank = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            seen += c;
+            if seen >= rank {
+                let mid = bucket_lo(i) + (bucket_hi(i) - bucket_lo(i)) / 2;
+                return mid.clamp(self.min, self.max);
+            }
+        }
+        self.max // unreachable in practice; defensive
+    }
+
+    /// Iterate non-empty buckets as `(lo_inclusive, hi_exclusive,
+    /// count)` — the exposition format exporters consume.
+    pub fn buckets(&self) -> impl Iterator<Item = (u64, u64, u64)> + '_ {
+        self.counts
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, &c)| (bucket_lo(i), bucket_hi(i), c))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn bucket_round_trip_covers_the_u64_range() {
+        for v in [0u64, 1, 31, 32, 33, 100, 1_000, 123_456, u32::MAX as u64,
+            u64::MAX / 2, u64::MAX]
+        {
+            let i = bucket_index(v);
+            assert!(i < NUM_BUCKETS, "index {i} out of range for {v}");
+            assert!(
+                bucket_lo(i) <= v && (v < bucket_hi(i) || bucket_hi(i) <= bucket_lo(i)),
+                "v={v} not in [{}, {}) (bucket {i})",
+                bucket_lo(i),
+                bucket_hi(i),
+            );
+        }
+        // buckets tile the line: hi(i) == lo(i+1) within an octave run
+        for i in 0..2_000.min(NUM_BUCKETS - 1) {
+            assert_eq!(bucket_hi(i), bucket_lo(i + 1), "gap after bucket {i}");
+        }
+    }
+
+    #[test]
+    fn small_values_are_exact() {
+        let mut h = LogHist::new();
+        for v in 0..SUB_BUCKETS {
+            h.record(v);
+        }
+        for (k, v) in (0..SUB_BUCKETS).enumerate() {
+            let q = (k as f64 + 1.0) / SUB_BUCKETS as f64;
+            assert_eq!(h.quantile(q), v, "quantile {q} of 0..32");
+        }
+        assert_eq!(h.min(), 0);
+        assert_eq!(h.max(), SUB_BUCKETS - 1);
+    }
+
+    #[test]
+    fn empty_histogram_is_all_zeros() {
+        let h = LogHist::new();
+        assert!(h.is_empty());
+        assert_eq!(h.quantile(0.5), 0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.min(), 0);
+        assert_eq!(h.max(), 0);
+        assert_eq!(h.buckets().count(), 0);
+    }
+
+    /// Quantiles from the histogram stay within the documented
+    /// relative error bound of the exact sorted-sample quantiles, on
+    /// uniform and heavy-tailed data.
+    #[test]
+    fn quantile_error_bound_vs_exact_sort() {
+        let mut rng = Rng::new(17);
+        for (name, gen) in [
+            ("uniform", Box::new(|r: &mut Rng| r.below(1_000_000))
+                as Box<dyn Fn(&mut Rng) -> u64>),
+            ("powerlaw", Box::new(|r: &mut Rng| {
+                r.powerlaw(1.0, 1e9, 1.5) as u64
+            })),
+        ] {
+            let xs: Vec<u64> = (0..50_000).map(|_| gen(&mut rng)).collect();
+            let mut h = LogHist::new();
+            for &x in &xs {
+                h.record(x);
+            }
+            let mut sorted = xs.clone();
+            sorted.sort_unstable();
+            for q in [0.01, 0.1, 0.25, 0.5, 0.75, 0.9, 0.95, 0.99, 0.999] {
+                let rank = ((q * xs.len() as f64).ceil() as usize)
+                    .clamp(1, xs.len());
+                let exact = sorted[rank - 1] as f64;
+                let approx = h.quantile(q) as f64;
+                let rel = (approx - exact).abs() / exact.max(1.0);
+                assert!(
+                    rel <= 1.0 / SUB_BUCKETS as f64 + 1e-9,
+                    "{name} q={q}: approx {approx} vs exact {exact} \
+                     (rel err {rel:.4})"
+                );
+            }
+            assert_eq!(h.count(), xs.len() as u64);
+            assert_eq!(h.min(), sorted[0]);
+            assert_eq!(h.max(), *sorted.last().unwrap());
+            let exact_mean =
+                xs.iter().map(|&x| x as f64).sum::<f64>() / xs.len() as f64;
+            assert!((h.mean() - exact_mean).abs() < 1e-6 * exact_mean.max(1.0));
+        }
+    }
+
+    /// Merging is associative: (a ∪ b) ∪ c == a ∪ (b ∪ c), and the
+    /// merged histogram equals one built from the concatenated stream.
+    #[test]
+    fn merge_is_associative_and_matches_concat() {
+        let mut rng = Rng::new(23);
+        let streams: Vec<Vec<u64>> = (0..3)
+            .map(|_| (0..5_000).map(|_| rng.below(10_000_000)).collect())
+            .collect();
+        let hist_of = |vss: &[&[u64]]| {
+            let mut h = LogHist::new();
+            for vs in vss {
+                for &v in *vs {
+                    h.record(v);
+                }
+            }
+            h
+        };
+        let [a, b, c] = [&streams[0], &streams[1], &streams[2]];
+        // (a ∪ b) ∪ c
+        let mut left = hist_of(&[a]);
+        left.merge(&hist_of(&[b]));
+        left.merge(&hist_of(&[c]));
+        // a ∪ (b ∪ c)
+        let mut right_inner = hist_of(&[b]);
+        right_inner.merge(&hist_of(&[c]));
+        let mut right = hist_of(&[a]);
+        right.merge(&right_inner);
+        let concat = hist_of(&[a, b, c]);
+        for h in [&left, &right] {
+            assert_eq!(h.count(), concat.count());
+            assert_eq!(h.sum(), concat.sum());
+            assert_eq!(h.min(), concat.min());
+            assert_eq!(h.max(), concat.max());
+            for q in [0.5, 0.9, 0.99] {
+                assert_eq!(h.quantile(q), concat.quantile(q), "q={q}");
+            }
+            assert!(h.buckets().eq(concat.buckets()));
+        }
+    }
+
+    #[test]
+    fn merge_with_empty_is_identity() {
+        let mut h = LogHist::new();
+        for v in [5u64, 500, 50_000] {
+            h.record(v);
+        }
+        let before: Vec<_> = h.buckets().collect();
+        h.merge(&LogHist::new());
+        assert!(h.buckets().eq(before.iter().copied()));
+        assert_eq!(h.count(), 3);
+        assert_eq!(h.min(), 5);
+        assert_eq!(h.max(), 50_000);
+    }
+}

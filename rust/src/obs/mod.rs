@@ -1,0 +1,33 @@
+//! Low-overhead observability for the serving stack.
+//!
+//! Three pieces, all always compiled in and threaded through the
+//! serving pipeline (`serve/`), the streaming maintainer and the
+//! checkpoint watcher:
+//!
+//! * [`span`] — per-request span timelines (enqueue → admission →
+//!   queue wait → coalesce → sample → gather → execute → reply) in
+//!   fixed-capacity lock-free per-track rings, with stateless
+//!   per-request sampling (`trace_sample=`) and explicit dropped-event
+//!   accounting;
+//! * [`hist`] — mergeable log-bucketed (HDR-style) histograms that
+//!   replace the collect-then-sort percentile path in `ServeReport` /
+//!   `ShardReport`, bounding quantile error at ~3% in fixed memory;
+//! * [`export`] — Chrome trace-event JSON (`trace=PATH`, loadable in
+//!   Perfetto) and Prometheus text-exposition snapshots
+//!   (`metrics_ms=`).
+//!
+//! The overhead contract — full-rate tracing costs ≤ 5% serve
+//! throughput — is enforced by `exp obs`
+//! ([`crate::exp::obs`]), which runs the same bench with tracing off /
+//! sampled / full and fails the run if the gap exceeds the budget.
+
+pub mod export;
+pub mod hist;
+pub mod span;
+
+pub use export::{write_chrome_trace, ExportSummary, PromText};
+pub use hist::LogHist;
+pub use span::{
+    shard_track, track_name, Event, EventKind, EventRing, Recorder,
+    TRACK_BATCHER, TRACK_CLIENT, TRACK_MAINTAINER, TRACK_WATCHER,
+};

@@ -1,0 +1,534 @@
+//! Per-request span timeline: compact events in lock-free rings.
+//!
+//! Every stage of a request's life — enqueue, admission decision,
+//! queue wait, batcher coalesce, sample, feature gather (with cache
+//! hit/stale/miss tags), execute, reply — is recorded as one fixed-size
+//! [`Event`] pushed into a per-track [`EventRing`]. The hot path does
+//! **no allocation and takes no lock**: a push is one relaxed
+//! `fetch_add` on the ring's head plus five relaxed word stores, and a
+//! disabled [`Recorder`] short-circuits to a single branch, which is
+//! how tracing stays always-compiled-in at ≤ 5% overhead (gated by
+//! `exp obs`).
+//!
+//! Rings have fixed capacity and **wrap**: once full, new events
+//! overwrite the oldest and the overwritten count is surfaced via
+//! [`EventRing::dropped`] / [`Recorder::total_dropped`] — the exporter
+//! and the CLI print it, so truncation is never silent. Sampling
+//! (`trace_sample=`) is decided statelessly per request by hashing the
+//! request id ([`Recorder::traced`]), so every pipeline stage agrees
+//! on whether a request is traced without coordination.
+//!
+//! Tracks map to Chrome-trace threads: one per shard's worker pool
+//! plus dedicated tracks for the batcher, the churn/maintainer thread,
+//! the checkpoint watcher, and the client/admission side (see
+//! [`track_name`] and [`crate::obs::export`]).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// What a single [`Event`] describes. Span kinds carry a non-zero
+/// duration; instant kinds mark a point in time.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum EventKind {
+    /// Request accepted onto the serving queue (instant; per request).
+    Enqueue = 0,
+    /// Admission degraded this request's fanouts (instant; `a` =
+    /// first-layer capped fanout).
+    Degrade = 1,
+    /// Admission shed this request (instant).
+    Shed = 2,
+    /// Enqueue → picked into a formed micro-batch (span; per request).
+    QueueWait = 3,
+    /// Micro-batch formation in the batcher (span; `a` = batch size,
+    /// `b` = community purity in permille, `c` = distinct communities).
+    Coalesce = 4,
+    /// MFG neighborhood sampling for one micro-batch (span; `a` =
+    /// dedup'd roots, `b` = MFG input nodes, `c` = cross-request
+    /// neighborhood overlap in permille).
+    Sample = 5,
+    /// Feature gather through the cache (span; `a` = hits, `b` =
+    /// misses, `c` = stale hits).
+    Gather = 6,
+    /// Executor inference on the assembled batch (span; `a` = batch
+    /// size, `b` = parameter version).
+    Execute = 7,
+    /// Reply delivered (instant; per request; `a` = 1 if the deadline
+    /// was missed, `b` = 1 on executor error).
+    Reply = 8,
+    /// One churn epoch of edge mutations applied (instant; `a` =
+    /// applied updates, `b` = refine moves).
+    Churn = 9,
+    /// Incremental refine wave (instant; `a` = vertices visited, `b` =
+    /// moves applied).
+    Refine = 10,
+    /// Stop-the-world full relabel (instant; `a` = new community
+    /// count).
+    Relabel = 11,
+    /// Checkpoint hot-swap installed (instant; `a` = epoch).
+    CkptSwap = 12,
+    /// Metrics snapshot written (instant; `a` = snapshot sequence).
+    MetricsFlush = 13,
+}
+
+impl EventKind {
+    /// Chrome-trace event name for this kind.
+    pub fn name(self) -> &'static str {
+        match self {
+            EventKind::Enqueue => "enqueue",
+            EventKind::Degrade => "degrade",
+            EventKind::Shed => "shed",
+            EventKind::QueueWait => "queue_wait",
+            EventKind::Coalesce => "coalesce",
+            EventKind::Sample => "sample",
+            EventKind::Gather => "gather",
+            EventKind::Execute => "execute",
+            EventKind::Reply => "reply",
+            EventKind::Churn => "churn",
+            EventKind::Refine => "refine",
+            EventKind::Relabel => "relabel",
+            EventKind::CkptSwap => "ckpt_swap",
+            EventKind::MetricsFlush => "metrics_flush",
+        }
+    }
+
+    /// True for kinds recorded as Chrome-trace complete spans (`ph:X`)
+    /// rather than instants (`ph:i`).
+    pub fn is_span(self) -> bool {
+        matches!(
+            self,
+            EventKind::QueueWait
+                | EventKind::Coalesce
+                | EventKind::Sample
+                | EventKind::Gather
+                | EventKind::Execute
+        )
+    }
+
+    fn from_u8(v: u8) -> EventKind {
+        match v {
+            0 => EventKind::Enqueue,
+            1 => EventKind::Degrade,
+            2 => EventKind::Shed,
+            3 => EventKind::QueueWait,
+            4 => EventKind::Coalesce,
+            5 => EventKind::Sample,
+            6 => EventKind::Gather,
+            7 => EventKind::Execute,
+            8 => EventKind::Reply,
+            9 => EventKind::Churn,
+            10 => EventKind::Refine,
+            11 => EventKind::Relabel,
+            12 => EventKind::CkptSwap,
+            _ => EventKind::MetricsFlush,
+        }
+    }
+}
+
+/// One compact trace event (five 64-bit words in the ring).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Event {
+    /// Start timestamp, µs on the run's shared clock.
+    pub ts_us: u64,
+    /// Duration in µs (0 for instant events).
+    pub dur_us: u64,
+    /// Request id this event belongs to (0 for batch/thread-level
+    /// events).
+    pub req_id: u64,
+    /// Event kind.
+    pub kind: EventKind,
+    /// Counter payload; meaning is per-kind (see [`EventKind`]).
+    pub a: u32,
+    /// Second counter payload.
+    pub b: u32,
+    /// Third counter payload.
+    pub c: u32,
+}
+
+const WORDS: usize = 5;
+
+impl Event {
+    fn encode(&self) -> [u64; WORDS] {
+        [
+            self.ts_us,
+            self.dur_us,
+            self.req_id,
+            (self.kind as u64) | ((self.c as u64) << 32),
+            (self.a as u64) | ((self.b as u64) << 32),
+        ]
+    }
+
+    fn decode(w: &[u64; WORDS]) -> Event {
+        Event {
+            ts_us: w[0],
+            dur_us: w[1],
+            req_id: w[2],
+            kind: EventKind::from_u8((w[3] & 0xFF) as u8),
+            c: (w[3] >> 32) as u32,
+            a: (w[4] & 0xFFFF_FFFF) as u32,
+            b: (w[4] >> 32) as u32,
+        }
+    }
+}
+
+/// Fixed-capacity lock-free event ring. Writers claim a slot with one
+/// `fetch_add` and store the event's words with relaxed atomics; once
+/// the ring wraps, the oldest events are overwritten and counted as
+/// dropped. Reading back ([`EventRing::snapshot`]) is meant for after
+/// the writers have quiesced (end of run); a concurrent snapshot can
+/// observe a torn event but never unsoundness.
+pub struct EventRing {
+    slots: Box<[[AtomicU64; WORDS]]>,
+    head: AtomicU64,
+}
+
+impl EventRing {
+    /// Ring holding up to `capacity` events (rounded up to 1 minimum).
+    pub fn new(capacity: usize) -> EventRing {
+        let capacity = capacity.max(1);
+        let slots = (0..capacity)
+            .map(|_| std::array::from_fn(|_| AtomicU64::new(0)))
+            .collect::<Vec<[AtomicU64; WORDS]>>()
+            .into_boxed_slice();
+        EventRing { slots, head: AtomicU64::new(0) }
+    }
+
+    /// Slots in the ring.
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Append one event, overwriting the oldest once full.
+    #[inline]
+    pub fn push(&self, ev: Event) {
+        let i = self.head.fetch_add(1, Ordering::Relaxed);
+        let slot = &self.slots[(i % self.slots.len() as u64) as usize];
+        for (cell, word) in slot.iter().zip(ev.encode()) {
+            cell.store(word, Ordering::Relaxed);
+        }
+    }
+
+    /// Total events ever pushed (kept + overwritten).
+    pub fn written(&self) -> u64 {
+        self.head.load(Ordering::Relaxed)
+    }
+
+    /// Events lost to wraparound (`written - capacity`, floored at 0).
+    pub fn dropped(&self) -> u64 {
+        self.written().saturating_sub(self.slots.len() as u64)
+    }
+
+    /// The retained events, oldest first. Call after writers quiesce
+    /// for an exact snapshot.
+    pub fn snapshot(&self) -> Vec<Event> {
+        let head = self.written();
+        let cap = self.slots.len() as u64;
+        let kept = head.min(cap);
+        let start = head - kept; // oldest retained logical index
+        (start..head)
+            .map(|i| {
+                let slot = &self.slots[(i % cap) as usize];
+                let words: [u64; WORDS] =
+                    std::array::from_fn(|k| slot[k].load(Ordering::Relaxed));
+                Event::decode(&words)
+            })
+            .collect()
+    }
+}
+
+/// Dedicated track for the micro-batcher thread.
+pub const TRACK_BATCHER: usize = 0;
+/// Dedicated track for the churn / community-maintainer thread.
+pub const TRACK_MAINTAINER: usize = 1;
+/// Dedicated track for the checkpoint hot-swap watcher.
+pub const TRACK_WATCHER: usize = 2;
+/// Track for client-side events (enqueue, admission, reply).
+pub const TRACK_CLIENT: usize = 3;
+const FIXED_TRACKS: usize = 4;
+
+/// Track id for shard `s`'s worker pool.
+pub fn shard_track(s: usize) -> usize {
+    FIXED_TRACKS + s
+}
+
+/// Human name for a track id (Chrome-trace thread name).
+pub fn track_name(track: usize) -> String {
+    match track {
+        TRACK_BATCHER => "batcher".to_string(),
+        TRACK_MAINTAINER => "churn/maintainer".to_string(),
+        TRACK_WATCHER => "ckpt-watcher".to_string(),
+        TRACK_CLIENT => "clients/admission".to_string(),
+        s => format!("shard{}", s - FIXED_TRACKS),
+    }
+}
+
+/// Stateless per-request sampling decision: hash the id, keep the low
+/// ten bits under `permille`. Every stage of the pipeline calls this
+/// with the same id and gets the same answer.
+#[inline]
+pub fn id_sampled(req_id: u64, permille: u32) -> bool {
+    if permille >= 1000 {
+        return true;
+    }
+    if permille == 0 {
+        return false;
+    }
+    // splitmix-style avalanche so sequential ids sample uniformly
+    let mut z = req_id.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    ((z >> 32) % 1000) < permille as u64
+}
+
+/// The run-wide trace recorder: one [`EventRing`] per track plus the
+/// sampling knob, shared by reference across every thread of a serving
+/// run. A disabled recorder ([`Recorder::disabled`]) makes every
+/// recording call a single-branch no-op, so the instrumentation is
+/// always compiled in.
+pub struct Recorder {
+    enabled: bool,
+    sample_permille: u32,
+    origin: Instant,
+    rings: Vec<EventRing>,
+}
+
+impl Recorder {
+    /// Recorder with tracing off: every `record`/`traced` call is a
+    /// cheap no-op.
+    pub fn disabled() -> Recorder {
+        Recorder {
+            enabled: false,
+            sample_permille: 0,
+            origin: Instant::now(),
+            rings: Vec::new(),
+        }
+    }
+
+    /// Enabled recorder for `num_shards` shards with `ring_capacity`
+    /// events per track. `sample_permille` (0..=1000) is the fraction
+    /// of requests whose per-request events are recorded; batch- and
+    /// thread-level events are always recorded when enabled. `origin`
+    /// must be the same instant the run's `ServeClock` starts from, so
+    /// event timestamps share the request timeline.
+    pub fn new(
+        num_shards: usize,
+        ring_capacity: usize,
+        sample_permille: u32,
+        origin: Instant,
+    ) -> Recorder {
+        let rings = (0..FIXED_TRACKS + num_shards.max(1))
+            .map(|_| EventRing::new(ring_capacity))
+            .collect();
+        Recorder {
+            enabled: true,
+            sample_permille: sample_permille.min(1000),
+            origin,
+            rings,
+        }
+    }
+
+    /// Whether tracing is on at all.
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// The configured sampling rate in permille.
+    pub fn sample_permille(&self) -> u32 {
+        self.sample_permille
+    }
+
+    /// Number of tracks (rings).
+    pub fn num_tracks(&self) -> usize {
+        self.rings.len()
+    }
+
+    /// µs since the recorder's origin (same timeline as `ServeClock`).
+    pub fn now_us(&self) -> u64 {
+        self.origin.elapsed().as_micros() as u64
+    }
+
+    /// Should per-request events for `req_id` be recorded?
+    #[inline]
+    pub fn traced(&self, req_id: u64) -> bool {
+        self.enabled && id_sampled(req_id, self.sample_permille)
+    }
+
+    /// Record a span event on `track` (no-op when disabled).
+    #[inline]
+    pub fn span(
+        &self,
+        track: usize,
+        kind: EventKind,
+        ts_us: u64,
+        dur_us: u64,
+        req_id: u64,
+        a: u32,
+        b: u32,
+        c: u32,
+    ) {
+        if !self.enabled {
+            return;
+        }
+        self.rings[track].push(Event { ts_us, dur_us, req_id, kind, a, b, c });
+    }
+
+    /// Record an instant event on `track` (no-op when disabled).
+    #[inline]
+    pub fn instant(
+        &self,
+        track: usize,
+        kind: EventKind,
+        ts_us: u64,
+        req_id: u64,
+        a: u32,
+        b: u32,
+        c: u32,
+    ) {
+        self.span(track, kind, ts_us, 0, req_id, a, b, c);
+    }
+
+    /// Per-track rings (exporters iterate these).
+    pub fn rings(&self) -> &[EventRing] {
+        &self.rings
+    }
+
+    /// Total events pushed across tracks.
+    pub fn total_written(&self) -> u64 {
+        self.rings.iter().map(|r| r.written()).sum()
+    }
+
+    /// Total events lost to ring wraparound across tracks. Surfaced by
+    /// the exporter and the CLI — truncation is never silent.
+    pub fn total_dropped(&self) -> u64 {
+        self.rings.iter().map(|r| r.dropped()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(ts: u64, kind: EventKind, req: u64) -> Event {
+        Event { ts_us: ts, dur_us: 1, req_id: req, kind, a: 1, b: 2, c: 3 }
+    }
+
+    #[test]
+    fn event_encode_decode_round_trips() {
+        let e = Event {
+            ts_us: 123_456_789,
+            dur_us: 42,
+            req_id: (7 << 32) | 9,
+            kind: EventKind::Gather,
+            a: u32::MAX,
+            b: 17,
+            c: 0xDEAD_BEEF,
+        };
+        assert_eq!(Event::decode(&e.encode()), e);
+    }
+
+    #[test]
+    fn ring_keeps_everything_under_capacity() {
+        let r = EventRing::new(64);
+        for i in 0..50u64 {
+            r.push(ev(i, EventKind::Sample, i));
+        }
+        assert_eq!(r.written(), 50);
+        assert_eq!(r.dropped(), 0);
+        let snap = r.snapshot();
+        assert_eq!(snap.len(), 50);
+        for (i, e) in snap.iter().enumerate() {
+            assert_eq!(e.ts_us, i as u64);
+        }
+    }
+
+    #[test]
+    fn ring_wraparound_drops_oldest_and_counts_them() {
+        let r = EventRing::new(16);
+        for i in 0..100u64 {
+            r.push(ev(i, EventKind::Execute, i));
+        }
+        assert_eq!(r.written(), 100);
+        assert_eq!(r.dropped(), 84, "written - capacity overwritten");
+        let snap = r.snapshot();
+        assert_eq!(snap.len(), 16);
+        // the newest 16 events survive, oldest first
+        for (k, e) in snap.iter().enumerate() {
+            assert_eq!(e.ts_us, 84 + k as u64);
+        }
+    }
+
+    /// Concurrent writers: every push is either retained or accounted
+    /// as dropped — no silent loss.
+    #[test]
+    fn ring_drop_accounting_is_exact_under_concurrent_writers() {
+        let r = EventRing::new(128);
+        let per_thread = 10_000u64;
+        let threads = 4u64;
+        std::thread::scope(|s| {
+            for t in 0..threads {
+                let r = &r;
+                s.spawn(move || {
+                    for i in 0..per_thread {
+                        r.push(ev(i, EventKind::Gather, (t << 32) | i));
+                    }
+                });
+            }
+        });
+        let total = threads * per_thread;
+        assert_eq!(r.written(), total);
+        assert_eq!(r.dropped(), total - 128);
+        assert_eq!(r.snapshot().len(), 128);
+    }
+
+    #[test]
+    fn sampling_is_stateless_and_roughly_proportional() {
+        // full and zero rates are exact
+        for id in 0..1000u64 {
+            assert!(id_sampled(id, 1000));
+            assert!(!id_sampled(id, 0));
+        }
+        // a mid rate keeps roughly its share of sequential ids (the
+        // avalanche hash decorrelates the low bits)
+        let kept = (0..100_000u64).filter(|&i| id_sampled(i, 100)).count();
+        let frac = kept as f64 / 100_000.0;
+        assert!(
+            (frac - 0.1).abs() < 0.01,
+            "sampled {frac:.3} of ids at 10% rate"
+        );
+        // deterministic: same id, same answer
+        for id in [3u64, 999, 123_456_789] {
+            assert_eq!(id_sampled(id, 250), id_sampled(id, 250));
+        }
+    }
+
+    #[test]
+    fn disabled_recorder_records_nothing() {
+        let r = Recorder::disabled();
+        assert!(!r.is_enabled());
+        assert!(!r.traced(42));
+        r.instant(TRACK_CLIENT, EventKind::Enqueue, 1, 42, 0, 0, 0);
+        assert_eq!(r.total_written(), 0);
+        assert_eq!(r.total_dropped(), 0);
+    }
+
+    #[test]
+    fn recorder_routes_tracks_and_counts_drops() {
+        let r = Recorder::new(2, 8, 1000, Instant::now());
+        assert_eq!(r.num_tracks(), 6); // 4 fixed + 2 shards
+        assert!(r.traced(7));
+        r.instant(TRACK_BATCHER, EventKind::Coalesce, 5, 0, 4, 900, 2);
+        for i in 0..20u64 {
+            r.span(shard_track(1), EventKind::Sample, i, 2, i, 1, 1, 0);
+        }
+        assert_eq!(r.rings()[TRACK_BATCHER].written(), 1);
+        assert_eq!(r.rings()[shard_track(1)].written(), 20);
+        assert_eq!(r.rings()[shard_track(1)].dropped(), 12);
+        assert_eq!(r.total_dropped(), 12);
+        assert_eq!(r.total_written(), 21);
+        let names: Vec<String> =
+            (0..r.num_tracks()).map(track_name).collect();
+        assert_eq!(names[0], "batcher");
+        assert_eq!(names[4], "shard0");
+        assert_eq!(names[5], "shard1");
+    }
+}

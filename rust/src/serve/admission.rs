@@ -28,6 +28,14 @@
 //!   counted as `shed` in the `ServeReport`;
 //! * `degrade` — admit, but cap the request's per-layer fanouts so its
 //!   micro-batch fits the remaining budget (counted as `degraded`).
+//!
+//! Under request tracing (`trace=`) every decision on a trace-sampled
+//! request also lands on the client track as an `Enqueue`, `Degrade`
+//! (carrying the layer-0 fanout cap) or `Shed` instant, so a Perfetto
+//! view of an overloaded run shows exactly *when* the gate started
+//! firing relative to the queue-wait spans (see [`crate::obs`]). The
+//! emission lives in [`super::loadgen`], next to the enqueue itself —
+//! this module stays trace-agnostic.
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 

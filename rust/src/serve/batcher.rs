@@ -150,6 +150,26 @@ impl MicroBatcher {
     }
 }
 
+/// Community purity of a formed batch: `(purity_permille,
+/// distinct_communities)`, where purity is the share of members in the
+/// batch's dominant community, in permille. This is the per-micro-batch
+/// locality counter the trace recorder attaches to every `Coalesce`
+/// span — at `p = 1` size-triggered batches read 1000, at `p = 0` the
+/// number falls toward `1000 / distinct` on a mixed trace.
+pub fn batch_purity(batch: &[Request], community: &[u32]) -> (u32, u32) {
+    if batch.is_empty() {
+        return (0, 0);
+    }
+    let mut counts: std::collections::HashMap<u32, u32> =
+        std::collections::HashMap::new();
+    for r in batch {
+        *counts.entry(community[r.node as usize]).or_insert(0) += 1;
+    }
+    let dominant = counts.values().copied().max().unwrap_or(0);
+    let purity = (dominant as u64 * 1000 / batch.len() as u64) as u32;
+    (purity, counts.len() as u32)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -417,6 +437,25 @@ mod tests {
         let mut all: Vec<u64> = a.iter().flatten().copied().collect();
         all.sort_unstable();
         assert_eq!(all, (0..12).collect::<Vec<_>>());
+    }
+
+    /// The purity counter: pure batches read 1000, an even two-way mix
+    /// reads 500, and a dominant community sets the numerator.
+    #[test]
+    fn batch_purity_counts_dominant_share() {
+        let comm = vec![0u32, 0, 1, 1, 2];
+        let mk = |nodes: &[u32]| -> Vec<Request> {
+            nodes
+                .iter()
+                .enumerate()
+                .map(|(i, &n)| req(i as u64, n, 0, 1_000))
+                .collect()
+        };
+        assert_eq!(batch_purity(&[], &comm), (0, 0));
+        assert_eq!(batch_purity(&mk(&[0, 1]), &comm), (1000, 1));
+        assert_eq!(batch_purity(&mk(&[0, 2]), &comm), (500, 2));
+        // 3 of 4 in community 0
+        assert_eq!(batch_purity(&mk(&[0, 1, 0, 4]), &comm), (750, 2));
     }
 
     #[test]

@@ -24,6 +24,13 @@
 //! entry, so the invariant is a real cross-check, not a tautology).
 //! Frozen-table callers use version 0 everywhere and can never see a
 //! stale hit.
+//!
+//! The per-fetch outcome ([`Fetched`], or [`ShardedFeatureCache::fetch`]'s
+//! bool on the frozen path) is what the worker's trace instrumentation
+//! tallies into the `Gather` span's hit/miss/stale args — per
+//! micro-batch, on the same definitions as the aggregate [`CacheStats`],
+//! so a Perfetto trace and the end-of-run report can be cross-checked
+//! span by span (see [`crate::obs`]).
 
 use std::sync::Mutex;
 

@@ -22,7 +22,11 @@
 //! * with `mutate > 0`, one churn thread ([`crate::stream`]) generates
 //!   and applies graph-update epochs — topology delta-overlay swaps,
 //!   incremental label maintenance, feature-version bumps — while
-//!   everything above reads immutable snapshots.
+//!   everything above reads immutable snapshots;
+//! * with `metrics_ms > 0`, one metrics thread writes a periodic
+//!   Prometheus text snapshot, and with `trace=PATH` every stage
+//!   above records [`crate::obs`] span events that export as a
+//!   Chrome-trace JSON on shutdown.
 //!
 //! The single-device path is simply `shards = 1`: one plan owning every
 //! community, one channel, one cache — not a separate code path.
@@ -38,17 +42,20 @@ use anyhow::{Context, Result};
 use crate::ckpt::{self, ParamStore};
 use crate::config::DatasetPreset;
 use crate::graph::Dataset;
+use crate::obs::{
+    shard_track, write_chrome_trace, EventKind, LogHist, PromText, Recorder,
+    TRACK_BATCHER, TRACK_CLIENT, TRACK_WATCHER,
+};
 use crate::runtime::artifact::{default_dir, ArtifactMeta, Manifest, SpecMeta};
 use crate::runtime::{InferState, Runtime};
 use crate::stream::{
-    churn_loop, MaintenanceMode, StreamConfig, StreamReport, StreamState,
+    churn_loop_traced, MaintenanceMode, StreamConfig, StreamReport, StreamState,
 };
 use crate::util::json::{arr, num, obj, s, Json};
 use crate::util::rng::Rng;
-use crate::util::stats::percentile;
 
 use super::admission::{AdmissionController, AdmissionPolicy};
-use super::batcher::{BatcherConfig, MicroBatcher};
+use super::batcher::{batch_purity, BatcherConfig, MicroBatcher};
 use super::cache::{CacheStats, FeatureCacheConfig, ShardedFeatureCache};
 use super::loadgen::{self, Arrival, ClientCtx, LoadConfig, ReqRecord};
 use super::queue::{Pop, RequestQueue};
@@ -121,6 +128,26 @@ pub struct ServeConfig {
     /// incremental local refinement, or the naive stop-the-world full
     /// relabel every epoch.
     pub maintenance: MaintenanceMode,
+    /// Request-level tracing (`trace=PATH`): when set, every pipeline
+    /// stage records span events into per-track ring buffers and the
+    /// run exports a Chrome-trace JSON (Perfetto-loadable) to this
+    /// path on shutdown. `None` keeps the hot path at a single
+    /// relaxed-load branch per emit site.
+    pub trace: Option<PathBuf>,
+    /// Trace sampling rate in permille of request ids
+    /// (`trace_sample=`, 0–1000). 1000 traces every request; lower
+    /// rates keep per-request spans for a deterministic id subset
+    /// while pipeline-level spans (coalesce, churn, swaps) are always
+    /// recorded.
+    pub trace_sample: u32,
+    /// Live metrics snapshot period in ms (`metrics_ms=`): when > 0 a
+    /// metrics thread writes a Prometheus text-format snapshot (queue
+    /// depth, shed/degrade totals, per-shard cache + latency
+    /// summaries) to `metrics_path` every period. 0 disables it.
+    pub metrics_ms: u64,
+    /// Where the metrics thread writes its snapshot (atomic
+    /// tmp+rename, so scrapers never see a torn file).
+    pub metrics_path: PathBuf,
 }
 
 impl ServeConfig {
@@ -147,6 +174,10 @@ impl ServeConfig {
             mutate_epoch: 64,
             drift_threshold: 0.15,
             maintenance: MaintenanceMode::Incremental,
+            trace: None,
+            trace_sample: 1000,
+            metrics_ms: 0,
+            metrics_path: PathBuf::from("results/serve_metrics.prom"),
         }
     }
 }
@@ -624,6 +655,15 @@ pub fn run(
     // not O(n) prep
     let clock = ServeClock::start();
 
+    // trace recorder, sharing the serve clock's origin so span
+    // timestamps and request deadlines live on one timeline. Disabled
+    // (the common case) every emit site costs one relaxed load.
+    let rec = if scfg.trace.is_some() {
+        Recorder::new(n_shards, 1 << 16, scfg.trace_sample, clock.origin())
+    } else {
+        Recorder::disabled()
+    };
+
     // everything a load-generator thread reads, shared by reference
     let cctx = ClientCtx {
         queue: &queue,
@@ -637,9 +677,11 @@ pub fn run(
         adm: &adm,
         label_cell: &labels,
         depths: &depths,
+        rec: &rec,
     };
 
     let churn_stop = AtomicBool::new(false);
+    let metrics_stop = AtomicBool::new(false);
 
     std::thread::scope(|scope| {
         // churn thread (mutate=RATE): the single writer — generate
@@ -650,8 +692,9 @@ pub fn run(
             let caches = &caches[..];
             let clock = &clock;
             let stop = &churn_stop;
+            let rec = &rec;
             scope.spawn(move || {
-                churn_loop(st, labels, ds, caches, clock, stop);
+                churn_loop_traced(st, labels, ds, caches, clock, stop, rec);
             })
         });
 
@@ -668,6 +711,7 @@ pub fn run(
             let labels = &labels;
             let poll_ms = scfg.ckpt_watch_ms;
             let stop = &watch_stop;
+            let rec = &rec;
             scope.spawn(move || {
                 ckpt::watch_loop_with(
                     watcher,
@@ -689,10 +733,202 @@ pub fn run(
                         Ok(())
                     },
                     &|path, ck| {
+                        let epoch = ck.meta.epoch;
                         let v = store.publish(ck, path);
-                        exec.try_install(&v)
+                        exec.try_install(&v)?;
+                        rec.instant(
+                            TRACK_WATCHER,
+                            EventKind::CkptSwap,
+                            rec.now_us(),
+                            0,
+                            epoch as u32,
+                            0,
+                            0,
+                        );
+                        Ok(())
                     },
                 );
+            })
+        });
+
+        // metrics thread (metrics_ms=N): periodic Prometheus-text
+        // snapshot of the live run — queue depth vs. capacity,
+        // shed/degrade totals, per-shard cache outcomes and latency
+        // summaries quoted from the same log-bucket histograms the
+        // end-of-run report uses, so the snapshot and the report can
+        // never disagree about p50/p99. Writes are atomic
+        // (tmp+rename); a final snapshot flushes on shutdown.
+        let metrics_handle = (scfg.metrics_ms > 0).then(|| {
+            let queue = &queue;
+            let adm = &adm;
+            let caches = &caches[..];
+            let shard_cells = &shard_cells[..];
+            let stream = stream.as_ref();
+            let rec = &rec;
+            let stop = &metrics_stop;
+            let path = scfg.metrics_path.clone();
+            let period = Duration::from_millis(scfg.metrics_ms.max(1));
+            scope.spawn(move || {
+                let mut seq = 0u32;
+                loop {
+                    let stopping = stop.load(Ordering::Relaxed);
+                    // lock each shard cell once; keep every family's
+                    // samples contiguous in the exposition
+                    let snaps: Vec<(CacheStats, usize, LogHist)> =
+                        (0..shard_cells.len())
+                            .map(|sx| {
+                                let g = shard_cells[sx].lock().unwrap();
+                                (caches[sx].stats(), g.requests, g.lat_us.clone())
+                            })
+                            .collect();
+                    let mut p = PromText::new();
+                    p.family(
+                        "serve_queue_depth",
+                        "gauge",
+                        "requests waiting in the bounded queue",
+                    );
+                    p.sample("serve_queue_depth", &[], queue.len() as f64);
+                    p.family(
+                        "serve_queue_capacity",
+                        "gauge",
+                        "configured request-queue bound",
+                    );
+                    p.sample(
+                        "serve_queue_capacity",
+                        &[],
+                        queue.capacity() as f64,
+                    );
+                    p.family(
+                        "serve_shed_total",
+                        "counter",
+                        "requests shed (admission rejects + drop-tail)",
+                    );
+                    p.sample("serve_shed_total", &[], adm.total_shed() as f64);
+                    p.family(
+                        "serve_degraded_total",
+                        "counter",
+                        "requests admitted with degraded fanout",
+                    );
+                    p.sample(
+                        "serve_degraded_total",
+                        &[],
+                        adm.total_degraded() as f64,
+                    );
+                    p.family(
+                        "serve_requests_total",
+                        "counter",
+                        "requests completed, per shard",
+                    );
+                    for (sx, (_, reqs, _)) in snaps.iter().enumerate() {
+                        let sl = sx.to_string();
+                        p.sample(
+                            "serve_requests_total",
+                            &[("shard", &sl)],
+                            *reqs as f64,
+                        );
+                    }
+                    p.family(
+                        "serve_cache_fetches_total",
+                        "counter",
+                        "feature-cache fetches by outcome, per shard",
+                    );
+                    for (sx, (cs, _, _)) in snaps.iter().enumerate() {
+                        let sl = sx.to_string();
+                        for (outcome, v) in [
+                            ("hit", cs.hits),
+                            ("miss", cs.misses),
+                            ("stale", cs.stale_hits),
+                        ] {
+                            p.sample(
+                                "serve_cache_fetches_total",
+                                &[("shard", &sl), ("outcome", outcome)],
+                                v as f64,
+                            );
+                        }
+                    }
+                    p.family(
+                        "serve_latency_us",
+                        "summary",
+                        "completion latency per shard (µs)",
+                    );
+                    for (sx, (_, _, hist)) in snaps.iter().enumerate() {
+                        let sl = sx.to_string();
+                        p.summary("serve_latency_us", &[("shard", &sl)], hist);
+                    }
+                    if let Some(st) = stream {
+                        let c = &st.counters;
+                        let applied = c.edge_inserts.load(Ordering::Relaxed)
+                            + c.edge_deletes.load(Ordering::Relaxed)
+                            + c.feature_rewrites.load(Ordering::Relaxed)
+                            + c.noop_updates.load(Ordering::Relaxed);
+                        p.family(
+                            "stream_updates_applied_total",
+                            "counter",
+                            "graph updates applied (incl. no-ops)",
+                        );
+                        p.sample(
+                            "stream_updates_applied_total",
+                            &[],
+                            applied as f64,
+                        );
+                        p.family(
+                            "stream_epochs_applied_total",
+                            "counter",
+                            "mutation epochs applied",
+                        );
+                        p.sample(
+                            "stream_epochs_applied_total",
+                            &[],
+                            c.epochs_applied.load(Ordering::Relaxed) as f64,
+                        );
+                        p.family(
+                            "stream_full_relabels_total",
+                            "counter",
+                            "stop-the-world full relabels",
+                        );
+                        p.sample(
+                            "stream_full_relabels_total",
+                            &[],
+                            c.full_relabels.load(Ordering::Relaxed) as f64,
+                        );
+                    }
+                    if rec.is_enabled() {
+                        p.family(
+                            "trace_events_dropped_total",
+                            "counter",
+                            "trace events lost to ring wraparound",
+                        );
+                        p.sample(
+                            "trace_events_dropped_total",
+                            &[],
+                            rec.total_dropped() as f64,
+                        );
+                    }
+                    if let Err(e) = p.write(&path) {
+                        eprintln!("[serve] metrics write failed: {e:#}");
+                        return;
+                    }
+                    seq += 1;
+                    rec.instant(
+                        TRACK_CLIENT,
+                        EventKind::MetricsFlush,
+                        rec.now_us(),
+                        0,
+                        seq,
+                        0,
+                        0,
+                    );
+                    if stopping {
+                        return;
+                    }
+                    // sleep in slices so shutdown flushes promptly
+                    let mut slept = Duration::ZERO;
+                    while slept < period && !stop.load(Ordering::Relaxed) {
+                        let d = (period - slept).min(Duration::from_millis(20));
+                        std::thread::sleep(d);
+                        slept += d;
+                    }
+                }
             })
         });
 
@@ -704,6 +940,7 @@ pub fn run(
             let labels = &labels;
             let depths = &depths;
             let caps = &caps;
+            let rec = &rec;
             scope.spawn(move || {
                 let mut mb = MicroBatcher::new(
                     BatcherConfig {
@@ -720,6 +957,34 @@ pub fn run(
                 let mut rr = 0usize;
                 let mut send_routed =
                     |b: Vec<Request>, snap: &LabelSnapshot| -> bool {
+                        // coalesce span: the batch's life from its
+                        // earliest arrival to routing, tagged with the
+                        // community-purity counters the paper's p-knob
+                        // trades against
+                        if rec.is_enabled() && !b.is_empty() {
+                            let (purity, comms) =
+                                batch_purity(&b, &snap.labels);
+                            let ts = b
+                                .iter()
+                                .map(|r| r.arrive_us)
+                                .min()
+                                .unwrap_or(0);
+                            let req = b
+                                .iter()
+                                .find(|r| rec.traced(r.id))
+                                .map(|r| r.id)
+                                .unwrap_or(0);
+                            rec.span(
+                                TRACK_BATCHER,
+                                EventKind::Coalesce,
+                                ts,
+                                clock.now_us().saturating_sub(ts),
+                                req,
+                                b.len() as u32,
+                                purity,
+                                comms,
+                            );
+                        }
                         let snapshot: Vec<usize> = depths
                             .iter()
                             .map(|d| d.load(Ordering::Relaxed))
@@ -788,6 +1053,8 @@ pub fn run(
                     exec,
                     clock: &clock,
                     stream: stream.as_ref(),
+                    rec: &rec,
+                    track: shard_track(sidx),
                 };
                 let rx = &rxs[sidx];
                 let cell = &shard_cells[sidx];
@@ -863,10 +1130,32 @@ pub fn run(
         if let Some(h) = watcher_handle {
             let _ = h.join();
         }
+        // final metrics snapshot covers the fully-drained run
+        metrics_stop.store(true, Ordering::Relaxed);
+        if let Some(h) = metrics_handle {
+            let _ = h.join();
+        }
     });
 
     let wall_s = clock.now_us() as f64 / 1e6;
     let records = records.into_inner().unwrap();
+
+    // Chrome-trace export (trace=PATH): one JSON the `chrome://tracing`
+    // or Perfetto UI loads directly, one track per shard plus the
+    // batcher / churn-maintainer / ckpt-watcher / client tracks
+    if let Some(path) = &scfg.trace {
+        let sum = write_chrome_trace(path, &rec).with_context(|| {
+            format!("exporting chrome trace to {}", path.display())
+        })?;
+        println!(
+            "[serve] trace: {} spans + {} instants -> {} \
+             ({} events dropped to ring wraparound)",
+            sum.spans,
+            sum.instants,
+            path.display(),
+            sum.dropped,
+        );
+    }
 
     // roll per-shard cells + caches + admission counters up into shard
     // reports and totals; ownership columns reflect the FINAL label
@@ -898,12 +1187,14 @@ pub fn run(
     }
 
     // errored requests count toward errors/deadlines, not latency
-    // percentiles (their latency reflects the failure, not serving)
-    let lats_ms: Vec<f64> = records
-        .iter()
-        .filter(|r| !r.error)
-        .map(|r| r.latency_us as f64 / 1e3)
-        .collect();
+    // percentiles (their latency reflects the failure, not serving).
+    // Quantiles come from the same log-bucket histogram family the
+    // per-shard reports and the metrics snapshot use, so no two
+    // surfaces of the same run can disagree about p50/p99.
+    let mut lat_hist = LogHist::new();
+    for r in records.iter().filter(|r| !r.error) {
+        lat_hist.record(r.latency_us);
+    }
     let misses = records.iter().filter(|r| r.deadline_missed).count();
     let errors = records.iter().filter(|r| r.error).count();
     let evaluated = records.iter().filter(|r| r.evaluated).count();
@@ -914,13 +1205,9 @@ pub fn run(
     let param_version =
         shard_reports.iter().map(|sh| sh.param_version).max().unwrap_or(0);
     let swaps: usize = shard_reports.iter().map(|sh| sh.swaps).sum();
-    // keep the report finite (and its JSON parseable) on empty runs
-    let pct = |p: f64| if lats_ms.is_empty() { 0.0 } else { percentile(&lats_ms, p) };
-    let mean_ms = if lats_ms.is_empty() {
-        0.0
-    } else {
-        crate::util::stats::mean(&lats_ms)
-    };
+    // LogHist quantiles are 0 on empty input, so empty runs still
+    // produce a finite, parseable report
+    let pct = |q: f64| lat_hist.quantile(q) as f64 / 1e3;
     Ok(ServeReport {
         dataset: ds.name.clone(),
         executor: exec.name().to_string(),
@@ -939,11 +1226,11 @@ pub fn run(
         swaps,
         wall_s,
         throughput_rps: n as f64 / wall_s.max(1e-9),
-        lat_mean_ms: mean_ms,
-        lat_p50_ms: pct(50.0),
-        lat_p95_ms: pct(95.0),
-        lat_p99_ms: pct(99.0),
-        lat_max_ms: lats_ms.iter().cloned().fold(0.0, f64::max),
+        lat_mean_ms: lat_hist.mean() / 1e3,
+        lat_p50_ms: pct(0.5),
+        lat_p95_ms: pct(0.95),
+        lat_p99_ms: pct(0.99),
+        lat_max_ms: lat_hist.max() as f64 / 1e3,
         deadline_miss_frac: misses as f64 / n.max(1) as f64,
         batches: stats_batches,
         mean_batch_size: stats_requests as f64 / nb as f64,
@@ -1279,6 +1566,57 @@ mod tests {
         );
         let j = rep.to_json().to_string_pretty();
         assert!(j.contains("\"stream\": null"));
+    }
+
+    /// Full-rate tracing + live metrics end to end: the exported
+    /// Chrome trace parses, carries every pipeline stage by name, and
+    /// the metrics snapshot exposes the shared latency summary.
+    #[test]
+    fn tracing_run_exports_chrome_trace_and_metrics() {
+        let ds = tiny();
+        let dir = std::env::temp_dir()
+            .join(format!("comm_rand_engine_trace_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        let trace_path = dir.join("serve_trace.json");
+        let mut scfg = ServeConfig::for_dataset(&ds);
+        scfg.batch_size = 8;
+        scfg.workers = 2;
+        scfg.shards = 2;
+        scfg.fanouts = vec![5, 5];
+        scfg.trace = Some(trace_path.clone());
+        scfg.trace_sample = 1000;
+        scfg.metrics_ms = 5;
+        scfg.metrics_path = dir.join("serve_metrics.prom");
+        let meta = synthetic_infer_meta(&ds, scfg.batch_size, &scfg.fanouts);
+        let exec = NullExecutor { num_classes: ds.num_classes };
+        let lcfg = closed(2, 20, 3);
+        let rep = run(&ds, &meta, &exec, &scfg, &lcfg).unwrap();
+        assert_eq!(rep.requests, 40);
+        assert_eq!(rep.errors, 0);
+
+        let j = Json::parse_file(&trace_path).unwrap();
+        let evs = j.get("traceEvents").unwrap().as_arr().unwrap().to_vec();
+        assert!(!evs.is_empty(), "trace exported no events");
+        let has = |name: &str| {
+            evs.iter().any(|e| {
+                e.get("name").ok().and_then(|n| n.as_str().ok()) == Some(name)
+            })
+        };
+        // every traced request walks the full pipeline at permille 1000
+        for name in
+            ["enqueue", "queue_wait", "coalesce", "sample", "gather",
+             "execute", "reply", "metrics_flush"]
+        {
+            assert!(has(name), "trace is missing {name:?} events");
+        }
+
+        let prom =
+            std::fs::read_to_string(dir.join("serve_metrics.prom")).unwrap();
+        assert!(prom.contains("serve_latency_us"), "missing latency summary");
+        assert!(prom.contains("serve_queue_depth"));
+        assert!(prom.contains("serve_cache_fetches_total"));
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -32,6 +32,7 @@ use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
+use crate::obs::{EventKind, Recorder, TRACK_CLIENT};
 use crate::runtime::host::top1;
 use crate::util::rng::Rng;
 
@@ -161,6 +162,10 @@ pub struct ClientCtx<'a> {
     pub label_cell: &'a LabelCell,
     /// Per-shard queued-batch depth counters (routing backlog).
     pub depths: &'a [AtomicUsize],
+    /// Trace recorder ([`Recorder::disabled`] when tracing is off).
+    /// Clients emit `Enqueue` / `Degrade` / `Shed` instants for
+    /// trace-sampled request ids on the client track.
+    pub rec: &'a Recorder,
 }
 
 impl ClientCtx<'_> {
@@ -239,6 +244,8 @@ pub fn client_loop(client_id: u64, ctx: &ClientCtx<'_>) {
     let mut rng = client_rng(ctx.lcfg, client_id);
     for k in 0..ctx.lcfg.requests_per_client {
         let node = ctx.sample_node(&mut rng);
+        let id = (client_id << 32) | k as u64;
+        let traced = ctx.rec.traced(id);
         let (tx, rx) = mpsc::channel();
         let arrive_us = ctx.clock.now_us();
         let deadline_us = arrive_us + ctx.deadline_us;
@@ -255,13 +262,39 @@ pub fn client_loop(client_id: u64, ctx: &ClientCtx<'_>) {
                 ctx.queue.len(),
                 depth,
             ) {
-                AdmitDecision::Shed => continue,
+                AdmitDecision::Shed => {
+                    if traced {
+                        ctx.rec.instant(
+                            TRACK_CLIENT,
+                            EventKind::Shed,
+                            arrive_us,
+                            id,
+                            0,
+                            0,
+                            0,
+                        );
+                    }
+                    continue;
+                }
                 AdmitDecision::Admit => None,
-                AdmitDecision::Degrade(f) => Some(f),
+                AdmitDecision::Degrade(f) => {
+                    if traced {
+                        ctx.rec.instant(
+                            TRACK_CLIENT,
+                            EventKind::Degrade,
+                            arrive_us,
+                            id,
+                            f.first().copied().unwrap_or(0) as u32,
+                            0,
+                            0,
+                        );
+                    }
+                    Some(f)
+                }
             }
         };
         let req = Request {
-            id: (client_id << 32) | k as u64,
+            id,
             node,
             label: ctx.labels[node as usize],
             arrive_us,
@@ -271,6 +304,17 @@ pub fn client_loop(client_id: u64, ctx: &ClientCtx<'_>) {
         };
         if ctx.queue.push(req).is_err() {
             return; // queue closed under us
+        }
+        if traced {
+            ctx.rec.instant(
+                TRACK_CLIENT,
+                EventKind::Enqueue,
+                arrive_us,
+                id,
+                0,
+                0,
+                0,
+            );
         }
         let Ok(reply) = rx.recv() else { return };
         // stamp latency at batch completion (the reply's timestamp),
@@ -309,11 +353,13 @@ pub fn open_loop_client(
             std::thread::sleep(Duration::from_micros(next_us - now));
         }
         let node = ctx.sample_node(&mut rng);
+        let id = (client_id << 32) | k as u64;
+        let traced = ctx.rec.traced(id);
         let arrive_us = ctx.clock.now_us();
         let deadline_us = arrive_us + ctx.deadline_us;
         let (shard, depth) = ctx.shard_and_depth(node);
         let req = Request {
-            id: (client_id << 32) | k as u64,
+            id,
             node,
             label: ctx.labels[node as usize],
             arrive_us,
@@ -321,22 +367,72 @@ pub fn open_loop_client(
             fanout_cap: None,
             reply: reply_tx.clone(),
         };
+        let mut degraded_f0: Option<u32> = None;
         let pushed = ctx.queue.push_gated(req, |qlen, r| {
             match ctx.adm.decide(arrive_us, deadline_us, shard, qlen, depth) {
                 AdmitDecision::Shed => false,
                 AdmitDecision::Admit => true,
                 AdmitDecision::Degrade(f) => {
+                    degraded_f0 = Some(f.first().copied().unwrap_or(0) as u32);
                     r.fanout_cap = Some(f);
                     true
                 }
             }
         });
         match pushed {
-            Ok(()) => {}
+            Ok(()) => {
+                if traced {
+                    if let Some(f0) = degraded_f0 {
+                        ctx.rec.instant(
+                            TRACK_CLIENT,
+                            EventKind::Degrade,
+                            arrive_us,
+                            id,
+                            f0,
+                            0,
+                            0,
+                        );
+                    }
+                    ctx.rec.instant(
+                        TRACK_CLIENT,
+                        EventKind::Enqueue,
+                        arrive_us,
+                        id,
+                        0,
+                        0,
+                        0,
+                    );
+                }
+            }
             // the controller already counted the admission shed
-            Err(PushRejected::Denied(_)) => {}
+            Err(PushRejected::Denied(_)) => {
+                if traced {
+                    ctx.rec.instant(
+                        TRACK_CLIENT,
+                        EventKind::Shed,
+                        arrive_us,
+                        id,
+                        0,
+                        0,
+                        0,
+                    );
+                }
+            }
             // bounded queue overflow: drop-tail shed, counted here
-            Err(PushRejected::Full(_)) => ctx.adm.note_shed(shard),
+            Err(PushRejected::Full(_)) => {
+                ctx.adm.note_shed(shard);
+                if traced {
+                    ctx.rec.instant(
+                        TRACK_CLIENT,
+                        EventKind::Shed,
+                        arrive_us,
+                        id,
+                        1,
+                        0,
+                        0,
+                    );
+                }
+            }
             Err(PushRejected::Closed(_)) => return,
         }
     }

@@ -63,7 +63,7 @@ pub mod shard;
 pub mod worker;
 
 pub use admission::{AdmissionController, AdmissionPolicy, AdmitDecision};
-pub use batcher::{BatcherConfig, MicroBatcher};
+pub use batcher::{batch_purity, BatcherConfig, MicroBatcher};
 pub use cache::{CacheStats, FeatureCacheConfig, Fetched, ShardedFeatureCache};
 pub use engine::{run, ServeConfig, ServeReport};
 pub use loadgen::{Arrival, LoadConfig};
@@ -136,5 +136,12 @@ impl ServeClock {
     /// Microseconds elapsed since [`ServeClock::start`].
     pub fn now_us(&self) -> u64 {
         self.start.elapsed().as_micros() as u64
+    }
+
+    /// The instant this clock's timeline starts from. The trace
+    /// recorder ([`crate::obs::Recorder`]) is constructed with this so
+    /// event timestamps and request deadlines share one timeline.
+    pub fn origin(&self) -> Instant {
+        self.start
     }
 }

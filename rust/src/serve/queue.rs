@@ -179,6 +179,12 @@ impl<T> RequestQueue<T> {
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
+
+    /// Configured capacity bound (the metrics exporter reports depth
+    /// against it).
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
 }
 
 #[cfg(test)]

@@ -29,8 +29,8 @@ use std::sync::{Arc, Mutex};
 use anyhow::{bail, Result};
 
 use crate::ckpt::format::community_fingerprint;
+use crate::obs::LogHist;
 use crate::util::json::{num, obj, Json};
-use crate::util::stats::percentile;
 
 use super::Request;
 
@@ -381,9 +381,13 @@ pub struct ShardStatsCell {
     /// several workers it can also count benign in-flight overlap at
     /// the swap instant, never a rolled-back report.
     pub version_regressions: usize,
-    /// Per-request completion latency, µs (error replies excluded, so
-    /// per-shard percentiles share the global report's definition).
-    pub lat_us: Vec<u64>,
+    /// Per-request completion latency histogram, µs (error replies
+    /// excluded, so per-shard percentiles share the global report's
+    /// definition). Log-bucketed and mergeable: the engine folds every
+    /// shard's histogram into the run-wide one, so the global and
+    /// per-shard percentiles — and the Prometheus snapshot — all read
+    /// the *same* buckets and can never disagree.
+    pub lat_us: LogHist,
 }
 
 /// Per-shard slice of the end-of-run report.
@@ -455,11 +459,9 @@ impl ShardReport {
         cache: super::cache::CacheStats,
         adm: &super::admission::AdmissionController,
     ) -> ShardReport {
-        let lats_ms: Vec<f64> =
-            cell.lat_us.iter().map(|&u| u as f64 / 1e3).collect();
-        let pct = |p: f64| {
-            if lats_ms.is_empty() { 0.0 } else { percentile(&lats_ms, p) }
-        };
+        // quantiles straight from the log-bucketed histogram (exact at
+        // the observed min/max, ≤ ~3% relative error between)
+        let pct = |q: f64| cell.lat_us.quantile(q) as f64 / 1e3;
         ShardReport {
             id,
             owned_comms: plan.owned_comms(id),
@@ -474,9 +476,9 @@ impl ShardReport {
             swaps: cell.swaps,
             version_regressions: cell.version_regressions,
             est_service_us: adm.est_service_us(id).unwrap_or(0.0),
-            lat_p50_ms: pct(50.0),
-            lat_p95_ms: pct(95.0),
-            lat_p99_ms: pct(99.0),
+            lat_p50_ms: pct(0.5),
+            lat_p95_ms: pct(0.95),
+            lat_p99_ms: pct(0.99),
             cache_hits: cache.hits,
             cache_misses: cache.misses,
             stale_hits: cache.stale_hits,

@@ -36,6 +36,7 @@ use anyhow::{bail, Result};
 use crate::batch::assemble;
 use crate::ckpt::ParamVersion;
 use crate::graph::{Dataset, Topology};
+use crate::obs::{EventKind, Recorder, TRACK_CLIENT};
 use crate::runtime::artifact::ArtifactMeta;
 use crate::runtime::host;
 use crate::runtime::InferState;
@@ -44,7 +45,7 @@ use crate::stream::StreamState;
 use crate::util::rng::Rng;
 
 use super::admission::AdmissionController;
-use super::cache::ShardedFeatureCache;
+use super::cache::{Fetched, ShardedFeatureCache};
 use super::shard::{LabelCell, LabelSnapshot, ShardStatsCell};
 use super::{Reply, Request, ServeClock};
 
@@ -243,6 +244,12 @@ pub struct WorkerCtx<'a> {
     /// stages features at their live versions (stale cached copies
     /// refresh and count as `stale_hits`). `None` = frozen graph.
     pub stream: Option<&'a StreamState>,
+    /// Trace recorder — pass [`Recorder::disabled`] when tracing is
+    /// off; every emit is then a single branch.
+    pub rec: &'a Recorder,
+    /// The trace track this worker's spans land on
+    /// ([`crate::obs::shard_track`] of the shard id).
+    pub track: usize,
 }
 
 /// Per-batch accounting merged into the engine's totals (cache
@@ -314,8 +321,9 @@ pub fn shard_worker_loop(
         if out.errors == 0 {
             // error replies stay out of the latency samples, matching
             // the engine's global percentile definition
-            g.lat_us
-                .extend(arrives.iter().map(|&a| now.saturating_sub(a)));
+            for &a in &arrives {
+                g.lat_us.record(now.saturating_sub(a));
+            }
             // hot-swap accounting. `param_version` tracks the highest
             // version served (monotone by construction, so a batch
             // that started pre-swap and finished late can never roll
@@ -362,6 +370,37 @@ pub fn process_batch(
     let ds = ctx.ds;
     let spec = &ctx.meta.spec;
 
+    // trace bookkeeping: which riders are sampled, captured up front
+    // (one hash per request; everything below is branch-on-disabled)
+    let enabled = ctx.rec.is_enabled();
+    let traced: Vec<(u64, u64)> = if enabled {
+        reqs.iter()
+            .filter(|r| ctx.rec.traced(r.id))
+            .map(|r| (r.id, r.arrive_us))
+            .collect()
+    } else {
+        Vec::new()
+    };
+    // batch-level spans carry one representative traced rider id
+    let span_req = traced.first().map(|&(id, _)| id).unwrap_or(0);
+    if enabled {
+        let t0 = ctx.rec.now_us();
+        for &(id, arrive) in &traced {
+            // queue wait = enqueue → the batch starting to process,
+            // drawn on the client track so it nests under nothing
+            ctx.rec.span(
+                TRACK_CLIENT,
+                EventKind::QueueWait,
+                arrive,
+                t0.saturating_sub(arrive),
+                id,
+                0,
+                0,
+                0,
+            );
+        }
+    }
+
     // duplicate nodes collapse into one root; replies fan back out
     let mut roots: Vec<u32> = reqs.iter().map(|r| r.node).collect();
     roots.sort_unstable();
@@ -385,6 +424,7 @@ pub fn process_batch(
         Some(t) => &**t,
         None => &ds.csr,
     };
+    let t_sample = if enabled { ctx.rec.now_us() } else { 0 };
     let mfg = build_mfg(
         topo,
         &snap.labels,
@@ -393,6 +433,31 @@ pub fn process_batch(
         NeighborPolicy::Uniform,
         rng,
     );
+    if enabled {
+        let end = ctx.rec.now_us();
+        // cross-request neighborhood overlap: how many sampled input
+        // references deduplicated away. refs counts every slot into the
+        // input frontier with multiplicity (each layer-1 dst plus its
+        // sampled neighbors); unique is the frontier the gather pays for.
+        let refs: u64 = mfg.levels[1].len() as u64
+            + mfg.layers[0].counts.iter().map(|&c| c as u64).sum::<u64>();
+        let unique = mfg.input_nodes().len() as u64;
+        let overlap_permille = if refs == 0 {
+            0
+        } else {
+            (1000 * refs.saturating_sub(unique) / refs) as u32
+        };
+        ctx.rec.span(
+            ctx.track,
+            EventKind::Sample,
+            t_sample,
+            end.saturating_sub(t_sample),
+            span_req,
+            roots.len() as u32,
+            unique as u32,
+            overlap_permille,
+        );
+    }
 
     // stage the input frontier through the serving feature cache; this
     // is the gather the community-biased coalescing exists to shrink.
@@ -402,6 +467,8 @@ pub fn process_batch(
     let f = ds.feat_dim;
     let input = mfg.input_nodes();
     let mut staged = vec![0f32; input.len() * f];
+    let t_gather = if enabled { ctx.rec.now_us() } else { 0 };
+    let (mut hits, mut misses, mut stale) = (0u32, 0u32, 0u32);
     for (i, &v) in input.iter().enumerate() {
         let dst = &mut staged[i * f..(i + 1) * f];
         match ctx.stream {
@@ -414,14 +481,36 @@ pub fn process_batch(
                     Some(r) => r.as_slice(),
                     None => ds.feature_row(v),
                 };
-                ctx.cache.fetch_versioned(v, ver, src, dst);
+                match ctx.cache.fetch_versioned(v, ver, src, dst) {
+                    Fetched::Hit => hits += 1,
+                    Fetched::Stale => stale += 1,
+                    Fetched::Miss => misses += 1,
+                }
             }
             None => {
-                ctx.cache.fetch(v, ds.feature_row(v), dst);
+                if ctx.cache.fetch(v, ds.feature_row(v), dst) {
+                    hits += 1;
+                } else {
+                    misses += 1;
+                }
             }
         }
     }
+    if enabled {
+        let end = ctx.rec.now_us();
+        ctx.rec.span(
+            ctx.track,
+            EventKind::Gather,
+            t_gather,
+            end.saturating_sub(t_gather),
+            span_req,
+            hits,
+            misses,
+            stale,
+        );
+    }
 
+    let t_exec = if enabled { ctx.rec.now_us() } else { 0 };
     let result: Result<InferOut> =
         assemble(&mfg, ds, ctx.meta, false).and_then(|mut batch| {
             if let Some(x0) = batch.x0.as_mut() {
@@ -431,6 +520,20 @@ pub fn process_batch(
             }
             ctx.exec.infer(&batch)
         });
+    if enabled {
+        let end = ctx.rec.now_us();
+        let pv = result.as_ref().map(|o| o.param_version).unwrap_or(0);
+        ctx.rec.span(
+            ctx.track,
+            EventKind::Execute,
+            t_exec,
+            end.saturating_sub(t_exec),
+            span_req,
+            reqs.len() as u32,
+            pv as u32,
+            0,
+        );
+    }
 
     let mut outcome = BatchOutcome {
         requests: reqs.len(),
@@ -453,6 +556,17 @@ pub fn process_batch(
                     let i = roots.binary_search(&r.node).unwrap();
                     logits[i * nc..(i + 1) * nc].to_vec()
                 };
+                if enabled && ctx.rec.traced(r.id) {
+                    ctx.rec.instant(
+                        TRACK_CLIENT,
+                        EventKind::Reply,
+                        now,
+                        r.id,
+                        (now > r.deadline_us) as u32,
+                        0,
+                        0,
+                    );
+                }
                 let _ = r.reply.send(Reply {
                     id: r.id,
                     node: r.node,
@@ -468,6 +582,17 @@ pub fn process_batch(
         }
         Err(_) => {
             for r in reqs {
+                if enabled && ctx.rec.traced(r.id) {
+                    ctx.rec.instant(
+                        TRACK_CLIENT,
+                        EventKind::Reply,
+                        now,
+                        r.id,
+                        (now > r.deadline_us) as u32,
+                        1,
+                        0,
+                    );
+                }
                 let _ = r.reply.send(Reply {
                     id: r.id,
                     node: r.node,
@@ -525,6 +650,7 @@ mod tests {
         ));
         let exec = NullExecutor { num_classes: ds.num_classes };
         let clock = ServeClock::start();
+        let rec = Recorder::disabled();
         let ctx = WorkerCtx {
             ds: &ds,
             meta: &meta,
@@ -532,6 +658,8 @@ mod tests {
             exec: &exec,
             clock: &clock,
             stream: None,
+            rec: &rec,
+            track: 0,
         };
         let (tx, rx) = mpsc::channel();
         // includes a duplicate node: both requests must be answered
@@ -571,6 +699,7 @@ mod tests {
         ));
         let exec = NullExecutor { num_classes: ds.num_classes };
         let clock = ServeClock::start();
+        let rec = Recorder::disabled();
         let ctx = WorkerCtx {
             ds: &ds,
             meta: &meta,
@@ -578,6 +707,8 @@ mod tests {
             exec: &exec,
             clock: &clock,
             stream: None,
+            rec: &rec,
+            track: 0,
         };
         let nodes: [u32; 4] = [11, 23, 42, 57];
         let run = |caps: Option<Vec<usize>>| -> BatchOutcome {
@@ -630,6 +761,7 @@ mod tests {
         let exec = HostExecutor::new(&ds, 0);
         assert_eq!(exec.param_version(), 0);
         let clock = ServeClock::start();
+        let rec = Recorder::disabled();
         let ctx = WorkerCtx {
             ds: &ds,
             meta: &meta,
@@ -637,6 +769,8 @@ mod tests {
             exec: &exec,
             clock: &clock,
             stream: None,
+            rec: &rec,
+            track: 0,
         };
         let snap = LabelSnapshot::initial(&ds.community, ds.num_comms, 1);
         let (tx, rx) = mpsc::channel();

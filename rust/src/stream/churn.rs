@@ -23,6 +23,7 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::time::Duration;
 
 use crate::graph::{Dataset, Topology, TopoSnapshot};
+use crate::obs::{EventKind, Recorder, TRACK_MAINTAINER};
 use crate::serve::cache::ShardedFeatureCache;
 use crate::serve::shard::LabelCell;
 use crate::serve::ServeClock;
@@ -94,7 +95,8 @@ impl ChurnGen {
 /// Engine thread body: pace → log → seal → apply, until `stop`.
 /// Sleeps in short slices so `stop` is honored promptly; drains one
 /// final partial epoch on the way out so the report's counters cover
-/// every ingested update.
+/// every ingested update. Untraced convenience wrapper around
+/// [`churn_loop_traced`].
 pub fn churn_loop(
     st: &StreamState,
     labels: &LabelCell,
@@ -102,6 +104,28 @@ pub fn churn_loop(
     caches: &[ShardedFeatureCache],
     clock: &ServeClock,
     stop: &AtomicBool,
+) {
+    let rec = Recorder::disabled();
+    churn_loop_traced(st, labels, ds, caches, clock, stop, &rec);
+}
+
+/// [`churn_loop`] with trace instrumentation: each applied epoch emits
+/// a `Churn` span on the maintainer track (args: updates applied and
+/// vertices moved by the epoch's refinement wave), and each full
+/// relabel an additional `Relabel` instant — so a Perfetto view lines
+/// maintenance stalls up against the shard tracks' request spans. The
+/// deltas come from [`StreamState::counters`], read around each
+/// `apply_epoch`, so the trace and the end-of-run stream report count
+/// the same things.
+#[allow(clippy::too_many_arguments)]
+pub fn churn_loop_traced(
+    st: &StreamState,
+    labels: &LabelCell,
+    ds: &Dataset,
+    caches: &[ShardedFeatureCache],
+    clock: &ServeClock,
+    stop: &AtomicBool,
+    rec: &Recorder,
 ) {
     let cfg = st.cfg().clone();
     if cfg.rate_ups <= 0.0 {
@@ -111,6 +135,49 @@ pub fn churn_loop(
     let per_update_us = 1e6 / cfg.rate_ups;
     let epoch_updates = cfg.epoch_updates.max(1);
     let mut next_us = clock.now_us() as f64;
+    let apply = |ep| {
+        use std::sync::atomic::Ordering as O;
+        if !rec.is_enabled() {
+            st.apply_epoch(ep, labels, caches);
+            return;
+        }
+        let c = &st.counters;
+        let applied0 = c.edge_inserts.load(O::Relaxed)
+            + c.edge_deletes.load(O::Relaxed)
+            + c.feature_rewrites.load(O::Relaxed)
+            + c.noop_updates.load(O::Relaxed);
+        let moved0 = c.moved_vertices.load(O::Relaxed);
+        let relabels0 = c.full_relabels.load(O::Relaxed);
+        let t0 = rec.now_us();
+        st.apply_epoch(ep, labels, caches);
+        let t1 = rec.now_us();
+        let applied = applied0.abs_diff(c.edge_inserts.load(O::Relaxed)
+            + c.edge_deletes.load(O::Relaxed)
+            + c.feature_rewrites.load(O::Relaxed)
+            + c.noop_updates.load(O::Relaxed));
+        let moved = moved0.abs_diff(c.moved_vertices.load(O::Relaxed));
+        rec.span(
+            TRACK_MAINTAINER,
+            EventKind::Churn,
+            t0,
+            t1.saturating_sub(t0),
+            0,
+            applied as u32,
+            moved as u32,
+            0,
+        );
+        if c.full_relabels.load(O::Relaxed) > relabels0 {
+            rec.instant(
+                TRACK_MAINTAINER,
+                EventKind::Relabel,
+                t1,
+                0,
+                labels.snapshot().num_comms as u32,
+                0,
+                0,
+            );
+        }
+    };
     'outer: while !stop.load(Ordering::Relaxed) {
         for _ in 0..epoch_updates {
             next_us += per_update_us;
@@ -131,11 +198,11 @@ pub fn churn_loop(
             st.log().append(clock.now_us(), m);
         }
         if let Some(ep) = st.log().seal() {
-            st.apply_epoch(ep, labels, caches);
+            apply(ep);
         }
     }
     if let Some(ep) = st.log().seal() {
-        st.apply_epoch(ep, labels, caches);
+        apply(ep);
     }
 }
 

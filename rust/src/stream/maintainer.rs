@@ -28,6 +28,13 @@
 //! between full relabels the community id space — and therefore the
 //! community → shard plan and the checkpoint fence fingerprint's
 //! *generation* — stays stable; only vertex membership drifts.
+//!
+//! Under request tracing the maintenance work done here is visible on
+//! the dedicated maintainer track: the engine's churn thread brackets
+//! each applied epoch with a `Churn` event (updates applied, vertices
+//! moved) and marks full relabels with `Relabel` instants
+//! ([`crate::stream::churn::churn_loop_traced`]), so refinement stalls
+//! line up against the shard tracks' request spans in Perfetto.
 
 use std::collections::HashMap;
 

@@ -4,15 +4,22 @@
 
 use std::time::Instant;
 
+/// Per-iteration timing summary of one [`bench`] run.
 pub struct BenchResult {
+    /// Benchmark label.
     pub name: String,
+    /// Timed iterations (after the warmup call).
     pub iters: u64,
+    /// Mean nanoseconds per iteration.
     pub mean_ns: f64,
+    /// Sample standard deviation, nanoseconds.
     pub stddev_ns: f64,
+    /// Fastest observed iteration, nanoseconds.
     pub min_ns: f64,
 }
 
 impl BenchResult {
+    /// Print the one-line summary `bench` targets emit.
     pub fn print(&self) {
         let (scale, unit) = pick_unit(self.mean_ns);
         println!(

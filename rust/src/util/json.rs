@@ -10,17 +10,25 @@ use std::fmt::Write as _;
 
 use anyhow::{anyhow, bail, Context, Result};
 
+/// A parsed JSON value.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any number (f64 storage, i64 fast-path accessor).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (sorted keys, so output is deterministic).
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// Parse a complete JSON document (trailing input is an error).
     pub fn parse(s: &str) -> Result<Json> {
         let mut p = Parser { b: s.as_bytes(), i: 0 };
         p.skip_ws();
@@ -32,12 +40,14 @@ impl Json {
         Ok(v)
     }
 
+    /// Read and parse a JSON file.
     pub fn parse_file(path: &std::path::Path) -> Result<Json> {
         let s = std::fs::read_to_string(path)
             .with_context(|| format!("reading {}", path.display()))?;
         Json::parse(&s).with_context(|| format!("parsing {}", path.display()))
     }
 
+    /// Required object-key lookup (error when absent or not an object).
     pub fn get(&self, key: &str) -> Result<&Json> {
         match self {
             Json::Obj(m) => m
@@ -47,6 +57,7 @@ impl Json {
         }
     }
 
+    /// Optional object-key lookup.
     pub fn opt(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -54,6 +65,7 @@ impl Json {
         }
     }
 
+    /// The string value, or an error for any other variant.
     pub fn as_str(&self) -> Result<&str> {
         match self {
             Json::Str(s) => Ok(s),
@@ -61,6 +73,7 @@ impl Json {
         }
     }
 
+    /// The numeric value, or an error for any other variant.
     pub fn as_f64(&self) -> Result<f64> {
         match self {
             Json::Num(x) => Ok(*x),
@@ -68,11 +81,13 @@ impl Json {
         }
     }
 
+    /// The numeric value truncated to i64.
     pub fn as_i64(&self) -> Result<i64> {
         let x = self.as_f64()?;
         Ok(x as i64)
     }
 
+    /// The numeric value as usize (negative numbers are an error).
     pub fn as_usize(&self) -> Result<usize> {
         let x = self.as_f64()?;
         if x < 0.0 {
@@ -81,6 +96,7 @@ impl Json {
         Ok(x as usize)
     }
 
+    /// The boolean value, or an error for any other variant.
     pub fn as_bool(&self) -> Result<bool> {
         match self {
             Json::Bool(b) => Ok(*b),
@@ -88,6 +104,7 @@ impl Json {
         }
     }
 
+    /// The array elements, or an error for any other variant.
     pub fn as_arr(&self) -> Result<&[Json]> {
         match self {
             Json::Arr(v) => Ok(v),
@@ -95,6 +112,7 @@ impl Json {
         }
     }
 
+    /// The object map, or an error for any other variant.
     pub fn as_obj(&self) -> Result<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(m) => Ok(m),
@@ -102,6 +120,7 @@ impl Json {
         }
     }
 
+    /// Serialize with indentation (the format every result file uses).
     pub fn to_string_pretty(&self) -> String {
         let mut out = String::new();
         self.write(&mut out, 0, true);
@@ -187,19 +206,23 @@ fn write_escaped(out: &mut String, s: &str) {
     out.push('"');
 }
 
-/// Convenience builders for emitting result files.
+/// Object builder for emitting result files.
 pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
     Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
 }
+/// Number builder.
 pub fn num(x: f64) -> Json {
     Json::Num(x)
 }
+/// String builder.
 pub fn s(x: &str) -> Json {
     Json::Str(x.to_string())
 }
+/// Array builder.
 pub fn arr(v: Vec<Json>) -> Json {
     Json::Arr(v)
 }
+/// Numeric-array builder.
 pub fn arr_f64(v: &[f64]) -> Json {
     Json::Arr(v.iter().map(|&x| Json::Num(x)).collect())
 }

@@ -21,6 +21,7 @@ fn splitmix64(state: &mut u64) -> u64 {
 }
 
 impl Rng {
+    /// Seed a generator (any u64 seed is fine; split-mix expands it).
     pub fn new(seed: u64) -> Self {
         let mut sm = seed;
         let s = [
@@ -37,6 +38,7 @@ impl Rng {
         Rng::new(self.next_u64() ^ tag.wrapping_mul(0x9E3779B97F4A7C15))
     }
 
+    /// Next raw 64-bit draw.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let s = &mut self.s;
@@ -72,6 +74,7 @@ impl Rng {
         (m >> 64) as u64
     }
 
+    /// Uniform in `[0, n)` as `usize`.
     #[inline]
     pub fn usize_below(&mut self, n: usize) -> usize {
         self.below(n as u64) as usize

@@ -1,6 +1,7 @@
 //! Small statistics helpers used by the evaluation harness
 //! (means, stddev, Pearson correlation for Fig. 6/7, percentiles).
 
+/// Arithmetic mean (NaN on empty input).
 pub fn mean(xs: &[f64]) -> f64 {
     if xs.is_empty() {
         return f64::NAN;
@@ -8,6 +9,8 @@ pub fn mean(xs: &[f64]) -> f64 {
     xs.iter().sum::<f64>() / xs.len() as f64
 }
 
+/// Sample standard deviation, Bessel-corrected (0 for fewer than two
+/// observations).
 pub fn stddev(xs: &[f64]) -> f64 {
     if xs.len() < 2 {
         return 0.0;

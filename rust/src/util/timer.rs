@@ -4,19 +4,23 @@
 use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
 
+/// A started wall-clock stopwatch.
 pub struct Timer {
     start: Instant,
 }
 
 impl Timer {
+    /// Start timing now.
     pub fn start() -> Self {
         Timer { start: Instant::now() }
     }
 
+    /// Seconds since [`Timer::start`].
     pub fn elapsed_s(&self) -> f64 {
         self.start.elapsed().as_secs_f64()
     }
 
+    /// Milliseconds since [`Timer::start`].
     pub fn elapsed_ms(&self) -> f64 {
         self.start.elapsed().as_secs_f64() * 1e3
     }
@@ -29,6 +33,7 @@ pub struct Phases {
 }
 
 impl Phases {
+    /// Empty accumulator.
     pub fn new() -> Self {
         Self::default()
     }
@@ -41,24 +46,24 @@ impl Phases {
         out
     }
 
+    /// Add an externally-measured duration to a phase.
     pub fn add(&mut self, name: &'static str, d: Duration) {
         *self.acc.entry(name).or_default() += d;
     }
 
+    /// Accumulated seconds under `name` (0 for a phase never timed).
     pub fn get_s(&self, name: &str) -> f64 {
-        self.acc
-            .iter()
-            .find(|(k, _)| **k == name)
-            .map(|(_, d)| d.as_secs_f64())
-            .unwrap_or(0.0)
+        self.acc.get(name).map(|d| d.as_secs_f64()).unwrap_or(0.0)
     }
 
+    /// Fold another accumulator's phases into this one.
     pub fn merge(&mut self, other: &Phases) {
         for (k, v) in &other.acc {
             *self.acc.entry(k).or_default() += *v;
         }
     }
 
+    /// All phases as `(name, seconds)`, sorted by name.
     pub fn report(&self) -> Vec<(String, f64)> {
         self.acc
             .iter()
@@ -78,5 +83,20 @@ mod tests {
         p.time("a", || std::thread::sleep(Duration::from_millis(2)));
         assert!(p.get_s("a") >= 0.004);
         assert_eq!(p.get_s("missing"), 0.0);
+    }
+
+    /// `get_s` is a keyed map lookup: hits return the exact
+    /// accumulated duration, misses (including prefixes/suffixes of a
+    /// real key, which a substring scan could confuse) return 0.
+    #[test]
+    fn get_s_hits_and_misses_by_exact_key() {
+        let mut p = Phases::new();
+        p.add("sample", Duration::from_secs(2));
+        p.add("sample_gather", Duration::from_secs(5));
+        assert_eq!(p.get_s("sample"), 2.0);
+        assert_eq!(p.get_s("sample_gather"), 5.0);
+        assert_eq!(p.get_s("sam"), 0.0, "prefix of a key is a miss");
+        assert_eq!(p.get_s("gather"), 0.0, "suffix of a key is a miss");
+        assert_eq!(p.get_s(""), 0.0);
     }
 }

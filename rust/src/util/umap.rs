@@ -7,6 +7,7 @@
 
 const EMPTY: u32 = u32::MAX;
 
+/// Linear-probing `u32 -> u32` hash map (keys must not be `u32::MAX`).
 pub struct U32Map {
     keys: Vec<u32>,
     vals: Vec<u32>,
@@ -60,6 +61,7 @@ impl U32Map {
         }
     }
 
+    /// Look a key up (`None` when absent).
     #[inline]
     pub fn get(&self, key: u32) -> Option<u32> {
         let mut i = self.slot(key);
@@ -98,10 +100,12 @@ impl U32Map {
         }
     }
 
+    /// Number of distinct keys stored.
     pub fn len(&self) -> usize {
         self.len
     }
 
+    /// Whether the map holds no entries.
     pub fn is_empty(&self) -> bool {
         self.len == 0
     }
