@@ -116,6 +116,14 @@ COMMANDS:
   inspect <preset>       print dataset statistics
   serve bench [preset]   online-inference benchmark
                            p=0..1 (community-bias knob)  batch=N
+                           sampler=uniform|biased|labor (micro-batch
+                           MFG sampler; labor = cooperative shared-
+                           variate sampling across co-batched requests,
+                           default uniform keeps pre-knob benches
+                           bitwise-identical)
+                           sample_p=0..1 (intra-community weight for
+                           sampler=biased; distinct from p, which
+                           shapes batch composition)
                            clients=N  requests=N (per client)
                            delay_ms=F  deadline_ms=F  zipf=F
                            workers=N  cache_rows=N  cache_shards=N
@@ -155,7 +163,7 @@ COMMANDS:
                            ids: fig2 fig5 fig6 fig7 fig8 fig9 fig10
                                 tab3 tab4 tab5 fullbatch inference
                                 preproc ablation autotune serve ckpt
-                                stream obs all
+                                stream obs coop all
   help                   this message
 
 Presets: {}",
@@ -312,6 +320,15 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
             args.get("admission").unwrap_or("none"),
         )?,
         fanouts: defaults.fanouts,
+        sampler: {
+            let v = args.get("sampler").unwrap_or("uniform");
+            crate::sampler::SamplerKind::parse(v).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "sampler must be uniform|biased|labor, got {v:?}"
+                )
+            })?
+        },
+        sample_p: args.get_f64("sample_p", defaults.sample_p)?,
         seed: args.get_u64("seed", 0)?,
         ckpt: args.get("ckpt").map(std::path::PathBuf::from),
         ckpt_watch_ms: args.get_u64("watch_ms", 0)?,
@@ -329,6 +346,9 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     };
     if !(0.0..=1.0).contains(&scfg.community_bias) {
         bail!("p must be in [0, 1], got {}", scfg.community_bias);
+    }
+    if !(0.0..=1.0).contains(&scfg.sample_p) {
+        bail!("sample_p must be in [0, 1], got {}", scfg.sample_p);
     }
     if scfg.shards == 0 {
         bail!("shards must be >= 1");

@@ -1,0 +1,259 @@
+//! Cooperative cross-request sampling gate (`comm-rand exp coop`).
+//!
+//! The paper's thesis — community structure should shape batch
+//! composition *and* memory access — becomes a serving-efficiency
+//! claim here: at high community bias `p`, co-batched requests hit the
+//! same hub neighborhoods, so LABOR-style shared-variate sampling
+//! (`sampler=labor`) should (a) report a cross-request `dedup_factor`
+//! well above 1 and (b) move strictly fewer feature-gather bytes than
+//! independent uniform sampling, at **identical** accuracy (the host
+//! executor classifies each root from its precomputed 1-hop
+//! aggregation, so logits do not depend on the MFG sampler).
+//!
+//! For each `p` in the sweep, both samplers serve the *same* workload
+//! (same load seed → same request sequence) for several trials;
+//! gather-byte and refs/unique totals are summed over trials so a lucky
+//! batching pattern in a single run cannot decide the comparison. The
+//! gate **fails** unless at every `p ≥` [`GATE_P`]:
+//!
+//! * labor's aggregate `dedup_factor` > [`MIN_DEDUP`],
+//! * labor's total gather bytes < uniform's (strictly),
+//! * aggregate accuracy matches uniform's to within 1e-9.
+//!
+//! `sampler=uniform` stays the serving default, so existing benches
+//! are bitwise-identical to pre-knob output; this experiment is where
+//! the cooperative path earns its keep. Like `exp serve` it needs no
+//! PJRT session, so it gates CI in artifact-less environments, writing
+//! `results/coop_bench.{md,json}`.
+
+use anyhow::{bail, Result};
+
+use crate::cli::Args;
+use crate::config::preset;
+use crate::sampler::SamplerKind;
+use crate::serve::{engine, Arrival, LoadConfig, ServeConfig};
+use crate::util::json::{num, obj, s, Json};
+
+use super::common::{f2, quick, write_results, Table};
+
+/// Community-bias values swept; the gate applies at `p >= GATE_P`.
+const P_SWEEP: [f64; 3] = [0.5, 0.9, 1.0];
+
+/// Bias threshold above which the cooperative win is gated.
+pub const GATE_P: f64 = 0.9;
+
+/// Labor must report at least this aggregate dedup factor at gated `p`.
+pub const MIN_DEDUP: f64 = 1.2;
+
+/// Per-(p, sampler) totals across trials.
+struct ModeTotals {
+    sampler: SamplerKind,
+    gather_bytes: u64,
+    frontier_refs: u64,
+    /// Σ unique input nodes (gather_bytes / (feat_dim·4)).
+    input_nodes: u64,
+    correct: f64,
+    evaluated: u64,
+    /// Best (lowest) p99 across trials, ms.
+    p99_ms: f64,
+    /// Best throughput across trials, req/s.
+    rps: f64,
+}
+
+impl ModeTotals {
+    fn dedup(&self) -> f64 {
+        if self.input_nodes == 0 {
+            1.0
+        } else {
+            self.frontier_refs as f64 / self.input_nodes as f64
+        }
+    }
+
+    fn accuracy(&self) -> f64 {
+        self.correct / self.evaluated.max(1) as f64
+    }
+}
+
+pub fn run(args: &Args) -> Result<()> {
+    let name = args.pos.get(1).map(String::as_str).unwrap_or("tiny");
+    let p = preset(name)
+        .ok_or_else(|| anyhow::anyhow!("unknown preset {name}"))?;
+    let ds = crate::train::dataset::load_or_build(&p, true)?;
+
+    let mut scfg = ServeConfig::for_dataset(&ds);
+    scfg.batch_size = args.get_usize("batch", 32)?;
+    // generous coalescing budget: the comparison is about shared
+    // neighborhoods, so batches should actually fill
+    scfg.max_delay_us = (args.get_f64("delay_ms", 4.0)? * 1e3) as u64;
+    scfg.deadline_us = 500_000;
+    scfg.workers = args.get_usize("workers", 2)?;
+    scfg.seed = args.get_u64("seed", 0)?;
+    let lcfg = LoadConfig {
+        clients: args.get_usize("clients", 16)?,
+        requests_per_client: args
+            .get_usize("requests", if quick() { 40 } else { 120 })?,
+        zipf_s: args.get_f64("zipf", 1.1)?,
+        arrival: Arrival::Closed,
+        seed: scfg.seed ^ 0x10AD,
+    };
+    let trials = args.get_usize("trials", if quick() { 2 } else { 3 })?.max(1);
+    let expect = lcfg.clients * lcfg.requests_per_client;
+    let (exec, meta) = engine::build_executor(&p, &ds, &scfg);
+
+    let mut table = Table::new(&[
+        "p",
+        "sampler",
+        "dedup",
+        "gather MB",
+        "acc %",
+        "p99 ms (best)",
+        "req/s (best)",
+    ]);
+    let mut rows = Vec::new();
+    let mut gate_failures: Vec<String> = Vec::new();
+
+    for &bias in &P_SWEEP {
+        let mut totals = Vec::new();
+        for sampler in [SamplerKind::Uniform, SamplerKind::Labor] {
+            let cfg = ServeConfig {
+                community_bias: bias,
+                sampler,
+                ..scfg.clone()
+            };
+            let mut t = ModeTotals {
+                sampler,
+                gather_bytes: 0,
+                frontier_refs: 0,
+                input_nodes: 0,
+                correct: 0.0,
+                evaluated: 0,
+                p99_ms: f64::INFINITY,
+                rps: 0.0,
+            };
+            for trial in 0..trials {
+                let l = LoadConfig {
+                    seed: lcfg.seed ^ ((trial as u64) << 8),
+                    ..lcfg.clone()
+                };
+                let rep = engine::run(&ds, &meta, exec.as_ref(), &cfg, &l)?;
+                println!(
+                    "[coop] p={bias:.1} {} trial {trial}: {}",
+                    sampler.name(),
+                    rep.summary()
+                );
+                if rep.requests != expect {
+                    bail!(
+                        "p={bias} sampler={} trial {trial} answered {} of \
+                         {expect} requests",
+                        sampler.name(),
+                        rep.requests,
+                    );
+                }
+                t.gather_bytes += rep.gather_bytes;
+                t.frontier_refs += rep.frontier_refs;
+                t.input_nodes +=
+                    rep.gather_bytes / (ds.feat_dim as u64 * 4);
+                t.correct += rep.accuracy * rep.evaluated as f64;
+                t.evaluated += rep.evaluated as u64;
+                t.p99_ms = t.p99_ms.min(rep.lat_p99_ms);
+                t.rps = t.rps.max(rep.throughput_rps);
+            }
+            table.row(vec![
+                format!("{bias:.1}"),
+                sampler.name().to_string(),
+                format!("{:.2}", t.dedup()),
+                format!("{:.2}", t.gather_bytes as f64 / 1e6),
+                format!("{:.1}", t.accuracy() * 100.0),
+                f2(t.p99_ms),
+                format!("{:.0}", t.rps),
+            ]);
+            rows.push(obj(vec![
+                ("p", num(bias)),
+                ("sampler", s(sampler.name())),
+                ("dedup_factor", num(t.dedup())),
+                ("gather_bytes", num(t.gather_bytes as f64)),
+                ("frontier_refs", num(t.frontier_refs as f64)),
+                ("input_nodes", num(t.input_nodes as f64)),
+                ("accuracy", num(t.accuracy())),
+                ("p99_ms_best", num(t.p99_ms)),
+                ("throughput_rps_best", num(t.rps)),
+            ]));
+            totals.push(t);
+        }
+
+        let (uni, lab) = (&totals[0], &totals[1]);
+        debug_assert_eq!(uni.sampler, SamplerKind::Uniform);
+        let saved = 1.0 - lab.gather_bytes as f64 / uni.gather_bytes.max(1) as f64;
+        println!(
+            "[coop] p={bias:.1}: labor dedup x{:.2} (uniform x{:.2}), \
+             gather {:.2} MB vs {:.2} MB ({:+.1}% bytes), acc {:.2}% vs \
+             {:.2}%",
+            lab.dedup(),
+            uni.dedup(),
+            lab.gather_bytes as f64 / 1e6,
+            uni.gather_bytes as f64 / 1e6,
+            -saved * 100.0,
+            lab.accuracy() * 100.0,
+            uni.accuracy() * 100.0,
+        );
+        if bias >= GATE_P {
+            if lab.dedup() <= MIN_DEDUP {
+                gate_failures.push(format!(
+                    "p={bias}: labor dedup_factor {:.3} <= {MIN_DEDUP}",
+                    lab.dedup()
+                ));
+            }
+            if lab.gather_bytes >= uni.gather_bytes {
+                gate_failures.push(format!(
+                    "p={bias}: labor moved {} gather bytes, uniform {} \
+                     (cooperative sampling must move strictly fewer)",
+                    lab.gather_bytes, uni.gather_bytes
+                ));
+            }
+            if (lab.accuracy() - uni.accuracy()).abs() > 1e-9 {
+                gate_failures.push(format!(
+                    "p={bias}: accuracy diverged: labor {:.6} vs uniform \
+                     {:.6}",
+                    lab.accuracy(),
+                    uni.accuracy()
+                ));
+            }
+        }
+    }
+
+    if !gate_failures.is_empty() {
+        bail!("coop gate failed:\n  {}", gate_failures.join("\n  "));
+    }
+    println!(
+        "[coop] gate ok: at p >= {GATE_P}, cooperative sampling deduped \
+         > x{MIN_DEDUP} and moved strictly fewer gather bytes than \
+         independent sampling at equal accuracy"
+    );
+
+    let md = format!(
+        "# Cooperative cross-request sampling ({name})\n\n\
+         Closed loop: {} clients x {} requests, batch cap {}, executor \
+         `{}`, totals over {} trial(s) per (p, sampler) cell; same load \
+         seeds per cell, so both samplers serve the identical request \
+         sequence.\n\n{}\n\
+         Gate (at p >= {GATE_P}): labor `dedup_factor` > {MIN_DEDUP}, \
+         labor gather bytes strictly below uniform's, accuracy equal to \
+         1e-9. `sampler=uniform` remains the serving default — existing \
+         benches are unchanged; the cooperative path is opt-in via \
+         `serve bench sampler=labor`.\n",
+        lcfg.clients,
+        lcfg.requests_per_client,
+        scfg.batch_size,
+        exec.name(),
+        trials,
+        table.to_markdown(),
+    );
+    let json = obj(vec![
+        ("preset", s(name)),
+        ("gate_p", num(GATE_P)),
+        ("min_dedup", num(MIN_DEDUP)),
+        ("trials", num(trials as f64)),
+        ("cells", Json::Arr(rows)),
+    ]);
+    write_results("coop_bench", &md, &json)
+}

@@ -9,6 +9,7 @@ pub mod ablation;
 pub mod autotune;
 pub mod ckpt;
 pub mod common;
+pub mod coop;
 pub mod fig10;
 pub mod fig2;
 pub mod fig5;
@@ -46,6 +47,9 @@ pub fn run(args: &Args) -> Result<()> {
     }
     if id == "obs" {
         return obs::run(args);
+    }
+    if id == "coop" {
+        return coop::run(args);
     }
     let mut ctx = Ctx::new()?;
     match id {

@@ -119,7 +119,7 @@ fn event_args(ev: &super::span::Event) -> Json {
             ("communities", n(ev.c)),
         ],
         K::Sample => vec![
-            ("roots", n(ev.a)),
+            ("refs", n(ev.a)),
             ("input_nodes", n(ev.b)),
             ("overlap_permille", n(ev.c)),
         ],

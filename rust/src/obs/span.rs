@@ -44,8 +44,11 @@ pub enum EventKind {
     /// `b` = community purity in permille, `c` = distinct communities).
     Coalesce = 4,
     /// MFG neighborhood sampling for one micro-batch (span; `a` =
-    /// dedup'd roots, `b` = MFG input nodes, `c` = cross-request
-    /// neighborhood overlap in permille).
+    /// input-frontier references with multiplicity, `b` = unique MFG
+    /// input nodes, `c` = cross-request neighborhood overlap in
+    /// permille, `1000·(a−b)/a` — so `a/b` is the batch's dedup
+    /// factor and summing `a`/`b` over all sample spans reproduces the
+    /// run's `ServeReport.dedup_factor` exactly).
     Sample = 5,
     /// Feature gather through the cache (span; `a` = hits, `b` =
     /// misses, `c` = stale hits).

@@ -14,7 +14,7 @@
 
 use std::collections::HashMap;
 
-use crate::graph::Csr;
+use crate::graph::Topology;
 use crate::util::rng::Rng;
 
 use super::mfg::{Mfg, MfgLayer};
@@ -34,8 +34,11 @@ pub fn epoch_batches(
 /// nodes (truncated to `max_roots`, the artifact's batch capacity);
 /// every layer links each node to up to `fanout` *within-union*
 /// neighbors.
-pub fn build_mfg_cluster(
-    csr: &Csr,
+///
+/// Generic over [`Topology`] so that under streaming it reads the
+/// delta-overlay snapshot it is handed, not the stale base CSR.
+pub fn build_mfg_cluster<T: Topology + ?Sized>(
+    csr: &T,
     union_nodes: &[u32],
     fanouts: &[usize],
     max_roots: usize,
@@ -138,6 +141,34 @@ mod tests {
                 assert!(set.contains(&u));
             }
         }
+    }
+
+    /// Streaming contract: the builder reads whatever [`Topology`] it
+    /// is handed, so a within-union edge inserted through the delta
+    /// overlay must show up in the batch adjacency.
+    #[test]
+    fn observes_overlay_inserted_edge_under_churn() {
+        use crate::graph::{Csr, TopoSnapshot};
+        use std::sync::Arc;
+
+        // union {0,1,2}; in the base graph 0-1 is the only edge
+        let base = Arc::new(Csr::from_edges(3, &[(0, 1)]));
+        let union: Vec<u32> = vec![0, 1, 2];
+        let mut rng = Rng::new(5);
+        let stale = build_mfg_cluster(&*base, &union, &[2], 8, &mut rng);
+        assert_eq!(stale.layers[0].counts[2], 0, "node 2 isolated in base");
+
+        let snap0 = TopoSnapshot::from_base(base);
+        let (snap1, applied) = snap0.apply(&[(2, 0, true)]);
+        assert_eq!(applied.len(), 1);
+        let mut rng = Rng::new(5);
+        let live = build_mfg_cluster(&snap1, &union, &[2], 8, &mut rng);
+        assert_eq!(live.layers[0].counts[2], 1);
+        let p = live.layers[0].nbr_pos[2 * 2] as usize;
+        assert_eq!(
+            live.levels[0][p], 0,
+            "overlay-inserted edge 2-0 must appear in the union adjacency"
+        );
     }
 
     #[test]

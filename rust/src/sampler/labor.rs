@@ -1,28 +1,58 @@
-//! LABOR-0 baseline sampler (Balin & Çatalyürek, NeurIPS'23) — the
-//! structure-agnostic state-of-the-art compared in §6.3.
+//! LABOR-0 dependent sampler (Balin & Çatalyürek, NeurIPS'23) — the
+//! structure-agnostic state-of-the-art compared in §6.3, and the
+//! shared-variate engine behind the serving stack's cooperative
+//! cross-request sampling (`sampler=labor`).
 //!
 //! Key idea: instead of sampling each destination's neighborhood
 //! independently, all destinations of a layer share one uniform variate
 //! `r_u` per source node; dst `t` adopts neighbor `u` iff
 //! `r_u <= fanout / deg(t)`. Expected per-dst sample count matches
 //! uniform sampling, but the shared variates make the *union* of
-//! sampled sources much smaller (defusing neighborhood explosion).
+//! sampled sources much smaller (defusing neighborhood explosion —
+//! and, in serving, shrinking the per-batch gather footprint).
+//!
+//! The shared variates are **order-independent**: one seed is drawn
+//! from the caller's RNG per layer and `r_u` is a pure hash of
+//! `(layer_seed, u)`, so every dst reads the same variate for source
+//! `u` no matter which dst is processed first. (An earlier revision
+//! drew `r_u` lazily from the sequential RNG during the dst walk,
+//! which made dst *B*'s sample depend on whether dst *A* had already
+//! consumed draws — breaking the per-seed determinism the other
+//! samplers guarantee. The permutation-invariance test below pins the
+//! fix.)
 //!
 //! We implement the LABOR-0 variant (uniform importance); the sampled
 //! count per dst is binomial, so rows are truncated at the artifact's
 //! fanout width (bias is negligible at our fanouts and noted in
 //! DESIGN.md).
 
-use std::collections::HashMap;
-
-use crate::graph::Csr;
+use crate::graph::Topology;
 use crate::util::rng::Rng;
 use crate::util::umap::U32Map;
 
 use super::mfg::{Mfg, MfgLayer};
 
-pub fn build_mfg_labor(
-    csr: &Csr,
+/// The shared per-source variate `r_u ∈ [0, 1)`: a splitmix-style
+/// avalanche of `(layer_seed, u)`. Pure in its inputs, so every dst of
+/// a layer observes the same variate for source `u` regardless of
+/// iteration order — the property the permutation-invariance test
+/// locks in.
+#[inline]
+fn shared_variate(layer_seed: u64, u: u32) -> f64 {
+    let mut z = layer_seed ^ (u as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^= z >> 31;
+    (z >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+}
+
+/// Build an MFG with LABOR-0 dependent sampling. Generic over
+/// [`Topology`], so it samples identically from a frozen
+/// [`crate::graph::Csr`] and from a streaming
+/// [`crate::graph::TopoSnapshot`] — under churn an in-flight build
+/// keeps reading whatever snapshot it was handed.
+pub fn build_mfg_labor<T: Topology + ?Sized>(
+    topo: &T,
     roots: &[u32],
     fanouts: &[usize],
     rng: &mut Rng,
@@ -33,6 +63,10 @@ pub fn build_mfg_labor(
 
     for li in 0..layers {
         let fanout = fanouts[layers - 1 - li];
+        // one RNG draw per layer; everything below is a pure function
+        // of (layer_seed, node), so the dst walk order cannot leak
+        // into the variates
+        let layer_seed = rng.next_u64();
         let dst = levels_rev.last().unwrap().clone();
         let n_dst = dst.len();
         let mut prev: Vec<u32> = dst.clone();
@@ -40,20 +74,17 @@ pub fn build_mfg_labor(
         for (i, &v) in dst.iter().enumerate() {
             pos.insert(v, i as u32);
         }
-        // shared per-source variates, lazily drawn
-        let mut r_u: HashMap<u32, f64> = HashMap::new();
         let mut nbr_pos = vec![0u32; n_dst * fanout];
         let mut counts = vec![0u32; n_dst];
         for (i, &v) in dst.iter().enumerate() {
-            let nbrs = csr.neighbors(v);
+            let nbrs = topo.neighbors(v);
             if nbrs.is_empty() {
                 continue;
             }
             let thresh = fanout as f64 / nbrs.len() as f64;
             let mut c = 0usize;
             for &u in nbrs {
-                let r = *r_u.entry(u).or_insert_with(|| rng.f64());
-                if r <= thresh {
+                if shared_variate(layer_seed, u) <= thresh {
                     if c < fanout {
                         let p = pos.get_or_insert_with(u, || {
                             prev.push(u);
@@ -71,7 +102,7 @@ pub fn build_mfg_labor(
             if c == 0 {
                 let (&u, _) = nbrs
                     .iter()
-                    .map(|u| (u, *r_u.entry(*u).or_insert_with(|| rng.f64())))
+                    .map(|u| (u, shared_variate(layer_seed, *u)))
                     .reduce(|a, b| if a.1 <= b.1 { a } else { b })
                     .unwrap();
                 let p = pos.get_or_insert_with(u, || {
@@ -96,7 +127,10 @@ pub fn build_mfg_labor(
 mod tests {
     use super::*;
     use crate::graph::gen::{generate_sbm, SbmParams};
+    use crate::graph::{Csr, TopoSnapshot};
     use crate::sampler::neighbor::NeighborPolicy;
+    use std::collections::HashSet;
+    use std::sync::Arc;
 
     fn graph() -> Csr {
         let mut rng = Rng::new(50);
@@ -163,5 +197,91 @@ mod tests {
             tot_labor < tot_uni,
             "labor union {tot_labor} !< uniform union {tot_uni}"
         );
+    }
+
+    /// Per-dst sampled neighbor *sets* must not depend on the order
+    /// the dsts are processed in: shuffling the roots permutes rows
+    /// but every root keeps exactly the same sampled neighborhood.
+    /// (This is the regression test for the lazy-draw bug, where the
+    /// shared variates were consumed in dst-iteration order.)
+    #[test]
+    fn permutation_invariant_per_root_samples() {
+        let csr = graph();
+        let roots_a: Vec<u32> = (0..96u32).collect();
+        let mut roots_b = roots_a.clone();
+        Rng::new(77).shuffle(&mut roots_b);
+        let mut r1 = Rng::new(4);
+        let mut r2 = Rng::new(4);
+        let a = build_mfg_labor(&csr, &roots_a, &[5, 5], &mut r1);
+        let b = build_mfg_labor(&csr, &roots_b, &[5, 5], &mut r2);
+
+        // compare the top layer: same root → same sampled neighbor set
+        let sampled = |mfg: &Mfg| -> std::collections::HashMap<u32, HashSet<u32>> {
+            let l = mfg.num_layers();
+            let layer = &mfg.layers[l - 1];
+            let dst = &mfg.levels[l];
+            let prev = &mfg.levels[l - 1];
+            dst.iter()
+                .enumerate()
+                .map(|(i, &v)| {
+                    let set: HashSet<u32> = (0..layer.counts[i] as usize)
+                        .map(|k| prev[layer.nbr_pos[i * layer.fanout + k] as usize])
+                        .collect();
+                    (v, set)
+                })
+                .collect()
+        };
+        let sa = sampled(&a);
+        let sb = sampled(&b);
+        for v in &roots_a {
+            assert_eq!(
+                sa[v], sb[v],
+                "root {v}: sampled set depends on dst processing order"
+            );
+        }
+        // the union frontier is the same set either way
+        let ua: HashSet<u32> = a.input_nodes().iter().copied().collect();
+        let ub: HashSet<u32> = b.input_nodes().iter().copied().collect();
+        assert_eq!(ua, ub, "input frontier must be permutation-invariant");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let csr = graph();
+        let roots: Vec<u32> = (10..60u32).collect();
+        let mut r1 = Rng::new(9);
+        let mut r2 = Rng::new(9);
+        let a = build_mfg_labor(&csr, &roots, &[5, 5], &mut r1);
+        let b = build_mfg_labor(&csr, &roots, &[5, 5], &mut r2);
+        assert_eq!(a.levels, b.levels);
+        for (x, y) in a.layers.iter().zip(&b.layers) {
+            assert_eq!(x.nbr_pos, y.nbr_pos);
+            assert_eq!(x.counts, y.counts);
+        }
+    }
+
+    /// Streaming contract: the builder samples whatever [`Topology`]
+    /// it is handed. A node whose *only* edge arrives through the
+    /// delta overlay must see that edge — sampling the stale base CSR
+    /// would lose it.
+    #[test]
+    fn samples_overlay_inserted_edge_under_churn() {
+        // base: a path 0-1-2; node 3 starts isolated
+        let base = Arc::new(Csr::from_edges(4, &[(0, 1), (1, 2)]));
+        let snap0 = TopoSnapshot::from_base(base.clone());
+        let (snap1, applied) = snap0.apply(&[(3, 1, true)]);
+        assert_eq!(applied.len(), 1);
+
+        let mut rng = Rng::new(2);
+        let stale = build_mfg_labor(&*base, &[3u32], &[4], &mut rng);
+        assert_eq!(
+            stale.layers[0].counts[0], 0,
+            "node 3 has no neighbors in the base CSR"
+        );
+        let mut rng = Rng::new(2);
+        let live = build_mfg_labor(&snap1, &[3u32], &[4], &mut rng);
+        assert_eq!(live.layers[0].counts[0], 1);
+        let u = live.levels[0][live.layers[0].nbr_pos[0] as usize];
+        assert_eq!(u, 1, "the overlay-inserted edge 3-1 must be sampled");
     }
 }

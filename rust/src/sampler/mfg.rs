@@ -52,6 +52,31 @@ impl Mfg {
     pub fn input_bytes(&self, feat_dim: usize) -> usize {
         self.levels[0].len() * feat_dim * 4
     }
+
+    /// Input-frontier references *with multiplicity*: every layer-1 dst
+    /// (each needs its own x⁰ row via the self connection) plus every
+    /// valid sampled-neighbor slot. This is the number of feature rows
+    /// the batch would gather if nothing were shared; `input_nodes()`
+    /// is what it gathers after cross-request dedup.
+    pub fn frontier_refs(&self) -> u64 {
+        if self.layers.is_empty() {
+            return self.levels[0].len() as u64;
+        }
+        self.levels[1].len() as u64
+            + self.layers[0].counts.iter().map(|&c| c as u64).sum::<u64>()
+    }
+
+    /// Cooperative-sampling win for this batch: refs ÷ unique inputs.
+    /// `1.0` means fully disjoint neighborhoods (dedup saved nothing);
+    /// `> 1` means co-batched requests shared sources. Always ≥ 1 —
+    /// every unique input node is referenced at least once.
+    pub fn dedup_factor(&self) -> f64 {
+        let unique = self.levels[0].len() as u64;
+        if unique == 0 {
+            return 1.0;
+        }
+        self.frontier_refs() as f64 / unique as f64
+    }
 }
 
 /// Sample an MFG for `roots`; `fanouts` lists per-layer fanouts,
@@ -214,6 +239,79 @@ mod tests {
             biased.input_nodes().len(),
             uni.input_nodes().len()
         );
+    }
+
+    /// Disjoint star components: every sampled neighbor is referenced
+    /// exactly once, so refs == unique and the dedup factor is exactly
+    /// 1.0 — cooperative sampling saves nothing when nothing is shared.
+    #[test]
+    fn dedup_factor_one_for_disjoint_neighborhoods() {
+        // 8 disjoint stars: center c = 5k, leaves 5k+1..5k+4
+        let mut edges = Vec::new();
+        for k in 0..8u32 {
+            for l in 1..5u32 {
+                edges.push((5 * k, 5 * k + l));
+            }
+        }
+        let csr = Csr::from_edges(40, &edges);
+        let comm = vec![0u32; 40];
+        let roots: Vec<u32> = (0..8u32).map(|k| 5 * k).collect();
+        let mut rng = Rng::new(7);
+        // fanout ≥ degree → every leaf sampled, each exactly once
+        let mfg = build_mfg(
+            &csr, &comm, &roots, &[4], NeighborPolicy::Uniform, &mut rng,
+        );
+        assert_eq!(mfg.frontier_refs(), 8 + 8 * 4);
+        assert_eq!(mfg.input_nodes().len(), 40);
+        assert_eq!(mfg.dedup_factor(), 1.0);
+    }
+
+    /// Shared-hub batch: every root's only neighbor is one hub, so the
+    /// hub is referenced once per root but gathered once — dedup > 1.
+    #[test]
+    fn dedup_factor_above_one_for_shared_hub() {
+        let hub = 0u32;
+        let edges: Vec<(u32, u32)> = (1..9u32).map(|v| (hub, v)).collect();
+        let csr = Csr::from_edges(9, &edges);
+        let comm = vec![0u32; 9];
+        let roots: Vec<u32> = (1..9u32).collect();
+        let mut rng = Rng::new(7);
+        let mfg = build_mfg(
+            &csr, &comm, &roots, &[2], NeighborPolicy::Uniform, &mut rng,
+        );
+        // refs = 8 dsts + 8 hub samples; unique = 8 roots + 1 hub
+        assert_eq!(mfg.frontier_refs(), 16);
+        assert_eq!(mfg.input_nodes().len(), 9);
+        assert!(mfg.dedup_factor() > 1.5, "got {}", mfg.dedup_factor());
+    }
+
+    /// refs ≥ unique holds for any sampled MFG: each unique input node
+    /// is referenced at least once (dsts via the self connection,
+    /// appended sources via the sample that appended them).
+    #[test]
+    fn frontier_refs_at_least_unique() {
+        let (csr, comm) = test_graph();
+        for seed in 0..8u64 {
+            let mut rng = Rng::new(seed);
+            let mut roots: Vec<u32> = (0..600u32).collect();
+            rng.shuffle(&mut roots);
+            roots.truncate(48);
+            roots.sort_unstable();
+            for policy in [
+                NeighborPolicy::Uniform,
+                NeighborPolicy::Biased { p: 0.9 },
+            ] {
+                let mfg =
+                    build_mfg(&csr, &comm, &roots, &[6, 6], policy, &mut rng);
+                assert!(
+                    mfg.frontier_refs() >= mfg.input_nodes().len() as u64,
+                    "refs {} < unique {} (seed {seed})",
+                    mfg.frontier_refs(),
+                    mfg.input_nodes().len()
+                );
+                assert!(mfg.dedup_factor() >= 1.0);
+            }
+        }
     }
 
     #[test]

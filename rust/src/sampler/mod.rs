@@ -16,6 +16,46 @@ pub mod mfg;
 pub mod neighbor;
 pub mod roots;
 
+pub use labor::build_mfg_labor;
 pub use mfg::{build_mfg, Mfg};
 pub use neighbor::NeighborPolicy;
 pub use roots::RootPolicy;
+
+/// Which sampler the serving batch path runs (the `sampler=` knob on
+/// `serve bench`). `Uniform` is the default and is bitwise-compatible
+/// with pre-knob benches (identical RNG draw sequence); `Biased` wires
+/// the paper's `p` into the *sampling* layer (it previously only shaped
+/// batch composition); `Labor` shares per-source variates across every
+/// request in the micro-batch — cooperative cross-request sampling.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SamplerKind {
+    /// Independent uniform neighbor sampling (default).
+    Uniform,
+    /// Community-biased independent sampling with intra weight
+    /// `sample_p`.
+    Biased,
+    /// LABOR-0 shared-variate dependent sampling — one merged MFG whose
+    /// union frontier shrinks as co-batched requests overlap.
+    Labor,
+}
+
+impl SamplerKind {
+    /// Parse a `sampler=` CLI value.
+    pub fn parse(s: &str) -> Option<SamplerKind> {
+        match s {
+            "uniform" => Some(SamplerKind::Uniform),
+            "biased" => Some(SamplerKind::Biased),
+            "labor" => Some(SamplerKind::Labor),
+            _ => None,
+        }
+    }
+
+    /// The CLI/report name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            SamplerKind::Uniform => "uniform",
+            SamplerKind::Biased => "biased",
+            SamplerKind::Labor => "labor",
+        }
+    }
+}

@@ -31,6 +31,15 @@
 //! micro-batch, on the same definitions as the aggregate [`CacheStats`],
 //! so a Perfetto trace and the end-of-run report can be cross-checked
 //! span by span (see [`crate::obs`]).
+//!
+//! **Cross-request dedup happens upstream.** The worker fetches the
+//! merged MFG's *unique* input frontier — one lookup per distinct node
+//! per micro-batch, no matter how many co-batched requests reference
+//! it — so `lookups` counts deduplicated fetches. The references that
+//! never reached the cache are reported as the run's `dedup_factor`
+//! (frontier refs ÷ unique inputs) in `ServeReport`/`ShardReport`; the
+//! cooperative sampler (`sampler=labor`) exists to raise it by making
+//! co-batched requests sample the *same* sources.
 
 use std::sync::Mutex;
 

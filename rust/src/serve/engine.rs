@@ -47,6 +47,7 @@ use crate::obs::{
     TRACK_BATCHER, TRACK_CLIENT, TRACK_WATCHER,
 };
 use crate::runtime::artifact::{default_dir, ArtifactMeta, Manifest, SpecMeta};
+use crate::sampler::SamplerKind;
 use crate::runtime::{InferState, Runtime};
 use crate::stream::{
     churn_loop_traced, MaintenanceMode, StreamConfig, StreamReport, StreamState,
@@ -98,6 +99,16 @@ pub struct ServeConfig {
     pub admission: AdmissionPolicy,
     /// Neighbor fanouts used when no artifact dictates them.
     pub fanouts: Vec<usize>,
+    /// Which sampler builds each micro-batch's merged MFG
+    /// (`sampler=uniform|biased|labor`). The default, `Uniform`, keeps
+    /// every pre-knob bench bitwise-identical (same RNG draw
+    /// sequence); `Labor` turns on cooperative cross-request sampling.
+    pub sampler: SamplerKind,
+    /// Intra-community sampling weight for `sampler=biased`
+    /// (`sample_p=`, ∈ [0, 1]; 0.5 ≡ uniform). Ignored by the other
+    /// samplers — distinct from `community_bias`, which shapes batch
+    /// *composition* rather than neighbor selection.
+    pub sample_p: f64,
     /// Engine seed (batcher bias draws, per-worker RNG streams).
     pub seed: u64,
     /// Checkpoint to serve (`ckpt=`): a file, or a directory whose
@@ -166,6 +177,8 @@ impl ServeConfig {
             spill: SpillPolicy::Strict,
             admission: AdmissionPolicy::None,
             fanouts: vec![10, 10],
+            sampler: SamplerKind::Uniform,
+            sample_p: 0.9,
             seed: 0,
             ckpt: None,
             ckpt_watch_ms: 0,
@@ -189,6 +202,8 @@ pub struct ServeReport {
     pub dataset: String,
     /// Executor used (`pjrt` / `host` / `null`).
     pub executor: String,
+    /// Sampler label (`uniform` / `biased` / `labor`).
+    pub sampler: String,
     /// Community-bias knob value.
     pub community_bias: f64,
     /// Arrival discipline label (`closed` / `poisson:RATE`).
@@ -243,6 +258,18 @@ pub struct ServeReport {
     pub mean_batch_size: f64,
     /// Mean unique input-frontier nodes per micro-batch.
     pub mean_input_nodes: f64,
+    /// Input-frontier references with multiplicity, summed over all
+    /// micro-batches: the feature rows the run would have gathered
+    /// without cross-request dedup.
+    pub frontier_refs: u64,
+    /// Cross-request dedup factor: `frontier_refs ÷ Σ unique input
+    /// nodes` (1.0 when nothing was shared or no batch ran). The
+    /// cooperative sampler exists to push this up at high `p`.
+    pub dedup_factor: f64,
+    /// Feature bytes actually moved by the gather stage:
+    /// `Σ unique input nodes × feat_dim × 4`. Cooperative sampling
+    /// wins show up here as strictly fewer bytes at equal accuracy.
+    pub gather_bytes: u64,
     /// Feature-cache hits, summed over shards.
     pub cache_hits: u64,
     /// Feature-cache misses, summed over shards.
@@ -278,6 +305,7 @@ impl ServeReport {
         obj(vec![
             ("dataset", s(&self.dataset)),
             ("executor", s(&self.executor)),
+            ("sampler", s(&self.sampler)),
             ("p", num(self.community_bias)),
             ("arrival", s(&self.arrival)),
             ("admission", s(&self.admission)),
@@ -302,6 +330,9 @@ impl ServeReport {
             ("batches", num(self.batches as f64)),
             ("mean_batch_size", num(self.mean_batch_size)),
             ("mean_input_nodes", num(self.mean_input_nodes)),
+            ("frontier_refs", num(self.frontier_refs as f64)),
+            ("dedup_factor", num(self.dedup_factor)),
+            ("gather_bytes", num(self.gather_bytes as f64)),
             ("cache_hits", num(self.cache_hits as f64)),
             ("cache_misses", num(self.cache_misses as f64)),
             ("stale_hits", num(self.stale_hits as f64)),
@@ -354,13 +385,16 @@ impl ServeReport {
             None => String::new(),
         };
         format!(
-            "[serve] {} exec={} p={:.2} shards={} spill={} arrival={} \
+            "[serve] {} exec={} sampler={} p={:.2} shards={} spill={} \
+             arrival={} \
              admission={}: {} req in {:.2}s = {:.0} req/s | acc {} | \
              params v{} swaps {} | lat ms p50 {:.2} p95 {:.2} p99 {:.2} \
              | miss-deadline {:.1}% | shed {} ({:.1}%) degraded {} | \
-             cache hit {:.1}% | {:.1} req/batch | foreign {}{}",
+             cache hit {:.1}% | {:.1} req/batch | dedup x{:.2} | \
+             foreign {}{}",
             self.dataset,
             self.executor,
+            self.sampler,
             self.community_bias,
             self.n_shards,
             self.spill,
@@ -381,6 +415,7 @@ impl ServeReport {
             self.degraded,
             self.cache_hit_rate * 100.0,
             self.mean_batch_size,
+            self.dedup_factor,
             self.foreign_requests(),
             stream_tail,
         )
@@ -1055,6 +1090,8 @@ pub fn run(
                     stream: stream.as_ref(),
                     rec: &rec,
                     track: shard_track(sidx),
+                    sampler: scfg.sampler,
+                    sample_p: scfg.sample_p,
                 };
                 let rx = &rxs[sidx];
                 let cell = &shard_cells[sidx];
@@ -1167,6 +1204,7 @@ pub fn run(
     let mut stats_batches = 0usize;
     let mut stats_requests = 0usize;
     let mut stats_input_nodes = 0usize;
+    let mut stats_frontier_refs = 0u64;
     for (sidx, cell) in shard_cells.into_iter().enumerate() {
         let cell = cell.into_inner().unwrap();
         let cstats = caches[sidx].stats();
@@ -1177,6 +1215,7 @@ pub fn run(
         stats_batches += cell.batches;
         stats_requests += cell.requests;
         stats_input_nodes += cell.input_nodes;
+        stats_frontier_refs += cell.frontier_refs;
         shard_reports.push(ShardReport::from_cell(
             sidx,
             &final_snap.plan,
@@ -1211,6 +1250,7 @@ pub fn run(
     Ok(ServeReport {
         dataset: ds.name.clone(),
         executor: exec.name().to_string(),
+        sampler: scfg.sampler.name().to_string(),
         community_bias: scfg.community_bias,
         arrival: lcfg.arrival.label(),
         admission: scfg.admission.name().to_string(),
@@ -1235,6 +1275,13 @@ pub fn run(
         batches: stats_batches,
         mean_batch_size: stats_requests as f64 / nb as f64,
         mean_input_nodes: stats_input_nodes as f64 / nb as f64,
+        frontier_refs: stats_frontier_refs,
+        dedup_factor: if stats_input_nodes == 0 {
+            1.0
+        } else {
+            stats_frontier_refs as f64 / stats_input_nodes as f64
+        },
+        gather_bytes: stats_input_nodes as u64 * ds.feat_dim as u64 * 4,
         cache_hits: cache_stats.hits,
         cache_misses: cache_stats.misses,
         stale_hits: cache_stats.stale_hits,
@@ -1303,6 +1350,13 @@ mod tests {
         assert_eq!(rep.foreign_requests(), 0);
         // workers fed the admission EWMA even under admission=none
         assert!(rep.shards[0].est_service_us > 0.0);
+        // dedup accounting: refs ≥ unique always, so the factor is ≥ 1
+        assert!(rep.frontier_refs >= 1);
+        assert!(rep.dedup_factor >= 1.0);
+        assert_eq!(rep.sampler, "uniform");
+        // gather bytes = unique inputs × feat_dim × 4, so whole rows
+        assert!(rep.gather_bytes > 0);
+        assert_eq!(rep.gather_bytes % (ds.feat_dim as u64 * 4), 0);
         // report serializes
         let j = rep.to_json().to_string_pretty();
         assert!(j.contains("throughput_rps"));
@@ -1310,6 +1364,41 @@ mod tests {
         assert!(j.contains("foreign_requests"));
         assert!(j.contains("shed_rate"));
         assert!(j.contains("arrival"));
+        assert!(j.contains("dedup_factor"));
+        assert!(j.contains("gather_bytes"));
+        assert!(j.contains("\"sampler\""));
+    }
+
+    /// The sampler knob sweeps cleanly end to end: every mode answers
+    /// every request and keeps the dedup accounting consistent. (The
+    /// labor-vs-uniform gather-byte comparison is deterministic only at
+    /// the sampler layer — see labor.rs — and is gated end-to-end by
+    /// `exp coop`, which averages over trials.)
+    #[test]
+    fn sampler_knob_sweeps_cleanly() {
+        let ds = tiny();
+        let meta = synthetic_infer_meta(&ds, 16, &[8, 8]);
+        let exec = NullExecutor { num_classes: ds.num_classes };
+        for sampler in
+            [SamplerKind::Uniform, SamplerKind::Biased, SamplerKind::Labor]
+        {
+            let mut scfg = ServeConfig::for_dataset(&ds);
+            scfg.batch_size = 16;
+            scfg.max_delay_us = 2_000;
+            scfg.community_bias = 0.9;
+            scfg.workers = 1;
+            scfg.fanouts = vec![8, 8];
+            scfg.sampler = sampler;
+            scfg.sample_p = 0.9;
+            scfg.seed = 13;
+            let lcfg = closed(8, 30, 5);
+            let rep = run(&ds, &meta, &exec, &scfg, &lcfg).unwrap();
+            assert_eq!(rep.requests, 240, "sampler={}", sampler.name());
+            assert_eq!(rep.errors, 0, "sampler={}", sampler.name());
+            assert_eq!(rep.sampler, sampler.name());
+            assert!(rep.dedup_factor >= 1.0);
+            assert!(rep.frontier_refs > 0);
+        }
     }
 
     // NOTE: the strict-spill affinity acceptance check (2/4 shards,

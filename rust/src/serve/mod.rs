@@ -49,6 +49,16 @@
 //! community maintenance keeps the shard plan aligned with the live
 //! topology; full relabels re-fingerprint the checkpoint fence.
 //!
+//! Each coalesced micro-batch is served from **one merged MFG** over
+//! its deduplicated roots, so co-batched requests share sampling and
+//! feature-gather work; per-request replies are root views into that
+//! shared batch. The `sampler=` knob picks how the merged MFG is
+//! built — `uniform` (default, independent sampling), `biased`
+//! (community-weighted by `sample_p=`), or `labor` (cooperative
+//! shared-variate sampling, which shrinks the union frontier as
+//! co-batched neighborhoods overlap). The saved work is reported as
+//! `dedup_factor` in [`ServeReport`]/[`shard::ShardReport`].
+//!
 //! See `docs/ARCHITECTURE.md` for the request lifecycle diagram, the
 //! knob reference, and the update lifecycle (mutation → relabel →
 //! invalidation).
@@ -65,6 +75,7 @@ pub mod worker;
 pub use admission::{AdmissionController, AdmissionPolicy, AdmitDecision};
 pub use batcher::{batch_purity, BatcherConfig, MicroBatcher};
 pub use cache::{CacheStats, FeatureCacheConfig, Fetched, ShardedFeatureCache};
+pub use crate::sampler::SamplerKind;
 pub use engine::{run, ServeConfig, ServeReport};
 pub use loadgen::{Arrival, LoadConfig};
 pub use queue::RequestQueue;

@@ -366,6 +366,10 @@ pub struct ShardStatsCell {
     pub foreign_requests: usize,
     /// Unique input-frontier nodes across this shard's batches.
     pub input_nodes: usize,
+    /// Input-frontier references *with multiplicity* across this
+    /// shard's batches — `frontier_refs / input_nodes` is the shard's
+    /// cross-request dedup factor.
+    pub frontier_refs: u64,
     /// Max queued batches observed on this shard's channel.
     pub queue_depth_max: usize,
     /// Highest parameter version any batch on this shard was served
@@ -411,6 +415,13 @@ pub struct ShardReport {
     pub degraded: usize,
     /// Micro-batches processed on this shard.
     pub batches: usize,
+    /// Input-frontier references (with multiplicity) sampled across
+    /// this shard's batches.
+    pub frontier_refs: u64,
+    /// Cross-request dedup factor on this shard: frontier refs ÷
+    /// unique input nodes (1.0 when nothing was shared or no batch
+    /// ran). The gather loop pays for unique nodes only.
+    pub dedup_factor: f64,
     /// Max queued batches observed on this shard's channel.
     pub queue_depth_max: usize,
     /// Highest parameter version this shard served a batch with
@@ -471,6 +482,12 @@ impl ShardReport {
             shed: adm.shard_shed(id),
             degraded: adm.shard_degraded(id),
             batches: cell.batches,
+            frontier_refs: cell.frontier_refs,
+            dedup_factor: if cell.input_nodes == 0 {
+                1.0
+            } else {
+                cell.frontier_refs as f64 / cell.input_nodes as f64
+            },
             queue_depth_max: cell.queue_depth_max,
             param_version: cell.param_version,
             swaps: cell.swaps,
@@ -498,6 +515,8 @@ impl ShardReport {
             ("shed", num(self.shed as f64)),
             ("degraded", num(self.degraded as f64)),
             ("batches", num(self.batches as f64)),
+            ("frontier_refs", num(self.frontier_refs as f64)),
+            ("dedup_factor", num(self.dedup_factor)),
             ("queue_depth_max", num(self.queue_depth_max as f64)),
             ("param_version", num(self.param_version as f64)),
             ("swaps", num(self.swaps as f64)),

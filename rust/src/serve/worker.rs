@@ -40,7 +40,7 @@ use crate::obs::{EventKind, Recorder, TRACK_CLIENT};
 use crate::runtime::artifact::ArtifactMeta;
 use crate::runtime::host;
 use crate::runtime::InferState;
-use crate::sampler::{build_mfg, NeighborPolicy};
+use crate::sampler::{build_mfg, build_mfg_labor, NeighborPolicy, SamplerKind};
 use crate::stream::StreamState;
 use crate::util::rng::Rng;
 
@@ -250,6 +250,12 @@ pub struct WorkerCtx<'a> {
     /// The trace track this worker's spans land on
     /// ([`crate::obs::shard_track`] of the shard id).
     pub track: usize,
+    /// Which sampler builds the merged per-batch MFG (`sampler=` knob).
+    /// `Uniform` keeps the pre-knob RNG draw sequence bit for bit.
+    pub sampler: SamplerKind,
+    /// Intra-community weight for [`SamplerKind::Biased`] (`sample_p=`
+    /// knob); ignored by the other samplers.
+    pub sample_p: f64,
 }
 
 /// Per-batch accounting merged into the engine's totals (cache
@@ -261,6 +267,11 @@ pub struct BatchOutcome {
     pub requests: usize,
     /// Unique input-frontier nodes sampled for the batch.
     pub input_nodes: usize,
+    /// Input-frontier references *with multiplicity*
+    /// ([`Mfg::frontier_refs`][crate::sampler::Mfg::frontier_refs]):
+    /// feature rows the batch would gather without cross-request dedup.
+    /// `frontier_refs / input_nodes` is the batch's dedup factor.
+    pub frontier_refs: u64,
     /// Requests answered with an error reply (executor failure is
     /// all-or-nothing per batch: 0 or `requests`).
     pub errors: usize,
@@ -317,6 +328,7 @@ pub fn shard_worker_loop(
         g.requests += out.requests;
         g.foreign_requests += foreign;
         g.input_nodes += out.input_nodes;
+        g.frontier_refs += out.frontier_refs;
         g.queue_depth_max = g.queue_depth_max.max(d);
         if out.errors == 0 {
             // error replies stay out of the latency samples, matching
@@ -425,23 +437,35 @@ pub fn process_batch(
         None => &ds.csr,
     };
     let t_sample = if enabled { ctx.rec.now_us() } else { 0 };
-    let mfg = build_mfg(
-        topo,
-        &snap.labels,
-        &roots,
-        &fanouts,
-        NeighborPolicy::Uniform,
-        rng,
-    );
+    let mfg = match ctx.sampler {
+        SamplerKind::Uniform => build_mfg(
+            topo,
+            &snap.labels,
+            &roots,
+            &fanouts,
+            NeighborPolicy::Uniform,
+            rng,
+        ),
+        SamplerKind::Biased => build_mfg(
+            topo,
+            &snap.labels,
+            &roots,
+            &fanouts,
+            NeighborPolicy::Biased { p: ctx.sample_p },
+            rng,
+        ),
+        // cooperative path: one merged MFG whose per-source variates
+        // are shared across every request in the batch
+        SamplerKind::Labor => build_mfg_labor(topo, &roots, &fanouts, rng),
+    };
+    // cross-request neighborhood overlap: how many sampled input
+    // references deduplicated away. refs counts every slot into the
+    // input frontier with multiplicity (each layer-1 dst plus its
+    // sampled neighbors); unique is the frontier the gather pays for.
+    let refs = mfg.frontier_refs();
+    let unique = mfg.input_nodes().len() as u64;
     if enabled {
         let end = ctx.rec.now_us();
-        // cross-request neighborhood overlap: how many sampled input
-        // references deduplicated away. refs counts every slot into the
-        // input frontier with multiplicity (each layer-1 dst plus its
-        // sampled neighbors); unique is the frontier the gather pays for.
-        let refs: u64 = mfg.levels[1].len() as u64
-            + mfg.layers[0].counts.iter().map(|&c| c as u64).sum::<u64>();
-        let unique = mfg.input_nodes().len() as u64;
         let overlap_permille = if refs == 0 {
             0
         } else {
@@ -453,7 +477,7 @@ pub fn process_batch(
             t_sample,
             end.saturating_sub(t_sample),
             span_req,
-            roots.len() as u32,
+            refs as u32,
             unique as u32,
             overlap_permille,
         );
@@ -538,6 +562,7 @@ pub fn process_batch(
     let mut outcome = BatchOutcome {
         requests: reqs.len(),
         input_nodes: input.len(),
+        frontier_refs: refs,
         errors: 0,
         param_version: 0,
     };
@@ -660,6 +685,8 @@ mod tests {
             stream: None,
             rec: &rec,
             track: 0,
+            sampler: SamplerKind::Uniform,
+            sample_p: 0.9,
         };
         let (tx, rx) = mpsc::channel();
         // includes a duplicate node: both requests must be answered
@@ -709,6 +736,8 @@ mod tests {
             stream: None,
             rec: &rec,
             track: 0,
+            sampler: SamplerKind::Uniform,
+            sample_p: 0.9,
         };
         let nodes: [u32; 4] = [11, 23, 42, 57];
         let run = |caps: Option<Vec<usize>>| -> BatchOutcome {
@@ -747,6 +776,53 @@ mod tests {
         );
     }
 
+    /// Cooperative (labor) sampling through `process_batch`: every
+    /// request is answered and the dedup accounting is consistent —
+    /// refs ≥ unique inputs, so the implied dedup factor is ≥ 1.
+    #[test]
+    fn labor_sampler_processes_batch_with_consistent_dedup() {
+        let ds = tiny();
+        let meta = synthetic_infer_meta(&ds, 16, &[8, 8]);
+        let cache = ShardedFeatureCache::new(&FeatureCacheConfig::for_dataset(
+            ds.n(),
+            ds.feat_dim,
+        ));
+        let exec = NullExecutor { num_classes: ds.num_classes };
+        let clock = ServeClock::start();
+        let rec = Recorder::disabled();
+        let ctx = WorkerCtx {
+            ds: &ds,
+            meta: &meta,
+            cache: &cache,
+            exec: &exec,
+            clock: &clock,
+            stream: None,
+            rec: &rec,
+            track: 0,
+            sampler: SamplerKind::Labor,
+            sample_p: 0.9,
+        };
+        let (tx, rx) = mpsc::channel();
+        let reqs: Vec<Request> = (0..12u32)
+            .map(|i| mk_req(i as u64, i * 3, ds.labels[(i * 3) as usize], &tx))
+            .collect();
+        let snap = LabelSnapshot::initial(&ds.community, ds.num_comms, 1);
+        let mut rng = Rng::new(7);
+        let out = process_batch(&ctx, &snap, reqs, &mut rng);
+        assert_eq!(out.requests, 12);
+        assert_eq!(out.errors, 0);
+        assert!(
+            out.frontier_refs >= out.input_nodes as u64,
+            "refs {} < unique {}",
+            out.frontier_refs,
+            out.input_nodes
+        );
+        drop(tx);
+        let replies: Vec<Reply> = rx.iter().collect();
+        assert_eq!(replies.len(), 12);
+        assert!(replies.iter().all(|r| !r.error));
+    }
+
     /// Host executor: real logits for every root, param version 0
     /// before any install, bumped after a checkpoint installs, and
     /// shape-mismatched checkpoints are refused.
@@ -771,6 +847,8 @@ mod tests {
             stream: None,
             rec: &rec,
             track: 0,
+            sampler: SamplerKind::Uniform,
+            sample_p: 0.9,
         };
         let snap = LabelSnapshot::initial(&ds.community, ds.num_comms, 1);
         let (tx, rx) = mpsc::channel();

@@ -1,0 +1,163 @@
+//! Integration tests for cooperative cross-request sampling: the
+//! merged per-batch MFG's dedup accounting must agree *exactly*
+//! between the trace exporter and the engine report, and the labor
+//! sampler must serve a full closed-loop run end to end with real
+//! logits.
+//!
+//! Acceptance checks from the cooperative-sampling issue:
+//! * every Sample span reports `refs >= input_nodes` and an
+//!   `overlap_permille` equal to `1000·(refs − unique)/refs`;
+//! * summing Sample-span refs/input_nodes over a full-rate trace
+//!   reproduces `ServeReport.{frontier_refs, dedup_factor}` exactly;
+//! * `sampler=labor` answers every request without error and with
+//!   host-executor logits (accuracy in range).
+
+use comm_rand::config::preset;
+use comm_rand::serve::engine;
+use comm_rand::serve::{Arrival, LoadConfig, SamplerKind, ServeConfig};
+use comm_rand::util::json::Json;
+
+fn tiny_dataset() -> comm_rand::graph::Dataset {
+    comm_rand::train::dataset::build(&preset("tiny").unwrap(), true)
+}
+
+fn base_config(ds: &comm_rand::graph::Dataset) -> ServeConfig {
+    let mut scfg = ServeConfig::for_dataset(ds);
+    scfg.batch_size = 16;
+    scfg.max_delay_us = 2_000;
+    scfg.deadline_us = 500_000;
+    scfg.workers = 2;
+    scfg.fanouts = vec![8, 8];
+    scfg.seed = 41;
+    scfg
+}
+
+fn closed(clients: usize, per: usize, seed: u64) -> LoadConfig {
+    LoadConfig {
+        clients,
+        requests_per_client: per,
+        zipf_s: 1.1,
+        arrival: Arrival::Closed,
+        seed,
+    }
+}
+
+/// Full-rate trace vs report: per-span invariants hold and the span
+/// sums reproduce the report's dedup accounting bit for bit.
+#[test]
+fn trace_sample_spans_agree_with_report_dedup_factor() {
+    let ds = tiny_dataset();
+    let trace_path = std::env::temp_dir()
+        .join(format!("comm_rand_coop_trace_{}.json", std::process::id()));
+    let mut scfg = base_config(&ds);
+    scfg.community_bias = 0.9;
+    scfg.sampler = SamplerKind::Labor;
+    scfg.trace = Some(trace_path.clone());
+    scfg.trace_sample = 1000;
+    let (exec, meta) = engine::build_executor(
+        &preset("tiny").unwrap(),
+        &ds,
+        &scfg,
+    );
+    let lcfg = closed(8, 30, 91);
+    let rep = engine::run(&ds, &meta, exec.as_ref(), &scfg, &lcfg).unwrap();
+    assert_eq!(rep.requests, 240);
+    assert_eq!(rep.errors, 0);
+    assert_eq!(rep.sampler, "labor");
+    assert!(rep.frontier_refs > 0);
+    assert!(rep.dedup_factor >= 1.0);
+
+    let doc = Json::parse_file(&trace_path).unwrap();
+    // exact agreement only holds if the ring kept every span
+    let dropped = doc
+        .get("otherData")
+        .unwrap()
+        .get("dropped_events")
+        .unwrap()
+        .as_usize()
+        .unwrap();
+    assert_eq!(dropped, 0, "ring wrapped; shrink the run");
+
+    let mut sum_refs = 0u64;
+    let mut sum_unique = 0u64;
+    let mut sample_spans = 0usize;
+    for ev in doc.get("traceEvents").unwrap().as_arr().unwrap() {
+        if ev.get("ph").unwrap().as_str().unwrap() != "X"
+            || ev.get("name").unwrap().as_str().unwrap() != "sample"
+        {
+            continue;
+        }
+        sample_spans += 1;
+        let args = ev.get("args").unwrap();
+        let refs = args.get("refs").unwrap().as_usize().unwrap() as u64;
+        let unique =
+            args.get("input_nodes").unwrap().as_usize().unwrap() as u64;
+        let overlap =
+            args.get("overlap_permille").unwrap().as_usize().unwrap() as u64;
+        assert!(refs >= unique, "span refs {refs} < unique {unique}");
+        let want = if refs == 0 { 0 } else { 1000 * (refs - unique) / refs };
+        assert_eq!(
+            overlap, want,
+            "overlap_permille must be 1000*(refs-unique)/refs"
+        );
+        sum_refs += refs;
+        sum_unique += unique;
+    }
+    assert!(sample_spans > 0, "full-rate trace must carry sample spans");
+
+    // the trace and the report count the same thing
+    assert_eq!(sum_refs, rep.frontier_refs, "span refs sum to the report");
+    let from_trace = sum_refs as f64 / sum_unique as f64;
+    assert!(
+        (from_trace - rep.dedup_factor).abs() < 1e-12,
+        "trace dedup {from_trace} != report {}",
+        rep.dedup_factor
+    );
+    assert_eq!(
+        rep.gather_bytes,
+        sum_unique * ds.feat_dim as u64 * 4,
+        "gather bytes = unique inputs x feat row size"
+    );
+    let _ = std::fs::remove_file(&trace_path);
+}
+
+/// The labor sampler end to end under community-grouped batching:
+/// every request answered with real host-executor logits, per-shard
+/// dedup factors consistent with the rollup, and refs >= unique both
+/// per shard and in aggregate.
+#[test]
+fn labor_sampler_serves_full_run_with_consistent_shard_accounting() {
+    let ds = tiny_dataset();
+    let mut scfg = base_config(&ds);
+    scfg.community_bias = 1.0;
+    scfg.sampler = SamplerKind::Labor;
+    scfg.shards = 2;
+    let (exec, meta) =
+        engine::build_executor(&preset("tiny").unwrap(), &ds, &scfg);
+    let lcfg = closed(6, 40, 3);
+    let rep = engine::run(&ds, &meta, exec.as_ref(), &scfg, &lcfg).unwrap();
+    assert_eq!(rep.requests, 240);
+    assert_eq!(rep.errors, 0);
+    assert_eq!(rep.evaluated, 240, "host executor scores every reply");
+    assert!((0.0..=1.0).contains(&rep.accuracy));
+    assert!(rep.dedup_factor >= 1.0);
+
+    let mut shard_refs = 0u64;
+    for sh in &rep.shards {
+        assert!(
+            sh.dedup_factor >= 1.0,
+            "shard {} dedup {} < 1",
+            sh.id,
+            sh.dedup_factor
+        );
+        shard_refs += sh.frontier_refs;
+    }
+    assert_eq!(shard_refs, rep.frontier_refs, "shards sum to the rollup");
+
+    // the JSON artifact carries the new dedup fields
+    let j = rep.to_json().to_string_pretty();
+    assert!(j.contains("dedup_factor"));
+    assert!(j.contains("frontier_refs"));
+    assert!(j.contains("gather_bytes"));
+    assert!(j.contains("\"sampler\""));
+}
