@@ -11,11 +11,19 @@
 //! 8       4           header length H (u32, bytes)
 //! 12      H           JSON header (dataset, model, epoch, val metrics,
 //!                     seed, policy label, community fingerprint,
-//!                     parameter shapes, hot-node list)
-//! 12+H    sum(shape)  parameter payload, f32 LE, tensors concatenated
-//!                     in shape order
+//!                     parameter shapes, hot-node list; quantized
+//!                     checkpoints add `dtype` + per-tensor
+//!                     `scale_exp`)
+//! 12+H    payload     parameter payload, tensors concatenated in
+//!                     shape order: f32 LE (default dtype), or i16 LE
+//!                     when the header declares `dtype: "i16q"`
 //! end-4   4           CRC-32 (IEEE) over every preceding byte
 //! ```
+//!
+//! The `dtype`/`scale_exp` header fields are emitted **only** for
+//! quantized checkpoints, so every pre-existing f32 file re-encodes
+//! byte-identically; a reader that meets a dtype tag it does not know
+//! refuses the file instead of misinterpreting the payload.
 //!
 //! Two validation layers protect the serving side:
 //!
@@ -36,6 +44,8 @@ use anyhow::{bail, Context, Result};
 
 use crate::graph::Dataset;
 use crate::util::json::{arr, arr_f64, num, obj, s, Json};
+
+use super::quant::QuantTensor;
 
 /// File magic: "CRCK" (Comm-Rand ChecKpoint).
 pub const MAGIC: [u8; 4] = *b"CRCK";
@@ -161,7 +171,14 @@ pub struct Checkpoint {
     /// Header metadata.
     pub meta: CkptMeta,
     /// Parameter tensors, flattened row-major, in `meta.shapes` order.
+    /// For a quantized checkpoint this is the **exact dequantized**
+    /// view of `quant` (`q / 2^exp`), so f32 consumers need no special
+    /// casing.
     pub params: Vec<Vec<f32>>,
+    /// Raw quantized tensors when this checkpoint has dtype `i16q`
+    /// (produced by [`super::quant::quantize_checkpoint`] or read back
+    /// from disk); `None` for plain f32 checkpoints.
+    pub quant: Option<Vec<QuantTensor>>,
 }
 
 impl Checkpoint {
@@ -185,12 +202,21 @@ impl Checkpoint {
                 );
             }
         }
-        Ok(Checkpoint { meta, params })
+        Ok(Checkpoint { meta, params, quant: None })
+    }
+
+    /// Payload dtype tag: `"f32"` (default) or `"i16q"` (quantized).
+    pub fn dtype(&self) -> &'static str {
+        if self.quant.is_some() {
+            "i16q"
+        } else {
+            "f32"
+        }
     }
 
     fn header_json(&self) -> Json {
         let m = &self.meta;
-        obj(vec![
+        let mut fields = vec![
             ("dataset", s(&m.dataset)),
             ("model", s(&m.model)),
             ("policy", s(&m.policy)),
@@ -216,22 +242,45 @@ impl Checkpoint {
                 "hot_nodes",
                 arr_f64(&m.hot_nodes.iter().map(|&v| v as f64).collect::<Vec<_>>()),
             ),
-        ])
+        ];
+        // emitted only for quantized checkpoints, so plain f32 files
+        // keep their exact pre-quantization byte layout
+        if let Some(q) = &self.quant {
+            fields.push(("dtype", s(self.dtype())));
+            fields.push((
+                "scale_exp",
+                arr_f64(
+                    &q.iter().map(|t| t.exp as f64).collect::<Vec<_>>(),
+                ),
+            ));
+        }
+        obj(fields)
     }
 
-    /// Serialize to the on-disk byte layout (see module docs).
+    /// Serialize to the on-disk byte layout (see module docs). The
+    /// payload is f32 LE, or i16 LE for `i16q` checkpoints.
     pub fn encode(&self) -> Vec<u8> {
         let header = self.header_json().to_string_pretty();
-        let payload_len: usize = self.params.iter().map(|p| p.len() * 4).sum();
+        let elem = if self.quant.is_some() { 2 } else { 4 };
+        let payload_len: usize =
+            self.params.iter().map(|p| p.len() * elem).sum();
         let mut out =
             Vec::with_capacity(16 + header.len() + payload_len);
         out.extend_from_slice(&MAGIC);
         out.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
         out.extend_from_slice(&(header.len() as u32).to_le_bytes());
         out.extend_from_slice(header.as_bytes());
-        for p in &self.params {
-            for &x in p {
-                out.extend_from_slice(&x.to_le_bytes());
+        if let Some(quant) = &self.quant {
+            for t in quant {
+                for &v in &t.q {
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+        } else {
+            for p in &self.params {
+                for &x in p {
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
             }
         }
         let crc = crc32(&out);
@@ -307,14 +356,64 @@ impl Checkpoint {
             hot_nodes,
         };
 
+        // dtype is absent on plain f32 checkpoints (pre-quantization
+        // files stay readable and byte-stable); an unknown tag is a
+        // hard error — guessing the payload encoding would be worse
+        // than refusing the file
+        let dtype = match h.opt("dtype") {
+            None => "f32".to_string(),
+            Some(d) => d.as_str()?.to_string(),
+        };
+        let elem = match dtype.as_str() {
+            "f32" => 4usize,
+            "i16q" => 2usize,
+            other => bail!(
+                "unknown checkpoint dtype {other:?} (this build reads \
+                 f32 and i16q); refusing to guess the payload encoding"
+            ),
+        };
+
         let payload = &body[12 + hlen..];
-        let want = meta.num_elements() * 4;
+        let want = meta.num_elements() * elem;
         if payload.len() != want {
             bail!(
                 "checkpoint payload is {} bytes, shapes declare {want} \
                  (truncated or shape-corrupt file)",
                 payload.len()
             );
+        }
+        if dtype == "i16q" {
+            let exps: Vec<u32> = h
+                .get("scale_exp")?
+                .as_arr()?
+                .iter()
+                .map(|v| Ok(v.as_usize()? as u32))
+                .collect::<Result<_>>()?;
+            if exps.len() != meta.shapes.len() {
+                bail!(
+                    "checkpoint declares {} scale exponents for {} \
+                     tensors",
+                    exps.len(),
+                    meta.shapes.len()
+                );
+            }
+            let mut quant = Vec::with_capacity(meta.shapes.len());
+            let mut params = Vec::with_capacity(meta.shapes.len());
+            let mut off = 0usize;
+            for (sh, &exp) in meta.shapes.iter().zip(&exps) {
+                let n: usize = sh.iter().product();
+                let mut q = Vec::with_capacity(n);
+                for _ in 0..n {
+                    q.push(i16::from_le_bytes(
+                        payload[off..off + 2].try_into().unwrap(),
+                    ));
+                    off += 2;
+                }
+                let t = QuantTensor { q, exp };
+                params.push(t.dequant());
+                quant.push(t);
+            }
+            return Ok(Checkpoint { meta, params, quant: Some(quant) });
         }
         let mut params = Vec::with_capacity(meta.shapes.len());
         let mut off = 0usize;
@@ -329,7 +428,7 @@ impl Checkpoint {
             }
             params.push(t);
         }
-        Ok(Checkpoint { meta, params })
+        Ok(Checkpoint { meta, params, quant: None })
     }
 
     /// Load and validate a checkpoint file.
@@ -512,6 +611,59 @@ mod tests {
             vec![vec![0.0; 11], vec![0.0; 3]]
         )
         .is_err());
+    }
+
+    #[test]
+    fn quantized_checkpoint_roundtrips_exactly() {
+        let ck = crate::ckpt::quant::quantize_checkpoint(&sample_ckpt())
+            .unwrap();
+        assert_eq!(ck.dtype(), "i16q");
+        let bytes = ck.encode();
+        let back = Checkpoint::decode(&bytes).unwrap();
+        assert_eq!(back.dtype(), "i16q");
+        assert_eq!(back.quant, ck.quant, "i16 payload round-trips exactly");
+        // the dequantized f32 view round-trips bitwise too
+        for (a, b) in ck.params.iter().zip(&back.params) {
+            let ab: Vec<u32> = a.iter().map(|x| x.to_bits()).collect();
+            let bb: Vec<u32> = b.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(ab, bb);
+        }
+        assert_eq!(back.encode(), bytes, "re-encode is byte-identical");
+        // the i16 payload is half the f32 payload
+        let f32_bytes = sample_ckpt().encode();
+        assert!(bytes.len() < f32_bytes.len());
+    }
+
+    #[test]
+    fn plain_f32_headers_carry_no_dtype_field() {
+        let bytes = sample_ckpt().encode();
+        let hlen =
+            u32::from_le_bytes(bytes[8..12].try_into().unwrap()) as usize;
+        let header = std::str::from_utf8(&bytes[12..12 + hlen]).unwrap();
+        assert!(
+            !header.contains("dtype") && !header.contains("scale_exp"),
+            "f32 checkpoints must keep the pre-quantization header: \
+             {header}"
+        );
+    }
+
+    #[test]
+    fn unknown_dtype_tag_is_refused() {
+        let ck = crate::ckpt::quant::quantize_checkpoint(&sample_ckpt())
+            .unwrap();
+        let mut bytes = ck.encode();
+        // patch the 4-byte dtype string to same-length garbage and
+        // re-CRC, so *only* the dtype tag is wrong
+        let hlen =
+            u32::from_le_bytes(bytes[8..12].try_into().unwrap()) as usize;
+        let header = std::str::from_utf8(&bytes[12..12 + hlen]).unwrap();
+        let at = 12 + header.find("i16q").expect("dtype tag in header");
+        bytes[at..at + 4].copy_from_slice(b"zz9q");
+        let body_len = bytes.len() - 4;
+        let crc = crc32(&bytes[..body_len]).to_le_bytes();
+        bytes[body_len..].copy_from_slice(&crc);
+        let err = Checkpoint::decode(&bytes).unwrap_err();
+        assert!(format!("{err:#}").contains("dtype"), "{err:#}");
     }
 
     #[test]

@@ -12,6 +12,10 @@
 //!   (`ckpt_dir=` / `ckpt_every=`, atomic rename, retention keeping
 //!   best-by-val-acc + latest) and [`ParamStore`] serves immutable
 //!   `Arc<ParamVersion>` snapshots to the serving side.
+//! * [`quant`] — the NNUE-style quantization pass: f32 → i16 tensors
+//!   with per-tensor power-of-two scales (loud failure on range
+//!   overflow), stored on disk as the `i16q` dtype and served through
+//!   the integer SIMD kernels in [`crate::runtime::kernels`].
 //! * [`watch`] — the reload watcher the engine runs during a serving
 //!   run: poll the checkpoint directory, validate + stage new
 //!   versions, and hand them to the executor, which swaps them in
@@ -22,12 +26,14 @@
 //! `docs/ARCHITECTURE.md` ("Checkpoint lifecycle & hot-swap").
 
 pub mod format;
+pub mod quant;
 pub mod store;
 pub mod watch;
 
 pub use format::{
     community_fingerprint, degree_hot_nodes, Checkpoint, CkptMeta,
 };
+pub use quant::{quantize_checkpoint, quantize_tensor, QuantTensor};
 pub use store::{
     resolve_checkpoint, CheckpointWriter, ParamStore, ParamVersion,
     Retention, WrittenCkpt,

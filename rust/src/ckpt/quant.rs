@@ -1,0 +1,231 @@
+//! Checkpoint quantization: scale-and-round f32 tensors to i16 (NNUE
+//! style) with per-tensor power-of-two scales.
+//!
+//! Each tensor gets the largest exponent `e ≤ max_exp` such that
+//! `max_abs · 2^e ≤ limit`, then `q = round(x · 2^e)`. Power-of-two
+//! scales make dequantization `q / 2^e` **exact** in f32 (a 15-bit
+//! integer divided by a power of two), so the per-element round-trip
+//! error is exactly the rounding error: `|x − q/2^e| ≤ 0.5 / 2^e`.
+//!
+//! Quantization **fails loudly** instead of saturating: a tensor with
+//! a non-finite value, or one whose magnitude exceeds `limit` even at
+//! scale 1 (`e = 0`), is unrepresentable and returns an error — a
+//! silently clipped weight would serve wrong logits with no
+//! diagnostic trail.
+//!
+//! [`quantize_checkpoint`] applies the pass to a whole checkpoint: the
+//! result carries the raw i16 tensors (written to disk as the `i16q`
+//! dtype, see [`super::format`]) *and* the exact dequantized f32 view
+//! in `params`, so every consumer that wants plain f32 parameters
+//! (PJRT `set_params`, the f32 host engine, accuracy eval) works on a
+//! quantized checkpoint unchanged.
+
+use anyhow::{bail, Context, Result};
+
+use super::format::Checkpoint;
+
+/// Largest representable quantized weight magnitude (i16).
+pub const WEIGHT_LIMIT: i32 = i16::MAX as i32;
+
+/// Largest representable quantized activation magnitude (i8).
+pub const FEAT_LIMIT: i32 = i8::MAX as i32;
+
+/// Exponent cap for weight tensors (scale ≤ 2¹⁴, step ≥ 2⁻¹⁴).
+pub const WEIGHT_MAX_EXP: u32 = 14;
+
+/// Exponent cap for activation quantization (scale ≤ 2⁶). Kept low so
+/// the combined weight×activation scale stays far from the i32
+/// accumulator range.
+pub const FEAT_MAX_EXP: u32 = 6;
+
+/// One quantized tensor: `i16` values at scale `2^exp`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QuantTensor {
+    /// Quantized values, same layout as the source tensor.
+    pub q: Vec<i16>,
+    /// Power-of-two scale exponent: real value = `q / 2^exp`.
+    pub exp: u32,
+}
+
+impl QuantTensor {
+    /// The multiplicative scale `2^exp` (exact in f32 for all valid
+    /// exponents).
+    pub fn scale(&self) -> f32 {
+        (1u64 << self.exp) as f32
+    }
+
+    /// Exact f32 dequantization (`q / 2^exp` is representable: ≤ 15
+    /// significant bits over a power-of-two denominator).
+    pub fn dequant(&self) -> Vec<f32> {
+        let inv = 1.0 / self.scale();
+        self.q.iter().map(|&v| v as f32 * inv).collect()
+    }
+}
+
+/// Largest exponent `e ≤ max_exp` with `max_abs · 2^e ≤ limit`.
+///
+/// Errors on non-finite `max_abs` and on `max_abs > limit` (the tensor
+/// is unrepresentable even at scale 1 — the caller gets a loud
+/// failure, never a silent saturation).
+pub fn pick_exp(max_abs: f32, limit: i32, max_exp: u32) -> Result<u32> {
+    if !max_abs.is_finite() {
+        bail!("cannot quantize: non-finite magnitude {max_abs}");
+    }
+    if max_abs > limit as f32 {
+        bail!(
+            "cannot quantize: magnitude {max_abs} exceeds the integer \
+             range ±{limit} at scale 1 (refusing to saturate)"
+        );
+    }
+    let mut e = 0u32;
+    while e < max_exp && max_abs * ((1u64 << (e + 1)) as f32) <= limit as f32
+    {
+        e += 1;
+    }
+    Ok(e)
+}
+
+/// Integer division rounding half away from zero (`round(a / d)` for
+/// positive `d`). The quantized executors use it for the
+/// closed-neighborhood mean so every kernel variant — which already
+/// agrees bitwise on the accumulators — also agrees on the averaged
+/// activations.
+pub fn rounded_div(a: i32, d: i32) -> i32 {
+    debug_assert!(d > 0);
+    if a >= 0 {
+        (a + d / 2) / d
+    } else {
+        (a - d / 2) / d
+    }
+}
+
+/// Quantize one tensor to i16 at the best power-of-two scale for its
+/// magnitude. Errors (rather than saturating) on non-finite or
+/// out-of-range input.
+pub fn quantize_tensor(
+    data: &[f32],
+    limit: i32,
+    max_exp: u32,
+) -> Result<QuantTensor> {
+    let mut max_abs = 0f32;
+    for &x in data {
+        if !x.is_finite() {
+            bail!("cannot quantize: non-finite element {x}");
+        }
+        max_abs = max_abs.max(x.abs());
+    }
+    let exp = pick_exp(max_abs, limit, max_exp)?;
+    let scale = (1u64 << exp) as f32;
+    let mut q = Vec::with_capacity(data.len());
+    for &x in data {
+        let r = (x * scale).round();
+        // by construction |x|·scale ≤ limit, so round() stays in
+        // range; this guards float-edge surprises loudly
+        if r.abs() > limit as f32 {
+            bail!(
+                "quantized value {r} out of ±{limit} at scale 2^{exp} \
+                 (input {x})"
+            );
+        }
+        q.push(r as i16);
+    }
+    Ok(QuantTensor { q, exp })
+}
+
+/// Quantize every tensor of a checkpoint to the on-disk `i16q` dtype.
+///
+/// The returned checkpoint shares `meta` (same shapes, same community
+/// fence), stores the raw i16 tensors in `quant`, and replaces
+/// `params` with the **exact dequantized** f32 view — so shape
+/// validation, accuracy evaluation and non-quantized executors keep
+/// working on it unchanged.
+pub fn quantize_checkpoint(ck: &Checkpoint) -> Result<Checkpoint> {
+    let mut quant = Vec::with_capacity(ck.params.len());
+    let mut params = Vec::with_capacity(ck.params.len());
+    for (i, p) in ck.params.iter().enumerate() {
+        let qt = quantize_tensor(p, WEIGHT_LIMIT, WEIGHT_MAX_EXP)
+            .with_context(|| format!("quantizing checkpoint tensor {i}"))?;
+        params.push(qt.dequant());
+        quant.push(qt);
+    }
+    Ok(Checkpoint { meta: ck.meta.clone(), params, quant: Some(quant) })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_error_is_bounded_by_half_a_step() {
+        let data: Vec<f32> =
+            (0..257).map(|i| (i as f32 * 0.37 - 40.0).sin() * 3.0).collect();
+        let qt = quantize_tensor(&data, WEIGHT_LIMIT, WEIGHT_MAX_EXP).unwrap();
+        let back = qt.dequant();
+        let bound = 0.5 / qt.scale();
+        for (i, (&x, &y)) in data.iter().zip(&back).enumerate() {
+            assert!(
+                (x - y).abs() <= bound,
+                "element {i}: |{x} - {y}| > {bound}"
+            );
+        }
+    }
+
+    #[test]
+    fn scale_maximizes_precision_within_range() {
+        // max_abs 3.0 with limit 32767: 3·2^13 = 24576 fits,
+        // 3·2^14 = 49152 does not → exp 13; a tiny tensor pins to the
+        // exp cap instead
+        assert_eq!(pick_exp(3.0, WEIGHT_LIMIT, WEIGHT_MAX_EXP).unwrap(), 13);
+        assert_eq!(pick_exp(1e-9, WEIGHT_LIMIT, WEIGHT_MAX_EXP).unwrap(), 14);
+        // all-zero tensors quantize at the cap (every q is 0)
+        let qt = quantize_tensor(&[0.0; 8], WEIGHT_LIMIT, WEIGHT_MAX_EXP)
+            .unwrap();
+        assert_eq!(qt.exp, WEIGHT_MAX_EXP);
+        assert!(qt.q.iter().all(|&v| v == 0));
+        // feature quantization respects its own limit/cap
+        assert_eq!(pick_exp(100.0, FEAT_LIMIT, FEAT_MAX_EXP).unwrap(), 0);
+        assert_eq!(pick_exp(0.5, FEAT_LIMIT, FEAT_MAX_EXP).unwrap(), 6);
+    }
+
+    #[test]
+    fn out_of_range_fails_loudly_instead_of_saturating() {
+        let err =
+            quantize_tensor(&[1.0, 40000.0], WEIGHT_LIMIT, WEIGHT_MAX_EXP)
+                .unwrap_err();
+        assert!(format!("{err:#}").contains("refusing to saturate"));
+        // features hit their smaller limit much earlier
+        assert!(quantize_tensor(&[200.0], FEAT_LIMIT, FEAT_MAX_EXP).is_err());
+    }
+
+    #[test]
+    fn non_finite_values_are_refused() {
+        for bad in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+            assert!(
+                quantize_tensor(&[0.0, bad], WEIGHT_LIMIT, WEIGHT_MAX_EXP)
+                    .is_err()
+            );
+        }
+    }
+
+    #[test]
+    fn rounded_div_rounds_half_away_from_zero() {
+        assert_eq!(rounded_div(7, 2), 4);
+        assert_eq!(rounded_div(-7, 2), -4);
+        assert_eq!(rounded_div(6, 3), 2);
+        assert_eq!(rounded_div(-6, 3), -2);
+        assert_eq!(rounded_div(0, 5), 0);
+        assert_eq!(rounded_div(1, 3), 0);
+        assert_eq!(rounded_div(2, 3), 1);
+    }
+
+    #[test]
+    fn dequant_is_exact_for_quantized_values() {
+        let qt = QuantTensor { q: vec![-32767, -1, 0, 1, 12345], exp: 9 };
+        let d = qt.dequant();
+        // re-quantizing at the same scale reproduces q bit-for-bit
+        for (&q, &x) in qt.q.iter().zip(&d) {
+            assert_eq!((x * qt.scale()).round() as i16, q);
+            assert_eq!(x, q as f32 / 512.0);
+        }
+    }
+}

@@ -25,8 +25,15 @@ use super::format::{Checkpoint, CkptMeta};
 pub struct ParamVersion {
     /// Store-assigned version, monotonically increasing from 1.
     pub version: u64,
-    /// Parameter tensors (flattened, in `meta.shapes` order).
+    /// Parameter tensors (flattened, in `meta.shapes` order). For a
+    /// quantized checkpoint these are the exact dequantized values, so
+    /// f32 consumers (PJRT `set_params`, accuracy eval) work on every
+    /// version unchanged.
     pub params: Vec<Vec<f32>>,
+    /// Raw quantized tensors when the source checkpoint has dtype
+    /// `i16q` — executors with an integer fast path (the host model's
+    /// SIMD kernels) install these instead of `params`.
+    pub quant: Option<Vec<crate::ckpt::quant::QuantTensor>>,
     /// The checkpoint metadata this version was published from.
     pub meta: CkptMeta,
     /// File the version was loaded from (for logs/reports).
@@ -54,6 +61,7 @@ impl ParamStore {
         let v = Arc::new(ParamVersion {
             version,
             params: ck.params,
+            quant: ck.quant,
             meta: ck.meta,
             source,
         });

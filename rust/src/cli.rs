@@ -157,13 +157,18 @@ COMMANDS:
                            metrics_ms=N (write a Prometheus text
                            snapshot to results/serve_metrics.prom
                            every N ms; 0 = off)
+                           kernel=auto|scalar|avx2 (SIMD dispatch for
+                           the quantized i16q integer path; auto picks
+                           the best the CPU supports, a named variant
+                           is forced and errors if unavailable; every
+                           variant is bitwise-identical)
                            (uses the PJRT infer artifact when present,
                             the pure-rust host executor otherwise)
   exp <id>               regenerate a paper artifact into results/
                            ids: fig2 fig5 fig6 fig7 fig8 fig9 fig10
                                 tab3 tab4 tab5 fullbatch inference
                                 preproc ablation autotune serve ckpt
-                                stream obs coop all
+                                stream obs coop quant all
   help                   this message
 
 Presets: {}",
@@ -330,6 +335,7 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         },
         sample_p: args.get_f64("sample_p", defaults.sample_p)?,
         seed: args.get_u64("seed", 0)?,
+        kernel: args.get("kernel").unwrap_or("auto").to_string(),
         ckpt: args.get("ckpt").map(std::path::PathBuf::from),
         ckpt_watch_ms: args.get_u64("watch_ms", 0)?,
         cache_warm: args.get_usize("cache_warm", 0)? != 0,
@@ -353,6 +359,9 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     if scfg.shards == 0 {
         bail!("shards must be >= 1");
     }
+    // resolve early for a crisp CLI error (build_executor re-resolves)
+    crate::runtime::kernels::KernelBackend::resolve(&scfg.kernel)
+        .context("kernel= knob")?;
     if !scfg.mutate_rps.is_finite() || scfg.mutate_rps < 0.0 {
         bail!("mutate must be a non-negative rate, got {}", scfg.mutate_rps);
     }
@@ -373,7 +382,7 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         seed: scfg.seed ^ 0x10AD,
     };
 
-    let (exec, meta) = engine::build_executor(&p, &ds, &scfg);
+    let (exec, meta) = engine::build_executor(&p, &ds, &scfg)?;
     let report = engine::run(&ds, &meta, exec.as_ref(), &scfg, &lcfg)?;
     println!("{}", report.summary());
     if report.n_shards > 1 {

@@ -61,7 +61,7 @@ pub fn run(args: &Args) -> Result<()> {
         arrival: Arrival::Closed,
         seed: seed ^ 0x10AD,
     };
-    let exec = HostExecutor::new(&ds, scfg.seed);
+    let exec = HostExecutor::new(&ds, scfg.seed)?;
     let meta =
         engine::synthetic_infer_meta(&ds, scfg.batch_size, &scfg.fanouts);
 

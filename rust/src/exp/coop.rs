@@ -98,7 +98,7 @@ pub fn run(args: &Args) -> Result<()> {
     };
     let trials = args.get_usize("trials", if quick() { 2 } else { 3 })?.max(1);
     let expect = lcfg.clients * lcfg.requests_per_client;
-    let (exec, meta) = engine::build_executor(&p, &ds, &scfg);
+    let (exec, meta) = engine::build_executor(&p, &ds, &scfg)?;
 
     let mut table = Table::new(&[
         "p",

@@ -20,6 +20,7 @@ pub mod fullbatch;
 pub mod inference;
 pub mod obs;
 pub mod preproc;
+pub mod quant;
 pub mod serve;
 pub mod stream;
 pub mod tab3;
@@ -50,6 +51,9 @@ pub fn run(args: &Args) -> Result<()> {
     }
     if id == "coop" {
         return coop::run(args);
+    }
+    if id == "quant" {
+        return quant::run(args);
     }
     let mut ctx = Ctx::new()?;
     match id {

@@ -58,7 +58,7 @@ pub fn run(args: &Args) -> Result<()> {
         seed: scfg.seed ^ 0x10AD,
     };
     let trials = args.get_usize("trials", if quick() { 2 } else { 3 })?.max(1);
-    let (exec, meta) = engine::build_executor(&p, &ds, &scfg);
+    let (exec, meta) = engine::build_executor(&p, &ds, &scfg)?;
 
     let trace_path = results_dir().join("obs_trace.json");
     let modes = [

@@ -50,7 +50,7 @@ pub fn run(args: &Args) -> Result<()> {
         arrival: Arrival::Closed,
         seed: scfg.seed ^ 0x10AD,
     };
-    let (exec, meta) = engine::build_executor(&p, &ds, &scfg);
+    let (exec, meta) = engine::build_executor(&p, &ds, &scfg)?;
 
     // axis 1: community-bias knob on a single shard
     let mut p_table = Table::new(&[

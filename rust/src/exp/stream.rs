@@ -57,7 +57,7 @@ pub fn run(args: &Args) -> Result<()> {
         arrival: Arrival::Closed,
         seed: scfg.seed ^ 0x57E4,
     };
-    let (exec, meta) = engine::build_executor(&p, &ds, &scfg);
+    let (exec, meta) = engine::build_executor(&p, &ds, &scfg)?;
 
     let modes: [(&str, f64, MaintenanceMode); 3] = [
         ("zero-churn", 0.0, MaintenanceMode::Incremental),

@@ -117,7 +117,6 @@ pub mod exp;
 #[allow(missing_docs)]
 pub mod graph;
 pub mod obs;
-#[allow(missing_docs)]
 pub mod runtime;
 #[allow(missing_docs)]
 pub mod sampler;

@@ -10,20 +10,28 @@ use anyhow::{bail, Context, Result};
 
 use crate::util::json::Json;
 
+/// Element dtype of one artifact input/output buffer.
 #[derive(Clone, Debug, PartialEq)]
 pub enum DType {
+    /// 32-bit float.
     F32,
+    /// 32-bit signed integer (index arrays, labels).
     I32,
 }
 
+/// One flattened input or output in an artifact's signature.
 #[derive(Clone, Debug)]
 pub struct IoSpec {
+    /// Buffer name (`p.*` marks a parameter input).
     pub name: String,
+    /// Static shape, outermost dimension first.
     pub shape: Vec<usize>,
+    /// Element dtype.
     pub dtype: DType,
 }
 
 impl IoSpec {
+    /// Total element count (product of the shape).
     pub fn elements(&self) -> usize {
         self.shape.iter().product()
     }
@@ -33,36 +41,55 @@ impl IoSpec {
 /// `ModelSpec`/`FullBatchSpec`).
 #[derive(Clone, Debug)]
 pub struct SpecMeta {
+    /// Model family the artifact was lowered from (`sage`/`gcn`/`gat`).
     pub model: String,
+    /// Message-passing layer count.
     pub layers: usize,
     /// Per-layer fanouts, input-most first.
     pub fanouts: Vec<usize>,
     /// Per-layer neighbor-slot widths (fanout, +1 for GCN/GAT self).
     pub idx_widths: Vec<usize>,
+    /// Padded root-batch capacity.
     pub batch_size: usize,
+    /// Node count of the dataset the artifact was sized for.
     pub num_nodes: usize,
+    /// Input feature width.
     pub feat_dim: usize,
+    /// Logit columns.
     pub num_classes: usize,
+    /// Attention heads (1 for non-GAT models).
     pub heads: usize,
+    /// Feature residency (`resident` = full table on device, `staged`
+    /// = the batch carries its own x0 payload).
     pub feat_mode: String,
     /// Padded per-layer dst capacities, input-most first (len layers+1).
     pub node_caps: Vec<usize>,
-    /// Full-batch artifacts only:
+    /// Padded edge capacity (full-batch artifacts only, else 0).
     pub padded_edges: usize,
+    /// Edge-chunk size (full-batch artifacts only, else 0).
     pub edge_chunk: usize,
 }
 
+/// One artifact's manifest record: where its HLO lives and the exact
+/// buffer signature the runtime must honor.
 #[derive(Clone, Debug)]
 pub struct ArtifactMeta {
+    /// Manifest key (`<preset>.<kind>`).
     pub name: String,
+    /// HLO text file the artifact compiles from.
     pub file: PathBuf,
+    /// Artifact kind (`train` / `infer` / `fullbatch`).
     pub kind: String,
+    /// Model-spec subset the sampler/trainer size batches against.
     pub spec: SpecMeta,
+    /// Flattened input signature, in call order.
     pub inputs: Vec<IoSpec>,
+    /// Flattened output signature, in result order.
     pub outputs: Vec<IoSpec>,
 }
 
 impl ArtifactMeta {
+    /// Number of parameter inputs (names prefixed `p.`).
     pub fn num_params(&self) -> usize {
         self.inputs
             .iter()
@@ -70,6 +97,7 @@ impl ArtifactMeta {
             .count()
     }
 
+    /// The parameter inputs (names prefixed `p.`), in call order.
     pub fn param_specs(&self) -> Vec<&IoSpec> {
         self.inputs
             .iter()
@@ -77,6 +105,7 @@ impl ArtifactMeta {
             .collect()
     }
 
+    /// Position of input `name` in the flattened call signature.
     pub fn input_index(&self, name: &str) -> Result<usize> {
         self.inputs
             .iter()
@@ -85,8 +114,11 @@ impl ArtifactMeta {
     }
 }
 
+/// Parsed `manifest.json`: every artifact in an artifacts directory.
 pub struct Manifest {
+    /// Directory the manifest (and the HLO files) live in.
     pub dir: PathBuf,
+    /// All artifact records, in manifest order.
     pub artifacts: Vec<ArtifactMeta>,
 }
 
@@ -143,6 +175,7 @@ fn parse_spec(v: &Json) -> Result<SpecMeta> {
 }
 
 impl Manifest {
+    /// Load and validate `<dir>/manifest.json`.
     pub fn load(dir: &Path) -> Result<Manifest> {
         let path = dir.join("manifest.json");
         let root = Json::parse_file(&path)?;
@@ -173,6 +206,8 @@ impl Manifest {
         Ok(Manifest { dir: dir.to_path_buf(), artifacts })
     }
 
+    /// Look an artifact up by manifest key, with a helpful error
+    /// listing what exists.
     pub fn get(&self, name: &str) -> Result<&ArtifactMeta> {
         self.artifacts
             .iter()

@@ -1,0 +1,114 @@
+//! AVX2 kernel variants: 16 i16 lanes per 256-bit vector for the
+//! matvec (`_mm256_madd_epi16` pairwise products), 8 i32 lanes per
+//! step for the i8 row aggregation (`_mm256_cvtepi8_epi32`).
+//!
+//! All vector adds are wrapping, so these produce the same mod-2³²
+//! accumulators as the scalar reference in every summation order —
+//! see the parent module docs. Callers must only dispatch here when
+//! the `avx2` CPU feature was detected
+//! ([`KernelBackend::available`](super::KernelBackend::available)).
+
+#[cfg(target_arch = "x86_64")]
+pub fn matvec_i16_i32(
+    wt: &[i16],
+    x: &[i16],
+    bias: &[i32],
+    feat_pad: usize,
+    out: &mut [i32],
+) {
+    debug_assert!(std::arch::is_x86_feature_detected!("avx2"));
+    // SAFETY: the dispatcher only selects this backend after runtime
+    // AVX2 detection; slice geometry is debug-asserted by the facade.
+    unsafe { matvec_impl(wt, x, bias, feat_pad, out) }
+}
+
+#[cfg(target_arch = "x86_64")]
+pub fn accumulate_rows_i8(
+    table: &[i8],
+    feat_pad: usize,
+    nodes: &[u32],
+    out: &mut [i32],
+) {
+    debug_assert!(std::arch::is_x86_feature_detected!("avx2"));
+    // SAFETY: as above.
+    unsafe { accumulate_impl(table, feat_pad, nodes, out) }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn matvec_impl(
+    wt: &[i16],
+    x: &[i16],
+    bias: &[i32],
+    feat_pad: usize,
+    out: &mut [i32],
+) {
+    use std::arch::x86_64::*;
+    for (c, o) in out.iter_mut().enumerate() {
+        let row = wt.as_ptr().add(c * feat_pad);
+        let mut acc = _mm256_setzero_si256();
+        let mut k = 0usize;
+        while k < feat_pad {
+            let w = _mm256_loadu_si256(row.add(k) as *const __m256i);
+            let xv =
+                _mm256_loadu_si256(x.as_ptr().add(k) as *const __m256i);
+            // madd: adjacent i16 products summed pairwise into 8 i32
+            acc = _mm256_add_epi32(acc, _mm256_madd_epi16(w, xv));
+            k += super::LANES;
+        }
+        // horizontal wrapping reduction of the 8 partials
+        let lo = _mm256_castsi256_si128(acc);
+        let hi = _mm256_extracti128_si256::<1>(acc);
+        let s = _mm_add_epi32(lo, hi);
+        let s = _mm_add_epi32(s, _mm_shuffle_epi32::<0b01_00_11_10>(s));
+        let s = _mm_add_epi32(s, _mm_shuffle_epi32::<0b00_00_00_01>(s));
+        *o = bias[c].wrapping_add(_mm_cvtsi128_si32(s));
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn accumulate_impl(
+    table: &[i8],
+    feat_pad: usize,
+    nodes: &[u32],
+    out: &mut [i32],
+) {
+    use std::arch::x86_64::*;
+    for &v in nodes {
+        let row = table.as_ptr().add(v as usize * feat_pad);
+        let mut k = 0usize;
+        while k < feat_pad {
+            let o = out.as_mut_ptr().add(k) as *mut __m256i;
+            // 8 i8 → 8 i32, then a wrapping lane-wise add into out
+            let bytes = _mm_loadl_epi64(row.add(k) as *const __m128i);
+            let wide = _mm256_cvtepi8_epi32(bytes);
+            _mm256_storeu_si256(
+                o,
+                _mm256_add_epi32(_mm256_loadu_si256(o), wide),
+            );
+            k += 8;
+        }
+    }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+pub fn matvec_i16_i32(
+    _wt: &[i16],
+    _x: &[i16],
+    _bias: &[i32],
+    _feat_pad: usize,
+    _out: &mut [i32],
+) {
+    unreachable!("avx2 backend dispatched on a non-x86_64 target")
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+pub fn accumulate_rows_i8(
+    _table: &[i8],
+    _feat_pad: usize,
+    _nodes: &[u32],
+    _out: &mut [i32],
+) {
+    unreachable!("avx2 backend dispatched on a non-x86_64 target")
+}

@@ -1,0 +1,119 @@
+//! AVX-512BW kernel variants: 32 i16 lanes per 512-bit vector.
+//!
+//! Compiled only with the off-by-default `avx512` cargo feature
+//! (AVX-512 intrinsics need a recent stable toolchain) and dispatched
+//! only after runtime `avx512bw` detection. Same wrapping-arithmetic
+//! bitwise contract as the other variants.
+
+#[cfg(target_arch = "x86_64")]
+pub fn matvec_i16_i32(
+    wt: &[i16],
+    x: &[i16],
+    bias: &[i32],
+    feat_pad: usize,
+    out: &mut [i32],
+) {
+    debug_assert!(std::arch::is_x86_feature_detected!("avx512bw"));
+    // SAFETY: the dispatcher only selects this backend after runtime
+    // avx512bw detection; slice geometry is debug-asserted upstream.
+    unsafe { matvec_impl(wt, x, bias, feat_pad, out) }
+}
+
+#[cfg(target_arch = "x86_64")]
+pub fn accumulate_rows_i8(
+    table: &[i8],
+    feat_pad: usize,
+    nodes: &[u32],
+    out: &mut [i32],
+) {
+    debug_assert!(std::arch::is_x86_feature_detected!("avx512bw"));
+    // SAFETY: as above.
+    unsafe { accumulate_impl(table, feat_pad, nodes, out) }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx512f,avx512bw")]
+unsafe fn matvec_impl(
+    wt: &[i16],
+    x: &[i16],
+    bias: &[i32],
+    feat_pad: usize,
+    out: &mut [i32],
+) {
+    use std::arch::x86_64::*;
+    for (c, o) in out.iter_mut().enumerate() {
+        let row = wt.as_ptr().add(c * feat_pad);
+        let mut acc = _mm512_setzero_si512();
+        let mut k = 0usize;
+        while k < feat_pad {
+            // zero-padded inputs: a 16-lane (256-bit) tail group is
+            // loaded as a zero-extended 512-bit vector
+            let (w, xv) = if k + 2 * super::LANES <= feat_pad {
+                (
+                    _mm512_loadu_si512(row.add(k) as *const i32),
+                    _mm512_loadu_si512(x.as_ptr().add(k) as *const i32),
+                )
+            } else {
+                (
+                    _mm512_zextsi256_si512(_mm256_loadu_si256(
+                        row.add(k) as *const __m256i
+                    )),
+                    _mm512_zextsi256_si512(_mm256_loadu_si256(
+                        x.as_ptr().add(k) as *const __m256i,
+                    )),
+                )
+            };
+            acc = _mm512_add_epi32(acc, _mm512_madd_epi16(w, xv));
+            k += 2 * super::LANES;
+        }
+        // reduce_add is a wrapping shuffle/add sequence
+        *o = bias[c].wrapping_add(_mm512_reduce_add_epi32(acc));
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx512f,avx512bw")]
+unsafe fn accumulate_impl(
+    table: &[i8],
+    feat_pad: usize,
+    nodes: &[u32],
+    out: &mut [i32],
+) {
+    use std::arch::x86_64::*;
+    for &v in nodes {
+        let row = table.as_ptr().add(v as usize * feat_pad);
+        let mut k = 0usize;
+        while k < feat_pad {
+            let o = out.as_mut_ptr().add(k) as *mut i32;
+            // 16 i8 → 16 i32, wrapping lane-wise add into out
+            let bytes = _mm_loadu_si128(row.add(k) as *const __m128i);
+            let wide = _mm512_cvtepi8_epi32(bytes);
+            _mm512_storeu_si512(
+                o,
+                _mm512_add_epi32(_mm512_loadu_si512(o as *const i32), wide),
+            );
+            k += super::LANES;
+        }
+    }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+pub fn matvec_i16_i32(
+    _wt: &[i16],
+    _x: &[i16],
+    _bias: &[i32],
+    _feat_pad: usize,
+    _out: &mut [i32],
+) {
+    unreachable!("avx512 backend dispatched on a non-x86_64 target")
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+pub fn accumulate_rows_i8(
+    _table: &[i8],
+    _feat_pad: usize,
+    _nodes: &[u32],
+    _out: &mut [i32],
+) {
+    unreachable!("avx512 backend dispatched on a non-x86_64 target")
+}

@@ -1,0 +1,347 @@
+//! Quantized integer inference kernels with CPU-feature runtime
+//! dispatch.
+//!
+//! Two kernels back the quantized host-model path ([`matvec_i16_i32`]
+//! and [`accumulate_rows_i8`]), each implemented three ways behind one
+//! dispatching facade:
+//!
+//! | backend  | requirement                  | selected when |
+//! |----------|------------------------------|---------------|
+//! | `scalar` | none (portable integer rust) | fallback, or forced |
+//! | `avx2`   | runtime `avx2` CPU feature   | default on x86-64 with AVX2 |
+//! | `avx512` | `avx512` cargo feature + runtime `avx512bw` | forced only |
+//!
+//! The backend is picked **once at executor construction** via
+//! [`KernelBackend::resolve`]: the `kernel=` serve knob (`auto`
+//! consults the `COMM_RAND_KERNEL` env var, so CI can force the
+//! portable path across an entire test run) and explicit values
+//! (`scalar`/`avx2`/`avx512`) fail loudly when the machine lacks the
+//! feature. AVX-512 intrinsics are gated behind the off-by-default
+//! `avx512` cargo feature so the crate builds on older stable
+//! toolchains.
+//!
+//! # Bitwise cross-variant equivalence
+//!
+//! Every variant of every kernel produces **bit-identical** `i32`
+//! accumulators, unconditionally. This works because all arithmetic is
+//! *wrapping*: wrapping add/multiply is exactly associative and
+//! commutative mod 2³², so the SIMD variants' different summation
+//! orders (pairwise `madd` partials, lane-wise accumulators, one
+//! horizontal reduction at the end) cannot change the result. Inputs
+//! are zero-padded to a multiple of [`LANES`] so vector tails
+//! contribute exact zeros. `rust/tests/quant_kernels.rs` pins this
+//! property over randomized shapes for every backend the host CPU can
+//! run.
+//!
+//! Wrapping arithmetic means a genuine magnitude overflow would wrap
+//! silently *inside* the kernel — so the quantized executor proves at
+//! install time that no accumulator can exceed `i32::MAX` (see
+//! `serve::worker`), and quantization itself refuses out-of-range
+//! tensors (see [`crate::ckpt::quant`]). Within that envelope the
+//! wrapped value *is* the true sum.
+
+use anyhow::{bail, Result};
+
+mod avx2;
+#[cfg(feature = "avx512")]
+mod avx512;
+mod scalar;
+
+/// i16 lanes per 256-bit vector: inputs are zero-padded to a multiple
+/// of this so every SIMD variant can run full-width with no tail loop.
+pub const LANES: usize = 16;
+
+/// Round `n` up to the next multiple of [`LANES`].
+pub fn pad_to_lanes(n: usize) -> usize {
+    n.div_ceil(LANES) * LANES
+}
+
+/// Which kernel implementation executes. Carried by the executor;
+/// resolved once at startup, never per batch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelBackend {
+    /// Portable wrapping-integer rust — runs everywhere.
+    Scalar,
+    /// 256-bit AVX2 intrinsics (`_mm256_madd_epi16` et al.).
+    Avx2,
+    /// 512-bit AVX-512BW intrinsics; requires the `avx512` cargo
+    /// feature at compile time *and* CPU support at run time.
+    Avx512,
+}
+
+impl KernelBackend {
+    /// Knob/report name of this backend.
+    pub fn name(&self) -> &'static str {
+        match self {
+            KernelBackend::Scalar => "scalar",
+            KernelBackend::Avx2 => "avx2",
+            KernelBackend::Avx512 => "avx512",
+        }
+    }
+
+    /// Can this backend execute on the current machine + build?
+    pub fn available(&self) -> bool {
+        match self {
+            KernelBackend::Scalar => true,
+            KernelBackend::Avx2 => avx2_detected(),
+            KernelBackend::Avx512 => avx512_detected(),
+        }
+    }
+
+    /// The best backend the current machine can run (never fails:
+    /// scalar is always available).
+    pub fn detect() -> KernelBackend {
+        if avx512_detected() {
+            KernelBackend::Avx512
+        } else if avx2_detected() {
+            KernelBackend::Avx2
+        } else {
+            KernelBackend::Scalar
+        }
+    }
+
+    /// Every backend the current machine + build can execute (used by
+    /// the equivalence tests to cover all runnable variants).
+    pub fn all_available() -> Vec<KernelBackend> {
+        [KernelBackend::Scalar, KernelBackend::Avx2, KernelBackend::Avx512]
+            .into_iter()
+            .filter(|b| b.available())
+            .collect()
+    }
+
+    /// Resolve the `kernel=` knob to a concrete backend.
+    ///
+    /// `auto` consults the `COMM_RAND_KERNEL` env var (itself allowed
+    /// to be `auto`/unset, meaning [`KernelBackend::detect`]); any
+    /// explicit name — from the knob or the env var — must be runnable
+    /// here or this errors, so a forced backend never silently
+    /// degrades.
+    pub fn resolve(knob: &str) -> Result<KernelBackend> {
+        let forced = match knob {
+            "auto" => match std::env::var("COMM_RAND_KERNEL") {
+                Ok(v) if !v.is_empty() && v != "auto" => Some(v),
+                _ => None,
+            },
+            other => Some(other.to_string()),
+        };
+        let Some(name) = forced else {
+            return Ok(KernelBackend::detect());
+        };
+        let b = match name.as_str() {
+            "scalar" => KernelBackend::Scalar,
+            "avx2" => KernelBackend::Avx2,
+            "avx512" => KernelBackend::Avx512,
+            other => {
+                bail!("unknown kernel backend {other:?} (kernel=auto|scalar|avx2|avx512)")
+            }
+        };
+        if !b.available() {
+            bail!(
+                "kernel backend {} forced but not available on this \
+                 machine/build (detected: {})",
+                b.name(),
+                KernelBackend::detect().name()
+            );
+        }
+        Ok(b)
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn avx2_detected() -> bool {
+    std::arch::is_x86_feature_detected!("avx2")
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn avx2_detected() -> bool {
+    false
+}
+
+#[cfg(all(target_arch = "x86_64", feature = "avx512"))]
+fn avx512_detected() -> bool {
+    std::arch::is_x86_feature_detected!("avx512bw")
+}
+
+#[cfg(not(all(target_arch = "x86_64", feature = "avx512")))]
+fn avx512_detected() -> bool {
+    false
+}
+
+/// Quantized affine layer: for every output class `c`,
+/// `out[c] = bias[c] + Σ_k wt[c * feat_pad + k] · x[k]` with wrapping
+/// i32 accumulation.
+///
+/// `wt` is class-major (`out.len()` rows of `feat_pad` i16 each,
+/// zero-padded), `x` is one activation row of `feat_pad` i16, `bias`
+/// is one i32 per class at the combined weight×activation scale.
+///
+/// # Panics
+/// Debug-asserts the slice geometry (`feat_pad` a multiple of
+/// [`LANES`], `wt.len() == out.len() * feat_pad`, `x.len() ==
+/// feat_pad`, `bias.len() == out.len()`).
+pub fn matvec_i16_i32(
+    backend: KernelBackend,
+    wt: &[i16],
+    x: &[i16],
+    bias: &[i32],
+    feat_pad: usize,
+    out: &mut [i32],
+) {
+    debug_assert_eq!(feat_pad % LANES, 0);
+    debug_assert_eq!(x.len(), feat_pad);
+    debug_assert_eq!(wt.len(), out.len() * feat_pad);
+    debug_assert_eq!(bias.len(), out.len());
+    match backend {
+        KernelBackend::Scalar => {
+            scalar::matvec_i16_i32(wt, x, bias, feat_pad, out)
+        }
+        KernelBackend::Avx2 => avx2::matvec_i16_i32(wt, x, bias, feat_pad, out),
+        KernelBackend::Avx512 => {
+            avx512_matvec(wt, x, bias, feat_pad, out)
+        }
+    }
+}
+
+/// Quantized neighbor aggregation: `out[k] += Σ_v table[nodes[v] *
+/// feat_pad + k]` with wrapping i32 accumulation over i8 feature rows.
+///
+/// `out` is **accumulated into**, not overwritten, so the caller seeds
+/// it (typically with zeros, or the root's own row for closed
+/// neighborhoods) and divides by the neighbor count afterwards. An
+/// empty `nodes` list leaves `out` untouched.
+///
+/// # Panics
+/// Debug-asserts the geometry (`feat_pad` a multiple of [`LANES`],
+/// `out.len() == feat_pad`, every row index in range).
+pub fn accumulate_rows_i8(
+    backend: KernelBackend,
+    table: &[i8],
+    feat_pad: usize,
+    nodes: &[u32],
+    out: &mut [i32],
+) {
+    debug_assert_eq!(feat_pad % LANES, 0);
+    debug_assert_eq!(out.len(), feat_pad);
+    debug_assert!(nodes
+        .iter()
+        .all(|&v| (v as usize + 1) * feat_pad <= table.len()));
+    match backend {
+        KernelBackend::Scalar => {
+            scalar::accumulate_rows_i8(table, feat_pad, nodes, out)
+        }
+        KernelBackend::Avx2 => {
+            avx2::accumulate_rows_i8(table, feat_pad, nodes, out)
+        }
+        KernelBackend::Avx512 => avx512_accumulate(table, feat_pad, nodes, out),
+    }
+}
+
+#[cfg(feature = "avx512")]
+fn avx512_matvec(
+    wt: &[i16],
+    x: &[i16],
+    bias: &[i32],
+    feat_pad: usize,
+    out: &mut [i32],
+) {
+    avx512::matvec_i16_i32(wt, x, bias, feat_pad, out)
+}
+
+#[cfg(not(feature = "avx512"))]
+fn avx512_matvec(
+    _wt: &[i16],
+    _x: &[i16],
+    _bias: &[i32],
+    _feat_pad: usize,
+    _out: &mut [i32],
+) {
+    unreachable!("avx512 backend without the avx512 cargo feature")
+}
+
+#[cfg(feature = "avx512")]
+fn avx512_accumulate(
+    table: &[i8],
+    feat_pad: usize,
+    nodes: &[u32],
+    out: &mut [i32],
+) {
+    avx512::accumulate_rows_i8(table, feat_pad, nodes, out)
+}
+
+#[cfg(not(feature = "avx512"))]
+fn avx512_accumulate(
+    _table: &[i8],
+    _feat_pad: usize,
+    _nodes: &[u32],
+    _out: &mut [i32],
+) {
+    unreachable!("avx512 backend without the avx512 cargo feature")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pad_rounds_up_to_lane_multiples() {
+        assert_eq!(pad_to_lanes(0), 0);
+        assert_eq!(pad_to_lanes(1), LANES);
+        assert_eq!(pad_to_lanes(LANES), LANES);
+        assert_eq!(pad_to_lanes(LANES + 1), 2 * LANES);
+    }
+
+    #[test]
+    fn detect_is_available_and_resolve_honors_forcing() {
+        let d = KernelBackend::detect();
+        assert!(d.available());
+        assert!(KernelBackend::Scalar.available());
+        assert!(KernelBackend::all_available().contains(&KernelBackend::Scalar));
+        // forcing scalar always works; forcing garbage never does
+        assert_eq!(
+            KernelBackend::resolve("scalar").unwrap(),
+            KernelBackend::Scalar
+        );
+        assert!(KernelBackend::resolve("neon").is_err());
+        // an unavailable backend errors instead of degrading
+        if !KernelBackend::Avx512.available() {
+            assert!(KernelBackend::resolve("avx512").is_err());
+        }
+    }
+
+    #[test]
+    fn scalar_matvec_matches_hand_computation() {
+        // 2 classes, feat_dim 3 padded to one lane group
+        let fp = LANES;
+        let mut wt = vec![0i16; 2 * fp];
+        wt[..3].copy_from_slice(&[1, 2, 3]); // class 0
+        wt[fp..fp + 3].copy_from_slice(&[-1, 0, 10]); // class 1
+        let mut x = vec![0i16; fp];
+        x[..3].copy_from_slice(&[5, -4, 2]);
+        let bias = [100, -7];
+        let mut out = [0i32; 2];
+        matvec_i16_i32(KernelBackend::Scalar, &wt, &x, &bias, fp, &mut out);
+        assert_eq!(out, [100 + 5 - 8 + 6, -7 - 5 + 0 + 20]);
+    }
+
+    #[test]
+    fn scalar_accumulate_sums_selected_rows() {
+        let fp = LANES;
+        let mut table = vec![0i8; 3 * fp];
+        table[0] = 7; // row 0
+        table[fp] = -2; // row 1
+        table[2 * fp] = 1; // row 2
+        let mut out = vec![0i32; fp];
+        accumulate_rows_i8(
+            KernelBackend::Scalar,
+            &table,
+            fp,
+            &[0, 2, 2],
+            &mut out,
+        );
+        assert_eq!(out[0], 7 + 1 + 1);
+        assert_eq!(&out[1..], &vec![0i32; fp - 1][..]);
+        // empty node list is a no-op
+        accumulate_rows_i8(KernelBackend::Scalar, &table, fp, &[], &mut out);
+        assert_eq!(out[0], 9);
+    }
+}

@@ -1,0 +1,35 @@
+//! Portable wrapping-integer reference kernels. Every SIMD variant is
+//! pinned bitwise to these (see the module docs of
+//! [`super`](crate::runtime::kernels) for why wrapping arithmetic
+//! makes that unconditional).
+
+pub fn matvec_i16_i32(
+    wt: &[i16],
+    x: &[i16],
+    bias: &[i32],
+    feat_pad: usize,
+    out: &mut [i32],
+) {
+    for (c, o) in out.iter_mut().enumerate() {
+        let row = &wt[c * feat_pad..(c + 1) * feat_pad];
+        let mut acc = bias[c];
+        for (&w, &xv) in row.iter().zip(x) {
+            acc = acc.wrapping_add((w as i32).wrapping_mul(xv as i32));
+        }
+        *o = acc;
+    }
+}
+
+pub fn accumulate_rows_i8(
+    table: &[i8],
+    feat_pad: usize,
+    nodes: &[u32],
+    out: &mut [i32],
+) {
+    for &v in nodes {
+        let row = &table[v as usize * feat_pad..(v as usize + 1) * feat_pad];
+        for (o, &x) in out.iter_mut().zip(row) {
+            *o = o.wrapping_add(x as i32);
+        }
+    }
+}

@@ -1,13 +1,25 @@
-//! PJRT runtime: loads the AOT artifacts emitted by `make artifacts`
-//! (HLO text + manifest.json) and executes them on the CPU PJRT client.
-//! This is the only place the `xla` crate is touched; python never runs
-//! on the training path.
+//! Execution runtimes: the PJRT path for AOT artifacts, the pure-rust
+//! host reference model, and the quantized integer kernels.
+//!
+//! * [`pjrt`] / [`artifact`] / [`step`] — load the AOT artifacts
+//!   emitted by `make artifacts` (HLO text + manifest.json) and
+//!   execute them on the CPU PJRT client. This is the only place the
+//!   `xla` crate is touched; python never runs on the training path.
+//! * [`host`] — the SGC-style host model: a pure-rust f32 reference
+//!   implementation with real logits and no artifact dependency.
+//! * [`kernels`] — i8/i16 integer SIMD kernels with runtime dispatch
+//!   (scalar / AVX2 / optional AVX-512), serving `i16q`-quantized
+//!   checkpoints ([`crate::ckpt::quant`]) through the host executor.
+//!   Every variant returns bitwise-identical accumulators, so kernel
+//!   choice is purely a throughput knob.
 
 pub mod artifact;
 pub mod host;
+pub mod kernels;
 pub mod pjrt;
 pub mod step;
 
 pub use artifact::{ArtifactMeta, IoSpec, Manifest};
+pub use kernels::KernelBackend;
 pub use pjrt::{Executable, Runtime};
 pub use step::{FullBatchState, InferState, TrainState};

@@ -13,11 +13,14 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use super::artifact::{ArtifactMeta, DType};
 
+/// A PJRT client plus compile/upload helpers.
 pub struct Runtime {
+    /// The underlying PJRT client (CPU platform).
     pub client: xla::PjRtClient,
 }
 
 impl Runtime {
+    /// Create the CPU PJRT client.
     pub fn cpu() -> Result<Runtime> {
         let client = xla::PjRtClient::cpu()
             .map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
@@ -31,6 +34,7 @@ impl Runtime {
         Ok(Executable { exe, meta: meta.clone(), client: self.client.clone() })
     }
 
+    /// Parse an HLO text file and compile it on this client.
     pub fn compile_file(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
         let proto = xla::HloModuleProto::from_text_file(path)
             .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
@@ -40,12 +44,14 @@ impl Runtime {
             .map_err(|e| anyhow!("compiling {}: {e:?}", path.display()))
     }
 
+    /// Upload an f32 host buffer with the given dims.
     pub fn buf_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
         self.client
             .buffer_from_host_buffer(data, dims, None)
             .map_err(|e| anyhow!("upload f32 {dims:?}: {e:?}"))
     }
 
+    /// Upload an i32 host buffer with the given dims.
     pub fn buf_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
         self.client
             .buffer_from_host_buffer(data, dims, None)
@@ -56,11 +62,14 @@ impl Runtime {
 /// One output of an execution, copied back to the host.
 #[derive(Clone, Debug)]
 pub enum HostValue {
+    /// An f32 output buffer.
     F32(Vec<f32>),
+    /// An i32 output buffer.
     I32(Vec<i32>),
 }
 
 impl HostValue {
+    /// The f32 payload, or an error for non-f32 outputs.
     pub fn f32(&self) -> Result<&[f32]> {
         match self {
             HostValue::F32(v) => Ok(v),
@@ -68,6 +77,7 @@ impl HostValue {
         }
     }
 
+    /// A single-element f32 output as a scalar.
     pub fn scalar_f32(&self) -> Result<f32> {
         let v = self.f32()?;
         if v.len() != 1 {
@@ -77,8 +87,10 @@ impl HostValue {
     }
 }
 
+/// A compiled artifact, ready to execute many times.
 pub struct Executable {
     exe: xla::PjRtLoadedExecutable,
+    /// The manifest record this executable was compiled from.
     pub meta: ArtifactMeta,
     client: xla::PjRtClient,
 }
@@ -137,6 +149,7 @@ impl Executable {
         Ok(host)
     }
 
+    /// The client this executable runs on (for uploading arguments).
     pub fn client(&self) -> &xla::PjRtClient {
         &self.client
     }

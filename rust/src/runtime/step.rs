@@ -28,20 +28,30 @@ pub fn init_param(shape: &[usize], rng: &mut Rng) -> Vec<f32> {
 
 /// Mini-batch training state over a `<name>.train` artifact.
 pub struct TrainState {
+    /// Compiled train-step executable.
     pub exe: Executable,
+    /// Compiled infer executable (validation), when loaded.
     pub infer: Option<Executable>,
+    /// Current parameter tensors, flattened.
     pub params: Vec<Vec<f32>>,
+    /// Adam first moments, per tensor.
     pub m: Vec<Vec<f32>>,
+    /// Adam second moments, per tensor.
     pub v: Vec<Vec<f32>>,
+    /// Step counter (Adam bias correction).
     pub t: u64,
+    /// Learning rate.
     pub lr: f32,
     /// Device-resident full feature table (resident mode).
     x_full: Option<xla::PjRtBuffer>,
     rt_client: xla::PjRtClient,
 }
 
+/// One train step's scalar outputs.
 pub struct StepOut {
+    /// Mean cross-entropy over the batch's real roots.
     pub loss: f32,
+    /// Correct top-1 predictions over the batch's real roots.
     pub correct: f32,
 }
 
@@ -170,7 +180,9 @@ impl TrainState {
 /// carries seed-initialized parameters and [`InferState::set_params`]
 /// installs trained ones.
 pub struct InferState {
+    /// Compiled infer executable.
     pub exe: Executable,
+    /// Installed parameter tensors, flattened.
     pub params: Vec<Vec<f32>>,
     /// Device-resident full feature table (resident mode).
     x_full: Option<xla::PjRtBuffer>,
@@ -382,11 +394,17 @@ fn run_infer(
 
 /// Full-batch GCN training state (`<name>_fb.train` artifacts).
 pub struct FullBatchState {
+    /// Compiled full-batch train-step executable.
     pub exe: Executable,
+    /// Current parameter tensors, flattened.
     pub params: Vec<Vec<f32>>,
+    /// Adam first moments, per tensor.
     pub m: Vec<Vec<f32>>,
+    /// Adam second moments, per tensor.
     pub v: Vec<Vec<f32>>,
+    /// Step counter (Adam bias correction).
     pub t: u64,
+    /// Learning rate.
     pub lr: f32,
     // resident graph inputs
     x: xla::PjRtBuffer,
@@ -399,13 +417,19 @@ pub struct FullBatchState {
     client: xla::PjRtClient,
 }
 
+/// One full-batch step's scalar outputs.
 pub struct FullBatchOut {
+    /// Training-mask cross-entropy.
     pub loss: f32,
+    /// Training-split accuracy this step.
     pub acc_train: f32,
+    /// Validation-split accuracy this step.
     pub acc_val: f32,
 }
 
 impl FullBatchState {
+    /// Compile the full-batch artifact, initialize parameters from
+    /// `seed` and upload the normalized edge list + masks once.
     pub fn new(
         rt: &Runtime,
         meta: &ArtifactMeta,
@@ -484,6 +508,7 @@ impl FullBatchState {
         })
     }
 
+    /// Execute one full-batch training step.
     pub fn step(&mut self, n_train: usize, n_val: usize) -> Result<FullBatchOut> {
         self.t += 1;
         let meta = self.exe.meta.clone();

@@ -47,6 +47,7 @@ use crate::obs::{
     TRACK_BATCHER, TRACK_CLIENT, TRACK_WATCHER,
 };
 use crate::runtime::artifact::{default_dir, ArtifactMeta, Manifest, SpecMeta};
+use crate::runtime::kernels::KernelBackend;
 use crate::sampler::SamplerKind;
 use crate::runtime::{InferState, Runtime};
 use crate::stream::{
@@ -61,8 +62,8 @@ use super::cache::{CacheStats, FeatureCacheConfig, ShardedFeatureCache};
 use super::loadgen::{self, Arrival, ClientCtx, LoadConfig, ReqRecord};
 use super::queue::{Pop, RequestQueue};
 use super::shard::{
-    route_batch, LabelCell, LabelSnapshot, ShardReport, ShardStatsCell,
-    SpillPolicy,
+    route_batch, ExecCell, ExecReport, LabelCell, LabelSnapshot, ShardReport,
+    ShardStatsCell, SpillPolicy,
 };
 use super::worker::{
     shard_worker_loop, HostExecutor, InferExecutor, PjrtExecutor, WorkerCtx,
@@ -111,6 +112,13 @@ pub struct ServeConfig {
     pub sample_p: f64,
     /// Engine seed (batcher bias draws, per-worker RNG streams).
     pub seed: u64,
+    /// Kernel dispatch for the host executor's quantized integer path
+    /// (`kernel=auto|scalar|avx2`, plus `avx512` when compiled in):
+    /// `auto` picks the best variant the CPU supports (overridable via
+    /// the `COMM_RAND_KERNEL` env var); naming a variant forces it and
+    /// errors at startup if unavailable — it never silently degrades.
+    /// Every variant returns bitwise-identical accumulators.
+    pub kernel: String,
     /// Checkpoint to serve (`ckpt=`): a file, or a directory whose
     /// newest checkpoint is loaded. Validated (CRC + community
     /// fingerprint) and installed into the executor before the clock
@@ -180,6 +188,7 @@ impl ServeConfig {
             sampler: SamplerKind::Uniform,
             sample_p: 0.9,
             seed: 0,
+            kernel: "auto".to_string(),
             ckpt: None,
             ckpt_watch_ms: 0,
             cache_warm: false,
@@ -291,6 +300,12 @@ pub struct ServeReport {
     pub n_shards: usize,
     /// Spill policy label.
     pub spill: String,
+    /// Executor timing per execution dtype, merged over shards — one
+    /// entry per dtype that served at least one batch (`"f32"`,
+    /// `"i16q"`). A run that hot-swapped a quantized checkpoint in
+    /// mid-flight shows both, and the per-dtype mean is the number the
+    /// `exp quant` throughput gate reads.
+    pub execute: Vec<ExecReport>,
     /// Per-shard breakdown (one entry even when `n_shards == 1`).
     pub shards: Vec<ShardReport>,
     /// Streaming-mutation telemetry (`mutate=RATE` runs only): churn
@@ -342,6 +357,10 @@ impl ServeReport {
             ("n_shards", num(self.n_shards as f64)),
             ("spill", s(&self.spill)),
             (
+                "execute",
+                arr(self.execute.iter().map(|e| e.to_json()).collect()),
+            ),
+            (
                 "shards",
                 arr(self.shards.iter().map(|sh| sh.to_json()).collect()),
             ),
@@ -369,6 +388,11 @@ impl ServeReport {
         } else {
             "n/a".to_string()
         };
+        let exec_tail: String = self
+            .execute
+            .iter()
+            .map(|e| format!(" | exec {} {:.0}µs/batch", e.dtype, e.mean_us))
+            .collect();
         let stream_tail = match &self.stream {
             Some(st) => format!(
                 " | churn {:.0}/s ({}) epochs {} waves {} moved {} \
@@ -391,7 +415,7 @@ impl ServeReport {
              params v{} swaps {} | lat ms p50 {:.2} p95 {:.2} p99 {:.2} \
              | miss-deadline {:.1}% | shed {} ({:.1}%) degraded {} | \
              cache hit {:.1}% | {:.1} req/batch | dedup x{:.2} | \
-             foreign {}{}",
+             foreign {}{}{}",
             self.dataset,
             self.executor,
             self.sampler,
@@ -417,6 +441,7 @@ impl ServeReport {
             self.mean_batch_size,
             self.dedup_factor,
             self.foreign_requests(),
+            exec_tail,
             stream_tail,
         )
     }
@@ -473,21 +498,27 @@ pub fn build_executor(
     preset: &DatasetPreset,
     ds: &Dataset,
     cfg: &ServeConfig,
-) -> (Box<dyn InferExecutor>, ArtifactMeta) {
+) -> Result<(Box<dyn InferExecutor>, ArtifactMeta)> {
+    // the kernel knob resolves before any executor is built: a forced
+    // but unavailable variant is a startup error on every path, never
+    // a silent degrade
+    let backend = KernelBackend::resolve(&cfg.kernel)?;
     match try_pjrt_executor(preset, ds, cfg.seed) {
         Ok((exec, meta)) => {
             println!("[serve] executor: pjrt ({}.infer)", preset.artifact);
-            (Box::new(exec), meta)
+            Ok((Box::new(exec), meta))
         }
         Err(e) => {
             eprintln!(
                 "[serve] PJRT unavailable ({e:#}); using the host \
-                 reference executor (real logits, pure rust)"
+                 reference executor (real logits, pure rust, \
+                 kernel={})",
+                backend.name(),
             );
-            (
-                Box::new(HostExecutor::new(ds, cfg.seed)),
+            Ok((
+                Box::new(HostExecutor::with_backend(ds, cfg.seed, backend)?),
                 synthetic_infer_meta(ds, cfg.batch_size, &cfg.fanouts),
-            )
+            ))
         }
     }
 }
@@ -1205,8 +1236,12 @@ pub fn run(
     let mut stats_requests = 0usize;
     let mut stats_input_nodes = 0usize;
     let mut stats_frontier_refs = 0u64;
+    let mut exec_f32 = ExecCell::default();
+    let mut exec_i16 = ExecCell::default();
     for (sidx, cell) in shard_cells.into_iter().enumerate() {
         let cell = cell.into_inner().unwrap();
+        exec_f32.merge(&cell.exec_f32);
+        exec_i16.merge(&cell.exec_i16);
         let cstats = caches[sidx].stats();
         cache_stats.hits += cstats.hits;
         cache_stats.misses += cstats.misses;
@@ -1290,6 +1325,10 @@ pub fn run(
         cache_rows: caches.iter().map(|c| c.rows()).sum(),
         n_shards,
         spill: scfg.spill.name().to_string(),
+        execute: [exec_f32.report("f32"), exec_i16.report("i16q")]
+            .into_iter()
+            .flatten()
+            .collect(),
         shards: shard_reports,
         stream: stream_report,
     })
@@ -1527,12 +1566,17 @@ mod tests {
         scfg.fanouts = vec![5, 5];
         scfg.cache_warm = true;
         let meta = synthetic_infer_meta(&ds, scfg.batch_size, &scfg.fanouts);
-        let exec = super::super::worker::HostExecutor::new(&ds, 0);
+        let exec = super::super::worker::HostExecutor::new(&ds, 0).unwrap();
         let lcfg = closed(4, 25, 3);
         let rep = run(&ds, &meta, &exec, &scfg, &lcfg).unwrap();
         assert_eq!(rep.requests, 100);
         assert_eq!(rep.errors, 0);
         assert_eq!(rep.executor, "host");
+        // seed parameters are f32: the execute breakdown must show
+        // exactly one dtype covering every batch
+        assert_eq!(rep.execute.len(), 1);
+        assert_eq!(rep.execute[0].dtype, "f32");
+        assert_eq!(rep.execute[0].batches as usize, rep.batches);
         assert_eq!(
             rep.evaluated, 100,
             "host executor must produce logits for every reply"

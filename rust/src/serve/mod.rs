@@ -79,7 +79,10 @@ pub use crate::sampler::SamplerKind;
 pub use engine::{run, ServeConfig, ServeReport};
 pub use loadgen::{Arrival, LoadConfig};
 pub use queue::RequestQueue;
-pub use shard::{LabelCell, LabelSnapshot, ShardPlan, ShardReport, SpillPolicy};
+pub use shard::{
+    ExecCell, ExecReport, LabelCell, LabelSnapshot, ShardPlan, ShardReport,
+    SpillPolicy,
+};
 pub use worker::{
     HostExecutor, InferExecutor, InferOut, NullExecutor, PjrtExecutor,
 };

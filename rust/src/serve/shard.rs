@@ -30,7 +30,7 @@ use anyhow::{bail, Result};
 
 use crate::ckpt::format::community_fingerprint;
 use crate::obs::LogHist;
-use crate::util::json::{num, obj, Json};
+use crate::util::json::{arr, num, obj, s, Json};
 
 use super::Request;
 
@@ -392,6 +392,93 @@ pub struct ShardStatsCell {
     /// per-shard percentiles — and the Prometheus snapshot — all read
     /// the *same* buckets and can never disagree.
     pub lat_us: LogHist,
+    /// Executor timing for batches served on the f32 path.
+    pub exec_f32: ExecCell,
+    /// Executor timing for batches served on the quantized (`i16q`)
+    /// integer-kernel path.
+    pub exec_i16: ExecCell,
+}
+
+/// Per-dtype executor timing, folded by the shard worker after each
+/// error-free batch ([`BatchOutcome::execute_us`], the
+/// `ctx.exec.infer` window only — batch assembly excluded, so the f32
+/// vs `i16q` comparison isolates exactly the work quantization
+/// changes).
+///
+/// [`BatchOutcome::execute_us`]: super::worker::BatchOutcome::execute_us
+#[derive(Clone, Debug, Default)]
+pub struct ExecCell {
+    /// Micro-batches executed at this dtype.
+    pub batches: u64,
+    /// Requests those batches carried.
+    pub requests: u64,
+    /// Total executor wall time, µs.
+    pub total_us: u64,
+    /// Per-batch executor wall-time histogram, µs (log-bucketed and
+    /// mergeable like the latency histogram).
+    pub us: LogHist,
+}
+
+impl ExecCell {
+    /// Roll this cell into its report slice (`None` when no batch ran
+    /// at this dtype — the report only lists dtypes that executed).
+    pub fn report(&self, dtype: &'static str) -> Option<ExecReport> {
+        if self.batches == 0 {
+            return None;
+        }
+        Some(ExecReport {
+            dtype,
+            batches: self.batches,
+            requests: self.requests,
+            total_us: self.total_us,
+            mean_us: self.total_us as f64 / self.batches as f64,
+            p50_us: self.us.quantile(0.5),
+            p99_us: self.us.quantile(0.99),
+        })
+    }
+
+    /// Fold another cell into this one (the engine merges every
+    /// shard's cells into the run-wide per-dtype breakdown).
+    pub fn merge(&mut self, other: &ExecCell) {
+        self.batches += other.batches;
+        self.requests += other.requests;
+        self.total_us += other.total_us;
+        self.us.merge(&other.us);
+    }
+}
+
+/// One dtype's executor-timing slice of the end-of-run report.
+#[derive(Clone, Copy, Debug)]
+pub struct ExecReport {
+    /// Execution dtype (`"f32"` / `"i16q"`).
+    pub dtype: &'static str,
+    /// Micro-batches executed at this dtype.
+    pub batches: u64,
+    /// Requests those batches carried.
+    pub requests: u64,
+    /// Total executor wall time, µs.
+    pub total_us: u64,
+    /// Mean executor wall time per micro-batch, µs.
+    pub mean_us: f64,
+    /// Median per-batch executor wall time, µs.
+    pub p50_us: u64,
+    /// 99th-percentile per-batch executor wall time, µs.
+    pub p99_us: u64,
+}
+
+impl ExecReport {
+    /// Serialize one dtype's executor-timing slice.
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("dtype", s(self.dtype)),
+            ("batches", num(self.batches as f64)),
+            ("requests", num(self.requests as f64)),
+            ("total_us", num(self.total_us as f64)),
+            ("mean_us", num(self.mean_us)),
+            ("p50_us", num(self.p50_us as f64)),
+            ("p99_us", num(self.p99_us as f64)),
+        ])
+    }
 }
 
 /// Per-shard slice of the end-of-run report.
@@ -458,6 +545,10 @@ pub struct ShardReport {
     pub cache_lookups: u64,
     /// hits / lookups, 0 when the cache was never touched.
     pub cache_hit_rate: f64,
+    /// Executor timing per execution dtype — one entry per dtype that
+    /// actually served a batch here, so a run that hot-swapped from an
+    /// f32 to a quantized checkpoint shows both.
+    pub execute: Vec<ExecReport>,
 }
 
 impl ShardReport {
@@ -501,6 +592,13 @@ impl ShardReport {
             stale_hits: cache.stale_hits,
             cache_lookups: cache.lookups,
             cache_hit_rate: cache.hit_rate(),
+            execute: [
+                cell.exec_f32.report("f32"),
+                cell.exec_i16.report("i16q"),
+            ]
+            .into_iter()
+            .flatten()
+            .collect(),
         }
     }
 
@@ -530,6 +628,10 @@ impl ShardReport {
             ("stale_hits", num(self.stale_hits as f64)),
             ("cache_lookups", num(self.cache_lookups as f64)),
             ("cache_hit_rate", num(self.cache_hit_rate)),
+            (
+                "execute",
+                arr(self.execute.iter().map(|e| e.to_json()).collect()),
+            ),
         ])
     }
 }

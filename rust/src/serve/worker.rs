@@ -34,11 +34,15 @@ use std::sync::{Arc, Mutex};
 use anyhow::{bail, Result};
 
 use crate::batch::assemble;
+use crate::ckpt::quant::{pick_exp, rounded_div, FEAT_LIMIT, FEAT_MAX_EXP};
 use crate::ckpt::ParamVersion;
 use crate::graph::{Dataset, Topology};
 use crate::obs::{EventKind, Recorder, TRACK_CLIENT};
 use crate::runtime::artifact::ArtifactMeta;
 use crate::runtime::host;
+use crate::runtime::kernels::{
+    accumulate_rows_i8, matvec_i16_i32, pad_to_lanes, KernelBackend,
+};
 use crate::runtime::InferState;
 use crate::sampler::{build_mfg, build_mfg_labor, NeighborPolicy, SamplerKind};
 use crate::stream::StreamState;
@@ -57,6 +61,10 @@ pub struct InferOut {
     pub logits: Vec<f32>,
     /// Parameter version used for this batch.
     pub param_version: u64,
+    /// Execution dtype of the installed parameters: `"f32"` for the
+    /// float path, `"i16q"` when the quantized integer kernels ran.
+    /// Feeds the per-dtype execute breakdown in the serve report.
+    pub dtype: &'static str,
 }
 
 /// Inference backend driven by the worker pool.
@@ -102,7 +110,7 @@ impl InferExecutor for NullExecutor {
     }
 
     fn infer(&self, _batch: &crate::batch::PaddedBatch) -> Result<InferOut> {
-        Ok(InferOut { logits: Vec::new(), param_version: 0 })
+        Ok(InferOut { logits: Vec::new(), param_version: 0, dtype: "f32" })
     }
 }
 
@@ -111,37 +119,211 @@ impl InferExecutor for NullExecutor {
 /// therefore real top-1 accuracy — with no artifacts and no PJRT, and
 /// the default artifact-less executor since the checkpoint subsystem
 /// landed. Parameters hot-swap via [`InferExecutor::try_install`].
+///
+/// Two execution engines live behind the install seam:
+///
+/// * **f32** — the scalar [`host::logits_into`] reference path, used
+///   for seed parameters and plain f32 checkpoints.
+/// * **i16q** — when an `i16q` checkpoint installs, the weights run
+///   through the integer SIMD kernels ([`crate::runtime::kernels`])
+///   against a pre-quantized activation table: raw features quantized
+///   to i8 at one table-wide power-of-two scale, aggregated over
+///   `{v} ∪ N(v)` with [`accumulate_rows_i8`] and rounded-divided by
+///   the closed-neighborhood size — the integer mirror of
+///   [`host::aggregate_table`]. Install proves the per-class i32
+///   accumulator bound (`max|x| · Σ|w| + |bias| ≤ i32::MAX`) and
+///   fails the swap loudly if the checkpoint could overflow.
+///
+/// A mixed-dtype hot swap (f32 → i16q or back) is just an engine
+/// replacement at a micro-batch boundary: in-flight batches finish on
+/// the engine they snapshotted.
 pub struct HostExecutor {
     /// 1-hop aggregated feature table (`n * feat_dim`), built once.
     agg: Vec<f32>,
+    /// Integer activation table for the quantized engine: the same
+    /// closed-neighborhood mean, quantized at scale `2^qagg_exp`,
+    /// zero-padded rows of `feat_pad` i16.
+    qagg: Vec<i16>,
+    /// Power-of-two scale exponent of `qagg`.
+    qagg_exp: u32,
+    /// `feat_dim` rounded up to the kernel lane width.
+    feat_pad: usize,
+    /// Kernel variant every quantized batch dispatches to (resolved
+    /// once, at construction).
+    backend: KernelBackend,
     feat_dim: usize,
     num_classes: usize,
-    /// Installed parameters + their version (0 = seed init).
-    cur: Mutex<InstalledParams>,
+    /// Installed engine + its parameter version (0 = seed init).
+    cur: Mutex<(HostEngine, u64)>,
 }
 
-/// A host executor's installed parameter snapshot and its version.
-type InstalledParams = (Arc<Vec<Vec<f32>>>, u64);
+/// The parameter representation a host batch executes against.
+enum HostEngine {
+    /// Scalar f32 path over the raw checkpoint tensors.
+    F32(Arc<Vec<Vec<f32>>>),
+    /// Quantized integer path (prepared by `HostExecutor::quant_model`).
+    Quant(Arc<QuantHostModel>),
+}
+
+/// An installed quantized parameter set, laid out for the kernels.
+struct QuantHostModel {
+    /// Class-major transposed weights: `num_classes` rows of
+    /// `feat_pad` i16 (zero-padded), so one [`matvec_i16_i32`] row
+    /// sweep is one logit.
+    wt: Vec<i16>,
+    /// Bias at the combined weight×activation scale.
+    bias: Vec<i32>,
+    /// `1 / 2^(w_exp + qagg_exp)` — multiplying an i32 accumulator by
+    /// this dequantizes it to an f32 logit exactly.
+    out_scale: f32,
+}
 
 impl HostExecutor {
-    /// Build the aggregation table and seed-initialize parameters
+    /// [`HostExecutor::with_backend`] with the `kernel=auto` dispatch
+    /// rule (honors the `COMM_RAND_KERNEL` env override).
+    pub fn new(ds: &Dataset, seed: u64) -> Result<HostExecutor> {
+        HostExecutor::with_backend(ds, seed, KernelBackend::resolve("auto")?)
+    }
+
+    /// Build both engines' tables and seed-initialize parameters
     /// (version 0) — `seed` matches the host trainer's init stream, so
-    /// an untrained serving run reports true "seed parameter" accuracy.
-    pub fn new(ds: &Dataset, seed: u64) -> HostExecutor {
-        HostExecutor {
+    /// an untrained serving run reports true "seed parameter"
+    /// accuracy. Errors if the dataset's features cannot be quantized
+    /// (non-finite, or magnitude beyond the i8 range at scale 1).
+    pub fn with_backend(
+        ds: &Dataset,
+        seed: u64,
+        backend: KernelBackend,
+    ) -> Result<HostExecutor> {
+        let n = ds.n();
+        let f = ds.feat_dim;
+        let feat_pad = pad_to_lanes(f);
+
+        // one table-wide activation scale: every row must share it for
+        // the aggregation (and the matvec) to be a plain integer sum
+        let mut max_abs = 0f32;
+        for v in 0..n as u32 {
+            for &x in ds.feature_row(v) {
+                if !x.is_finite() {
+                    bail!("feature table has a non-finite value at node {v}");
+                }
+                max_abs = max_abs.max(x.abs());
+            }
+        }
+        let qagg_exp = pick_exp(max_abs, FEAT_LIMIT, FEAT_MAX_EXP)?;
+        let scale = (1u64 << qagg_exp) as f32;
+        let mut qfeat = vec![0i8; n * feat_pad];
+        for v in 0..n {
+            let row = ds.feature_row(v as u32);
+            let dst = &mut qfeat[v * feat_pad..v * feat_pad + f];
+            for (d, &x) in dst.iter_mut().zip(row) {
+                *d = (x * scale).round() as i8;
+            }
+        }
+
+        // integer closed-neighborhood mean via the aggregation kernel
+        // (the same kernel the equivalence suite pins across variants)
+        let mut qagg = vec![0i16; n * feat_pad];
+        let mut acc = vec![0i32; feat_pad];
+        for v in 0..n as u32 {
+            acc.fill(0);
+            let nbrs = ds.csr.neighbors(v);
+            accumulate_rows_i8(backend, &qfeat, feat_pad, &[v], &mut acc);
+            accumulate_rows_i8(backend, &qfeat, feat_pad, nbrs, &mut acc);
+            let d = (nbrs.len() + 1) as i32;
+            let dst = &mut qagg[v as usize * feat_pad..][..feat_pad];
+            for (o, &a) in dst.iter_mut().zip(&acc) {
+                // mean of i8 values stays in the i8 range, so the i16
+                // store is lossless
+                *o = rounded_div(a, d) as i16;
+            }
+        }
+
+        Ok(HostExecutor {
             agg: host::aggregate_table(ds),
-            feat_dim: ds.feat_dim,
+            qagg,
+            qagg_exp,
+            feat_pad,
+            backend,
+            feat_dim: f,
             num_classes: ds.num_classes,
             cur: Mutex::new((
-                Arc::new(host::init_params(ds.feat_dim, ds.num_classes, seed)),
+                HostEngine::F32(Arc::new(host::init_params(
+                    f,
+                    ds.num_classes,
+                    seed,
+                ))),
                 0,
             )),
-        }
+        })
     }
 
     /// The installed parameter version (0 until a checkpoint lands).
     pub fn param_version(&self) -> u64 {
         self.cur.lock().unwrap().1
+    }
+
+    /// The kernel variant quantized batches run on.
+    pub fn backend(&self) -> KernelBackend {
+        self.backend
+    }
+
+    /// Execution dtype of the installed engine (`"f32"` / `"i16q"`).
+    pub fn dtype(&self) -> &'static str {
+        match self.cur.lock().unwrap().0 {
+            HostEngine::F32(_) => "f32",
+            HostEngine::Quant(_) => "i16q",
+        }
+    }
+
+    /// Lay a quantized checkpoint out for the kernels: transpose the
+    /// feature-major `W` into class-major zero-padded i16 rows,
+    /// re-quantize the (exactly dequantized) bias at the combined
+    /// weight×activation scale, and prove the i32 accumulator bound
+    /// for every class — a checkpoint that could overflow is refused
+    /// here, at install time, not discovered as wrapped logits later.
+    fn quant_model(
+        &self,
+        version: &ParamVersion,
+    ) -> Result<QuantHostModel> {
+        let Some(qts) = version.quant.as_ref() else {
+            bail!("quant_model on a non-quantized parameter version");
+        };
+        let (f, c, fp) = (self.feat_dim, self.num_classes, self.feat_pad);
+        let w = &qts[0];
+        let mut wt = vec![0i16; c * fp];
+        for k in 0..f {
+            for (cls, row) in wt.chunks_exact_mut(fp).enumerate() {
+                row[k] = w.q[k * c + cls];
+            }
+        }
+        let comb_exp = w.exp + self.qagg_exp;
+        let comb = (1u64 << comb_exp) as f64;
+        let mut bias = Vec::with_capacity(c);
+        for &b in &version.params[1] {
+            let r = (b as f64 * comb).round();
+            if r.abs() > i32::MAX as f64 {
+                bail!(
+                    "quantized bias {b} overflows i32 at combined scale \
+                     2^{comb_exp}"
+                );
+            }
+            bias.push(r as i32);
+        }
+        let x_max =
+            self.qagg.iter().map(|&x| (x as i64).abs()).max().unwrap_or(0);
+        for (cls, row) in wt.chunks_exact(fp).enumerate() {
+            let wsum: i64 = row.iter().map(|&x| (x as i64).abs()).sum();
+            let bound = x_max * wsum + (bias[cls] as i64).abs();
+            if bound > i32::MAX as i64 {
+                bail!(
+                    "quantized accumulator for class {cls} could reach \
+                     {bound} (> i32::MAX): checkpoint is out of the \
+                     integer envelope, refusing to install it"
+                );
+            }
+        }
+        Ok(QuantHostModel { wt, bias, out_scale: (1.0 / comb) as f32 })
     }
 }
 
@@ -155,25 +337,67 @@ impl InferExecutor for HostExecutor {
     }
 
     fn infer(&self, batch: &crate::batch::PaddedBatch) -> Result<InferOut> {
-        // snapshot the installed version: the whole batch runs on it
-        let (params, version) = {
+        // snapshot the installed engine: the whole batch runs on it
+        let (engine, version) = {
             let g = self.cur.lock().unwrap();
-            (g.0.clone(), g.1)
+            let e = match &g.0 {
+                HostEngine::F32(p) => HostEngine::F32(p.clone()),
+                HostEngine::Quant(m) => HostEngine::Quant(m.clone()),
+            };
+            (e, g.1)
         };
         let c = self.num_classes;
         let f = self.feat_dim;
         let mut logits = vec![0f32; batch.roots.len() * c];
-        for (i, &v) in batch.roots.iter().enumerate() {
-            let feat = &self.agg[v as usize * f..(v as usize + 1) * f];
-            host::logits_into(&params, feat, &mut logits[i * c..(i + 1) * c]);
-        }
-        Ok(InferOut { logits, param_version: version })
+        let dtype = match engine {
+            HostEngine::F32(params) => {
+                for (i, &v) in batch.roots.iter().enumerate() {
+                    let feat =
+                        &self.agg[v as usize * f..(v as usize + 1) * f];
+                    host::logits_into(
+                        &params,
+                        feat,
+                        &mut logits[i * c..(i + 1) * c],
+                    );
+                }
+                "f32"
+            }
+            HostEngine::Quant(m) => {
+                let fp = self.feat_pad;
+                let mut acc = vec![0i32; c];
+                for (i, &v) in batch.roots.iter().enumerate() {
+                    let x = &self.qagg[v as usize * fp..][..fp];
+                    matvec_i16_i32(
+                        self.backend,
+                        &m.wt,
+                        x,
+                        &m.bias,
+                        fp,
+                        &mut acc,
+                    );
+                    for (o, &a) in
+                        logits[i * c..(i + 1) * c].iter_mut().zip(&acc)
+                    {
+                        // exact: the accumulator is within the proven
+                        // envelope and out_scale is a power of two
+                        *o = a as f32 * m.out_scale;
+                    }
+                }
+                "i16q"
+            }
+        };
+        Ok(InferOut { logits, param_version: version, dtype })
     }
 
     fn try_install(&self, version: &Arc<ParamVersion>) -> Result<()> {
         host::check_params(&version.params, self.feat_dim, self.num_classes)?;
+        let engine = if version.quant.is_some() {
+            HostEngine::Quant(Arc::new(self.quant_model(version)?))
+        } else {
+            HostEngine::F32(Arc::new(version.params.clone()))
+        };
         let mut g = self.cur.lock().unwrap();
-        *g = (Arc::new(version.params.clone()), version.version);
+        *g = (engine, version.version);
         Ok(())
     }
 }
@@ -216,7 +440,9 @@ impl InferExecutor for PjrtExecutor {
         let g = self.state.lock().unwrap();
         let logits = g.infer(batch)?;
         let param_version = self.installed.load(Ordering::Acquire);
-        Ok(InferOut { logits, param_version })
+        // PJRT always executes the exact dequantized f32 view, even
+        // for an i16q checkpoint (set_params takes version.params)
+        Ok(InferOut { logits, param_version, dtype: "f32" })
     }
 
     fn try_install(&self, version: &Arc<ParamVersion>) -> Result<()> {
@@ -278,6 +504,12 @@ pub struct BatchOutcome {
     /// Parameter version the batch was served with (meaningful only
     /// when `errors == 0`).
     pub param_version: u64,
+    /// Wall time of the executor call alone (assemble excluded):
+    /// `ctx.exec.infer` entry to return, in µs.
+    pub execute_us: u64,
+    /// Execution dtype the batch ran at (`"f32"` / `"i16q"`; empty
+    /// when the batch errored before executing).
+    pub dtype: &'static str,
 }
 
 /// One shard worker: drain the shard's batch channel until it closes,
@@ -335,6 +567,19 @@ pub fn shard_worker_loop(
             // the engine's global percentile definition
             for &a in &arrives {
                 g.lat_us.record(now.saturating_sub(a));
+            }
+            // per-dtype executor timing (batches that errored never
+            // reached — or never finished — the executor)
+            let exec = match out.dtype {
+                "i16q" => Some(&mut g.exec_i16),
+                "f32" => Some(&mut g.exec_f32),
+                _ => None,
+            };
+            if let Some(e) = exec {
+                e.batches += 1;
+                e.requests += out.requests as u64;
+                e.total_us += out.execute_us;
+                e.us.record(out.execute_us);
             }
             // hot-swap accounting. `param_version` tracks the highest
             // version served (monotone by construction, so a batch
@@ -535,6 +780,10 @@ pub fn process_batch(
     }
 
     let t_exec = if enabled { ctx.rec.now_us() } else { 0 };
+    // executor-only wall time: the window the per-dtype execute stats
+    // aggregate (assemble stays outside — it is the same work for
+    // every dtype and would dilute the f32-vs-i16q comparison)
+    let mut exec_us = 0u64;
     let result: Result<InferOut> =
         assemble(&mfg, ds, ctx.meta, false).and_then(|mut batch| {
             if let Some(x0) = batch.x0.as_mut() {
@@ -542,7 +791,10 @@ pub fn process_batch(
                 // cache-staged rows, not assemble's own table gather
                 x0[..staged.len()].copy_from_slice(&staged);
             }
-            ctx.exec.infer(&batch)
+            let t0 = ctx.clock.now_us();
+            let out = ctx.exec.infer(&batch);
+            exec_us = ctx.clock.now_us().saturating_sub(t0);
+            out
         });
     if enabled {
         let end = ctx.rec.now_us();
@@ -565,12 +817,15 @@ pub fn process_batch(
         frontier_refs: refs,
         errors: 0,
         param_version: 0,
+        execute_us: exec_us,
+        dtype: "",
     };
     let now = ctx.clock.now_us();
     let bsz = reqs.len();
     match result {
         Ok(out) => {
             outcome.param_version = out.param_version;
+            outcome.dtype = out.dtype;
             let logits = out.logits;
             let nc = ctx.exec.num_classes().max(1);
             for r in reqs {
@@ -638,7 +893,7 @@ pub fn process_batch(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::ckpt::{Checkpoint, CkptMeta, ParamStore};
+    use crate::ckpt::{Checkpoint, CkptMeta, ParamStore, ParamVersion};
     use crate::config::preset;
     use crate::serve::cache::FeatureCacheConfig;
     use crate::serve::engine::synthetic_infer_meta;
@@ -834,7 +1089,7 @@ mod tests {
             ds.n(),
             ds.feat_dim,
         ));
-        let exec = HostExecutor::new(&ds, 0);
+        let exec = HostExecutor::new(&ds, 0).unwrap();
         assert_eq!(exec.param_version(), 0);
         let clock = ServeClock::start();
         let rec = Recorder::disabled();
@@ -902,6 +1157,117 @@ mod tests {
         let vbad = store.publish(bad, "mem".into());
         assert!(exec.try_install(&vbad).is_err());
         assert_eq!(exec.param_version(), 1);
+    }
+
+    /// A quantized checkpoint hot-swaps the host executor onto the
+    /// integer engine: dtype flips to `i16q`, the served logits match
+    /// a naive integer reference bit for bit, a later f32 checkpoint
+    /// swaps back, and an out-of-envelope quantized version is refused
+    /// without disturbing the installed engine.
+    #[test]
+    fn host_executor_installs_quantized_checkpoints() {
+        let ds = tiny();
+        let meta = synthetic_infer_meta(&ds, 8, &[5, 5]);
+        let cache = ShardedFeatureCache::new(&FeatureCacheConfig::for_dataset(
+            ds.n(),
+            ds.feat_dim,
+        ));
+        let exec = HostExecutor::new(&ds, 0).unwrap();
+        assert_eq!(exec.dtype(), "f32");
+        let store = ParamStore::new();
+        let shapes = crate::runtime::host::param_shapes(
+            ds.feat_dim,
+            ds.num_classes,
+        );
+        let meta_ck = CkptMeta::for_run(&ds, "host-sgc", "t", 0, shapes);
+        let params = crate::runtime::host::init_params(
+            ds.feat_dim,
+            ds.num_classes,
+            99,
+        );
+        let ck = Checkpoint::new(meta_ck.clone(), params.clone()).unwrap();
+        let qck = crate::ckpt::quantize_checkpoint(&ck).unwrap();
+        let qts = qck.quant.clone().unwrap();
+        let v = store.publish(qck, "mem".into());
+        exec.try_install(&v).unwrap();
+        assert_eq!(exec.dtype(), "i16q");
+        assert_eq!(exec.param_version(), 1);
+
+        let clock = ServeClock::start();
+        let rec = Recorder::disabled();
+        let ctx = WorkerCtx {
+            ds: &ds,
+            meta: &meta,
+            cache: &cache,
+            exec: &exec,
+            clock: &clock,
+            stream: None,
+            rec: &rec,
+            track: 0,
+            sampler: SamplerKind::Uniform,
+            sample_p: 0.9,
+        };
+        let snap = LabelSnapshot::initial(&ds.community, ds.num_comms, 1);
+        let (tx, rx) = mpsc::channel();
+        let nodes = [4u32, 9, 31];
+        let reqs: Vec<Request> = nodes
+            .iter()
+            .enumerate()
+            .map(|(i, &n)| mk_req(i as u64, n, ds.labels[n as usize], &tx))
+            .collect();
+        let mut rng = Rng::new(3);
+        let out = process_batch(&ctx, &snap, reqs, &mut rng);
+        assert_eq!(out.errors, 0);
+        assert_eq!(out.dtype, "i16q");
+        drop(tx);
+        let replies: Vec<Reply> = rx.iter().collect();
+        assert_eq!(replies.len(), 3);
+
+        // naive integer reference computed straight from the quantized
+        // tensors and the executor's activation table — the served
+        // logits must match it bit for bit
+        let (c, fp) = (ds.num_classes, exec.feat_pad);
+        let comb = (1u64 << (qts[0].exp + exec.qagg_exp)) as f64;
+        let out_scale = (1.0 / comb) as f32;
+        for r in &replies {
+            let x = &exec.qagg[r.node as usize * fp..][..fp];
+            for (cls, &got) in r.logits.iter().enumerate() {
+                let mut acc = (v.params[1][cls] as f64 * comb).round() as i32;
+                for (k, &xv) in x.iter().enumerate().take(ds.feat_dim) {
+                    let w = qts[0].q[k * c + cls] as i32;
+                    acc = acc.wrapping_add(w.wrapping_mul(xv as i32));
+                }
+                let want = acc as f32 * out_scale;
+                assert_eq!(
+                    got.to_bits(),
+                    want.to_bits(),
+                    "node {} class {cls}: {got} != {want}",
+                    r.node
+                );
+            }
+        }
+
+        // a plain f32 checkpoint swaps the engine back
+        let ck2 = Checkpoint::new(meta_ck.clone(), params).unwrap();
+        let v2 = store.publish(ck2, "mem".into());
+        exec.try_install(&v2).unwrap();
+        assert_eq!(exec.dtype(), "f32");
+        assert_eq!(exec.param_version(), 2);
+
+        // an out-of-envelope quantized version (bias beyond i32 at the
+        // combined scale) is refused and leaves the engine alone
+        let mut bad = ParamVersion {
+            version: 3,
+            params: v.params.clone(),
+            quant: v.quant.clone(),
+            meta: v.meta.clone(),
+            source: "mem".into(),
+        };
+        bad.params[1][0] = 1.0e9;
+        let err = exec.try_install(&Arc::new(bad)).unwrap_err();
+        assert!(format!("{err:#}").contains("overflows i32"), "{err:#}");
+        assert_eq!(exec.dtype(), "f32");
+        assert_eq!(exec.param_version(), 2);
     }
 
     /// The no-op executor cannot serve a checkpoint: the default

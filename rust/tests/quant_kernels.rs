@@ -1,0 +1,281 @@
+//! Kernel-equivalence suite for the quantized inference path.
+//!
+//! The dispatch contract (`runtime::kernels`) is that every backend —
+//! scalar, AVX2, and AVX-512 when compiled in — returns **bitwise
+//! identical** i32 accumulators, so the `kernel=` knob is purely a
+//! throughput choice. These tests pin that contract at three levels:
+//!
+//! 1. raw kernels over randomized shapes (non-lane-multiple feature
+//!    dims, empty neighbor lists, full-range values that exercise the
+//!    wrapping paths) against an independent naive reference;
+//! 2. the host executor: the same quantized checkpoint installed under
+//!    every runnable backend must serve bit-identical logits;
+//! 3. a full serve bench: `kernel=scalar` forced vs `kernel=auto`
+//!    must agree exactly on accuracy and evaluated count, because no
+//!    per-request prediction may depend on the backend.
+
+use comm_rand::batch::{BatchStats, PaddedBatch};
+use comm_rand::ckpt::{quantize_checkpoint, Checkpoint, CkptMeta, ParamStore};
+use comm_rand::config::{preset, TrainConfig};
+use comm_rand::graph::Dataset;
+use comm_rand::runtime::host;
+use comm_rand::runtime::kernels::{
+    accumulate_rows_i8, matvec_i16_i32, pad_to_lanes, KernelBackend, LANES,
+};
+use comm_rand::serve::engine::{self, synthetic_infer_meta};
+use comm_rand::serve::{
+    Arrival, HostExecutor, InferExecutor, LoadConfig, ServeConfig,
+};
+use comm_rand::train::train_host;
+
+fn tiny_dataset() -> Dataset {
+    comm_rand::train::dataset::build(&preset("tiny").unwrap(), true)
+}
+
+/// Deterministic 64-bit LCG so the randomized shapes need no rand
+/// crate and reproduce across runs.
+struct Lcg(u64);
+
+impl Lcg {
+    fn next(&mut self) -> u64 {
+        self.0 = self
+            .0
+            .wrapping_mul(6364136223846793005)
+            .wrapping_add(1442695040888963407);
+        self.0
+    }
+    fn i16(&mut self) -> i16 {
+        (self.next() >> 16) as i16
+    }
+    fn i8(&mut self) -> i8 {
+        (self.next() >> 24) as i8
+    }
+    fn below(&mut self, n: usize) -> usize {
+        ((self.next() >> 33) as usize) % n
+    }
+}
+
+/// Raw matvec: every runnable backend reproduces an independently
+/// written wrapping reference, bit for bit, across feature dims that
+/// are *not* lane multiples (1, 7, 33, 129) and full-range i16 values
+/// (so SIMD partial sums genuinely wrap).
+#[test]
+fn matvec_matches_naive_reference_on_random_shapes() {
+    let mut rng = Lcg(0xC0FFEE);
+    let backends = KernelBackend::all_available();
+    assert!(backends.contains(&KernelBackend::Scalar));
+    for feat in [1usize, 7, LANES, 33, 129] {
+        for classes in [1usize, 3, 10] {
+            let fp = pad_to_lanes(feat);
+            // contract: the padded tail is zero (the executor zero-pads)
+            let mut wt = vec![0i16; classes * fp];
+            let mut x = vec![0i16; fp];
+            for c in 0..classes {
+                for k in 0..feat {
+                    wt[c * fp + k] = rng.i16();
+                }
+            }
+            for k in 0..feat {
+                x[k] = rng.i16();
+            }
+            let bias: Vec<i32> =
+                (0..classes).map(|_| rng.next() as i32).collect();
+            // independent wrapping reference
+            let want: Vec<i32> = (0..classes)
+                .map(|c| {
+                    let mut acc = bias[c];
+                    for k in 0..fp {
+                        acc = acc.wrapping_add(
+                            (wt[c * fp + k] as i32)
+                                .wrapping_mul(x[k] as i32),
+                        );
+                    }
+                    acc
+                })
+                .collect();
+            for &b in &backends {
+                let mut out = vec![0i32; classes];
+                matvec_i16_i32(b, &wt, &x, &bias, fp, &mut out);
+                assert_eq!(
+                    out,
+                    want,
+                    "{} diverges at feat={feat} classes={classes}",
+                    b.name()
+                );
+            }
+        }
+    }
+}
+
+/// Raw row accumulation: empty node lists are a no-op, repeated nodes
+/// count twice, and every backend accumulates *into* the seeded output
+/// identically to the reference.
+#[test]
+fn accumulate_matches_naive_reference_on_random_shapes() {
+    let mut rng = Lcg(0xB00C);
+    let backends = KernelBackend::all_available();
+    for feat in [1usize, 7, LANES, 33, 129] {
+        let fp = pad_to_lanes(feat);
+        let rows = 23usize;
+        let mut table = vec![0i8; rows * fp];
+        for r in 0..rows {
+            for k in 0..feat {
+                table[r * fp + k] = rng.i8();
+            }
+        }
+        let seed: Vec<i32> = (0..fp).map(|_| rng.next() as i32).collect();
+        let mut lists: Vec<Vec<u32>> = vec![
+            vec![],                    // empty neighborhood
+            vec![rows as u32 - 1],     // single row
+            vec![4, 4, 4],             // multiplicity
+        ];
+        let long: Vec<u32> =
+            (0..300).map(|_| rng.below(rows) as u32).collect();
+        lists.push(long);
+        for nodes in &lists {
+            let mut want = seed.clone();
+            for &v in nodes {
+                for k in 0..fp {
+                    want[k] = want[k]
+                        .wrapping_add(table[v as usize * fp + k] as i32);
+                }
+            }
+            for &b in &backends {
+                let mut out = seed.clone();
+                accumulate_rows_i8(b, &table, fp, nodes, &mut out);
+                assert_eq!(
+                    out,
+                    want,
+                    "{} diverges at feat={feat} nodes={:?}",
+                    b.name(),
+                    &nodes[..nodes.len().min(8)]
+                );
+            }
+        }
+    }
+}
+
+/// A roots-only batch (all the host executor reads) for driving
+/// `InferExecutor::infer` directly.
+fn roots_batch(roots: Vec<u32>) -> PaddedBatch {
+    PaddedBatch {
+        layers: vec![],
+        roots,
+        labels: vec![],
+        lmask: vec![],
+        x0: None,
+        access_stream: vec![],
+        stats: BatchStats::default(),
+    }
+}
+
+/// Executor level: one quantized checkpoint installed under every
+/// runnable backend serves **bit-identical logits** for every node.
+#[test]
+fn executors_agree_bitwise_across_backends() {
+    let ds = tiny_dataset();
+    let store = ParamStore::new();
+    let shapes = host::param_shapes(ds.feat_dim, ds.num_classes);
+    let meta = CkptMeta::for_run(&ds, "host-sgc", "t", 0, shapes);
+    let params = host::init_params(ds.feat_dim, ds.num_classes, 99);
+    let ck = Checkpoint::new(meta, params).unwrap();
+    let qck = quantize_checkpoint(&ck).unwrap();
+    let v = store.publish(qck, "mem".into());
+
+    let roots: Vec<u32> = (0..ds.n() as u32).collect();
+    let mut reference: Option<Vec<u32>> = None;
+    for backend in KernelBackend::all_available() {
+        let exec = HostExecutor::with_backend(&ds, 0, backend).unwrap();
+        exec.try_install(&v).unwrap();
+        let out = exec.infer(&roots_batch(roots.clone())).unwrap();
+        assert_eq!(out.dtype, "i16q");
+        assert_eq!(out.param_version, 1);
+        assert_eq!(out.logits.len(), ds.n() * ds.num_classes);
+        let bits: Vec<u32> =
+            out.logits.iter().map(|x| x.to_bits()).collect();
+        match &reference {
+            None => reference = Some(bits),
+            Some(want) => assert_eq!(
+                &bits,
+                want,
+                "backend {} served different logits",
+                backend.name()
+            ),
+        }
+    }
+}
+
+/// Serve-bench level: the same trace served with `kernel=scalar`
+/// forced and with `kernel=auto` must agree exactly — accuracy and
+/// evaluated count — since logits are a pure function of (root,
+/// installed params) and the kernels are bitwise equivalent.
+#[test]
+fn forced_scalar_serve_bench_matches_auto_exactly() {
+    let ds = tiny_dataset();
+    let dir = std::env::temp_dir()
+        .join(format!("comm_rand_quant_e2e_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+
+    // a trained quantized checkpoint, through the on-disk format
+    let mut w = comm_rand::ckpt::CheckpointWriter::new(
+        &dir,
+        1,
+        comm_rand::ckpt::Retention::BestAndLatest,
+    )
+    .unwrap();
+    let tcfg = TrainConfig {
+        batch_size: 256,
+        lr: 0.5,
+        max_epochs: 2,
+        seed: 11,
+        ..Default::default()
+    };
+    train_host(&ds, &tcfg, Some(&mut w), false).unwrap();
+    let last = w.latest().unwrap().clone();
+    let qck = quantize_checkpoint(&Checkpoint::load(&last.path).unwrap())
+        .unwrap();
+    let qpath = dir.join("ckpt-q.bin");
+    qck.write_atomic(&qpath).unwrap();
+
+    let mut scfg = ServeConfig::for_dataset(&ds);
+    scfg.batch_size = 16;
+    scfg.workers = 2;
+    scfg.fanouts = vec![5, 5];
+    scfg.ckpt = Some(qpath);
+    let meta = synthetic_infer_meta(&ds, scfg.batch_size, &scfg.fanouts);
+    let lcfg = LoadConfig {
+        clients: 4,
+        requests_per_client: 50,
+        zipf_s: 1.1,
+        arrival: Arrival::Closed,
+        seed: 5,
+    };
+
+    let mut run_with = |backend: KernelBackend| {
+        let exec = HostExecutor::with_backend(&ds, scfg.seed, backend)
+            .unwrap();
+        let cfg = ServeConfig {
+            kernel: backend.name().to_string(),
+            ..scfg.clone()
+        };
+        let rep = engine::run(&ds, &meta, &exec, &cfg, &lcfg).unwrap();
+        assert_eq!(rep.requests, 200);
+        assert_eq!(rep.errors, 0);
+        assert_eq!(rep.param_version, 1);
+        assert!(
+            rep.execute.iter().any(|e| e.dtype == "i16q"),
+            "quantized run must report i16q execute spans, got {:?}",
+            rep.execute.iter().map(|e| e.dtype).collect::<Vec<_>>()
+        );
+        rep
+    };
+    let scalar = run_with(KernelBackend::Scalar);
+    let auto = run_with(KernelBackend::detect());
+    assert_eq!(
+        (scalar.accuracy, scalar.evaluated),
+        (auto.accuracy, auto.evaluated),
+        "forced scalar and auto kernels must serve identical predictions"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -54,11 +54,8 @@ fn trace_sample_spans_agree_with_report_dedup_factor() {
     scfg.sampler = SamplerKind::Labor;
     scfg.trace = Some(trace_path.clone());
     scfg.trace_sample = 1000;
-    let (exec, meta) = engine::build_executor(
-        &preset("tiny").unwrap(),
-        &ds,
-        &scfg,
-    );
+    let (exec, meta) =
+        engine::build_executor(&preset("tiny").unwrap(), &ds, &scfg).unwrap();
     let lcfg = closed(8, 30, 91);
     let rep = engine::run(&ds, &meta, exec.as_ref(), &scfg, &lcfg).unwrap();
     assert_eq!(rep.requests, 240);
@@ -133,7 +130,7 @@ fn labor_sampler_serves_full_run_with_consistent_shard_accounting() {
     scfg.sampler = SamplerKind::Labor;
     scfg.shards = 2;
     let (exec, meta) =
-        engine::build_executor(&preset("tiny").unwrap(), &ds, &scfg);
+        engine::build_executor(&preset("tiny").unwrap(), &ds, &scfg).unwrap();
     let lcfg = closed(6, 40, 3);
     let rep = engine::run(&ds, &meta, exec.as_ref(), &scfg, &lcfg).unwrap();
     assert_eq!(rep.requests, 240);

@@ -15,7 +15,8 @@
 use std::path::{Path, PathBuf};
 
 use comm_rand::ckpt::{
-    community_fingerprint, Checkpoint, CheckpointWriter, Retention,
+    community_fingerprint, quantize_checkpoint, Checkpoint, CheckpointWriter,
+    Retention,
 };
 use comm_rand::config::{preset, TrainConfig};
 use comm_rand::graph::Dataset;
@@ -121,7 +122,7 @@ fn community_fingerprint_mismatch_is_fenced() {
     scfg.fanouts = vec![5, 5];
     scfg.ckpt = Some(entries[0].path.clone());
     let meta = synthetic_infer_meta(&ds, scfg.batch_size, &scfg.fanouts);
-    let exec = HostExecutor::new(&ds, 0);
+    let exec = HostExecutor::new(&ds, 0).unwrap();
     let lcfg = LoadConfig {
         clients: 1,
         requests_per_client: 4,
@@ -193,7 +194,7 @@ fn trained_checkpoint_beats_seed_accuracy_at_serve_time() {
     };
 
     // seed baseline: fresh executor, no checkpoint
-    let exec = HostExecutor::new(&ds, scfg.seed);
+    let exec = HostExecutor::new(&ds, scfg.seed).unwrap();
     let base = engine::run(&ds, &meta, &exec, &scfg, &lcfg).unwrap();
     assert_eq!(base.requests, 200);
     assert_eq!(base.evaluated, 200, "host executor scores every reply");
@@ -248,7 +249,7 @@ fn hot_swap_under_load_drops_nothing_and_is_monotone() {
     scfg.ckpt = Some(watch.clone());
     scfg.ckpt_watch_ms = 5;
     let meta = synthetic_infer_meta(&ds, scfg.batch_size, &scfg.fanouts);
-    let exec = HostExecutor::new(&ds, 0);
+    let exec = HostExecutor::new(&ds, 0).unwrap();
     // open loop: 240 requests offered at 2000 req/s (~120 ms of
     // arrivals — far below saturation, so nothing sheds), with the
     // swap checkpoint landing ~50 ms in
@@ -304,6 +305,175 @@ fn hot_swap_under_load_drops_nothing_and_is_monotone() {
     let json = rep.to_json().to_string_pretty();
     assert!(json.contains("param_version"));
     assert!(json.contains("swaps"));
+    std::fs::remove_dir_all(&stage).ok();
+    std::fs::remove_dir_all(&watch).ok();
+}
+
+/// The quantized (`i16q`) on-disk format gets the same integrity
+/// battery as f32: an intact file round-trips with its i16 payload,
+/// truncations and CRC corruption are refused, an unknown dtype tag is
+/// refused even with a valid CRC, and the community fence still trips
+/// at engine startup.
+#[test]
+fn quantized_checkpoint_survives_integrity_and_fence_battery() {
+    let ds = tiny_dataset();
+    let dir = tmpdir("quant_battery");
+    let entries = train_with_checkpoints(&ds, &dir, 1);
+    let qck =
+        quantize_checkpoint(&Checkpoint::load(&entries[0].path).unwrap())
+            .unwrap();
+    let qpath = dir.join("ckpt-q.bin");
+    qck.write_atomic(&qpath).unwrap();
+
+    // intact: i16 payload and the exact dequantized f32 view survive
+    let back = Checkpoint::load(&qpath).unwrap();
+    assert_eq!(back.dtype(), "i16q");
+    assert_eq!(back.quant, qck.quant, "i16 payload must round-trip");
+    for (a, b) in back.params.iter().zip(&qck.params) {
+        let ab: Vec<u32> = a.iter().map(|x| x.to_bits()).collect();
+        let bb: Vec<u32> = b.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(ab, bb, "dequantized view must round-trip bitwise");
+    }
+
+    let bytes = std::fs::read(&qpath).unwrap();
+    // every truncation point is rejected
+    for cut in [0, 10, bytes.len() / 3, bytes.len() - 1] {
+        assert!(
+            Checkpoint::decode(&bytes[..cut]).is_err(),
+            "accepted a quantized checkpoint truncated to {cut} bytes"
+        );
+    }
+    // single-bit payload corruption is caught by the CRC
+    let mut bad = bytes.clone();
+    let mid = bad.len() / 2;
+    bad[mid] ^= 0x01;
+    let err = Checkpoint::decode(&bad).unwrap_err();
+    assert!(format!("{err:#}").contains("CRC"), "{err:#}");
+
+    // unknown dtype tag: patch "i16q" to same-length garbage and
+    // re-CRC, so the *reader's dtype check* (not the CRC) must refuse
+    let mut bad = bytes.clone();
+    let hlen = u32::from_le_bytes(bad[8..12].try_into().unwrap()) as usize;
+    let header = std::str::from_utf8(&bad[12..12 + hlen]).unwrap();
+    let at = 12 + header.find("i16q").expect("dtype tag in header");
+    bad[at..at + 4].copy_from_slice(b"zz9q");
+    let body = bad.len() - 4;
+    let crc = comm_rand::ckpt::format::crc32(&bad[..body]).to_le_bytes();
+    bad[body..].copy_from_slice(&crc);
+    let err = Checkpoint::decode(&bad).unwrap_err();
+    assert!(format!("{err:#}").contains("dtype"), "{err:#}");
+
+    // the fingerprint fence holds for quantized checkpoints too: a
+    // dataset with a permuted labeling refuses it at engine startup
+    let mut scfg = ServeConfig::for_dataset(&ds);
+    scfg.fanouts = vec![5, 5];
+    scfg.ckpt = Some(qpath);
+    let meta = synthetic_infer_meta(&ds, scfg.batch_size, &scfg.fanouts);
+    let exec = HostExecutor::new(&ds, 0).unwrap();
+    let lcfg = LoadConfig {
+        clients: 1,
+        requests_per_client: 4,
+        zipf_s: 1.1,
+        arrival: Arrival::Closed,
+        seed: 1,
+    };
+    let mut wrong = tiny_dataset();
+    let n = wrong.community.len();
+    wrong.community.swap(0, n - 1);
+    let err = engine::run(&wrong, &meta, &exec, &scfg, &lcfg).unwrap_err();
+    assert!(format!("{err:#}").contains("fingerprint"), "{err:#}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Acceptance for mixed-dtype hot swap: a run that starts on an f32
+/// checkpoint and hot-swaps to the **quantized version of the same
+/// parameters** mid-run completes with zero errors, a monotone
+/// `param_version`, execute spans under *both* dtypes, and accuracy
+/// within quantization noise of the pure-f32 run on the same trace.
+#[test]
+fn quantized_hot_swap_under_load_keeps_accuracy_and_both_dtypes() {
+    let ds = tiny_dataset();
+    let stage = tmpdir("qswap_stage");
+    let entries = train_with_checkpoints(&ds, &stage, 2);
+    let last = entries.last().unwrap();
+    let v1 = Checkpoint::load(&last.path).unwrap();
+    let mut v2 = quantize_checkpoint(&v1).unwrap();
+    // same parameters, quantized; bump the epoch so the watcher's
+    // fence (keyed on meta.epoch) lets it surface mid-run
+    v2.meta.epoch = v1.meta.epoch + 1;
+
+    let watch = tmpdir("qswap_watch");
+    v1.write_atomic(&watch.join("ckpt-e00001.bin")).unwrap();
+
+    let mut scfg = ServeConfig::for_dataset(&ds);
+    scfg.batch_size = 16;
+    scfg.workers = 2;
+    scfg.shards = 2;
+    scfg.fanouts = vec![5, 5];
+    scfg.max_delay_us = 3_000;
+    scfg.deadline_us = 5_000_000;
+    scfg.ckpt = Some(watch.clone());
+    scfg.ckpt_watch_ms = 5;
+    let meta = synthetic_infer_meta(&ds, scfg.batch_size, &scfg.fanouts);
+    let lcfg = LoadConfig {
+        clients: 4,
+        requests_per_client: 60,
+        zipf_s: 1.1,
+        arrival: Arrival::Poisson { rate_rps: 2_000.0 },
+        seed: 9,
+    };
+
+    // pure-f32 baseline on the identical trace (no watcher)
+    let mut base_cfg = scfg.clone();
+    base_cfg.ckpt = Some(last.path.clone());
+    base_cfg.ckpt_watch_ms = 0;
+    let exec = HostExecutor::new(&ds, 0).unwrap();
+    let base = engine::run(&ds, &meta, &exec, &base_cfg, &lcfg).unwrap();
+    assert_eq!(base.requests, 240);
+    assert_eq!(base.errors, 0);
+
+    // mixed run: the quantized checkpoint lands ~50 ms in
+    let exec = HostExecutor::new(&ds, 0).unwrap();
+    let rep = std::thread::scope(|scope| {
+        let watch = &watch;
+        let v2 = &v2;
+        let writer = scope.spawn(move || {
+            std::thread::sleep(std::time::Duration::from_millis(50));
+            v2.write_atomic(&watch.join("ckpt-e00002.bin")).unwrap();
+        });
+        let rep = engine::run(&ds, &meta, &exec, &scfg, &lcfg).unwrap();
+        writer.join().unwrap();
+        rep
+    });
+
+    assert_eq!(rep.requests, 240, "open loop must answer every request");
+    assert_eq!(rep.errors, 0, "mixed-dtype swap must not error a reply");
+    assert_eq!(rep.evaluated, 240);
+    assert_eq!(rep.shed, 0);
+    assert_eq!(rep.param_version, 2, "quantized checkpoint installs as v2");
+    assert!(rep.swaps >= 1, "at least one shard must observe the swap");
+    for sh in &rep.shards {
+        assert_eq!(
+            sh.version_regressions, 0,
+            "shard {} observed a version regression",
+            sh.id
+        );
+    }
+    let dtypes: Vec<&str> = rep.execute.iter().map(|e| e.dtype).collect();
+    assert!(
+        dtypes.contains(&"f32") && dtypes.contains(&"i16q"),
+        "both dtypes must appear in the execute report, got {dtypes:?}"
+    );
+    // the swap replaced the parameters with their own quantization, so
+    // only quantization noise on post-swap requests can move accuracy;
+    // 0.02 allows ~5 argmax flips out of 240 — far above anything the
+    // ≤ 2⁻¹⁵-per-weight rounding error can produce, but not flaky
+    assert!(
+        (rep.accuracy - base.accuracy).abs() <= 0.02,
+        "mixed-dtype accuracy {:.4} drifted from pure f32 {:.4}",
+        rep.accuracy,
+        base.accuracy
+    );
     std::fs::remove_dir_all(&stage).ok();
     std::fs::remove_dir_all(&watch).ok();
 }

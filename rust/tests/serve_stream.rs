@@ -123,7 +123,7 @@ fn rewrite_churn_produces_stale_hits_and_real_logits() {
     scfg.mutate_epoch = 64;
     scfg.drift_threshold = 1e9;
     let meta = synthetic_infer_meta(&ds, scfg.batch_size, &scfg.fanouts);
-    let exec = HostExecutor::new(&ds, 0);
+    let exec = HostExecutor::new(&ds, 0).unwrap();
     let lcfg = closed(4, 120, 5);
     let rep = engine::run(&ds, &meta, &exec, &scfg, &lcfg).unwrap();
     assert_eq!(rep.requests, 480);
