@@ -38,4 +38,4 @@ pub use store::{
     resolve_checkpoint, CheckpointWriter, ParamStore, ParamVersion,
     Retention, WrittenCkpt,
 };
-pub use watch::{watch_loop, watch_loop_with, DirWatcher};
+pub use watch::{watch_loop, watch_loop_observed, watch_loop_with, DirWatcher};

@@ -168,17 +168,34 @@ pub fn watch_loop(
 /// *current* label snapshot, so checkpoints from before a mid-run full
 /// relabel stop validating the moment the fence fingerprint changes.
 pub fn watch_loop_with(
+    watcher: DirWatcher,
+    poll_ms: u64,
+    stop: &AtomicBool,
+    validate: &(dyn Fn(&Checkpoint) -> Result<()> + Sync),
+    publish: &(dyn Fn(PathBuf, Checkpoint) -> Result<()> + Sync),
+) {
+    watch_loop_observed(watcher, poll_ms, stop, validate, publish, &|| {})
+}
+
+/// [`watch_loop_with`] plus a liveness `tick` callback, invoked at the
+/// top of every poll and during every sleep slice — the serving engine
+/// passes a watchdog-heartbeat beat so a watcher wedged inside a
+/// decode/validate/publish shows up as a stall while one sleeping
+/// between polls stays healthy.
+pub fn watch_loop_observed(
     mut watcher: DirWatcher,
     poll_ms: u64,
     stop: &AtomicBool,
     validate: &(dyn Fn(&Checkpoint) -> Result<()> + Sync),
     publish: &(dyn Fn(PathBuf, Checkpoint) -> Result<()> + Sync),
+    tick: &(dyn Fn() + Sync),
 ) {
     let poll_ms = poll_ms.max(1);
     loop {
         if stop.load(Ordering::Relaxed) {
             return;
         }
+        tick();
         if let Some((path, ck)) = watcher.poll_with(validate) {
             let label = path.display().to_string();
             let epoch = ck.meta.epoch;
@@ -202,6 +219,7 @@ pub fn watch_loop_with(
             if stop.load(Ordering::Relaxed) {
                 return;
             }
+            tick();
             let step = left.min(20);
             std::thread::sleep(Duration::from_millis(step));
             left -= step;

@@ -157,6 +157,17 @@ COMMANDS:
                            metrics_ms=N (write a Prometheus text
                            snapshot to results/serve_metrics.prom
                            every N ms; 0 = off)
+                           health_ms=N (seal a windowed health
+                           time-series every N ms; 0 = off; feeds
+                           slo= and flight=)
+                           slo=SPEC (burn-rate SLO alerting over the
+                           health windows; SPEC is comma-separated
+                           key=value — p99_ms= shed= err= stale=
+                           acc= fast= slow= burn= clear_ratio=
+                           clear= — or \"default\")
+                           flight=DIR (flight recorder: dump an
+                           atomic postmortem bundle into DIR on the
+                           first SLO fire or thread stall)
                            kernel=auto|scalar|avx2 (SIMD dispatch for
                            the quantized i16q integer path; auto picks
                            the best the CPU supports, a named variant
@@ -168,7 +179,7 @@ COMMANDS:
                            ids: fig2 fig5 fig6 fig7 fig8 fig9 fig10
                                 tab3 tab4 tab5 fullbatch inference
                                 preproc ablation autotune serve ckpt
-                                stream obs coop quant all
+                                stream obs coop quant health all
   help                   this message
 
 Presets: {}",
@@ -349,6 +360,13 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         trace_sample: args.get_u64("trace_sample", 1000)? as u32,
         metrics_ms: args.get_u64("metrics_ms", 0)?,
         metrics_path: defaults.metrics_path,
+        health_ms: args.get_u64("health_ms", 0)?,
+        slo: args
+            .get("slo")
+            .map(crate::obs::SloSpec::parse)
+            .transpose()
+            .context("slo= knob")?,
+        flight: args.get("flight").map(std::path::PathBuf::from),
     };
     if !(0.0..=1.0).contains(&scfg.community_bias) {
         bail!("p must be in [0, 1], got {}", scfg.community_bias);
@@ -373,6 +391,12 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
             "trace_sample is permille in [0, 1000], got {}",
             scfg.trace_sample
         );
+    }
+    if scfg.slo.is_some() && scfg.health_ms == 0 {
+        bail!("slo= needs health_ms=N > 0 (no windows to evaluate against)");
+    }
+    if scfg.flight.is_some() && scfg.health_ms == 0 {
+        bail!("flight= needs health_ms=N > 0 (no health tick to trigger it)");
     }
     let lcfg = LoadConfig {
         clients: args.get_usize("clients", 8)?,

@@ -19,10 +19,14 @@ pub struct BatchPolicy {
 }
 
 impl BatchPolicy {
+    /// The paper's baseline: fully random roots, uniform (p = 0.5)
+    /// neighbor sampling — plain DGL-style mini-batching.
     pub fn baseline() -> Self {
         BatchPolicy { roots: RootPolicy::Rand, p_intra: 0.5 }
     }
 
+    /// Stable label used in result tables and artifact file names,
+    /// e.g. `rand+p0.50`.
     pub fn label(&self) -> String {
         format!("{}+p{:.2}", self.roots.label(), self.p_intra)
     }
@@ -32,15 +36,20 @@ impl BatchPolicy {
 /// reference configuration, scaled where noted in DESIGN.md).
 #[derive(Clone, Debug)]
 pub struct TrainConfig {
+    /// Mini-batch size in root nodes (paper: 256).
     pub batch_size: usize,
+    /// Adam learning rate (paper: 1e-3).
     pub lr: f32,
+    /// Hard epoch cap; early stopping usually ends the run first.
     pub max_epochs: usize,
     /// Early stopping: stop when val loss hasn't improved for this many
     /// epochs (paper: 6).
     pub patience: usize,
     /// ReduceLROnPlateau patience (paper: 3) and factor (torch default 0.1).
     pub lr_patience: usize,
+    /// Multiplier applied to the learning rate on plateau.
     pub lr_factor: f32,
+    /// Run seed: root shuffling, neighbor sampling, weight init.
     pub seed: u64,
     /// Cap on batches per epoch (None = full epoch); used by quick tests.
     pub max_batches: Option<usize>,

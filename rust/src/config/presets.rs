@@ -17,12 +17,18 @@
 use crate::graph::features::FeatureParams;
 use crate::graph::gen::SbmParams;
 
+/// One synthetic stand-in dataset: the SBM graph recipe, the feature
+/// generator parameters, and the cache-model scaling that together
+/// reproduce one of the paper's benchmarks at testbed scale.
 #[derive(Clone, Debug)]
 pub struct DatasetPreset {
+    /// Preset name as accepted by the CLI (`tiny`, `reddit_sim`, …).
     pub name: &'static str,
     /// Artifact base name for the GraphSAGE model on this dataset.
     pub artifact: &'static str,
+    /// Stochastic-block-model graph recipe (size, degree, mixing).
     pub sbm: SbmParams,
+    /// Feature/label generator parameters (dims, signal, splits).
     pub feat: FeatureParams,
     /// Seed used by `gen-data` (fixed so all experiments share graphs).
     pub gen_seed: u64,
@@ -33,10 +39,12 @@ pub struct DatasetPreset {
     pub l2_base: f64,
 }
 
+/// Every preset name `preset` resolves, in gen-data order.
 pub fn preset_names() -> &'static [&'static str] {
     &["reddit_sim", "igb_sim", "products_sim", "papers_sim", "tiny"]
 }
 
+/// Resolve a preset by CLI name; `None` for unknown names.
 pub fn preset(name: &str) -> Option<DatasetPreset> {
     let p = match name {
         // reddit: 233k nodes / 492 avg-deg / 41 cls / 602 feat / 66-10-24

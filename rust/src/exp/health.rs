@@ -1,0 +1,369 @@
+//! Live-health gate (`comm-rand exp health`): ramp offered load past
+//! saturation and prove the temporal health layer earns its keep.
+//!
+//! A health layer that misses real incidents, cries wolf in steady
+//! state, or taxes the serving path is worse than none, so this
+//! experiment drives the same bench through four phases and **fails**
+//! unless all of them hold:
+//!
+//! 1. **Steady** — closed loop under a generous SLO: zero alert
+//!    transitions, zero watchdog stalls, zero postmortems (no
+//!    false positives when nothing is wrong).
+//! 2. **Capacity** — the steady run's throughput fixes the saturation
+//!    point for phase 3.
+//! 3. **Saturation** — open-loop Poisson at ~3× capacity with
+//!    `admission=reject`, a tight SLO, the flight recorder, and
+//!    full-rate tracing: an alert must fire within two slow lookback
+//!    spans of the first burn-rate breach, the postmortem bundle must
+//!    re-parse via [`read_postmortem`], and the Chrome trace must
+//!    carry the `slo_fire` instant.
+//! 4. **Overhead** — best-of-N closed-loop trials with the health
+//!    layer off vs on: enabling `health_ms=` + `slo=` may cost at
+//!    most [`MAX_OVERHEAD_FRAC`] of baseline throughput.
+//!
+//! Like `exp serve` / `exp obs` this needs no PJRT session
+//! (host-executor fallback), so it runs — and gates CI — in
+//! artifact-less environments.
+
+use anyhow::{bail, Result};
+
+use crate::cli::Args;
+use crate::config::preset;
+use crate::obs::{read_postmortem, SloSpec};
+use crate::serve::{
+    engine, AdmissionPolicy, Arrival, LoadConfig, ServeConfig,
+};
+use crate::util::json::{num, obj, s, Json};
+
+use super::common::{f2, quick, results_dir, write_results, Table};
+
+/// Enabling the health layer may cost at most this fraction of
+/// health-off throughput (the ≤ 5 % acceptance bar).
+pub const MAX_OVERHEAD_FRAC: f64 = 0.05;
+
+pub fn run(args: &Args) -> Result<()> {
+    let name = args.pos.get(1).map(String::as_str).unwrap_or("tiny");
+    let p = preset(name)
+        .ok_or_else(|| anyhow::anyhow!("unknown preset {name}"))?;
+    let ds = crate::train::dataset::load_or_build(&p, true)?;
+
+    let mut base = ServeConfig::for_dataset(&ds);
+    base.batch_size = args.get_usize("batch", 32)?;
+    base.workers = args.get_usize("workers", base.workers)?;
+    base.shards = args.get_usize("shards", 2)?;
+    base.seed = args.get_u64("seed", 0)?;
+    let health_ms = args.get_u64("health_ms", 25)?.max(1);
+    let clients = args.get_usize("clients", 4)?;
+    let requests = args
+        .get_usize("requests", if quick() { 60 } else { 200 })?;
+    let trials =
+        args.get_usize("trials", if quick() { 2 } else { 3 })?.max(1);
+    let closed = LoadConfig {
+        clients,
+        requests_per_client: requests,
+        zipf_s: args.get_f64("zipf", 1.1)?,
+        arrival: Arrival::Closed,
+        seed: base.seed ^ 0x10AD,
+    };
+    let (exec, meta) = engine::build_executor(&p, &ds, &base)?;
+
+    let mut table = Table::new(&[
+        "phase",
+        "arrival",
+        "req/s",
+        "p99 ms",
+        "windows",
+        "fired",
+        "stalls",
+    ]);
+
+    // ---- phase 1: steady state under a generous SLO ----
+    let steady_cfg = ServeConfig {
+        health_ms,
+        slo: Some(SloSpec::parse("p99_ms=5000,shed=0.5,err=0.5")?),
+        ..base.clone()
+    };
+    let steady = engine::run(&ds, &meta, exec.as_ref(), &steady_cfg, &closed)?;
+    println!("[health] steady: {}", steady.summary());
+    let sh = steady
+        .health
+        .as_ref()
+        .ok_or_else(|| anyhow::anyhow!("steady run reported no health"))?;
+    if sh.windows_sealed < 2 {
+        bail!(
+            "steady run sealed only {} health window(s); lengthen the run \
+             or shrink health_ms ({health_ms} ms)",
+            sh.windows_sealed
+        );
+    }
+    if sh.transitions != 0 || sh.alerts.iter().any(|a| a.fired > 0) {
+        bail!(
+            "steady-state false positive: {} alert transition(s) under a \
+             generous SLO ({})",
+            sh.transitions,
+            steady.summary()
+        );
+    }
+    if !sh.stalled_threads.is_empty() {
+        bail!(
+            "watchdog declared {:?} stalled in a healthy run",
+            sh.stalled_threads
+        );
+    }
+    if !sh.postmortems.is_empty() {
+        bail!("flight recorder fired {} bundle(s) in a healthy run",
+              sh.postmortems.len());
+    }
+    if !steady.unjoined_threads.is_empty() {
+        bail!("steady run left threads unjoined: {:?}",
+              steady.unjoined_threads);
+    }
+    table.row(vec![
+        "steady".into(),
+        "closed".into(),
+        format!("{:.0}", steady.throughput_rps),
+        f2(steady.lat_p99_ms),
+        sh.windows_sealed.to_string(),
+        "0".into(),
+        "0".into(),
+    ]);
+
+    // ---- phase 2: the steady throughput fixes the saturation point ----
+    let capacity = steady.throughput_rps.max(1.0);
+    let sat_rate = (capacity * 3.0).max(200.0);
+
+    // ---- phase 3: open-loop overload with the full layer armed ----
+    // Run long enough to seal a healthy number of windows at the
+    // offered rate (open-loop duration ≈ total requests / rate).
+    let sat_windows = if quick() { 12 } else { 24 };
+    let sat_total = ((sat_rate * (sat_windows as f64 * health_ms as f64
+        / 1_000.0))
+        .ceil() as usize)
+        .max(clients * 50);
+    let trace_path = results_dir().join("health_trace.json");
+    let sat_spec = format!(
+        "p99_ms={:.3},shed=0.05,fast=1,slow=3,burn=1,clear=2",
+        (steady.lat_p99_ms * 2.0).max(1.0)
+    );
+    let sat_slo = SloSpec::parse(&sat_spec)?;
+    let sat_cfg = ServeConfig {
+        health_ms,
+        slo: Some(sat_slo.clone()),
+        flight: Some(results_dir()),
+        trace: Some(trace_path.clone()),
+        trace_sample: 1000,
+        admission: AdmissionPolicy::Reject,
+        ..base.clone()
+    };
+    let sat_load = LoadConfig {
+        clients,
+        requests_per_client: sat_total.div_ceil(clients),
+        arrival: Arrival::Poisson { rate_rps: sat_rate },
+        ..closed.clone()
+    };
+    println!(
+        "[health] saturating: capacity ~{capacity:.0} req/s, offering \
+         {sat_rate:.0} req/s open-loop ({} requests, slo {})",
+        sat_load.clients * sat_load.requests_per_client,
+        sat_slo.label()
+    );
+    let sat = engine::run(&ds, &meta, exec.as_ref(), &sat_cfg, &sat_load)?;
+    println!("[health] saturated: {}", sat.summary());
+    let hh = sat
+        .health
+        .as_ref()
+        .ok_or_else(|| anyhow::anyhow!("saturation run reported no health"))?;
+
+    let fired: Vec<_> = hh.alerts.iter().filter(|a| a.fired > 0).collect();
+    if fired.is_empty() {
+        bail!(
+            "no SLO alert fired at {:.0} req/s offered over ~{:.0} req/s \
+             capacity ({})",
+            sat_rate,
+            capacity,
+            sat.summary()
+        );
+    }
+    // Reactivity: the fire transition must land within two slow
+    // lookback spans of the first fast-burn breach.
+    let budget_us = 2 * sat_slo.slow_windows as u64 * health_ms * 1_000;
+    for a in &fired {
+        let (breach, fire) = match (a.first_breach_us, a.first_fire_us) {
+            (Some(b), Some(f)) => (b, f),
+            _ => bail!("alert {} fired without breach/fire timestamps", a.slo),
+        };
+        let lag = fire.saturating_sub(breach);
+        println!(
+            "[health] alert {}: breach at {} µs, fire at {} µs \
+             (lag {} µs, budget {} µs)",
+            a.slo, breach, fire, lag, budget_us
+        );
+        if lag > budget_us {
+            bail!(
+                "alert {} took {lag} µs from breach to fire \
+                 (> {budget_us} µs = 2 slow spans)",
+                a.slo
+            );
+        }
+    }
+
+    // Flight recorder: exactly the bundles the report names, and each
+    // must survive a full re-parse.
+    if hh.postmortems.is_empty() {
+        bail!("alert fired but the flight recorder produced no postmortem");
+    }
+    let bundle = read_postmortem(&hh.postmortems[0])?;
+    if bundle.windows == 0 {
+        bail!(
+            "postmortem at {} carries no health windows",
+            hh.postmortems[0].display()
+        );
+    }
+    println!(
+        "[health] postmortem ok: {} (reason {}, {} windows, {} span \
+         events, {} transitions)",
+        hh.postmortems[0].display(),
+        bundle.reason,
+        bundle.windows,
+        bundle.span_events,
+        bundle.alert_transitions
+    );
+
+    // The fire transition must also land in the Chrome trace.
+    let slo_fire_events = count_trace_events(&trace_path, "slo_fire")?;
+    if slo_fire_events == 0 {
+        bail!(
+            "trace at {} has no slo_fire instants despite {} fire \
+             transition(s)",
+            trace_path.display(),
+            hh.transitions
+        );
+    }
+    table.row(vec![
+        "saturate".into(),
+        format!("poisson:{sat_rate:.0}"),
+        format!("{:.0}", sat.throughput_rps),
+        f2(sat.lat_p99_ms),
+        hh.windows_sealed.to_string(),
+        fired.iter().map(|a| a.fired).sum::<u64>().to_string(),
+        hh.stalled_threads.len().to_string(),
+    ]);
+
+    // ---- phase 4: the overhead gate ----
+    let on_cfg = ServeConfig {
+        health_ms,
+        slo: Some(SloSpec::parse("default")?),
+        ..base.clone()
+    };
+    let mut best_off = 0.0f64;
+    let mut best_on = 0.0f64;
+    for t in 0..trials {
+        let l = LoadConfig { seed: closed.seed ^ t as u64, ..closed.clone() };
+        let off = engine::run(&ds, &meta, exec.as_ref(), &base, &l)?;
+        let on = engine::run(&ds, &meta, exec.as_ref(), &on_cfg, &l)?;
+        println!(
+            "[health] overhead trial {t}: off {:.0} req/s, on {:.0} req/s",
+            off.throughput_rps, on.throughput_rps
+        );
+        best_off = best_off.max(off.throughput_rps);
+        best_on = best_on.max(on.throughput_rps);
+    }
+    let overhead = 1.0 - best_on / best_off.max(1e-9);
+    println!(
+        "[health] health-layer overhead: {:+.2}% of baseline throughput \
+         ({:.0} -> {:.0} req/s, gate {:.0}%)",
+        overhead * 100.0,
+        best_off,
+        best_on,
+        MAX_OVERHEAD_FRAC * 100.0
+    );
+    if overhead > MAX_OVERHEAD_FRAC {
+        bail!(
+            "health layer costs {:.1}% throughput (> {:.0}% budget): \
+             {:.0} req/s off vs {:.0} req/s on",
+            overhead * 100.0,
+            MAX_OVERHEAD_FRAC * 100.0,
+            best_off,
+            best_on
+        );
+    }
+    table.row(vec![
+        "overhead".into(),
+        "closed".into(),
+        format!("{best_on:.0}"),
+        "-".into(),
+        "-".into(),
+        "-".into(),
+        format!("{:+.1}%", overhead * 100.0),
+    ]);
+
+    let md = format!(
+        "# Live-health gate ({name})\n\n\
+         Steady phase: {} clients x {} closed-loop requests under a \
+         generous SLO — {} windows sealed, zero transitions, zero \
+         stalls. Saturation phase: poisson arrivals at {:.0} req/s \
+         (~3x the {:.0} req/s closed-loop capacity), `{}`, \
+         admission=reject — {} fire transition(s), breach→fire lag \
+         within {} µs, postmortem `{}` re-parsed ({} windows, {} span \
+         events). Health-layer overhead {:+.2}% (budget {:.0}%), best \
+         of {} trial(s).\n\n{}\n",
+        closed.clients,
+        closed.requests_per_client,
+        sh.windows_sealed,
+        sat_rate,
+        capacity,
+        sat_slo.label(),
+        fired.iter().map(|a| a.fired).sum::<u64>(),
+        budget_us,
+        hh.postmortems[0].display(),
+        bundle.windows,
+        bundle.span_events,
+        overhead * 100.0,
+        MAX_OVERHEAD_FRAC * 100.0,
+        trials,
+        table.to_markdown()
+    );
+    let json = obj(vec![
+        ("preset", s(name)),
+        ("health_ms", num(health_ms as f64)),
+        ("capacity_rps", num(capacity)),
+        ("offered_rps", num(sat_rate)),
+        ("steady", steady.to_json()),
+        ("saturated", sat.to_json()),
+        ("slo", s(&sat_slo.label())),
+        ("fire_lag_budget_us", num(budget_us as f64)),
+        ("slo_fire_trace_events", num(slo_fire_events as f64)),
+        (
+            "postmortem",
+            obj(vec![
+                ("dir", s(&hh.postmortems[0].display().to_string())),
+                ("reason", s(&bundle.reason)),
+                ("windows", num(bundle.windows as f64)),
+                ("span_events", num(bundle.span_events as f64)),
+                (
+                    "alert_transitions",
+                    num(bundle.alert_transitions as f64),
+                ),
+            ]),
+        ),
+        ("overhead_frac", num(overhead)),
+        ("overhead_budget_frac", num(MAX_OVERHEAD_FRAC)),
+    ]);
+    write_results("health_bench", &md, &json)
+}
+
+/// Count named events in an exported Chrome trace (any phase — the
+/// SLO transitions land as instants).
+fn count_trace_events(
+    path: &std::path::Path,
+    name: &str,
+) -> Result<usize> {
+    let doc = Json::parse_file(path)?;
+    let mut n = 0;
+    for ev in doc.get("traceEvents")?.as_arr()? {
+        if ev.get("name")?.as_str()? == name {
+            n += 1;
+        }
+    }
+    Ok(n)
+}

@@ -17,6 +17,7 @@ pub mod fig67;
 pub mod fig8;
 pub mod fig9;
 pub mod fullbatch;
+pub mod health;
 pub mod inference;
 pub mod obs;
 pub mod preproc;
@@ -54,6 +55,9 @@ pub fn run(args: &Args) -> Result<()> {
     }
     if id == "quant" {
         return quant::run(args);
+    }
+    if id == "health" {
+        return health::run(args);
     }
     let mut ctx = Ctx::new()?;
     match id {

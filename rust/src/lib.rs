@@ -95,6 +95,24 @@
 //! histogram type ([`obs::LogHist`]), so no two surfaces of a run can
 //! disagree about p50/p99. `comm-rand exp obs` gates full-rate
 //! tracing overhead at ≤ 5 % of untraced throughput.
+//!
+//! # Live health ([`obs`] again: series / slo / watchdog / flight)
+//!
+//! Tracing explains a request; the health layer watches the run.
+//! `health_ms=N` seals a windowed time-series
+//! ([`obs::WindowedSeries`]: per-window latency [`obs::LogHist`] +
+//! counter deltas) every N ms; `slo=` evaluates declarative targets
+//! with multi-window fast/slow **burn-rate** alerting and hysteresis
+//! ([`obs::SloRuntime`]), emitting `slo_fire`/`slo_clear` trace
+//! instants and `serve_slo_*` Prometheus gauges; every long-lived
+//! engine thread beats a liveness heartbeat swept by a watchdog
+//! ([`obs::Watchdog`]); and `flight=DIR` arms a flight recorder that
+//! dumps an atomic `postmortem-*/` bundle (windows, raw trace rings,
+//! alert history, resolved config, per-shard state —
+//! [`obs::dump_postmortem`] / re-parsed by [`obs::read_postmortem`])
+//! on the first alert or stall. `comm-rand exp health` gates it: zero
+//! steady-state false positives, fire within two slow lookback spans
+//! of the first breach past saturation, and ≤ 5 % overhead.
 
 #![warn(missing_docs)]
 // missing_docs burn-down: the crate root and the serving subsystem
@@ -110,7 +128,6 @@ pub mod batch;
 pub mod cachesim;
 pub mod ckpt;
 pub mod community;
-#[allow(missing_docs)]
 pub mod config;
 #[allow(missing_docs)]
 pub mod exp;

@@ -142,6 +142,12 @@ fn event_args(ev: &super::span::Event) -> Json {
         K::Relabel => vec![("num_comms", n(ev.a))],
         K::CkptSwap => vec![("epoch", n(ev.a))],
         K::MetricsFlush => vec![("seq", n(ev.a))],
+        K::SloFire | K::SloClear => vec![
+            ("slo", n(ev.a)),
+            ("burn_fast_x100", n(ev.b)),
+            ("burn_slow_x100", n(ev.c)),
+        ],
+        K::Stall => vec![("thread", n(ev.a)), ("silent_ms", n(ev.b))],
         K::Enqueue | K::Shed | K::QueueWait => vec![],
     };
     if ev.req_id != 0 {
@@ -158,13 +164,22 @@ pub struct PromText {
     buf: String,
 }
 
+/// Escape one label value per the Prometheus text-exposition rules:
+/// backslash, double quote and newline must be escaped, and the
+/// backslash **first** (escaping it last would re-escape the
+/// backslashes the other two replacements just introduced, producing
+/// invalid exposition text — the satellite bug this fixes).
+fn escape_label_value(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
 fn fmt_labels(labels: &[(&str, &str)]) -> String {
     if labels.is_empty() {
         return String::new();
     }
     let inner: Vec<String> = labels
         .iter()
-        .map(|(k, v)| format!("{k}=\"{}\"", v.replace('"', "\\\"")))
+        .map(|(k, v)| format!("{k}=\"{}\"", escape_label_value(v)))
         .collect();
     format!("{{{}}}", inner.join(","))
 }
@@ -372,6 +387,29 @@ mod tests {
         assert!(write_chrome_trace(&path, &rec).is_err());
         assert!(write_chrome_trace(&path, &Recorder::disabled()).is_err());
         std::fs::remove_file(&path).ok();
+    }
+
+    /// Satellite regression: label values containing backslashes,
+    /// quotes and newlines must come out as valid exposition text.
+    /// Before the fix only quotes were escaped, so a value like
+    /// `C:\path` or a multi-line alert message produced a snapshot
+    /// Prometheus rejects.
+    #[test]
+    fn label_values_escape_backslash_quote_and_newline() {
+        assert_eq!(escape_label_value("plain"), "plain");
+        assert_eq!(escape_label_value(r#"say "hi""#), r#"say \"hi\""#);
+        assert_eq!(escape_label_value(r"C:\path"), r"C:\\path");
+        assert_eq!(escape_label_value("a\nb"), r"a\nb");
+        // order matters: the backslash introduced by quote-escaping
+        // must NOT be re-escaped
+        assert_eq!(escape_label_value("\\\""), r#"\\\""#);
+        let mut p = PromText::new();
+        p.sample(
+            "m",
+            &[("path", "C:\\tmp\n\"x\"")],
+            1.0,
+        );
+        assert_eq!(p.text(), "m{path=\"C:\\\\tmp\\n\\\"x\\\"\"} 1\n");
     }
 
     #[test]

@@ -1,0 +1,456 @@
+//! Flight recorder: atomic postmortem bundles.
+//!
+//! When something goes wrong mid-run — an SLO burn-rate alert fires,
+//! the watchdog declares a thread stalled, a fatal error unwinds the
+//! engine — the numbers that explain it are exactly the ones about to
+//! be lost: the recent span rings, the last N health windows, the
+//! alert history, the resolved config. [`dump_postmortem`] captures
+//! all of that as one directory of JSON files under
+//! `results/postmortem-<reason>-<ts>/`, written **atomically**: every
+//! file lands in a `.tmp` staging directory first and a single
+//! `rename` publishes the bundle, so a crash mid-dump can never leave
+//! a half-readable postmortem at the published path.
+//!
+//! Bundle layout (all hand-rolled JSON, no serde):
+//!
+//! ```text
+//! postmortem-<reason>-<ts_ms>/
+//!   manifest.json   reason, trigger timestamp, file inventory + counts
+//!   windows.json    last N sealed health windows (series ring)
+//!   spans.json      retained trace events, one entry per track
+//!   alerts.json     SLO spec, per-target state, transition log
+//!   config.json     resolved ServeConfig (as the engine ran it)
+//!   shards.json     per-shard state at dump time
+//! ```
+//!
+//! [`read_postmortem`] re-parses a bundle and cross-checks the
+//! manifest's counts against the actual file contents, so the `exp
+//! health` gate (and any human) can trust that a bundle that parses is
+//! a bundle that is complete.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{arr, num, obj, s, Json};
+
+use super::series::WindowedSeries;
+use super::slo::SloRuntime;
+use super::span::{track_name, Recorder};
+
+/// A re-parsed postmortem bundle (counts cross-checked against the
+/// manifest).
+#[derive(Debug)]
+pub struct PostmortemBundle {
+    /// Why the dump was triggered (`slo-shed_rate`, `stall-batcher`,
+    /// `manual`, …).
+    pub reason: String,
+    /// Trigger timestamp, µs on the run clock.
+    pub ts_us: u64,
+    /// Health windows captured.
+    pub windows: usize,
+    /// Trace events captured across all tracks.
+    pub span_events: usize,
+    /// Alert transitions in the history.
+    pub alert_transitions: usize,
+    /// The resolved run config, verbatim.
+    pub config: Json,
+}
+
+/// Keep reasons filesystem- and label-safe: lowercase alphanumerics
+/// and dashes only.
+fn sanitize_reason(reason: &str) -> String {
+    let cleaned: String = reason
+        .chars()
+        .map(|c| {
+            if c.is_ascii_alphanumeric() || c == '-' || c == '_' {
+                c.to_ascii_lowercase()
+            } else {
+                '-'
+            }
+        })
+        .collect();
+    if cleaned.is_empty() { "unknown".into() } else { cleaned }
+}
+
+fn spans_json(rec: &Recorder) -> (Json, usize) {
+    let mut tracks = Vec::new();
+    let mut total = 0usize;
+    for (track, ring) in rec.rings().iter().enumerate() {
+        let events: Vec<Json> = ring
+            .snapshot()
+            .into_iter()
+            .map(|ev| {
+                obj(vec![
+                    ("ts_us", num(ev.ts_us as f64)),
+                    ("dur_us", num(ev.dur_us as f64)),
+                    ("req", num(ev.req_id as f64)),
+                    ("kind", s(ev.kind.name())),
+                    ("a", num(ev.a as f64)),
+                    ("b", num(ev.b as f64)),
+                    ("c", num(ev.c as f64)),
+                ])
+            })
+            .collect();
+        total += events.len();
+        tracks.push(obj(vec![
+            ("track", num(track as f64)),
+            ("name", s(&track_name(track))),
+            ("dropped", num(ring.dropped() as f64)),
+            ("events", arr(events)),
+        ]));
+    }
+    (obj(vec![("tracks", arr(tracks))]), total)
+}
+
+fn alerts_json(slo: Option<&SloRuntime>) -> (Json, usize) {
+    let Some(rt) = slo else {
+        return (
+            obj(vec![
+                ("enabled", Json::Bool(false)),
+                ("states", arr(vec![])),
+                ("transitions", arr(vec![])),
+            ]),
+            0,
+        );
+    };
+    let states: Vec<Json> = rt
+        .states()
+        .iter()
+        .map(|st| {
+            obj(vec![
+                ("slo", s(st.target.kind.label())),
+                ("threshold", num(st.target.threshold)),
+                ("firing", Json::Bool(st.firing)),
+                ("fired", num(st.fired as f64)),
+                ("cleared", num(st.cleared as f64)),
+                ("burn_fast", num(st.burn_fast)),
+                ("burn_slow", num(st.burn_slow)),
+                (
+                    "first_breach_us",
+                    st.first_breach_us
+                        .map(|t| num(t as f64))
+                        .unwrap_or(Json::Null),
+                ),
+                (
+                    "first_fire_us",
+                    st.first_fire_us
+                        .map(|t| num(t as f64))
+                        .unwrap_or(Json::Null),
+                ),
+            ])
+        })
+        .collect();
+    let transitions: Vec<Json> = rt
+        .transitions()
+        .iter()
+        .map(|t| {
+            obj(vec![
+                ("slo", s(t.slo)),
+                ("state", s(if t.fired { "fire" } else { "clear" })),
+                ("ts_us", num(t.ts_us as f64)),
+                ("burn_fast", num(t.burn_fast)),
+                ("burn_slow", num(t.burn_slow)),
+            ])
+        })
+        .collect();
+    let n = transitions.len();
+    (
+        obj(vec![
+            ("enabled", Json::Bool(true)),
+            ("spec", s(&rt.spec().label())),
+            ("states", arr(states)),
+            ("transitions", arr(transitions)),
+        ]),
+        n,
+    )
+}
+
+/// Dump a postmortem bundle under `base_dir` and return the published
+/// bundle directory. `reason` names the trigger; `ts_us` is the run
+/// clock at trigger time (also disambiguates the directory name —
+/// collisions get a numeric suffix). `config` and `shards` are the
+/// engine-resolved run config and per-shard state as JSON. A disabled
+/// recorder yields an empty-but-valid `spans.json`.
+#[allow(clippy::too_many_arguments)] // a dump site passes the whole run state
+pub fn dump_postmortem(
+    base_dir: &Path,
+    reason: &str,
+    ts_us: u64,
+    rec: &Recorder,
+    series: &WindowedSeries,
+    slo: Option<&SloRuntime>,
+    config: Json,
+    shards: Json,
+) -> Result<PathBuf> {
+    let reason = sanitize_reason(reason);
+    std::fs::create_dir_all(base_dir)
+        .with_context(|| format!("creating {}", base_dir.display()))?;
+    let mut name = format!("postmortem-{reason}-{}", ts_us / 1_000);
+    let mut n = 1;
+    while base_dir.join(&name).exists() {
+        name = format!("postmortem-{reason}-{}-{n}", ts_us / 1_000);
+        n += 1;
+    }
+    let final_dir = base_dir.join(&name);
+    let tmp_dir = base_dir.join(format!("{name}.tmp"));
+    if tmp_dir.exists() {
+        std::fs::remove_dir_all(&tmp_dir)?;
+    }
+    std::fs::create_dir_all(&tmp_dir)?;
+
+    let windows: Vec<Json> = series.windows().map(|w| w.to_json()).collect();
+    let n_windows = windows.len();
+    let windows_doc = obj(vec![
+        ("window_us", num(series.config().window_us as f64)),
+        ("sealed_total", num(series.sealed() as f64)),
+        ("windows", arr(windows)),
+    ]);
+    let (spans_doc, n_spans) = spans_json(rec);
+    let (alerts_doc, n_transitions) = alerts_json(slo);
+
+    let manifest = obj(vec![
+        ("reason", s(&reason)),
+        ("ts_us", num(ts_us as f64)),
+        ("windows", num(n_windows as f64)),
+        ("span_events", num(n_spans as f64)),
+        ("alert_transitions", num(n_transitions as f64)),
+        (
+            "files",
+            arr(
+                [
+                    "windows.json",
+                    "spans.json",
+                    "alerts.json",
+                    "config.json",
+                    "shards.json",
+                ]
+                .iter()
+                .map(|f| s(f))
+                .collect(),
+            ),
+        ),
+    ]);
+
+    for (file, doc) in [
+        ("manifest.json", &manifest),
+        ("windows.json", &windows_doc),
+        ("spans.json", &spans_doc),
+        ("alerts.json", &alerts_doc),
+        ("config.json", &config),
+        ("shards.json", &shards),
+    ] {
+        std::fs::write(tmp_dir.join(file), doc.to_string_pretty())
+            .with_context(|| format!("writing postmortem {file}"))?;
+    }
+    std::fs::rename(&tmp_dir, &final_dir).with_context(|| {
+        format!("publishing postmortem at {}", final_dir.display())
+    })?;
+    Ok(final_dir)
+}
+
+/// Re-parse a bundle directory, cross-checking the manifest's counts
+/// against the file contents. Errors on anything missing, unparseable
+/// or inconsistent.
+pub fn read_postmortem(dir: &Path) -> Result<PostmortemBundle> {
+    let manifest = Json::parse_file(&dir.join("manifest.json"))?;
+    let reason = manifest.get("reason")?.as_str()?.to_string();
+    let ts_us = manifest.get("ts_us")?.as_f64()? as u64;
+
+    let windows_doc = Json::parse_file(&dir.join("windows.json"))?;
+    let windows = windows_doc.get("windows")?.as_arr()?.len();
+    for w in windows_doc.get("windows")?.as_arr()? {
+        w.get("seq")?.as_usize()?;
+        w.get("completed")?.as_usize()?;
+        w.get("lat_p99_us")?.as_f64()?;
+    }
+
+    let spans_doc = Json::parse_file(&dir.join("spans.json"))?;
+    let mut span_events = 0usize;
+    for t in spans_doc.get("tracks")?.as_arr()? {
+        t.get("name")?.as_str()?;
+        for ev in t.get("events")?.as_arr()? {
+            ev.get("ts_us")?.as_f64()?;
+            ev.get("kind")?.as_str()?;
+            span_events += 1;
+        }
+    }
+
+    let alerts_doc = Json::parse_file(&dir.join("alerts.json"))?;
+    let alert_transitions = alerts_doc.get("transitions")?.as_arr()?.len();
+
+    let config = Json::parse_file(&dir.join("config.json"))?;
+    Json::parse_file(&dir.join("shards.json"))?;
+
+    for (key, got) in [
+        ("windows", windows),
+        ("span_events", span_events),
+        ("alert_transitions", alert_transitions),
+    ] {
+        let want = manifest.get(key)?.as_usize()?;
+        if want != got {
+            bail!(
+                "postmortem at {}: manifest says {want} {key}, files hold \
+                 {got}",
+                dir.display()
+            );
+        }
+    }
+    Ok(PostmortemBundle {
+        reason,
+        ts_us,
+        windows,
+        span_events,
+        alert_transitions,
+        config,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::series::{HealthSample, SeriesConfig};
+    use crate::obs::slo::SloSpec;
+    use crate::obs::span::{EventKind, TRACK_CLIENT};
+    use crate::obs::LogHist;
+    use std::time::Instant;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "comm_rand_flight_{tag}_{}",
+            std::process::id()
+        ));
+        std::fs::remove_dir_all(&d).ok();
+        d
+    }
+
+    fn storm_series() -> WindowedSeries {
+        let mut series = WindowedSeries::new(
+            SeriesConfig { window_us: 1_000, retention: 8 },
+            0,
+        );
+        let mut lat = LogHist::new();
+        for t in 1..=12u64 {
+            for i in 0..20 {
+                lat.record(1_000 + i * t);
+            }
+            let samp = HealthSample {
+                lat: lat.clone(),
+                completed: t * 20,
+                shed: t * 10,
+                ..Default::default()
+            };
+            series.observe(t * 1_000, samp);
+        }
+        series
+    }
+
+    /// Satellite test: dump → parse → spans and windows present, with
+    /// the manifest counts agreeing with the files.
+    #[test]
+    fn bundle_round_trips() {
+        let rec = Recorder::new(1, 64, 1000, Instant::now());
+        rec.instant(TRACK_CLIENT, EventKind::Enqueue, 10, 1, 0, 0, 0);
+        rec.span(TRACK_CLIENT, EventKind::QueueWait, 10, 5, 1, 0, 0, 0);
+        rec.instant(TRACK_CLIENT, EventKind::SloFire, 900, 0, 1, 250, 180);
+        let series = storm_series();
+        let mut rt = SloRuntime::new(SloSpec::parse("shed=0.05").unwrap());
+        for ts in [11_000, 12_000] {
+            rt.evaluate(&series, ts);
+        }
+        assert!(rt.any_firing(), "storm series should fire the shed SLO");
+
+        let base = tmpdir("roundtrip");
+        let dir = dump_postmortem(
+            &base,
+            "slo-shed_rate",
+            12_345_678,
+            &rec,
+            &series,
+            Some(&rt),
+            obj(vec![("p", num(0.9))]),
+            arr(vec![obj(vec![("shard", num(0.0))])]),
+        )
+        .unwrap();
+        assert!(dir.file_name().unwrap().to_str().unwrap()
+            .starts_with("postmortem-slo-shed_rate-"));
+        // no staging residue
+        assert!(!base.join(format!(
+            "{}.tmp",
+            dir.file_name().unwrap().to_str().unwrap()
+        ))
+        .exists());
+
+        let bundle = read_postmortem(&dir).unwrap();
+        assert_eq!(bundle.reason, "slo-shed_rate");
+        assert_eq!(bundle.ts_us, 12_345_678);
+        assert_eq!(bundle.windows, 8, "series retention captured");
+        assert_eq!(bundle.span_events, 3);
+        assert_eq!(bundle.alert_transitions, 1);
+        assert_eq!(bundle.config.get("p").unwrap().as_f64().unwrap(), 0.9);
+
+        // a second dump with the same reason+ts gets a fresh directory
+        let dir2 = dump_postmortem(
+            &base,
+            "slo-shed_rate",
+            12_345_678,
+            &rec,
+            &series,
+            Some(&rt),
+            obj(vec![]),
+            arr(vec![]),
+        )
+        .unwrap();
+        assert_ne!(dir, dir2);
+        read_postmortem(&dir2).unwrap();
+        std::fs::remove_dir_all(&base).ok();
+    }
+
+    #[test]
+    fn disabled_recorder_and_no_slo_still_dump_valid_bundles() {
+        let base = tmpdir("minimal");
+        let series = storm_series();
+        let dir = dump_postmortem(
+            &base,
+            "Manual Trigger!",
+            1_000,
+            &Recorder::disabled(),
+            &series,
+            None,
+            obj(vec![]),
+            obj(vec![]),
+        )
+        .unwrap();
+        // reason sanitized for the filesystem
+        assert!(dir.file_name().unwrap().to_str().unwrap()
+            .starts_with("postmortem-manual-trigger-"));
+        let bundle = read_postmortem(&dir).unwrap();
+        assert_eq!(bundle.span_events, 0);
+        assert_eq!(bundle.alert_transitions, 0);
+        assert_eq!(bundle.windows, 8);
+        std::fs::remove_dir_all(&base).ok();
+    }
+
+    #[test]
+    fn tampered_manifest_counts_fail_the_parse() {
+        let base = tmpdir("tamper");
+        let series = storm_series();
+        let dir = dump_postmortem(
+            &base,
+            "tamper",
+            5_000,
+            &Recorder::disabled(),
+            &series,
+            None,
+            obj(vec![]),
+            obj(vec![]),
+        )
+        .unwrap();
+        let mpath = dir.join("manifest.json");
+        let txt = std::fs::read_to_string(&mpath).unwrap();
+        std::fs::write(&mpath, txt.replace("\"windows\": 8", "\"windows\": 3"))
+            .unwrap();
+        assert!(read_postmortem(&dir).is_err());
+        std::fs::remove_dir_all(&base).ok();
+    }
+}

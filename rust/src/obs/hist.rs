@@ -169,8 +169,21 @@ impl LogHist {
     /// midpoint of the bucket holding the `ceil(q * count)`-th sample
     /// and clamped to the observed `[min, max]` — so p0/p100 are exact
     /// and everything between carries the `1 / SUB_BUCKETS` relative
-    /// error bound. Returns 0 on an empty histogram.
+    /// error bound.
+    ///
+    /// **Empty histograms**: a histogram with no recorded samples has
+    /// no quantiles; this returns **0** for every `q` (matching
+    /// [`LogHist::min`]/[`LogHist::mean`] on empty), so report paths
+    /// can print "0" for idle shards without a sentinel check. Callers
+    /// that need to distinguish "no data" from "all-zero data" must
+    /// check [`LogHist::is_empty`] first. A non-finite `q` (NaN/±inf)
+    /// is a caller bug and trips a debug assertion; release builds
+    /// clamp it into `[0, 1]` like any other out-of-range value.
     pub fn quantile(&self, q: f64) -> u64 {
+        debug_assert!(
+            q.is_finite(),
+            "LogHist::quantile called with non-finite q ({q})"
+        );
         if self.count == 0 {
             return 0;
         }
@@ -188,6 +201,43 @@ impl LogHist {
             }
         }
         self.max // unreachable in practice; defensive
+    }
+
+    /// Samples recorded in buckets strictly **above** the bucket
+    /// holding `v` — i.e. samples known to exceed `v` at bucket
+    /// granularity. Samples in `v`'s own bucket are *not* counted
+    /// (they may be ≤ `v`), so the result undercounts by at most one
+    /// bucket's population — the same `1 / SUB_BUCKETS` relative
+    /// resolution as [`LogHist::quantile`]. The SLO burn-rate
+    /// evaluator uses this to turn a latency histogram into a
+    /// fraction-of-requests-over-target.
+    pub fn count_above(&self, v: u64) -> u64 {
+        let first = bucket_index(v) + 1;
+        self.counts[first.min(NUM_BUCKETS)..].iter().sum()
+    }
+
+    /// Bucket-wise difference `self − earlier`: the histogram of
+    /// samples recorded *between* the `earlier` snapshot and `self`,
+    /// assuming `earlier` is a prefix of `self`'s sample stream (the
+    /// cumulative-snapshot discipline of the windowed health series,
+    /// [`crate::obs::series`]). Per-bucket counts and the sum subtract
+    /// exactly; `min`/`max` of the delta are only known to bucket
+    /// resolution, so they are reconstructed from the delta's lowest /
+    /// highest non-empty bucket bounds. Subtraction saturates
+    /// defensively if `earlier` is not actually a prefix.
+    pub fn diff(&self, earlier: &LogHist) -> LogHist {
+        let mut out = LogHist::new();
+        for (i, (a, b)) in self.counts.iter().zip(&earlier.counts).enumerate() {
+            let d = a.saturating_sub(*b);
+            if d > 0 {
+                out.counts[i] = d;
+                out.count += d;
+                out.min = out.min.min(bucket_lo(i));
+                out.max = out.max.max(bucket_hi(i).saturating_sub(1));
+            }
+        }
+        out.sum = self.sum.saturating_sub(earlier.sum);
+        out
     }
 
     /// Iterate non-empty buckets as `(lo_inclusive, hi_exclusive,
@@ -330,6 +380,81 @@ mod tests {
             }
             assert!(h.buckets().eq(concat.buckets()));
         }
+    }
+
+    /// Satellite regression: the empty-histogram quantile contract is
+    /// explicit — 0 for every q, including the clamped extremes.
+    #[test]
+    fn empty_quantile_returns_zero_for_every_q() {
+        let h = LogHist::new();
+        for q in [0.0, 0.25, 0.5, 0.99, 1.0, -3.0, 7.0] {
+            assert_eq!(h.quantile(q), 0, "empty quantile({q})");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite q")]
+    #[cfg(debug_assertions)]
+    fn non_finite_quantile_trips_debug_assert() {
+        let mut h = LogHist::new();
+        h.record(1);
+        let _ = h.quantile(f64::NAN);
+    }
+
+    #[test]
+    fn count_above_is_bucket_granular_and_monotone() {
+        let mut h = LogHist::new();
+        for v in [1u64, 10, 100, 1_000, 10_000, 100_000] {
+            h.record(v);
+        }
+        // small values are exact-bucketed, so thresholds < SUB_BUCKETS
+        // count exactly
+        assert_eq!(h.count_above(0), 5);
+        assert_eq!(h.count_above(10), 4);
+        // large thresholds: undercounts by at most the threshold's own
+        // bucket, never more
+        let above = h.count_above(1_000);
+        assert!((1..=2).contains(&above), "count_above(1000) = {above}");
+        // monotone non-increasing in the threshold
+        let mut prev = h.count_above(0);
+        for t in [1u64, 10, 100, 1_000, 10_000, 100_000, 1_000_000] {
+            let c = h.count_above(t);
+            assert!(c <= prev, "count_above not monotone at {t}");
+            prev = c;
+        }
+        assert_eq!(h.count_above(u64::MAX), 0);
+        assert_eq!(LogHist::new().count_above(0), 0);
+    }
+
+    /// `diff` of two cumulative snapshots is exactly the histogram of
+    /// the samples recorded in between, bucket for bucket.
+    #[test]
+    fn diff_recovers_the_between_snapshot_samples() {
+        let mut rng = Rng::new(41);
+        let first: Vec<u64> = (0..2_000).map(|_| rng.below(1_000_000)).collect();
+        let second: Vec<u64> = (0..3_000).map(|_| rng.below(1_000_000)).collect();
+        let mut early = LogHist::new();
+        for &v in &first {
+            early.record(v);
+        }
+        let mut cum = early.clone();
+        for &v in &second {
+            cum.record(v);
+        }
+        let mut want = LogHist::new();
+        for &v in &second {
+            want.record(v);
+        }
+        let delta = cum.diff(&early);
+        assert_eq!(delta.count(), want.count());
+        assert_eq!(delta.sum(), want.sum());
+        assert!(delta.buckets().eq(want.buckets()));
+        // min/max are bucket-resolution bounds around the true extremes
+        assert!(delta.min() <= want.min());
+        assert!(delta.max() >= want.max());
+        // diff against self is empty; diff against empty is identity
+        assert!(cum.diff(&cum).is_empty());
+        assert!(cum.diff(&LogHist::new()).buckets().eq(cum.buckets()));
     }
 
     #[test]

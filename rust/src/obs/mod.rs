@@ -16,18 +16,46 @@
 //!   Perfetto) and Prometheus text-exposition snapshots
 //!   (`metrics_ms=`).
 //!
+//! On top of those sit the **temporal health layer**'s four pieces,
+//! driven by the engine's telemetry thread when `health_ms=` is set:
+//!
+//! * [`series`] — rolling windowed time-series: per-window [`LogHist`]
+//!   deltas + counter deltas in a bounded ring, so
+//!   latency/shed/stale/dedup/purity/accuracy are queryable *recent
+//!   history* instead of run-lifetime aggregates;
+//! * [`slo`] — declarative SLO targets evaluated with multi-window
+//!   fast/slow burn-rate alerting and hysteresis (`slo=` knob), alert
+//!   transitions recorded as trace events and exported in [`PromText`];
+//! * [`watchdog`] — heartbeat liveness for every long-lived serving
+//!   thread, with busy/idle semantics so blocking-on-work is healthy
+//!   but wedged-mid-batch is a detected stall;
+//! * [`flight`] — the flight recorder: on first alert fire or stall
+//!   (`flight=` knob) it atomically dumps a postmortem bundle — span
+//!   rings, recent windows, alert history, resolved config, per-shard
+//!   state — to `results/postmortem-*/`.
+//!
 //! The overhead contract — full-rate tracing costs ≤ 5% serve
 //! throughput — is enforced by `exp obs`
 //! ([`crate::exp::obs`]), which runs the same bench with tracing off /
-//! sampled / full and fails the run if the gap exceeds the budget.
+//! sampled / full and fails the run if the gap exceeds the budget; the
+//! health layer carries the same ≤ 5% bound, enforced by `exp health`
+//! ([`crate::exp::health`]).
 
 pub mod export;
+pub mod flight;
 pub mod hist;
+pub mod series;
+pub mod slo;
 pub mod span;
+pub mod watchdog;
 
 pub use export::{write_chrome_trace, ExportSummary, PromText};
+pub use flight::{dump_postmortem, read_postmortem, PostmortemBundle};
 pub use hist::LogHist;
+pub use series::{HealthSample, SeriesConfig, Window, WindowedSeries};
+pub use slo::{SloKind, SloRuntime, SloSpec, SloTarget};
 pub use span::{
     shard_track, track_name, Event, EventKind, EventRing, Recorder,
     TRACK_BATCHER, TRACK_CLIENT, TRACK_MAINTAINER, TRACK_WATCHER,
 };
+pub use watchdog::{Heartbeat, HeartbeatState, Stall, Watchdog};

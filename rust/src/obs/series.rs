@@ -1,0 +1,482 @@
+//! Rolling windowed time-series over the serving run's health signals.
+//!
+//! PR 6's exporters only ever show *cumulative-since-start* numbers —
+//! fine for a final report, useless for noticing that p99 started
+//! climbing thirty seconds ago. This module turns those same
+//! cumulative counters into **recent history**: every `health_ms=`
+//! tick the engine's telemetry thread snapshots the run's cumulative
+//! [`HealthSample`] (merged latency [`LogHist`], completion / error /
+//! shed / cache / accuracy counters), and [`WindowedSeries::observe`]
+//! seals the *delta* against the previous snapshot into one
+//! fixed-width [`Window`], kept in a bounded ring of the most recent
+//! `retention` windows.
+//!
+//! Because [`LogHist`] merges (and therefore subtracts, see
+//! [`LogHist::diff`]) bucket-wise, a window's latency histogram is
+//! exact at bucket resolution, and re-merging any run of windows
+//! ([`WindowedSeries::merged_last`]) reproduces the cumulative
+//! histogram over that span — which is what the SLO burn-rate
+//! evaluator ([`crate::obs::slo`]) leans on for its fast/slow window
+//! pair, and what the flight recorder ([`crate::obs::flight`]) dumps
+//! as the last-N-windows section of a postmortem bundle.
+
+use crate::util::json::{num, obj, Json};
+
+use super::hist::LogHist;
+
+/// Geometry of a windowed series: how wide each window is and how many
+/// are retained.
+#[derive(Clone, Copy, Debug)]
+pub struct SeriesConfig {
+    /// Window width in µs (the engine's `health_ms=` knob × 1000).
+    pub window_us: u64,
+    /// Windows kept in the ring; older windows are evicted.
+    pub retention: usize,
+}
+
+/// One **cumulative** observation of the run's health counters, taken
+/// at a point in time. The series stores deltas, not these; callers
+/// build one per tick from the live cells and hand it to
+/// [`WindowedSeries::observe`].
+#[derive(Clone, Debug, Default)]
+pub struct HealthSample {
+    /// Cumulative request-latency histogram (µs), merged over shards.
+    pub lat: LogHist,
+    /// Requests completed (replies delivered, including errors).
+    pub completed: u64,
+    /// Completed requests whose executor errored.
+    pub errors: u64,
+    /// Completed requests that missed their deadline.
+    pub deadline_missed: u64,
+    /// Completed requests with a real (non-empty-logits) prediction.
+    pub evaluated: u64,
+    /// Evaluated requests whose top-1 prediction was correct.
+    pub correct: u64,
+    /// Requests shed by admission or queue overflow.
+    pub shed: u64,
+    /// Requests admitted with degraded fanouts.
+    pub degraded: u64,
+    /// Feature-cache fresh hits.
+    pub cache_hits: u64,
+    /// Feature-cache misses.
+    pub cache_misses: u64,
+    /// Feature-cache stale hits (version-invalidated rows).
+    pub stale_hits: u64,
+    /// MFG frontier references with multiplicity (dedup numerator).
+    pub frontier_refs: u64,
+    /// Unique MFG input nodes (dedup denominator).
+    pub input_nodes: u64,
+    /// Sum of per-micro-batch community purity, in permille.
+    pub purity_permille_sum: u64,
+    /// Micro-batches formed (denominator for the purity mean).
+    pub batches: u64,
+    /// Requests waiting on the serving queue **right now** (gauge, not
+    /// a cumulative counter — copied into the window as-is).
+    pub queue_depth: u64,
+}
+
+/// One sealed window: the counter **deltas** between two consecutive
+/// cumulative samples, plus derived-rate helpers.
+#[derive(Clone, Debug)]
+pub struct Window {
+    /// 0-based sequence number since the run started (keeps counting
+    /// past ring eviction).
+    pub seq: u64,
+    /// Window start, µs on the run clock.
+    pub start_us: u64,
+    /// Window end (the tick that sealed it), µs on the run clock.
+    pub end_us: u64,
+    /// Latencies of requests completed inside this window.
+    pub lat: LogHist,
+    /// Completions inside this window.
+    pub completed: u64,
+    /// Executor errors inside this window.
+    pub errors: u64,
+    /// Deadline misses inside this window.
+    pub deadline_missed: u64,
+    /// Evaluated predictions inside this window.
+    pub evaluated: u64,
+    /// Correct predictions inside this window.
+    pub correct: u64,
+    /// Requests shed inside this window.
+    pub shed: u64,
+    /// Requests degraded inside this window.
+    pub degraded: u64,
+    /// Cache fresh hits inside this window.
+    pub cache_hits: u64,
+    /// Cache misses inside this window.
+    pub cache_misses: u64,
+    /// Cache stale hits inside this window.
+    pub stale_hits: u64,
+    /// Frontier references sampled inside this window.
+    pub frontier_refs: u64,
+    /// Unique input nodes sampled inside this window.
+    pub input_nodes: u64,
+    /// Purity permille summed over this window's micro-batches.
+    pub purity_permille_sum: u64,
+    /// Micro-batches formed inside this window.
+    pub batches: u64,
+    /// Queue depth gauge at seal time.
+    pub queue_depth: u64,
+}
+
+impl Window {
+    /// Shed fraction of offered load: `shed / (completed + shed)`
+    /// (0 when the window saw no traffic).
+    pub fn shed_rate(&self) -> f64 {
+        ratio(self.shed, self.completed + self.shed)
+    }
+
+    /// Error fraction of completions (0 when none completed).
+    pub fn error_rate(&self) -> f64 {
+        ratio(self.errors, self.completed)
+    }
+
+    /// Stale fraction of cache lookups
+    /// (`stale / (hits + misses + stale)`).
+    pub fn stale_rate(&self) -> f64 {
+        ratio(
+            self.stale_hits,
+            self.cache_hits + self.cache_misses + self.stale_hits,
+        )
+    }
+
+    /// Top-1 accuracy over this window's evaluated predictions, or
+    /// `None` when nothing was evaluated (no-op executor, idle window).
+    pub fn accuracy(&self) -> Option<f64> {
+        (self.evaluated > 0)
+            .then(|| self.correct as f64 / self.evaluated as f64)
+    }
+
+    /// Cross-request sampling dedup factor (`refs / unique nodes`, 1.0
+    /// when nothing was sampled).
+    pub fn dedup_factor(&self) -> f64 {
+        if self.input_nodes == 0 {
+            1.0
+        } else {
+            self.frontier_refs as f64 / self.input_nodes as f64
+        }
+    }
+
+    /// Mean community purity of this window's micro-batches, in
+    /// `[0, 1]` (0 when no batch formed).
+    pub fn purity(&self) -> f64 {
+        ratio(self.purity_permille_sum, self.batches * 1000)
+    }
+
+    /// Flat JSON object for the postmortem bundle and `ServeReport`:
+    /// counters plus derived latency quantiles (the full bucket array
+    /// stays in memory only).
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("seq", num(self.seq as f64)),
+            ("start_us", num(self.start_us as f64)),
+            ("end_us", num(self.end_us as f64)),
+            ("completed", num(self.completed as f64)),
+            ("errors", num(self.errors as f64)),
+            ("deadline_missed", num(self.deadline_missed as f64)),
+            ("evaluated", num(self.evaluated as f64)),
+            ("correct", num(self.correct as f64)),
+            ("shed", num(self.shed as f64)),
+            ("degraded", num(self.degraded as f64)),
+            ("cache_hits", num(self.cache_hits as f64)),
+            ("cache_misses", num(self.cache_misses as f64)),
+            ("stale_hits", num(self.stale_hits as f64)),
+            ("batches", num(self.batches as f64)),
+            ("queue_depth", num(self.queue_depth as f64)),
+            ("shed_rate", num(self.shed_rate())),
+            ("error_rate", num(self.error_rate())),
+            ("dedup_factor", num(self.dedup_factor())),
+            ("purity", num(self.purity())),
+            ("lat_count", num(self.lat.count() as f64)),
+            ("lat_p50_us", num(self.lat.quantile(0.5) as f64)),
+            ("lat_p95_us", num(self.lat.quantile(0.95) as f64)),
+            ("lat_p99_us", num(self.lat.quantile(0.99) as f64)),
+            ("lat_max_us", num(self.lat.max() as f64)),
+        ])
+    }
+}
+
+fn ratio(n: u64, d: u64) -> f64 {
+    if d == 0 {
+        0.0
+    } else {
+        n as f64 / d as f64
+    }
+}
+
+/// The bounded ring of recent [`Window`]s plus the previous cumulative
+/// snapshot the next delta will be taken against. Single-writer by
+/// design: only the engine's telemetry thread observes; readers (SLO
+/// evaluation, flight dumps, the final report) run on that same thread
+/// or after it quiesces.
+#[derive(Debug)]
+pub struct WindowedSeries {
+    cfg: SeriesConfig,
+    prev_ts_us: u64,
+    prev: HealthSample,
+    ring: std::collections::VecDeque<Window>,
+    sealed: u64,
+}
+
+impl WindowedSeries {
+    /// Empty series; deltas start against a zero sample at `start_us`
+    /// (the run clock's origin), so the first observed window covers
+    /// the run's actual beginning.
+    pub fn new(cfg: SeriesConfig, start_us: u64) -> WindowedSeries {
+        WindowedSeries {
+            cfg: SeriesConfig {
+                window_us: cfg.window_us.max(1),
+                retention: cfg.retention.max(1),
+            },
+            prev_ts_us: start_us,
+            prev: HealthSample::default(),
+            ring: std::collections::VecDeque::new(),
+            sealed: 0,
+        }
+    }
+
+    /// The series geometry.
+    pub fn config(&self) -> SeriesConfig {
+        self.cfg
+    }
+
+    /// Seal one window: the delta between `cur` and the previous
+    /// cumulative sample, spanning `[prev_ts, ts_us)`. Returns the
+    /// sealed window's ring position. Counters in `cur` must be
+    /// cumulative and monotone (subtraction saturates defensively).
+    pub fn observe(&mut self, ts_us: u64, cur: HealthSample) -> &Window {
+        let w = Window {
+            seq: self.sealed,
+            start_us: self.prev_ts_us,
+            end_us: ts_us,
+            lat: cur.lat.diff(&self.prev.lat),
+            completed: cur.completed.saturating_sub(self.prev.completed),
+            errors: cur.errors.saturating_sub(self.prev.errors),
+            deadline_missed: cur
+                .deadline_missed
+                .saturating_sub(self.prev.deadline_missed),
+            evaluated: cur.evaluated.saturating_sub(self.prev.evaluated),
+            correct: cur.correct.saturating_sub(self.prev.correct),
+            shed: cur.shed.saturating_sub(self.prev.shed),
+            degraded: cur.degraded.saturating_sub(self.prev.degraded),
+            cache_hits: cur.cache_hits.saturating_sub(self.prev.cache_hits),
+            cache_misses: cur
+                .cache_misses
+                .saturating_sub(self.prev.cache_misses),
+            stale_hits: cur.stale_hits.saturating_sub(self.prev.stale_hits),
+            frontier_refs: cur
+                .frontier_refs
+                .saturating_sub(self.prev.frontier_refs),
+            input_nodes: cur.input_nodes.saturating_sub(self.prev.input_nodes),
+            purity_permille_sum: cur
+                .purity_permille_sum
+                .saturating_sub(self.prev.purity_permille_sum),
+            batches: cur.batches.saturating_sub(self.prev.batches),
+            queue_depth: cur.queue_depth,
+        };
+        self.prev_ts_us = ts_us;
+        self.prev = cur;
+        self.sealed += 1;
+        if self.ring.len() == self.cfg.retention {
+            self.ring.pop_front();
+        }
+        self.ring.push_back(w);
+        self.ring.back().expect("just pushed")
+    }
+
+    /// Windows ever sealed (keeps counting past eviction).
+    pub fn sealed(&self) -> u64 {
+        self.sealed
+    }
+
+    /// Retained windows, oldest first.
+    pub fn windows(&self) -> impl Iterator<Item = &Window> {
+        self.ring.iter()
+    }
+
+    /// The most recently sealed window.
+    pub fn last(&self) -> Option<&Window> {
+        self.ring.back()
+    }
+
+    /// Merge the newest `n` retained windows (fewer early in the run)
+    /// into one synthetic window spanning them — the burn-rate
+    /// evaluator's fast/slow lookback. `None` before the first seal.
+    pub fn merged_last(&self, n: usize) -> Option<Window> {
+        let n = n.max(1).min(self.ring.len());
+        if n == 0 {
+            return None;
+        }
+        let slice: Vec<&Window> = self.ring.iter().rev().take(n).collect();
+        let newest = slice.first().expect("n >= 1");
+        let oldest = slice.last().expect("n >= 1");
+        let mut m = Window {
+            seq: newest.seq,
+            start_us: oldest.start_us,
+            end_us: newest.end_us,
+            lat: LogHist::new(),
+            completed: 0,
+            errors: 0,
+            deadline_missed: 0,
+            evaluated: 0,
+            correct: 0,
+            shed: 0,
+            degraded: 0,
+            cache_hits: 0,
+            cache_misses: 0,
+            stale_hits: 0,
+            frontier_refs: 0,
+            input_nodes: 0,
+            purity_permille_sum: 0,
+            batches: 0,
+            queue_depth: newest.queue_depth,
+        };
+        for w in slice {
+            m.lat.merge(&w.lat);
+            m.completed += w.completed;
+            m.errors += w.errors;
+            m.deadline_missed += w.deadline_missed;
+            m.evaluated += w.evaluated;
+            m.correct += w.correct;
+            m.shed += w.shed;
+            m.degraded += w.degraded;
+            m.cache_hits += w.cache_hits;
+            m.cache_misses += w.cache_misses;
+            m.stale_hits += w.stale_hits;
+            m.frontier_refs += w.frontier_refs;
+            m.input_nodes += w.input_nodes;
+            m.purity_permille_sum += w.purity_permille_sum;
+            m.batches += w.batches;
+        }
+        Some(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn sample_at(k: u64) -> HealthSample {
+        // cumulative counters that grow k-per-tick in distinct ratios
+        let mut lat = LogHist::new();
+        for i in 0..k * 10 {
+            lat.record(100 + i);
+        }
+        HealthSample {
+            lat,
+            completed: k * 10,
+            errors: k,
+            deadline_missed: k * 2,
+            evaluated: k * 8,
+            correct: k * 6,
+            shed: k * 3,
+            degraded: k,
+            cache_hits: k * 100,
+            cache_misses: k * 20,
+            stale_hits: k * 5,
+            frontier_refs: k * 400,
+            input_nodes: k * 200,
+            purity_permille_sum: k * 900,
+            batches: k,
+            queue_depth: k % 7,
+        }
+    }
+
+    /// Satellite test: the ring rotates — sealing more windows than
+    /// the retention keeps only the newest, with sequence numbers that
+    /// keep counting.
+    #[test]
+    fn ring_rotation_keeps_newest_windows() {
+        let mut s = WindowedSeries::new(
+            SeriesConfig { window_us: 1_000, retention: 4 },
+            0,
+        );
+        for t in 1..=10u64 {
+            s.observe(t * 1_000, sample_at(t));
+        }
+        assert_eq!(s.sealed(), 10);
+        let seqs: Vec<u64> = s.windows().map(|w| w.seq).collect();
+        assert_eq!(seqs, vec![6, 7, 8, 9]);
+        let w = s.last().unwrap();
+        assert_eq!(w.start_us, 9_000);
+        assert_eq!(w.end_us, 10_000);
+        // every retained window is a one-tick delta
+        for w in s.windows() {
+            assert_eq!(w.completed, 10);
+            assert_eq!(w.shed, 3);
+            assert_eq!(w.lat.count(), 10);
+        }
+        // merged_last never exceeds what is retained
+        let m = s.merged_last(100).unwrap();
+        assert_eq!(m.completed, 40);
+        assert_eq!(m.start_us, 6_000);
+        assert_eq!(m.end_us, 10_000);
+    }
+
+    /// Satellite test: merging all windows reproduces the whole-run
+    /// cumulative `LogHist` — identical buckets, count and sum, and
+    /// therefore identical quantiles at bucket resolution.
+    #[test]
+    fn window_merge_matches_whole_run_hist() {
+        let mut rng = Rng::new(77);
+        let mut cum = LogHist::new();
+        let mut cum_completed = 0u64;
+        let mut s = WindowedSeries::new(
+            SeriesConfig { window_us: 500, retention: 64 },
+            0,
+        );
+        for t in 1..=20u64 {
+            // a bursty tick: 0..400 new samples
+            for _ in 0..rng.below(400) {
+                cum.record(50 + rng.below(1_000_000));
+                cum_completed += 1;
+            }
+            let samp = HealthSample {
+                lat: cum.clone(),
+                completed: cum_completed,
+                ..Default::default()
+            };
+            s.observe(t * 500, samp);
+        }
+        let merged = s.merged_last(20).unwrap();
+        assert_eq!(merged.lat.count(), cum.count());
+        assert_eq!(merged.lat.sum(), cum.sum());
+        assert!(merged.lat.buckets().eq(cum.buckets()));
+        assert_eq!(merged.completed, cum_completed);
+        for q in [0.5, 0.9, 0.99] {
+            let a = merged.lat.quantile(q) as f64;
+            let b = cum.quantile(q) as f64;
+            let rel = (a - b).abs() / b.max(1.0);
+            assert!(rel <= 1.0 / 32.0 + 1e-9, "q={q}: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn derived_rates_are_the_documented_ratios() {
+        let mut s = WindowedSeries::new(
+            SeriesConfig { window_us: 1_000, retention: 8 },
+            0,
+        );
+        let w = s.observe(1_000, sample_at(4)).clone();
+        assert!((w.shed_rate() - 12.0 / 52.0).abs() < 1e-12);
+        assert!((w.error_rate() - 4.0 / 40.0).abs() < 1e-12);
+        assert!(
+            (w.stale_rate() - 20.0 / (400.0 + 80.0 + 20.0)).abs() < 1e-12
+        );
+        assert_eq!(w.accuracy(), Some(0.75));
+        assert!((w.dedup_factor() - 2.0).abs() < 1e-12);
+        assert!((w.purity() - 0.9).abs() < 1e-12);
+        // an idle window has no accuracy and zero rates
+        let idle = s.observe(2_000, sample_at(4)).clone();
+        assert_eq!(idle.accuracy(), None);
+        assert_eq!(idle.shed_rate(), 0.0);
+        assert_eq!(idle.lat.count(), 0);
+        // JSON shape parses back
+        let j = crate::util::json::Json::parse(&w.to_json().to_string_pretty())
+            .unwrap();
+        assert_eq!(j.get("completed").unwrap().as_usize().unwrap(), 40);
+        assert!(j.get("lat_p99_us").unwrap().as_f64().unwrap() > 0.0);
+    }
+}

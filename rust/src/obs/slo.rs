@@ -1,0 +1,717 @@
+//! Declarative SLOs with multi-window burn-rate alerting.
+//!
+//! An SLO here is "at most a `budget` fraction of traffic may be bad",
+//! where *bad* is per-target: slower than the p99 latency target, shed,
+//! errored, served stale, or mispredicted. Each evaluation tick (one
+//! sealed window of the health series, [`crate::obs::series`])
+//! computes a **burn rate** per target — the observed bad fraction
+//! divided by the budget, so `1.0` means the error budget is being
+//! consumed exactly as fast as allowed — over two lookbacks:
+//!
+//! * a **fast** window (last `fast_windows` windows) that reacts
+//!   quickly, and
+//! * a **slow** window (last `slow_windows` windows) that filters
+//!   one-window blips.
+//!
+//! The alert **fires** only when *both* burns are at or above
+//! `burn_threshold` (the classic SRE multi-window rule: fast alone is
+//! jumpy, slow alone is sluggish), and **clears** with hysteresis:
+//! both burns must stay below `clear_ratio × burn_threshold` for
+//! `clear_evals` consecutive ticks. Between those bands the alert
+//! holds its state, so a burn oscillating around the threshold cannot
+//! flap.
+//!
+//! Transitions are recorded as trace instants
+//! ([`crate::obs::span::EventKind::SloFire`] / `SloClear`), exported
+//! in the Prometheus snapshot ([`SloRuntime::export_prom`]), surfaced
+//! in `ServeReport.health{}`, and the first fire can trigger a flight
+//! recorder dump ([`crate::obs::flight`]).
+
+use anyhow::{bail, Result};
+
+use super::export::PromText;
+use super::series::{Window, WindowedSeries};
+
+/// What a single SLO target constrains.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SloKind {
+    /// p99 request latency at most the target (threshold in µs; the
+    /// implied budget is the 1 % of requests a p99 may exceed).
+    LatencyP99,
+    /// Shed fraction of offered load at most the target.
+    ShedRate,
+    /// Executor-error fraction of completions at most the target.
+    ErrorRate,
+    /// Stale fraction of cache lookups at most the target.
+    StaleRate,
+    /// Top-1 accuracy at least the target (a floor, not a cap).
+    AccuracyFloor,
+}
+
+impl SloKind {
+    /// Stable label used in traces, Prometheus and the report.
+    pub fn label(self) -> &'static str {
+        match self {
+            SloKind::LatencyP99 => "p99_latency",
+            SloKind::ShedRate => "shed_rate",
+            SloKind::ErrorRate => "error_rate",
+            SloKind::StaleRate => "stale_rate",
+            SloKind::AccuracyFloor => "accuracy",
+        }
+    }
+}
+
+/// One target: a kind plus its threshold (µs for
+/// [`SloKind::LatencyP99`], a fraction in `[0, 1]` for everything
+/// else).
+#[derive(Clone, Copy, Debug)]
+pub struct SloTarget {
+    /// What is constrained.
+    pub kind: SloKind,
+    /// The constraint value (see [`SloTarget::kind`] for units).
+    pub threshold: f64,
+}
+
+impl SloTarget {
+    /// The error budget: the bad fraction at which the burn rate reads
+    /// exactly 1.0.
+    fn budget(&self) -> f64 {
+        let b = match self.kind {
+            // "p99 <= target" tolerates 1% of requests over target
+            SloKind::LatencyP99 => 0.01,
+            SloKind::ShedRate | SloKind::ErrorRate | SloKind::StaleRate => {
+                self.threshold
+            }
+            SloKind::AccuracyFloor => 1.0 - self.threshold,
+        };
+        b.max(1e-9)
+    }
+
+    /// Observed bad fraction over `w`, or `None` when the window holds
+    /// no evidence for this target (no traffic / nothing evaluated) —
+    /// absence of data never burns budget.
+    fn bad_fraction(&self, w: &Window) -> Option<f64> {
+        match self.kind {
+            SloKind::LatencyP99 => {
+                if w.lat.is_empty() {
+                    return None;
+                }
+                Some(
+                    w.lat.count_above(self.threshold as u64) as f64
+                        / w.lat.count() as f64,
+                )
+            }
+            SloKind::ShedRate => {
+                let offered = w.completed + w.shed;
+                (offered > 0).then(|| w.shed as f64 / offered as f64)
+            }
+            SloKind::ErrorRate => (w.completed > 0)
+                .then(|| w.errors as f64 / w.completed as f64),
+            SloKind::StaleRate => {
+                let lookups = w.cache_hits + w.cache_misses + w.stale_hits;
+                (lookups > 0).then(|| w.stale_hits as f64 / lookups as f64)
+            }
+            SloKind::AccuracyFloor => w.accuracy().map(|a| 1.0 - a),
+        }
+    }
+
+    /// Burn rate over `w`: bad fraction ÷ budget (0 with no evidence).
+    pub fn burn(&self, w: &Window) -> f64 {
+        self.bad_fraction(w).map(|b| b / self.budget()).unwrap_or(0.0)
+    }
+}
+
+/// The declarative SLO set plus the alerting policy, parsed from the
+/// `slo=` knob.
+#[derive(Clone, Debug)]
+pub struct SloSpec {
+    /// The targets under watch.
+    pub targets: Vec<SloTarget>,
+    /// Fast lookback, in windows (reactivity).
+    pub fast_windows: usize,
+    /// Slow lookback, in windows (blip filtering).
+    pub slow_windows: usize,
+    /// Both burns must reach this to fire (1.0 = budget consumed
+    /// exactly as fast as allowed).
+    pub burn_threshold: f64,
+    /// Clearing band: both burns must drop below
+    /// `clear_ratio × burn_threshold` to count as calm.
+    pub clear_ratio: f64,
+    /// Consecutive calm evaluations required to clear (hysteresis).
+    pub clear_evals: usize,
+}
+
+impl SloSpec {
+    /// The `slo=default` policy: p99 ≤ 50 ms, shed ≤ 5 %, errors
+    /// ≤ 2 %; fast 1 / slow 6 windows, fire at burn ≥ 1, clear after
+    /// 3 calm ticks below half the threshold. Stale-rate and accuracy
+    /// targets are opt-in (they depend on churn/executor setup).
+    pub fn default_spec() -> SloSpec {
+        SloSpec {
+            targets: vec![
+                SloTarget { kind: SloKind::LatencyP99, threshold: 50_000.0 },
+                SloTarget { kind: SloKind::ShedRate, threshold: 0.05 },
+                SloTarget { kind: SloKind::ErrorRate, threshold: 0.02 },
+            ],
+            fast_windows: 1,
+            slow_windows: 6,
+            burn_threshold: 1.0,
+            clear_ratio: 0.5,
+            clear_evals: 3,
+        }
+    }
+
+    /// Parse the `slo=` knob: `default`, or a comma-separated list of
+    /// `key=value` pairs replacing the default targets — `p99_ms=`,
+    /// `shed=`, `err=`, `stale=`, `acc=` (targets; only the named ones
+    /// are installed) and `fast=`, `slow=`, `burn=`, `clear_ratio=`,
+    /// `clear=` (policy). Example:
+    /// `slo=p99_ms=20,shed=0.02,slow=8`.
+    pub fn parse(spec: &str) -> Result<SloSpec> {
+        let spec = spec.trim();
+        if spec.is_empty() || spec == "default" {
+            return Ok(SloSpec::default_spec());
+        }
+        let mut out = SloSpec { targets: Vec::new(), ..SloSpec::default_spec() };
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (k, v) = part
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("slo: {part:?} is not k=v"))?;
+            let fv: f64 = v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("slo: bad value in {part:?}"))?;
+            let target = |kind, threshold| SloTarget { kind, threshold };
+            match k {
+                "p99_ms" => out
+                    .targets
+                    .push(target(SloKind::LatencyP99, fv * 1_000.0)),
+                "shed" => out.targets.push(target(SloKind::ShedRate, fv)),
+                "err" => out.targets.push(target(SloKind::ErrorRate, fv)),
+                "stale" => out.targets.push(target(SloKind::StaleRate, fv)),
+                "acc" => out.targets.push(target(SloKind::AccuracyFloor, fv)),
+                "fast" => out.fast_windows = fv as usize,
+                "slow" => out.slow_windows = fv as usize,
+                "burn" => out.burn_threshold = fv,
+                "clear_ratio" => out.clear_ratio = fv,
+                "clear" => out.clear_evals = fv as usize,
+                other => bail!(
+                    "slo: unknown key {other:?} (targets: p99_ms shed err \
+                     stale acc; policy: fast slow burn clear_ratio clear)"
+                ),
+            }
+        }
+        if out.targets.is_empty() {
+            out.targets = SloSpec::default_spec().targets;
+        }
+        out.validate()?;
+        Ok(out)
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.fast_windows == 0 || self.slow_windows < self.fast_windows {
+            bail!(
+                "slo: need 1 <= fast ({}) <= slow ({})",
+                self.fast_windows,
+                self.slow_windows
+            );
+        }
+        if self.burn_threshold <= 0.0 {
+            bail!("slo: burn threshold must be > 0");
+        }
+        if !(0.0..=1.0).contains(&self.clear_ratio) {
+            bail!("slo: clear_ratio must be in [0, 1]");
+        }
+        if self.clear_evals == 0 {
+            bail!("slo: clear must be >= 1");
+        }
+        for t in &self.targets {
+            let ok = match t.kind {
+                SloKind::LatencyP99 => t.threshold > 0.0,
+                _ => (0.0..=1.0).contains(&t.threshold),
+            };
+            if !ok {
+                bail!(
+                    "slo: {} threshold {} out of range",
+                    t.kind.label(),
+                    t.threshold
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Human-readable one-liner (CLI / report headers).
+    pub fn label(&self) -> String {
+        let targets: Vec<String> = self
+            .targets
+            .iter()
+            .map(|t| match t.kind {
+                SloKind::LatencyP99 => {
+                    format!("p99<={:.0}ms", t.threshold / 1_000.0)
+                }
+                _ => format!("{}<={:.3}", t.kind.label(), t.threshold),
+            })
+            .collect();
+        format!(
+            "{} [fast={} slow={} burn>={}]",
+            targets.join(" "),
+            self.fast_windows,
+            self.slow_windows,
+            self.burn_threshold
+        )
+    }
+}
+
+/// Live alert state for one target.
+#[derive(Clone, Debug)]
+pub struct AlertState {
+    /// The target under watch.
+    pub target: SloTarget,
+    /// Currently firing?
+    pub firing: bool,
+    /// Fire transitions so far.
+    pub fired: u64,
+    /// Clear transitions so far.
+    pub cleared: u64,
+    /// First tick (µs) the **fast** burn crossed the threshold — the
+    /// moment the breach became observable; the fire-delay the `exp
+    /// health` gate bounds is `first_fire_us - first_breach_us`.
+    pub first_breach_us: Option<u64>,
+    /// First tick (µs) the alert fired.
+    pub first_fire_us: Option<u64>,
+    /// Most recent fast burn.
+    pub burn_fast: f64,
+    /// Most recent slow burn.
+    pub burn_slow: f64,
+    calm: usize,
+}
+
+/// One recorded fire/clear transition.
+#[derive(Clone, Debug)]
+pub struct Transition {
+    /// Index of the target in the spec (the trace instant's `a`).
+    pub index: usize,
+    /// The target's stable label.
+    pub slo: &'static str,
+    /// `true` = fired, `false` = cleared.
+    pub fired: bool,
+    /// Tick timestamp, µs on the run clock.
+    pub ts_us: u64,
+    /// Fast burn at the transition.
+    pub burn_fast: f64,
+    /// Slow burn at the transition.
+    pub burn_slow: f64,
+}
+
+/// The evaluator: owns per-target [`AlertState`] and the transition
+/// log. Drive it with one [`SloRuntime::evaluate`] call per sealed
+/// window.
+#[derive(Debug)]
+pub struct SloRuntime {
+    spec: SloSpec,
+    states: Vec<AlertState>,
+    transitions: Vec<Transition>,
+}
+
+impl SloRuntime {
+    /// Evaluator for `spec` with all alerts quiet.
+    pub fn new(spec: SloSpec) -> SloRuntime {
+        let states = spec
+            .targets
+            .iter()
+            .map(|&target| AlertState {
+                target,
+                firing: false,
+                fired: 0,
+                cleared: 0,
+                first_breach_us: None,
+                first_fire_us: None,
+                burn_fast: 0.0,
+                burn_slow: 0.0,
+                calm: 0,
+            })
+            .collect();
+        SloRuntime { spec, states, transitions: Vec::new() }
+    }
+
+    /// The spec being evaluated.
+    pub fn spec(&self) -> &SloSpec {
+        &self.spec
+    }
+
+    /// Per-target alert states.
+    pub fn states(&self) -> &[AlertState] {
+        &self.states
+    }
+
+    /// Every transition recorded so far, oldest first.
+    pub fn transitions(&self) -> &[Transition] {
+        &self.transitions
+    }
+
+    /// Any alert currently firing?
+    pub fn any_firing(&self) -> bool {
+        self.states.iter().any(|s| s.firing)
+    }
+
+    /// One evaluation tick against the series' current windows.
+    /// Returns the transitions that happened *this* tick (also
+    /// appended to the log) so the caller can emit trace events and
+    /// trigger the flight recorder.
+    pub fn evaluate(
+        &mut self,
+        series: &WindowedSeries,
+        now_us: u64,
+    ) -> Vec<Transition> {
+        let (Some(fast), Some(slow)) = (
+            series.merged_last(self.spec.fast_windows),
+            series.merged_last(self.spec.slow_windows),
+        ) else {
+            return Vec::new();
+        };
+        let mut out = Vec::new();
+        for (i, st) in self.states.iter_mut().enumerate() {
+            st.burn_fast = st.target.burn(&fast);
+            st.burn_slow = st.target.burn(&slow);
+            let hot = self.spec.burn_threshold;
+            let cold = self.spec.burn_threshold * self.spec.clear_ratio;
+            if st.burn_fast >= hot && st.first_breach_us.is_none() {
+                st.first_breach_us = Some(now_us);
+            }
+            let transition = if !st.firing {
+                if st.burn_fast >= hot && st.burn_slow >= hot {
+                    st.firing = true;
+                    st.fired += 1;
+                    st.calm = 0;
+                    st.first_fire_us.get_or_insert(now_us);
+                    true
+                } else {
+                    false
+                }
+            } else {
+                if st.burn_fast < cold && st.burn_slow < cold {
+                    st.calm += 1;
+                } else {
+                    st.calm = 0;
+                }
+                if st.calm >= self.spec.clear_evals {
+                    st.firing = false;
+                    st.cleared += 1;
+                    st.calm = 0;
+                    true
+                } else {
+                    false
+                }
+            };
+            if transition {
+                out.push(Transition {
+                    index: i,
+                    slo: st.target.kind.label(),
+                    fired: st.firing,
+                    ts_us: now_us,
+                    burn_fast: st.burn_fast,
+                    burn_slow: st.burn_slow,
+                });
+            }
+        }
+        self.transitions.extend(out.iter().cloned());
+        out
+    }
+
+    /// Append the SLO families to a Prometheus snapshot: per-target
+    /// burn gauges (fast/slow), firing state and transition counters.
+    pub fn export_prom(&self, p: &mut PromText) {
+        p.family(
+            "serve_slo_burn_rate",
+            "gauge",
+            "error-budget burn rate (1.0 = budget consumed at the \
+             allowed rate)",
+        );
+        for st in &self.states {
+            let slo = st.target.kind.label();
+            p.sample(
+                "serve_slo_burn_rate",
+                &[("slo", slo), ("window", "fast")],
+                st.burn_fast,
+            );
+            p.sample(
+                "serve_slo_burn_rate",
+                &[("slo", slo), ("window", "slow")],
+                st.burn_slow,
+            );
+        }
+        p.family(
+            "serve_slo_alert_firing",
+            "gauge",
+            "1 while the target's burn-rate alert is firing",
+        );
+        for st in &self.states {
+            p.sample(
+                "serve_slo_alert_firing",
+                &[("slo", st.target.kind.label())],
+                if st.firing { 1.0 } else { 0.0 },
+            );
+        }
+        p.family(
+            "serve_slo_alert_transitions_total",
+            "counter",
+            "alert state transitions since the run started",
+        );
+        for st in &self.states {
+            let slo = st.target.kind.label();
+            p.sample(
+                "serve_slo_alert_transitions_total",
+                &[("slo", slo), ("state", "fire")],
+                st.fired as f64,
+            );
+            p.sample(
+                "serve_slo_alert_transitions_total",
+                &[("slo", slo), ("state", "clear")],
+                st.cleared as f64,
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::series::{HealthSample, SeriesConfig};
+
+    /// Drive a series with a given per-tick shed fraction.
+    struct Driver {
+        series: WindowedSeries,
+        cum_completed: u64,
+        cum_shed: u64,
+        t: u64,
+    }
+
+    impl Driver {
+        fn new() -> Driver {
+            Driver {
+                series: WindowedSeries::new(
+                    SeriesConfig { window_us: 1_000, retention: 32 },
+                    0,
+                ),
+                cum_completed: 0,
+                cum_shed: 0,
+                t: 0,
+            }
+        }
+
+        fn tick(&mut self, completed: u64, shed: u64) -> u64 {
+            self.cum_completed += completed;
+            self.cum_shed += shed;
+            self.t += 1_000;
+            let samp = HealthSample {
+                completed: self.cum_completed,
+                shed: self.cum_shed,
+                ..Default::default()
+            };
+            self.series.observe(self.t, samp);
+            self.t
+        }
+    }
+
+    fn shed_spec() -> SloSpec {
+        SloSpec {
+            targets: vec![SloTarget {
+                kind: SloKind::ShedRate,
+                threshold: 0.05,
+            }],
+            fast_windows: 1,
+            slow_windows: 4,
+            burn_threshold: 1.0,
+            clear_ratio: 0.5,
+            clear_evals: 3,
+        }
+    }
+
+    /// Satellite test: the alert fires once both windows burn hot,
+    /// holds through the in-between band, and clears only after the
+    /// hysteresis run of calm ticks — no flapping.
+    #[test]
+    fn fires_and_clears_with_hysteresis() {
+        let mut d = Driver::new();
+        let mut rt = SloRuntime::new(shed_spec());
+        // healthy traffic: 1% shed, well under the 5% target
+        for _ in 0..6 {
+            let now = d.tick(99, 1);
+            assert!(rt.evaluate(&d.series, now).is_empty());
+        }
+        assert!(!rt.any_firing());
+        // shed storm: 50% shed. Fast crosses immediately; slow needs
+        // enough hot windows to drag the 4-window average over budget.
+        let mut fired_at = None;
+        let mut breach_tick = None;
+        for k in 0..6 {
+            let now = d.tick(50, 50);
+            let tr = rt.evaluate(&d.series, now);
+            if breach_tick.is_none()
+                && rt.states()[0].first_breach_us.is_some()
+            {
+                breach_tick = Some(k);
+            }
+            if let Some(t) = tr.first() {
+                assert!(t.fired);
+                assert_eq!(t.slo, "shed_rate");
+                fired_at = Some(k);
+                break;
+            }
+        }
+        let fired_at = fired_at.expect("alert never fired");
+        assert_eq!(breach_tick, Some(0), "fast burn crosses on tick one");
+        assert!(
+            fired_at <= 2,
+            "slow window took too long to agree: {fired_at}"
+        );
+        assert!(rt.any_firing());
+        let st = &rt.states()[0];
+        assert!(st.first_fire_us.unwrap() >= st.first_breach_us.unwrap());
+
+        // burn oscillating between the clear band and the fire
+        // threshold: the alert must neither clear nor double-fire.
+        // (Odd count so the phase ends on a hot tick and the calm
+        // streak is zero going into the sustained-calm phase below.)
+        for k in 0..5 {
+            // alternate 4% shed (burn 0.8: under the fire threshold
+            // but over the 0.5 clear bar) and 0.1% shed (calm)
+            let now = if k % 2 == 0 { d.tick(96, 4) } else { d.tick(999, 1) };
+            let tr = rt.evaluate(&d.series, now);
+            assert!(tr.is_empty(), "flapped at oscillation tick {k}");
+        }
+        assert!(rt.any_firing(), "cleared mid-oscillation");
+        assert_eq!(rt.states()[0].fired, 1, "double fire");
+
+        // sustained calm: clears after exactly clear_evals calm ticks
+        let mut calm_ticks = 0;
+        loop {
+            let now = d.tick(1000, 0);
+            calm_ticks += 1;
+            let tr = rt.evaluate(&d.series, now);
+            if !tr.is_empty() {
+                assert!(!tr[0].fired);
+                break;
+            }
+            assert!(calm_ticks < 10, "never cleared");
+        }
+        // the slow window must first drain the storm, then 3 calm
+        // evaluations in the clear band
+        assert!(calm_ticks >= 3, "cleared before the hysteresis run");
+        assert!(!rt.any_firing());
+        assert_eq!(rt.states()[0].cleared, 1);
+        assert_eq!(rt.transitions().len(), 2);
+    }
+
+    /// Quiet traffic never fires, and an empty window (no traffic at
+    /// all) burns nothing.
+    #[test]
+    fn no_false_positives_on_healthy_or_idle_traffic() {
+        let mut d = Driver::new();
+        let mut rt = SloRuntime::new(shed_spec());
+        for k in 0..20 {
+            let now = if k % 5 == 4 {
+                d.tick(0, 0) // idle window: no evidence, no burn
+            } else {
+                d.tick(98, 2) // 2% shed, burn 0.4
+            };
+            assert!(rt.evaluate(&d.series, now).is_empty());
+        }
+        assert!(!rt.any_firing());
+        assert_eq!(rt.states()[0].fired, 0);
+        assert!(rt.states()[0].first_breach_us.is_none());
+    }
+
+    #[test]
+    fn latency_target_burns_on_fraction_over_threshold() {
+        let mut series = WindowedSeries::new(
+            SeriesConfig { window_us: 1_000, retention: 8 },
+            0,
+        );
+        let mut lat = crate::obs::LogHist::new();
+        // 2% of requests over the 50ms target => burn 2.0 vs the 1%
+        // p99 budget
+        for i in 0..1_000u64 {
+            lat.record(if i < 980 { 10_000 } else { 80_000 });
+        }
+        let samp = HealthSample {
+            lat,
+            completed: 1_000,
+            ..Default::default()
+        };
+        series.observe(1_000, samp);
+        let t = SloTarget { kind: SloKind::LatencyP99, threshold: 50_000.0 };
+        let w = series.last().unwrap();
+        let burn = t.burn(w);
+        assert!(
+            (burn - 2.0).abs() < 0.2,
+            "2% over target vs 1% budget => burn ~2, got {burn}"
+        );
+        let mut rt = SloRuntime::new(SloSpec {
+            targets: vec![t],
+            fast_windows: 1,
+            slow_windows: 1,
+            ..SloSpec::default_spec()
+        });
+        let tr = rt.evaluate(&series, 1_000);
+        assert_eq!(tr.len(), 1);
+        assert!(tr[0].fired);
+    }
+
+    #[test]
+    fn spec_parsing_and_validation() {
+        let d = SloSpec::parse("default").unwrap();
+        assert_eq!(d.targets.len(), 3);
+        assert_eq!(d.fast_windows, 1);
+        assert_eq!(d.slow_windows, 6);
+
+        let c = SloSpec::parse("p99_ms=20,shed=0.02,slow=8,clear=2").unwrap();
+        assert_eq!(c.targets.len(), 2);
+        assert_eq!(c.targets[0].kind, SloKind::LatencyP99);
+        assert_eq!(c.targets[0].threshold, 20_000.0);
+        assert_eq!(c.slow_windows, 8);
+        assert_eq!(c.clear_evals, 2);
+
+        // policy-only spec keeps the default targets
+        let p = SloSpec::parse("slow=10").unwrap();
+        assert_eq!(p.targets.len(), 3);
+        assert_eq!(p.slow_windows, 10);
+
+        for bad in [
+            "nope=1",
+            "shed",
+            "shed=abc",
+            "shed=1.5",
+            "fast=3,slow=2",
+            "burn=0",
+            "clear=0",
+            "clear_ratio=2",
+        ] {
+            assert!(SloSpec::parse(bad).is_err(), "{bad:?} accepted");
+        }
+    }
+
+    #[test]
+    fn prom_export_contains_all_families() {
+        let mut rt = SloRuntime::new(SloSpec::default_spec());
+        let mut d = Driver::new();
+        let now = d.tick(100, 0);
+        rt.evaluate(&d.series, now);
+        let mut p = PromText::new();
+        rt.export_prom(&mut p);
+        let t = p.text();
+        assert!(t.contains("# TYPE serve_slo_burn_rate gauge"));
+        assert!(t.contains(
+            "serve_slo_burn_rate{slo=\"shed_rate\",window=\"fast\"}"
+        ));
+        assert!(t.contains("serve_slo_alert_firing{slo=\"p99_latency\"} 0"));
+        assert!(t.contains(
+            "serve_slo_alert_transitions_total{slo=\"error_rate\",\
+             state=\"fire\"} 0"
+        ));
+    }
+}

@@ -72,6 +72,16 @@ pub enum EventKind {
     CkptSwap = 12,
     /// Metrics snapshot written (instant; `a` = snapshot sequence).
     MetricsFlush = 13,
+    /// SLO burn-rate alert transitioned to firing (instant; `a` = SLO
+    /// index in the run's [`crate::obs::slo::SloSpec`], `b` = fast
+    /// burn rate ×100, `c` = slow burn rate ×100).
+    SloFire = 14,
+    /// SLO burn-rate alert cleared after its hysteresis window
+    /// (instant; payload as [`EventKind::SloFire`]).
+    SloClear = 15,
+    /// Watchdog declared a thread stalled (instant; `a` = watchdog
+    /// slot index, `b` = ms since the thread's last heartbeat).
+    Stall = 16,
 }
 
 impl EventKind {
@@ -92,6 +102,9 @@ impl EventKind {
             EventKind::Relabel => "relabel",
             EventKind::CkptSwap => "ckpt_swap",
             EventKind::MetricsFlush => "metrics_flush",
+            EventKind::SloFire => "slo_fire",
+            EventKind::SloClear => "slo_clear",
+            EventKind::Stall => "stall",
         }
     }
 
@@ -123,6 +136,9 @@ impl EventKind {
             10 => EventKind::Refine,
             11 => EventKind::Relabel,
             12 => EventKind::CkptSwap,
+            14 => EventKind::SloFire,
+            15 => EventKind::SloClear,
+            16 => EventKind::Stall,
             _ => EventKind::MetricsFlush,
         }
     }
@@ -427,6 +443,24 @@ mod tests {
             c: 0xDEAD_BEEF,
         };
         assert_eq!(Event::decode(&e.encode()), e);
+    }
+
+    #[test]
+    fn health_event_kinds_round_trip() {
+        for kind in [EventKind::SloFire, EventKind::SloClear, EventKind::Stall]
+        {
+            let e = Event {
+                ts_us: 7,
+                dur_us: 0,
+                req_id: 0,
+                kind,
+                a: 1,
+                b: 250,
+                c: 90,
+            };
+            assert_eq!(Event::decode(&e.encode()), e);
+            assert!(!kind.is_span(), "{kind:?} must export as an instant");
+        }
     }
 
     #[test]

@@ -1,0 +1,249 @@
+//! Heartbeat-based liveness for the serving run's long-lived threads.
+//!
+//! Every long-lived thread of a serving run — per-shard workers, the
+//! micro-batcher, the churn maintainer, the checkpoint watcher, the
+//! telemetry thread itself — owns one [`Heartbeat`] slot in the run's
+//! [`Watchdog`]. A beat is two relaxed atomic stores, cheap enough to
+//! stamp on every loop iteration; the health tick then calls
+//! [`Watchdog::check`] and declares any thread *stalled* that has been
+//! **busy** with no beat for longer than the stall bound.
+//!
+//! The busy/idle distinction is what keeps this sound for workers that
+//! block on a channel `recv()`: a worker marks itself *idle*
+//! immediately before blocking and *busy* immediately after a batch
+//! arrives, so a worker waiting for work is silent-but-idle (healthy)
+//! while a worker wedged mid-batch — stuck in a poisoned lock, an
+//! executor that never returns, an unbounded retry — is
+//! silent-but-busy (stalled). Loop-style threads (batcher, churn,
+//! telemetry, watcher) just beat busy at the top of every bounded-wait
+//! iteration, so a wedged loop goes silent and trips the same check.
+//!
+//! Stalls surface three ways: a [`crate::obs::span::EventKind::Stall`]
+//! trace instant, the `health{}` section of the serve report, and —
+//! when a flight recorder is configured — a postmortem bundle
+//! ([`crate::obs::flight`]).
+
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+
+/// Lifecycle states a heartbeat can report (the `u8` stored in the
+/// slot).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum HeartbeatState {
+    /// Waiting for work (blocking on a queue); silence is healthy.
+    Idle = 0,
+    /// Processing; prolonged silence means the thread is wedged.
+    Busy = 1,
+    /// Exited cleanly; never considered stalled.
+    Retired = 2,
+}
+
+impl HeartbeatState {
+    fn from_u8(v: u8) -> HeartbeatState {
+        match v {
+            1 => HeartbeatState::Busy,
+            2 => HeartbeatState::Retired,
+            _ => HeartbeatState::Idle,
+        }
+    }
+}
+
+/// One thread's liveness slot: last beat timestamp, a beat counter and
+/// the busy/idle/retired state, all relaxed atomics — a beat never
+/// takes a lock and never allocates.
+#[derive(Debug, Default)]
+pub struct Heartbeat {
+    last_beat_us: AtomicU64,
+    beats: AtomicU64,
+    state: AtomicU8,
+}
+
+impl Heartbeat {
+    /// Fresh slot in the [`HeartbeatState::Idle`] state.
+    pub fn new() -> Heartbeat {
+        Heartbeat::default()
+    }
+
+    /// Mark the thread busy (processing) as of `now_us`.
+    #[inline]
+    pub fn busy(&self, now_us: u64) {
+        self.state.store(HeartbeatState::Busy as u8, Ordering::Relaxed);
+        self.last_beat_us.store(now_us, Ordering::Relaxed);
+        self.beats.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Mark the thread idle (about to block waiting for work) as of
+    /// `now_us`.
+    #[inline]
+    pub fn idle(&self, now_us: u64) {
+        self.state.store(HeartbeatState::Idle as u8, Ordering::Relaxed);
+        self.last_beat_us.store(now_us, Ordering::Relaxed);
+        self.beats.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Mark the thread cleanly exited; it can never be stalled again.
+    #[inline]
+    pub fn retire(&self) {
+        self.state
+            .store(HeartbeatState::Retired as u8, Ordering::Relaxed);
+    }
+
+    /// Timestamp of the most recent beat (µs, run clock).
+    pub fn last_beat_us(&self) -> u64 {
+        self.last_beat_us.load(Ordering::Relaxed)
+    }
+
+    /// Total beats ever recorded.
+    pub fn beats(&self) -> u64 {
+        self.beats.load(Ordering::Relaxed)
+    }
+
+    /// Current reported state.
+    pub fn state(&self) -> HeartbeatState {
+        HeartbeatState::from_u8(self.state.load(Ordering::Relaxed))
+    }
+}
+
+/// One stalled thread found by [`Watchdog::check`].
+#[derive(Clone, Debug)]
+pub struct Stall {
+    /// Registration index of the stalled thread (the `a` payload of
+    /// the emitted [`crate::obs::span::EventKind::Stall`] instant).
+    pub index: usize,
+    /// Registered thread name (`shard0/worker1`, `batcher`, …).
+    pub name: String,
+    /// µs since the thread's last heartbeat.
+    pub silent_us: u64,
+}
+
+/// The run-wide registry of heartbeats. Threads are registered (by
+/// name) before the serving scope spawns them; each thread then beats
+/// its own slot by shared reference, and the telemetry thread sweeps
+/// all slots with [`Watchdog::check`].
+#[derive(Debug, Default)]
+pub struct Watchdog {
+    names: Vec<String>,
+    slots: Vec<Heartbeat>,
+}
+
+impl Watchdog {
+    /// Empty registry.
+    pub fn new() -> Watchdog {
+        Watchdog::default()
+    }
+
+    /// Register a named thread; returns its slot index. Call before
+    /// spawning (registration needs `&mut`, beating only `&`).
+    pub fn register(&mut self, name: &str) -> usize {
+        self.names.push(name.to_string());
+        self.slots.push(Heartbeat::new());
+        self.slots.len() - 1
+    }
+
+    /// The heartbeat slot for index `i`.
+    pub fn hb(&self, i: usize) -> &Heartbeat {
+        &self.slots[i]
+    }
+
+    /// Registered thread count.
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// True when no thread is registered.
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// Registered name for index `i`.
+    pub fn name(&self, i: usize) -> &str {
+        &self.names[i]
+    }
+
+    /// Sweep every slot: a thread is stalled iff it reports
+    /// [`HeartbeatState::Busy`] and its last beat is more than
+    /// `stall_us` µs before `now_us`. Idle and retired threads are
+    /// never stalled, and a busy thread that has never beaten is
+    /// impossible by construction (`busy` is itself a beat).
+    pub fn check(&self, now_us: u64, stall_us: u64) -> Vec<Stall> {
+        self.slots
+            .iter()
+            .enumerate()
+            .filter(|(_, hb)| hb.state() == HeartbeatState::Busy)
+            .filter_map(|(i, hb)| {
+                let silent = now_us.saturating_sub(hb.last_beat_us());
+                (silent > stall_us).then(|| Stall {
+                    index: i,
+                    name: self.names[i].clone(),
+                    silent_us: silent,
+                })
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn idle_and_retired_threads_are_never_stalled() {
+        let mut wd = Watchdog::new();
+        let idle = wd.register("idle-worker");
+        let retired = wd.register("retired-worker");
+        wd.hb(idle).idle(100);
+        wd.hb(retired).busy(100);
+        wd.hb(retired).retire();
+        // both silent for far longer than the bound
+        assert!(wd.check(10_000_000, 1_000).is_empty());
+    }
+
+    /// Satellite test: an injected stalled worker — marked busy, then
+    /// silent past the bound — is detected by name, while a healthy
+    /// worker beating away is not.
+    #[test]
+    fn busy_silent_thread_is_detected_as_stalled() {
+        let mut wd = Watchdog::new();
+        let wedged = wd.register("shard0/worker0");
+        let healthy = wd.register("shard0/worker1");
+        wd.hb(wedged).busy(1_000);
+        wd.hb(healthy).busy(1_000);
+        // healthy keeps beating; wedged goes silent mid-batch
+        wd.hb(healthy).busy(2_000_000);
+        let stalls = wd.check(2_001_000, 500_000);
+        assert_eq!(stalls.len(), 1);
+        assert_eq!(stalls[0].name, "shard0/worker0");
+        assert_eq!(stalls[0].index, wedged);
+        assert_eq!(stalls[0].silent_us, 2_000_000);
+        // a beat recovers it
+        wd.hb(wedged).busy(2_002_000);
+        assert!(wd.check(2_010_000, 500_000).is_empty());
+        // going idle (back to blocking on the queue) also clears it
+        wd.hb(wedged).busy(2_020_000);
+        wd.hb(wedged).idle(2_030_000);
+        assert!(wd.check(99_000_000, 500_000).is_empty());
+    }
+
+    #[test]
+    fn beats_count_and_state_report() {
+        let hb = Heartbeat::new();
+        assert_eq!(hb.state(), HeartbeatState::Idle);
+        assert_eq!(hb.beats(), 0);
+        hb.busy(5);
+        hb.idle(9);
+        assert_eq!(hb.beats(), 2);
+        assert_eq!(hb.last_beat_us(), 9);
+        assert_eq!(hb.state(), HeartbeatState::Idle);
+        hb.retire();
+        assert_eq!(hb.state(), HeartbeatState::Retired);
+    }
+
+    #[test]
+    fn boundary_is_strictly_greater_than_stall_bound() {
+        let mut wd = Watchdog::new();
+        let i = wd.register("b");
+        wd.hb(i).busy(0);
+        assert!(wd.check(1_000, 1_000).is_empty(), "exactly at bound");
+        assert_eq!(wd.check(1_001, 1_000).len(), 1, "one past bound");
+    }
+}

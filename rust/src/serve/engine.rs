@@ -23,19 +23,21 @@
 //!   and applies graph-update epochs — topology delta-overlay swaps,
 //!   incremental label maintenance, feature-version bumps — while
 //!   everything above reads immutable snapshots;
-//! * with `metrics_ms > 0`, one metrics thread writes a periodic
-//!   Prometheus text snapshot, and with `trace=PATH` every stage
-//!   above records [`crate::obs`] span events that export as a
-//!   Chrome-trace JSON on shutdown.
+//! * with `metrics_ms > 0` or `health_ms > 0`, one telemetry thread
+//!   writes periodic Prometheus text snapshots and/or seals windowed
+//!   health samples (rolling time-series → SLO burn-rate alerts →
+//!   watchdog liveness sweeps → flight-recorder postmortems, see
+//!   [`crate::obs`]), and with `trace=PATH` every stage above records
+//!   span events that export as a Chrome-trace JSON on shutdown.
 //!
 //! The single-device path is simply `shards = 1`: one plan owning every
 //! community, one channel, one cache — not a separate code path.
 
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver};
 use std::sync::Mutex;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
@@ -43,15 +45,17 @@ use crate::ckpt::{self, ParamStore};
 use crate::config::DatasetPreset;
 use crate::graph::Dataset;
 use crate::obs::{
-    shard_track, write_chrome_trace, EventKind, LogHist, PromText, Recorder,
-    TRACK_BATCHER, TRACK_CLIENT, TRACK_WATCHER,
+    dump_postmortem, shard_track, write_chrome_trace, EventKind, HealthSample,
+    LogHist, PromText, Recorder, SeriesConfig, SloRuntime, SloSpec, Watchdog,
+    WindowedSeries, TRACK_BATCHER, TRACK_CLIENT, TRACK_WATCHER,
 };
 use crate::runtime::artifact::{default_dir, ArtifactMeta, Manifest, SpecMeta};
 use crate::runtime::kernels::KernelBackend;
 use crate::sampler::SamplerKind;
 use crate::runtime::{InferState, Runtime};
 use crate::stream::{
-    churn_loop_traced, MaintenanceMode, StreamConfig, StreamReport, StreamState,
+    churn_loop_observed, MaintenanceMode, StreamConfig, StreamReport,
+    StreamState,
 };
 use crate::util::json::{arr, num, obj, s, Json};
 use crate::util::rng::Rng;
@@ -167,6 +171,23 @@ pub struct ServeConfig {
     /// Where the metrics thread writes its snapshot (atomic
     /// tmp+rename, so scrapers never see a torn file).
     pub metrics_path: PathBuf,
+    /// Health-window period in ms (`health_ms=`): when > 0 the
+    /// telemetry thread seals one [`WindowedSeries`] window per period
+    /// (latency histogram delta + counter deltas), evaluates the SLO
+    /// runtime against it and sweeps the thread watchdog — the
+    /// temporal health layer. 0 disables all of it.
+    pub health_ms: u64,
+    /// Declarative SLO targets (`slo=`, see [`SloSpec::parse`]),
+    /// evaluated with fast/slow burn-rate alerting every health tick.
+    /// `None` with `health_ms > 0` still records windows and runs the
+    /// watchdog, it just never alerts.
+    pub slo: Option<SloSpec>,
+    /// Flight-recorder directory (`flight=DIR`): the first alert fire
+    /// or detected thread stall dumps one postmortem bundle
+    /// (`postmortem-*/` with windows, span rings, alert history,
+    /// resolved config, per-shard state) under this directory.
+    /// Requires `health_ms > 0` to ever trigger.
+    pub flight: Option<PathBuf>,
 }
 
 impl ServeConfig {
@@ -200,7 +221,102 @@ impl ServeConfig {
             trace_sample: 1000,
             metrics_ms: 0,
             metrics_path: PathBuf::from("results/serve_metrics.prom"),
+            health_ms: 0,
+            slo: None,
+            flight: None,
         }
+    }
+}
+
+/// One SLO target's end-of-run alert accounting (inside
+/// [`ServeReport::health`]).
+#[derive(Clone, Debug)]
+pub struct HealthAlert {
+    /// Target label (`p99_latency`, `shed_rate`, …).
+    pub slo: String,
+    /// Configured threshold (µs for latency, fraction for rates).
+    pub threshold: f64,
+    /// Whether the alert was still firing when the run ended.
+    pub firing: bool,
+    /// Fire transitions over the run.
+    pub fired: u64,
+    /// Clear transitions over the run.
+    pub cleared: u64,
+    /// Run clock (µs) when the fast burn first crossed the threshold.
+    pub first_breach_us: Option<u64>,
+    /// Run clock (µs) of the first fire transition. The `exp health`
+    /// gate asserts `first_fire_us - first_breach_us` stays within two
+    /// slow windows.
+    pub first_fire_us: Option<u64>,
+    /// Final fast-window burn rate.
+    pub burn_fast: f64,
+    /// Final slow-window burn rate.
+    pub burn_slow: f64,
+}
+
+impl HealthAlert {
+    /// JSON object for the report artifact.
+    pub fn to_json(&self) -> Json {
+        let opt = |v: Option<u64>| match v {
+            Some(x) => num(x as f64),
+            None => Json::Null,
+        };
+        obj(vec![
+            ("slo", s(&self.slo)),
+            ("threshold", num(self.threshold)),
+            ("firing", Json::Bool(self.firing)),
+            ("fired", num(self.fired as f64)),
+            ("cleared", num(self.cleared as f64)),
+            ("first_breach_us", opt(self.first_breach_us)),
+            ("first_fire_us", opt(self.first_fire_us)),
+            ("burn_fast", num(self.burn_fast)),
+            ("burn_slow", num(self.burn_slow)),
+        ])
+    }
+}
+
+/// End-of-run summary of the temporal health layer (`health_ms > 0`
+/// runs only).
+#[derive(Clone, Debug)]
+pub struct HealthReport {
+    /// Health-window period the run used (ms).
+    pub window_ms: u64,
+    /// Windows sealed over the run.
+    pub windows_sealed: u64,
+    /// Per-SLO-target alert accounting (empty without `slo=`).
+    pub alerts: Vec<HealthAlert>,
+    /// Total alert state transitions (fires + clears).
+    pub transitions: usize,
+    /// Threads the watchdog ever declared stalled, by registered name.
+    pub stalled_threads: Vec<String>,
+    /// Postmortem bundle directories the flight recorder published.
+    pub postmortems: Vec<PathBuf>,
+}
+
+impl HealthReport {
+    /// JSON object for the report artifact.
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("window_ms", num(self.window_ms as f64)),
+            ("windows_sealed", num(self.windows_sealed as f64)),
+            (
+                "alerts",
+                arr(self.alerts.iter().map(|a| a.to_json()).collect()),
+            ),
+            ("transitions", num(self.transitions as f64)),
+            (
+                "stalled_threads",
+                arr(self.stalled_threads.iter().map(|n| s(n)).collect()),
+            ),
+            (
+                "postmortems",
+                arr(self
+                    .postmortems
+                    .iter()
+                    .map(|p| s(&p.display().to_string()))
+                    .collect()),
+            ),
+        ])
     }
 }
 
@@ -312,6 +428,13 @@ pub struct ServeReport {
     /// volume, relabel waves, full relabels, drift, label/topology/
     /// feature versions.
     pub stream: Option<StreamReport>,
+    /// Temporal-health telemetry (`health_ms > 0` runs only): windows
+    /// sealed, per-SLO alert accounting, stalls, postmortems.
+    pub health: Option<HealthReport>,
+    /// Auxiliary threads that failed to exit within the bounded join
+    /// timeout at shutdown (the engine still blocks on them afterwards,
+    /// so a non-empty list means shutdown was slow, not leaky).
+    pub unjoined_threads: Vec<String>,
 }
 
 impl ServeReport {
@@ -371,6 +494,17 @@ impl ServeReport {
                     None => Json::Null,
                 },
             ),
+            (
+                "health",
+                match &self.health {
+                    Some(h) => h.to_json(),
+                    None => Json::Null,
+                },
+            ),
+            (
+                "unjoined_threads",
+                arr(self.unjoined_threads.iter().map(|n| s(n)).collect()),
+            ),
         ])
     }
 
@@ -408,6 +542,24 @@ impl ServeReport {
             ),
             None => String::new(),
         };
+        let health_tail = match &self.health {
+            Some(h) => {
+                let fired: u64 = h.alerts.iter().map(|a| a.fired).sum();
+                format!(
+                    " | health {}w fired {} stalls {} postmortems {}",
+                    h.windows_sealed,
+                    fired,
+                    h.stalled_threads.len(),
+                    h.postmortems.len(),
+                )
+            }
+            None => String::new(),
+        };
+        let join_tail = if self.unjoined_threads.is_empty() {
+            String::new()
+        } else {
+            format!(" | SLOW-JOIN {}", self.unjoined_threads.join(","))
+        };
         format!(
             "[serve] {} exec={} sampler={} p={:.2} shards={} spill={} \
              arrival={} \
@@ -443,7 +595,8 @@ impl ServeReport {
             self.foreign_requests(),
             exec_tail,
             stream_tail,
-        )
+        ) + &health_tail
+            + &join_tail
     }
 }
 
@@ -749,7 +902,67 @@ pub fn run(
     let churn_stop = AtomicBool::new(false);
     let metrics_stop = AtomicBool::new(false);
 
-    std::thread::scope(|scope| {
+    // ---- temporal health layer (health_ms=) ----
+    let health_on = scfg.health_ms > 0;
+    // batch-purity accumulators fed by the batcher (permille sum over
+    // routed batches); the health tick reads the deltas per window
+    let purity_sum = AtomicU64::new(0);
+    let purity_batches = AtomicU64::new(0);
+
+    // heartbeat registry: every long-lived thread gets a named slot
+    // registered before the scope spawns anything; beats are two
+    // relaxed stores, stamped regardless of health_ms so enabling the
+    // layer changes only who *reads* them
+    let mut wd = Watchdog::new();
+    let hb_batcher = wd.register("batcher");
+    let hb_telemetry = wd.register("telemetry");
+    let hb_churn = stream.as_ref().map(|_| wd.register("churn"));
+    let hb_watcher = watch_dir.as_ref().map(|_| wd.register("ckpt-watcher"));
+    let mut hb_workers = Vec::new();
+    for (sidx, &nw) in shard_workers.iter().enumerate() {
+        for k in 0..nw {
+            hb_workers.push(wd.register(&format!("shard{sidx}/worker{k}")));
+        }
+    }
+    let wd = wd;
+    // busy + silent past this bound = stalled; generous so bursty but
+    // healthy stages (full relabels, cold executors) never false-fire
+    let stall_us = scfg.health_ms.saturating_mul(8).max(2_000) * 1_000;
+
+    // resolved run config, frozen now for flight-recorder bundles
+    let resolved_cfg = obj(vec![
+        ("dataset", s(&ds.name)),
+        ("batch_size", num(batch_size as f64)),
+        ("max_delay_us", num(scfg.max_delay_us as f64)),
+        ("deadline_us", num(scfg.deadline_us as f64)),
+        ("community_bias", num(scfg.community_bias)),
+        ("workers", num(total_workers as f64)),
+        ("queue_cap", num(scfg.queue_cap as f64)),
+        ("shards", num(n_shards as f64)),
+        ("spill", s(scfg.spill.name())),
+        ("admission", s(scfg.admission.name())),
+        ("sampler", s(scfg.sampler.name())),
+        ("arrival", s(&lcfg.arrival.label())),
+        ("offered_rps", num(lcfg.arrival.offered_rps().unwrap_or(0.0))),
+        ("mutate_rps", num(scfg.mutate_rps)),
+        ("health_ms", num(scfg.health_ms as f64)),
+        (
+            "slo",
+            match &scfg.slo {
+                Some(sp) => s(&sp.label()),
+                None => Json::Null,
+            },
+        ),
+        ("seed", num(scfg.seed as f64)),
+    ]);
+
+    // the telemetry thread moves its accumulated health state here on
+    // exit so the end-of-run report can read it after the scope joins
+    type HealthState =
+        (WindowedSeries, Option<SloRuntime>, Vec<String>, Vec<PathBuf>);
+    let health_out: Mutex<Option<HealthState>> = Mutex::new(None);
+
+    let unjoined = std::thread::scope(|scope| {
         // churn thread (mutate=RATE): the single writer — generate
         // updates at the configured rate, seal epochs, apply them
         // (topology swap, label maintenance, feature versions)
@@ -759,8 +972,11 @@ pub fn run(
             let clock = &clock;
             let stop = &churn_stop;
             let rec = &rec;
+            let hb = hb_churn.map(|i| wd.hb(i));
             scope.spawn(move || {
-                churn_loop_traced(st, labels, ds, caches, clock, stop, rec);
+                churn_loop_observed(
+                    st, labels, ds, caches, clock, stop, rec, hb,
+                );
             })
         });
 
@@ -778,8 +994,10 @@ pub fn run(
             let poll_ms = scfg.ckpt_watch_ms;
             let stop = &watch_stop;
             let rec = &rec;
+            let hb = hb_watcher.map(|i| wd.hb(i));
+            let clock = &clock;
             scope.spawn(move || {
-                ckpt::watch_loop_with(
+                ckpt::watch_loop_observed(
                     watcher,
                     poll_ms,
                     stop,
@@ -813,18 +1031,37 @@ pub fn run(
                         );
                         Ok(())
                     },
+                    &move || {
+                        if let Some(hb) = hb {
+                            hb.busy(clock.now_us());
+                        }
+                    },
                 );
+                if let Some(hb) = hb {
+                    hb.retire();
+                }
             })
         });
 
-        // metrics thread (metrics_ms=N): periodic Prometheus-text
-        // snapshot of the live run — queue depth vs. capacity,
+        // telemetry thread (metrics_ms=N and/or health_ms=N): the
+        // periodic Prometheus snapshot and the temporal health layer
+        // share one thread with independent due-times.
+        //
+        // The *metrics tick* writes queue depth vs. capacity,
         // shed/degrade totals, per-shard cache outcomes and latency
         // summaries quoted from the same log-bucket histograms the
         // end-of-run report uses, so the snapshot and the report can
-        // never disagree about p50/p99. Writes are atomic
-        // (tmp+rename); a final snapshot flushes on shutdown.
-        let metrics_handle = (scfg.metrics_ms > 0).then(|| {
+        // never disagree about p50/p99 (plus SLO burn gauges when
+        // `slo=` is set). Writes are atomic (tmp+rename).
+        //
+        // The *health tick* folds new completion records and live
+        // counters into one cumulative [`HealthSample`], seals it into
+        // the windowed series, evaluates SLO burn rates (transitions
+        // become SloFire/SloClear instants), sweeps the watchdog for
+        // stalled threads, and — on the run's first fire or stall with
+        // `flight=` set — dumps a postmortem bundle. Both ticks flush
+        // one final time on shutdown.
+        let telemetry_handle = (scfg.metrics_ms > 0 || health_on).then(|| {
             let queue = &queue;
             let adm = &adm;
             let caches = &caches[..];
@@ -832,168 +1069,437 @@ pub fn run(
             let stream = stream.as_ref();
             let rec = &rec;
             let stop = &metrics_stop;
+            let clock = &clock;
+            let records = &records;
+            let wd = &wd;
+            let purity_sum = &purity_sum;
+            let purity_batches = &purity_batches;
+            let health_out = &health_out;
+            let resolved_cfg = resolved_cfg.clone();
+            let flight_dir = scfg.flight.clone();
+            let slo_spec = scfg.slo.clone();
             let path = scfg.metrics_path.clone();
-            let period = Duration::from_millis(scfg.metrics_ms.max(1));
+            let mut metrics_on = scfg.metrics_ms > 0;
+            let metrics_period_us = scfg.metrics_ms.max(1) * 1_000;
+            let health_period_us = scfg.health_ms.max(1) * 1_000;
             scope.spawn(move || {
+                let hb = wd.hb(hb_telemetry);
+                let t0 = clock.now_us();
+                let mut series = health_on.then(|| {
+                    // retain enough windows to cover the slow burn
+                    // window several times over, for postmortem context
+                    let retention = slo_spec
+                        .as_ref()
+                        .map(|sp| sp.slow_windows * 4)
+                        .unwrap_or(0)
+                        .clamp(32, 512);
+                    WindowedSeries::new(
+                        SeriesConfig { window_us: health_period_us, retention },
+                        t0,
+                    )
+                });
+                let mut slo_rt = if health_on {
+                    slo_spec.map(SloRuntime::new)
+                } else {
+                    None
+                };
+                // incremental scan cursor over the completion records:
+                // each health tick folds only the records that arrived
+                // since the previous tick into the cumulative sample
+                let mut cursor = 0usize;
+                let mut cum = HealthSample::default();
+                let mut stalled_names: Vec<String> = Vec::new();
+                let mut stalled_mask = vec![false; wd.len()];
+                let mut postmortems: Vec<PathBuf> = Vec::new();
+                let mut dumped = false;
                 let mut seq = 0u32;
+                let mut next_metrics = t0 + metrics_period_us;
+                let mut next_health = t0 + health_period_us;
                 loop {
                     let stopping = stop.load(Ordering::Relaxed);
-                    // lock each shard cell once; keep every family's
-                    // samples contiguous in the exposition
-                    let snaps: Vec<(CacheStats, usize, LogHist)> =
-                        (0..shard_cells.len())
-                            .map(|sx| {
-                                let g = shard_cells[sx].lock().unwrap();
-                                (caches[sx].stats(), g.requests, g.lat_us.clone())
-                            })
-                            .collect();
-                    let mut p = PromText::new();
-                    p.family(
-                        "serve_queue_depth",
-                        "gauge",
-                        "requests waiting in the bounded queue",
-                    );
-                    p.sample("serve_queue_depth", &[], queue.len() as f64);
-                    p.family(
-                        "serve_queue_capacity",
-                        "gauge",
-                        "configured request-queue bound",
-                    );
-                    p.sample(
-                        "serve_queue_capacity",
-                        &[],
-                        queue.capacity() as f64,
-                    );
-                    p.family(
-                        "serve_shed_total",
-                        "counter",
-                        "requests shed (admission rejects + drop-tail)",
-                    );
-                    p.sample("serve_shed_total", &[], adm.total_shed() as f64);
-                    p.family(
-                        "serve_degraded_total",
-                        "counter",
-                        "requests admitted with degraded fanout",
-                    );
-                    p.sample(
-                        "serve_degraded_total",
-                        &[],
-                        adm.total_degraded() as f64,
-                    );
-                    p.family(
-                        "serve_requests_total",
-                        "counter",
-                        "requests completed, per shard",
-                    );
-                    for (sx, (_, reqs, _)) in snaps.iter().enumerate() {
-                        let sl = sx.to_string();
-                        p.sample(
-                            "serve_requests_total",
-                            &[("shard", &sl)],
-                            *reqs as f64,
-                        );
+                    let now = clock.now_us();
+                    hb.busy(now);
+                    if let Some(series) = series
+                        .as_mut()
+                        .filter(|_| now >= next_health || stopping)
+                    {
+                        // ---- health tick ----
+                        {
+                            let g = records.lock().unwrap();
+                            for r in &g[cursor..] {
+                                cum.completed += 1;
+                                if r.error {
+                                    cum.errors += 1;
+                                } else {
+                                    // errors stay out of the latency
+                                    // histogram, matching the report
+                                    cum.lat.record(r.latency_us);
+                                }
+                                if r.deadline_missed {
+                                    cum.deadline_missed += 1;
+                                }
+                                if r.evaluated {
+                                    cum.evaluated += 1;
+                                }
+                                if r.correct {
+                                    cum.correct += 1;
+                                }
+                            }
+                            cursor = g.len();
+                        }
+                        cum.shed = adm.total_shed() as u64;
+                        cum.degraded = adm.total_degraded() as u64;
+                        let mut cs = CacheStats::default();
+                        for c in caches {
+                            let st = c.stats();
+                            cs.hits += st.hits;
+                            cs.misses += st.misses;
+                            cs.stale_hits += st.stale_hits;
+                        }
+                        cum.cache_hits = cs.hits;
+                        cum.cache_misses = cs.misses;
+                        cum.stale_hits = cs.stale_hits;
+                        let (mut refs, mut inputs) = (0u64, 0u64);
+                        for cell in shard_cells {
+                            let g = cell.lock().unwrap();
+                            refs += g.frontier_refs;
+                            inputs += g.input_nodes as u64;
+                        }
+                        cum.frontier_refs = refs;
+                        cum.input_nodes = inputs;
+                        cum.purity_permille_sum =
+                            purity_sum.load(Ordering::Relaxed);
+                        cum.batches = purity_batches.load(Ordering::Relaxed);
+                        cum.queue_depth = queue.len() as u64;
+                        series.observe(now, cum.clone());
+                        if let Some(rt) = slo_rt.as_mut() {
+                            for t in rt.evaluate(series, now) {
+                                let kind = if t.fired {
+                                    EventKind::SloFire
+                                } else {
+                                    EventKind::SloClear
+                                };
+                                let x100 = |b: f64| {
+                                    (b * 100.0).clamp(0.0, u32::MAX as f64)
+                                        as u32
+                                };
+                                rec.instant(
+                                    TRACK_CLIENT,
+                                    kind,
+                                    now,
+                                    0,
+                                    t.index as u32,
+                                    x100(t.burn_fast),
+                                    x100(t.burn_slow),
+                                );
+                                println!(
+                                    "[serve] slo {} {} (burn fast {:.2} \
+                                     slow {:.2})",
+                                    t.slo,
+                                    if t.fired { "FIRING" } else { "clear" },
+                                    t.burn_fast,
+                                    t.burn_slow,
+                                );
+                            }
+                        }
+                        // liveness sweep: a newly-stalled thread emits
+                        // one Stall instant; re-detections stay quiet
+                        for stall in wd.check(now, stall_us) {
+                            if stalled_mask[stall.index] {
+                                continue;
+                            }
+                            stalled_mask[stall.index] = true;
+                            rec.instant(
+                                TRACK_CLIENT,
+                                EventKind::Stall,
+                                now,
+                                0,
+                                stall.index as u32,
+                                (stall.silent_us / 1_000).min(u32::MAX as u64)
+                                    as u32,
+                                0,
+                            );
+                            eprintln!(
+                                "[serve] watchdog: {} stalled ({} ms silent)",
+                                stall.name,
+                                stall.silent_us / 1_000,
+                            );
+                            stalled_names.push(stall.name);
+                        }
+                        // flight recorder: the run's FIRST alert fire
+                        // or stall dumps one postmortem bundle
+                        let firing =
+                            slo_rt.as_ref().is_some_and(|rt| rt.any_firing());
+                        if !dumped
+                            && flight_dir.is_some()
+                            && (firing || !stalled_names.is_empty())
+                        {
+                            dumped = true;
+                            let reason = if firing {
+                                "slo-fire".to_string()
+                            } else {
+                                format!("stall-{}", stalled_names[0])
+                            };
+                            let shards_doc = arr(
+                                (0..shard_cells.len())
+                                    .map(|sx| {
+                                        let g =
+                                            shard_cells[sx].lock().unwrap();
+                                        let st = caches[sx].stats();
+                                        obj(vec![
+                                            ("shard", num(sx as f64)),
+                                            (
+                                                "requests",
+                                                num(g.requests as f64),
+                                            ),
+                                            ("batches", num(g.batches as f64)),
+                                            (
+                                                "foreign_requests",
+                                                num(g.foreign_requests as f64),
+                                            ),
+                                            (
+                                                "queue_depth_max",
+                                                num(g.queue_depth_max as f64),
+                                            ),
+                                            (
+                                                "param_version",
+                                                num(g.param_version as f64),
+                                            ),
+                                            ("cache_hits", num(st.hits as f64)),
+                                            (
+                                                "cache_misses",
+                                                num(st.misses as f64),
+                                            ),
+                                            (
+                                                "stale_hits",
+                                                num(st.stale_hits as f64),
+                                            ),
+                                        ])
+                                    })
+                                    .collect(),
+                            );
+                            match dump_postmortem(
+                                flight_dir.as_ref().unwrap(),
+                                &reason,
+                                now,
+                                rec,
+                                series,
+                                slo_rt.as_ref(),
+                                resolved_cfg.clone(),
+                                shards_doc,
+                            ) {
+                                Ok(p) => {
+                                    println!(
+                                        "[serve] flight recorder: postmortem \
+                                         at {}",
+                                        p.display()
+                                    );
+                                    postmortems.push(p);
+                                }
+                                Err(e) => eprintln!(
+                                    "[serve] flight recorder failed: {e:#}"
+                                ),
+                            }
+                        }
+                        next_health = now + health_period_us;
                     }
-                    p.family(
-                        "serve_cache_fetches_total",
-                        "counter",
-                        "feature-cache fetches by outcome, per shard",
-                    );
-                    for (sx, (cs, _, _)) in snaps.iter().enumerate() {
-                        let sl = sx.to_string();
-                        for (outcome, v) in [
-                            ("hit", cs.hits),
-                            ("miss", cs.misses),
-                            ("stale", cs.stale_hits),
-                        ] {
+                    if metrics_on && (now >= next_metrics || stopping) {
+                        // ---- metrics tick ----
+                        // lock each shard cell once; keep every
+                        // family's samples contiguous in the exposition
+                        let snaps: Vec<(CacheStats, usize, LogHist)> =
+                            (0..shard_cells.len())
+                                .map(|sx| {
+                                    let g = shard_cells[sx].lock().unwrap();
+                                    (
+                                        caches[sx].stats(),
+                                        g.requests,
+                                        g.lat_us.clone(),
+                                    )
+                                })
+                                .collect();
+                        let mut p = PromText::new();
+                        p.family(
+                            "serve_queue_depth",
+                            "gauge",
+                            "requests waiting in the bounded queue",
+                        );
+                        p.sample("serve_queue_depth", &[], queue.len() as f64);
+                        p.family(
+                            "serve_queue_capacity",
+                            "gauge",
+                            "configured request-queue bound",
+                        );
+                        p.sample(
+                            "serve_queue_capacity",
+                            &[],
+                            queue.capacity() as f64,
+                        );
+                        p.family(
+                            "serve_shed_total",
+                            "counter",
+                            "requests shed (admission rejects + drop-tail)",
+                        );
+                        p.sample(
+                            "serve_shed_total",
+                            &[],
+                            adm.total_shed() as f64,
+                        );
+                        p.family(
+                            "serve_degraded_total",
+                            "counter",
+                            "requests admitted with degraded fanout",
+                        );
+                        p.sample(
+                            "serve_degraded_total",
+                            &[],
+                            adm.total_degraded() as f64,
+                        );
+                        p.family(
+                            "serve_requests_total",
+                            "counter",
+                            "requests completed, per shard",
+                        );
+                        for (sx, (_, reqs, _)) in snaps.iter().enumerate() {
+                            let sl = sx.to_string();
                             p.sample(
-                                "serve_cache_fetches_total",
-                                &[("shard", &sl), ("outcome", outcome)],
-                                v as f64,
+                                "serve_requests_total",
+                                &[("shard", &sl)],
+                                *reqs as f64,
                             );
                         }
-                    }
-                    p.family(
-                        "serve_latency_us",
-                        "summary",
-                        "completion latency per shard (µs)",
-                    );
-                    for (sx, (_, _, hist)) in snaps.iter().enumerate() {
-                        let sl = sx.to_string();
-                        p.summary("serve_latency_us", &[("shard", &sl)], hist);
-                    }
-                    if let Some(st) = stream {
-                        let c = &st.counters;
-                        let applied = c.edge_inserts.load(Ordering::Relaxed)
-                            + c.edge_deletes.load(Ordering::Relaxed)
-                            + c.feature_rewrites.load(Ordering::Relaxed)
-                            + c.noop_updates.load(Ordering::Relaxed);
                         p.family(
-                            "stream_updates_applied_total",
+                            "serve_cache_fetches_total",
                             "counter",
-                            "graph updates applied (incl. no-ops)",
+                            "feature-cache fetches by outcome, per shard",
                         );
-                        p.sample(
-                            "stream_updates_applied_total",
-                            &[],
-                            applied as f64,
-                        );
+                        for (sx, (cs, _, _)) in snaps.iter().enumerate() {
+                            let sl = sx.to_string();
+                            for (outcome, v) in [
+                                ("hit", cs.hits),
+                                ("miss", cs.misses),
+                                ("stale", cs.stale_hits),
+                            ] {
+                                p.sample(
+                                    "serve_cache_fetches_total",
+                                    &[("shard", &sl), ("outcome", outcome)],
+                                    v as f64,
+                                );
+                            }
+                        }
                         p.family(
-                            "stream_epochs_applied_total",
-                            "counter",
-                            "mutation epochs applied",
+                            "serve_latency_us",
+                            "summary",
+                            "completion latency per shard (µs)",
                         );
-                        p.sample(
-                            "stream_epochs_applied_total",
-                            &[],
-                            c.epochs_applied.load(Ordering::Relaxed) as f64,
-                        );
-                        p.family(
-                            "stream_full_relabels_total",
-                            "counter",
-                            "stop-the-world full relabels",
-                        );
-                        p.sample(
-                            "stream_full_relabels_total",
-                            &[],
-                            c.full_relabels.load(Ordering::Relaxed) as f64,
-                        );
+                        for (sx, (_, _, hist)) in snaps.iter().enumerate() {
+                            let sl = sx.to_string();
+                            p.summary(
+                                "serve_latency_us",
+                                &[("shard", &sl)],
+                                hist,
+                            );
+                        }
+                        if let Some(st) = stream {
+                            let c = &st.counters;
+                            let applied = c.edge_inserts.load(Ordering::Relaxed)
+                                + c.edge_deletes.load(Ordering::Relaxed)
+                                + c.feature_rewrites.load(Ordering::Relaxed)
+                                + c.noop_updates.load(Ordering::Relaxed);
+                            p.family(
+                                "stream_updates_applied_total",
+                                "counter",
+                                "graph updates applied (incl. no-ops)",
+                            );
+                            p.sample(
+                                "stream_updates_applied_total",
+                                &[],
+                                applied as f64,
+                            );
+                            p.family(
+                                "stream_epochs_applied_total",
+                                "counter",
+                                "mutation epochs applied",
+                            );
+                            p.sample(
+                                "stream_epochs_applied_total",
+                                &[],
+                                c.epochs_applied.load(Ordering::Relaxed) as f64,
+                            );
+                            p.family(
+                                "stream_full_relabels_total",
+                                "counter",
+                                "stop-the-world full relabels",
+                            );
+                            p.sample(
+                                "stream_full_relabels_total",
+                                &[],
+                                c.full_relabels.load(Ordering::Relaxed) as f64,
+                            );
+                        }
+                        if rec.is_enabled() {
+                            p.family(
+                                "trace_events_dropped_total",
+                                "counter",
+                                "trace events lost to ring wraparound",
+                            );
+                            p.sample(
+                                "trace_events_dropped_total",
+                                &[],
+                                rec.total_dropped() as f64,
+                            );
+                        }
+                        if let Some(rt) = slo_rt.as_ref() {
+                            rt.export_prom(&mut p);
+                        }
+                        if let Err(e) = p.write(&path) {
+                            // stop snapshotting, but keep the health
+                            // layer alive — its state is in-memory
+                            eprintln!("[serve] metrics write failed: {e:#}");
+                            metrics_on = false;
+                        } else {
+                            seq += 1;
+                            rec.instant(
+                                TRACK_CLIENT,
+                                EventKind::MetricsFlush,
+                                rec.now_us(),
+                                0,
+                                seq,
+                                0,
+                                0,
+                            );
+                            next_metrics = now + metrics_period_us;
+                        }
                     }
-                    if rec.is_enabled() {
-                        p.family(
-                            "trace_events_dropped_total",
-                            "counter",
-                            "trace events lost to ring wraparound",
-                        );
-                        p.sample(
-                            "trace_events_dropped_total",
-                            &[],
-                            rec.total_dropped() as f64,
-                        );
-                    }
-                    if let Err(e) = p.write(&path) {
-                        eprintln!("[serve] metrics write failed: {e:#}");
-                        return;
-                    }
-                    seq += 1;
-                    rec.instant(
-                        TRACK_CLIENT,
-                        EventKind::MetricsFlush,
-                        rec.now_us(),
-                        0,
-                        seq,
-                        0,
-                        0,
-                    );
                     if stopping {
-                        return;
+                        break;
                     }
-                    // sleep in slices so shutdown flushes promptly
-                    let mut slept = Duration::ZERO;
-                    while slept < period && !stop.load(Ordering::Relaxed) {
-                        let d = (period - slept).min(Duration::from_millis(20));
-                        std::thread::sleep(d);
-                        slept += d;
+                    // sleep to the earliest due tick in ≤ 20 ms slices
+                    // so shutdown flushes promptly
+                    let due = match (metrics_on, series.is_some()) {
+                        (true, true) => next_metrics.min(next_health),
+                        (true, false) => next_metrics,
+                        (false, true) => next_health,
+                        (false, false) => break,
+                    };
+                    loop {
+                        if stop.load(Ordering::Relaxed) {
+                            break;
+                        }
+                        let nowp = clock.now_us();
+                        if nowp >= due {
+                            break;
+                        }
+                        std::thread::sleep(Duration::from_micros(
+                            (due - nowp).min(20_000),
+                        ));
                     }
+                }
+                hb.retire();
+                // hand the health state to the report assembly
+                if let Some(series) = series {
+                    *health_out.lock().unwrap() =
+                        Some((series, slo_rt, stalled_names, postmortems));
                 }
             })
         });
@@ -1007,7 +1513,11 @@ pub fn run(
             let depths = &depths;
             let caps = &caps;
             let rec = &rec;
+            let wd = &wd;
+            let purity_sum = &purity_sum;
+            let purity_batches = &purity_batches;
             scope.spawn(move || {
+                let hb = wd.hb(hb_batcher);
                 let mut mb = MicroBatcher::new(
                     BatcherConfig {
                         batch_size,
@@ -1023,33 +1533,41 @@ pub fn run(
                 let mut rr = 0usize;
                 let mut send_routed =
                     |b: Vec<Request>, snap: &LabelSnapshot| -> bool {
-                        // coalesce span: the batch's life from its
-                        // earliest arrival to routing, tagged with the
-                        // community-purity counters the paper's p-knob
-                        // trades against
-                        if rec.is_enabled() && !b.is_empty() {
+                        // purity is computed once per routed batch and
+                        // feeds both the coalesce span and the health
+                        // layer's windowed purity accumulators
+                        if (rec.is_enabled() || health_on) && !b.is_empty() {
                             let (purity, comms) =
                                 batch_purity(&b, &snap.labels);
-                            let ts = b
-                                .iter()
-                                .map(|r| r.arrive_us)
-                                .min()
-                                .unwrap_or(0);
-                            let req = b
-                                .iter()
-                                .find(|r| rec.traced(r.id))
-                                .map(|r| r.id)
-                                .unwrap_or(0);
-                            rec.span(
-                                TRACK_BATCHER,
-                                EventKind::Coalesce,
-                                ts,
-                                clock.now_us().saturating_sub(ts),
-                                req,
-                                b.len() as u32,
-                                purity,
-                                comms,
-                            );
+                            purity_sum
+                                .fetch_add(purity as u64, Ordering::Relaxed);
+                            purity_batches.fetch_add(1, Ordering::Relaxed);
+                            // coalesce span: the batch's life from its
+                            // earliest arrival to routing, tagged with
+                            // the community-purity counters the
+                            // paper's p-knob trades against
+                            if rec.is_enabled() {
+                                let ts = b
+                                    .iter()
+                                    .map(|r| r.arrive_us)
+                                    .min()
+                                    .unwrap_or(0);
+                                let req = b
+                                    .iter()
+                                    .find(|r| rec.traced(r.id))
+                                    .map(|r| r.id)
+                                    .unwrap_or(0);
+                                rec.span(
+                                    TRACK_BATCHER,
+                                    EventKind::Coalesce,
+                                    ts,
+                                    clock.now_us().saturating_sub(ts),
+                                    req,
+                                    b.len() as u32,
+                                    purity,
+                                    comms,
+                                );
+                            }
                         }
                         let snapshot: Vec<usize> = depths
                             .iter()
@@ -1067,11 +1585,12 @@ pub fn run(
                         }
                         true
                     };
-                loop {
+                'run: loop {
+                    hb.busy(clock.now_us());
                     let snap = labels.snapshot();
                     if let Some(b) = mb.poll(clock.now_us(), &snap.labels) {
                         if !send_routed(b, &snap) {
-                            return;
+                            break 'run;
                         }
                         continue;
                     }
@@ -1097,13 +1616,14 @@ pub fn run(
                             while let Some(b) = mb.poll(u64::MAX, &snap.labels)
                             {
                                 if !send_routed(b, &snap) {
-                                    return;
+                                    break 'run;
                                 }
                             }
-                            return;
+                            break 'run;
                         }
                     }
                 }
+                hb.retire();
             })
         };
 
@@ -1123,6 +1643,7 @@ pub fn run(
                     track: shard_track(sidx),
                     sampler: scfg.sampler,
                     sample_p: scfg.sample_p,
+                    hb: Some(wd.hb(hb_workers[widx as usize])),
                 };
                 let rx = &rxs[sidx];
                 let cell = &shard_cells[sidx];
@@ -1184,29 +1705,88 @@ pub fn run(
         if let Some(h) = collector_handle {
             let _ = h.join();
         }
+        // bounded-timeout joins for everything downstream of the load:
+        // a thread that overruns the bound is *reported* (by name, in
+        // `ServeReport::unjoined_threads`) and then joined blocking —
+        // scoped threads must join, so the bound detects a wedged
+        // shutdown rather than leaking it silently.
+        let join_bound = Duration::from_secs(5);
+        let mut unjoined: Vec<String> = Vec::new();
+        let mut join_bounded =
+            |name: &str, h: std::thread::ScopedJoinHandle<'_, ()>| {
+                let t0 = Instant::now();
+                while !h.is_finished() && t0.elapsed() < join_bound {
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+                if !h.is_finished() {
+                    eprintln!(
+                        "[serve] warning: {name} thread still running \
+                         {join_bound:?} after shutdown; waiting"
+                    );
+                    unjoined.push(name.to_string());
+                }
+                let _ = h.join();
+            };
         // the load is answered: stop mutating, then shut down
         churn_stop.store(true, Ordering::Relaxed);
         if let Some(h) = churn_handle {
-            let _ = h.join();
+            join_bounded("churn", h);
         }
         queue.close();
-        let _ = batcher_handle.join();
-        for h in worker_handles {
-            let _ = h.join();
+        join_bounded("batcher", batcher_handle);
+        for (i, h) in worker_handles.into_iter().enumerate() {
+            join_bounded(wd.name(hb_workers[i]), h);
         }
         watch_stop.store(true, Ordering::Relaxed);
         if let Some(h) = watcher_handle {
-            let _ = h.join();
+            join_bounded("ckpt-watcher", h);
         }
-        // final metrics snapshot covers the fully-drained run
+        // final metrics snapshot + health window cover the drained run
         metrics_stop.store(true, Ordering::Relaxed);
-        if let Some(h) = metrics_handle {
-            let _ = h.join();
+        if let Some(h) = telemetry_handle {
+            join_bounded("telemetry", h);
         }
+        unjoined
     });
 
     let wall_s = clock.now_us() as f64 / 1e6;
     let records = records.into_inner().unwrap();
+
+    // the telemetry thread left its windowed series + alert state in
+    // the hand-off cell; fold it into the report's health section
+    let health = health_out.into_inner().unwrap().map(
+        |(series, slo_rt, stalled, postmortems)| {
+            let alerts = slo_rt
+                .as_ref()
+                .map(|rt| {
+                    rt.states()
+                        .iter()
+                        .map(|st| HealthAlert {
+                            slo: st.target.kind.label().to_string(),
+                            threshold: st.target.threshold,
+                            firing: st.firing,
+                            fired: st.fired,
+                            cleared: st.cleared,
+                            first_breach_us: st.first_breach_us,
+                            first_fire_us: st.first_fire_us,
+                            burn_fast: st.burn_fast,
+                            burn_slow: st.burn_slow,
+                        })
+                        .collect()
+                })
+                .unwrap_or_default();
+            HealthReport {
+                window_ms: scfg.health_ms,
+                windows_sealed: series.sealed(),
+                alerts,
+                transitions: slo_rt
+                    .as_ref()
+                    .map_or(0, |rt| rt.transitions().len()),
+                stalled_threads: stalled,
+                postmortems,
+            }
+        },
+    );
 
     // Chrome-trace export (trace=PATH): one JSON the `chrome://tracing`
     // or Perfetto UI loads directly, one track per shard plus the
@@ -1331,6 +1911,8 @@ pub fn run(
             .collect(),
         shards: shard_reports,
         stream: stream_report,
+        health,
+        unjoined_threads: unjoined,
     })
 }
 
@@ -1750,6 +2332,65 @@ mod tests {
         assert!(prom.contains("serve_queue_depth"));
         assert!(prom.contains("serve_cache_fetches_total"));
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// The health layer end to end on a healthy closed-loop run: the
+    /// report carries a health section with sealed windows, generous
+    /// SLO targets never fire (zero steady-state false positives), no
+    /// thread stalls, and every auxiliary thread joins within the
+    /// bound.
+    #[test]
+    fn health_layer_reports_clean_run() {
+        let ds = tiny();
+        let mut scfg = ServeConfig::for_dataset(&ds);
+        scfg.batch_size = 16;
+        scfg.workers = 2;
+        scfg.fanouts = vec![5, 5];
+        scfg.deadline_us = 500_000;
+        scfg.health_ms = 5;
+        scfg.slo =
+            Some(SloSpec::parse("p99_ms=5000,shed=0.5,fast=1,slow=3").unwrap());
+        let meta = synthetic_infer_meta(&ds, scfg.batch_size, &scfg.fanouts);
+        let exec = NullExecutor { num_classes: ds.num_classes };
+        let lcfg = closed(4, 50, 3);
+        let rep = run(&ds, &meta, &exec, &scfg, &lcfg).unwrap();
+        assert_eq!(rep.requests, 200);
+        assert_eq!(rep.errors, 0);
+        let h = rep.health.as_ref().expect("health_ms>0 must report health");
+        assert!(h.windows_sealed >= 1, "final tick must seal a window");
+        assert_eq!(h.alerts.len(), 2, "one alert state per SLO target");
+        assert!(
+            h.alerts.iter().all(|a| !a.firing && a.fired == 0),
+            "healthy run must not alert: {:?}",
+            h.alerts
+        );
+        assert_eq!(h.transitions, 0);
+        assert!(h.stalled_threads.is_empty());
+        assert!(h.postmortems.is_empty());
+        assert!(rep.unjoined_threads.is_empty());
+        let j = rep.to_json().to_string_pretty();
+        assert!(j.contains("\"health\""));
+        assert!(j.contains("windows_sealed"));
+        assert!(j.contains("first_breach_us"));
+    }
+
+    /// `health_ms=0` keeps the report's health section null and the
+    /// run identical to the pre-health engine.
+    #[test]
+    fn health_disabled_reports_null_section() {
+        let ds = tiny();
+        let mut scfg = ServeConfig::for_dataset(&ds);
+        scfg.batch_size = 8;
+        scfg.workers = 1;
+        scfg.fanouts = vec![5, 5];
+        let meta = synthetic_infer_meta(&ds, scfg.batch_size, &scfg.fanouts);
+        let exec = NullExecutor { num_classes: ds.num_classes };
+        let lcfg = closed(2, 10, 7);
+        let rep = run(&ds, &meta, &exec, &scfg, &lcfg).unwrap();
+        assert!(rep.health.is_none());
+        assert!(rep.unjoined_threads.is_empty());
+        let j = rep.to_json().to_string_pretty();
+        assert!(j.contains("\"health\": null"));
     }
 
     #[test]

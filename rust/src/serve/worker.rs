@@ -37,7 +37,7 @@ use crate::batch::assemble;
 use crate::ckpt::quant::{pick_exp, rounded_div, FEAT_LIMIT, FEAT_MAX_EXP};
 use crate::ckpt::ParamVersion;
 use crate::graph::{Dataset, Topology};
-use crate::obs::{EventKind, Recorder, TRACK_CLIENT};
+use crate::obs::{EventKind, Heartbeat, Recorder, TRACK_CLIENT};
 use crate::runtime::artifact::ArtifactMeta;
 use crate::runtime::host;
 use crate::runtime::kernels::{
@@ -482,6 +482,13 @@ pub struct WorkerCtx<'a> {
     /// Intra-community weight for [`SamplerKind::Biased`] (`sample_p=`
     /// knob); ignored by the other samplers.
     pub sample_p: f64,
+    /// This worker's liveness slot in the engine's
+    /// [`Watchdog`][crate::obs::Watchdog]: marked idle right before
+    /// blocking on the batch channel and busy right after a batch
+    /// arrives, so silence-while-waiting is healthy and
+    /// silence-mid-batch is a detectable stall. `None` (tests,
+    /// embedders) skips the beats entirely.
+    pub hb: Option<&'a Heartbeat>,
 }
 
 /// Per-batch accounting merged into the engine's totals (cache
@@ -539,8 +546,21 @@ pub fn shard_worker_loop(
     rng: &mut Rng,
 ) {
     loop {
+        // idle before blocking: a worker waiting for work is silent
+        // but healthy; busy again the moment a batch arrives
+        if let Some(hb) = ctx.hb {
+            hb.idle(ctx.clock.now_us());
+        }
         let next = rx.lock().unwrap().recv();
-        let Ok(reqs) = next else { return };
+        let Ok(reqs) = next else {
+            if let Some(hb) = ctx.hb {
+                hb.retire();
+            }
+            return;
+        };
+        if let Some(hb) = ctx.hb {
+            hb.busy(ctx.clock.now_us());
+        }
         // depth at receive time (pre-decrement) still includes this batch
         let d = depth.fetch_sub(1, Ordering::Relaxed);
         // one label snapshot per batch: foreign accounting, sampling
@@ -942,6 +962,7 @@ mod tests {
             track: 0,
             sampler: SamplerKind::Uniform,
             sample_p: 0.9,
+            hb: None,
         };
         let (tx, rx) = mpsc::channel();
         // includes a duplicate node: both requests must be answered
@@ -993,6 +1014,7 @@ mod tests {
             track: 0,
             sampler: SamplerKind::Uniform,
             sample_p: 0.9,
+            hb: None,
         };
         let nodes: [u32; 4] = [11, 23, 42, 57];
         let run = |caps: Option<Vec<usize>>| -> BatchOutcome {
@@ -1056,6 +1078,7 @@ mod tests {
             track: 0,
             sampler: SamplerKind::Labor,
             sample_p: 0.9,
+            hb: None,
         };
         let (tx, rx) = mpsc::channel();
         let reqs: Vec<Request> = (0..12u32)
@@ -1104,6 +1127,7 @@ mod tests {
             track: 0,
             sampler: SamplerKind::Uniform,
             sample_p: 0.9,
+            hb: None,
         };
         let snap = LabelSnapshot::initial(&ds.community, ds.num_comms, 1);
         let (tx, rx) = mpsc::channel();
@@ -1206,6 +1230,7 @@ mod tests {
             track: 0,
             sampler: SamplerKind::Uniform,
             sample_p: 0.9,
+            hb: None,
         };
         let snap = LabelSnapshot::initial(&ds.community, ds.num_comms, 1);
         let (tx, rx) = mpsc::channel();

@@ -23,7 +23,7 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::time::Duration;
 
 use crate::graph::{Dataset, Topology, TopoSnapshot};
-use crate::obs::{EventKind, Recorder, TRACK_MAINTAINER};
+use crate::obs::{EventKind, Heartbeat, Recorder, TRACK_MAINTAINER};
 use crate::serve::cache::ShardedFeatureCache;
 use crate::serve::shard::LabelCell;
 use crate::serve::ServeClock;
@@ -127,6 +127,24 @@ pub fn churn_loop_traced(
     stop: &AtomicBool,
     rec: &Recorder,
 ) {
+    churn_loop_observed(st, labels, ds, caches, clock, stop, rec, None)
+}
+
+/// [`churn_loop_traced`] with an optional watchdog heartbeat: the loop
+/// beats busy at every pacing slice and around each epoch apply, so
+/// the engine's liveness sweep can tell a maintainer wedged inside an
+/// apply from one pacing between updates. `None` skips the beats.
+#[allow(clippy::too_many_arguments)]
+pub fn churn_loop_observed(
+    st: &StreamState,
+    labels: &LabelCell,
+    ds: &Dataset,
+    caches: &[ShardedFeatureCache],
+    clock: &ServeClock,
+    stop: &AtomicBool,
+    rec: &Recorder,
+    hb: Option<&Heartbeat>,
+) {
     let cfg = st.cfg().clone();
     if cfg.rate_ups <= 0.0 {
         return;
@@ -187,6 +205,9 @@ pub fn churn_loop_traced(
                     break 'outer;
                 }
                 let now = clock.now_us();
+                if let Some(hb) = hb {
+                    hb.busy(now);
+                }
                 if (next_us as u64) <= now {
                     break;
                 }
@@ -199,10 +220,16 @@ pub fn churn_loop_traced(
         }
         if let Some(ep) = st.log().seal() {
             apply(ep);
+            if let Some(hb) = hb {
+                hb.busy(clock.now_us());
+            }
         }
     }
     if let Some(ep) = st.log().seal() {
         apply(ep);
+    }
+    if let Some(hb) = hb {
+        hb.retire();
     }
 }
 

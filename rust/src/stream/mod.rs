@@ -45,7 +45,7 @@ pub mod maintainer;
 pub mod state;
 pub mod update;
 
-pub use churn::{churn_loop, churn_loop_traced, ChurnGen};
+pub use churn::{churn_loop, churn_loop_observed, churn_loop_traced, ChurnGen};
 pub use maintainer::CommunityMaintainer;
 pub use state::{
     FeatureOverlay, StreamConfig, StreamCounters, StreamReport, StreamState,

@@ -1,0 +1,165 @@
+//! Integration tests for the temporal health layer: windowed series,
+//! SLO burn-rate alerting, the liveness watchdog, and the flight
+//! recorder, exercised through the full serving pipeline.
+//!
+//! Like `serve_admission.rs`, these need no AOT artifacts and no real
+//! PJRT: the no-op executor drives the whole engine — admission gate →
+//! queue → micro-batcher → shard router → worker pools → telemetry
+//! thread — on the synthetic tiny dataset, so they run everywhere
+//! `cargo test` does.
+//!
+//! The two runs bracket the alerting decision deliberately: the
+//! overload run offers the trace hundreds of times past saturation
+//! against a tight SLO, so an alert *must* fire and the flight
+//! recorder *must* publish a postmortem bundle; the low-rate run pairs
+//! trivial load with the default SLO, so a single transition would be
+//! a false positive.
+
+use comm_rand::config::preset;
+use comm_rand::obs::{read_postmortem, SloSpec};
+use comm_rand::serve::engine::{self, synthetic_infer_meta};
+use comm_rand::serve::{
+    AdmissionPolicy, Arrival, LoadConfig, NullExecutor, ServeConfig,
+};
+
+fn tiny_dataset() -> comm_rand::graph::Dataset {
+    comm_rand::train::dataset::build(&preset("tiny").unwrap(), true)
+}
+
+fn scratch(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("comm_rand_health_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Far past saturation with a tight SLO: the shed-rate burn breaches
+/// immediately, the alert fires, the fire transition lands in the
+/// Chrome trace, and the flight recorder publishes a postmortem bundle
+/// that survives a full re-parse.
+#[test]
+fn overload_fires_alert_and_dumps_postmortem() {
+    let dir = scratch("overload");
+    let trace_path = dir.join("trace.json");
+    let ds = tiny_dataset();
+    let mut scfg = ServeConfig::for_dataset(&ds);
+    scfg.batch_size = 8;
+    scfg.max_delay_us = 500;
+    scfg.deadline_us = 2_000;
+    scfg.workers = 1;
+    scfg.queue_cap = 32;
+    scfg.fanouts = vec![5, 5];
+    scfg.admission = AdmissionPolicy::Reject;
+    scfg.seed = 41;
+    scfg.health_ms = 5;
+    // shed budget 2%: the drop-tail queue under 200k offered req/s
+    // burns it orders of magnitude faster than `burn=1`
+    scfg.slo = Some(
+        SloSpec::parse("shed=0.02,fast=1,slow=2,burn=1,clear=2").unwrap(),
+    );
+    scfg.flight = Some(dir.clone());
+    scfg.trace = Some(trace_path.clone());
+    scfg.trace_sample = 1000;
+    let meta = synthetic_infer_meta(&ds, scfg.batch_size, &scfg.fanouts);
+    let exec = NullExecutor { num_classes: ds.num_classes };
+    let issued = 1200usize;
+    let lcfg = LoadConfig {
+        clients: 4,
+        requests_per_client: issued / 4,
+        zipf_s: 1.1,
+        arrival: Arrival::Poisson { rate_rps: 200_000.0 },
+        seed: 29,
+    };
+    let rep = engine::run(&ds, &meta, &exec, &scfg, &lcfg).unwrap();
+    assert_eq!(rep.requests + rep.shed, issued, "requests lost");
+    assert!(rep.shed > 0, "overload run shed nothing");
+    assert!(rep.unjoined_threads.is_empty(), "{:?}", rep.unjoined_threads);
+
+    let health = rep.health.as_ref().expect("health_ms > 0 must report");
+    assert!(health.windows_sealed >= 1);
+    let shed_alert = health
+        .alerts
+        .iter()
+        .find(|a| a.slo == "shed_rate")
+        .expect("shed_rate target present");
+    assert!(
+        shed_alert.fired > 0,
+        "shed alert never fired: burn_fast={} burn_slow={}",
+        shed_alert.burn_fast,
+        shed_alert.burn_slow
+    );
+    let breach = shed_alert.first_breach_us.expect("breach timestamp");
+    let fire = shed_alert.first_fire_us.expect("fire timestamp");
+    assert!(fire >= breach, "fire {fire} before breach {breach}");
+    assert!(health.transitions >= 1);
+
+    // flight recorder: a bundle was published and re-parses cleanly
+    assert!(
+        !health.postmortems.is_empty(),
+        "alert fired but no postmortem bundle"
+    );
+    let bundle = read_postmortem(&health.postmortems[0]).unwrap();
+    assert!(bundle.reason.starts_with("slo-") || bundle.reason.starts_with("stall-"));
+    assert!(bundle.windows >= 1);
+    assert!(bundle.alert_transitions >= 1);
+
+    // the fire transition is visible in the exported Chrome trace
+    let trace = std::fs::read_to_string(&trace_path).unwrap();
+    assert!(
+        trace.contains("slo_fire"),
+        "trace has no slo_fire instant"
+    );
+
+    // the JSON report carries the health section end to end
+    let json = rep.to_json().to_string_pretty();
+    assert!(json.contains("\"health\""));
+    assert!(json.contains("\"windows_sealed\""));
+    assert!(json.contains("\"first_fire_us\""));
+    assert!(json.contains("\"postmortems\""));
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Trivial load under the default SLO: any transition, stall, or
+/// postmortem is a false positive, and shutdown joins every thread.
+#[test]
+fn low_load_default_slo_stays_quiet() {
+    let dir = scratch("quiet");
+    let ds = tiny_dataset();
+    let mut scfg = ServeConfig::for_dataset(&ds);
+    scfg.batch_size = 16;
+    scfg.max_delay_us = 1_000;
+    scfg.deadline_us = 2_000_000;
+    scfg.workers = 2;
+    scfg.queue_cap = 1024;
+    scfg.fanouts = vec![5, 5];
+    scfg.seed = 43;
+    scfg.health_ms = 5;
+    scfg.slo = Some(SloSpec::parse("default").unwrap());
+    scfg.flight = Some(dir.clone());
+    let meta = synthetic_infer_meta(&ds, scfg.batch_size, &scfg.fanouts);
+    let exec = NullExecutor { num_classes: ds.num_classes };
+    let lcfg = LoadConfig {
+        clients: 4,
+        requests_per_client: 50,
+        zipf_s: 1.1,
+        arrival: Arrival::Closed,
+        seed: 31,
+    };
+    let rep = engine::run(&ds, &meta, &exec, &scfg, &lcfg).unwrap();
+    assert_eq!(rep.requests, 200);
+    assert!(rep.unjoined_threads.is_empty(), "{:?}", rep.unjoined_threads);
+
+    let health = rep.health.as_ref().expect("health_ms > 0 must report");
+    assert!(health.windows_sealed >= 1);
+    assert_eq!(health.transitions, 0, "false positive under default SLO");
+    assert!(health.alerts.iter().all(|a| !a.firing && a.fired == 0));
+    assert!(health.stalled_threads.is_empty());
+    assert!(
+        health.postmortems.is_empty(),
+        "flight recorder fired on a healthy run"
+    );
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
