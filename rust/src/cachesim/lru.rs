@@ -12,10 +12,14 @@
 //!   addresses are byte addresses, expanded into line accesses by the
 //!   caller (a 128-float row = 4 lines of 128B).
 
+/// Geometry of a modelled cache, in bytes and lines.
 #[derive(Clone, Debug)]
 pub struct CacheConfig {
+    /// Total capacity in bytes; rounded down to whole lines.
     pub capacity_bytes: usize,
+    /// Cache-line size in bytes (the unit of allocation and lookup).
     pub line_bytes: usize,
+    /// Set associativity; clamped to the line count at construction.
     pub ways: usize,
 }
 
@@ -36,6 +40,7 @@ pub struct Probe {
     /// Flat slot index (`set * ways + way`) the key now occupies;
     /// payload-carrying callers index their slab with this.
     pub slot: usize,
+    /// Whether the key was already resident before this probe.
     pub hit: bool,
     /// Key evicted to make room (miss with a valid victim only).
     pub evicted: Option<u64>,
@@ -66,6 +71,8 @@ fn mix(key: u64) -> u64 {
 }
 
 impl SetAssocCore {
+    /// Build an empty core with the given geometry (both dimensions
+    /// clamped to at least 1).
     pub fn new(sets: usize, ways: usize) -> SetAssocCore {
         let sets = sets.max(1);
         let ways = ways.max(1);
@@ -78,10 +85,12 @@ impl SetAssocCore {
         }
     }
 
+    /// Number of sets.
     pub fn sets(&self) -> usize {
         self.sets
     }
 
+    /// Associativity (slots per set).
     pub fn ways(&self) -> usize {
         self.ways
     }
@@ -126,11 +135,15 @@ impl SetAssocCore {
 pub struct SetAssocCache {
     cfg: CacheConfig,
     core: SetAssocCore,
+    /// Line accesses that found their line resident.
     pub hits: u64,
+    /// Line accesses that allocated (and possibly evicted).
     pub misses: u64,
 }
 
 impl SetAssocCache {
+    /// Build an empty cache from `cfg`, deriving `sets` from
+    /// capacity / line size / ways.
     pub fn new(cfg: CacheConfig) -> SetAssocCache {
         let lines = (cfg.capacity_bytes / cfg.line_bytes).max(1);
         let ways = cfg.ways.min(lines).max(1);
@@ -143,6 +156,7 @@ impl SetAssocCache {
         }
     }
 
+    /// Touch the line containing `byte_addr`; returns whether it hit.
     #[inline]
     pub fn access(&mut self, byte_addr: u64) -> bool {
         let line = byte_addr / self.cfg.line_bytes as u64;
@@ -167,6 +181,7 @@ impl SetAssocCache {
         }
     }
 
+    /// `misses / (hits + misses)`, or 0 before any access.
     pub fn miss_rate(&self) -> f64 {
         let total = self.hits + self.misses;
         if total == 0 {
@@ -176,6 +191,7 @@ impl SetAssocCache {
         }
     }
 
+    /// Zero the hit/miss counters, keeping cache contents warm.
     pub fn reset_counters(&mut self) {
         self.hits = 0;
         self.misses = 0;

@@ -3,6 +3,7 @@
 //! LRU via an intrusive doubly-linked list over a dense node-indexed
 //! table (O(1) per access, no hashing).
 
+/// Row-granular exact-LRU software cache over a dense node id space.
 pub struct SoftwareCache {
     capacity: usize,
     len: usize,
@@ -12,7 +13,10 @@ pub struct SoftwareCache {
     resident: Vec<bool>,
     head: u32, // most-recent
     tail: u32, // least-recent
+    /// Row accesses that found the row resident.
     pub hits: u64,
+    /// Row accesses that faulted the row in (evicting the LRU row
+    /// when full).
     pub misses: u64,
 }
 
@@ -86,6 +90,7 @@ impl SoftwareCache {
         }
     }
 
+    /// `misses / (hits + misses)`, or 0 before any access.
     pub fn miss_rate(&self) -> f64 {
         let t = self.hits + self.misses;
         if t == 0 {
@@ -95,6 +100,7 @@ impl SoftwareCache {
         }
     }
 
+    /// Zero the hit/miss counters, keeping cache contents warm.
     pub fn reset_counters(&mut self) {
         self.hits = 0;
         self.misses = 0;

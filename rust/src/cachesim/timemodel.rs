@@ -18,14 +18,21 @@
 
 use super::lru::SetAssocCache;
 
+/// Bandwidth/compute constants of the modelled device (see module
+/// docs for the calibration rationale).
 #[derive(Clone, Debug)]
 pub struct DeviceModel {
-    pub l2_bw: f64,   // bytes/s
-    pub hbm_bw: f64,  // bytes/s
-    pub flops: f64,   // effective flop/s
-    pub pcie_bw: f64, // bytes/s (UVA transfers)
+    /// L2 bandwidth, bytes/s.
+    pub l2_bw: f64,
+    /// HBM bandwidth, bytes/s.
+    pub hbm_bw: f64,
+    /// Effective dense-compute rate, flop/s.
+    pub flops: f64,
+    /// PCIe bandwidth for UVA transfers, bytes/s.
+    pub pcie_bw: f64,
+    /// Cache-line size, bytes.
     pub line_bytes: f64,
-    /// fixed per-batch launch/driver overhead (s)
+    /// Fixed per-batch launch/driver overhead (s).
     pub batch_overhead: f64,
 }
 
@@ -52,14 +59,20 @@ impl Default for DeviceModel {
 /// Accumulated modelled cost over an epoch.
 #[derive(Clone, Debug, Default)]
 pub struct EpochCost {
+    /// Line accesses served from L2.
     pub l2_hits: u64,
+    /// Line accesses that went to HBM.
     pub l2_misses: u64,
+    /// Accumulated dense work, flops.
     pub dense_flops: f64,
+    /// Bytes moved over PCIe (UVA fallback path).
     pub uva_bytes: f64,
+    /// Mini-batches accumulated (each pays `batch_overhead`).
     pub batches: usize,
 }
 
 impl EpochCost {
+    /// Fold a cache replay's hit/miss counters into the cost.
     pub fn add_cache(&mut self, c: &SetAssocCache) {
         self.l2_hits += c.hits;
         self.l2_misses += c.misses;
@@ -77,6 +90,7 @@ impl EpochCost {
         }
     }
 
+    /// Total modelled epoch time under device model `m`, in seconds.
     pub fn seconds(&self, m: &DeviceModel) -> f64 {
         self.l2_hits as f64 * m.line_bytes / m.l2_bw
             + self.l2_misses as f64 * m.line_bytes / m.hbm_bw

@@ -168,6 +168,15 @@ COMMANDS:
                            flight=DIR (flight recorder: dump an
                            atomic postmortem bundle into DIR on the
                            first SLO fire or thread stall)
+                           locality=0|1 (reuse-distance profiler on
+                           the feature-gather path; adds a locality{}
+                           report section with a miss-ratio curve and
+                           per-shard cache right-sizing advice)
+                           locality_sample=N (profile N permille of
+                           the node id space by stateless hash,
+                           default 1000 = every node)
+                           mrc_points=N (capacities sampled on the
+                           miss-ratio curve, default 16)
                            kernel=auto|scalar|avx2 (SIMD dispatch for
                            the quantized i16q integer path; auto picks
                            the best the CPU supports, a named variant
@@ -179,7 +188,8 @@ COMMANDS:
                            ids: fig2 fig5 fig6 fig7 fig8 fig9 fig10
                                 tab3 tab4 tab5 fullbatch inference
                                 preproc ablation autotune serve ckpt
-                                stream obs coop quant health all
+                                stream obs coop quant health
+                                locality all
   help                   this message
 
 Presets: {}",
@@ -367,6 +377,9 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
             .transpose()
             .context("slo= knob")?,
         flight: args.get("flight").map(std::path::PathBuf::from),
+        locality: args.get_u64("locality", 0)? != 0,
+        locality_sample: args.get_u64("locality_sample", 1000)? as u32,
+        mrc_points: args.get_usize("mrc_points", 16)?,
     };
     if !(0.0..=1.0).contains(&scfg.community_bias) {
         bail!("p must be in [0, 1], got {}", scfg.community_bias);
@@ -391,6 +404,15 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
             "trace_sample is permille in [0, 1000], got {}",
             scfg.trace_sample
         );
+    }
+    if scfg.locality_sample == 0 || scfg.locality_sample > 1000 {
+        bail!(
+            "locality_sample is permille in [1, 1000], got {}",
+            scfg.locality_sample
+        );
+    }
+    if scfg.mrc_points == 0 {
+        bail!("mrc_points must be >= 1");
     }
     if scfg.slo.is_some() && scfg.health_ms == 0 {
         bail!("slo= needs health_ms=N > 0 (no windows to evaluate against)");

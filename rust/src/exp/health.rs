@@ -353,8 +353,9 @@ pub fn run(args: &Args) -> Result<()> {
 }
 
 /// Count named events in an exported Chrome trace (any phase — the
-/// SLO transitions land as instants).
-fn count_trace_events(
+/// SLO transitions land as instants, the locality windows as counter
+/// samples; shared with `exp locality`).
+pub(crate) fn count_trace_events(
     path: &std::path::Path,
     name: &str,
 ) -> Result<usize> {

@@ -19,6 +19,7 @@ pub mod fig9;
 pub mod fullbatch;
 pub mod health;
 pub mod inference;
+pub mod locality;
 pub mod obs;
 pub mod preproc;
 pub mod quant;
@@ -58,6 +59,9 @@ pub fn run(args: &Args) -> Result<()> {
     }
     if id == "health" {
         return health::run(args);
+    }
+    if id == "locality" {
+        return locality::run(args);
     }
     let mut ctx = Ctx::new()?;
     match id {

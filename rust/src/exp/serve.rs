@@ -3,8 +3,9 @@
 //! engine along three axes:
 //!
 //! * community-bias `p ∈ {0, 0.5, 1}` on one shard — the knob's effect
-//!   on throughput, tail latency and feature-cache hit rate (closed
-//!   loop);
+//!   on throughput, tail latency, feature-cache hit rate and mean
+//!   gather reuse distance (closed loop; the locality observatory is
+//!   armed on every axis, and `exp locality` gates the trend);
 //! * shard count `∈ {1, 2, 4}` at fixed `p` — community-affinity
 //!   scaling: each shard's cache only sees its own communities, so the
 //!   aggregate hit rate should hold (or improve) as the per-shard
@@ -41,6 +42,10 @@ pub fn run(args: &Args) -> Result<()> {
     let mut scfg = ServeConfig::for_dataset(&ds);
     scfg.batch_size = args.get_usize("batch", 32)?;
     scfg.seed = args.get_u64("seed", 0)?;
+    // profile gather locality across every axis (the p-sweep table
+    // shows the mean reuse distance the bias knob is buying; `exp
+    // locality` gates the trend and the profiler's own overhead)
+    scfg.locality = true;
     let spill = SpillPolicy::parse(args.get("spill").unwrap_or("strict"))?;
     let lcfg = LoadConfig {
         clients: args.get_usize("clients", 8)?,
@@ -60,6 +65,7 @@ pub fn run(args: &Args) -> Result<()> {
         "p95 ms",
         "p99 ms",
         "cache hit",
+        "dist rows",
         "req/batch",
     ]);
     let shard_p = args.get_f64("shard_p", 1.0)?;
@@ -81,6 +87,10 @@ pub fn run(args: &Args) -> Result<()> {
             f2(rep.lat_p95_ms),
             f2(rep.lat_p99_ms),
             pct(rep.cache_hit_rate),
+            rep.locality
+                .as_ref()
+                .map(|l| format!("{:.0}", l.mean_reuse_distance))
+                .unwrap_or_else(|| "-".into()),
             f2(rep.mean_batch_size),
         ]);
         p_rows.push(rep.to_json());

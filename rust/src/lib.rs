@@ -113,6 +113,30 @@
 //! on the first alert or stall. `comm-rand exp health` gates it: zero
 //! steady-state false positives, fire within two slow lookback spans
 //! of the first breach past saturation, and ≤ 5 % overhead.
+//!
+//! # Locality observatory ([`obs`] again: locality / mrc)
+//!
+//! The health layer watches *time*; the locality observatory watches
+//! *memory-access structure* — the quantity the paper's community
+//! reordering actually optimizes. `serve bench locality=1` taps every
+//! shard's feature-gather loop with a SHARDS-sampled online Mattson
+//! profiler ([`obs::LocalityShard`], `locality_sample=PERMILLE`
+//! selects nodes by stateless hash so distances stay unbiased):
+//! per-window log-bucketed reuse-distance histograms, cold-miss and
+//! self- vs cross-community affinity counters, and a bounded access
+//! trace replayable through [`cachesim::SetAssocCore`] offline. From
+//! one pass [`obs::mrc`] derives the full **miss-ratio curve**
+//! (predicted hit rate at every capacity, `mrc_points=` samples) and
+//! a cache right-sizing advisor — smallest `cache_rows` meeting a
+//! target hit rate, plus predicted-vs-observed hit rate at the
+//! current size, cross-checked against the live cache's own counters
+//! (`ServeReport.locality{}`, `serve_locality_*` / `serve_mrc_*`
+//! Prometheus gauges, a `locality` Chrome-trace counter track).
+//! `comm-rand exp locality` gates it: sweeping `p` 0 → 1 must
+//! *strictly* shorten mean reuse distance and the MRC-predicted miss
+//! rate at equal accuracy, the advisor's predicted hit rate must land
+//! within 5 points of the observed one, and profiling costs ≤ 5 %
+//! throughput.
 
 #![warn(missing_docs)]
 // missing_docs burn-down: the crate root and the serving subsystem
@@ -124,7 +148,6 @@
 
 #[allow(missing_docs)]
 pub mod batch;
-#[allow(missing_docs)]
 pub mod cachesim;
 pub mod ckpt;
 pub mod community;

@@ -72,6 +72,12 @@ pub fn write_chrome_trace(path: &Path, rec: &Recorder) -> Result<ExportSummary> 
                 summary.spans += 1;
                 fields.push(("ph", s("X")));
                 fields.push(("dur", num(ev.dur_us as f64)));
+            } else if ev.kind == super::span::EventKind::Locality {
+                // counter-track sample: Perfetto plots the args as a
+                // per-process curve (mean reuse distance, predicted
+                // miss, self-community reuse over the run)
+                summary.instants += 1;
+                fields.push(("ph", s("C")));
             } else {
                 summary.instants += 1;
                 fields.push(("ph", s("i")));
@@ -148,6 +154,11 @@ fn event_args(ev: &super::span::Event) -> Json {
             ("burn_slow_x100", n(ev.c)),
         ],
         K::Stall => vec![("thread", n(ev.a)), ("silent_ms", n(ev.b))],
+        K::Locality => vec![
+            ("mean_reuse_distance", n(ev.a)),
+            ("pred_miss_permille", n(ev.b)),
+            ("self_reuse_permille", n(ev.c)),
+        ],
         K::Enqueue | K::Shed | K::QueueWait => vec![],
     };
     if ev.req_id != 0 {
@@ -376,6 +387,43 @@ mod tests {
                 .as_usize()
                 .unwrap(),
             0
+        );
+        std::fs::remove_file(&path).ok();
+    }
+
+    /// Locality windows export as Chrome counter-track samples
+    /// (`ph:"C"`) carrying the curve values in `args`.
+    #[test]
+    fn locality_windows_export_as_counter_samples() {
+        let rec = Recorder::new(1, 64, 1000, Instant::now());
+        rec.instant(TRACK_CLIENT, EventKind::Locality, 50, 0, 120, 250, 900);
+        rec.instant(TRACK_CLIENT, EventKind::Locality, 100, 0, 80, 150, 950);
+        let path = tmppath("loccounter");
+        let summary = write_chrome_trace(&path, &rec).unwrap();
+        assert_eq!(summary.instants, 2);
+        let doc = Json::parse_file(&path).unwrap();
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        let counters: Vec<_> = events
+            .iter()
+            .filter(|e| e.get("ph").unwrap().as_str().unwrap() == "C")
+            .collect();
+        assert_eq!(counters.len(), 2);
+        assert_eq!(
+            counters[0].get("name").unwrap().as_str().unwrap(),
+            "locality"
+        );
+        let args = counters[0].get("args").unwrap();
+        assert_eq!(
+            args.get("mean_reuse_distance").unwrap().as_usize().unwrap(),
+            120
+        );
+        assert_eq!(
+            args.get("pred_miss_permille").unwrap().as_usize().unwrap(),
+            250
+        );
+        assert_eq!(
+            args.get("self_reuse_permille").unwrap().as_usize().unwrap(),
+            900
         );
         std::fs::remove_file(&path).ok();
     }

@@ -1,0 +1,651 @@
+//! Online sampled reuse-distance profiling on the feature-gather path.
+//!
+//! The paper's speedup story is **cache locality**: community-aware
+//! micro-batching turns an irregular feature-access stream into a
+//! cache-friendly one. Until now the only way to see that was the
+//! offline trace replay in [`crate::cachesim`] — the live engine
+//! reported hit *rates* but nothing about access *structure*. This
+//! module watches the gather stream itself:
+//!
+//! * **SHARDS-style spatial sampling** — a node is profiled iff a
+//!   stateless hash of its id lands under `locality_sample=` permille
+//!   ([`node_sampled`]), so every worker agrees on the sampled set
+//!   with no coordination and the profiler's cost scales with the
+//!   sampling rate, not the traffic.
+//! * **Mattson stack distances** — for each sampled re-access, the
+//!   number of *distinct* sampled nodes touched since that node's
+//!   previous access, computed in O(log n) per access with a Fenwick
+//!   tree over last-access positions (periodically compacted). Scaled
+//!   by the inverse sampling rate, that estimates the true LRU stack
+//!   distance, and the histogram of those distances
+//!   ([`LocalitySample::dist`], a [`LogHist`]) is everything a
+//!   miss-ratio curve needs ([`crate::obs::mrc`]).
+//! * **Access-affinity counters** — every sampled reuse is classified
+//!   *self-community* (the immediately preceding sampled access
+//!   belonged to the same community) or *cross-community*, so the `p`
+//!   knob's effect on stream coherence is a first-class number.
+//! * **A bounded access-trace prefix** — the first `trace_cap`
+//!   observed accesses (node id + hit/miss outcome) are retained so
+//!   the live stream can be replayed offline through
+//!   [`crate::cachesim::SetAssocCore`] and cross-checked against the
+//!   serving cache's own counters (the two consumers of the
+//!   set-associative core must never disagree).
+//!
+//! One [`LocalityShard`] lives next to each device shard's feature
+//! cache; workers batch their gather taps into a single
+//! [`LocalityShard::observe_batch`] call per micro-batch (one mutex
+//! acquisition, entries pre-filtered by the lock-free
+//! [`LocalityShard::is_sampled`] / [`LocalityShard::wants_trace`]
+//! checks), which is how the profiler stays inside the ≤ 5 % overhead
+//! budget `exp locality` enforces. The engine's telemetry thread
+//! snapshots the cumulative [`LocalitySample`] every health window and
+//! seals per-window deltas via [`LocalitySample::diff`], the same
+//! cumulative-snapshot discipline as [`crate::obs::series`].
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+
+use super::hist::LogHist;
+
+/// Geometry of a [`LocalityShard`].
+#[derive(Clone, Copy, Debug)]
+pub struct LocalityConfig {
+    /// SHARDS spatial sampling rate in permille (`locality_sample=`):
+    /// a node is profiled iff `hash(node) % 1000 < sample_permille`.
+    /// 1000 profiles every access (exact Mattson), 0 disables distance
+    /// profiling (the shard still counts raw accesses and captures the
+    /// trace prefix).
+    pub sample_permille: u32,
+    /// Retain the first `trace_cap` observed accesses for the offline
+    /// [`crate::cachesim::SetAssocCore`] cross-check (0 disables
+    /// capture).
+    pub trace_cap: usize,
+}
+
+/// One observed feature-gather access, built by the worker's tap.
+#[derive(Clone, Copy, Debug)]
+pub struct Access {
+    /// Global node id whose feature row was gathered.
+    pub node: u32,
+    /// The node's community label at access time.
+    pub comm: u32,
+    /// Whether the serving cache returned a *fresh* hit (stale hits
+    /// refetch the row, so they count as misses here).
+    pub hit: bool,
+}
+
+/// Cumulative locality counters plus the scaled reuse-distance
+/// histogram. Snapshots are cumulative-monotone, so two of them
+/// subtract into a per-window delta ([`LocalitySample::diff`]) and
+/// per-shard samples roll up by [`LocalitySample::merge`].
+#[derive(Clone, Debug, Default)]
+pub struct LocalitySample {
+    /// Histogram of estimated reuse distances: per sampled re-access,
+    /// the distinct-sampled-nodes-since-last-access count scaled by
+    /// `1000 / sample_permille`. `dist.count()` is the number of
+    /// sampled reuses.
+    pub dist: LogHist,
+    /// Every gather access observed (sampled or not).
+    pub accesses: u64,
+    /// Accesses that fell in the sampled node set.
+    pub sampled: u64,
+    /// Sampled first-touches (no previous access ⇒ compulsory miss at
+    /// any capacity).
+    pub cold: u64,
+    /// Sampled reuses whose immediately preceding sampled access was
+    /// in the **same** community.
+    pub self_reuses: u64,
+    /// Sampled reuses whose immediately preceding sampled access was
+    /// in a **different** community.
+    pub cross_reuses: u64,
+}
+
+impl LocalitySample {
+    /// Sampled re-accesses (`self_reuses + cross_reuses`, and exactly
+    /// `dist.count()`).
+    pub fn reuses(&self) -> u64 {
+        self.dist.count()
+    }
+
+    /// Mean estimated reuse distance over sampled reuses (0 when no
+    /// reuse was observed).
+    pub fn mean_distance(&self) -> f64 {
+        self.dist.mean()
+    }
+
+    /// Fraction of sampled accesses that were first-touches (0 when
+    /// nothing was sampled).
+    pub fn cold_frac(&self) -> f64 {
+        if self.sampled == 0 {
+            0.0
+        } else {
+            self.cold as f64 / self.sampled as f64
+        }
+    }
+
+    /// Fraction of sampled reuses that were self-community (0 when no
+    /// reuse was observed).
+    pub fn self_reuse_frac(&self) -> f64 {
+        let reuses = self.self_reuses + self.cross_reuses;
+        if reuses == 0 {
+            0.0
+        } else {
+            self.self_reuses as f64 / reuses as f64
+        }
+    }
+
+    /// True when nothing at all has been observed.
+    pub fn is_empty(&self) -> bool {
+        self.accesses == 0
+    }
+
+    /// Absorb another sample (per-shard roll-up into the run total).
+    pub fn merge(&mut self, other: &LocalitySample) {
+        self.dist.merge(&other.dist);
+        self.accesses += other.accesses;
+        self.sampled += other.sampled;
+        self.cold += other.cold;
+        self.self_reuses += other.self_reuses;
+        self.cross_reuses += other.cross_reuses;
+    }
+
+    /// Delta `self − earlier` between two cumulative snapshots, for
+    /// per-window sealing (counter subtraction saturates defensively;
+    /// the histogram delta follows [`LogHist::diff`]).
+    pub fn diff(&self, earlier: &LocalitySample) -> LocalitySample {
+        LocalitySample {
+            dist: self.dist.diff(&earlier.dist),
+            accesses: self.accesses.saturating_sub(earlier.accesses),
+            sampled: self.sampled.saturating_sub(earlier.sampled),
+            cold: self.cold.saturating_sub(earlier.cold),
+            self_reuses: self.self_reuses.saturating_sub(earlier.self_reuses),
+            cross_reuses: self
+                .cross_reuses
+                .saturating_sub(earlier.cross_reuses),
+        }
+    }
+}
+
+#[inline]
+fn spatial_hash(v: u32) -> u64 {
+    // splitmix-style avalanche (same shape as span::id_sampled) so
+    // dense node-id ranges sample uniformly
+    let mut z = (v as u64).wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z >> 32
+}
+
+/// Stateless SHARDS membership test: is `node` in the sampled set at
+/// `permille`? Every caller — worker taps, tests, offline replays —
+/// gets the same answer for the same node, with no shared state.
+#[inline]
+pub fn node_sampled(node: u32, permille: u32) -> bool {
+    if permille >= 1000 {
+        return true;
+    }
+    if permille == 0 {
+        return false;
+    }
+    (spatial_hash(node) % 1000) < permille as u64
+}
+
+const NIL: u32 = u32::MAX;
+
+/// Fenwick (binary indexed) tree over last-access positions: prefix
+/// sums in O(log n) give the count of active positions ≤ i, which is
+/// all a stack-distance query needs.
+struct Fenwick {
+    tree: Vec<i64>,
+}
+
+impl Fenwick {
+    fn new(n: usize) -> Fenwick {
+        Fenwick { tree: vec![0; n + 1] }
+    }
+
+    fn add(&mut self, i: usize, d: i64) {
+        let mut i = i + 1;
+        while i < self.tree.len() {
+            self.tree[i] += d;
+            i += i & i.wrapping_neg();
+        }
+    }
+
+    /// Sum over positions `0..=i`.
+    fn prefix(&self, i: usize) -> i64 {
+        let mut i = i + 1;
+        let mut s = 0;
+        while i > 0 {
+            s += self.tree[i];
+            i -= i & i.wrapping_neg();
+        }
+        s
+    }
+}
+
+/// Exact Mattson stack-distance engine over the (sampled) access
+/// stream. Each node's last access holds one *active* position in a
+/// monotonically growing sequence; the stack distance of a re-access
+/// is the number of active positions after the node's previous one
+/// (= distinct nodes touched in between). When the position space
+/// fills, active positions are compacted down to `0..active`
+/// (amortized O(1) per access), doubling the space while more than
+/// half of it is live.
+struct Mattson {
+    fen: Fenwick,
+    pos_node: Vec<u32>,
+    last_pos: HashMap<u32, usize>,
+    next: usize,
+    active: usize,
+    cap: usize,
+}
+
+impl Mattson {
+    fn new() -> Mattson {
+        let cap = 1024;
+        Mattson {
+            fen: Fenwick::new(cap),
+            pos_node: vec![NIL; cap],
+            last_pos: HashMap::new(),
+            next: 0,
+            active: 0,
+            cap,
+        }
+    }
+
+    /// Observe one access; `Some(d)` = stack distance of a reuse
+    /// (distinct nodes since the previous access, 0 = immediate
+    /// re-access), `None` = first touch.
+    fn access(&mut self, node: u32) -> Option<u64> {
+        if self.next == self.cap {
+            self.compact();
+        }
+        let q = self.next;
+        self.next += 1;
+        let dist = match self.last_pos.get(&node).copied() {
+            Some(p) => {
+                let after = self.active as i64 - self.fen.prefix(p);
+                self.fen.add(p, -1);
+                self.pos_node[p] = NIL;
+                self.active -= 1;
+                debug_assert!(after >= 0, "negative stack distance");
+                Some(after.max(0) as u64)
+            }
+            None => None,
+        };
+        self.fen.add(q, 1);
+        self.pos_node[q] = node;
+        self.last_pos.insert(node, q);
+        self.active += 1;
+        dist
+    }
+
+    fn compact(&mut self) {
+        let new_cap =
+            if self.active * 2 >= self.cap { self.cap * 2 } else { self.cap };
+        let mut pos_node = vec![NIL; new_cap];
+        let mut fen = Fenwick::new(new_cap);
+        let mut k = 0usize;
+        for i in 0..self.cap {
+            let n = self.pos_node[i];
+            if n != NIL {
+                pos_node[k] = n;
+                fen.add(k, 1);
+                self.last_pos.insert(n, k);
+                k += 1;
+            }
+        }
+        debug_assert_eq!(k, self.active);
+        self.pos_node = pos_node;
+        self.fen = fen;
+        self.cap = new_cap;
+        self.next = k;
+    }
+}
+
+struct Inner {
+    mat: Mattson,
+    prev_comm: Option<u32>,
+    cum: LocalitySample,
+    trace: Vec<(u32, bool)>,
+}
+
+/// One device shard's locality profiler: accepts batched gather taps
+/// from that shard's workers, maintains the Mattson state for the
+/// sampled node set, and hands cumulative [`LocalitySample`] snapshots
+/// to the telemetry thread and the final report.
+pub struct LocalityShard {
+    permille: u32,
+    trace_cap: usize,
+    trace_full: AtomicBool,
+    inner: Mutex<Inner>,
+}
+
+impl LocalityShard {
+    /// Fresh profiler for one device shard.
+    pub fn new(cfg: LocalityConfig) -> LocalityShard {
+        LocalityShard {
+            permille: cfg.sample_permille.min(1000),
+            trace_cap: cfg.trace_cap,
+            trace_full: AtomicBool::new(cfg.trace_cap == 0),
+            inner: Mutex::new(Inner {
+                mat: Mattson::new(),
+                prev_comm: None,
+                cum: LocalitySample::default(),
+                trace: Vec::new(),
+            }),
+        }
+    }
+
+    /// The configured sampling rate in permille.
+    pub fn sample_permille(&self) -> u32 {
+        self.permille
+    }
+
+    /// Lock-free membership test for the worker's tap: should this
+    /// node's accesses be forwarded for distance profiling?
+    #[inline]
+    pub fn is_sampled(&self, node: u32) -> bool {
+        node_sampled(node, self.permille)
+    }
+
+    /// Lock-free check: is the trace prefix still being captured? When
+    /// true, the worker forwards **every** access of the batch (not
+    /// just sampled ones) so the captured prefix mirrors the cache's
+    /// real access order.
+    #[inline]
+    pub fn wants_trace(&self) -> bool {
+        !self.trace_full.load(Ordering::Relaxed)
+    }
+
+    /// Ingest one micro-batch worth of gather taps under a single lock
+    /// acquisition. `total_accesses` is the batch's full gather count
+    /// (including nodes the worker filtered out); `batch` carries the
+    /// accesses that are sampled and/or trace-captured, in cache
+    /// access order.
+    pub fn observe_batch(&self, total_accesses: u64, batch: &[Access]) {
+        if total_accesses == 0 && batch.is_empty() {
+            return;
+        }
+        let mut g = self.inner.lock().unwrap();
+        let inner = &mut *g;
+        inner.cum.accesses += total_accesses;
+        for a in batch {
+            if inner.trace.len() < self.trace_cap {
+                inner.trace.push((a.node, a.hit));
+                if inner.trace.len() == self.trace_cap {
+                    self.trace_full.store(true, Ordering::Relaxed);
+                }
+            }
+            if !node_sampled(a.node, self.permille) {
+                continue;
+            }
+            inner.cum.sampled += 1;
+            match inner.mat.access(a.node) {
+                Some(d) => {
+                    let est = if self.permille >= 1000 {
+                        d
+                    } else {
+                        d.saturating_mul(1000) / self.permille as u64
+                    };
+                    inner.cum.dist.record(est);
+                    match inner.prev_comm {
+                        Some(pc) if pc == a.comm => {
+                            inner.cum.self_reuses += 1
+                        }
+                        _ => inner.cum.cross_reuses += 1,
+                    }
+                }
+                None => inner.cum.cold += 1,
+            }
+            inner.prev_comm = Some(a.comm);
+        }
+    }
+
+    /// Clone of the cumulative sample (telemetry ticks and the final
+    /// report diff/merge these).
+    pub fn snapshot(&self) -> LocalitySample {
+        self.inner.lock().unwrap().cum.clone()
+    }
+
+    /// The captured access-trace prefix as `(node, fresh_hit)` pairs,
+    /// in cache access order.
+    pub fn trace(&self) -> Vec<(u32, bool)> {
+        self.inner.lock().unwrap().trace.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Exact (unsampled) reference: LRU recency list, distance = index
+    /// of the node in it. O(n·d) but fine for test-sized streams.
+    struct NaiveMattson {
+        order: Vec<u32>, // most-recent first
+    }
+
+    impl NaiveMattson {
+        fn new() -> NaiveMattson {
+            NaiveMattson { order: Vec::new() }
+        }
+
+        fn access(&mut self, node: u32) -> Option<u64> {
+            match self.order.iter().position(|&v| v == node) {
+                Some(i) => {
+                    self.order.remove(i);
+                    self.order.insert(0, node);
+                    Some(i as u64)
+                }
+                None => {
+                    self.order.insert(0, node);
+                    None
+                }
+            }
+        }
+    }
+
+    fn zipfish_stream(n_nodes: u32, len: usize, seed: u64) -> Vec<u32> {
+        let mut rng = Rng::new(seed);
+        (0..len)
+            .map(|_| {
+                // square the uniform to skew toward low ids
+                let u = rng.below(n_nodes as u64) as f64
+                    / n_nodes as f64;
+                ((u * u) * n_nodes as f64) as u32
+            })
+            .collect()
+    }
+
+    /// At permille=1000 the profiler *is* exact Mattson: its distance
+    /// histogram must match a naive reference bucket-for-bucket, over
+    /// a stream long enough to force several position-space
+    /// compactions.
+    #[test]
+    fn full_rate_profiler_matches_exact_mattson() {
+        let stream = zipfish_stream(300, 50_000, 7);
+        let shard = LocalityShard::new(LocalityConfig {
+            sample_permille: 1000,
+            trace_cap: 0,
+        });
+        let batch: Vec<Access> = stream
+            .iter()
+            .map(|&v| Access { node: v, comm: v % 4, hit: false })
+            .collect();
+        // feed in micro-batch sized chunks like the worker does
+        for chunk in batch.chunks(97) {
+            shard.observe_batch(chunk.len() as u64, chunk);
+        }
+        let mut naive = NaiveMattson::new();
+        let mut want = LogHist::new();
+        let mut cold = 0u64;
+        for &v in &stream {
+            match naive.access(v) {
+                Some(d) => want.record(d),
+                None => cold += 1,
+            }
+        }
+        let got = shard.snapshot();
+        assert_eq!(got.accesses, stream.len() as u64);
+        assert_eq!(got.sampled, stream.len() as u64);
+        assert_eq!(got.cold, cold);
+        assert_eq!(got.reuses(), want.count());
+        assert_eq!(got.self_reuses + got.cross_reuses, got.reuses());
+        assert!(got.dist.buckets().eq(want.buckets()), "distance buckets");
+        assert_eq!(got.dist.sum(), want.sum());
+    }
+
+    /// Satellite test: the SHARDS-sampled estimate stays within
+    /// bounded error of the exact computation. A cyclic scan over N
+    /// nodes has true stack distance N−1 for every reuse; the sampled
+    /// profiler sees only its hash-selected subset and scales back up.
+    #[test]
+    fn sampled_estimate_is_within_bounded_error_of_exact() {
+        let n: u32 = 2_000;
+        let stream: Vec<u32> =
+            (0..6 * n).map(|i| i % n).collect();
+        let exact_mean = (n - 1) as f64;
+        for permille in [250u32, 500] {
+            let shard = LocalityShard::new(LocalityConfig {
+                sample_permille: permille,
+                trace_cap: 0,
+            });
+            let batch: Vec<Access> = stream
+                .iter()
+                .map(|&v| Access { node: v, comm: 0, hit: false })
+                .collect();
+            shard.observe_batch(batch.len() as u64, &batch);
+            let s = shard.snapshot();
+            // the sampled set is ~permille/1000 of the nodes
+            let frac = s.cold as f64 / n as f64;
+            assert!(
+                (frac - permille as f64 / 1000.0).abs() < 0.05,
+                "sampled-set fraction {frac} at {permille}‰"
+            );
+            let est = s.mean_distance();
+            let rel = (est - exact_mean).abs() / exact_mean;
+            assert!(
+                rel < 0.15,
+                "estimated mean {est:.0} vs exact {exact_mean:.0} \
+                 (rel {rel:.3}) at {permille}‰"
+            );
+            // all accesses observed, only the sampled subset profiled
+            assert_eq!(s.accesses, stream.len() as u64);
+            assert!(s.sampled < s.accesses);
+        }
+    }
+
+    /// Community-coherent streams score high self-reuse affinity;
+    /// interleaved streams score low — the counter the `p` knob moves.
+    #[test]
+    fn affinity_separates_coherent_from_interleaved_streams() {
+        let mk = |interleave: bool| {
+            let shard = LocalityShard::new(LocalityConfig {
+                sample_permille: 1000,
+                trace_cap: 0,
+            });
+            let mut batch = Vec::new();
+            for _round in 0..6 {
+                for i in 0..40u32 {
+                    let comm = if interleave {
+                        // alternate communities access to access
+                        i % 2
+                    } else {
+                        // one community's nodes, then the other's
+                        u32::from(i >= 20)
+                    };
+                    batch.push(Access { node: i, comm, hit: false });
+                }
+            }
+            shard.observe_batch(batch.len() as u64, &batch);
+            shard.snapshot().self_reuse_frac()
+        };
+        let coherent = mk(false);
+        let interleaved = mk(true);
+        assert!(
+            coherent > 0.9,
+            "coherent stream self-reuse {coherent:.2}"
+        );
+        assert!(
+            interleaved < 0.1,
+            "interleaved stream self-reuse {interleaved:.2}"
+        );
+    }
+
+    /// The trace prefix is bounded, ordered, and closes itself.
+    #[test]
+    fn trace_capture_is_a_bounded_prefix() {
+        let shard = LocalityShard::new(LocalityConfig {
+            sample_permille: 0,
+            trace_cap: 8,
+        });
+        assert!(shard.wants_trace());
+        let batch: Vec<Access> = (0..20u32)
+            .map(|i| Access { node: i, comm: 0, hit: i % 2 == 0 })
+            .collect();
+        shard.observe_batch(batch.len() as u64, &batch);
+        assert!(!shard.wants_trace());
+        let trace = shard.trace();
+        assert_eq!(trace.len(), 8);
+        for (i, &(node, hit)) in trace.iter().enumerate() {
+            assert_eq!(node, i as u32);
+            assert_eq!(hit, i % 2 == 0);
+        }
+        // permille=0 still counts raw accesses but profiles nothing
+        let s = shard.snapshot();
+        assert_eq!(s.accesses, 20);
+        assert_eq!(s.sampled, 0);
+        assert!(s.dist.is_empty());
+    }
+
+    /// Cumulative snapshots diff into exact per-window deltas and
+    /// per-shard samples merge into the run total.
+    #[test]
+    fn snapshot_diff_and_merge_follow_the_window_discipline() {
+        let shard = LocalityShard::new(LocalityConfig {
+            sample_permille: 1000,
+            trace_cap: 0,
+        });
+        let early: Vec<Access> = (0..50u32)
+            .map(|i| Access { node: i % 10, comm: 0, hit: false })
+            .collect();
+        shard.observe_batch(early.len() as u64, &early);
+        let snap1 = shard.snapshot();
+        let late: Vec<Access> = (0..70u32)
+            .map(|i| Access { node: i % 7, comm: 1, hit: true })
+            .collect();
+        shard.observe_batch(late.len() as u64, &late);
+        let snap2 = shard.snapshot();
+        let w = snap2.diff(&snap1);
+        assert_eq!(w.accesses, 70);
+        assert_eq!(w.sampled, 70);
+        // every sampled access in the window is either a reuse or cold
+        assert_eq!(w.reuses() + w.cold, 70);
+        // merging the window back onto the earlier snapshot restores
+        // the cumulative counters
+        let mut merged = snap1.clone();
+        merged.merge(&w);
+        assert_eq!(merged.accesses, snap2.accesses);
+        assert_eq!(merged.sampled, snap2.sampled);
+        assert_eq!(merged.cold, snap2.cold);
+        assert_eq!(merged.reuses(), snap2.reuses());
+        assert_eq!(merged.dist.sum(), snap2.dist.sum());
+    }
+
+    #[test]
+    fn node_sampling_is_spatial_and_proportional() {
+        for v in 0..100 {
+            assert!(node_sampled(v, 1000));
+            assert!(!node_sampled(v, 0));
+            // deterministic per node
+            assert_eq!(node_sampled(v, 300), node_sampled(v, 300));
+        }
+        let kept =
+            (0..100_000u32).filter(|&v| node_sampled(v, 100)).count();
+        let frac = kept as f64 / 100_000.0;
+        assert!((frac - 0.1).abs() < 0.01, "kept {frac:.3} at 10%");
+    }
+}

@@ -34,16 +34,32 @@
 //!   rings, recent windows, alert history, resolved config, per-shard
 //!   state — to `results/postmortem-*/`.
 //!
+//! Alongside the health layer sits the **locality observatory**
+//! (`locality=` knob), which watches memory-access *structure* rather
+//! than time:
+//!
+//! * [`locality`] — an online SHARDS-sampled Mattson reuse-distance
+//!   profiler tapped into every shard's feature-gather path, with
+//!   self/cross-community access-affinity counters and a bounded
+//!   access-trace prefix for offline [`crate::cachesim`] cross-checks;
+//! * [`mrc`] — turns the distance histogram into a miss-ratio curve
+//!   (predicted hit rate at *every* capacity from one pass) and a
+//!   cache right-sizing advisor, cross-checked live against the
+//!   serving cache's observed hit rate.
+//!
 //! The overhead contract — full-rate tracing costs ≤ 5% serve
 //! throughput — is enforced by `exp obs`
 //! ([`crate::exp::obs`]), which runs the same bench with tracing off /
 //! sampled / full and fails the run if the gap exceeds the budget; the
 //! health layer carries the same ≤ 5% bound, enforced by `exp health`
-//! ([`crate::exp::health`]).
+//! ([`crate::exp::health`]), and the locality profiler the same bound
+//! again, enforced by `exp locality` ([`crate::exp::locality`]).
 
 pub mod export;
 pub mod flight;
 pub mod hist;
+pub mod locality;
+pub mod mrc;
 pub mod series;
 pub mod slo;
 pub mod span;
@@ -52,6 +68,13 @@ pub mod watchdog;
 pub use export::{write_chrome_trace, ExportSummary, PromText};
 pub use flight::{dump_postmortem, read_postmortem, PostmortemBundle};
 pub use hist::LogHist;
+pub use locality::{
+    node_sampled, Access, LocalityConfig, LocalitySample, LocalityShard,
+};
+pub use mrc::{
+    advise, curve, miss_ratio_at, CacheAdvice, MrcPoint,
+    DEFAULT_TARGET_HIT_RATE,
+};
 pub use series::{HealthSample, SeriesConfig, Window, WindowedSeries};
 pub use slo::{SloKind, SloRuntime, SloSpec, SloTarget};
 pub use span::{

@@ -1,0 +1,272 @@
+//! Miss-ratio curves and the cache right-sizing advisor.
+//!
+//! Mattson's classic result: an LRU cache of capacity `C` rows hits an
+//! access exactly when its stack distance is `< C`. So the reuse-
+//! distance histogram a [`super::locality::LocalityShard`] accumulates
+//! *is* the miss-ratio curve — one pass over the live stream predicts
+//! the hit rate at **every** capacity at once:
+//!
+//! ```text
+//! miss(C) ≈ (cold + #[distance ≥ C]) / sampled_accesses
+//! ```
+//!
+//! `#[distance ≥ C]` comes from [`LogHist::count_above`] at bucket
+//! granularity (~3 % relative capacity resolution), and cold
+//! first-touches miss at any capacity, which makes the curve
+//! non-increasing in `C` by construction ([`miss_ratio_at`]).
+//!
+//! On top of the curve sit two consumers:
+//!
+//! * [`curve`] samples `mrc_points=` log-spaced capacities for the
+//!   report / Prometheus export;
+//! * [`advise`] inverts the curve: the smallest `cache_rows` achieving
+//!   a target hit rate, plus the predicted hit rate at the *current*
+//!   size — which `exp locality` cross-checks against the serving
+//!   cache's real `hits / lookups` (within 5 points), pinning the
+//!   model to the live cache.
+//!
+//! The prediction models a fully-associative LRU over the shard's
+//! whole access stream; the real cache is 8-way set-associative and
+//! striped by `node % stripes`, so conflict misses make the observed
+//! rate sit slightly *under* the prediction — part of the 5-point
+//! tolerance budget, documented rather than hidden.
+
+use super::hist::LogHist;
+use super::locality::LocalitySample;
+
+/// Default hit-rate target the advisor sizes for.
+pub const DEFAULT_TARGET_HIT_RATE: f64 = 0.9;
+
+/// One sampled point of a miss-ratio curve.
+#[derive(Clone, Copy, Debug)]
+pub struct MrcPoint {
+    /// Cache capacity in feature rows.
+    pub capacity_rows: u64,
+    /// Predicted miss ratio at that capacity, in `[0, 1]`.
+    pub miss_ratio: f64,
+}
+
+/// Predicted miss ratio of a fully-associative LRU of `rows` capacity
+/// over the sampled stream: `(cold + #[distance ≥ rows]) / sampled`.
+/// Returns 1.0 when nothing was sampled (an unprofiled stream predicts
+/// nothing, and all-miss is the conservative answer). Non-increasing
+/// in `rows` because [`LogHist::count_above`] is monotone.
+pub fn miss_ratio_at(s: &LocalitySample, rows: u64) -> f64 {
+    if s.sampled == 0 {
+        return 1.0;
+    }
+    // distance d hits capacity C iff d < C ⇔ misses iff d ≥ C, i.e.
+    // strictly above C−1 (capacity 0 is clamped to 1 row).
+    let threshold = rows.max(1) - 1;
+    let over = s.cold + s.dist.count_above(threshold);
+    (over as f64 / s.sampled as f64).min(1.0)
+}
+
+/// Sample the miss-ratio curve at up to `points` log-spaced capacities
+/// in `[1, max_rows]` (deduplicated, ascending; always includes both
+/// endpoints). Empty when `points == 0`.
+pub fn curve(
+    s: &LocalitySample,
+    points: usize,
+    max_rows: u64,
+) -> Vec<MrcPoint> {
+    if points == 0 {
+        return Vec::new();
+    }
+    let max_rows = max_rows.max(1);
+    let mut caps: Vec<u64> = Vec::with_capacity(points);
+    if points == 1 {
+        caps.push(max_rows);
+    } else {
+        let span = (max_rows as f64).ln();
+        for i in 0..points {
+            let c = (span * i as f64 / (points - 1) as f64).exp();
+            caps.push((c.round() as u64).clamp(1, max_rows));
+        }
+    }
+    caps.dedup();
+    caps.iter()
+        .map(|&c| MrcPoint {
+            capacity_rows: c,
+            miss_ratio: miss_ratio_at(s, c),
+        })
+        .collect()
+}
+
+/// The right-sizing advisor's verdict for one shard's cache.
+#[derive(Clone, Copy, Debug)]
+pub struct CacheAdvice {
+    /// The cache's current capacity in rows.
+    pub rows_now: u64,
+    /// MRC-predicted hit rate at `rows_now`.
+    pub predicted_hit_rate: f64,
+    /// The real cache's observed `hits / lookups` over the same run.
+    pub observed_hit_rate: f64,
+    /// The hit-rate target `rows_for_target` sizes for.
+    pub target_hit_rate: f64,
+    /// Smallest capacity whose predicted hit rate reaches the target,
+    /// or `None` when no capacity can (the cold-miss share alone
+    /// exceeds the miss budget).
+    pub rows_for_target: Option<u64>,
+}
+
+/// Derive right-sizing advice from a sample: predicted hit rate at the
+/// current size, and the smallest capacity reaching `target` (searched
+/// over the distance histogram's bucket boundaries, so the answer
+/// carries the histogram's ~3 % capacity resolution).
+pub fn advise(
+    s: &LocalitySample,
+    rows_now: u64,
+    observed_hit_rate: f64,
+    target: f64,
+) -> CacheAdvice {
+    let target = target.clamp(0.0, 1.0);
+    let predicted_hit_rate = 1.0 - miss_ratio_at(s, rows_now);
+    CacheAdvice {
+        rows_now,
+        predicted_hit_rate,
+        observed_hit_rate,
+        target_hit_rate: target,
+        rows_for_target: rows_for_target(s, target),
+    }
+}
+
+/// Smallest capacity (in rows) whose predicted hit rate reaches
+/// `target`. Candidates are 1 plus each non-empty distance bucket's
+/// exclusive upper bound — capacities at which the curve can actually
+/// step.
+fn rows_for_target(s: &LocalitySample, target: f64) -> Option<u64> {
+    if s.sampled == 0 {
+        return None;
+    }
+    let mut candidates: Vec<u64> = std::iter::once(1)
+        .chain(s.dist.buckets().map(|(_, hi, _)| hi))
+        .collect();
+    candidates.sort_unstable();
+    candidates.dedup();
+    candidates
+        .into_iter()
+        .find(|&c| 1.0 - miss_ratio_at(s, c) >= target)
+}
+
+/// Convenience: the distance histogram of `s`, exposed so exporters
+/// can summarize the curve's raw material without reaching into the
+/// sample's fields.
+pub fn distance_hist(s: &LocalitySample) -> &LogHist {
+    &s.dist
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::locality::{Access, LocalityConfig, LocalityShard};
+    use crate::util::rng::Rng;
+
+    fn sample_of(stream: &[(u32, u32)]) -> LocalitySample {
+        let shard = LocalityShard::new(LocalityConfig {
+            sample_permille: 1000,
+            trace_cap: 0,
+        });
+        let batch: Vec<Access> = stream
+            .iter()
+            .map(|&(node, comm)| Access { node, comm, hit: false })
+            .collect();
+        shard.observe_batch(batch.len() as u64, &batch);
+        shard.snapshot()
+    }
+
+    /// Satellite property test: the MRC is non-increasing in capacity,
+    /// on randomized streams, at every probed capacity and across the
+    /// sampled curve.
+    #[test]
+    fn miss_ratio_is_monotone_non_increasing_in_capacity() {
+        let mut rng = Rng::new(99);
+        for case in 0..8 {
+            let n_nodes = 20 + rng.below(500) as u32;
+            let stream: Vec<(u32, u32)> = (0..4_000)
+                .map(|_| (rng.below(n_nodes as u64) as u32, 0))
+                .collect();
+            let s = sample_of(&stream);
+            let mut prev = miss_ratio_at(&s, 1);
+            assert!(prev <= 1.0 && prev >= 0.0);
+            for rows in (1..1_200).step_by(7) {
+                let m = miss_ratio_at(&s, rows);
+                assert!(
+                    m <= prev + 1e-12,
+                    "case {case}: miss({rows}) = {m} > {prev}"
+                );
+                prev = m;
+            }
+            let c = curve(&s, 16, 1_024);
+            for w in c.windows(2) {
+                assert!(w[0].capacity_rows < w[1].capacity_rows);
+                assert!(w[1].miss_ratio <= w[0].miss_ratio + 1e-12);
+            }
+            assert_eq!(c.first().unwrap().capacity_rows, 1);
+            assert_eq!(c.last().unwrap().capacity_rows, 1_024);
+        }
+    }
+
+    /// A cyclic scan over N nodes is the textbook MRC step function:
+    /// capacity below N misses everything, capacity ≥ N hits
+    /// everything but the cold pass.
+    #[test]
+    fn cyclic_scan_produces_the_textbook_step() {
+        let n = 64u32;
+        let stream: Vec<(u32, u32)> =
+            (0..10 * n).map(|i| (i % n, 0)).collect();
+        let s = sample_of(&stream);
+        // every reuse has distance exactly n−1
+        assert_eq!(s.dist.min(), (n - 1) as u64);
+        assert_eq!(s.dist.max(), (n - 1) as u64);
+        let below = miss_ratio_at(&s, (n / 2) as u64);
+        let at = miss_ratio_at(&s, n as u64 + 2);
+        assert!(below > 0.99, "below-capacity miss {below}");
+        let cold_share = s.cold as f64 / s.sampled as f64;
+        assert!(
+            (at - cold_share).abs() < 1e-9,
+            "at-capacity miss {at} vs cold share {cold_share}"
+        );
+    }
+
+    /// The advisor finds the smallest capacity reaching the target and
+    /// its prediction at that capacity really does reach it.
+    #[test]
+    fn advisor_inverts_the_curve() {
+        let n = 100u32;
+        let stream: Vec<(u32, u32)> =
+            (0..50 * n).map(|i| (i % n, 0)).collect();
+        let s = sample_of(&stream);
+        let a = advise(&s, 16, 0.1, 0.9);
+        assert_eq!(a.rows_now, 16);
+        // 16 rows over a 100-node scan: essentially all misses
+        assert!(a.predicted_hit_rate < 0.05);
+        let rows = a.rows_for_target.expect("target reachable");
+        assert!(1.0 - miss_ratio_at(&s, rows) >= a.target_hit_rate);
+        // the advice sits at the scan's working set (bucket-granular)
+        assert!(
+            (rows as i64 - n as i64).abs() <= 4,
+            "advice {rows} vs working set {n}"
+        );
+        // clearly below the working set the target is unreachable
+        assert!(1.0 - miss_ratio_at(&s, (n / 2) as u64) < a.target_hit_rate);
+        // an unreachable target (cold share too high) is None, not 0
+        let one_shot: Vec<(u32, u32)> =
+            (0..500u32).map(|i| (i, 0)).collect();
+        let cold_only = sample_of(&one_shot);
+        assert_eq!(advise(&cold_only, 64, 0.0, 0.5).rows_for_target, None);
+    }
+
+    #[test]
+    fn empty_sample_predicts_all_miss_and_no_advice() {
+        let s = LocalitySample::default();
+        assert_eq!(miss_ratio_at(&s, 1), 1.0);
+        assert_eq!(miss_ratio_at(&s, 1 << 20), 1.0);
+        let a = advise(&s, 128, 0.0, 0.9);
+        assert_eq!(a.predicted_hit_rate, 0.0);
+        assert_eq!(a.rows_for_target, None);
+        assert!(curve(&s, 8, 1024).iter().all(|p| p.miss_ratio == 1.0));
+        assert!(curve(&s, 0, 1024).is_empty());
+        assert!(distance_hist(&s).is_empty());
+    }
+}

@@ -73,6 +73,17 @@ pub struct HealthSample {
     /// Requests waiting on the serving queue **right now** (gauge, not
     /// a cumulative counter — copied into the window as-is).
     pub queue_depth: u64,
+    /// Cumulative scaled reuse-distance histogram from the locality
+    /// profiler (empty when `locality=` is off).
+    pub reuse_dist: LogHist,
+    /// Locality-profiler sampled gather accesses.
+    pub loc_sampled: u64,
+    /// Sampled first-touch (cold) accesses.
+    pub loc_cold: u64,
+    /// Sampled reuses preceded by a same-community access.
+    pub loc_self: u64,
+    /// Sampled reuses preceded by a different-community access.
+    pub loc_cross: u64,
 }
 
 /// One sealed window: the counter **deltas** between two consecutive
@@ -118,6 +129,16 @@ pub struct Window {
     pub batches: u64,
     /// Queue depth gauge at seal time.
     pub queue_depth: u64,
+    /// Reuse distances of gather accesses sampled inside this window.
+    pub reuse_dist: LogHist,
+    /// Locality-sampled accesses inside this window.
+    pub loc_sampled: u64,
+    /// Sampled cold (first-touch) accesses inside this window.
+    pub loc_cold: u64,
+    /// Self-community sampled reuses inside this window.
+    pub loc_self: u64,
+    /// Cross-community sampled reuses inside this window.
+    pub loc_cross: u64,
 }
 
 impl Window {
@@ -164,6 +185,18 @@ impl Window {
         ratio(self.purity_permille_sum, self.batches * 1000)
     }
 
+    /// Mean estimated reuse distance of this window's sampled gather
+    /// reuses (0 when the locality profiler is off or saw no reuse).
+    pub fn mean_reuse_distance(&self) -> f64 {
+        self.reuse_dist.mean()
+    }
+
+    /// Self-community fraction of this window's sampled reuses (0 when
+    /// none were observed).
+    pub fn self_reuse_frac(&self) -> f64 {
+        ratio(self.loc_self, self.loc_self + self.loc_cross)
+    }
+
     /// Flat JSON object for the postmortem bundle and `ServeReport`:
     /// counters plus derived latency quantiles (the full bucket array
     /// stays in memory only).
@@ -193,6 +226,10 @@ impl Window {
             ("lat_p95_us", num(self.lat.quantile(0.95) as f64)),
             ("lat_p99_us", num(self.lat.quantile(0.99) as f64)),
             ("lat_max_us", num(self.lat.max() as f64)),
+            ("loc_sampled", num(self.loc_sampled as f64)),
+            ("loc_cold", num(self.loc_cold as f64)),
+            ("mean_reuse_distance", num(self.mean_reuse_distance())),
+            ("self_reuse_frac", num(self.self_reuse_frac())),
         ])
     }
 }
@@ -274,6 +311,11 @@ impl WindowedSeries {
                 .saturating_sub(self.prev.purity_permille_sum),
             batches: cur.batches.saturating_sub(self.prev.batches),
             queue_depth: cur.queue_depth,
+            reuse_dist: cur.reuse_dist.diff(&self.prev.reuse_dist),
+            loc_sampled: cur.loc_sampled.saturating_sub(self.prev.loc_sampled),
+            loc_cold: cur.loc_cold.saturating_sub(self.prev.loc_cold),
+            loc_self: cur.loc_self.saturating_sub(self.prev.loc_self),
+            loc_cross: cur.loc_cross.saturating_sub(self.prev.loc_cross),
         };
         self.prev_ts_us = ts_us;
         self.prev = cur;
@@ -331,9 +373,19 @@ impl WindowedSeries {
             purity_permille_sum: 0,
             batches: 0,
             queue_depth: newest.queue_depth,
+            reuse_dist: LogHist::new(),
+            loc_sampled: 0,
+            loc_cold: 0,
+            loc_self: 0,
+            loc_cross: 0,
         };
         for w in slice {
             m.lat.merge(&w.lat);
+            m.reuse_dist.merge(&w.reuse_dist);
+            m.loc_sampled += w.loc_sampled;
+            m.loc_cold += w.loc_cold;
+            m.loc_self += w.loc_self;
+            m.loc_cross += w.loc_cross;
             m.completed += w.completed;
             m.errors += w.errors;
             m.deadline_missed += w.deadline_missed;
@@ -381,6 +433,17 @@ mod tests {
             purity_permille_sum: k * 900,
             batches: k,
             queue_depth: k % 7,
+            reuse_dist: {
+                let mut d = LogHist::new();
+                for i in 0..k * 4 {
+                    d.record(10 + i);
+                }
+                d
+            },
+            loc_sampled: k * 6,
+            loc_cold: k * 2,
+            loc_self: k * 3,
+            loc_cross: k,
         }
     }
 
@@ -468,6 +531,9 @@ mod tests {
         assert_eq!(w.accuracy(), Some(0.75));
         assert!((w.dedup_factor() - 2.0).abs() < 1e-12);
         assert!((w.purity() - 0.9).abs() < 1e-12);
+        assert!((w.self_reuse_frac() - 12.0 / 16.0).abs() < 1e-12);
+        assert!(w.mean_reuse_distance() > 0.0);
+        assert_eq!(w.reuse_dist.count(), 16);
         // an idle window has no accuracy and zero rates
         let idle = s.observe(2_000, sample_at(4)).clone();
         assert_eq!(idle.accuracy(), None);
@@ -478,5 +544,9 @@ mod tests {
             .unwrap();
         assert_eq!(j.get("completed").unwrap().as_usize().unwrap(), 40);
         assert!(j.get("lat_p99_us").unwrap().as_f64().unwrap() > 0.0);
+        assert!(
+            j.get("self_reuse_frac").unwrap().as_f64().unwrap() > 0.7
+        );
+        assert_eq!(j.get("loc_sampled").unwrap().as_usize().unwrap(), 24);
     }
 }

@@ -82,6 +82,12 @@ pub enum EventKind {
     /// Watchdog declared a thread stalled (instant; `a` = watchdog
     /// slot index, `b` = ms since the thread's last heartbeat).
     Stall = 16,
+    /// One sealed locality window (counter; `a` = mean estimated
+    /// reuse distance in rows, `b` = MRC-predicted miss permille at
+    /// the current cache size, `c` = self-community reuse permille).
+    /// Exported as a Chrome-trace counter-track sample (`ph:"C"`), so
+    /// Perfetto plots the run's locality as a live curve.
+    Locality = 17,
 }
 
 impl EventKind {
@@ -105,6 +111,7 @@ impl EventKind {
             EventKind::SloFire => "slo_fire",
             EventKind::SloClear => "slo_clear",
             EventKind::Stall => "stall",
+            EventKind::Locality => "locality",
         }
     }
 
@@ -139,6 +146,7 @@ impl EventKind {
             14 => EventKind::SloFire,
             15 => EventKind::SloClear,
             16 => EventKind::Stall,
+            17 => EventKind::Locality,
             _ => EventKind::MetricsFlush,
         }
     }
@@ -447,8 +455,12 @@ mod tests {
 
     #[test]
     fn health_event_kinds_round_trip() {
-        for kind in [EventKind::SloFire, EventKind::SloClear, EventKind::Stall]
-        {
+        for kind in [
+            EventKind::SloFire,
+            EventKind::SloClear,
+            EventKind::Stall,
+            EventKind::Locality,
+        ] {
             let e = Event {
                 ts_us: 7,
                 dur_us: 0,

@@ -172,6 +172,17 @@ impl ShardedFeatureCache {
         self.shards.len()
     }
 
+    /// Exact per-stripe core geometry `(stripes, sets, ways)` — what an
+    /// offline replay needs to rebuild this cache's behavior with fresh
+    /// [`SetAssocCore`]s (node → stripe is `node % stripes`, the same
+    /// routing as [`ShardedFeatureCache::fetch`]). The locality
+    /// observatory's cross-check leans on this (see
+    /// [`crate::obs::locality`]).
+    pub fn geometry(&self) -> (usize, usize, usize) {
+        let g = self.shards[0].lock().unwrap();
+        (self.shards.len(), g.core.sets(), g.core.ways())
+    }
+
     #[inline]
     fn shard_of(&self, node: u32) -> usize {
         node as usize % self.shards.len()

@@ -45,8 +45,10 @@ use crate::ckpt::{self, ParamStore};
 use crate::config::DatasetPreset;
 use crate::graph::Dataset;
 use crate::obs::{
-    dump_postmortem, shard_track, write_chrome_trace, EventKind, HealthSample,
-    LogHist, PromText, Recorder, SeriesConfig, SloRuntime, SloSpec, Watchdog,
+    dump_postmortem, mrc, shard_track, write_chrome_trace, CacheAdvice,
+    EventKind, HealthSample, LocalityConfig, LocalitySample, LocalityShard,
+    LogHist, MrcPoint,
+    PromText, Recorder, SeriesConfig, SloRuntime, SloSpec, Watchdog,
     WindowedSeries, TRACK_BATCHER, TRACK_CLIENT, TRACK_WATCHER,
 };
 use crate::runtime::artifact::{default_dir, ArtifactMeta, Manifest, SpecMeta};
@@ -188,6 +190,22 @@ pub struct ServeConfig {
     /// resolved config, per-shard state) under this directory.
     /// Requires `health_ms > 0` to ever trigger.
     pub flight: Option<PathBuf>,
+    /// Locality observatory (`locality=1`): tap every shard's
+    /// feature-gather loop with a SHARDS-sampled online Mattson
+    /// reuse-distance profiler, derive per-window miss-ratio curves
+    /// and a cache right-sizing advisor, and attach
+    /// [`ServeReport::locality`]. Off by default — the tap then costs
+    /// one `None` check per gather loop.
+    pub locality: bool,
+    /// Locality spatial-sampling rate in permille of the node id
+    /// space (`locality_sample=`, 1–1000). 1000 profiles every
+    /// access; lower rates profile a stateless hash-selected node
+    /// subset with distances rescaled, SHARDS-style, so estimates
+    /// stay unbiased.
+    pub locality_sample: u32,
+    /// Miss-ratio-curve resolution (`mrc_points=`): log-spaced
+    /// capacity points per derived curve.
+    pub mrc_points: usize,
 }
 
 impl ServeConfig {
@@ -224,6 +242,9 @@ impl ServeConfig {
             health_ms: 0,
             slo: None,
             flight: None,
+            locality: false,
+            locality_sample: 1000,
+            mrc_points: 16,
         }
     }
 }
@@ -316,6 +337,110 @@ impl HealthReport {
                     .map(|p| s(&p.display().to_string()))
                     .collect()),
             ),
+        ])
+    }
+}
+
+/// One shard's cache right-sizing advice inside
+/// [`LocalityReport`]: the MRC inverted at the shard's own profile.
+#[derive(Clone, Debug)]
+pub struct ShardAdvice {
+    /// Device shard index.
+    pub shard: usize,
+    /// The advisor's verdict for this shard's cache
+    /// ([`crate::obs::mrc::advise`]): predicted vs observed hit rate
+    /// at the current size, and the smallest capacity meeting the
+    /// target rate (when the workload can reach it at all).
+    pub advice: CacheAdvice,
+}
+
+impl ShardAdvice {
+    /// JSON object for the report artifact.
+    pub fn to_json(&self) -> Json {
+        let rows_target = match self.advice.rows_for_target {
+            Some(r) => num(r as f64),
+            None => Json::Null,
+        };
+        obj(vec![
+            ("shard", num(self.shard as f64)),
+            ("rows_now", num(self.advice.rows_now as f64)),
+            ("predicted_hit_rate", num(self.advice.predicted_hit_rate)),
+            ("observed_hit_rate", num(self.advice.observed_hit_rate)),
+            ("target_hit_rate", num(self.advice.target_hit_rate)),
+            ("rows_for_target", rows_target),
+        ])
+    }
+}
+
+/// End-of-run summary of the locality observatory (`locality=1` runs
+/// only): the merged reuse-distance profile, the miss-ratio curve
+/// derived from it, and per-shard right-sizing advice cross-checked
+/// against the live caches' own hit counters.
+#[derive(Clone, Debug)]
+pub struct LocalityReport {
+    /// Spatial sampling rate the profilers ran at (permille of the
+    /// node id space; 1000 = every access profiled).
+    pub sample_permille: u32,
+    /// Gather accesses observed (sampled or not), summed over shards.
+    pub accesses: u64,
+    /// Accesses to SHARDS-sampled nodes (the profiled subset).
+    pub sampled: u64,
+    /// Sampled accesses with a finite reuse distance.
+    pub reuses: u64,
+    /// Sampled first-touches (infinite distance: compulsory misses).
+    pub cold: u64,
+    /// Mean estimated reuse distance over all reuses, in cache rows
+    /// (rescaled for sampling; the quantity community bias shrinks).
+    pub mean_reuse_distance: f64,
+    /// 95th-percentile estimated reuse distance, rows.
+    pub p95_reuse_distance: u64,
+    /// Of sampled reuses, the fraction whose previous sampled access
+    /// was in the same community — the access-affinity signal.
+    pub self_reuse_frac: f64,
+    /// Miss-ratio curve from the merged profile: predicted miss ratio
+    /// at `mrc_points` log-spaced capacities.
+    pub mrc: Vec<MrcPoint>,
+    /// Per-shard right-sizing advice.
+    pub advice: Vec<ShardAdvice>,
+    /// MRC-predicted hit rate at the current per-shard capacity,
+    /// lookup-weighted over shards.
+    pub predicted_hit_rate: f64,
+    /// The live caches' observed fresh-hit rate over the same run —
+    /// `exp locality` gates `|predicted - observed|`.
+    pub observed_hit_rate: f64,
+}
+
+impl LocalityReport {
+    /// JSON object for the report artifact.
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("sample_permille", num(self.sample_permille as f64)),
+            ("accesses", num(self.accesses as f64)),
+            ("sampled", num(self.sampled as f64)),
+            ("reuses", num(self.reuses as f64)),
+            ("cold", num(self.cold as f64)),
+            ("mean_reuse_distance", num(self.mean_reuse_distance)),
+            ("p95_reuse_distance", num(self.p95_reuse_distance as f64)),
+            ("self_reuse_frac", num(self.self_reuse_frac)),
+            (
+                "mrc",
+                arr(self
+                    .mrc
+                    .iter()
+                    .map(|pt| {
+                        obj(vec![
+                            ("capacity_rows", num(pt.capacity_rows as f64)),
+                            ("miss_ratio", num(pt.miss_ratio)),
+                        ])
+                    })
+                    .collect()),
+            ),
+            (
+                "advice",
+                arr(self.advice.iter().map(|a| a.to_json()).collect()),
+            ),
+            ("predicted_hit_rate", num(self.predicted_hit_rate)),
+            ("observed_hit_rate", num(self.observed_hit_rate)),
         ])
     }
 }
@@ -431,6 +556,9 @@ pub struct ServeReport {
     /// Temporal-health telemetry (`health_ms > 0` runs only): windows
     /// sealed, per-SLO alert accounting, stalls, postmortems.
     pub health: Option<HealthReport>,
+    /// Locality-observatory telemetry (`locality=1` runs only):
+    /// reuse-distance profile, miss-ratio curve, right-sizing advice.
+    pub locality: Option<LocalityReport>,
     /// Auxiliary threads that failed to exit within the bounded join
     /// timeout at shutdown (the engine still blocks on them afterwards,
     /// so a non-empty list means shutdown was slow, not leaky).
@@ -502,6 +630,13 @@ impl ServeReport {
                 },
             ),
             (
+                "locality",
+                match &self.locality {
+                    Some(l) => l.to_json(),
+                    None => Json::Null,
+                },
+            ),
+            (
                 "unjoined_threads",
                 arr(self.unjoined_threads.iter().map(|n| s(n)).collect()),
             ),
@@ -555,6 +690,17 @@ impl ServeReport {
             }
             None => String::new(),
         };
+        let locality_tail = match &self.locality {
+            Some(l) => format!(
+                " | locality dist {:.0} self {:.0}% pred-hit {:.1}% \
+                 obs-hit {:.1}%",
+                l.mean_reuse_distance,
+                l.self_reuse_frac * 100.0,
+                l.predicted_hit_rate * 100.0,
+                l.observed_hit_rate * 100.0,
+            ),
+            None => String::new(),
+        };
         let join_tail = if self.unjoined_threads.is_empty() {
             String::new()
         } else {
@@ -596,6 +742,7 @@ impl ServeReport {
             exec_tail,
             stream_tail,
         ) + &health_tail
+            + &locality_tail
             + &join_tail
     }
 }
@@ -750,6 +897,26 @@ pub fn run(
             })
         })
         .collect();
+
+    // ---- locality observatory (locality=1) ----
+    // one reuse-distance profiler per device shard, fed by that
+    // shard's gather loop; the trace prefix backs offline cachesim
+    // cross-checks (`LocalityShard::trace`)
+    let loc_profilers: Option<Vec<LocalityShard>> = if scfg.locality {
+        let permille = scfg.locality_sample.clamp(1, 1000);
+        Some(
+            (0..n_shards)
+                .map(|_| {
+                    LocalityShard::new(LocalityConfig {
+                        sample_permille: permille,
+                        trace_cap: 65_536,
+                    })
+                })
+                .collect(),
+        )
+    } else {
+        None
+    };
 
     let records: Mutex<Vec<ReqRecord>> = Mutex::new(Vec::new());
     let shard_cells: Vec<Mutex<ShardStatsCell>> =
@@ -1075,6 +1242,7 @@ pub fn run(
             let purity_sum = &purity_sum;
             let purity_batches = &purity_batches;
             let health_out = &health_out;
+            let loc_profilers = loc_profilers.as_deref();
             let resolved_cfg = resolved_cfg.clone();
             let flight_dir = scfg.flight.clone();
             let slo_spec = scfg.slo.clone();
@@ -1171,7 +1339,48 @@ pub fn run(
                             purity_sum.load(Ordering::Relaxed);
                         cum.batches = purity_batches.load(Ordering::Relaxed);
                         cum.queue_depth = queue.len() as u64;
-                        series.observe(now, cum.clone());
+                        if let Some(profs) = loc_profilers {
+                            // fold the per-shard reuse-distance
+                            // profiles into the cumulative sample; the
+                            // series diffs them into per-window deltas
+                            let mut ls = LocalitySample::default();
+                            for pr in profs {
+                                ls.merge(&pr.snapshot());
+                            }
+                            cum.reuse_dist = ls.dist;
+                            cum.loc_sampled = ls.sampled;
+                            cum.loc_cold = ls.cold;
+                            cum.loc_self = ls.self_reuses;
+                            cum.loc_cross = ls.cross_reuses;
+                        }
+                        let w = series.observe(now, cum.clone());
+                        if loc_profilers.is_some() {
+                            // locality counter sample: one point per
+                            // sealed window, plotted as a curve by
+                            // Perfetto (ph:"C" in the export)
+                            let ws = LocalitySample {
+                                dist: w.reuse_dist.clone(),
+                                accesses: 0,
+                                sampled: w.loc_sampled,
+                                cold: w.loc_cold,
+                                self_reuses: w.loc_self,
+                                cross_reuses: w.loc_cross,
+                            };
+                            let pred_miss = mrc::miss_ratio_at(
+                                &ws,
+                                rows_per_shard as u64,
+                            );
+                            rec.instant(
+                                TRACK_CLIENT,
+                                EventKind::Locality,
+                                now,
+                                0,
+                                w.mean_reuse_distance().min(u32::MAX as f64)
+                                    as u32,
+                                (pred_miss * 1000.0) as u32,
+                                (w.self_reuse_frac() * 1000.0) as u32,
+                            );
+                        }
                         if let Some(rt) = slo_rt.as_mut() {
                             for t in rt.evaluate(series, now) {
                                 let kind = if t.fired {
@@ -1399,6 +1608,109 @@ pub fn run(
                                 &[("shard", &sl)],
                                 hist,
                             );
+                        }
+                        if let Some(profs) = loc_profilers {
+                            let mut ls = LocalitySample::default();
+                            for pr in profs {
+                                ls.merge(&pr.snapshot());
+                            }
+                            p.family(
+                                "serve_locality_accesses_total",
+                                "counter",
+                                "feature-gather accesses observed by the \
+                                 locality profiler",
+                            );
+                            p.sample(
+                                "serve_locality_accesses_total",
+                                &[],
+                                ls.accesses as f64,
+                            );
+                            p.family(
+                                "serve_locality_sampled_total",
+                                "counter",
+                                "accesses to SHARDS-sampled nodes",
+                            );
+                            p.sample(
+                                "serve_locality_sampled_total",
+                                &[],
+                                ls.sampled as f64,
+                            );
+                            p.family(
+                                "serve_locality_mean_reuse_distance",
+                                "gauge",
+                                "mean estimated reuse distance (cache rows)",
+                            );
+                            p.sample(
+                                "serve_locality_mean_reuse_distance",
+                                &[],
+                                ls.mean_distance(),
+                            );
+                            p.family(
+                                "serve_locality_self_reuse_frac",
+                                "gauge",
+                                "fraction of sampled reuses staying in the \
+                                 same community",
+                            );
+                            p.sample(
+                                "serve_locality_self_reuse_frac",
+                                &[],
+                                ls.self_reuse_frac(),
+                            );
+                            p.family(
+                                "serve_locality_reuse_distance",
+                                "summary",
+                                "estimated reuse-distance distribution \
+                                 (rows)",
+                            );
+                            p.summary(
+                                "serve_locality_reuse_distance",
+                                &[],
+                                &ls.dist,
+                            );
+                            // keep each family's samples contiguous:
+                            // compute the per-shard advice first
+                            let advice: Vec<CacheAdvice> = profs
+                                .iter()
+                                .enumerate()
+                                .map(|(sx, pr)| {
+                                    mrc::advise(
+                                        &pr.snapshot(),
+                                        caches[sx].rows() as u64,
+                                        caches[sx].stats().hit_rate(),
+                                        mrc::DEFAULT_TARGET_HIT_RATE,
+                                    )
+                                })
+                                .collect();
+                            p.family(
+                                "serve_mrc_predicted_hit_rate",
+                                "gauge",
+                                "MRC-predicted hit rate at the shard's \
+                                 current cache capacity",
+                            );
+                            for (sx, a) in advice.iter().enumerate() {
+                                let sl = sx.to_string();
+                                p.sample(
+                                    "serve_mrc_predicted_hit_rate",
+                                    &[("shard", &sl)],
+                                    a.predicted_hit_rate,
+                                );
+                            }
+                            p.family(
+                                "serve_mrc_rows_for_target",
+                                "gauge",
+                                "smallest cache_rows meeting the target \
+                                 hit rate (absent when unreachable)",
+                            );
+                            for (sx, a) in advice.iter().enumerate() {
+                                let sl = sx.to_string();
+                                if let Some(r) = a.rows_for_target {
+                                    p.sample(
+                                        "serve_mrc_rows_for_target",
+                                        &[("shard", &sl)],
+                                        r as f64,
+                                    );
+                                }
+                            }
                         }
                         if let Some(st) = stream {
                             let c = &st.counters;
@@ -1644,6 +1956,7 @@ pub fn run(
                     sampler: scfg.sampler,
                     sample_p: scfg.sample_p,
                     hb: Some(wd.hb(hb_workers[widx as usize])),
+                    locality: loc_profilers.as_ref().map(|v| &v[sidx]),
                 };
                 let rx = &rxs[sidx];
                 let cell = &shard_cells[sidx];
@@ -1840,6 +2153,55 @@ pub fn run(
         ));
     }
 
+    // locality observatory: merge the per-shard profiles, derive the
+    // run-level MRC and per-shard right-sizing advice, and cross-check
+    // the prediction against the live caches' own counters
+    let locality = loc_profilers.as_ref().map(|profs| {
+        let mut merged = LocalitySample::default();
+        for pr in profs {
+            merged.merge(&pr.snapshot());
+        }
+        let mut advice = Vec::with_capacity(profs.len());
+        let (mut pred_w, mut lookups_w) = (0.0f64, 0u64);
+        for (sidx, pr) in profs.iter().enumerate() {
+            let st = caches[sidx].stats();
+            let a = mrc::advise(
+                &pr.snapshot(),
+                caches[sidx].rows() as u64,
+                st.hit_rate(),
+                mrc::DEFAULT_TARGET_HIT_RATE,
+            );
+            pred_w += a.predicted_hit_rate * st.lookups as f64;
+            lookups_w += st.lookups;
+            advice.push(ShardAdvice { shard: sidx, advice: a });
+        }
+        // curve span: past the current capacity and past the longest
+        // observed distance, so the knee is always on the plot
+        let max_rows = (4 * rows_per_shard as u64)
+            .max(merged.dist.max().saturating_add(1));
+        LocalityReport {
+            sample_permille: profs
+                .first()
+                .map(|p| p.sample_permille())
+                .unwrap_or(1000),
+            accesses: merged.accesses,
+            sampled: merged.sampled,
+            reuses: merged.reuses(),
+            cold: merged.cold,
+            mean_reuse_distance: merged.mean_distance(),
+            p95_reuse_distance: merged.dist.quantile(0.95),
+            self_reuse_frac: merged.self_reuse_frac(),
+            mrc: mrc::curve(&merged, scfg.mrc_points, max_rows),
+            advice,
+            predicted_hit_rate: if lookups_w == 0 {
+                0.0
+            } else {
+                pred_w / lookups_w as f64
+            },
+            observed_hit_rate: cache_stats.hit_rate(),
+        }
+    });
+
     // errored requests count toward errors/deadlines, not latency
     // percentiles (their latency reflects the failure, not serving).
     // Quantiles come from the same log-bucket histogram family the
@@ -1912,6 +2274,7 @@ pub fn run(
         shards: shard_reports,
         stream: stream_report,
         health,
+        locality,
         unjoined_threads: unjoined,
     })
 }
@@ -2391,6 +2754,89 @@ mod tests {
         assert!(rep.unjoined_threads.is_empty());
         let j = rep.to_json().to_string_pretty();
         assert!(j.contains("\"health\": null"));
+    }
+
+    /// `locality=1` end to end: the report carries a locality section
+    /// whose accounting is internally consistent — accesses cover
+    /// every gather lookup, the MRC is monotone non-increasing in
+    /// capacity, one advice entry per shard, and the advisor's
+    /// predicted hit rate is a real probability next to the observed
+    /// one.
+    #[test]
+    fn locality_observatory_reports_consistent_profile() {
+        let ds = tiny();
+        let mut scfg = ServeConfig::for_dataset(&ds);
+        scfg.batch_size = 16;
+        scfg.workers = 2;
+        scfg.fanouts = vec![5, 5];
+        scfg.deadline_us = 500_000;
+        scfg.community_bias = 1.0;
+        scfg.locality = true;
+        scfg.mrc_points = 12;
+        scfg.seed = 11;
+        let meta = synthetic_infer_meta(&ds, scfg.batch_size, &scfg.fanouts);
+        let exec = NullExecutor { num_classes: ds.num_classes };
+        let lcfg = closed(4, 40, 9);
+        let rep = run(&ds, &meta, &exec, &scfg, &lcfg).unwrap();
+        assert_eq!(rep.requests, 160);
+        assert_eq!(rep.errors, 0);
+        let loc = rep.locality.as_ref().expect("locality=1 must report");
+        assert_eq!(loc.sample_permille, 1000);
+        // permille=1000 profiles every gather lookup, so the profiler's
+        // access count must equal the cache's lookup count exactly.
+        assert_eq!(loc.accesses, rep.cache_hits + rep.cache_misses);
+        assert_eq!(loc.sampled, loc.accesses);
+        assert_eq!(loc.reuses + loc.cold, loc.sampled);
+        assert!(loc.reuses > 0, "closed-loop reuse must be observed");
+        assert!(loc.mean_reuse_distance > 0.0);
+        assert!(loc.p95_reuse_distance > 0);
+        assert!((0.0..=1.0).contains(&loc.self_reuse_frac));
+        // MRC: non-empty, capacities increasing, miss ratio monotone
+        // non-increasing (more cache never predicts more misses).
+        assert!(!loc.mrc.is_empty());
+        for w in loc.mrc.windows(2) {
+            assert!(w[0].capacity_rows < w[1].capacity_rows);
+            assert!(
+                w[1].miss_ratio <= w[0].miss_ratio + 1e-12,
+                "MRC must be monotone: {:?} -> {:?}",
+                w[0],
+                w[1]
+            );
+        }
+        assert_eq!(loc.advice.len(), rep.n_shards);
+        for a in &loc.advice {
+            assert!((0.0..=1.0).contains(&a.advice.predicted_hit_rate));
+            assert!((0.0..=1.0).contains(&a.advice.observed_hit_rate));
+            assert!(a.advice.rows_now > 0);
+        }
+        assert!((0.0..=1.0).contains(&loc.predicted_hit_rate));
+        assert!((loc.observed_hit_rate - rep.cache_hit_rate).abs() < 1e-9);
+        let j = rep.to_json().to_string_pretty();
+        assert!(j.contains("\"locality\""));
+        assert!(j.contains("mean_reuse_distance"));
+        assert!(j.contains("rows_for_target"));
+        let s = rep.summary();
+        assert!(s.contains("locality dist"), "summary tail missing: {s}");
+    }
+
+    /// The default run keeps the locality section null: the profiler
+    /// is never constructed and the report serializes `"locality":
+    /// null`, matching the health layer's off-by-default contract.
+    #[test]
+    fn locality_disabled_reports_null_section() {
+        let ds = tiny();
+        let mut scfg = ServeConfig::for_dataset(&ds);
+        scfg.batch_size = 8;
+        scfg.workers = 1;
+        scfg.fanouts = vec![5, 5];
+        let meta = synthetic_infer_meta(&ds, scfg.batch_size, &scfg.fanouts);
+        let exec = NullExecutor { num_classes: ds.num_classes };
+        let lcfg = closed(2, 10, 7);
+        let rep = run(&ds, &meta, &exec, &scfg, &lcfg).unwrap();
+        assert!(rep.locality.is_none());
+        let j = rep.to_json().to_string_pretty();
+        assert!(j.contains("\"locality\": null"));
+        assert!(!rep.summary().contains("locality dist"));
     }
 
     #[test]

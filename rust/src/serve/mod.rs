@@ -76,7 +76,9 @@ pub use admission::{AdmissionController, AdmissionPolicy, AdmitDecision};
 pub use batcher::{batch_purity, BatcherConfig, MicroBatcher};
 pub use cache::{CacheStats, FeatureCacheConfig, Fetched, ShardedFeatureCache};
 pub use crate::sampler::SamplerKind;
-pub use engine::{run, ServeConfig, ServeReport};
+pub use engine::{
+    run, LocalityReport, ServeConfig, ServeReport, ShardAdvice,
+};
 pub use loadgen::{Arrival, LoadConfig};
 pub use queue::RequestQueue;
 pub use shard::{

@@ -37,7 +37,9 @@ use crate::batch::assemble;
 use crate::ckpt::quant::{pick_exp, rounded_div, FEAT_LIMIT, FEAT_MAX_EXP};
 use crate::ckpt::ParamVersion;
 use crate::graph::{Dataset, Topology};
-use crate::obs::{EventKind, Heartbeat, Recorder, TRACK_CLIENT};
+use crate::obs::{
+    Access, EventKind, Heartbeat, LocalityShard, Recorder, TRACK_CLIENT,
+};
 use crate::runtime::artifact::ArtifactMeta;
 use crate::runtime::host;
 use crate::runtime::kernels::{
@@ -489,6 +491,10 @@ pub struct WorkerCtx<'a> {
     /// silence-mid-batch is a detectable stall. `None` (tests,
     /// embedders) skips the beats entirely.
     pub hb: Option<&'a Heartbeat>,
+    /// This shard's reuse-distance profiler (`locality=1`): the
+    /// feature-gather loop feeds it one sampled-access batch per
+    /// micro-batch. `None` = locality observatory off, zero cost.
+    pub locality: Option<&'a LocalityShard>,
 }
 
 /// Per-batch accounting merged into the engine's totals (cache
@@ -757,10 +763,17 @@ pub fn process_batch(
     let input = mfg.input_nodes();
     let mut staged = vec![0f32; input.len() * f];
     let t_gather = if enabled { ctx.rec.now_us() } else { 0 };
+    // locality tap: lock-free pre-filter per access, one profiler
+    // lock per batch. While an offline-replay trace is open every
+    // access is forwarded (the trace must be a true prefix of the
+    // cache's access order); otherwise only SHARDS-sampled nodes are.
+    let loc_trace =
+        ctx.locality.map(|l| l.wants_trace()).unwrap_or(false);
+    let mut loc_acc: Vec<Access> = Vec::new();
     let (mut hits, mut misses, mut stale) = (0u32, 0u32, 0u32);
     for (i, &v) in input.iter().enumerate() {
         let dst = &mut staged[i * f..(i + 1) * f];
-        match ctx.stream {
+        let hit_now = match ctx.stream {
             Some(st) => {
                 // versioned path: a rewritten row carries its overlay
                 // version; cached copies at older versions refresh and
@@ -771,19 +784,42 @@ pub fn process_batch(
                     None => ds.feature_row(v),
                 };
                 match ctx.cache.fetch_versioned(v, ver, src, dst) {
-                    Fetched::Hit => hits += 1,
-                    Fetched::Stale => stale += 1,
-                    Fetched::Miss => misses += 1,
+                    Fetched::Hit => {
+                        hits += 1;
+                        true
+                    }
+                    Fetched::Stale => {
+                        stale += 1;
+                        false
+                    }
+                    Fetched::Miss => {
+                        misses += 1;
+                        false
+                    }
                 }
             }
             None => {
-                if ctx.cache.fetch(v, ds.feature_row(v), dst) {
+                let hit = ctx.cache.fetch(v, ds.feature_row(v), dst);
+                if hit {
                     hits += 1;
                 } else {
                     misses += 1;
                 }
+                hit
+            }
+        };
+        if let Some(loc) = ctx.locality {
+            if loc_trace || loc.is_sampled(v) {
+                loc_acc.push(Access {
+                    node: v,
+                    comm: *snap.labels.get(v as usize).unwrap_or(&0),
+                    hit: hit_now,
+                });
             }
         }
+    }
+    if let Some(loc) = ctx.locality {
+        loc.observe_batch(input.len() as u64, &loc_acc);
     }
     if enabled {
         let end = ctx.rec.now_us();
@@ -963,6 +999,7 @@ mod tests {
             sampler: SamplerKind::Uniform,
             sample_p: 0.9,
             hb: None,
+            locality: None,
         };
         let (tx, rx) = mpsc::channel();
         // includes a duplicate node: both requests must be answered
@@ -1015,6 +1052,7 @@ mod tests {
             sampler: SamplerKind::Uniform,
             sample_p: 0.9,
             hb: None,
+            locality: None,
         };
         let nodes: [u32; 4] = [11, 23, 42, 57];
         let run = |caps: Option<Vec<usize>>| -> BatchOutcome {
@@ -1079,6 +1117,7 @@ mod tests {
             sampler: SamplerKind::Labor,
             sample_p: 0.9,
             hb: None,
+            locality: None,
         };
         let (tx, rx) = mpsc::channel();
         let reqs: Vec<Request> = (0..12u32)
@@ -1128,6 +1167,7 @@ mod tests {
             sampler: SamplerKind::Uniform,
             sample_p: 0.9,
             hb: None,
+            locality: None,
         };
         let snap = LabelSnapshot::initial(&ds.community, ds.num_comms, 1);
         let (tx, rx) = mpsc::channel();
@@ -1231,6 +1271,7 @@ mod tests {
             sampler: SamplerKind::Uniform,
             sample_p: 0.9,
             hb: None,
+            locality: None,
         };
         let snap = LabelSnapshot::initial(&ds.community, ds.num_comms, 1);
         let (tx, rx) = mpsc::channel();
@@ -1293,6 +1334,98 @@ mod tests {
         assert!(format!("{err:#}").contains("overflows i32"), "{err:#}");
         assert_eq!(exec.dtype(), "f32");
         assert_eq!(exec.param_version(), 2);
+    }
+
+    /// Cross-check satellite: a live-captured access trace replayed
+    /// through fresh [`crate::cachesim::SetAssocCore`]s (built from
+    /// [`ShardedFeatureCache::geometry`]) must agree with the serving
+    /// cache access for access *and* in totals — the simulator and the
+    /// serving cache are the same replacement policy over the same
+    /// geometry, so any divergence is a bug in one of them.
+    #[test]
+    fn offline_replay_matches_live_cache_accounting() {
+        use crate::cachesim::SetAssocCore;
+        use crate::obs::LocalityConfig;
+
+        let ds = tiny();
+        let meta = synthetic_infer_meta(&ds, 8, &[5, 5]);
+        // small cache so the trace exercises hits, misses and evictions
+        let cache = ShardedFeatureCache::new(&FeatureCacheConfig {
+            rows: 256,
+            shards: 4,
+            ways: 4,
+            feat_dim: ds.feat_dim,
+        });
+        let loc = LocalityShard::new(LocalityConfig {
+            sample_permille: 1000,
+            trace_cap: 100_000,
+        });
+        let exec = NullExecutor { num_classes: ds.num_classes };
+        let clock = ServeClock::start();
+        let rec = Recorder::disabled();
+        let ctx = WorkerCtx {
+            ds: &ds,
+            meta: &meta,
+            cache: &cache,
+            exec: &exec,
+            clock: &clock,
+            stream: None,
+            rec: &rec,
+            track: 0,
+            sampler: SamplerKind::Uniform,
+            sample_p: 0.9,
+            hb: None,
+            locality: Some(&loc),
+        };
+        let snap = LabelSnapshot::initial(&ds.community, ds.num_comms, 1);
+        let mut rng = Rng::new(17);
+        // single-threaded batches => the trace is the cache's exact
+        // access order. Adjacent batch pairs share roots, so root rows
+        // re-hit while the wider frontier churns the sets.
+        for b in 0..20u32 {
+            let (tx, _rx) = mpsc::channel();
+            let reqs: Vec<Request> = (0..6u32)
+                .map(|i| {
+                    let node =
+                        (((b / 2) * 31 + i * 7) as usize % ds.n()) as u32;
+                    mk_req((b * 6 + i) as u64, node, 0, &tx)
+                })
+                .collect();
+            let out = process_batch(&ctx, &snap, reqs, &mut rng);
+            assert_eq!(out.errors, 0);
+        }
+
+        let stats = cache.stats();
+        let trace = loc.trace();
+        assert_eq!(
+            trace.len() as u64,
+            stats.lookups,
+            "trace must cover every access (cap not reached)"
+        );
+        assert_eq!(stats.hits + stats.misses, stats.lookups);
+
+        // offline replay through the simulator core at the live
+        // cache's exact geometry and routing
+        let (stripes, sets, ways) = cache.geometry();
+        let mut cores: Vec<SetAssocCore> =
+            (0..stripes).map(|_| SetAssocCore::new(sets, ways)).collect();
+        let (mut sim_hits, mut sim_misses) = (0u64, 0u64);
+        for (i, &(node, live_hit)) in trace.iter().enumerate() {
+            let p = cores[node as usize % stripes].probe(node as u64);
+            assert_eq!(
+                p.hit, live_hit,
+                "access {i} (node {node}): simulator {} vs live {}",
+                p.hit, live_hit
+            );
+            if p.hit {
+                sim_hits += 1;
+            } else {
+                sim_misses += 1;
+            }
+        }
+        assert_eq!(sim_hits, stats.hits, "hit totals must agree");
+        assert_eq!(sim_misses, stats.misses, "miss totals must agree");
+        assert!(sim_hits > 0 && sim_misses > 0, "trace must exercise both");
     }
 
     /// The no-op executor cannot serve a checkpoint: the default
